@@ -1,0 +1,11 @@
+//! Regenerate every table and figure of the paper in one run
+//! (reduced sweeps — the full-size versions live in `cargo bench`,
+//! one bench target per artifact; see DESIGN.md §5 for the index).
+//!
+//! Run: `cargo run --release --example paper_figures`
+
+use malltree::cli::run;
+
+fn main() -> anyhow::Result<()> {
+    run(vec!["figures".to_string()])
+}

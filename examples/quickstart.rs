@@ -1,0 +1,81 @@
+//! Quickstart: build a small malleable task tree, compute the optimal
+//! Prasanna–Musicus schedule, compare against the α-unaware baselines,
+//! and show the §7 `Agreg` transformation (paper Figure 15 flavor).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use malltree::model::{dot, SpGraph, TaskTree};
+use malltree::sched::{
+    agreg, divisible::divisible_makespan_tree, pm::PmSolution, proportional_makespan,
+    PmSchedule, Profile,
+};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's running shape: a root with two subtrees, one bushy.
+    //           T0 (root, L=2)
+    //          /            \
+    //       T1 (L=3)       T2 (L=8)
+    //      /   |   \
+    //   T3(4) T4(5) T5(0.2)
+    let tree = TaskTree::from_parents(
+        &[0, 0, 0, 1, 1, 1],
+        &[2.0, 3.0, 8.0, 4.0, 5.0, 0.2],
+    )?;
+    let alpha = 0.9; // the value the paper measures on real kernels
+    let p = 4.0;
+    let profile = Profile::constant(p);
+
+    println!("tree ({} tasks, total work {}):", tree.len(), tree.total_work());
+    println!("{}", dot::tree_to_dot(&tree));
+
+    // --- the optimal (PM) schedule -------------------------------------
+    let pm = PmSchedule::for_tree(&tree, alpha, &profile);
+    println!("PM equivalent length L_G = {:.4}", pm.solution.total_len);
+    println!("PM makespan on p={p}: {:.4}", pm.schedule.makespan);
+    println!("task spans (constant ratios, Theorem 6):");
+    for s in &pm.schedule.spans {
+        println!(
+            "  T{}: [{:.3}, {:.3})  ratio {:.3} ({:.2} processors)",
+            s.task,
+            s.start,
+            s.finish,
+            s.ratio,
+            s.ratio * p
+        );
+    }
+    // validity per the paper's three conditions
+    pm.schedule.validate(&tree, alpha, &profile, 1e-9)?;
+    println!("schedule valid: resource, completion, precedence all hold\n");
+
+    // --- baselines -------------------------------------------------------
+    let g = SpGraph::from_tree(&tree);
+    let prop = proportional_makespan(&g, alpha, p);
+    let div = divisible_makespan_tree(&tree, alpha, p);
+    println!("baseline makespans (α-unaware):");
+    println!("  Proportional (Pothen–Sun): {prop:.4}  (+{:.1}%)",
+        100.0 * (prop - pm.schedule.makespan) / pm.schedule.makespan);
+    println!("  Divisible (sequential):    {div:.4}  (+{:.1}%)\n",
+        100.0 * (div - pm.schedule.makespan) / pm.schedule.makespan);
+
+    // --- Agreg (§7): no task below one processor ------------------------
+    let sol = PmSolution::solve(&g, alpha);
+    println!(
+        "smallest PM share before Agreg: {:.3} processors (task T5 is tiny)",
+        sol.min_task_share(&g, p)
+    );
+    let (rewritten, stats) = agreg(&g, alpha, p);
+    let sol2 = PmSolution::solve(&rewritten, alpha);
+    println!(
+        "after Agreg ({} iteration(s), {} branch(es) serialized): min share {:.3}",
+        stats.iterations,
+        stats.moved,
+        sol2.min_task_share(&rewritten, p)
+    );
+    println!(
+        "makespan cost of the rewrite: {:.4} -> {:.4}",
+        sol.makespan_const(p),
+        sol2.makespan_const(p)
+    );
+    println!("\nrewritten SP graph:\n{}", dot::sp_to_dot(&rewritten.normalized()));
+    Ok(())
+}

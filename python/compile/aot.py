@@ -1,0 +1,105 @@
+"""AOT compile path: lower the L2 model to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.  Text — NOT ``lowered.compile().serialize()`` and NOT the
+serialized ``HloModuleProto`` — is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Variants: the multifrontal coordinator pads every real front into one of
+a fixed menu of static shapes ``(N, K)`` (front order, eliminated
+columns).  Identity padding is exact for Cholesky, so the menu trades a
+bounded flop overhead (< 2x in the worst case, measured in
+EXPERIMENTS.md) for a finite set of compiled executables — the same
+trade vLLM-style servers make with bucketed sequence lengths.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--tile 32]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (N, K) menu. K == N//2 covers interior supernodes (eliminate half,
+# pass half up); K == N covers roots / fully-summed fronts.  Tile size
+# divides every N and K.
+PARTIAL_VARIANTS = [(32, 16), (64, 32), (128, 64), (256, 128)]
+FULL_VARIANTS = [32, 64, 128, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_partial(n, k, tile):
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    fn = lambda f: model.partial_factor(f, k, tile=tile)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_full(n, tile):
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    fn = lambda f: (model.full_factor(f, panel=tile, tile=tile),)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--tile",
+        type=int,
+        default=32,
+        help="Pallas tile edge baked into the artifacts (128 on real TPU;"
+        " 32 keeps interpret-mode CPU artifacts fast)",
+    )
+    ap.add_argument("--out", default=None, help="compat: single-file mode")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for n, k in PARTIAL_VARIANTS:
+        name = f"partial_n{n}_k{k}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_partial(n, k, args.tile)
+        with open(path, "w") as f:
+            f.write(text)
+        # outputs: L11 (k,k), L21 (n-k,k), S (n-k,n-k)
+        manifest.append(
+            f"{name} kind=partial n={n} k={k} tile={args.tile} outputs=3"
+        )
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+    for n in FULL_VARIANTS:
+        name = f"full_n{n}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_full(n, args.tile)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} kind=full n={n} k={n} tile={args.tile} outputs=1")
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# malltree AOT artifact manifest: name key=value...\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} variants", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

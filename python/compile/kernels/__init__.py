@@ -1,0 +1,18 @@
+"""L1 Pallas kernels for frontal-matrix partial factorization.
+
+``potrf`` / ``trsm`` (cholesky.py) and ``schur_update`` (schur.py) are the
+compute hot-spot of the paper's malleable tasks; ``ref`` holds the
+pure-jnp oracle they are tested against.
+"""
+
+from .cholesky import potrf, trsm, DEFAULT_TILE
+from .schur import schur_update, vmem_footprint_bytes, mxu_utilization_estimate
+
+__all__ = [
+    "potrf",
+    "trsm",
+    "schur_update",
+    "DEFAULT_TILE",
+    "vmem_footprint_bytes",
+    "mxu_utilization_estimate",
+]

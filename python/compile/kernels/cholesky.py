@@ -1,0 +1,142 @@
+"""L1 Pallas kernels: blocked Cholesky panel factorization.
+
+The paper's tasks are *partial factorizations of dense frontal matrices*
+(Section 3, Figure 1).  On the paper's 40-core CPU these were tiled BLAS
+kernels scheduled by StarPU; the TPU re-thinking (DESIGN.md
+§Hardware-Adaptation) expresses the same tile graph as Pallas kernels:
+
+* ``potrf``  — Cholesky of the pivot block (VPU-bound, one grid cell);
+* ``trsm``   — triangular panel solve, grid over row blocks of the panel
+  (each block is an independent VMEM-resident solve);
+* ``schur``  (in schur.py) — the MXU hot-spot, a tiled
+  ``C -= L @ L^T`` matmul.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernels to
+plain HLO that any backend runs.  The BlockSpecs are nevertheless written
+exactly as a real TPU deployment would tile them (``TILE`` aligned to the
+128x128 MXU when the operand is large enough).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile edge for the panel solve.  On a real TPU this is 128 (MXU edge);
+# the artifacts in this repo are built with whatever divides the variant
+# sizes (DEFAULT_TILE or smaller), which keeps interpret-mode runtimes
+# reasonable while preserving the HBM<->VMEM schedule structure.
+DEFAULT_TILE = 128
+
+
+def _pick_tile(n, tile):
+    """Largest tile <= ``tile`` that divides ``n`` (fall back to n)."""
+    t = min(tile, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def chol_jnp(a):
+    """Pure-jnp left-looking Cholesky (no LAPACK custom-calls).
+
+    AOT constraint: ``jnp.linalg.cholesky`` lowers to a
+    ``lapack_*potrf`` custom-call with the TYPED_FFI API on CPU, which
+    the runtime's xla_extension 0.5.1 rejects ("Unknown custom-call API
+    version"). A `fori_loop` over columns lowers to a plain HLO While —
+    portable everywhere. One matvec per column: O(n³) total, identical
+    arithmetic to the textbook algorithm.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        # s = Σ_{t<j} L[:,t]·L[j,t] — columns ≥ j are still zero in l.
+        s = l @ l[j]
+        d = jnp.sqrt(a[j, j] - s[j])
+        col = (a[:, j] - s) / d
+        col = jnp.where(idx > j, col, 0.0)
+        col = col.at[j].set(d)
+        return l.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def solve_triangular_jnp(l, b):
+    """Pure-jnp forward substitution for ``X @ L^T = B``
+    (i.e. ``X = B L^{-T}``), column by column — same custom-call-free
+    rationale as :func:`chol_jnp`. ``l``: (k, k) lower, ``b``: (m, k).
+    """
+    k = l.shape[0]
+
+    def body(j, x):
+        # x columns >= j are still zero: x @ l[j] sums t < j terms.
+        s = x @ l[j]
+        col = (b[:, j] - s) / l[j, j]
+        return x.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(b))
+
+
+def _potrf_kernel(a_ref, o_ref):
+    """Single-block Cholesky.
+
+    The pivot block lives entirely in VMEM; the factorization is
+    expressed with jax ops which interpret-mode Pallas traces into the
+    surrounding HLO module.
+    """
+    o_ref[...] = chol_jnp(a_ref[...])
+
+
+def potrf(a, *, interpret=True):
+    """Cholesky factor (lower) of the SPD pivot block ``a`` (k x k).
+
+    One grid cell: the pivot block of a front is small relative to the
+    trailing submatrix (it is the O(k^3) part of an O(n^2 k) task) and is
+    kept VMEM-resident.
+    """
+    k = a.shape[0]
+    return pl.pallas_call(
+        _potrf_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, k), a.dtype),
+        interpret=interpret,
+    )(a)
+
+
+def _trsm_kernel(l11_ref, a_ref, o_ref):
+    """One row-block of the panel solve ``X @ L11^T = A21``."""
+    l11 = l11_ref[...]
+    a = a_ref[...]
+    # forward substitution on the VPU (custom-call-free)
+    o_ref[...] = solve_triangular_jnp(l11, a)
+
+
+def trsm(a21, l11, *, tile=DEFAULT_TILE, interpret=True):
+    """Panel solve ``L21 = A21 @ L11^{-T}`` tiled over row blocks.
+
+    Grid = row blocks of the (m x k) panel; every block re-reads the
+    (k x k) factor ``L11`` (broadcast BlockSpec) and solves its own tile —
+    the exact analogue of the per-tile TRSM tasks in the paper's Figure 1
+    kernel DAG.
+    """
+    m, k = a21.shape
+    t = _pick_tile(m, tile)
+    grid = (m // t,)
+    return pl.pallas_call(
+        _trsm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((t, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), a21.dtype),
+        interpret=interpret,
+    )(l11, a21)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_tile(n, tile):
+    return _pick_tile(n, tile)

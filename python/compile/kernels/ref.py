@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracle for the frontal-factorization kernels.
+
+This is the correctness anchor for the whole numeric stack: the Pallas
+kernels (cholesky.py / schur.py) and the L2 model (model.py) are tested
+against these functions, and the Rust side re-validates end-to-end by
+checking ``A = L L^T`` residuals after a multifrontal run.
+
+Everything here is straight-line jax.numpy — no Pallas, no tricks — so a
+bug can only live on one side of the comparison.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def ref_potrf(a):
+    """Cholesky factor (lower) of a symmetric positive-definite block."""
+    return jnp.linalg.cholesky(a)
+
+
+def ref_trsm(a21, l11):
+    """Solve ``X @ L11^T = A21`` for X (the sub-diagonal panel L21)."""
+    # X L11^T = A21  <=>  L11 X^T = A21^T
+    return jsl.solve_triangular(l11, a21.T, lower=True).T
+
+
+def ref_schur(a22, l21):
+    """Schur complement update ``A22 - L21 @ L21^T``."""
+    return a22 - l21 @ l21.T
+
+
+def ref_partial_factor(front, k):
+    """Partial Cholesky factorization eliminating the leading ``k`` columns.
+
+    Returns ``(L11, L21, S)`` where ``L11`` is the k-by-k lower Cholesky
+    factor of the pivot block, ``L21`` the (n-k)-by-k panel, and ``S`` the
+    trailing (n-k)-by-(n-k) Schur complement.
+    """
+    a11 = front[:k, :k]
+    a21 = front[k:, :k]
+    a22 = front[k:, k:]
+    l11 = ref_potrf(a11)
+    l21 = ref_trsm(a21, l11)
+    s = ref_schur(a22, l21)
+    return l11, l21, s
+
+
+def ref_cholesky(a):
+    """Full dense Cholesky (lower) — oracle for the K == N variants."""
+    return jnp.linalg.cholesky(a)
+
+
+def random_spd(key, n, dtype=jnp.float32):
+    """A well-conditioned random SPD matrix (for tests)."""
+    import jax
+
+    m = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    a = m @ m.T / n + 2.0 * jnp.eye(n, dtype=jnp.float32)
+    return a.astype(dtype)

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: tiled Schur-complement update (the MXU hot-spot).
+
+``S = A22 - L21 @ L21^T`` carries >= 90% of the flops of a partial
+factorization for realistic front shapes; this is the kernel the paper's
+speedup measurements (Figures 2-6) are dominated by, and the one a TPU
+port must land on the MXU.
+
+Mapping (DESIGN.md §Hardware-Adaptation): grid = (i, j, k) over TILE-sized
+output tiles and the contraction dimension; the accumulator tile stays in
+VMEM across the k-steps (output BlockSpec ignores k, Pallas keeps the
+block resident), operand tiles stream HBM->VMEM per step — the double
+buffering a real Mosaic lowering would insert is implicit in the
+BlockSpec schedule.  ``preferred_element_type=float32`` keeps the MXU
+accumulating in f32 even for bf16 operands.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cholesky import DEFAULT_TILE, _pick_tile
+
+
+def _schur_kernel(a22_ref, l_ref, lt_ref, o_ref, *, nk):
+    """Grid (i, j, k): o[i,j] = a22[i,j] - sum_k l[i,k] @ l[j,k]^T."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = a22_ref[...]
+
+    part = jnp.dot(
+        l_ref[...], lt_ref[...].T, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = o_ref[...] - part.astype(o_ref.dtype)
+
+
+def schur_update(a22, l21, *, tile=DEFAULT_TILE, interpret=True):
+    """Tiled ``A22 - L21 @ L21^T`` with f32 accumulation.
+
+    ``a22``: (m, m) trailing submatrix, ``l21``: (m, k) panel factor.
+    """
+    m, kdim = a22.shape[0], l21.shape[1]
+    tm = _pick_tile(m, tile)
+    tk = _pick_tile(kdim, tile)
+    grid = (m // tm, m // tm, kdim // tk)
+    return pl.pallas_call(
+        lambda a, l, lt, o: _schur_kernel(a, l, lt, o, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tm), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tm, tk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tm, tm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), a22.dtype),
+        interpret=interpret,
+    )(a22, l21, l21)
+
+
+def vmem_footprint_bytes(m, k, tile=DEFAULT_TILE, dtype_bytes=4):
+    """Static VMEM footprint estimate for one grid step (for §Perf).
+
+    Three operand tiles + one accumulator tile resident at a time.
+    """
+    tm = _pick_tile(m, tile)
+    tk = _pick_tile(k, tile)
+    return dtype_bytes * (tm * tm + 2 * tm * tk + tm * tm)
+
+
+def mxu_utilization_estimate(m, k, tile=DEFAULT_TILE):
+    """Fraction of MXU-shaped work per grid step (for §Perf).
+
+    A 128x128 MXU is fully fed when both tile edges are multiples of 128;
+    smaller tiles pad and waste the systolic array proportionally.
+    """
+    tm = _pick_tile(m, tile)
+    tk = _pick_tile(k, tile)
+    eff_m = tm / (128 * -(-tm // 128))
+    eff_k = tk / (128 * -(-tk // 128))
+    return eff_m * eff_k

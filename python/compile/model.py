@@ -1,0 +1,76 @@
+"""L2: the JAX compute graph for one malleable task of the paper's tree.
+
+A task of the assembly tree is the *partial factorization of a dense
+frontal matrix* (paper §3): eliminate the leading ``k`` fully-summed
+columns of an ``n x n`` symmetric front and produce
+
+  * the panel factor ``(L11, L21)`` — rows of the final sparse factor, and
+  * the Schur complement ``S = A22 - L21 L21^T`` — the contribution block
+    that is extend-added into the parent front.
+
+The functions here orchestrate the L1 Pallas kernels and are the units
+that ``aot.py`` lowers to HLO text for the Rust runtime.  Shapes are
+static per variant; the Rust coordinator pads real fronts into the
+nearest variant (identity padding inside the eliminated block and at the
+trailing end is exact for Cholesky — see DESIGN.md S12).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import potrf, trsm, schur_update
+from .kernels.cholesky import DEFAULT_TILE
+
+
+def partial_factor(front, k, *, tile=DEFAULT_TILE, interpret=True):
+    """Eliminate the leading ``k`` columns of the ``n x n`` ``front``.
+
+    Returns ``(L11, L21, S)``.  Requires ``0 < k < n``.
+    """
+    n = front.shape[0]
+    assert 0 < k < n, (k, n)
+    a11 = front[:k, :k]
+    a21 = front[k:, :k]
+    a22 = front[k:, k:]
+    l11 = potrf(a11, interpret=interpret)
+    l21 = trsm(a21, l11, tile=tile, interpret=interpret)
+    s = schur_update(a22, l21, tile=tile, interpret=interpret)
+    return l11, l21, s
+
+
+def full_factor(front, *, panel=DEFAULT_TILE, tile=DEFAULT_TILE, interpret=True):
+    """Blocked dense Cholesky of the whole front (root tasks, ``k == n``).
+
+    A static Python loop over panel steps — each step is a
+    ``partial_factor`` with shrinking static shapes, so the lowered HLO
+    is one straight-line module (no dynamic shapes on the request path).
+    Returns the lower factor ``L`` as a single (n, n) array.
+    """
+    n = front.shape[0]
+    l_full = jnp.zeros((n, n), front.dtype)
+    trailing = front
+    off = 0
+    while n - off > panel:
+        k = panel
+        l11, l21, s = partial_factor(
+            trailing, k, tile=tile, interpret=interpret
+        )
+        col = jnp.concatenate([l11, l21], axis=0)
+        l_full = l_full.at[off:, off : off + k].set(col)
+        trailing = s
+        off += k
+    # last pivot block
+    l11 = potrf(trailing, interpret=interpret)
+    l_full = l_full.at[off:, off:].set(l11)
+    # Panels left of the diagonal already carry exact zeros above it;
+    # enforce the triangle once for bitwise stability.
+    return jnp.tril(l_full)
+
+
+def front_flops(n, k):
+    """Flop count of a partial factorization (used by the scheduler's
+    task lengths and by the kernel-DAG simulator's cost model).
+
+    potrf: k^3/3, trsm: (n-k) k^2, schur: (n-k)^2 k.
+    """
+    m = n - k
+    return k**3 / 3.0 + m * k**2 + m * m * k

@@ -1,0 +1,171 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for L1.
+
+Every Pallas kernel is compared against the pure-jnp oracle in
+``compile.kernels.ref`` over deterministic seeds and hypothesis-driven
+shape/tile sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import potrf, trsm, schur_update
+from compile.kernels import ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def spd(seed, n):
+    return ref.random_spd(jax.random.PRNGKey(seed), n)
+
+
+def assert_close(a, b, atol=ATOL, rtol=RTOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------- potrf
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64, 128])
+def test_potrf_matches_ref(n):
+    a = spd(n, n)
+    assert_close(potrf(a), ref.ref_potrf(a))
+
+
+def test_potrf_identity():
+    eye = jnp.eye(16, dtype=jnp.float32)
+    assert_close(potrf(eye), eye)
+
+
+def test_potrf_diagonal():
+    d = jnp.diag(jnp.arange(1.0, 9.0, dtype=jnp.float32))
+    assert_close(potrf(d), jnp.sqrt(d))
+
+
+def test_potrf_is_lower_triangular():
+    l = np.asarray(potrf(spd(7, 32)))
+    assert np.allclose(np.triu(l, 1), 0.0)
+
+
+def test_potrf_reconstructs_input():
+    a = spd(11, 48)
+    l = potrf(a)
+    assert_close(l @ l.T, a, atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------- trsm
+
+
+@pytest.mark.parametrize("m,k,tile", [(8, 8, 8), (32, 16, 16), (64, 32, 32), (96, 32, 32), (64, 32, 16)])
+def test_trsm_matches_ref(m, k, tile):
+    a = spd(m * 1000 + k, m + k)
+    l11 = ref.ref_potrf(a[:k, :k])
+    a21 = a[k:, :k][:m]
+    assert_close(trsm(a21, l11, tile=tile), ref.ref_trsm(a21, l11))
+
+
+def test_trsm_identity_factor():
+    # L11 = I  =>  L21 = A21
+    a21 = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    eye = jnp.eye(16, dtype=jnp.float32)
+    assert_close(trsm(a21, eye, tile=16), a21)
+
+
+def test_trsm_solves_system():
+    # (L21 @ L11^T) must reconstruct A21
+    a = spd(5, 64)
+    l11 = ref.ref_potrf(a[:32, :32])
+    a21 = a[32:, :32]
+    l21 = trsm(a21, l11, tile=16)
+    assert_close(l21 @ l11.T, a21, atol=1e-4, rtol=1e-4)
+
+
+def test_trsm_nondivisible_rows_falls_back():
+    # m=40 with tile=16 -> falls back to a divisor tile (8)
+    a = spd(9, 56)
+    l11 = ref.ref_potrf(a[:16, :16])
+    a21 = a[16:, :16]
+    assert_close(trsm(a21, l11, tile=16), ref.ref_trsm(a21, l11))
+
+
+# ---------------------------------------------------------------- schur
+
+
+@pytest.mark.parametrize("m,k,tile", [(16, 16, 8), (32, 32, 16), (64, 32, 32), (64, 64, 16), (128, 64, 32)])
+def test_schur_matches_ref(m, k, tile):
+    key = jax.random.PRNGKey(m * 7 + k)
+    a22 = ref.random_spd(key, m)
+    l21 = jax.random.normal(jax.random.PRNGKey(m + k + 1), (m, k), dtype=jnp.float32)
+    assert_close(schur_update(a22, l21, tile=tile), ref.ref_schur(a22, l21))
+
+
+def test_schur_zero_panel_is_identity_update():
+    a22 = spd(2, 32)
+    z = jnp.zeros((32, 16), jnp.float32)
+    assert_close(schur_update(a22, z, tile=16), a22)
+
+
+def test_schur_rank_one():
+    a22 = jnp.zeros((16, 16), jnp.float32)
+    v = jnp.arange(16.0, dtype=jnp.float32).reshape(16, 1)
+    # tile falls back to divisor of k=1
+    assert_close(schur_update(a22, v, tile=16), -v @ v.T)
+
+
+def test_schur_accumulates_over_k_blocks():
+    # k spanning multiple tiles exercises the revisit/accumulate path
+    m, k, tile = 32, 64, 16
+    a22 = spd(21, m)
+    l21 = jax.random.normal(jax.random.PRNGKey(22), (m, k), dtype=jnp.float32)
+    assert_close(schur_update(a22, l21, tile=tile), ref.ref_schur(a22, l21))
+
+
+def test_schur_symmetry_preserved():
+    a22 = spd(13, 32)
+    l21 = jax.random.normal(jax.random.PRNGKey(14), (32, 32), dtype=jnp.float32)
+    s = np.asarray(schur_update(a22, l21, tile=16))
+    np.testing.assert_allclose(s, s.T, atol=1e-4)
+
+
+# --------------------------------------------------- hypothesis sweeps
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([8, 16, 24, 32, 48, 64]),
+)
+def test_hyp_potrf(seed, n):
+    a = spd(seed, n)
+    assert_close(potrf(a), ref.ref_potrf(a))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([16, 32, 48, 64]),
+    k=st.sampled_from([8, 16, 32]),
+    tile=st.sampled_from([8, 16, 32]),
+)
+def test_hyp_trsm(seed, m, k, tile):
+    a = spd(seed, m + k)
+    l11 = ref.ref_potrf(a[:k, :k])
+    a21 = a[k:, :k][:m]
+    assert_close(trsm(a21, l11, tile=tile), ref.ref_trsm(a21, l11))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([16, 32, 64]),
+    k=st.sampled_from([8, 16, 32, 64]),
+    tile=st.sampled_from([8, 16, 32]),
+)
+def test_hyp_schur(seed, m, k, tile):
+    key = jax.random.PRNGKey(seed)
+    a22 = ref.random_spd(key, m)
+    l21 = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, k), dtype=jnp.float32)
+    assert_close(schur_update(a22, l21, tile=tile), ref.ref_schur(a22, l21))

@@ -1,0 +1,97 @@
+"""L2 model correctness: partial/full factorization against the oracle,
+plus the identity-padding property the Rust coordinator relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def spd(seed, n):
+    return ref.random_spd(jax.random.PRNGKey(seed), n)
+
+
+def assert_close(a, b, atol=3e-5, rtol=3e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+@pytest.mark.parametrize("n,k,tile", [(32, 16, 16), (64, 32, 16), (64, 32, 32), (128, 64, 32)])
+def test_partial_factor_matches_ref(n, k, tile):
+    a = spd(n + k, n)
+    got = model.partial_factor(a, k, tile=tile)
+    want = ref.ref_partial_factor(a, k)
+    for g, w in zip(got, want):
+        assert_close(g, w)
+
+
+@pytest.mark.parametrize("n,panel", [(32, 16), (64, 16), (64, 32), (128, 32)])
+def test_full_factor_matches_ref(n, panel):
+    a = spd(n, n)
+    assert_close(model.full_factor(a, panel=panel, tile=panel), ref.ref_cholesky(a), atol=1e-4, rtol=1e-4)
+
+
+def test_full_factor_residual():
+    a = spd(77, 96)
+    l = model.full_factor(a, panel=32, tile=32)
+    assert_close(l @ l.T, a, atol=1e-4, rtol=1e-4)
+
+
+def test_partial_then_full_composes():
+    """Eliminating k then factoring the Schur complement equals the full
+    factor — the multifrontal invariant the Rust pipeline depends on."""
+    n, k = 64, 32
+    a = spd(5, n)
+    l11, l21, s = model.partial_factor(a, k, tile=16)
+    l22 = model.full_factor(s, panel=16, tile=16)
+    l = np.zeros((n, n), np.float32)
+    l[:k, :k] = l11
+    l[k:, :k] = l21
+    l[k:, k:] = l22
+    assert_close(l, ref.ref_cholesky(a), atol=1e-4, rtol=1e-4)
+
+
+def test_identity_padding_is_exact():
+    """Pad a front with decoupled identity rows/cols inside the eliminated
+    block and at the tail: the embedded results must be bit-compatible
+    with the unpadded ones (this is DESIGN.md S12, what lets Rust bucket
+    arbitrary fronts into the fixed artifact menu)."""
+    n, k = 48, 16
+    pad_n, pad_k = 64, 32
+    a = spd(31, n)
+    # build padded front
+    ap = np.eye(pad_n, dtype=np.float32)
+    # eliminated block occupies [0,k) real + [k,pad_k) identity
+    ap[:k, :k] = np.asarray(a[:k, :k])
+    rest = n - k  # real trailing size
+    ap[pad_k : pad_k + rest, :k] = np.asarray(a[k:, :k])
+    ap[:k, pad_k : pad_k + rest] = np.asarray(a[:k, k:])
+    ap[pad_k : pad_k + rest, pad_k : pad_k + rest] = np.asarray(a[k:, k:])
+    l11p, l21p, sp = model.partial_factor(jnp.asarray(ap), pad_k, tile=16)
+    l11, l21, s = ref.ref_partial_factor(a, k)
+    assert_close(l11p[:k, :k], l11)
+    assert_close(l21p[:rest, :k], l21)
+    assert_close(sp[:rest, :rest], s)
+    # padding lanes stay exactly identity / zero
+    np.testing.assert_allclose(np.asarray(sp[rest:, rest:]), np.eye(pad_n - pad_k - rest), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nk=st.sampled_from([(32, 16), (48, 16), (64, 32)]))
+def test_hyp_partial(seed, nk):
+    n, k = nk
+    a = spd(seed, n)
+    got = model.partial_factor(a, k, tile=16)
+    want = ref.ref_partial_factor(a, k)
+    for g, w in zip(got, want):
+        assert_close(g, w, atol=1e-4, rtol=1e-4)
+
+
+def test_front_flops_monotone():
+    assert model.front_flops(64, 32) < model.front_flops(128, 32)
+    assert model.front_flops(64, 32) < model.front_flops(64, 64)
+    # full elimination equals n^3/3
+    assert model.front_flops(96, 96) == pytest.approx(96**3 / 3.0)

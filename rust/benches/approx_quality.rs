@@ -1,0 +1,112 @@
+//! Algorithm 11 quality (paper §6.1, Theorem 8): measured ratio of the
+//! homogeneous two-node approximation to (a) the exhaustive optimum on
+//! independent tasks and (b) the shared-memory lower bound on trees —
+//! checked against the `(4/3)^α` guarantee. Also exercises the
+//! Theorem 7 Partition gadget (NP-hardness witness).
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::dist::{homog_approx, independent_optimal, partition_reduction};
+use malltree::metrics::{BoxplotRow, Table};
+use malltree::model::TaskTree;
+use malltree::util::rng::Rng;
+use malltree::workload::{dataset, DatasetSpec};
+
+fn main() {
+    header("approx_quality", "Algorithm 11 (two homogeneous nodes) ratios");
+    let cases = env_usize("CASES", 300);
+    let mut rng = Rng::new(0xA11);
+
+    // (a) independent tasks vs exact optimum
+    let mut ratios = Vec::with_capacity(cases);
+    let mut worst: f64 = 0.0;
+    let (_, secs_a) = timed(|| {
+        for _ in 0..cases {
+            let n = rng.range(3, 14);
+            let alpha = rng.range_f64(0.5, 1.0);
+            let p = rng.range_f64(1.0, 32.0);
+            let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(0.5, 100.0)).collect();
+            let mut parents = vec![0usize];
+            parents.extend(std::iter::repeat(0).take(n));
+            let mut all = vec![0.0];
+            all.extend_from_slice(&lens);
+            let tree = TaskTree::from_parents(&parents, &all).unwrap();
+            let s = homog_approx(&tree, alpha, p);
+            let (_, opt) = independent_optimal(&lens, alpha, p, p);
+            let ratio = s.makespan / opt;
+            worst = worst.max(ratio / (4.0f64 / 3.0).powf(alpha));
+            ratios.push(ratio);
+        }
+    });
+    let r = BoxplotRow::from_data(&ratios);
+    println!("independent tasks vs exhaustive optimum ({cases} cases, {secs_a:.1}s):");
+    println!("  ratio quantiles: {}", r.render());
+    println!("  worst ratio / (4/3)^α bound: {worst:.4} (must be <= 1)");
+    assert!(worst <= 1.0 + 1e-6, "approximation guarantee violated");
+
+    // (b) assembly trees vs the shared-memory lower bound
+    let spec = DatasetSpec {
+        random_trees: env_usize("TREES", 60),
+        min_nodes: 2_000,
+        max_nodes: 10_000,
+        include_analysis_trees: true,
+        seed: 0xA12,
+    };
+    let corpus = dataset(&spec);
+    let mut table = Table::new(&["p", "alpha", "median ratio to LB", "d90"]);
+    let (_, secs_b) = timed(|| {
+        for p in [4.0, 20.0, 50.0] {
+            for alpha in [0.7, 0.9] {
+                let rs: Vec<f64> = corpus
+                    .iter()
+                    .map(|(_, t)| {
+                        let s = homog_approx(t, alpha, p);
+                        s.makespan / s.lower_bound
+                    })
+                    .collect();
+                let row = BoxplotRow::from_data(&rs);
+                table.row(&[
+                    format!("{p}"),
+                    format!("{alpha}"),
+                    format!("{:.4}", row.median),
+                    format!("{:.4}", row.d90),
+                ]);
+            }
+        }
+    });
+    println!("\nassembly trees vs shared-memory lower bound ({} trees, {secs_b:.1}s):", corpus.len());
+    print!("{}", table.render());
+
+    // (c) Theorem 7 gadget: random YES/NO Partition instances decided
+    let mut correct = 0;
+    let total = 200;
+    for case in 0..total {
+        let n = rng.range(4, 12);
+        let (instance, is_yes) = if case % 2 == 0 {
+            // YES: build two halves with equal sums
+            let half: Vec<u64> = (0..n / 2).map(|_| rng.range(1, 50) as u64).collect();
+            let mut a = half.clone();
+            // mirror with a couple of splits to disguise
+            a.extend(half.iter().copied());
+            (a, true)
+        } else {
+            // force odd total sum -> definite NO
+            let mut a: Vec<u64> = (0..n).map(|_| rng.range(1, 50) as u64).collect();
+            let s: u64 = a.iter().sum();
+            if s % 2 == 0 {
+                a[0] += 1;
+            }
+            (a, false)
+        };
+        let alpha = 0.8;
+        let (lens, p, t) = partition_reduction(&instance, alpha);
+        let (_, opt) = independent_optimal(&lens, alpha, p, p);
+        let decided_yes = opt <= t + 1e-9;
+        if decided_yes == is_yes {
+            correct += 1;
+        }
+    }
+    println!("\nTheorem 7 gadget: {correct}/{total} Partition instances decided correctly");
+    assert_eq!(correct, total, "reduction must decide Partition exactly");
+}

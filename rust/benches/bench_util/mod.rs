@@ -1,0 +1,39 @@
+//! Shared helpers for the harness-free bench binaries.
+
+use std::time::Instant;
+
+/// Time a closure; returns (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Median-of-k timing for micro-benchmarks (one warmup + k measured).
+pub fn median_time(k: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..k.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Read an env-var override (`MALLTREE_BENCH_<NAME>`) for bench scaling.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(format!("MALLTREE_BENCH_{name}"))
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Print the standard bench header.
+pub fn header(id: &str, what: &str) {
+    println!("================================================================");
+    println!("bench {id}: {what}");
+    println!("================================================================");
+}

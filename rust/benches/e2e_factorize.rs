@@ -1,0 +1,87 @@
+//! End-to-end factorization bench (EXPERIMENTS.md E14): the complete
+//! pipeline — analysis → PM schedule → numeric multifrontal execution —
+//! timed for the parallel Rust backend (worker sweep) and the PJRT
+//! accelerator-queue backend when artifacts are present.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::exec::{execute_parallel, execute_serial};
+use malltree::frontal::{multifrontal, PjrtBackend, RustBackend};
+use malltree::metrics::Table;
+use malltree::sched::{PmSchedule, Profile};
+use malltree::sparse::{gen, order, symbolic};
+
+fn main() {
+    header("e2e_factorize", "grid Laplacian multifrontal factorization");
+    let k = env_usize("GRID", 40);
+    let alpha = 0.9;
+    let p = 8.0;
+
+    let ((at, ap), secs) = timed(|| {
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let at = symbolic::analyze(&a, &perm, 4).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        (at, ap)
+    });
+    println!(
+        "analysis: grid {k}x{k}, {} supernodes, {:.3e} flops ({secs:.2}s)",
+        at.tree.len(),
+        at.tree.total_work()
+    );
+    let (pm, secs) = timed(|| PmSchedule::for_tree(&at.tree, alpha, &Profile::constant(p)));
+    println!("PM schedule: makespan {:.3e} ({secs:.3}s)", pm.schedule.makespan);
+
+    let mut table = Table::new(&["backend", "workers", "wall (s)", "Gflop/s", "residual"]);
+    for workers in [1usize, 2, 4, 8] {
+        let ((fact, report), _) =
+            timed(|| execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers).unwrap());
+        let r = multifrontal::residual(&at, &ap, &fact);
+        table.row(&[
+            "rust-f64".into(),
+            format!("{workers}"),
+            format!("{:.3}", report.wall_seconds),
+            format!("{:.3}", report.flop_rate() / 1e9),
+            format!("{r:.1e}"),
+        ]);
+    }
+
+    // PJRT path if artifacts are available
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("manifest.txt").exists() {
+        match malltree::runtime::Runtime::cpu(artifacts) {
+            Ok(rt) => {
+                let rt = std::sync::Arc::new(rt);
+                rt.warm_up().expect("compile artifacts");
+                let backend = PjrtBackend::new(rt);
+                let widest = at
+                    .symbolic
+                    .supernodes
+                    .iter()
+                    .map(|s| s.front_order())
+                    .max()
+                    .unwrap();
+                if widest <= backend.max_front() {
+                    let ((fact, report), _) = timed(|| {
+                        execute_serial(&at, &ap, &pm.schedule, &backend).unwrap()
+                    });
+                    let r = multifrontal::residual(&at, &ap, &fact);
+                    table.row(&[
+                        "pjrt-xla-f32".into(),
+                        "1 (queue)".into(),
+                        format!("{:.3}", report.wall_seconds),
+                        format!("{:.3}", report.flop_rate() / 1e9),
+                        format!("{r:.1e}"),
+                    ]);
+                } else {
+                    println!("(pjrt skipped: widest front {widest} > artifact menu)");
+                }
+            }
+            Err(e) => println!("(pjrt skipped: {e})"),
+        }
+    } else {
+        println!("(pjrt skipped: run `make artifacts` first)");
+    }
+    print!("{}", table.render());
+}

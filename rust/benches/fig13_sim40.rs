@@ -1,0 +1,68 @@
+//! Figure 13 reproduction: relative makespan distance (%) of the
+//! Divisible and Proportional strategies to the optimal PM schedule,
+//! over the assembly-tree corpus, p(t) = 40, α ∈ [0.5, 1.0].
+//!
+//! Shape to match (paper §7):
+//!   * Divisible: median grows ~8 points per 0.05 drop of α; ≈16% at
+//!     α = 0.9;
+//!   * Proportional: much closer to PM; median ≈3% at α = 0.9;
+//!   * both shrink to 0 at α = 1.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::model::SpGraph;
+use malltree::sched::relative_distances_graph;
+use malltree::metrics::{BoxplotRow, Table};
+use malltree::workload::{dataset, DatasetSpec};
+
+fn run(p: f64, trees: usize, max_nodes: usize) {
+    let spec = DatasetSpec {
+        random_trees: trees,
+        min_nodes: 2_000,
+        max_nodes,
+        include_analysis_trees: true,
+        seed: 0xDA7A,
+    };
+    let (corpus, gen_secs) = timed(|| dataset(&spec));
+    // §Perf: convert each tree to its pseudo-tree once, not per alpha
+    let graphs: Vec<SpGraph> = corpus.iter().map(|(_, t)| SpGraph::from_tree(t)).collect();
+    println!("corpus: {} trees (generated in {gen_secs:.1}s), p = {p}", corpus.len());
+
+    let mut table = Table::new(&[
+        "alpha", "strategy", "d10", "q25", "median", "q75", "d90", "mean",
+    ]);
+    let (_, secs) = timed(|| {
+        for alpha in [0.5, 0.55, 0.6, 0.65, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95, 1.0] {
+            let mut div = Vec::with_capacity(corpus.len());
+            let mut prop = Vec::with_capacity(corpus.len());
+            for g in &graphs {
+                let (d, pr) = relative_distances_graph(g, alpha, p);
+                div.push(d);
+                prop.push(pr);
+            }
+            for (name, data) in [("Divisible", &div), ("Proportional", &prop)] {
+                let r = BoxplotRow::from_data(data);
+                table.row(&[
+                    format!("{alpha:.2}"),
+                    name.to_string(),
+                    format!("{:.2}", r.d10),
+                    format!("{:.2}", r.q25),
+                    format!("{:.2}", r.median),
+                    format!("{:.2}", r.q75),
+                    format!("{:.2}", r.d90),
+                    format!("{:.2}", r.mean),
+                ]);
+            }
+        }
+    });
+    print!("{}", table.render());
+    println!("sweep wall time: {secs:.1}s");
+}
+
+fn main() {
+    header("fig13", "PM vs Divisible/Proportional, p(t) = 40 (boxplot rows)");
+    let trees = env_usize("TREES", 600);
+    let max_nodes = env_usize("MAXNODES", 50_000);
+    run(40.0, trees, max_nodes);
+}

@@ -1,0 +1,87 @@
+//! Figure 14 reproduction: same protocol as Figure 13 with
+//! p(t) = 100. Paper: "results on average in a 25% (resp. 10%)
+//! increase in the relative distance with Proportional (resp.
+//! Divisible)" compared to p = 40.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::model::SpGraph;
+use malltree::sched::relative_distances_graph;
+use malltree::metrics::{BoxplotRow, Table};
+use malltree::workload::{dataset, DatasetSpec};
+
+fn main() {
+    header("fig14", "PM vs Divisible/Proportional, p(t) = 100 (boxplot rows)");
+    let trees = env_usize("TREES", 600);
+    let max_nodes = env_usize("MAXNODES", 50_000);
+    let spec = DatasetSpec {
+        random_trees: trees,
+        min_nodes: 2_000,
+        max_nodes,
+        include_analysis_trees: true,
+        seed: 0xDA7A,
+    };
+    let corpus = dataset(&spec);
+    let graphs: Vec<SpGraph> = corpus.iter().map(|(_, t)| SpGraph::from_tree(t)).collect();
+    println!("corpus: {} trees, p = 100", corpus.len());
+
+    let mut table = Table::new(&[
+        "alpha", "strategy", "d10", "q25", "median", "q75", "d90", "mean",
+    ]);
+    // also track means at both p for the paper's cross-figure claim
+    let mut mean40 = Vec::new();
+    let mut mean100 = Vec::new();
+    let (_, secs) = timed(|| {
+        for alpha in [0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 1.0] {
+            let mut div100 = Vec::new();
+            let mut prop100 = Vec::new();
+            let mut div40 = Vec::new();
+            let mut prop40 = Vec::new();
+            for g in &graphs {
+                let (d, pr) = relative_distances_graph(g, alpha, 100.0);
+                div100.push(d);
+                prop100.push(pr);
+                let (d, pr) = relative_distances_graph(g, alpha, 40.0);
+                div40.push(d);
+                prop40.push(pr);
+            }
+            for (name, data) in [("Divisible", &div100), ("Proportional", &prop100)] {
+                let r = BoxplotRow::from_data(data);
+                table.row(&[
+                    format!("{alpha:.2}"),
+                    name.to_string(),
+                    format!("{:.2}", r.d10),
+                    format!("{:.2}", r.q25),
+                    format!("{:.2}", r.median),
+                    format!("{:.2}", r.q75),
+                    format!("{:.2}", r.d90),
+                    format!("{:.2}", r.mean),
+                ]);
+            }
+            if alpha < 1.0 {
+                mean40.push((BoxplotRow::from_data(&div40).mean, BoxplotRow::from_data(&prop40).mean));
+                mean100.push((BoxplotRow::from_data(&div100).mean, BoxplotRow::from_data(&prop100).mean));
+            }
+        }
+    });
+    print!("{}", table.render());
+    let inc = |a: f64, b: f64| 100.0 * (b - a) / a.max(1e-9);
+    let div_inc: f64 = mean40
+        .iter()
+        .zip(&mean100)
+        .map(|((d40, _), (d100, _))| inc(*d40, *d100))
+        .sum::<f64>()
+        / mean40.len() as f64;
+    let prop_inc: f64 = mean40
+        .iter()
+        .zip(&mean100)
+        .map(|((_, p40), (_, p100))| inc(*p40, *p100))
+        .sum::<f64>()
+        / mean40.len() as f64;
+    println!(
+        "relative-distance increase p=40 → p=100: Divisible {div_inc:+.1}%, Proportional {prop_inc:+.1}%"
+    );
+    println!("(paper: ≈ +10% Divisible, ≈ +25% Proportional)");
+    println!("sweep wall time: {secs:.1}s");
+}

@@ -1,0 +1,57 @@
+//! Figure 2 reproduction: timings of the QR kernel for M = 1024,
+//! N ∈ {5000, …, 40000}, p = 1..40, plus the p^α model curve fitted on
+//! p ≤ 10 (exactly the paper's regression protocol).
+//!
+//! Paper shape to match: log-log-straight timing lines for small p,
+//! flattening for small matrices at large p; α close to 1.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::metrics::{fit_alpha, Table};
+use malltree::sim::kerneldag::{timing_curve, KernelDag, MachineModel};
+
+fn main() {
+    header("fig2", "QR kernel timings, M=1024 (tiled-DAG simulator)");
+    let b = 256;
+    let m_rows = 1024usize;
+    let p_max = env_usize("PMAX", 40);
+    let machine = MachineModel::default();
+    let sizes = [5000usize, 10000, 15000, 20000, 25000, 30000, 35000, 40000];
+
+    let mut table = Table::new(&["N", "p=1", "p=2", "p=5", "p=10", "p=20", "p=40", "alpha", "r2"]);
+    let (rows, secs) = timed(|| {
+        sizes
+            .iter()
+            .map(|&n| {
+                let dag = KernelDag::qr(m_rows.div_ceil(b), n.div_ceil(b), b);
+                let curve = timing_curve(&dag, p_max, &machine);
+                let (alpha, fit) = fit_alpha(&curve, 10.0);
+                (n, curve, alpha, fit.r2)
+            })
+            .collect::<Vec<_>>()
+    });
+    let pick = |curve: &[(f64, f64)], p: usize| -> String {
+        curve
+            .iter()
+            .find(|&&(cp, _)| cp as usize == p)
+            .map(|&(_, t)| format!("{t:.3e}"))
+            .unwrap_or_else(|| "-".into())
+    };
+    for (n, curve, alpha, r2) in &rows {
+        table.row(&[
+            format!("{n}"),
+            pick(curve, 1),
+            pick(curve, 2),
+            pick(curve, 5),
+            pick(curve, 10),
+            pick(curve, 20),
+            pick(curve, p_max.min(40)),
+            format!("{alpha:.3}"),
+            format!("{r2:.4}"),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(model check: curves straight in log-log for p<=10; flattening for small N)");
+    println!("bench wall time: {secs:.2}s");
+}

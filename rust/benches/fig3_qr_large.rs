@@ -1,0 +1,47 @@
+//! Figure 3 reproduction: QR kernel timings for M = 4096 — the larger
+//! panel height gives more intra-step parallelism, so α is closer to 1
+//! than Figure 2's (Table 1: 0.988–0.999 vs 0.95–1.00).
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::metrics::{fit_alpha, Table};
+use malltree::sim::kerneldag::{timing_curve, KernelDag, MachineModel};
+
+fn main() {
+    header("fig3", "QR kernel timings, M=4096 (tiled-DAG simulator)");
+    let b = 256;
+    let m_rows = 4096usize;
+    let p_max = env_usize("PMAX", 40);
+    let machine = MachineModel::default();
+    let sizes = [5000usize, 10000, 15000, 20000, 25000, 30000, 35000, 40000];
+
+    let mut table = Table::new(&["N", "p=1", "p=5", "p=10", "p=20", "p=40", "alpha", "r2"]);
+    let (_, secs) = timed(|| {
+        for &n in &sizes {
+            let dag = KernelDag::qr(m_rows.div_ceil(b), n.div_ceil(b), b);
+            let curve = timing_curve(&dag, p_max, &machine);
+            let (alpha, fit) = fit_alpha(&curve, 10.0);
+            let pick = |p: usize| -> String {
+                curve
+                    .iter()
+                    .find(|&&(cp, _)| cp as usize == p)
+                    .map(|&(_, t)| format!("{t:.3e}"))
+                    .unwrap_or_else(|| "-".into())
+            };
+            table.row(&[
+                format!("{n}"),
+                pick(1),
+                pick(5),
+                pick(10),
+                pick(20),
+                pick(p_max.min(40)),
+                format!("{alpha:.3}"),
+                format!("{fit:.4}", fit = fit.r2),
+            ]);
+        }
+    });
+    print!("{}", table.render());
+    println!("(paper Table 1 M=4096 column: alpha 0.988-0.999, rising with N)");
+    println!("bench wall time: {secs:.2}s");
+}

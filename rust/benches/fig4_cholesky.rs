@@ -1,0 +1,52 @@
+//! Figure 4 reproduction: Cholesky kernel timings for square matrices
+//! N ∈ {5000, …, 40000}, p = 1..40 under the tiled-DAG simulator.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::metrics::{fit_alpha, Table};
+use malltree::sim::kerneldag::{timing_curve, KernelDag, MachineModel};
+
+fn main() {
+    header("fig4", "Cholesky kernel timings (tiled-DAG simulator)");
+    let b = 256;
+    let p_max = env_usize("PMAX", 40);
+    // N=40000 gives a 157-tile DAG (~650k kernels); trim via env for CI.
+    let n_cap = env_usize("NCAP", 40000);
+    let machine = MachineModel::default();
+    let sizes: Vec<usize> = [5000usize, 10000, 15000, 20000, 25000, 30000, 35000, 40000]
+        .into_iter()
+        .filter(|&n| n <= n_cap)
+        .collect();
+
+    let mut table = Table::new(&["N", "kernels", "p=1", "p=10", "p=40", "speedup@40", "alpha", "r2"]);
+    let (_, secs) = timed(|| {
+        for &n in &sizes {
+            let dag = KernelDag::cholesky(n.div_ceil(b), b);
+            let curve = timing_curve(&dag, p_max, &machine);
+            let (alpha, fit) = fit_alpha(&curve, 10.0);
+            let t1 = curve[0].1;
+            let tmax = curve.last().unwrap().1;
+            let pick = |p: usize| -> String {
+                curve
+                    .iter()
+                    .find(|&&(cp, _)| cp as usize == p)
+                    .map(|&(_, t)| format!("{t:.3e}"))
+                    .unwrap_or_else(|| "-".into())
+            };
+            table.row(&[
+                format!("{n}"),
+                format!("{}", dag.len()),
+                pick(1),
+                pick(10),
+                pick(p_max.min(40)),
+                format!("{:.1}", t1 / tmax),
+                format!("{alpha:.3}"),
+                format!("{:.4}", fit.r2),
+            ]);
+        }
+    });
+    print!("{}", table.render());
+    println!("(paper Table 1 Cholesky column: alpha 0.94-1.00, rising with N)");
+    println!("bench wall time: {secs:.2}s");
+}

@@ -1,0 +1,43 @@
+//! Figure 6 reproduction: qr_mumps frontal-matrix factorization kernel
+//! with **2D partitioning** (square 256-tiles). More parallelism than
+//! 1D: the paper fits α on p ≤ 20 and reports 0.93–0.95.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::metrics::{fit_alpha, Table};
+use malltree::sim::kerneldag::{timing_curve, KernelDag, MachineModel};
+
+fn main() {
+    header("fig6", "qr_mumps frontal kernel, 2D partitioning");
+    let machine = MachineModel::default();
+    let p_max = env_usize("PMAX", 40);
+    let sizes: [(usize, usize); 3] = [(5000, 1000), (10000, 2500), (20000, 5000)];
+
+    let mut table = Table::new(&["front (MxN)", "p=1", "p=10", "p=20", "p=40", "alpha(p<=20)"]);
+    let (_, secs) = timed(|| {
+        for &(m, n) in &sizes {
+            let dag = KernelDag::frontal(m, n, 256, false);
+            let curve = timing_curve(&dag, p_max, &machine);
+            let (alpha, _) = fit_alpha(&curve, 20.0);
+            let pick = |p: usize| -> String {
+                curve
+                    .iter()
+                    .find(|&&(cp, _)| cp as usize == p)
+                    .map(|&(_, t)| format!("{t:.3e}"))
+                    .unwrap_or_else(|| "-".into())
+            };
+            table.row(&[
+                format!("{m}x{n}"),
+                pick(1),
+                pick(10),
+                pick(20),
+                pick(p_max.min(40)),
+                format!("{alpha:.3}"),
+            ]);
+        }
+    });
+    print!("{}", table.render());
+    println!("(paper Table 2 2D column: 0.93 / 0.95 / 0.94)");
+    println!("bench wall time: {secs:.2}s");
+}

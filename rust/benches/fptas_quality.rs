@@ -1,0 +1,68 @@
+//! Algorithm 12 quality and scaling (paper §6.2, Theorem 18 /
+//! Corollary 19): achieved ratio vs the requested λ across random
+//! instances, and runtime growth as λ → 1 (the FPTAS trade-off).
+
+mod bench_util;
+
+use bench_util::{env_usize, header, median_time, timed};
+use malltree::dist::{het_schedule, independent_optimal, subset_sum_exact, subset_sum_fptas};
+use malltree::metrics::{BoxplotRow, Table};
+use malltree::util::rng::Rng;
+
+fn main() {
+    header("fptas_quality", "Algorithm 12 (two heterogeneous nodes) + subset-sum FPTAS");
+    let cases = env_usize("CASES", 200);
+    let mut rng = Rng::new(0xF7A);
+
+    // (a) λ-guarantee across random instances
+    let mut table = Table::new(&["lambda", "median ratio", "d90 ratio", "worst/λ"]);
+    let (_, secs) = timed(|| {
+        for lambda in [2.0, 1.5, 1.25, 1.1, 1.05, 1.01] {
+            let mut ratios = Vec::with_capacity(cases);
+            let mut worst: f64 = 0.0;
+            for _ in 0..cases {
+                let n = rng.range(3, 14);
+                let alpha = rng.range_f64(0.5, 1.0);
+                let p = rng.range_f64(1.0, 24.0);
+                let q = rng.range_f64(1.0, 24.0);
+                let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(0.5, 100.0)).collect();
+                let s = het_schedule(&lens, alpha, p, q, lambda);
+                let (_, opt) = independent_optimal(&lens, alpha, p, q);
+                let ratio = s.makespan / opt;
+                worst = worst.max(ratio / lambda);
+                ratios.push(ratio);
+            }
+            let r = BoxplotRow::from_data(&ratios);
+            table.row(&[
+                format!("{lambda}"),
+                format!("{:.4}", r.median),
+                format!("{:.4}", r.d90),
+                format!("{:.4}", worst),
+            ]);
+            assert!(worst <= 1.0 + 1e-6, "λ-guarantee violated at λ={lambda}");
+        }
+    });
+    print!("{}", table.render());
+    println!("guarantee check: worst/λ <= 1 everywhere ({cases} cases per λ, {secs:.1}s)\n");
+
+    // (b) subset-sum FPTAS runtime scaling vs ε (Corollary 19's knob)
+    let n = 60;
+    let xs: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 1000.0)).collect();
+    let target = xs.iter().sum::<f64>() * 0.45;
+    let (_, exact_opt) = subset_sum_exact(&xs, target);
+    let mut table = Table::new(&["eps", "time (ms)", "achieved / OPT"]);
+    for eps in [0.5, 0.2, 0.1, 0.05, 0.02, 0.01] {
+        let t = median_time(3, || {
+            let _ = subset_sum_fptas(&xs, target, eps);
+        });
+        let (_, got) = subset_sum_fptas(&xs, target, eps);
+        table.row(&[
+            format!("{eps}"),
+            format!("{:.3}", t * 1e3),
+            format!("{:.6}", got / exact_opt),
+        ]);
+        assert!(got >= (1.0 - eps) * exact_opt - 1e-9);
+    }
+    print!("{}", table.render());
+    println!("(runtime grows ~1/ε as the trimming list lengthens; ratio >= 1-ε always)");
+}

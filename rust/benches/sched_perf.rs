@@ -1,0 +1,114 @@
+//! §Perf harness for the L3 coordinator hot paths: PM solve
+//! throughput, Agreg rewriting, DES event rate, and symbolic analysis —
+//! the numbers tracked in EXPERIMENTS.md §Perf.
+//!
+//! Targets (DESIGN.md §8): PM solve >= 1M nodes/s; DES >= 1M events/s.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, median_time};
+use malltree::metrics::Table;
+use malltree::model::SpGraph;
+use malltree::sched::{agreg, pm::PmSolution};
+use malltree::sim::des::{simulate, Policy};
+use malltree::sparse::{gen, order, symbolic};
+use malltree::util::rng::Rng;
+use malltree::workload::{generator::random_tree, TreeClass};
+
+fn main() {
+    header("sched_perf", "coordinator hot-path throughput (§Perf)");
+    let scale = env_usize("SCALE", 1);
+
+    let mut table = Table::new(&["operation", "size", "median time", "throughput"]);
+
+    // PM solve on a large tree
+    for &n in &[100_000usize, 1_000_000] {
+        let n = n * scale;
+        let mut rng = Rng::new(7);
+        let tree = random_tree(TreeClass::Uniform, n, &mut rng);
+        let g = SpGraph::from_tree(&tree);
+        let t = median_time(5, || {
+            let s = PmSolution::solve(&g, 0.9);
+            std::hint::black_box(s.total_len);
+        });
+        table.row(&[
+            "PM solve".into(),
+            format!("{n} tasks"),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} Mnodes/s", n as f64 / t / 1e6),
+        ]);
+    }
+
+    // tree -> SP conversion
+    {
+        let n = 1_000_000 * scale;
+        let mut rng = Rng::new(8);
+        let tree = random_tree(TreeClass::Recent, n, &mut rng);
+        let t = median_time(5, || {
+            let g = SpGraph::from_tree(&tree);
+            std::hint::black_box(g.nodes.len());
+        });
+        table.row(&[
+            "tree→SP".into(),
+            format!("{n} tasks"),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} Mnodes/s", n as f64 / t / 1e6),
+        ]);
+    }
+
+    // Agreg to fixpoint on a stress tree (small p triggers rewrites)
+    {
+        let n = 100_000 * scale;
+        let mut rng = Rng::new(9);
+        let tree = random_tree(TreeClass::Uniform, n, &mut rng);
+        let g = SpGraph::from_tree(&tree);
+        let t = median_time(3, || {
+            let (out, stats) = agreg(&g, 0.9, 8.0);
+            std::hint::black_box((out.nodes.len(), stats.iterations));
+        });
+        let (_, stats) = agreg(&g, 0.9, 8.0);
+        table.row(&[
+            format!("Agreg ({} iters)", stats.iterations),
+            format!("{n} tasks"),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} Mnodes/s", n as f64 / t / 1e6),
+        ]);
+    }
+
+    // DES simulation event rate
+    {
+        let n = 200_000 * scale;
+        let mut rng = Rng::new(10);
+        let tree = random_tree(TreeClass::Uniform, n, &mut rng);
+        let events = simulate(&tree, 0.9, 40.0, Policy::Proportional).events;
+        let t = median_time(3, || {
+            let r = simulate(&tree, 0.9, 40.0, Policy::Proportional);
+            std::hint::black_box(r.makespan);
+        });
+        table.row(&[
+            "DES (Proportional)".into(),
+            format!("{events} events"),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} Mevents/s", events as f64 / t / 1e6),
+        ]);
+    }
+
+    // symbolic analysis of a grid problem
+    {
+        let k = 64;
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let t = median_time(3, || {
+            let at = symbolic::analyze(&a, &perm, 4).unwrap();
+            std::hint::black_box(at.tree.len());
+        });
+        table.row(&[
+            "symbolic analyze".into(),
+            format!("grid {k}x{k} (n={})", k * k),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} kcols/s", (k * k) as f64 / t / 1e3),
+        ]);
+    }
+
+    print!("{}", table.render());
+}

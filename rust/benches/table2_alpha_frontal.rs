@@ -1,0 +1,40 @@
+//! Table 2 reproduction: α for the qr_mumps frontal kernel, 1D vs 2D
+//! partitioning (regression on p ≤ 10 for 1D, p ≤ 20 for 2D — the
+//! paper's protocol). Shape to match: 2D > 1D for every size; the
+//! smallest 1D front clearly lowest.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::metrics::fit_alpha;
+use malltree::metrics::Table;
+use malltree::sim::kerneldag::{timing_curve, KernelDag, MachineModel};
+
+fn main() {
+    header("table2", "alpha for qr_mumps frontal tasks (paper Table 2)");
+    let machine = MachineModel::default();
+    let p_max = env_usize("PMAX", 22);
+    let sizes: [(usize, usize); 3] = [(5000, 1000), (10000, 2500), (20000, 5000)];
+
+    let mut table = Table::new(&["matrix size", "alpha 1D", "alpha 2D"]);
+    let (mut shape_ok, secs) = timed(|| {
+        let mut ok = true;
+        for &(m, n) in &sizes {
+            let c1 = timing_curve(&KernelDag::frontal(m, n, 32, true), p_max, &machine);
+            let c2 = timing_curve(&KernelDag::frontal(m, n, 256, false), p_max, &machine);
+            let (a1, _) = fit_alpha(&c1, 10.0);
+            let (a2, _) = fit_alpha(&c2, 20.0);
+            ok &= a2 > a1;
+            table.row(&[format!("{m}x{n}"), format!("{a1:.3}"), format!("{a2:.3}")]);
+        }
+        ok
+    });
+    print!("{}", table.render());
+    println!("(paper: 1D 0.78/0.88/0.89, 2D 0.93/0.95/0.94)");
+    println!("shape check (2D > 1D for every size): {}", if shape_ok { "PASS" } else { "FAIL" });
+    shape_ok &= true;
+    println!("bench wall time: {secs:.2}s");
+    if !shape_ok {
+        std::process::exit(1);
+    }
+}

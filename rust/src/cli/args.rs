@@ -1,0 +1,113 @@
+//! Minimal argument parser: positionals + `--flag [value]` options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+/// Parsed argument bag.
+#[derive(Debug, Clone)]
+pub struct Args {
+    positionals: std::collections::VecDeque<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Split `argv` into positionals, `--key value` options and bare
+    /// `--flag`s (an option is a flag when the next token starts with
+    /// `--` or is absent).
+    pub fn new(argv: Vec<String>) -> Args {
+        let mut positionals = std::collections::VecDeque::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        options.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => flags.push(key.to_string()),
+                }
+            } else if let Some(key) = tok.strip_prefix('-') {
+                if !key.is_empty() && key.chars().all(|c| c.is_ascii_alphabetic()) {
+                    match it.peek() {
+                        Some(next) if !next.starts_with('-') => {
+                            options.insert(key.to_string(), it.next().unwrap());
+                        }
+                        _ => flags.push(key.to_string()),
+                    }
+                } else {
+                    positionals.push_back(tok);
+                }
+            } else {
+                positionals.push_back(tok);
+            }
+        }
+        Args { positionals, options, flags }
+    }
+
+    pub fn next_positional(&mut self) -> Option<String> {
+        self.positionals.pop_front()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::new(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn parses_mixture() {
+        let mut a = args("simulate --alpha 0.9 -p 40 --pjrt --trees 10");
+        assert_eq!(a.next_positional().as_deref(), Some("simulate"));
+        assert_eq!(a.get_f64("alpha", 1.0).unwrap(), 0.9);
+        assert_eq!(a.get_usize("p", 1).unwrap(), 40);
+        assert_eq!(a.get_usize("trees", 0).unwrap(), 10);
+        assert!(a.has_flag("pjrt"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args("cmd --verbose");
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn negative_numbers_are_positionals() {
+        let mut a = args("cmd -5");
+        assert_eq!(a.next_positional().as_deref(), Some("cmd"));
+        assert_eq!(a.next_positional().as_deref(), Some("-5"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = args("cmd --alpha banana");
+        assert!(a.get_f64("alpha", 1.0).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Launcher: hand-rolled CLI (clap is unavailable offline).
+//!
+//! ```text
+//! malltree analyze   --grid2d 32 [--amalgamate 4]        symbolic analysis summary
+//! malltree schedule  --grid2d 32 --alpha 0.9 -p 40       makespans: PM vs baselines
+//! malltree simulate  --trees 100 --alpha 0.9 -p 40       Figure 13/14-style rows
+//! malltree factorize --grid2d 24 [--pjrt] [--workers 4]  numeric factorization + residual
+//! malltree kernelsim --kind cholesky --n 20000 --b 256   Figure 2-6-style T(p) curve
+//! malltree dataset   --out DIR --trees 600               write the workload corpus
+//! malltree figures                                       regenerate every paper table/figure
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut args = Args::new(argv);
+    let Some(cmd) = args.next_positional() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "analyze" => commands::analyze(&mut args),
+        "schedule" => commands::schedule(&mut args),
+        "simulate" => commands::simulate(&mut args),
+        "factorize" => commands::factorize(&mut args),
+        "kernelsim" => commands::kernelsim(&mut args),
+        "dataset" => commands::dataset(&mut args),
+        "figures" => commands::figures(&mut args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn usage() -> String {
+    "malltree — scheduling trees of malleable tasks for sparse linear algebra\n\
+     \n\
+     commands:\n\
+     \x20 analyze    symbolic analysis of a sparse problem (tree shape summary)\n\
+     \x20 schedule   compare PM / Proportional / Divisible makespans on one tree\n\
+     \x20 simulate   Figure 13/14 rows over a generated tree corpus\n\
+     \x20 factorize  end-to-end numeric multifrontal factorization\n\
+     \x20 kernelsim  Figure 2-6 kernel timing curves + alpha fit\n\
+     \x20 dataset    write the workload corpus to disk\n\
+     \x20 figures    regenerate every paper table/figure (see benches for timing)\n\
+     \n\
+     common flags: --grid2d K | --grid3d K | --mtx FILE | --tree FILE,\n\
+     \x20 --alpha A, -p N, --amalgamate W, --seed S, --pjrt, --workers N\n"
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_command_errors() {
+        assert!(super::run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn no_command_prints_usage() {
+        super::run(vec![]).unwrap();
+    }
+}

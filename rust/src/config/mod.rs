@@ -1,0 +1,172 @@
+//! Configuration: a dependency-free `key = value` file format plus a
+//! typed view of the settings the launcher understands.
+//!
+//! Example (`malltree.conf`):
+//! ```text
+//! # scheduling
+//! alpha = 0.9
+//! processors = 40
+//! strategy = pm        # pm | proportional | divisible
+//! amalgamate = 4
+//! artifacts_dir = artifacts
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Raw parsed config.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse `key = value` text ('#' comments, blank lines ok).
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value, got {line:?}", no + 1);
+            };
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not an integer")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+/// Scheduling strategy selector shared by CLI and config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Pm,
+    Proportional,
+    Divisible,
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pm" | "prasanna-musicus" => Ok(Strategy::Pm),
+            "proportional" | "prop" => Ok(Strategy::Proportional),
+            "divisible" | "div" => Ok(Strategy::Divisible),
+            other => bail!("unknown strategy {other:?} (pm|proportional|divisible)"),
+        }
+    }
+}
+
+/// Typed settings with defaults (the launcher's view).
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub alpha: f64,
+    pub processors: f64,
+    pub strategy: Strategy,
+    pub amalgamate: usize,
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            alpha: crate::DEFAULT_ALPHA,
+            processors: 40.0, // the paper's platform
+            strategy: Strategy::Pm,
+            amalgamate: 4,
+            artifacts_dir: PathBuf::from("artifacts"),
+            seed: 0xDA7A,
+        }
+    }
+}
+
+impl Settings {
+    pub fn from_config(cfg: &Config) -> Result<Settings> {
+        let d = Settings::default();
+        Ok(Settings {
+            alpha: cfg.get_f64("alpha", d.alpha)?,
+            processors: cfg.get_f64("processors", d.processors)?,
+            strategy: cfg.get_str("strategy", "pm").parse()?,
+            amalgamate: cfg.get_usize("amalgamate", d.amalgamate)?,
+            artifacts_dir: PathBuf::from(cfg.get_str("artifacts_dir", "artifacts")),
+            seed: cfg.get_usize("seed", d.seed as usize)? as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_keys_and_comments() {
+        let c = Config::parse("alpha = 0.8 # speedup\n\n# blank\nprocessors=16\n").unwrap();
+        assert_eq!(c.get("alpha"), Some("0.8"));
+        assert_eq!(c.get_f64("processors", 1.0).unwrap(), 16.0);
+        assert_eq!(c.get_f64("missing", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("no equals sign").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        let c = Config::parse("alpha = banana").unwrap();
+        assert!(c.get_f64("alpha", 1.0).is_err());
+    }
+
+    #[test]
+    fn settings_from_config() {
+        let c = Config::parse("alpha=0.7\nstrategy = proportional\namalgamate = 8").unwrap();
+        let s = Settings::from_config(&c).unwrap();
+        assert_eq!(s.alpha, 0.7);
+        assert_eq!(s.strategy, Strategy::Proportional);
+        assert_eq!(s.amalgamate, 8);
+        assert_eq!(s.processors, 40.0); // default
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!("pm".parse::<Strategy>().unwrap(), Strategy::Pm);
+        assert_eq!("DIV".parse::<Strategy>().unwrap(), Strategy::Divisible);
+        assert!("nope".parse::<Strategy>().is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! The malleable work-crew executor.
+//!
+//! Takes a *schedule* (from any strategy in [`crate::sched`]) and
+//! actually runs the numeric multifrontal factorization it describes:
+//!
+//! * **virtual time** follows the malleable model — the schedule's
+//!   spans, fractional shares realized as integer cores per time slice
+//!   by [`integer_shares`] (largest-remainder rounding, the mechanism
+//!   the paper attributes to runtime-system time sharing);
+//! * **wall time** is the real execution of each front through a
+//!   [`FrontBackend`]. The PJRT backend is a single accelerator
+//!   command queue (`Rc` client), so `execute_serial` streams fronts
+//!   in schedule order; `execute_parallel` adds true thread-crew tree
+//!   parallelism for `Send + Sync` backends (the pure-Rust one).
+//!
+//! Both paths produce bit-identical factors to
+//! [`crate::frontal::factorize`]; tests enforce it.
+
+mod report;
+mod shares;
+mod worker;
+
+pub use report::ExecReport;
+pub use shares::integer_shares;
+pub use worker::{execute_parallel, execute_serial};

@@ -1,0 +1,76 @@
+//! Execution reports.
+
+/// What an executor run produced, beyond the factorization itself.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// Makespan in the malleable model's units (from the schedule).
+    pub virtual_makespan: f64,
+    /// Real wall-clock seconds spent executing fronts.
+    pub wall_seconds: f64,
+    /// Number of tasks (supernodes) executed.
+    pub tasks: usize,
+    /// Total front flops executed.
+    pub flops: f64,
+    /// Backend used.
+    pub backend: String,
+    /// Worker threads (1 for the serial accelerator-queue path).
+    pub workers: usize,
+}
+
+impl ExecReport {
+    /// Achieved flop rate (flops per wall second).
+    pub fn flop_rate(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.flops / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "backend={} workers={} tasks={} flops={:.3e} wall={:.3}s ({:.2} Gflop/s) virtual_makespan={:.3e}",
+            self.backend,
+            self.workers,
+            self.tasks,
+            self.flops,
+            self.wall_seconds,
+            self.flop_rate() / 1e9,
+            self.virtual_makespan,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_rate_handles_zero_time() {
+        let r = ExecReport {
+            virtual_makespan: 1.0,
+            wall_seconds: 0.0,
+            tasks: 0,
+            flops: 0.0,
+            backend: "x".into(),
+            workers: 1,
+        };
+        assert_eq!(r.flop_rate(), 0.0);
+    }
+
+    #[test]
+    fn render_mentions_backend() {
+        let r = ExecReport {
+            virtual_makespan: 2.0,
+            wall_seconds: 1.0,
+            tasks: 3,
+            flops: 2e9,
+            backend: "rust-f64".into(),
+            workers: 4,
+        };
+        let s = r.render();
+        assert!(s.contains("rust-f64"));
+        assert!(s.contains("workers=4"));
+        assert!(s.contains("2.00 Gflop/s"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Fractional-to-integer share realization.
+//!
+//! The paper assumes non-integer processor shares, realized at runtime
+//! by time-sharing (§1: "one processor will dedicate 60% of its
+//! processing time to A and 40% to B"). Per scheduling slice we hand
+//! each running task an integer core count by largest-remainder
+//! rounding, which preserves `Σ shares` exactly and each share within
+//! ±1 core — the discretization whose cost the ablation bench
+//! measures.
+
+/// Round fractional `shares` to integers summing to
+/// `min(total, round(Σ shares))`, largest remainder first. Shares are
+/// first rescaled when they over-subscribe `total` (schedulers emit
+/// `Σ shares <= p`, but be safe for callers that do not).
+pub fn integer_shares(raw: &[f64], total: usize) -> Vec<usize> {
+    let raw_sum: f64 = raw.iter().sum();
+    let scaled: Vec<f64>;
+    let shares: &[f64] = if raw_sum > total as f64 {
+        scaled = raw.iter().map(|&s| s * total as f64 / raw_sum).collect();
+        &scaled
+    } else {
+        raw
+    };
+    let sum: f64 = shares.iter().sum();
+    let budget = total.min(sum.round() as usize);
+    let mut base: Vec<usize> = shares.iter().map(|&s| s.floor() as usize).collect();
+    let used: usize = base.iter().sum();
+    let mut rema: Vec<(f64, usize)> = shares
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| (s - s.floor(), i))
+        .collect();
+    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut left = budget.saturating_sub(used);
+    for (frac, i) in rema {
+        if left == 0 {
+            break;
+        }
+        if frac > 0.0 {
+            base[i] += 1;
+            left -= 1;
+        }
+    }
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn exact_integers_pass_through() {
+        assert_eq!(integer_shares(&[2.0, 3.0, 1.0], 6), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn fractions_round_by_largest_remainder() {
+        // 2.6 + 3.4 = 6: one extra core goes to the .6 task
+        assert_eq!(integer_shares(&[2.6, 3.4], 6), vec![3, 3]);
+        // 1.5 + 1.5 + 1.0 = 4: both halves tie; one of them gets it
+        let s = integer_shares(&[1.5, 1.5, 1.0], 4);
+        assert_eq!(s.iter().sum::<usize>(), 4);
+        assert!(s == vec![2, 1, 1] || s == vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn never_exceeds_total() {
+        let s = integer_shares(&[0.9, 0.9, 0.9], 2);
+        assert!(s.iter().sum::<usize>() <= 2);
+    }
+
+    #[test]
+    fn preserves_sum_within_one_randomized() {
+        check(
+            Config { cases: 100, seed: 88 },
+            "largest remainder invariants",
+            |rng| {
+                let n = rng.range(1, 12);
+                let shares: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 8.0)).collect();
+                let total = rng.range(1, 40);
+                (shares, total)
+            },
+            |(shares, total)| {
+                let ints = integer_shares(shares, *total);
+                let sum_f: f64 = shares.iter().sum();
+                let sum_i: usize = ints.iter().sum();
+                if sum_i > *total {
+                    return Err(format!("sum {sum_i} exceeds total {total}"));
+                }
+                if sum_i as f64 > sum_f + 1.0 {
+                    return Err("over-allocated".into());
+                }
+                // per-item bound against the (possibly rescaled) shares
+                let scale = if sum_f > *total as f64 { *total as f64 / sum_f } else { 1.0 };
+                for (&s, &i) in shares.iter().zip(&ints) {
+                    let s = s * scale;
+                    if (i as f64) < s.floor() || (i as f64) > s.ceil() {
+                        return Err(format!("share {s} rounded to {i}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! Schedule-driven execution of the numeric multifrontal factorization.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::frontal::backend::FrontBackend;
+use crate::frontal::multifrontal::{assemble_front, Factorization};
+use crate::sched::Schedule;
+use crate::sparse::{AssemblyTree, CscMatrix};
+
+/// Order tasks by schedule start time, tie-broken by topological
+/// position (children first). For any valid schedule this is a
+/// topological order: a parent starts only after its children finish.
+fn dispatch_order(at: &AssemblyTree, schedule: &Schedule) -> Vec<u32> {
+    let n = at.tree.len();
+    let mut start = vec![f64::INFINITY; n];
+    for s in &schedule.spans {
+        start[s.task as usize] = s.start;
+    }
+    let mut topo_pos = vec![0usize; n];
+    for (i, &v) in at.tree.topo_up().iter().enumerate() {
+        topo_pos[v as usize] = i;
+    }
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_by(|&a, &b| {
+        start[a as usize]
+            .partial_cmp(&start[b as usize])
+            .unwrap()
+            .then(topo_pos[a as usize].cmp(&topo_pos[b as usize]))
+    });
+    order
+}
+
+fn factor_one(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    s: usize,
+    backend: &dyn FrontBackend,
+    contrib: &mut HashMap<usize, Vec<f64>>,
+    panels: &mut [Vec<f64>],
+) -> Result<f64> {
+    let sn = &at.symbolic.supernodes[s];
+    let nf = sn.front_order();
+    let width = sn.width;
+    let front = assemble_front(at, ap, s, contrib);
+    let flops = sn.flops();
+    if width == nf {
+        panels[s] = backend
+            .full(&front, nf)
+            .with_context(|| format!("full factor of supernode {s}"))?;
+    } else {
+        let f = backend
+            .partial(&front, nf, width)
+            .with_context(|| format!("partial factor of supernode {s}"))?;
+        let m = nf - width;
+        let mut panel = vec![0f64; nf * width];
+        panel[..width * width].copy_from_slice(&f.l11);
+        for i in 0..m {
+            panel[(width + i) * width..(width + i + 1) * width]
+                .copy_from_slice(&f.l21[i * width..(i + 1) * width]);
+        }
+        contrib.insert(s, f.schur);
+        panels[s] = panel;
+    }
+    Ok(flops)
+}
+
+/// Serial ("accelerator command queue") execution: fronts stream to the
+/// backend in schedule-dispatch order. This is the path the PJRT
+/// backend uses — the XLA CPU client is one logical device.
+pub fn execute_serial(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &dyn FrontBackend,
+) -> Result<(Factorization, super::ExecReport)> {
+    let n = at.tree.len();
+    let order = dispatch_order(at, schedule);
+    let mut contrib: HashMap<usize, Vec<f64>> = HashMap::new();
+    let mut panels: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut flops = 0.0;
+    let t0 = Instant::now();
+    for &v in &order {
+        flops += factor_one(at, ap, v as usize, backend, &mut contrib, &mut panels)?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok((
+        Factorization { panels, n: ap.n },
+        super::ExecReport {
+            virtual_makespan: schedule.makespan,
+            wall_seconds: wall,
+            tasks: n,
+            flops,
+            backend: backend.name().to_string(),
+            workers: 1,
+        },
+    ))
+}
+
+struct CrewState {
+    /// ready tasks, kept sorted descending by dispatch priority so
+    /// `pop()` yields the earliest-starting task
+    ready: Vec<u32>,
+    unfinished_children: Vec<usize>,
+    contrib: HashMap<usize, Vec<f64>>,
+    panels: Vec<Vec<f64>>,
+    flops: f64,
+    remaining: usize,
+    error: Option<String>,
+}
+
+/// Thread-crew execution for `Send + Sync` backends: real tree
+/// parallelism with the schedule's dispatch order as priority.
+pub fn execute_parallel<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+) -> Result<(Factorization, super::ExecReport)> {
+    let n = at.tree.len();
+    let order = dispatch_order(at, schedule);
+    // priority = position in dispatch order (lower = sooner)
+    let mut prio = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        prio[v as usize] = i;
+    }
+    let unfinished: Vec<usize> = at.tree.nodes.iter().map(|t| t.children.len()).collect();
+    let mut ready: Vec<u32> = (0..n as u32)
+        .filter(|&v| unfinished[v as usize] == 0)
+        .collect();
+    // sorted descending by priority index so pop() gives the smallest
+    ready.sort_by(|&a, &b| prio[b as usize].cmp(&prio[a as usize]));
+
+    let state = Mutex::new(CrewState {
+        ready,
+        unfinished_children: unfinished,
+        contrib: HashMap::new(),
+        panels: vec![Vec::new(); n],
+        flops: 0.0,
+        remaining: n,
+        error: None,
+    });
+    let cv = Condvar::new();
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1) {
+            scope.spawn(|| loop {
+                let task = {
+                    let mut st = state.lock().unwrap();
+                    loop {
+                        if st.remaining == 0 || st.error.is_some() {
+                            cv.notify_all();
+                            return;
+                        }
+                        if let Some(v) = st.ready.pop() {
+                            break v;
+                        }
+                        st = cv.wait(st).unwrap();
+                    }
+                };
+                let s = task as usize;
+                let sn = &at.symbolic.supernodes[s];
+                // assemble under the lock (children contributions move
+                // out of the shared map), factor outside it
+                let front = {
+                    let mut st = state.lock().unwrap();
+                    assemble_front(at, ap, s, &mut st.contrib)
+                };
+                let nf = sn.front_order();
+                let width = sn.width;
+                let result: Result<(Vec<f64>, Option<Vec<f64>>)> = (|| {
+                    if width == nf {
+                        Ok((backend.full(&front, nf)?, None))
+                    } else {
+                        let f = backend.partial(&front, nf, width)?;
+                        let m = nf - width;
+                        let mut panel = vec![0f64; nf * width];
+                        panel[..width * width].copy_from_slice(&f.l11);
+                        for i in 0..m {
+                            panel[(width + i) * width..(width + i + 1) * width]
+                                .copy_from_slice(&f.l21[i * width..(i + 1) * width]);
+                        }
+                        Ok((panel, Some(f.schur)))
+                    }
+                })();
+                let mut st = state.lock().unwrap();
+                match result {
+                    Ok((panel, schur)) => {
+                        st.panels[s] = panel;
+                        if let Some(schur) = schur {
+                            st.contrib.insert(s, schur);
+                        }
+                        st.flops += sn.flops();
+                        st.remaining -= 1;
+                        if let Some(parent) = at.tree.nodes[s].parent {
+                            let pi = parent as usize;
+                            st.unfinished_children[pi] -= 1;
+                            if st.unfinished_children[pi] == 0 {
+                                let pos = st
+                                    .ready
+                                    .binary_search_by(|&x| {
+                                        prio[parent as usize].cmp(&prio[x as usize])
+                                    })
+                                    .unwrap_or_else(|e| e);
+                                st.ready.insert(pos, parent);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        st.error = Some(format!("task {s}: {e:#}"));
+                        st.remaining = 0;
+                    }
+                }
+                cv.notify_all();
+            });
+        }
+    });
+
+    let st = state.into_inner().unwrap();
+    if let Some(e) = st.error {
+        anyhow::bail!("executor failed: {e}");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok((
+        Factorization { panels: st.panels, n: ap.n },
+        super::ExecReport {
+            virtual_makespan: schedule.makespan,
+            wall_seconds: wall,
+            tasks: n,
+            flops: st.flops,
+            backend: backend.name().to_string(),
+            workers: workers.max(1),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontal::multifrontal::{factorize, residual};
+    use crate::frontal::RustBackend;
+    use crate::sched::{PmSchedule, Profile};
+    use crate::sparse::{gen, order, symbolic};
+    use crate::DEFAULT_ALPHA;
+
+    fn setup(k: usize) -> (AssemblyTree, CscMatrix, Schedule) {
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        let pm = PmSchedule::for_tree(&at.tree, DEFAULT_ALPHA, &Profile::constant(8.0));
+        (at, ap, pm.schedule)
+    }
+
+    #[test]
+    fn serial_matches_reference_factorization() {
+        let (at, ap, schedule) = setup(8);
+        let (f, report) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let reference = factorize(&at, &ap, &RustBackend).unwrap();
+        for (a, b) in f.panels.iter().zip(&reference.panels) {
+            assert_eq!(a, b);
+        }
+        assert!(report.flops > 0.0);
+        assert_eq!(report.tasks, at.tree.len());
+        assert!(residual(&at, &ap, &f) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_matches_reference_factorization() {
+        let (at, ap, schedule) = setup(10);
+        for workers in [1, 2, 4] {
+            let (f, report) =
+                execute_parallel(&at, &ap, &schedule, &RustBackend, workers).unwrap();
+            let r = residual(&at, &ap, &f);
+            assert!(r < 1e-12, "workers={workers}: residual {r}");
+            assert_eq!(report.workers, workers);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_bitwise() {
+        // deterministic math: panels must be identical regardless of
+        // execution interleaving (extend-add is order-dependent in
+        // floating point ONLY if siblings overlap rows; grid problems
+        // with exact symbolic structure commute here because addition
+        // order per entry is child-set dependent... we still assert
+        // near-equality to catch logic bugs)
+        let (at, ap, schedule) = setup(8);
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fp, _) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        for (a, b) in fs.panels.iter().zip(&fp.panels) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() <= 1e-9 * x.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_order_is_topological() {
+        let (at, _, schedule) = setup(6);
+        let order = dispatch_order(&at, &schedule);
+        let mut pos = vec![0usize; at.tree.len()];
+        for (i, &v) in order.iter().enumerate() {
+            pos[v as usize] = i;
+        }
+        for (i, node) in at.tree.nodes.iter().enumerate() {
+            for &c in &node.children {
+                assert!(pos[c as usize] < pos[i], "child {c} after parent {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Front-factorization backends.
+//!
+//! The multifrontal driver and the executor are generic over
+//! [`FrontBackend`]: `RustBackend` computes in-process (f64, exact
+//! oracle), `PjrtBackend` routes through the AOT HLO artifacts (f32,
+//! the TPU-shaped request path). Tests compare the two on identical
+//! fronts.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{FrontKernels, Runtime};
+
+use super::dense;
+
+/// Output of a partial front factorization in f64 row-major buffers.
+#[derive(Debug, Clone)]
+pub struct FrontFactor {
+    pub l11: Vec<f64>,
+    pub l21: Vec<f64>,
+    pub schur: Vec<f64>,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// A backend that can factorize dense fronts.
+///
+/// Deliberately *not* `Send + Sync`: the `xla` crate's PJRT client is
+/// single-threaded (`Rc` internals), so the PJRT backend behaves like
+/// one accelerator command queue. Parallel execution with a thread
+/// crew is available for backends that additionally implement
+/// `Send + Sync` (e.g. [`RustBackend`]) via `exec::execute_parallel`.
+pub trait FrontBackend {
+    /// Eliminate the leading `k < n` columns.
+    fn partial(&self, front: &[f64], n: usize, k: usize) -> Result<FrontFactor>;
+
+    /// Full factorization (`k == n`); returns the lower factor.
+    fn full(&self, front: &[f64], n: usize) -> Result<Vec<f64>>;
+
+    /// Human-readable name for logs and reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RustBackend;
+
+impl FrontBackend for RustBackend {
+    fn partial(&self, front: &[f64], n: usize, k: usize) -> Result<FrontFactor> {
+        let (l11, l21, schur) = dense::partial_factor(front, n, k)?;
+        Ok(FrontFactor { l11, l21, schur, n, k })
+    }
+
+    fn full(&self, front: &[f64], n: usize) -> Result<Vec<f64>> {
+        dense::full_factor(front, n)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-f64"
+    }
+}
+
+/// PJRT backend: pads fronts into the AOT artifact menu and executes
+/// the XLA-compiled Pallas kernels.
+pub struct PjrtBackend {
+    kernels: FrontKernels,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        PjrtBackend { kernels: FrontKernels::new(rt) }
+    }
+
+    /// Largest front the artifact menu accepts.
+    pub fn max_front(&self) -> usize {
+        self.kernels.max_front()
+    }
+}
+
+impl FrontBackend for PjrtBackend {
+    fn partial(&self, front: &[f64], n: usize, k: usize) -> Result<FrontFactor> {
+        let f32buf: Vec<f32> = front.iter().map(|&x| x as f32).collect();
+        let r = self.kernels.partial_factor(&f32buf, n, k)?;
+        Ok(FrontFactor {
+            l11: r.l11.iter().map(|&x| x as f64).collect(),
+            l21: r.l21.iter().map(|&x| x as f64).collect(),
+            schur: r.schur.iter().map(|&x| x as f64).collect(),
+            n,
+            k,
+        })
+    }
+
+    fn full(&self, front: &[f64], n: usize) -> Result<Vec<f64>> {
+        let f32buf: Vec<f32> = front.iter().map(|&x| x as f32).collect();
+        let l = self.kernels.full_factor(&f32buf, n)?;
+        Ok(l.iter().map(|&x| x as f64).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-xla-f32"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_backend_partial_matches_dense() {
+        let n = 12;
+        let k = 5;
+        // diagonally dominant SPD
+        let mut a = vec![0.1f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = n as f64;
+        }
+        let b = RustBackend;
+        let f = b.partial(&a, n, k).unwrap();
+        let (l11, l21, schur) = dense::partial_factor(&a, n, k).unwrap();
+        assert_eq!(f.l11, l11);
+        assert_eq!(f.l21, l21);
+        assert_eq!(f.schur, schur);
+        assert_eq!(b.name(), "rust-f64");
+    }
+
+    #[test]
+    fn rust_backend_full_matches_dense() {
+        let n = 9;
+        let mut a = vec![0.2f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 5.0;
+        }
+        let b = RustBackend;
+        assert_eq!(b.full(&a, n).unwrap(), dense::full_factor(&a, n).unwrap());
+    }
+}

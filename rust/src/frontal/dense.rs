@@ -1,0 +1,286 @@
+//! Pure-Rust dense kernels (row-major, f64).
+//!
+//! These are the reference implementations for the PJRT path and the
+//! numeric engine of the `RustBackend`. They mirror
+//! `python/compile/kernels/ref.py` operation by operation.
+
+use anyhow::{bail, Result};
+
+/// In-place lower Cholesky of a symmetric positive-definite `n x n`
+/// row-major matrix; the strict upper triangle is zeroed.
+pub fn potrf(a: &mut [f64], n: usize) -> Result<()> {
+    if a.len() != n * n {
+        bail!("potrf: buffer mismatch");
+    }
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            bail!("potrf: matrix not positive definite at pivot {j} (d={d})");
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in j + 1..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / d;
+        }
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            a[i * n + j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `X L^T = B` for X where `l` is `k x k` lower triangular and
+/// `b` is `m x k` (the panel TRSM); result overwrites `b`.
+pub fn trsm_rt(l: &[f64], k: usize, b: &mut [f64], m: usize) -> Result<()> {
+    if l.len() != k * k || b.len() != m * k {
+        bail!("trsm: buffer mismatch");
+    }
+    // row i of X: forward substitution against L
+    for i in 0..m {
+        for j in 0..k {
+            let mut s = b[i * k + j];
+            for t in 0..j {
+                s -= b[i * k + t] * l[j * k + t];
+            }
+            b[i * k + j] = s / l[j * k + j];
+        }
+    }
+    Ok(())
+}
+
+/// Schur update `C -= A A^T` where `a` is `m x k`, `c` is `m x m`.
+pub fn syrk_sub(c: &mut [f64], a: &[f64], m: usize, k: usize) -> Result<()> {
+    if c.len() != m * m || a.len() != m * k {
+        bail!("syrk: buffer mismatch");
+    }
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0.0;
+            for t in 0..k {
+                s += a[i * k + t] * a[j * k + t];
+            }
+            c[i * m + j] -= s;
+        }
+    }
+    Ok(())
+}
+
+/// Partial factorization: eliminate the leading `k` columns of the
+/// `n x n` front. Returns `(l11 [k x k], l21 [(n-k) x k], schur
+/// [(n-k) x (n-k)])`.
+pub fn partial_factor(front: &[f64], n: usize, k: usize) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+    if front.len() != n * n || k == 0 || k > n {
+        bail!("partial_factor: bad arguments n={n} k={k}");
+    }
+    let m = n - k;
+    let mut l11 = vec![0f64; k * k];
+    for i in 0..k {
+        l11[i * k..(i + 1) * k].copy_from_slice(&front[i * n..i * n + k]);
+    }
+    potrf(&mut l11, k)?;
+    let mut l21 = vec![0f64; m * k];
+    for i in 0..m {
+        l21[i * k..(i + 1) * k].copy_from_slice(&front[(k + i) * n..(k + i) * n + k]);
+    }
+    trsm_rt(&l11, k, &mut l21, m)?;
+    let mut schur = vec![0f64; m * m];
+    for i in 0..m {
+        for j in 0..m {
+            schur[i * m + j] = front[(k + i) * n + (k + j)];
+        }
+    }
+    syrk_sub(&mut schur, &l21, m, k)?;
+    Ok((l11, l21, schur))
+}
+
+/// Full Cholesky of a front (returns lower factor).
+pub fn full_factor(front: &[f64], n: usize) -> Result<Vec<f64>> {
+    let mut l = front.to_vec();
+    potrf(&mut l, n)?;
+    Ok(l)
+}
+
+/// `C = A B^T` helper for tests.
+pub fn matmul_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for t in 0..k {
+                s += a[i * k + t] * b[j * k + t];
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Forward solve `L y = b` (lower, row-major dense).
+pub fn forward_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[i * n + j] * y[j];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    y
+}
+
+/// Backward solve `L^T x = y`.
+pub fn backward_solve(l: &[f64], n: usize, y: &[f64]) -> Vec<f64> {
+    let mut x = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in i + 1..n {
+            s -= l[j * n + i] * x[j];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s / n as f64 + if i == j { 2.0 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn potrf_reconstructs() {
+        let n = 24;
+        let a = random_spd(n, 1);
+        let mut l = a.clone();
+        potrf(&mut l, n).unwrap();
+        let llt = matmul_nt(&l, &l, n, n, n);
+        let diff: f64 = a.iter().zip(&llt).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "max diff {diff}");
+    }
+
+    #[test]
+    fn potrf_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(potrf(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn potrf_identity() {
+        let n = 5;
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let want = a.clone();
+        potrf(&mut a, n).unwrap();
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn trsm_solves() {
+        let k = 8;
+        let m = 12;
+        let a = random_spd(k, 2);
+        let mut l = a.clone();
+        potrf(&mut l, k).unwrap();
+        let mut rng = Rng::new(3);
+        let x_true: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        // B = X L^T
+        let mut b = vec![0f64; m * k];
+        for i in 0..m {
+            for j in 0..k {
+                let mut s = 0.0;
+                for t in 0..=j {
+                    s += x_true[i * k + t] * l[j * k + t];
+                }
+                b[i * k + j] = s;
+            }
+        }
+        trsm_rt(&l, k, &mut b, m).unwrap();
+        let diff: f64 = b.iter().zip(&x_true).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-10, "max diff {diff}");
+    }
+
+    #[test]
+    fn partial_factor_composes_to_full() {
+        let n = 20;
+        let k = 8;
+        let a = random_spd(n, 4);
+        let (l11, l21, schur) = partial_factor(&a, n, k).unwrap();
+        let l22 = full_factor(&schur, n - k).unwrap();
+        // stitch L and compare against direct potrf
+        let mut l = vec![0f64; n * n];
+        for i in 0..k {
+            for j in 0..=i {
+                l[i * n + j] = l11[i * k + j];
+            }
+        }
+        for i in 0..n - k {
+            for j in 0..k {
+                l[(k + i) * n + j] = l21[i * k + j];
+            }
+            for j in 0..=i {
+                l[(k + i) * n + (k + j)] = l22[i * (n - k) + j];
+            }
+        }
+        let mut direct = a.clone();
+        potrf(&mut direct, n).unwrap();
+        let diff: f64 = l.iter().zip(&direct).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-9, "max diff {diff}");
+    }
+
+    #[test]
+    fn solves_round_trip() {
+        let n = 16;
+        let a = random_spd(n, 5);
+        let mut l = a.clone();
+        potrf(&mut l, n).unwrap();
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64).sin() + 2.0).collect();
+        // b = A x
+        let mut b = vec![0f64; n];
+        for i in 0..n {
+            for j in 0..n {
+                b[i] += a[i * n + j] * x_true[j];
+            }
+        }
+        let y = forward_solve(&l, n, &b);
+        let x = backward_solve(&l, n, &y);
+        let diff: f64 = x.iter().zip(&x_true).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+        assert!(diff < 1e-9);
+    }
+
+    #[test]
+    fn fro_norm_basics() {
+        assert!((fro_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(fro_norm(&[]), 0.0);
+    }
+}

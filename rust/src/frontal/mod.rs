@@ -1,0 +1,19 @@
+//! Dense frontal-matrix math and the numeric multifrontal driver.
+//!
+//! * [`dense`] — pure-Rust dense Cholesky building blocks (the fallback
+//!   backend, and the oracle the PJRT path is validated against);
+//! * [`backend`] — the `FrontBackend` abstraction: `RustBackend`
+//!   (in-process f64) vs `PjrtBackend` (AOT HLO artifacts via
+//!   [`crate::runtime`], the TPU-shaped path);
+//! * [`multifrontal`] — the numeric factorization: assemble fronts in
+//!   assembly-tree postorder, extend-add children contributions,
+//!   partial-factor each front, and emit the sparse factor.
+
+pub mod backend;
+pub mod dense;
+pub mod multifrontal;
+pub mod solve;
+
+pub use backend::{FrontBackend, PjrtBackend, RustBackend};
+pub use multifrontal::{factorize, Factorization};
+pub use solve::{backward_solve_sn, forward_solve_sn, solve_sn};

@@ -1,0 +1,56 @@
+//! # malltree — Scheduling Trees of Malleable Tasks for Sparse Linear Algebra
+//!
+//! A production-oriented reproduction of Guermouche, Marchal, Simon &
+//! Vivien, *"Scheduling Trees of Malleable Tasks for Sparse Linear
+//! Algebra"* (Inria RR-8616, 2014).
+//!
+//! The library schedules trees (and series-parallel graphs) of
+//! **malleable tasks** — tasks whose speedup on a fractional processor
+//! share `p` is `p^α` (0 < α ≤ 1) — as they arise in multifrontal sparse
+//! Cholesky factorization:
+//!
+//! * [`model`] — tasks, in-trees, SP-graphs and conversions (paper §4);
+//! * [`sched`] — the Prasanna–Musicus optimal schedule and the
+//!   `Proportional` / `Divisible` baselines (paper §5, §7), schedule
+//!   validation, step processor profiles, the `Agreg` transformation;
+//! * [`dist`] — two-node distributed-memory extensions: the
+//!   `(4/3)^α`-approximation for trees on homogeneous nodes, the
+//!   subset-sum based FPTAS for independent tasks on heterogeneous
+//!   nodes, and the Partition reduction behind the NP-hardness proof
+//!   (paper §6);
+//! * [`sparse`] — the sparse-linear-algebra substrate: CSC matrices,
+//!   Matrix Market I/O, problem generators, elimination trees,
+//!   supernode amalgamation and assembly-tree extraction;
+//! * [`frontal`] — dense frontal-matrix math and the numeric
+//!   multifrontal driver (pure-Rust fallback and PJRT-kernel path);
+//! * [`runtime`] — the PJRT bridge that loads the AOT HLO artifacts
+//!   produced by `python/compile/aot.py`;
+//! * [`exec`] — the malleable work-crew executor realizing fractional
+//!   shares as time-sliced integer core assignments;
+//! * [`sim`] — simulators: a discrete-event engine for malleable
+//!   schedules and the tiled kernel-DAG simulator used to reproduce the
+//!   paper's §3 speedup measurements;
+//! * [`workload`] — the assembly-tree dataset surrogate for the
+//!   University of Florida collection used in §7;
+//! * [`metrics`] — statistics, regression (α fitting) and table/boxplot
+//!   rendering for the paper's figures;
+//! * [`config`] / [`cli`] — launcher plumbing.
+
+pub mod cli;
+pub mod config;
+pub mod dist;
+pub mod exec;
+pub mod frontal;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+pub mod workload;
+
+/// Paper-wide default speedup exponent: the value the paper measures on
+/// its 40-core platform (§3, "α is in the range 0.85–0.95") and uses as
+/// the headline simulation point (§7: "up to 16% for α = 0.9").
+pub const DEFAULT_ALPHA: f64 = 0.9;

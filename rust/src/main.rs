@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    malltree::cli::run(std::env::args().skip(1).collect())
+}

@@ -1,0 +1,14 @@
+//! Statistics, regression and table rendering for the paper's figures.
+//!
+//! * [`stats`] — quantiles and the boxplot rows of Figures 13–14;
+//! * [`regression`] — the log–log least-squares fit that recovers α
+//!   from `T(p)` curves (§3, Tables 1–2);
+//! * [`table`] — fixed-width text tables for bench output.
+
+pub mod regression;
+pub mod stats;
+pub mod table;
+
+pub use regression::{fit_alpha, LinearFit};
+pub use stats::{quantile, BoxplotRow};
+pub use table::Table;

@@ -1,0 +1,103 @@
+//! Least-squares fits — in particular the α regression of paper §3:
+//! `T(p) = L / p^α  ⇒  log T = log L − α log p`, fit over `p <=
+//! p_cap` ("We have performed a linear regression on the portion where
+//! p ≤ 10").
+
+/// Result of a simple linear regression `y = a + b x`.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearFit {
+    pub intercept: f64,
+    pub slope: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+/// Ordinary least squares on `(x, y)` pairs.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    LinearFit { intercept, slope, r2 }
+}
+
+/// Fit α from `(p, T(p))` samples with `p <= p_cap`
+/// (log–log regression; returns `(alpha, fit)`).
+pub fn fit_alpha(samples: &[(f64, f64)], p_cap: f64) -> (f64, LinearFit) {
+    let pts: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|&&(p, t)| p <= p_cap && p > 0.0 && t > 0.0)
+        .map(|&(p, t)| (p.ln(), t.ln()))
+        .collect();
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let fit = linear_fit(&xs, &ys);
+    (-fit.slope, fit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 3.0).abs() < 1e-12);
+        assert!((f.intercept - 2.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_recovered_from_perfect_power_law() {
+        let alpha = 0.87;
+        let l = 42.0;
+        let samples: Vec<(f64, f64)> =
+            (1..=40).map(|p| (p as f64, l / (p as f64).powf(alpha))).collect();
+        let (a, fit) = fit_alpha(&samples, 10.0);
+        assert!((a - alpha).abs() < 1e-9, "fitted {a}");
+        assert!(fit.r2 > 0.999999);
+    }
+
+    #[test]
+    fn p_cap_excludes_saturated_regime() {
+        // below cap: perfect α = 0.9; above cap: flat (saturation)
+        let alpha = 0.9;
+        let mut samples: Vec<(f64, f64)> = (1..=10)
+            .map(|p| (p as f64, 100.0 / (p as f64).powf(alpha)))
+            .collect();
+        let t10 = 100.0 / 10f64.powf(alpha);
+        samples.extend((11..=40).map(|p| (p as f64, t10)));
+        let (a_capped, _) = fit_alpha(&samples, 10.0);
+        let (a_all, _) = fit_alpha(&samples, 40.0);
+        assert!((a_capped - alpha).abs() < 1e-9);
+        assert!(a_all < alpha - 0.1, "saturation should drag α down: {a_all}");
+    }
+
+    #[test]
+    fn noisy_fit_r2_reasonable() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let samples: Vec<(f64, f64)> = (1..=10)
+            .map(|p| {
+                let noise = 1.0 + 0.01 * rng.normal();
+                (p as f64, 50.0 / (p as f64).powf(0.8) * noise)
+            })
+            .collect();
+        let (a, fit) = fit_alpha(&samples, 10.0);
+        assert!((a - 0.8).abs() < 0.05, "fitted {a}");
+        assert!(fit.r2 > 0.98);
+    }
+}

@@ -1,0 +1,105 @@
+//! Quantiles and boxplot summaries (Figures 13–14 report first/last
+//! decile, quartiles and the median of relative distances).
+
+/// Linear-interpolation quantile (`q` in [0, 1]) of unsorted data.
+pub fn quantile(data: &[f64], q: f64) -> f64 {
+    assert!(!data.is_empty(), "quantile of empty data");
+    let mut v = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile over already-sorted data.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Arithmetic mean.
+pub fn mean(data: &[f64]) -> f64 {
+    data.iter().sum::<f64>() / data.len().max(1) as f64
+}
+
+/// The five-number summary used by the paper's boxplots
+/// (first/last decile, first/last quartile, median) plus the mean.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxplotRow {
+    pub d10: f64,
+    pub q25: f64,
+    pub median: f64,
+    pub q75: f64,
+    pub d90: f64,
+    pub mean: f64,
+}
+
+impl BoxplotRow {
+    pub fn from_data(data: &[f64]) -> BoxplotRow {
+        let mut v = data.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BoxplotRow {
+            d10: quantile_sorted(&v, 0.10),
+            q25: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.50),
+            q75: quantile_sorted(&v, 0.75),
+            d90: quantile_sorted(&v, 0.90),
+            mean: mean(&v),
+        }
+    }
+
+    /// Render as the figure row: `d10 q25 med q75 d90 (mean)`.
+    pub fn render(&self) -> String {
+        format!(
+            "{:8.3} {:8.3} {:8.3} {:8.3} {:8.3}  (mean {:7.3})",
+            self.d10, self.q25, self.median, self.q75, self.d90, self.mean
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_median_of_odd() {
+        assert_eq!(quantile(&[3.0, 1.0, 2.0], 0.5), 2.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        // [1,2,3,4]: median = 2.5
+        assert!((quantile(&[4.0, 1.0, 3.0, 2.0], 0.5) - 2.5).abs() < 1e-12);
+        assert_eq!(quantile(&[4.0, 1.0, 3.0, 2.0], 0.0), 1.0);
+        assert_eq!(quantile(&[4.0, 1.0, 3.0, 2.0], 1.0), 4.0);
+    }
+
+    #[test]
+    fn quantile_single_value() {
+        assert_eq!(quantile(&[7.0], 0.3), 7.0);
+    }
+
+    #[test]
+    fn boxplot_row_ordering() {
+        let data: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        let r = BoxplotRow::from_data(&data);
+        assert!(r.d10 <= r.q25 && r.q25 <= r.median);
+        assert!(r.median <= r.q75 && r.q75 <= r.d90);
+        assert!((r.median - 50.0).abs() < 1e-12);
+        assert!((r.d10 - 10.0).abs() < 1e-12);
+        assert!((r.mean - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_fields() {
+        let r = BoxplotRow::from_data(&[1.0, 2.0, 3.0]);
+        let s = r.render();
+        assert!(s.contains("2.000"));
+        assert!(s.contains("mean"));
+    }
+}

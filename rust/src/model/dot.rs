@@ -1,0 +1,67 @@
+//! Graphviz DOT export for trees and SP graphs (debugging / docs).
+
+use super::{SpGraph, SpNode, TaskTree};
+
+/// Render a [`TaskTree`] as DOT (edges child -> parent, as in the paper).
+pub fn tree_to_dot(tree: &TaskTree) -> String {
+    let mut s = String::from("digraph tree {\n  rankdir=BT;\n");
+    for (i, n) in tree.nodes.iter().enumerate() {
+        s.push_str(&format!("  t{i} [label=\"T{i}\\nL={:.3}\"];\n", n.len));
+        if let Some(p) = n.parent {
+            s.push_str(&format!("  t{i} -> t{p};\n"));
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+/// Render an [`SpGraph`] as DOT (compositions as boxes).
+pub fn sp_to_dot(g: &SpGraph) -> String {
+    let mut s = String::from("digraph sp {\n");
+    for &v in &g.topo_down() {
+        match &g.nodes[v as usize] {
+            SpNode::Leaf { len, task } => {
+                let t = task.map(|t| format!("T{t}")).unwrap_or_else(|| "·".into());
+                s.push_str(&format!("  n{v} [label=\"{t}\\nL={len:.3}\"];\n"));
+            }
+            SpNode::Series(c) => {
+                s.push_str(&format!("  n{v} [shape=box,label=\";\"];\n"));
+                for x in c {
+                    s.push_str(&format!("  n{v} -> n{x};\n"));
+                }
+            }
+            SpNode::Parallel(c) => {
+                s.push_str(&format!("  n{v} [shape=box,label=\"||\"];\n"));
+                for x in c {
+                    s.push_str(&format!("  n{v} -> n{x};\n"));
+                }
+            }
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_dot_mentions_all_nodes() {
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 2.0, 3.0]).unwrap();
+        let dot = tree_to_dot(&t);
+        for i in 0..3 {
+            assert!(dot.contains(&format!("t{i} ")));
+        }
+        assert!(dot.contains("t1 -> t0;"));
+    }
+
+    #[test]
+    fn sp_dot_renders_compositions() {
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 2.0, 3.0]).unwrap();
+        let g = SpGraph::from_tree(&t);
+        let dot = sp_to_dot(&g);
+        assert!(dot.contains("\";\""));
+        assert!(dot.contains("\"||\""));
+    }
+}

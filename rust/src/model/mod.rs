@@ -1,0 +1,17 @@
+//! Task-graph model (paper §4): malleable tasks, in-trees, and
+//! series-parallel graphs.
+//!
+//! Trees come out of sparse symbolic analysis ([`crate::sparse`]) or the
+//! workload generators; the schedulers in [`crate::sched`] consume
+//! either a [`TaskTree`] directly or its pseudo-tree [`SpGraph`]
+//! conversion (paper Figure 7). All traversals are iterative — the
+//! paper's dataset has trees of depth 75 000, far beyond any default
+//! thread stack.
+
+mod sp;
+mod tree;
+
+pub mod dot;
+
+pub use sp::{SpGraph, SpNode, SpNodeId};
+pub use tree::{TaskTree, TreeNode};

@@ -1,0 +1,354 @@
+//! Series-parallel graphs (paper §4) as an arena.
+//!
+//! A tree is turned into a *pseudo-tree* SP graph (paper Figure 7): each
+//! tree node `u` becomes `Series(Parallel(children...), Leaf(u))`. The
+//! `Agreg` transformation of §7 then rewrites this SP structure, which
+//! is why the schedulers operate on [`SpGraph`] rather than only on
+//! trees. Compositions are n-ary (a normalized form of the paper's
+//! binary compositions) so that sibling sets are single `Parallel`
+//! nodes.
+
+use anyhow::{bail, Result};
+
+use super::tree::TaskTree;
+
+/// Index of a node in the [`SpGraph`] arena.
+pub type SpNodeId = u32;
+
+/// SP-graph node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpNode {
+    /// An actual malleable task. `task` tracks the originating tree
+    /// task id when the graph came from a [`TaskTree`].
+    Leaf { len: f64, task: Option<u32> },
+    /// Sequential composition, executed left to right.
+    Series(Vec<SpNodeId>),
+    /// Parallel composition (the branches of paper §4).
+    Parallel(Vec<SpNodeId>),
+}
+
+/// Arena-allocated series-parallel graph.
+#[derive(Debug, Clone)]
+pub struct SpGraph {
+    pub nodes: Vec<SpNode>,
+    pub root: SpNodeId,
+}
+
+impl SpGraph {
+    /// Single-task graph.
+    pub fn leaf(len: f64) -> Self {
+        SpGraph { nodes: vec![SpNode::Leaf { len, task: None }], root: 0 }
+    }
+
+    pub fn push(&mut self, node: SpNode) -> SpNodeId {
+        self.nodes.push(node);
+        (self.nodes.len() - 1) as SpNodeId
+    }
+
+    /// Series composition of two graphs (`G1 ; G2`).
+    pub fn series(g1: SpGraph, g2: SpGraph) -> Self {
+        Self::combine(g1, g2, true)
+    }
+
+    /// Parallel composition of two graphs (`G1 || G2`).
+    pub fn parallel(g1: SpGraph, g2: SpGraph) -> Self {
+        Self::combine(g1, g2, false)
+    }
+
+    fn combine(g1: SpGraph, mut g2: SpGraph, series: bool) -> Self {
+        let mut nodes = g1.nodes;
+        let off = nodes.len() as SpNodeId;
+        for n in &mut g2.nodes {
+            match n {
+                SpNode::Series(c) | SpNode::Parallel(c) => {
+                    for id in c {
+                        *id += off;
+                    }
+                }
+                SpNode::Leaf { .. } => {}
+            }
+        }
+        nodes.extend(g2.nodes);
+        let (r1, r2) = (g1.root, g2.root + off);
+        let root = nodes.len() as SpNodeId;
+        nodes.push(if series {
+            SpNode::Series(vec![r1, r2])
+        } else {
+            SpNode::Parallel(vec![r1, r2])
+        });
+        SpGraph { nodes, root }
+    }
+
+    /// Pseudo-tree conversion of a task tree (paper Figure 7),
+    /// iterative over a postorder.
+    pub fn from_tree(tree: &TaskTree) -> Self {
+        let n = tree.len();
+        // sp node id of each completed tree subtree
+        let mut sub: Vec<SpNodeId> = vec![0; n];
+        let mut g = SpGraph { nodes: Vec::with_capacity(2 * n), root: 0 };
+        for &v in &tree.topo_up() {
+            let node = &tree.nodes[v as usize];
+            let leaf = g.push(SpNode::Leaf { len: node.len, task: Some(v) });
+            let id = if node.children.is_empty() {
+                leaf
+            } else {
+                let kids: Vec<SpNodeId> =
+                    node.children.iter().map(|&c| sub[c as usize]).collect();
+                let par = if kids.len() == 1 {
+                    kids[0]
+                } else {
+                    g.push(SpNode::Parallel(kids))
+                };
+                g.push(SpNode::Series(vec![par, leaf]))
+            };
+            sub[v as usize] = id;
+        }
+        g.root = sub[tree.root as usize];
+        g
+    }
+
+    /// Number of actual tasks (leaves).
+    pub fn num_tasks(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, SpNode::Leaf { .. }))
+            .count()
+    }
+
+    /// Total sequential work of all leaves reachable from the root.
+    pub fn total_work(&self) -> f64 {
+        let mut sum = 0.0;
+        for &v in &self.topo_down() {
+            if let SpNode::Leaf { len, .. } = self.nodes[v as usize] {
+                sum += len;
+            }
+        }
+        sum
+    }
+
+    /// Root-first order over *reachable* nodes (parents before children).
+    pub fn topo_down(&self) -> Vec<SpNodeId> {
+        let mut order = Vec::with_capacity(self.nodes.len());
+        let mut stack = vec![self.root];
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            match &self.nodes[v as usize] {
+                SpNode::Series(c) | SpNode::Parallel(c) => {
+                    stack.extend(c.iter().copied())
+                }
+                SpNode::Leaf { .. } => {}
+            }
+        }
+        order
+    }
+
+    /// Children-first order over reachable nodes.
+    pub fn topo_up(&self) -> Vec<SpNodeId> {
+        let mut order = self.topo_down();
+        order.reverse();
+        order
+    }
+
+    /// Structural sanity: every composition non-empty, every child id in
+    /// range, reachable subgraph is acyclic (guaranteed by arena
+    /// construction but re-checked after rewrites like `Agreg`).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.nodes.len();
+        if self.root as usize >= n {
+            bail!("root out of range");
+        }
+        // acyclicity + range check via DFS with visitation states
+        let mut state = vec![0u8; n]; // 0=unseen 1=open 2=done
+        let mut stack: Vec<(SpNodeId, usize)> = vec![(self.root, 0)];
+        state[self.root as usize] = 1;
+        while let Some(&mut (v, ref mut i)) = stack.last_mut() {
+            let kids: &[SpNodeId] = match &self.nodes[v as usize] {
+                SpNode::Series(c) | SpNode::Parallel(c) => {
+                    if c.is_empty() {
+                        bail!("empty composition at node {v}");
+                    }
+                    c
+                }
+                SpNode::Leaf { len, .. } => {
+                    if !len.is_finite() || *len < 0.0 {
+                        bail!("bad leaf length at node {v}");
+                    }
+                    &[]
+                }
+            };
+            if *i < kids.len() {
+                let c = kids[*i];
+                *i += 1;
+                if c as usize >= n {
+                    bail!("child {c} out of range at node {v}");
+                }
+                match state[c as usize] {
+                    1 => bail!("cycle through node {c}"),
+                    0 => {
+                        state[c as usize] = 1;
+                        stack.push((c, 0));
+                    }
+                    _ => {} // shared subgraphs are not SP; but Agreg never shares
+                }
+            } else {
+                state[v as usize] = 2;
+                stack.pop();
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the arena keeping only reachable nodes and flattening
+    /// nested same-kind compositions / singleton compositions.
+    pub fn normalized(&self) -> SpGraph {
+        let mut out = SpGraph { nodes: Vec::with_capacity(self.nodes.len()), root: 0 };
+        let mut map: Vec<Option<SpNodeId>> = vec![None; self.nodes.len()];
+        for &v in &self.topo_up() {
+            if map[v as usize].is_some() {
+                continue;
+            }
+            let id = match &self.nodes[v as usize] {
+                SpNode::Leaf { len, task } => out.push(SpNode::Leaf { len: *len, task: *task }),
+                SpNode::Series(c) => {
+                    let flat = Self::flatten(&out, c, &map, true);
+                    if flat.len() == 1 {
+                        flat[0]
+                    } else {
+                        out.push(SpNode::Series(flat))
+                    }
+                }
+                SpNode::Parallel(c) => {
+                    let flat = Self::flatten(&out, c, &map, false);
+                    if flat.len() == 1 {
+                        flat[0]
+                    } else {
+                        out.push(SpNode::Parallel(flat))
+                    }
+                }
+            };
+            map[v as usize] = Some(id);
+        }
+        out.root = map[self.root as usize].unwrap();
+        out
+    }
+
+    fn flatten(
+        out: &SpGraph,
+        kids: &[SpNodeId],
+        map: &[Option<SpNodeId>],
+        series: bool,
+    ) -> Vec<SpNodeId> {
+        let mut flat = Vec::with_capacity(kids.len());
+        for &c in kids {
+            let nc = map[c as usize].expect("child mapped before parent");
+            match (&out.nodes[nc as usize], series) {
+                (SpNode::Series(inner), true) => flat.extend(inner.iter().copied()),
+                (SpNode::Parallel(inner), false) => flat.extend(inner.iter().copied()),
+                _ => flat.push(nc),
+            }
+        }
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tree() -> TaskTree {
+        TaskTree::from_parents(&[0, 0, 0, 1, 1], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap()
+    }
+
+    #[test]
+    fn from_tree_preserves_tasks_and_work() {
+        let t = sample_tree();
+        let g = SpGraph::from_tree(&t);
+        g.validate().unwrap();
+        assert_eq!(g.num_tasks(), 5);
+        assert_eq!(g.total_work(), 15.0);
+    }
+
+    #[test]
+    fn from_tree_structure_is_pseudo_tree() {
+        // node 1 (with children 3,4) becomes Series(Parallel(3,4), leaf1)
+        let t = sample_tree();
+        let g = SpGraph::from_tree(&t);
+        let SpNode::Series(root_kids) = &g.nodes[g.root as usize] else {
+            panic!("root should be series");
+        };
+        assert_eq!(root_kids.len(), 2);
+        let SpNode::Parallel(par) = &g.nodes[root_kids[0] as usize] else {
+            panic!("first series element should be the children parallel");
+        };
+        assert_eq!(par.len(), 2);
+    }
+
+    #[test]
+    fn single_child_skips_parallel_wrapper() {
+        // chain 0 <- 1
+        let t = TaskTree::from_parents(&[0, 0], &[1.0, 2.0]).unwrap();
+        let g = SpGraph::from_tree(&t);
+        let SpNode::Series(kids) = &g.nodes[g.root as usize] else {
+            panic!()
+        };
+        assert!(matches!(g.nodes[kids[0] as usize], SpNode::Leaf { .. }));
+    }
+
+    #[test]
+    fn series_parallel_builders() {
+        let g = SpGraph::series(SpGraph::leaf(1.0), SpGraph::leaf(2.0));
+        g.validate().unwrap();
+        assert_eq!(g.total_work(), 3.0);
+        let g = SpGraph::parallel(g, SpGraph::leaf(4.0));
+        g.validate().unwrap();
+        assert_eq!(g.total_work(), 7.0);
+        assert_eq!(g.num_tasks(), 3);
+    }
+
+    #[test]
+    fn normalized_flattens_nested_series() {
+        let g = SpGraph::series(
+            SpGraph::series(SpGraph::leaf(1.0), SpGraph::leaf(2.0)),
+            SpGraph::leaf(3.0),
+        );
+        let n = g.normalized();
+        let SpNode::Series(kids) = &n.nodes[n.root as usize] else {
+            panic!()
+        };
+        assert_eq!(kids.len(), 3);
+        assert_eq!(n.total_work(), 6.0);
+    }
+
+    #[test]
+    fn normalized_drops_unreachable() {
+        let mut g = SpGraph::leaf(1.0);
+        g.push(SpNode::Leaf { len: 99.0, task: None }); // orphan
+        let n = g.normalized();
+        assert_eq!(n.nodes.len(), 1);
+        assert_eq!(n.total_work(), 1.0);
+    }
+
+    #[test]
+    fn validate_rejects_empty_composition() {
+        let g = SpGraph { nodes: vec![SpNode::Parallel(vec![])], root: 0 };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let g = SpGraph { nodes: vec![SpNode::Series(vec![0])], root: 0 };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn deep_tree_no_stack_overflow() {
+        let n = 100_000;
+        let parents: Vec<usize> = (0..n).map(|i: usize| i.saturating_sub(1)).collect();
+        let t = TaskTree::from_parents(&parents, &vec![1.0; n]).unwrap();
+        let g = SpGraph::from_tree(&t);
+        g.validate().unwrap();
+        assert_eq!(g.num_tasks(), n);
+        let norm = g.normalized();
+        assert_eq!(norm.num_tasks(), n);
+    }
+}

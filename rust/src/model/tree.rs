@@ -1,0 +1,259 @@
+//! In-trees of malleable tasks.
+
+use anyhow::{bail, Result};
+
+/// One malleable task in the tree.
+#[derive(Debug, Clone)]
+pub struct TreeNode {
+    /// Sequential processing time `L_i` (flops, seconds at p=1 — any
+    /// consistent unit).
+    pub len: f64,
+    /// Parent task (None for the root). Edges point child -> parent:
+    /// a task can start only when all its children completed.
+    pub parent: Option<u32>,
+    /// Children, filled by [`TaskTree::from_parents`].
+    pub children: Vec<u32>,
+}
+
+/// An in-tree of malleable tasks (paper §4).
+///
+/// Stored as an arena indexed by `u32` task ids; the root is unique.
+#[derive(Debug, Clone)]
+pub struct TaskTree {
+    pub nodes: Vec<TreeNode>,
+    pub root: u32,
+}
+
+impl TaskTree {
+    /// Build from a parent array (`parents[i] == i` marks the root) and
+    /// per-task sequential lengths.
+    pub fn from_parents(parents: &[usize], lens: &[f64]) -> Result<Self> {
+        if parents.len() != lens.len() || parents.is_empty() {
+            bail!("parents/lens size mismatch or empty");
+        }
+        let n = parents.len();
+        let mut nodes: Vec<TreeNode> = lens
+            .iter()
+            .map(|&len| TreeNode { len, parent: None, children: Vec::new() })
+            .collect();
+        let mut root = None;
+        for (i, &p) in parents.iter().enumerate() {
+            if p == i {
+                if root.replace(i as u32).is_some() {
+                    bail!("multiple roots");
+                }
+            } else {
+                if p >= n {
+                    bail!("parent {p} out of range");
+                }
+                nodes[i].parent = Some(p as u32);
+                nodes[p].children.push(i as u32);
+            }
+        }
+        let Some(root) = root else { bail!("no root") };
+        let tree = TaskTree { nodes, root };
+        tree.validate()?;
+        Ok(tree)
+    }
+
+    /// Single task.
+    pub fn singleton(len: f64) -> Self {
+        TaskTree {
+            nodes: vec![TreeNode { len, parent: None, children: Vec::new() }],
+            root: 0,
+        }
+    }
+
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total sequential work `Σ L_i`.
+    pub fn total_work(&self) -> f64 {
+        self.nodes.iter().map(|n| n.len).sum()
+    }
+
+    /// Check connectivity and acyclicity (every node reaches the root).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.len();
+        let mut seen = vec![false; n];
+        let order = self.topo_down();
+        if order.len() != n {
+            bail!("tree is disconnected: reached {} of {n}", order.len());
+        }
+        for &v in &order {
+            if seen[v as usize] {
+                bail!("cycle through node {v}");
+            }
+            seen[v as usize] = true;
+        }
+        Ok(())
+    }
+
+    /// Root-to-leaves order (every node appears after its parent).
+    pub fn topo_down(&self) -> Vec<u32> {
+        let mut order = Vec::with_capacity(self.len());
+        let mut stack = vec![self.root];
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            stack.extend(self.nodes[v as usize].children.iter().copied());
+        }
+        order
+    }
+
+    /// Leaves-to-root (postorder-compatible: children before parents).
+    pub fn topo_up(&self) -> Vec<u32> {
+        let mut order = self.topo_down();
+        order.reverse();
+        order
+    }
+
+    /// Depth of each node (root = 0), iteratively.
+    pub fn depths(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.len()];
+        for &v in &self.topo_down() {
+            if let Some(p) = self.nodes[v as usize].parent {
+                d[v as usize] = d[p as usize] + 1;
+            }
+        }
+        d
+    }
+
+    /// Tree height (max depth).
+    pub fn height(&self) -> u32 {
+        self.depths().into_iter().max().unwrap_or(0)
+    }
+
+    /// Per-node subtree work `W(v) = Σ_{u in subtree(v)} L_u`.
+    pub fn subtree_work(&self) -> Vec<f64> {
+        let mut w: Vec<f64> = self.nodes.iter().map(|n| n.len).collect();
+        for &v in &self.topo_up() {
+            if let Some(p) = self.nodes[v as usize].parent {
+                w[p as usize] += w[v as usize];
+            }
+        }
+        w
+    }
+
+    /// Critical path: max root-to-leaf sum of lengths.
+    pub fn critical_path(&self) -> f64 {
+        let mut cp = vec![0f64; self.len()];
+        let mut best = 0f64;
+        for &v in &self.topo_up() {
+            let node = &self.nodes[v as usize];
+            let child_max = node
+                .children
+                .iter()
+                .map(|&c| cp[c as usize])
+                .fold(0f64, f64::max);
+            cp[v as usize] = node.len + child_max;
+            best = best.max(cp[v as usize]);
+        }
+        best
+    }
+
+    /// Leaf count.
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.children.is_empty()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's running example shape: root with two children, one of
+    /// which has two leaf children.
+    pub fn sample() -> TaskTree {
+        // 0 = root; 1,2 children of 0; 3,4 children of 1
+        TaskTree::from_parents(&[0, 0, 0, 1, 1], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap()
+    }
+
+    #[test]
+    fn from_parents_builds_children() {
+        let t = sample();
+        assert_eq!(t.root, 0);
+        assert_eq!(t.nodes[0].children, vec![1, 2]);
+        assert_eq!(t.nodes[1].children, vec![3, 4]);
+        assert!(t.nodes[3].children.is_empty());
+    }
+
+    #[test]
+    fn rejects_multiple_roots() {
+        assert!(TaskTree::from_parents(&[0, 1], &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        // 1 -> 2 -> 1 cycle, 0 root
+        assert!(TaskTree::from_parents(&[0, 2, 1], &[1.0, 1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_parent() {
+        assert!(TaskTree::from_parents(&[0, 9], &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn topo_orders_respect_edges() {
+        let t = sample();
+        let down = t.topo_down();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; t.len()];
+            for (i, &v) in down.iter().enumerate() {
+                p[v as usize] = i;
+            }
+            p
+        };
+        for (i, n) in t.nodes.iter().enumerate() {
+            if let Some(par) = n.parent {
+                assert!(pos[par as usize] < pos[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn work_and_depth() {
+        let t = sample();
+        assert_eq!(t.total_work(), 15.0);
+        let w = t.subtree_work();
+        assert_eq!(w[0], 15.0);
+        assert_eq!(w[1], 11.0);
+        assert_eq!(w[2], 3.0);
+        let d = t.depths();
+        assert_eq!(d, vec![0, 1, 1, 2, 2]);
+        assert_eq!(t.height(), 2);
+    }
+
+    #[test]
+    fn critical_path_value() {
+        let t = sample();
+        // root(1) + node1(2) + node4(5) = 8
+        assert_eq!(t.critical_path(), 8.0);
+    }
+
+    #[test]
+    fn deep_chain_no_stack_overflow() {
+        // 100k-deep chain — must not recurse.
+        let n = 100_000;
+        let mut parents: Vec<usize> = (0..n).map(|i| if i == 0 { 0 } else { i - 1 }).collect();
+        parents[0] = 0;
+        let lens = vec![1.0; n];
+        let t = TaskTree::from_parents(&parents, &lens).unwrap();
+        assert_eq!(t.height() as usize, n - 1);
+        assert_eq!(t.critical_path(), n as f64);
+    }
+
+    #[test]
+    fn singleton_tree() {
+        let t = TaskTree::singleton(4.0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.total_work(), 4.0);
+        assert_eq!(t.num_leaves(), 1);
+    }
+}

@@ -1,0 +1,198 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` is written by `python/compile/aot.py` in a
+//! dependency-free line format: `name key=value key=value ...`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// What a compiled variant computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Partial factorization: eliminate `k < n` leading columns,
+    /// outputs `(L11, L21, S)`.
+    Partial,
+    /// Full factorization (`k == n`), single output `L`.
+    Full,
+}
+
+/// One AOT-compiled variant of the frontal factorization model.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Variant name, e.g. `partial_n64_k32`.
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Front order (the HLO input is `f32[n, n]`).
+    pub n: usize,
+    /// Eliminated columns (`k == n` for `Full`).
+    pub k: usize,
+    /// Pallas tile edge the kernel was built with.
+    pub tile: usize,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+    /// Path to the `.hlo.txt` file.
+    pub path: PathBuf,
+}
+
+/// Parsed `manifest.txt`: the menu of compiled variants.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact paths are resolved relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let name = it
+                .next()
+                .with_context(|| format!("manifest line {}: empty", lineno + 1))?
+                .to_string();
+            let mut kv = BTreeMap::new();
+            for tok in it {
+                let (key, val) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {lineno}: bad token {tok}"))?;
+                kv.insert(key.to_string(), val.to_string());
+            }
+            let get = |key: &str| -> Result<usize> {
+                kv.get(key)
+                    .with_context(|| format!("manifest {name}: missing {key}"))?
+                    .parse::<usize>()
+                    .with_context(|| format!("manifest {name}: bad {key}"))
+            };
+            let kind = match kv.get("kind").map(|s| s.as_str()) {
+                Some("partial") => ArtifactKind::Partial,
+                Some("full") => ArtifactKind::Full,
+                other => bail!("manifest {name}: bad kind {other:?}"),
+            };
+            let (n, k, tile, outputs) = (get("n")?, get("k")?, get("tile")?, get("outputs")?);
+            specs.push(ArtifactSpec {
+                path: dir.join(format!("{name}.hlo.txt")),
+                name,
+                kind,
+                n,
+                k,
+                tile,
+                outputs,
+            });
+        }
+        if specs.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { specs })
+    }
+
+    /// Smallest `Partial` variant with `n >= front_n` and `k >= front_k`
+    /// (identity padding makes oversizing exact; see DESIGN.md S12).
+    pub fn pick_partial(&self, front_n: usize, front_k: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| {
+                s.kind == ArtifactKind::Partial
+                    && s.k >= front_k
+                    // real trailing part must fit beside the padded pivot
+                    && s.n - s.k >= front_n - front_k
+            })
+            .min_by_key(|s| s.n)
+    }
+
+    /// Smallest `Full` variant with `n >= front_n`.
+    pub fn pick_full(&self, front_n: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::Full && s.n >= front_n)
+            .min_by_key(|s| s.n)
+    }
+
+    /// Largest front order any variant accepts.
+    pub fn max_front(&self) -> usize {
+        self.specs.iter().map(|s| s.n).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+partial_n32_k16 kind=partial n=32 k=16 tile=32 outputs=3
+partial_n64_k32 kind=partial n=64 k=32 tile=32 outputs=3
+full_n32 kind=full n=32 k=32 tile=32 outputs=1
+full_n64 kind=full n=64 k=64 tile=32 outputs=1
+";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_all_lines() {
+        let m = manifest();
+        assert_eq!(m.specs.len(), 4);
+        assert_eq!(m.specs[0].name, "partial_n32_k16");
+        assert_eq!(m.specs[0].kind, ArtifactKind::Partial);
+        assert_eq!(m.specs[0].n, 32);
+        assert_eq!(m.specs[0].k, 16);
+        assert_eq!(m.specs[3].kind, ArtifactKind::Full);
+    }
+
+    #[test]
+    fn paths_resolved_against_dir() {
+        let m = manifest();
+        assert_eq!(
+            m.specs[0].path,
+            Path::new("/tmp/a/partial_n32_k16.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn pick_partial_prefers_smallest_fit() {
+        let m = manifest();
+        assert_eq!(m.pick_partial(20, 10).unwrap().name, "partial_n32_k16");
+        assert_eq!(m.pick_partial(40, 20).unwrap().name, "partial_n64_k32");
+        // k fits in 16 but trailing 30 does not fit in 32-16
+        assert_eq!(m.pick_partial(40, 10).unwrap().name, "partial_n64_k32");
+        assert!(m.pick_partial(200, 10).is_none());
+    }
+
+    #[test]
+    fn pick_full_prefers_smallest_fit() {
+        let m = manifest();
+        assert_eq!(m.pick_full(17).unwrap().name, "full_n32");
+        assert_eq!(m.pick_full(33).unwrap().name, "full_n64");
+        assert!(m.pick_full(65).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        assert!(Manifest::parse("x kind=weird n=1 k=1 tile=1 outputs=1", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Manifest::parse("# nothing\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn max_front() {
+        assert_eq!(manifest().max_front(), 64);
+    }
+}

@@ -1,0 +1,106 @@
+//! PJRT client wrapper and per-variant executable cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactSpec, Manifest};
+
+/// A compiled PJRT executable for one artifact variant.
+pub struct CompiledKernel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledKernel {
+    /// Execute on a single `f32[n, n]` input; returns the flattened
+    /// output tuple as row-major `Vec<f32>` buffers.
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let n = self.spec.n;
+        anyhow::ensure!(
+            input.len() == n * n,
+            "variant {} expects {}x{} input, got {} elements",
+            self.spec.name,
+            n,
+            n,
+            input.len()
+        );
+        let lit = xla::Literal::vec1(input).reshape(&[n as i64, n as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Owns the PJRT client and the executable cache (compile-once per
+/// variant, thread-safe interior mutability so the executor's worker
+/// crew can share one `Runtime`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<CompiledKernel>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn cpu(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Human-readable platform string (for logs / `--version`).
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Get (compiling on first use) the executable for `spec`.
+    pub fn kernel(&self, spec: &ArtifactSpec) -> Result<std::sync::Arc<CompiledKernel>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(k) = cache.get(&spec.name) {
+                return Ok(k.clone());
+            }
+        }
+        // Compile outside the lock: compilation is seconds, execution is
+        // micro/milliseconds; do not serialize unrelated variants.
+        let proto = xla::HloModuleProto::from_text_file(&spec.path).with_context(|| {
+            format!("parsing HLO text {}", spec.path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling variant {}", spec.name))?;
+        let kernel = std::sync::Arc::new(CompiledKernel {
+            spec: spec.clone(),
+            exe,
+        });
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(spec.name.clone()).or_insert(kernel).clone())
+    }
+
+    /// Eagerly compile every variant in the manifest (warm-up).
+    pub fn warm_up(&self) -> Result<usize> {
+        let specs = self.manifest.specs.clone();
+        for spec in &specs {
+            self.kernel(spec)?;
+        }
+        Ok(specs.len())
+    }
+}

@@ -1,0 +1,125 @@
+//! Typed front-factorization entry points over the raw runtime.
+//!
+//! Real fronts have arbitrary `(n, k)`; the artifact menu is fixed. This
+//! module embeds a front into the smallest fitting variant with
+//! *identity padding* — extra rows/columns that carry `1` on the
+//! diagonal and `0` elsewhere. For Cholesky this is exact:
+//! `chol(diag(A, I)) = diag(chol(A), I)` and the Schur complement of a
+//! decoupled identity block is untouched. The padding property is
+//! verified bit-for-bit in `python/tests/test_model.py` and re-checked
+//! here against the pure-Rust fallback in `frontal::dense`.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::client::Runtime;
+
+/// Dense results of a partial factorization of an `n x n` front with
+/// `k` eliminated columns. Row-major buffers.
+#[derive(Debug, Clone)]
+pub struct PartialResult {
+    /// `k x k` lower Cholesky factor of the pivot block.
+    pub l11: Vec<f32>,
+    /// `(n-k) x k` panel factor.
+    pub l21: Vec<f32>,
+    /// `(n-k) x (n-k)` Schur complement.
+    pub schur: Vec<f32>,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// High-level front factorization API used by the multifrontal driver
+/// and the malleable executor.
+pub struct FrontKernels {
+    rt: Arc<Runtime>,
+}
+
+impl FrontKernels {
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        FrontKernels { rt }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Largest front order the artifact menu supports.
+    pub fn max_front(&self) -> usize {
+        self.rt.manifest.max_front()
+    }
+
+    /// Partial factorization (`0 < k < n`) via the padded PJRT kernel.
+    pub fn partial_factor(&self, front: &[f32], n: usize, k: usize) -> Result<PartialResult> {
+        anyhow::ensure!(k > 0 && k < n, "partial_factor needs 0 < k < n, got ({n}, {k})");
+        anyhow::ensure!(front.len() == n * n, "front buffer mismatch");
+        let spec = self
+            .rt
+            .manifest
+            .pick_partial(n, k)
+            .with_context(|| format!("no partial variant fits front (n={n}, k={k})"))?
+            .clone();
+        let (pn, pk) = (spec.n, spec.k);
+        let m = n - k; // real trailing size
+        // Embed: [0,k) real pivot, [k,pk) identity, [pk,pk+m) real trailing,
+        // [pk+m,pn) identity.
+        let mut padded = vec![0f32; pn * pn];
+        for i in 0..pn {
+            padded[i * pn + i] = 1.0;
+        }
+        let map = |i: usize| if i < k { i } else { pk + (i - k) };
+        for i in 0..n {
+            let pi = map(i);
+            for j in 0..n {
+                padded[pi * pn + map(j)] = front[i * n + j];
+            }
+        }
+        let kernel = self.rt.kernel(&spec)?;
+        let out = kernel.run_f32(&padded)?;
+        anyhow::ensure!(out.len() == 3, "partial variant returned {} outputs", out.len());
+        // Extract the real sub-blocks.
+        let (pl11, pl21, ps) = (&out[0], &out[1], &out[2]);
+        let pm = pn - pk;
+        let mut l11 = vec![0f32; k * k];
+        for i in 0..k {
+            l11[i * k..(i + 1) * k].copy_from_slice(&pl11[i * pk..i * pk + k]);
+        }
+        let mut l21 = vec![0f32; m * k];
+        for i in 0..m {
+            l21[i * k..(i + 1) * k].copy_from_slice(&pl21[i * pk..i * pk + k]);
+        }
+        let mut schur = vec![0f32; m * m];
+        for i in 0..m {
+            schur[i * m..(i + 1) * m].copy_from_slice(&ps[i * pm..i * pm + m]);
+        }
+        Ok(PartialResult { l11, l21, schur, n, k })
+    }
+
+    /// Full factorization (`k == n`): returns the `n x n` lower factor.
+    pub fn full_factor(&self, front: &[f32], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(front.len() == n * n, "front buffer mismatch");
+        let spec = self
+            .rt
+            .manifest
+            .pick_full(n)
+            .with_context(|| format!("no full variant fits front (n={n})"))?
+            .clone();
+        let pn = spec.n;
+        let mut padded = vec![0f32; pn * pn];
+        for i in 0..pn {
+            padded[i * pn + i] = 1.0;
+        }
+        for i in 0..n {
+            padded[i * pn..i * pn + n].copy_from_slice(&front[i * n..(i + 1) * n]);
+        }
+        let kernel = self.rt.kernel(&spec)?;
+        let out = kernel.run_f32(&padded)?;
+        anyhow::ensure!(out.len() == 1, "full variant returned {} outputs", out.len());
+        let pl = &out[0];
+        let mut l = vec![0f32; n * n];
+        for i in 0..n {
+            l[i * n..(i + 1) * n].copy_from_slice(&pl[i * pn..i * pn + n]);
+        }
+        Ok(l)
+    }
+}

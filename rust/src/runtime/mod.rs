@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. The build-time
+//! Python layer (`python/compile/aot.py`) lowers the L2 JAX model (which
+//! calls the L1 Pallas kernels) to **HLO text**; here we parse that text
+//! with [`xla::HloModuleProto::from_text_file`], compile one executable
+//! per variant on the PJRT CPU client, and cache it for the lifetime of
+//! the process. Python is never on the request path.
+//!
+//! Interchange is text rather than serialized protos because jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see DESIGN.md §3).
+
+mod artifact;
+mod client;
+mod front_kernels;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, Manifest};
+pub use client::{CompiledKernel, Runtime};
+pub use front_kernels::{FrontKernels, PartialResult};

@@ -1,0 +1,196 @@
+//! The `Agreg` transformation (paper §7, Figure 15).
+//!
+//! The `p^α` model is super-linear for `p < 1`, which is unrealistic.
+//! The paper therefore rewrites each tree so that the PM schedule never
+//! allocates less than one processor: whenever a parallel branch
+//! (subtree of a node `u`) would receive a share `< 1`, the branch is
+//! *moved out* of the parallel composition and executed in series right
+//! before `u`, on `u`'s whole share. The routine is iterated until a
+//! fixpoint (the rewritten branches get bigger shares, which may expose
+//! new violations deeper down). The result is a series-parallel graph
+//! (the input tree's pseudo-tree rewritten), which is why the whole
+//! scheduling stack operates on [`SpGraph`].
+
+use crate::model::{SpGraph, SpNode};
+
+use super::pm::PmSolution;
+
+/// Statistics from an [`agreg`] run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AgregStats {
+    /// Rewriting iterations until fixpoint.
+    pub iterations: usize,
+    /// Parallel branches serialized in total.
+    pub moved: usize,
+    /// Whether a fixpoint was reached within the iteration cap.
+    pub converged: bool,
+}
+
+/// Share threshold: a branch allocated less than this many processors
+/// is serialized. The paper uses exactly one processor.
+const ONE_PROC: f64 = 1.0 - 1e-9;
+
+/// Apply the §7 aggregation to `g` for exponent `alpha` on `p`
+/// processors. Returns the rewritten graph and statistics.
+///
+/// Postcondition (checked by tests): the PM schedule of the result
+/// allocates ≥ 1 processor to every task with positive length, provided
+/// `p >= 1`.
+pub fn agreg(g: &SpGraph, alpha: f64, p: f64) -> (SpGraph, AgregStats) {
+    let mut cur = g.normalized();
+    let mut stats = AgregStats::default();
+    // Each iteration strictly serializes at least one branch, and a
+    // graph with no parallel branches cannot violate; the number of
+    // parallel branches is < #nodes, so #iterations is bounded. The cap
+    // is a belt-and-braces guard.
+    let cap = cur.nodes.len().max(64);
+    for _ in 0..cap {
+        stats.iterations += 1;
+        let sol = PmSolution::solve(&cur, alpha);
+        let mut moved_this_round = 0usize;
+        // §Perf: clone the arena lazily — the common case (last
+        // iteration / well-shaped tree) detects zero violations and
+        // must not pay an O(n) copy.
+        let mut nodes: Option<Vec<SpNode>> = None;
+        for (vi, node) in cur.nodes.iter().enumerate() {
+            let SpNode::Parallel(children) = node else {
+                continue;
+            };
+            let (keep, movev): (Vec<u32>, Vec<u32>) = children
+                .iter()
+                .partition(|&&c| sol.ratio[c as usize] * p >= ONE_PROC);
+            if movev.is_empty() {
+                continue;
+            }
+            moved_this_round += movev.len();
+            let nodes = nodes.get_or_insert_with(|| cur.nodes.clone());
+            // Rewrite: Parallel(keep) followed in series by the moved
+            // branches (each on the full contextual share).
+            let mut seq: Vec<u32> = Vec::with_capacity(1 + movev.len());
+            match keep.len() {
+                0 => {}
+                1 => seq.push(keep[0]),
+                _ => {
+                    nodes.push(SpNode::Parallel(keep));
+                    seq.push((nodes.len() - 1) as u32);
+                }
+            }
+            seq.extend(movev);
+            nodes[vi] = SpNode::Series(seq);
+        }
+        if moved_this_round == 0 {
+            stats.converged = true;
+            break;
+        }
+        stats.moved += moved_this_round;
+        cur = SpGraph { nodes: nodes.unwrap(), root: cur.root }.normalized();
+    }
+    (cur, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TaskTree;
+    use crate::sched::pm::PmSolution;
+    use crate::util::approx_le;
+
+    /// After agreg, every positive-length task gets >= 1 processor.
+    fn assert_min_share(g: &SpGraph, alpha: f64, p: f64) {
+        let sol = PmSolution::solve(g, alpha);
+        let min = sol.min_task_share(g, p);
+        assert!(
+            min >= 1.0 - 1e-6,
+            "task with share {min} survived agreg (alpha={alpha}, p={p})"
+        );
+    }
+
+    #[test]
+    fn no_op_when_everything_fits() {
+        let t = TaskTree::from_parents(&[0, 0, 0], &[4.0, 4.0, 4.0]).unwrap();
+        let g = SpGraph::from_tree(&t);
+        let (out, stats) = agreg(&g, 0.9, 16.0);
+        assert!(stats.converged);
+        assert_eq!(stats.moved, 0);
+        assert_eq!(out.num_tasks(), 3);
+    }
+
+    #[test]
+    fn serializes_tiny_branch() {
+        // p = 2, branches with very unequal lengths: the tiny one gets
+        // a sub-processor share and must be serialized.
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 1e-6, 10.0]).unwrap();
+        let g = SpGraph::from_tree(&t);
+        let alpha = 0.5;
+        let p = 2.0;
+        let before = PmSolution::solve(&g, alpha);
+        assert!(before.min_task_share(&g, p) < 1.0);
+        let (out, stats) = agreg(&g, alpha, p);
+        assert!(stats.converged);
+        assert!(stats.moved >= 1);
+        assert_min_share(&out, alpha, p);
+        // no task lost
+        assert_eq!(out.num_tasks(), 3);
+    }
+
+    #[test]
+    fn fixpoint_on_wide_flat_tree() {
+        // 64 equal leaves on p=4: each would get 1/16 processor; after
+        // aggregation everything must be >= 1.
+        let n = 65;
+        let parents: Vec<usize> = (0..n).map(|i| if i == 0 { 0 } else { 0 }).collect();
+        let t = TaskTree::from_parents(&parents, &vec![1.0; n]).unwrap();
+        let g = SpGraph::from_tree(&t);
+        let (out, stats) = agreg(&g, 0.9, 4.0);
+        assert!(stats.converged);
+        assert_min_share(&out, 0.9, 4.0);
+        assert_eq!(out.num_tasks(), n);
+    }
+
+    #[test]
+    fn preserves_total_work() {
+        let t = TaskTree::from_parents(
+            &[0, 0, 0, 1, 1, 2, 2, 3, 3],
+            &[1.0, 0.2, 3.0, 0.1, 5.0, 0.01, 2.0, 0.5, 0.3],
+        )
+        .unwrap();
+        let g = SpGraph::from_tree(&t);
+        let (out, _) = agreg(&g, 0.7, 3.0);
+        assert!((out.total_work() - g.total_work()).abs() < 1e-9);
+        assert_eq!(out.num_tasks(), 9);
+        out.validate().unwrap();
+    }
+
+    #[test]
+    fn makespan_never_improves() {
+        // Serializing branches cannot beat the unconstrained optimum.
+        let t = TaskTree::from_parents(
+            &[0, 0, 0, 1, 1, 2, 2],
+            &[1.0, 0.3, 2.0, 0.05, 4.0, 0.2, 1.5],
+        )
+        .unwrap();
+        let g = SpGraph::from_tree(&t);
+        let alpha = 0.8;
+        let p = 2.0;
+        let before = PmSolution::solve(&g, alpha).makespan_const(p);
+        let (out, _) = agreg(&g, alpha, p);
+        let after = PmSolution::solve(&out, alpha).makespan_const(p);
+        assert!(approx_le(before, after, 1e-9), "before={before} after={after}");
+    }
+
+    #[test]
+    fn deep_tree_converges() {
+        // 10k-node binaryish tree with log-spread lengths, small p
+        let n = 10_000;
+        let parents: Vec<usize> = (0..n).map(|i| if i == 0 { 0 } else { (i - 1) / 2 }).collect();
+        let lens: Vec<f64> = (0..n)
+            .map(|i| 10f64.powf((i % 5) as f64 - 2.0))
+            .collect();
+        let t = TaskTree::from_parents(&parents, &lens).unwrap();
+        let g = SpGraph::from_tree(&t);
+        let (out, stats) = agreg(&g, 0.9, 8.0);
+        assert!(stats.converged, "iterations={}", stats.iterations);
+        assert_min_share(&out, 0.9, 8.0);
+        assert_eq!(out.num_tasks(), n);
+    }
+}

@@ -1,0 +1,108 @@
+//! "Divisible" baseline (paper §7): assume perfect linear speedup,
+//! which makes any parallelism pointless — process the tasks
+//! sequentially in a topological order, each on the whole platform.
+//!
+//! Under the true `p^α` model this costs `Σ L_i / p^α` on a constant
+//! profile (order-independent), which is what the paper charges it.
+
+use crate::model::{SpGraph, TaskTree};
+
+use super::profile::Profile;
+use super::schedule::{Schedule, TaskSpan};
+
+/// Makespan of the Divisible strategy on a tree under `profile`.
+pub fn divisible_makespan(total_work: f64, alpha: f64, profile: &Profile) -> f64 {
+    profile.theta_inv(alpha, total_work)
+}
+
+/// Divisible makespan for a tree under constant `p`.
+pub fn divisible_makespan_tree(tree: &TaskTree, alpha: f64, p: f64) -> f64 {
+    tree.total_work() / p.powf(alpha)
+}
+
+/// Divisible makespan for an SP graph under constant `p`.
+pub fn divisible_makespan_sp(g: &SpGraph, alpha: f64, p: f64) -> f64 {
+    g.total_work() / p.powf(alpha)
+}
+
+/// Materialized Divisible schedule: tasks one after another in
+/// leaves-to-root order, full platform each.
+pub fn divisible_schedule(tree: &TaskTree, alpha: f64, profile: &Profile) -> Schedule {
+    let mut spans = Vec::with_capacity(tree.len());
+    let mut theta = 0.0;
+    for &v in &tree.topo_up() {
+        let len = tree.nodes[v as usize].len;
+        let t0 = profile.theta_inv(alpha, theta);
+        theta += len;
+        let t1 = profile.theta_inv(alpha, theta);
+        spans.push(TaskSpan { task: v, start: t0, finish: t1, ratio: 1.0 });
+    }
+    Schedule::new(spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::pm::PmSolution;
+    use crate::util::{approx_eq, approx_le};
+
+    fn tree() -> TaskTree {
+        TaskTree::from_parents(&[0, 0, 0, 1, 1], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap()
+    }
+
+    #[test]
+    fn closed_form_constant_profile() {
+        let t = tree();
+        let pr = Profile::constant(4.0);
+        let ms = divisible_makespan(t.total_work(), 0.5, &pr);
+        assert!(approx_eq(ms, 15.0 / 2.0, 1e-12));
+        assert!(approx_eq(ms, divisible_makespan_tree(&t, 0.5, 4.0), 1e-12));
+    }
+
+    #[test]
+    fn schedule_is_valid_and_matches_makespan() {
+        let t = tree();
+        let a = 0.8;
+        let pr = Profile::constant(5.0);
+        let s = divisible_schedule(&t, a, &pr);
+        s.validate(&t, a, &pr, 1e-9).unwrap();
+        assert!(approx_eq(s.makespan, divisible_makespan(t.total_work(), a, &pr), 1e-9));
+    }
+
+    #[test]
+    fn equals_pm_at_alpha_one() {
+        // α = 1: tree parallelism buys nothing over sequential full-p
+        let t = tree();
+        let g = SpGraph::from_tree(&t);
+        let p = 6.0;
+        assert!(approx_eq(
+            divisible_makespan_tree(&t, 1.0, p),
+            PmSolution::solve(&g, 1.0).makespan_const(p),
+            1e-12
+        ));
+    }
+
+    #[test]
+    fn never_beats_pm() {
+        let t = tree();
+        let g = SpGraph::from_tree(&t);
+        for &a in &[0.5, 0.7, 0.9] {
+            let p = 13.0;
+            assert!(approx_le(
+                PmSolution::solve(&g, a).makespan_const(p),
+                divisible_makespan_tree(&t, a, p),
+                1e-9
+            ));
+        }
+    }
+
+    #[test]
+    fn step_profile_integration() {
+        // total work 15, α=1, profile: 2 procs 3s then 6 procs
+        let t = tree();
+        let pr = Profile::steps(&[(3.0, 2.0), (1.0, 6.0)]).unwrap();
+        let ms = divisible_makespan(t.total_work(), 1.0, &pr);
+        // work 6 in first 3s, remaining 9 at rate 6 → 1.5s more
+        assert!(approx_eq(ms, 4.5, 1e-12));
+    }
+}

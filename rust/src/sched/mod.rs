@@ -1,0 +1,79 @@
+//! Schedulers for trees/SP-graphs of malleable `p^α` tasks.
+//!
+//! * [`pm`] — the Prasanna–Musicus optimal schedule (paper §5,
+//!   Theorem 6): equivalent lengths, constant ratios, event-form
+//!   schedule materialization under step processor profiles;
+//! * [`proportional`] — Pothen–Sun proportional mapping (the α-unaware
+//!   baseline of §7);
+//! * [`divisible`] — the perfect-speedup baseline of §7 (sequentialize
+//!   the tree, give every task all processors);
+//! * [`agreg`] — the §7 `Agreg` rewriting that guarantees every task at
+//!   least one processor under PM;
+//! * [`profile`] — step-function processor profiles `p(t)`;
+//! * [`schedule`] — materialized schedules + validity checking (the
+//!   three conditions of §4).
+
+pub mod agreg;
+pub mod divisible;
+pub mod pm;
+pub mod profile;
+pub mod proportional;
+pub mod schedule;
+
+pub use agreg::{agreg, AgregStats};
+pub use divisible::divisible_makespan;
+pub use pm::{PmSchedule, PmSolution};
+pub use profile::Profile;
+pub use proportional::{proportional_makespan, proportional_shares};
+pub use schedule::{Schedule, ScheduleError, TaskSpan};
+
+/// One tree's relative distances (%) of the baselines to PM — the
+/// quantity plotted in Figures 13–14: `(Divisible%, Proportional%)`,
+/// evaluated on the `Agreg`-rewritten graph as §7 prescribes.
+pub fn relative_distances(tree: &crate::model::TaskTree, alpha: f64, p: f64) -> (f64, f64) {
+    relative_distances_graph(&crate::model::SpGraph::from_tree(tree), alpha, p)
+}
+
+/// [`relative_distances`] over a prebuilt pseudo-tree graph — hoist the
+/// tree→SP conversion out of α sweeps (§Perf: ~15% of the Figure-13
+/// sweep was redundant conversions).
+pub fn relative_distances_graph(g: &crate::model::SpGraph, alpha: f64, p: f64) -> (f64, f64) {
+    let (ag, _) = agreg(g, alpha, p);
+    let pm = pm::PmSolution::solve(&ag, alpha).makespan_const(p);
+    let prop = proportional_makespan(&ag, alpha, p);
+    let div = divisible::divisible_makespan_sp(&ag, alpha, p);
+    (100.0 * (div - pm) / pm, 100.0 * (prop - pm) / pm)
+}
+
+/// Realistic speedup used when evaluating α-unaware strategies (§7):
+/// `p^α` for `p >= 1`, linear `p` below one processor (a sub-processor
+/// share cannot be super-linear).
+pub fn realistic_speedup(share: f64, alpha: f64) -> f64 {
+    if share >= 1.0 {
+        share.powf(alpha)
+    } else {
+        share
+    }
+}
+
+/// Pure model speedup `p^α`.
+pub fn model_speedup(share: f64, alpha: f64) -> f64 {
+    share.powf(alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn realistic_speedup_kinks_at_one() {
+        assert_eq!(realistic_speedup(0.5, 0.9), 0.5);
+        assert!((realistic_speedup(4.0, 0.5) - 2.0).abs() < 1e-12);
+        assert_eq!(realistic_speedup(1.0, 0.3), 1.0);
+    }
+
+    #[test]
+    fn model_speedup_is_powf() {
+        assert!((model_speedup(8.0, 1.0 / 3.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,392 @@
+//! The Prasanna–Musicus optimal schedule (paper §5, Theorem 6).
+//!
+//! Any SP graph `G` is equivalent to a single task of length `L_G`
+//! (Definition 1):
+//!
+//! ```text
+//! L_{T_i}     = L_i
+//! L_{G1; G2}  = L_{G1} + L_{G2}
+//! L_{G1||G2}  = (L_{G1}^{1/α} + L_{G2}^{1/α})^α
+//! ```
+//!
+//! and in the (unique) optimal schedule each branch of a parallel
+//! composition receives a **constant ratio** of the processors,
+//! proportional to `L^{1/α}` (Lemma 4). This module computes equivalent
+//! lengths, per-task ratios, completion times and materialized
+//! schedules, all iteratively (trees are up to 10⁶ nodes / 10⁵ deep).
+//!
+//! Everything is expressed in "speedup time" `θ(t) = ∫ p(x)^α dx`
+//! (Lemma 5): a subgraph with ratio `r` and equivalent length `L`
+//! occupies a θ-interval of measure `L / r^α`, regardless of the step
+//! profile. Wall-clock times are recovered through `θ⁻¹`.
+
+use crate::model::{SpGraph, SpNode, TaskTree};
+
+use super::profile::Profile;
+use super::schedule::{Schedule, TaskSpan};
+
+/// Full PM solution over an SP graph.
+#[derive(Debug, Clone)]
+pub struct PmSolution {
+    /// Equivalent length per SP node (paper Definition 1).
+    pub equiv_len: Vec<f64>,
+    /// Constant processor ratio per SP node (root = 1).
+    pub ratio: Vec<f64>,
+    /// θ-interval `[theta_start, theta_end)` per SP node.
+    pub theta_start: Vec<f64>,
+    pub theta_end: Vec<f64>,
+    /// Equivalent length of the whole graph (`L_G`).
+    pub total_len: f64,
+    alpha: f64,
+}
+
+/// A PM schedule materialized against a concrete profile.
+#[derive(Debug, Clone)]
+pub struct PmSchedule {
+    pub solution: PmSolution,
+    pub schedule: Schedule,
+}
+
+impl PmSolution {
+    /// Solve the PM allocation for `g` with exponent `alpha`.
+    ///
+    /// Cost: two linear passes; 2 `powf` per node (see §Perf notes in
+    /// EXPERIMENTS.md for why lengths are carried in both `L` and
+    /// `L^{1/α}` form).
+    pub fn solve(g: &SpGraph, alpha: f64) -> PmSolution {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1]");
+        let n = g.nodes.len();
+        let inv = 1.0 / alpha;
+        let mut equiv_len = vec![0f64; n];
+        // L^{1/α}, cached to avoid re-powf in the ratio pass
+        let mut equiv_pow = vec![0f64; n];
+        let up = g.topo_up();
+        for &v in &up {
+            let vi = v as usize;
+            match &g.nodes[vi] {
+                SpNode::Leaf { len, .. } => {
+                    equiv_len[vi] = *len;
+                    equiv_pow[vi] = len.powf(inv);
+                }
+                SpNode::Series(c) => {
+                    let sum: f64 = c.iter().map(|&x| equiv_len[x as usize]).sum();
+                    equiv_len[vi] = sum;
+                    equiv_pow[vi] = sum.powf(inv);
+                }
+                SpNode::Parallel(c) => {
+                    let sum: f64 = c.iter().map(|&x| equiv_pow[x as usize]).sum();
+                    equiv_pow[vi] = sum;
+                    equiv_len[vi] = sum.powf(alpha);
+                }
+            }
+        }
+        let total_len = equiv_len[g.root as usize];
+
+        // Top-down: ratios and θ-intervals.
+        let mut ratio = vec![0f64; n];
+        let mut theta_start = vec![0f64; n];
+        let mut theta_end = vec![0f64; n];
+        let ri = g.root as usize;
+        ratio[ri] = 1.0;
+        theta_start[ri] = 0.0;
+        theta_end[ri] = total_len; // ratio 1 ⇒ θ-measure = L_G
+        for &v in g.topo_down().iter() {
+            let vi = v as usize;
+            let (r, t0, t1) = (ratio[vi], theta_start[vi], theta_end[vi]);
+            match &g.nodes[vi] {
+                SpNode::Leaf { .. } => {}
+                SpNode::Series(c) => {
+                    // same ratio, consecutive θ-intervals, length-proportional
+                    let mut acc = t0;
+                    let scale = if equiv_len[vi] > 0.0 {
+                        (t1 - t0) / equiv_len[vi]
+                    } else {
+                        0.0
+                    };
+                    for &x in c {
+                        let xi = x as usize;
+                        ratio[xi] = r;
+                        theta_start[xi] = acc;
+                        acc += equiv_len[xi] * scale;
+                        theta_end[xi] = acc;
+                    }
+                    // guard rounding: pin the last child to the parent end
+                    if let Some(&last) = c.last() {
+                        theta_end[last as usize] = t1;
+                    }
+                }
+                SpNode::Parallel(c) => {
+                    // same θ-interval, ratio ∝ L^{1/α} (Lemma 4)
+                    let denom: f64 = c.iter().map(|&x| equiv_pow[x as usize]).sum();
+                    for &x in c {
+                        let xi = x as usize;
+                        ratio[xi] = if denom > 0.0 {
+                            r * equiv_pow[xi] / denom
+                        } else {
+                            r / c.len() as f64
+                        };
+                        theta_start[xi] = t0;
+                        theta_end[xi] = t1;
+                    }
+                }
+            }
+        }
+        PmSolution { equiv_len, ratio, theta_start, theta_end, total_len, alpha }
+    }
+
+    /// Makespan under `profile` (Theorem 6: the graph behaves as one
+    /// task of length `L_G`).
+    pub fn makespan(&self, profile: &Profile) -> f64 {
+        profile.theta_inv(self.alpha, self.total_len)
+    }
+
+    /// Makespan under a constant profile `p`: the closed form `L_G/p^α`.
+    pub fn makespan_const(&self, p: f64) -> f64 {
+        self.total_len / p.powf(self.alpha)
+    }
+
+    /// Per-*task* spans (tree task ids) under `profile`. Spans are in
+    /// wall-clock time; each task keeps its constant ratio.
+    pub fn task_spans(&self, g: &SpGraph, profile: &Profile) -> Vec<TaskSpan> {
+        let mut spans = Vec::with_capacity(g.num_tasks());
+        for &v in &g.topo_down() {
+            let vi = v as usize;
+            if let SpNode::Leaf { task, .. } = g.nodes[vi] {
+                spans.push(TaskSpan {
+                    task: task.unwrap_or(vi as u32),
+                    start: profile.theta_inv(self.alpha, self.theta_start[vi]),
+                    finish: profile.theta_inv(self.alpha, self.theta_end[vi]),
+                    ratio: self.ratio[vi],
+                });
+            }
+        }
+        spans
+    }
+
+    /// Minimum processor share any task receives under a constant
+    /// profile `p` (the quantity `Agreg` pushes above one).
+    pub fn min_task_share(&self, g: &SpGraph, p: f64) -> f64 {
+        let mut min = f64::INFINITY;
+        for &v in &g.topo_down() {
+            let vi = v as usize;
+            if matches!(g.nodes[vi], SpNode::Leaf { len, .. } if len > 0.0) {
+                min = min.min(self.ratio[vi] * p);
+            }
+        }
+        min
+    }
+}
+
+impl PmSchedule {
+    /// Solve and materialize the PM schedule for a task tree.
+    pub fn for_tree(tree: &TaskTree, alpha: f64, profile: &Profile) -> PmSchedule {
+        let g = SpGraph::from_tree(tree);
+        Self::for_graph(&g, alpha, profile)
+    }
+
+    /// Solve and materialize for an arbitrary SP graph.
+    pub fn for_graph(g: &SpGraph, alpha: f64, profile: &Profile) -> PmSchedule {
+        let solution = PmSolution::solve(g, alpha);
+        let spans = solution.task_spans(g, profile);
+        PmSchedule { solution, schedule: Schedule::new(spans) }
+    }
+}
+
+/// Closed-form equivalent length of `n` independent tasks run in
+/// parallel (used by the distributed algorithms of §6):
+/// `(Σ L_i^{1/α})^α`.
+pub fn parallel_equiv_len(lens: &[f64], alpha: f64) -> f64 {
+    let inv = 1.0 / alpha;
+    lens.iter().map(|l| l.powf(inv)).sum::<f64>().powf(alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    const A: f64 = 0.5;
+
+    #[test]
+    fn leaf_equiv_len_is_len() {
+        let g = SpGraph::leaf(5.0);
+        let s = PmSolution::solve(&g, A);
+        assert_eq!(s.total_len, 5.0);
+    }
+
+    #[test]
+    fn series_adds() {
+        let g = SpGraph::series(SpGraph::leaf(2.0), SpGraph::leaf(3.0));
+        let s = PmSolution::solve(&g, A);
+        assert_eq!(s.total_len, 5.0);
+    }
+
+    #[test]
+    fn parallel_combines_with_power_mean() {
+        // α = 0.5: (L1² + L2²)^0.5 ; L1=1, L2=4 → √17
+        let g = SpGraph::parallel(SpGraph::leaf(1.0), SpGraph::leaf(4.0));
+        let s = PmSolution::solve(&g, A);
+        assert!(approx_eq(s.total_len, 17f64.sqrt(), 1e-12));
+    }
+
+    #[test]
+    fn parallel_ratios_follow_lemma4() {
+        // π1 = 1/(1 + (L2/L1)^{1/α}); L1=1, L2=4, α=0.5 → 1/(1+16)
+        let a = 0.5;
+        let g = SpGraph::parallel(SpGraph::leaf(1.0), SpGraph::leaf(4.0));
+        let s = PmSolution::solve(&g, a);
+        // find the two leaves
+        let mut ratios: Vec<(f64, f64)> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                SpNode::Leaf { len, .. } => Some((*len, s.ratio[i])),
+                _ => None,
+            })
+            .collect();
+        ratios.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        assert!(approx_eq(ratios[0].1, 1.0 / 17.0, 1e-12));
+        assert!(approx_eq(ratios[1].1, 16.0 / 17.0, 1e-12));
+    }
+
+    #[test]
+    fn makespan_closed_form_constant_profile() {
+        let g = SpGraph::parallel(SpGraph::leaf(1.0), SpGraph::leaf(4.0));
+        let s = PmSolution::solve(&g, A);
+        let pr = Profile::constant(9.0);
+        let want = 17f64.sqrt() / 3.0; // L_G / p^α
+        assert!(approx_eq(s.makespan(&pr), want, 1e-12));
+        assert!(approx_eq(s.makespan_const(9.0), want, 1e-12));
+    }
+
+    #[test]
+    fn tree_schedule_is_valid_and_siblings_cofinish() {
+        let tree =
+            TaskTree::from_parents(&[0, 0, 0, 1, 1], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let pr = Profile::constant(10.0);
+        let pm = PmSchedule::for_tree(&tree, 0.7, &pr);
+        pm.schedule.validate(&tree, 0.7, &pr, 1e-9).unwrap();
+        // siblings 3 and 4 finish together; siblings 1 and 2 (as
+        // subtrees) finish together = start of root
+        let span = |t: u32| {
+            *pm.schedule
+                .spans
+                .iter()
+                .find(|s| s.task == t)
+                .unwrap()
+        };
+        assert!(approx_eq(span(3).finish, span(4).finish, 1e-9));
+        assert!(approx_eq(span(1).finish, span(2).finish, 1e-9));
+        assert!(approx_eq(span(0).start, span(1).finish, 1e-9));
+        // makespan equals L_G / p^α
+        assert!(approx_eq(
+            pm.schedule.makespan,
+            pm.solution.makespan(&pr),
+            1e-9
+        ));
+        // optimal schedules saturate the platform (Lemma 2)
+        assert!(approx_eq(pm.schedule.peak_utilization(), 1.0, 1e-9));
+    }
+
+    #[test]
+    fn all_leaves_start_at_zero() {
+        // pseudo-tree property: every leaf of the original tree starts at 0
+        let tree =
+            TaskTree::from_parents(&[0, 0, 0, 1, 1, 2], &[1.0; 6]).unwrap();
+        let pr = Profile::constant(4.0);
+        let pm = PmSchedule::for_tree(&tree, 0.9, &pr);
+        for s in &pm.schedule.spans {
+            let is_leaf = tree.nodes[s.task as usize].children.is_empty();
+            if is_leaf {
+                assert!(s.start.abs() < 1e-12, "leaf {} starts at {}", s.task, s.start);
+            }
+        }
+    }
+
+    #[test]
+    fn step_profile_schedule_still_valid() {
+        let tree =
+            TaskTree::from_parents(&[0, 0, 0, 1, 1], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let pr = Profile::steps(&[(0.5, 2.0), (1.0, 6.0), (2.0, 3.0)]).unwrap();
+        let a = 0.8;
+        let pm = PmSchedule::for_tree(&tree, a, &pr);
+        pm.schedule.validate(&tree, a, &pr, 1e-9).unwrap();
+        // Theorem 6: makespan equals completion of the equivalent task
+        assert!(approx_eq(
+            pm.schedule.makespan,
+            pr.completion(a, pm.solution.total_len),
+            1e-9
+        ));
+    }
+
+    #[test]
+    fn alpha_one_reduces_to_proportional_work() {
+        // α = 1: L_{1||2} = L1 + L2 (perfect parallelism)
+        let g = SpGraph::parallel(SpGraph::leaf(2.0), SpGraph::leaf(3.0));
+        let s = PmSolution::solve(&g, 1.0);
+        assert!(approx_eq(s.total_len, 5.0, 1e-12));
+    }
+
+    #[test]
+    fn equiv_length_is_associative_in_parallel() {
+        // ((a || b) || c) == (a || (b || c)) by the power-sum form
+        let abc1 = SpGraph::parallel(
+            SpGraph::parallel(SpGraph::leaf(1.0), SpGraph::leaf(2.0)),
+            SpGraph::leaf(3.0),
+        );
+        let abc2 = SpGraph::parallel(
+            SpGraph::leaf(1.0),
+            SpGraph::parallel(SpGraph::leaf(2.0), SpGraph::leaf(3.0)),
+        );
+        let a = 0.77;
+        assert!(approx_eq(
+            PmSolution::solve(&abc1, a).total_len,
+            PmSolution::solve(&abc2, a).total_len,
+            1e-12
+        ));
+    }
+
+    #[test]
+    fn zero_length_tasks_are_harmless() {
+        // roots of length 0 appear in Lemma 9 normalizations
+        let tree = TaskTree::from_parents(&[0, 0, 0], &[0.0, 2.0, 2.0]).unwrap();
+        let pr = Profile::constant(4.0);
+        let pm = PmSchedule::for_tree(&tree, 0.5, &pr);
+        assert!(pm.solution.total_len > 0.0);
+        assert!(pm.schedule.makespan > 0.0);
+    }
+
+    #[test]
+    fn parallel_equiv_len_matches_graph() {
+        let lens = [1.0, 4.0, 9.0];
+        let a = 0.5;
+        let g = SpGraph::parallel(
+            SpGraph::parallel(SpGraph::leaf(1.0), SpGraph::leaf(4.0)),
+            SpGraph::leaf(9.0),
+        );
+        assert!(approx_eq(
+            parallel_equiv_len(&lens, a),
+            PmSolution::solve(&g, a).total_len,
+            1e-12
+        ));
+        // (1² + 4² + 9²)^0.5 = √98
+        assert!(approx_eq(parallel_equiv_len(&lens, a), 98f64.sqrt(), 1e-12));
+    }
+
+    #[test]
+    fn huge_tree_linear_time_smoke() {
+        // 200k-node random-ish tree solved without recursion/stack issues
+        let n = 200_000usize;
+        let parents: Vec<usize> = (0..n)
+            .map(|i| if i == 0 { 0 } else { (i - 1) / 2 })
+            .collect();
+        let lens: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        let tree = TaskTree::from_parents(&parents, &lens).unwrap();
+        let g = SpGraph::from_tree(&tree);
+        let s = PmSolution::solve(&g, 0.9);
+        assert!(s.total_len.is_finite());
+        assert!(s.total_len >= tree.critical_path());
+        assert!(s.total_len <= tree.total_work() + 1e-6);
+    }
+}

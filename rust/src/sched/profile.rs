@@ -1,0 +1,178 @@
+//! Step-function processor profiles `p(t)` (paper §4).
+//!
+//! The number of available processors may vary over time; the paper
+//! restricts to step functions. The last step extends to infinity so
+//! every workload completes.
+
+use anyhow::{bail, Result};
+
+/// One step: `p` processors for `dur` time units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Step {
+    pub dur: f64,
+    pub p: f64,
+}
+
+/// A step-function processor profile. The final step's processor count
+/// persists forever (`dur` of the last step is a minimum).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    steps: Vec<Step>,
+}
+
+impl Profile {
+    /// Constant profile `p(t) = p`.
+    pub fn constant(p: f64) -> Self {
+        Profile { steps: vec![Step { dur: f64::INFINITY, p }] }
+    }
+
+    /// Build from `(duration, processors)` pairs; the last step is
+    /// extended to infinity.
+    pub fn steps(steps: &[(f64, f64)]) -> Result<Self> {
+        if steps.is_empty() {
+            bail!("profile needs at least one step");
+        }
+        for &(d, p) in steps {
+            if !(d > 0.0) || !(p > 0.0) {
+                bail!("profile steps need positive duration and processors");
+            }
+        }
+        let mut v: Vec<Step> = steps.iter().map(|&(dur, p)| Step { dur, p }).collect();
+        v.last_mut().unwrap().dur = f64::INFINITY;
+        Ok(Profile { steps: v })
+    }
+
+    /// `p(t)`.
+    pub fn at(&self, t: f64) -> f64 {
+        let mut acc = 0.0;
+        for s in &self.steps {
+            acc += s.dur;
+            if t < acc {
+                return s.p;
+            }
+        }
+        self.steps.last().unwrap().p
+    }
+
+    /// Is this a constant profile?
+    pub fn is_constant(&self) -> bool {
+        self.steps.iter().all(|s| s.p == self.steps[0].p)
+    }
+
+    /// Max processors over all steps.
+    pub fn max_p(&self) -> f64 {
+        self.steps.iter().map(|s| s.p).fold(0.0, f64::max)
+    }
+
+    /// Time points where `p(t)` changes, strictly increasing.
+    pub fn breakpoints(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut acc = 0.0;
+        for s in &self.steps[..self.steps.len() - 1] {
+            acc += s.dur;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// θ(t) = ∫₀ᵗ p(x)^α dx — the "speedup time" accumulated by `t`.
+    /// A task running with constant ratio `r` performs work
+    /// `r^α · (θ(t1) − θ(t0))` over `[t0, t1]` (paper §5, Lemma 5).
+    pub fn theta(&self, alpha: f64, t: f64) -> f64 {
+        let mut acc = 0.0; // time consumed
+        let mut th = 0.0;
+        for s in &self.steps {
+            let rate = s.p.powf(alpha);
+            if t <= acc + s.dur {
+                return th + (t - acc) * rate;
+            }
+            th += s.dur * rate;
+            acc += s.dur;
+        }
+        // unreachable: last dur is infinite
+        th
+    }
+
+    /// Inverse of [`Profile::theta`]: the wall-clock time at which the
+    /// accumulated speedup-time reaches `theta`.
+    pub fn theta_inv(&self, alpha: f64, theta: f64) -> f64 {
+        let mut acc = 0.0;
+        let mut th = 0.0;
+        for s in &self.steps {
+            let rate = s.p.powf(alpha);
+            let step_theta = s.dur * rate;
+            if theta <= th + step_theta {
+                return acc + (theta - th) / rate;
+            }
+            th += step_theta;
+            acc += s.dur;
+        }
+        f64::INFINITY
+    }
+
+    /// Makespan of a single equivalent task of length `len` starting at
+    /// `t = 0` and using the full profile (PM Theorem 6 corollary).
+    pub fn completion(&self, alpha: f64, len: f64) -> f64 {
+        self.theta_inv(alpha, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_profile_theta_is_linear() {
+        let pr = Profile::constant(4.0);
+        let a = 0.5;
+        assert!((pr.theta(a, 3.0) - 3.0 * 2.0).abs() < 1e-12);
+        assert!((pr.theta_inv(a, 6.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completion_matches_closed_form() {
+        // L / p^α
+        let pr = Profile::constant(9.0);
+        let a = 0.5;
+        assert!((pr.completion(a, 12.0) - 12.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_profile_integrates_piecewise() {
+        // 2 procs for 1s then 8 procs; α = 1/3 → rates 2^(1/3), 2
+        let pr = Profile::steps(&[(1.0, 2.0), (1.0, 8.0)]).unwrap();
+        let a = 1.0 / 3.0;
+        let r1 = 2f64.powf(a);
+        assert!((pr.theta(a, 1.0) - r1).abs() < 1e-12);
+        assert!((pr.theta(a, 2.0) - (r1 + 2.0)).abs() < 1e-12);
+        // inversion round-trips
+        for &t in &[0.3, 1.0, 1.7, 5.0] {
+            let th = pr.theta(a, t);
+            assert!((pr.theta_inv(a, th) - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn at_returns_step_values() {
+        let pr = Profile::steps(&[(2.0, 3.0), (1.0, 5.0)]).unwrap();
+        assert_eq!(pr.at(0.5), 3.0);
+        assert_eq!(pr.at(1.99), 3.0);
+        assert_eq!(pr.at(2.5), 5.0);
+        assert_eq!(pr.at(100.0), 5.0); // last step persists
+        assert_eq!(pr.max_p(), 5.0);
+        assert_eq!(pr.breakpoints(), vec![2.0]);
+    }
+
+    #[test]
+    fn rejects_bad_steps() {
+        assert!(Profile::steps(&[]).is_err());
+        assert!(Profile::steps(&[(0.0, 2.0)]).is_err());
+        assert!(Profile::steps(&[(1.0, -1.0)]).is_err());
+    }
+
+    #[test]
+    fn constant_detection() {
+        assert!(Profile::constant(4.0).is_constant());
+        assert!(!Profile::steps(&[(1.0, 2.0), (1.0, 3.0)]).unwrap().is_constant());
+    }
+}

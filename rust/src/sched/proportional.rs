@@ -1,0 +1,247 @@
+//! Pothen–Sun "proportional mapping" baseline (paper §7, [11]).
+//!
+//! Processor shares are split among parallel branches proportionally to
+//! the branch's **total work** `Σ L_i` — i.e. the allocation an
+//! α-unaware runtime would pick (it is exactly the PM allocation for
+//! α = 1). Shares are constant per subtree; processors assigned to a
+//! finished branch idle until the whole sibling set completes.
+//!
+//! Following the paper, the evaluation uses the *realistic* speedup:
+//! `p^α` for `p >= 1` and linear `p` below one processor (Proportional
+//! may allocate sub-processor shares; giving it super-linear speedup
+//! there would be unfair in the other direction).
+
+use crate::model::{SpGraph, SpNode};
+#[cfg(test)]
+use crate::model::TaskTree;
+
+use super::realistic_speedup;
+use super::schedule::{Schedule, TaskSpan};
+
+/// Per-SP-node constant shares under proportional mapping with `p`
+/// processors.
+pub fn proportional_shares(g: &SpGraph, p: f64) -> Vec<f64> {
+    let n = g.nodes.len();
+    // bottom-up total work
+    let mut work = vec![0f64; n];
+    for &v in &g.topo_up() {
+        let vi = v as usize;
+        work[vi] = match &g.nodes[vi] {
+            SpNode::Leaf { len, .. } => *len,
+            SpNode::Series(c) | SpNode::Parallel(c) => {
+                c.iter().map(|&x| work[x as usize]).sum()
+            }
+        };
+    }
+    // top-down shares
+    let mut share = vec![0f64; n];
+    share[g.root as usize] = p;
+    for &v in &g.topo_down() {
+        let vi = v as usize;
+        match &g.nodes[vi] {
+            SpNode::Leaf { .. } => {}
+            SpNode::Series(c) => {
+                for &x in c {
+                    share[x as usize] = share[vi];
+                }
+            }
+            SpNode::Parallel(c) => {
+                let total: f64 = c.iter().map(|&x| work[x as usize]).sum();
+                for &x in c {
+                    let xi = x as usize;
+                    share[xi] = if total > 0.0 {
+                        share[vi] * work[xi] / total
+                    } else {
+                        share[vi] / c.len() as f64
+                    };
+                }
+            }
+        }
+    }
+    share
+}
+
+/// Makespan of proportional mapping on `g` with constant `p` processors
+/// and exponent `alpha`, under the realistic speedup.
+pub fn proportional_makespan(g: &SpGraph, alpha: f64, p: f64) -> f64 {
+    let share = proportional_shares(g, p);
+    let n = g.nodes.len();
+    let mut dur = vec![0f64; n];
+    for &v in &g.topo_up() {
+        let vi = v as usize;
+        dur[vi] = match &g.nodes[vi] {
+            SpNode::Leaf { len, .. } => {
+                if *len == 0.0 {
+                    0.0
+                } else {
+                    len / realistic_speedup(share[vi], alpha)
+                }
+            }
+            SpNode::Series(c) => c.iter().map(|&x| dur[x as usize]).sum(),
+            SpNode::Parallel(c) => c
+                .iter()
+                .map(|&x| dur[x as usize])
+                .fold(0.0, f64::max),
+        };
+    }
+    dur[g.root as usize]
+}
+
+/// Materialized proportional schedule (for the executor / inspection).
+/// Spans carry `ratio = share / p`.
+pub fn proportional_schedule(g: &SpGraph, alpha: f64, p: f64) -> Schedule {
+    let share = proportional_shares(g, p);
+    let n = g.nodes.len();
+    let mut dur = vec![0f64; n];
+    for &v in &g.topo_up() {
+        let vi = v as usize;
+        dur[vi] = match &g.nodes[vi] {
+            SpNode::Leaf { len, .. } => {
+                if *len == 0.0 {
+                    0.0
+                } else {
+                    len / realistic_speedup(share[vi], alpha)
+                }
+            }
+            SpNode::Series(c) => c.iter().map(|&x| dur[x as usize]).sum(),
+            SpNode::Parallel(c) => c
+                .iter()
+                .map(|&x| dur[x as usize])
+                .fold(0.0, f64::max),
+        };
+    }
+    let mut start = vec![0f64; n];
+    for &v in &g.topo_down() {
+        let vi = v as usize;
+        match &g.nodes[vi] {
+            SpNode::Leaf { .. } => {}
+            SpNode::Series(c) => {
+                let mut acc = start[vi];
+                for &x in c {
+                    start[x as usize] = acc;
+                    acc += dur[x as usize];
+                }
+            }
+            SpNode::Parallel(c) => {
+                for &x in c {
+                    start[x as usize] = start[vi];
+                }
+            }
+        }
+    }
+    let mut spans = Vec::with_capacity(g.num_tasks());
+    for &v in &g.topo_down() {
+        let vi = v as usize;
+        if let SpNode::Leaf { task, .. } = g.nodes[vi] {
+            spans.push(TaskSpan {
+                task: task.unwrap_or(v),
+                start: start[vi],
+                finish: start[vi] + dur[vi],
+                ratio: share[vi] / p,
+            });
+        }
+    }
+    Schedule::new(spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::pm::PmSolution;
+    use crate::util::{approx_eq, approx_le};
+
+    fn tree() -> TaskTree {
+        TaskTree::from_parents(&[0, 0, 0, 1, 1], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap()
+    }
+
+    #[test]
+    fn shares_split_by_work() {
+        let g = SpGraph::parallel(SpGraph::leaf(1.0), SpGraph::leaf(3.0));
+        let s = proportional_shares(&g, 8.0);
+        let mut leaf_shares: Vec<(f64, f64)> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                SpNode::Leaf { len, .. } => Some((*len, s[i])),
+                _ => None,
+            })
+            .collect();
+        leaf_shares.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert!(approx_eq(leaf_shares[0].1, 2.0, 1e-12));
+        assert!(approx_eq(leaf_shares[1].1, 6.0, 1e-12));
+    }
+
+    #[test]
+    fn matches_pm_at_alpha_one() {
+        let g = SpGraph::from_tree(&tree());
+        let p = 7.0;
+        let ms_prop = proportional_makespan(&g, 1.0, p);
+        let ms_pm = PmSolution::solve(&g, 1.0).makespan_const(p);
+        assert!(approx_eq(ms_prop, ms_pm, 1e-9));
+    }
+
+    #[test]
+    fn never_beats_pm_for_alpha_below_one() {
+        let g = SpGraph::from_tree(&tree());
+        for &a in &[0.5, 0.7, 0.9, 0.99] {
+            // use p large enough that all shares stay >= 1 so the
+            // realistic evaluation does not penalize Proportional
+            let p = 40.0;
+            let ms_prop = proportional_makespan(&g, a, p);
+            let ms_pm = PmSolution::solve(&g, a).makespan_const(p);
+            assert!(
+                approx_le(ms_pm, ms_prop, 1e-9),
+                "alpha={a}: pm={ms_pm} prop={ms_prop}"
+            );
+        }
+    }
+
+    #[test]
+    fn sequential_chain_is_alpha_independent_of_mapping() {
+        // chain: both strategies give everything the full p
+        let t = TaskTree::from_parents(&[0, 0], &[2.0, 3.0]).unwrap();
+        let g = SpGraph::from_tree(&t);
+        let a = 0.8;
+        let p = 4.0;
+        let ms = proportional_makespan(&g, a, p);
+        assert!(approx_eq(ms, 5.0 / p.powf(a), 1e-12));
+    }
+
+    #[test]
+    fn schedule_spans_respect_structure() {
+        let t = tree();
+        let g = SpGraph::from_tree(&t);
+        let s = proportional_schedule(&g, 0.9, 10.0);
+        let span = |id: u32| *s.spans.iter().find(|x| x.task == id).unwrap();
+        // leaves 3,4 start at 0; root starts after everything
+        assert_eq!(span(3).start, 0.0);
+        assert_eq!(span(4).start, 0.0);
+        assert!(span(0).start >= span(1).finish - 1e-12);
+        assert!(span(0).start >= span(2).finish - 1e-12);
+        assert!(approx_eq(s.makespan, proportional_makespan(&g, 0.9, 10.0), 1e-12));
+    }
+
+    #[test]
+    fn sub_processor_share_is_linear_penalized() {
+        // two very unequal branches on p=2: small branch gets < 1 proc
+        let g = SpGraph::parallel(SpGraph::leaf(0.1), SpGraph::leaf(10.0));
+        let p = 2.0;
+        let a = 0.5;
+        let shares = proportional_shares(&g, p);
+        let small_share = shares
+            .iter()
+            .zip(&g.nodes)
+            .filter_map(|(s, n)| match n {
+                SpNode::Leaf { len, .. } if *len < 1.0 => Some(*s),
+                _ => None,
+            })
+            .next()
+            .unwrap();
+        assert!(small_share < 1.0);
+        // duration of the small task uses linear speedup
+        let ms = proportional_makespan(&g, a, p);
+        let big_dur = 10.0 / (p * 10.0 / 10.1).powf(a);
+        assert!(ms >= big_dur - 1e-12);
+    }
+}

@@ -1,0 +1,314 @@
+//! Materialized schedules and validity checking (paper §4).
+//!
+//! A schedule is a set of piecewise-constant share functions
+//! `p_i(t)`, stored as a sorted list of events and, per interval, the
+//! allocation `(task, share)` of every running task. Validity is the
+//! paper's three conditions: resource constraint, completion of all
+//! tasks, and precedence.
+
+use anyhow::Result;
+use thiserror::Error;
+
+use crate::model::TaskTree;
+
+use super::profile::Profile;
+
+/// Execution span of one task under a schedule with *constant ratio*
+/// semantics (the PM schedule form): the task runs on `share(t) =
+/// ratio * p(t)` between `start` and `finish`.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskSpan {
+    pub task: u32,
+    pub start: f64,
+    pub finish: f64,
+    /// Constant fraction of the whole platform (`0 < ratio <= 1`).
+    pub ratio: f64,
+}
+
+/// A materialized schedule: interval events plus per-interval
+/// allocations, produced from [`TaskSpan`]s.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Per-task spans, sorted by start time.
+    pub spans: Vec<TaskSpan>,
+    /// Total makespan.
+    pub makespan: f64,
+}
+
+/// Violations detected by [`Schedule::validate`].
+#[derive(Debug, Error)]
+pub enum ScheduleError {
+    #[error("task {task}: resource constraint violated at t={t}: total ratio {total}")]
+    Resource { task: u32, t: f64, total: f64 },
+    #[error("task {task}: work {done} != length {len}")]
+    Work { task: u32, done: f64, len: f64 },
+    #[error("task {task} starts at {start} before child {child} finishes at {finish}")]
+    Precedence { task: u32, start: f64, child: u32, finish: f64 },
+    #[error("task {task} missing from schedule")]
+    Missing { task: u32 },
+}
+
+impl Schedule {
+    pub fn new(mut spans: Vec<TaskSpan>) -> Self {
+        spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        let makespan = spans.iter().map(|s| s.finish).fold(0.0, f64::max);
+        Schedule { spans, makespan }
+    }
+
+    /// Work performed by a span under `profile`:
+    /// `ratio^α (θ(finish) − θ(start))`.
+    pub fn span_work(span: &TaskSpan, alpha: f64, profile: &Profile) -> f64 {
+        span.ratio.powf(alpha)
+            * (profile.theta(alpha, span.finish) - profile.theta(alpha, span.start))
+    }
+
+    /// Validate the paper's three conditions against `tree` under
+    /// `profile` with relative tolerance `tol`.
+    pub fn validate(
+        &self,
+        tree: &TaskTree,
+        alpha: f64,
+        profile: &Profile,
+        tol: f64,
+    ) -> Result<(), ScheduleError> {
+        let n = tree.len();
+        let mut by_task: Vec<Option<&TaskSpan>> = vec![None; n];
+        for s in &self.spans {
+            by_task[s.task as usize] = Some(s);
+        }
+        for t in 0..n {
+            if by_task[t].is_none() {
+                return Err(ScheduleError::Missing { task: t as u32 });
+            }
+        }
+
+        // 1. Resource constraint: at every span boundary, the sum of
+        // ratios of active spans must be <= 1 (+tol). Checking at
+        // boundaries suffices for piecewise-constant allocations.
+        let mut events: Vec<f64> = self
+            .spans
+            .iter()
+            .flat_map(|s| [s.start, s.finish])
+            .collect();
+        events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        events.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        for w in events.windows(2) {
+            let mid = 0.5 * (w[0] + w[1]);
+            let total: f64 = self
+                .spans
+                .iter()
+                .filter(|s| s.start <= mid && mid < s.finish)
+                .map(|s| s.ratio)
+                .sum();
+            if total > 1.0 + tol {
+                let offender = self
+                    .spans
+                    .iter()
+                    .find(|s| s.start <= mid && mid < s.finish)
+                    .map(|s| s.task)
+                    .unwrap_or(0);
+                return Err(ScheduleError::Resource { task: offender, t: mid, total });
+            }
+        }
+
+        // 2. Completion: each task's work equals its length.
+        for (t, node) in tree.nodes.iter().enumerate() {
+            let span = by_task[t].unwrap();
+            let done = Self::span_work(span, alpha, profile);
+            let scale = node.len.abs().max(1e-12);
+            if (done - node.len).abs() > tol * scale {
+                return Err(ScheduleError::Work { task: t as u32, done, len: node.len });
+            }
+        }
+
+        // 3. Precedence: parents start no earlier than children finish.
+        for (t, node) in tree.nodes.iter().enumerate() {
+            let span = by_task[t].unwrap();
+            for &c in &node.children {
+                let cs = by_task[c as usize].unwrap();
+                if span.start < cs.finish - tol * cs.finish.abs().max(1e-12) {
+                    return Err(ScheduleError::Precedence {
+                        task: t as u32,
+                        start: span.start,
+                        child: c,
+                        finish: cs.finish,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Peak total ratio across the schedule (diagnostics; 1.0 means the
+    /// platform is saturated, as Lemma 2 requires for optimality).
+    pub fn peak_utilization(&self) -> f64 {
+        let mut events: Vec<f64> = self
+            .spans
+            .iter()
+            .flat_map(|s| [s.start, s.finish])
+            .collect();
+        events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        events.dedup();
+        let mut peak = 0.0f64;
+        for w in events.windows(2) {
+            let mid = 0.5 * (w[0] + w[1]);
+            let total: f64 = self
+                .spans
+                .iter()
+                .filter(|s| s.start <= mid && mid < s.finish)
+                .map(|s| s.ratio)
+                .sum();
+            peak = peak.max(total);
+        }
+        peak
+    }
+
+    /// Minimum share (ratio × p) ever allocated to a task, under a
+    /// constant profile — what `Agreg` must push above 1.
+    pub fn min_share(&self, p: f64) -> f64 {
+        self.spans
+            .iter()
+            .map(|s| s.ratio * p)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Peak of `Σ weight(task)` over concurrently *active* tasks —
+    /// with `weight = front_order²` this is the peak dense working set
+    /// of a multifrontal run under this schedule (the memory axis the
+    /// paper's companion report [23] studies; scheduling for time and
+    /// for memory pull in opposite directions, which the ablation
+    /// benches quantify).
+    pub fn peak_weighted_active(&self, weight: impl Fn(u32) -> f64) -> f64 {
+        // sweep events: +w at start, -w at finish
+        let mut events: Vec<(f64, f64)> = Vec::with_capacity(2 * self.spans.len());
+        for s in &self.spans {
+            let w = weight(s.task);
+            events.push((s.start, w));
+            events.push((s.finish, -w));
+        }
+        events.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                // process releases before acquisitions at equal times
+                .then(a.1.partial_cmp(&b.1).unwrap())
+        });
+        let mut cur = 0.0f64;
+        let mut peak = 0.0f64;
+        for (_, dw) in events {
+            cur += dw;
+            peak = peak.max(cur);
+        }
+        peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain2() -> TaskTree {
+        // 1 -> 0 (leaf 1, then root 0)
+        TaskTree::from_parents(&[0, 0], &[2.0, 3.0]).unwrap()
+    }
+
+    #[test]
+    fn valid_sequential_schedule_passes() {
+        let t = chain2();
+        let alpha = 0.5;
+        let p = 4.0;
+        let pr = Profile::constant(p);
+        // leaf (task 1, len 3) runs [0, 1.5), root [1.5, 2.5) at ratio 1
+        let s = Schedule::new(vec![
+            TaskSpan { task: 1, start: 0.0, finish: 3.0 / 2.0, ratio: 1.0 },
+            TaskSpan { task: 0, start: 1.5, finish: 2.5, ratio: 1.0 },
+        ]);
+        s.validate(&t, alpha, &pr, 1e-9).unwrap();
+        assert!((s.makespan - 2.5).abs() < 1e-12);
+        assert!((s.peak_utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detects_resource_violation() {
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 1.0, 1.0]).unwrap();
+        let pr = Profile::constant(1.0);
+        let s = Schedule::new(vec![
+            TaskSpan { task: 1, start: 0.0, finish: 1.0, ratio: 0.8 },
+            TaskSpan { task: 2, start: 0.0, finish: 1.0, ratio: 0.8 },
+            TaskSpan { task: 0, start: 1.0, finish: 2.0, ratio: 1.0 },
+        ]);
+        assert!(matches!(
+            s.validate(&t, 1.0, &pr, 1e-9),
+            Err(ScheduleError::Resource { .. })
+        ));
+    }
+
+    #[test]
+    fn detects_wrong_work() {
+        let t = chain2();
+        let pr = Profile::constant(4.0);
+        let s = Schedule::new(vec![
+            TaskSpan { task: 1, start: 0.0, finish: 1.0, ratio: 1.0 }, // too short
+            TaskSpan { task: 0, start: 1.5, finish: 2.5, ratio: 1.0 },
+        ]);
+        assert!(matches!(
+            s.validate(&t, 0.5, &pr, 1e-9),
+            Err(ScheduleError::Work { task: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn detects_precedence_violation() {
+        // Construct spans that satisfy the resource and work conditions
+        // (both at ratio 0.5, α = 0.5, p = 4 ⇒ speedup √2) but start the
+        // parent before the child finishes.
+        let t = chain2();
+        let pr = Profile::constant(4.0);
+        let r2 = 2f64.sqrt();
+        let s = Schedule::new(vec![
+            TaskSpan { task: 1, start: 0.0, finish: 3.0 / r2, ratio: 0.5 },
+            TaskSpan { task: 0, start: 1.0, finish: 1.0 + 2.0 / r2, ratio: 0.5 },
+        ]);
+        assert!(matches!(
+            s.validate(&t, 0.5, &pr, 1e-9),
+            Err(ScheduleError::Precedence { .. })
+        ));
+    }
+
+    #[test]
+    fn detects_missing_task() {
+        let t = chain2();
+        let pr = Profile::constant(4.0);
+        let s = Schedule::new(vec![TaskSpan { task: 0, start: 0.0, finish: 1.5, ratio: 1.0 }]);
+        assert!(matches!(
+            s.validate(&t, 0.5, &pr, 1e-9),
+            Err(ScheduleError::Missing { task: 1 })
+        ));
+    }
+
+    #[test]
+    fn peak_weighted_active_tracks_concurrency() {
+        // tasks 1,2 run concurrently [0,1); task 0 alone [1,2)
+        let s = Schedule::new(vec![
+            TaskSpan { task: 1, start: 0.0, finish: 1.0, ratio: 0.5 },
+            TaskSpan { task: 2, start: 0.0, finish: 1.0, ratio: 0.5 },
+            TaskSpan { task: 0, start: 1.0, finish: 2.0, ratio: 1.0 },
+        ]);
+        // unit weights: peak concurrency = 2
+        assert_eq!(s.peak_weighted_active(|_| 1.0), 2.0);
+        // weighted: task 0 heavy but alone
+        let w = |t: u32| if t == 0 { 3.0 } else { 1.0 };
+        assert_eq!(s.peak_weighted_active(w), 3.0);
+        // back-to-back spans at t=1 do not double-count
+        let w0 = |t: u32| if t == 0 { 1.5 } else { 1.0 };
+        assert_eq!(s.peak_weighted_active(w0), 2.0);
+    }
+
+    #[test]
+    fn span_work_under_step_profile() {
+        // ratio 0.5, α=1: work = 0.5 * ∫p over the span
+        let pr = Profile::steps(&[(1.0, 2.0), (1.0, 4.0)]).unwrap();
+        let span = TaskSpan { task: 0, start: 0.5, finish: 1.5, ratio: 0.5 };
+        let w = Schedule::span_work(&span, 1.0, &pr);
+        assert!((w - 0.5 * (0.5 * 2.0 + 0.5 * 4.0)).abs() < 1e-12);
+    }
+}

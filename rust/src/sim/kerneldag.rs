@@ -1,0 +1,457 @@
+//! Tiled kernel-DAG simulator — the §3 reproduction substrate.
+//!
+//! The paper measured dense Cholesky / QR / frontal kernels on a
+//! 40-core machine under StarPU and showed `T(p) ≈ L / p^α` with
+//! α ≈ 0.85–1.0 (Figures 2–6, Tables 1–2). We do not have that
+//! machine; what *produces* the `p^α` law is structural — a tiled
+//! kernel DAG list-scheduled on `p` cores, slowed by (i) the DAG's
+//! critical path when `p` is large relative to the tile count and
+//! (ii) contention on shared memory bandwidth. This module simulates
+//! exactly that:
+//!
+//! * DAG builders for right-looking tiled Cholesky, tiled QR
+//!   (2D, TS-kernel style) and the qr_mumps-like frontal
+//!   factorization with 1D block-column or 2D tile partitioning;
+//! * a machine model: `p` cores of unit flop rate + one shared
+//!   bandwidth channel with processor-sharing arbitration;
+//! * a critical-path-priority list scheduler producing `T(p)`;
+//! * [`timing_curve`] sweeping `p` to feed the α regression
+//!   ([`crate::metrics::fit_alpha`]).
+
+/// One kernel instance (node of the DAG).
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    /// Compute cost (flops; normalized units).
+    pub flops: f64,
+    /// Bytes moved to/from shared memory (drives the roofline).
+    pub bytes: f64,
+    /// Indices of kernels this one depends on.
+    pub deps: Vec<u32>,
+}
+
+/// A kernel DAG plus bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct KernelDag {
+    pub kernels: Vec<Kernel>,
+}
+
+/// Machine model for the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct MachineModel {
+    /// Flops per second per core (normalization: 1.0).
+    pub core_rate: f64,
+    /// Aggregate shared-memory bandwidth (bytes/s). When the running
+    /// set demands more, everyone slows proportionally — this is what
+    /// bends the speedup below linear (α < 1) and makes small /
+    /// 1D-partitioned matrices worse, as the paper observes.
+    pub bandwidth: f64,
+}
+
+impl Default for MachineModel {
+    fn default() -> Self {
+        // Calibrated to the paper's Intel E7-4870 class: ~20 Gflop/s
+        // per core (AVX, DGEMM-like kernels) against ~50 GB/s of
+        // aggregate socket bandwidth. The ratio is what matters: a
+        // b=256 GEMM tile (intensity b/16 = 16 flops/byte) demands
+        // 1.25 GB/s per busy core — contention only at high core
+        // counts; a b=32 1D panel update (intensity ~5 flops/byte)
+        // demands 3.75 GB/s — saturating around 6 cores, which is what
+        // drags the paper's 1D α down to 0.78–0.89 (Table 2).
+        MachineModel { core_rate: 20.0e9, bandwidth: 24.0e9 }
+    }
+}
+
+impl KernelDag {
+    pub fn push(&mut self, flops: f64, bytes: f64, deps: &[u32]) -> u32 {
+        let id = self.kernels.len() as u32;
+        self.kernels.push(Kernel { flops, bytes, deps: deps.to_vec() });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum()
+    }
+
+    /// Critical path length in flops (lower bound on any `T(p)`).
+    pub fn critical_path(&self) -> f64 {
+        let mut cp = vec![0f64; self.len()];
+        let mut best: f64 = 0.0;
+        for (i, k) in self.kernels.iter().enumerate() {
+            let dep_max = k.deps.iter().map(|&d| cp[d as usize]).fold(0.0, f64::max);
+            cp[i] = dep_max + k.flops;
+            best = best.max(cp[i]);
+        }
+        best
+    }
+
+    /// Right-looking tiled Cholesky of a `t x t` tile matrix with tile
+    /// edge `b` (paper Figure 1): POTRF(k); TRSM(i,k) i>k;
+    /// SYRK/GEMM(i,j,k) i>=j>k.
+    pub fn cholesky(t: usize, b: usize) -> KernelDag {
+        let bf = b as f64;
+        let tile_bytes = 8.0 * bf * bf;
+        let mut dag = KernelDag::default();
+        // owner[i][j] = last kernel writing tile (i, j)
+        let mut owner: Vec<Vec<Option<u32>>> = vec![vec![None; t]; t];
+        for k in 0..t {
+            let potrf = {
+                let deps: Vec<u32> = owner[k][k].into_iter().collect();
+                dag.push(bf * bf * bf / 3.0, 2.0 * tile_bytes, &deps)
+            };
+            owner[k][k] = Some(potrf);
+            for i in k + 1..t {
+                let mut deps = vec![potrf];
+                deps.extend(owner[i][k]);
+                let trsm = dag.push(bf * bf * bf, 3.0 * tile_bytes, &deps);
+                owner[i][k] = Some(trsm);
+            }
+            for i in k + 1..t {
+                for j in k + 1..=i {
+                    let mut deps = vec![owner[i][k].unwrap(), owner[j][k].unwrap()];
+                    deps.extend(owner[i][j]);
+                    let flops = if i == j { bf * bf * bf } else { 2.0 * bf * bf * bf };
+                    let upd = dag.push(flops, 4.0 * tile_bytes, &deps);
+                    owner[i][j] = Some(upd);
+                }
+            }
+        }
+        dag
+    }
+
+    /// Tiled QR of an `r x c` tile matrix, communication-avoiding
+    /// flavor: GEQRT(k,k); ORMQR(k,j) j>k; then the panel below the
+    /// diagonal is eliminated by a **binary reduction tree** of
+    /// TSQRT merges (log₂ depth — what PLASMA/qr_mumps' tree kernels
+    /// do), each merge applying its SSMQR updates to the trailing
+    /// tiles of both merged rows.
+    pub fn qr(r: usize, c: usize, b: usize) -> KernelDag {
+        let bf = b as f64;
+        let tile_bytes = 8.0 * bf * bf;
+        let steps = r.min(c);
+        let mut dag = KernelDag::default();
+        let mut owner: Vec<Vec<Option<u32>>> = vec![vec![None; c]; r];
+        for k in 0..steps {
+            let geqrt = {
+                let deps: Vec<u32> = owner[k][k].into_iter().collect();
+                dag.push(4.0 / 3.0 * bf * bf * bf, 2.0 * tile_bytes, &deps)
+            };
+            owner[k][k] = Some(geqrt);
+            for j in k + 1..c {
+                let mut deps = vec![geqrt];
+                deps.extend(owner[k][j]);
+                let orm = dag.push(2.0 * bf * bf * bf, 3.0 * tile_bytes, &deps);
+                owner[k][j] = Some(orm);
+            }
+            // binary-tree panel elimination: rows k..r pair up per level
+            let mut live: Vec<usize> = (k..r).collect();
+            while live.len() > 1 {
+                let mut next = Vec::with_capacity(live.len().div_ceil(2));
+                for pair in live.chunks(2) {
+                    if pair.len() == 1 {
+                        next.push(pair[0]);
+                        continue;
+                    }
+                    let (a, bb) = (pair[0], pair[1]);
+                    let mut deps: Vec<u32> = Vec::with_capacity(2);
+                    deps.extend(owner[a][k]);
+                    deps.extend(owner[bb][k]);
+                    let tsqrt = dag.push(2.0 * bf * bf * bf, 3.0 * tile_bytes, &deps);
+                    owner[a][k] = Some(tsqrt);
+                    for j in k + 1..c {
+                        let mut deps = vec![tsqrt];
+                        deps.extend(owner[a][j]);
+                        deps.extend(owner[bb][j]);
+                        let ssm = dag.push(4.0 * bf * bf * bf, 4.0 * tile_bytes, &deps);
+                        owner[a][j] = Some(ssm);
+                        owner[bb][j] = Some(ssm);
+                    }
+                    next.push(a);
+                }
+                live = next;
+            }
+        }
+        dag
+    }
+
+    /// qr_mumps-style frontal factorization of an `m x n` front.
+    /// `partition_1d = true`: block-columns of width `b` (each panel is
+    /// one tall kernel + per-column updates — little parallelism,
+    /// matching the paper's worse 1D α values); otherwise the 2D tiled
+    /// QR above.
+    pub fn frontal(m: usize, n: usize, b: usize, partition_1d: bool) -> KernelDag {
+        if !partition_1d {
+            // auto-tune the tile edge down for skinny fronts: a
+            // 1000-column front cut into 256-tiles has only 4 tile
+            // columns — no runtime would keep that block size (the
+            // paper's footnote: "block sizes were chosen to obtain
+            // good performance")
+            let b = if n < 8 * b { (n / 8).max(32).min(b) } else { b };
+            return Self::qr(m.div_ceil(b), n.div_ceil(b), b);
+        }
+        // 1D: panels of width b across n columns, each panel factor is
+        // sequential over the full height m; updates of the trailing
+        // panels are parallel per panel.
+        let mut dag = KernelDag::default();
+        let panels = n.div_ceil(b);
+        let mf = m as f64;
+        let bf = b as f64;
+        let mut prev_update_of_panel: Vec<Option<u32>> = vec![None; panels];
+        let mut last_factor: Option<u32> = None;
+        for k in 0..panels {
+            let mut deps = Vec::new();
+            deps.extend(prev_update_of_panel[k]);
+            deps.extend(last_factor);
+            // panel factorization: 2 m b^2 flops, touches m x b
+            let fac = dag.push(2.0 * mf * bf * bf, 8.0 * mf * bf * 2.0, &deps);
+            last_factor = Some(fac);
+            for j in k + 1..panels {
+                let mut deps = vec![fac];
+                deps.extend(prev_update_of_panel[j]);
+                let upd = dag.push(4.0 * mf * bf * bf, 8.0 * mf * bf * 3.0, &deps);
+                prev_update_of_panel[j] = Some(upd);
+            }
+        }
+        dag
+    }
+}
+
+/// List-schedule `dag` on `p` cores under `machine`; returns the
+/// simulated wall-clock time.
+///
+/// Scheduler: critical-path priority, non-preemptive, with the shared
+/// bandwidth channel arbitrated by processor sharing — each running
+/// kernel's service rate is `min(1, bandwidth_share)` where
+/// `bandwidth_share = B / Σ demand` of the running set.
+pub fn simulate_dag(dag: &KernelDag, p: usize, machine: &MachineModel) -> f64 {
+    let n = dag.len();
+    if n == 0 {
+        return 0.0;
+    }
+    // priorities: critical path to sink
+    let mut prio = vec![0f64; n];
+    let mut children: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut indeg = vec![0u32; n];
+    for (i, k) in dag.kernels.iter().enumerate() {
+        indeg[i] = k.deps.len() as u32;
+        for &d in &k.deps {
+            children[d as usize].push(i as u32);
+        }
+    }
+    for i in (0..n).rev() {
+        let down = children[i]
+            .iter()
+            .map(|&c| prio[c as usize])
+            .fold(0.0, f64::max);
+        prio[i] = dag.kernels[i].flops + down;
+    }
+
+    // ready heap (max by priority)
+    use std::collections::BinaryHeap;
+    #[derive(PartialEq)]
+    struct Ready(f64, u32);
+    impl Eq for Ready {}
+    impl PartialOrd for Ready {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Ready {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&other.0).unwrap()
+        }
+    }
+    let mut ready: BinaryHeap<Ready> = (0..n)
+        .filter(|&i| indeg[i] == 0)
+        .map(|i| Ready(prio[i], i as u32))
+        .collect();
+
+    // running kernels: remaining flops + bytes demand rate
+    struct Running {
+        id: u32,
+        flops_left: f64,
+        bytes_per_flop: f64,
+    }
+    let mut running: Vec<Running> = Vec::with_capacity(p);
+    let mut t = 0.0f64;
+    let mut done = 0usize;
+
+    while done < n {
+        // fill cores
+        while running.len() < p {
+            let Some(Ready(_, id)) = ready.pop() else { break };
+            let k = &dag.kernels[id as usize];
+            running.push(Running {
+                id,
+                flops_left: k.flops.max(1e-12),
+                bytes_per_flop: k.bytes / k.flops.max(1e-12),
+            });
+        }
+        assert!(!running.is_empty(), "deadlock in kernel DAG");
+        // service rate per kernel under bandwidth sharing:
+        // demand_i = core_rate * bytes_per_flop_i; if Σ demand > B,
+        // all rates scale by B / Σ demand (processor sharing).
+        let total_demand: f64 = running
+            .iter()
+            .map(|r| machine.core_rate * r.bytes_per_flop)
+            .sum();
+        let scale = if total_demand > machine.bandwidth {
+            machine.bandwidth / total_demand
+        } else {
+            1.0
+        };
+        let rate = machine.core_rate * scale;
+        // advance to first completion
+        let dt = running
+            .iter()
+            .map(|r| r.flops_left / rate)
+            .fold(f64::INFINITY, f64::min);
+        t += dt;
+        let mut still = Vec::with_capacity(running.len());
+        for mut r in running {
+            r.flops_left -= dt * rate;
+            if r.flops_left <= 1e-9 {
+                done += 1;
+                for &c in &children[r.id as usize] {
+                    indeg[c as usize] -= 1;
+                    if indeg[c as usize] == 0 {
+                        ready.push(Ready(prio[c as usize], c));
+                    }
+                }
+            } else {
+                still.push(r);
+            }
+        }
+        running = still;
+    }
+    t
+}
+
+/// Sweep `p = 1..=p_max`, returning `(p, T(p))` samples.
+pub fn timing_curve(dag: &KernelDag, p_max: usize, machine: &MachineModel) -> Vec<(f64, f64)> {
+    (1..=p_max)
+        .map(|p| (p as f64, simulate_dag(dag, p, machine)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::regression::fit_alpha;
+
+    fn no_bw() -> MachineModel {
+        MachineModel { core_rate: 1.0, bandwidth: f64::INFINITY }
+    }
+
+    #[test]
+    fn single_kernel_runs_at_core_rate() {
+        let mut dag = KernelDag::default();
+        dag.push(10.0, 0.0, &[]);
+        assert!((simulate_dag(&dag, 4, &no_bw()) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn independent_kernels_scale_linearly() {
+        let mut dag = KernelDag::default();
+        for _ in 0..8 {
+            dag.push(5.0, 0.0, &[]);
+        }
+        assert!((simulate_dag(&dag, 1, &no_bw()) - 40.0).abs() < 1e-9);
+        assert!((simulate_dag(&dag, 8, &no_bw()) - 5.0).abs() < 1e-9);
+        assert!((simulate_dag(&dag, 4, &no_bw()) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chain_is_critical_path_bound() {
+        let mut dag = KernelDag::default();
+        let a = dag.push(3.0, 0.0, &[]);
+        let b = dag.push(4.0, 0.0, &[a]);
+        dag.push(5.0, 0.0, &[b]);
+        assert!((simulate_dag(&dag, 16, &no_bw()) - 12.0).abs() < 1e-9);
+        assert!((dag.critical_path() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_cap_limits_throughput() {
+        // 4 kernels, each demanding 1 byte per flop, B = 2 bytes/s,
+        // 4 cores: rates scale to 1/2 → time doubles vs unbounded.
+        let mut dag = KernelDag::default();
+        for _ in 0..4 {
+            dag.push(10.0, 10.0, &[]);
+        }
+        let m = MachineModel { core_rate: 1.0, bandwidth: 2.0 };
+        let t = simulate_dag(&dag, 4, &m);
+        assert!((t - 20.0).abs() < 1e-9, "t={t}");
+        // one core at a time is under the cap
+        let t1 = simulate_dag(&dag, 1, &m);
+        assert!((t1 - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_dag_has_right_kernel_count() {
+        // t tiles: potrf t, trsm t(t-1)/2, syrk/gemm sum_{k} (t-k-1)(t-k)/2
+        let t = 5;
+        let dag = KernelDag::cholesky(t, 8);
+        let potrf = t;
+        let trsm = t * (t - 1) / 2;
+        let updates: usize = (0..t).map(|k| (t - k - 1) * (t - k) / 2).sum();
+        assert_eq!(dag.len(), potrf + trsm + updates);
+    }
+
+    #[test]
+    fn cholesky_speedup_fits_power_law() {
+        // a decently tiled problem should show α close to 1 for small p
+        // (b = 256: GEMM-intensity tiles, mild contention — the
+        // production configuration of the benches)
+        let dag = KernelDag::cholesky(24, 256);
+        let curve = timing_curve(&dag, 16, &MachineModel::default());
+        let (alpha, fit) = fit_alpha(&curve, 10.0);
+        assert!(alpha > 0.8 && alpha <= 1.01, "alpha={alpha}");
+        assert!(fit.r2 > 0.98, "r2={}", fit.r2);
+        // monotone non-increasing timings
+        for w in curve.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn small_problem_saturates_early() {
+        // few tiles: adding cores beyond the tile parallelism stalls
+        let dag = KernelDag::cholesky(4, 32);
+        let curve = timing_curve(&dag, 40, &no_bw());
+        let t20 = curve[19].1;
+        let t40 = curve[39].1;
+        assert!((t40 - t20).abs() < 1e-9, "no speedup beyond saturation");
+        assert!(t40 >= dag.critical_path() - 1e-9);
+    }
+
+    #[test]
+    fn qr_dag_nonempty_and_runs() {
+        let dag = KernelDag::qr(6, 4, 32);
+        assert!(!dag.is_empty());
+        let t1 = simulate_dag(&dag, 1, &no_bw());
+        let t4 = simulate_dag(&dag, 4, &no_bw());
+        assert!(t4 < t1);
+        assert!((t1 - dag.total_flops()).abs() < 1e-6 * t1);
+    }
+
+    #[test]
+    fn frontal_1d_has_less_parallelism_than_2d() {
+        let (m, n, b) = (2048, 1024, 128);
+        let d1 = KernelDag::frontal(m, n, b, true);
+        let d2 = KernelDag::frontal(m, n, b, false);
+        let m0 = MachineModel::default();
+        let c1 = timing_curve(&d1, 16, &m0);
+        let c2 = timing_curve(&d2, 16, &m0);
+        let (a1, _) = fit_alpha(&c1, 10.0);
+        let (a2, _) = fit_alpha(&c2, 10.0);
+        assert!(a1 < a2, "1D α {a1} should be below 2D α {a2}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Simulators.
+//!
+//! * [`des`] — a discrete-event simulator that executes any
+//!   share-allocation *policy* over a malleable task tree under the
+//!   `p^α` model; it independently cross-checks the analytic makespans
+//!   of [`crate::sched`] (the two are implemented from different
+//!   first principles, so agreement is a strong correctness signal);
+//! * [`kerneldag`] — the §3-reproduction substrate: tiled
+//!   Cholesky/QR/frontal kernel DAGs list-scheduled on `p` cores with a
+//!   shared memory-bandwidth roofline, producing the `T(p)` curves and
+//!   α fits of Figures 2–6 / Tables 1–2 (DESIGN.md §2 explains why this
+//!   simulator substitutes for the paper's 40-core machine).
+
+pub mod des;
+pub mod kerneldag;
+
+pub use des::{simulate, DesResult, Policy};
+pub use kerneldag::{simulate_dag, timing_curve, KernelDag, MachineModel};

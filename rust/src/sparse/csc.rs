@@ -1,0 +1,239 @@
+//! Compressed-sparse-column square symmetric matrices.
+//!
+//! Both triangles are stored (simplifies traversal); constructors
+//! enforce symmetry of the pattern. Row indices are sorted per column.
+
+use anyhow::{bail, Result};
+
+/// Square sparse matrix in CSC format.
+#[derive(Debug, Clone)]
+pub struct CscMatrix {
+    pub n: usize,
+    /// `colptr[j]..colptr[j+1]` indexes column `j`'s entries.
+    pub colptr: Vec<usize>,
+    /// Row index of each entry, sorted within a column.
+    pub rowidx: Vec<usize>,
+    /// Numeric values (same layout as `rowidx`).
+    pub values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from unsorted triplets; duplicate entries are summed.
+    pub fn from_triplets(n: usize, triplets: &[(usize, usize, f64)]) -> Result<Self> {
+        for &(i, j, _) in triplets {
+            if i >= n || j >= n {
+                bail!("triplet ({i},{j}) out of range for n={n}");
+            }
+        }
+        // bucket by column
+        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for &(i, j, v) in triplets {
+            per_col[j].push((i, v));
+        }
+        let mut colptr = Vec::with_capacity(n + 1);
+        let mut rowidx = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        colptr.push(0);
+        for col in &mut per_col {
+            col.sort_by_key(|&(i, _)| i);
+            let mut last: Option<usize> = None;
+            for &(i, v) in col.iter() {
+                if last == Some(i) {
+                    *values.last_mut().unwrap() += v;
+                } else {
+                    rowidx.push(i);
+                    values.push(v);
+                    last = Some(i);
+                }
+            }
+            colptr.push(rowidx.len());
+        }
+        Ok(CscMatrix { n, colptr, rowidx, values })
+    }
+
+    /// Entries of column `j` as `(row, value)` pairs.
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let range = self.colptr[j]..self.colptr[j + 1];
+        self.rowidx[range.clone()]
+            .iter()
+            .copied()
+            .zip(self.values[range].iter().copied())
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.rowidx.len()
+    }
+
+    /// Value at `(i, j)` (binary search; 0.0 if absent).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let range = self.colptr[j]..self.colptr[j + 1];
+        match self.rowidx[range.clone()].binary_search(&i) {
+            Ok(k) => self.values[range.start + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Check that the sparsity pattern (and values, within `tol`) are
+    /// symmetric.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for j in 0..self.n {
+            for (i, v) in self.col(j) {
+                if (self.get(j, i) - v).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Symmetric permutation `B = P A Pᵀ`, with `perm[k] = old index of
+    /// new index k` (i.e. `B[k,l] = A[perm[k], perm[l]]`).
+    pub fn permute_sym(&self, perm: &[usize]) -> Result<CscMatrix> {
+        if perm.len() != self.n {
+            bail!("permutation length mismatch");
+        }
+        let mut inv = vec![usize::MAX; self.n];
+        for (new, &old) in perm.iter().enumerate() {
+            if old >= self.n || inv[old] != usize::MAX {
+                bail!("invalid permutation");
+            }
+            inv[old] = new;
+        }
+        let mut triplets = Vec::with_capacity(self.nnz());
+        for j in 0..self.n {
+            for (i, v) in self.col(j) {
+                triplets.push((inv[i], inv[j], v));
+            }
+        }
+        CscMatrix::from_triplets(self.n, &triplets)
+    }
+
+    /// Dense row-major copy (tests / small problems only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0f64; self.n * self.n];
+        for j in 0..self.n {
+            for (i, v) in self.col(j) {
+                d[i * self.n + j] = v;
+            }
+        }
+        d
+    }
+
+    /// `y = A x` (for residual checks).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0f64; self.n];
+        for j in 0..self.n {
+            let xj = x[j];
+            for (i, v) in self.col(j) {
+                y[i] += v * xj;
+            }
+        }
+        y
+    }
+
+    /// Strict-lower-triangle pattern of column `j` (rows > j).
+    pub fn col_below_diag(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
+        let range = self.colptr[j]..self.colptr[j + 1];
+        self.rowidx[range].iter().copied().filter(move |&i| i > j)
+    }
+
+    /// Upper-triangle pattern of column `j` (rows < j) — the row set
+    /// Liu's elimination-tree algorithm consumes.
+    pub fn col_above_diag(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
+        let range = self.colptr[j]..self.colptr[j + 1];
+        self.rowidx[range].iter().copied().filter(move |&i| i < j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [[4,1,0],[1,4,2],[0,2,4]]
+        CscMatrix::from_triplets(
+            3,
+            &[
+                (0, 0, 4.0),
+                (1, 0, 1.0),
+                (0, 1, 1.0),
+                (1, 1, 4.0),
+                (2, 1, 2.0),
+                (1, 2, 2.0),
+                (2, 2, 4.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn triplets_round_trip() {
+        let m = sample();
+        assert_eq!(m.nnz(), 7);
+        assert_eq!(m.get(0, 0), 4.0);
+        assert_eq!(m.get(2, 1), 2.0);
+        assert_eq!(m.get(0, 2), 0.0);
+        assert!(m.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let m = CscMatrix::from_triplets(2, &[(0, 0, 1.0), (0, 0, 2.0)]).unwrap();
+        assert_eq!(m.get(0, 0), 3.0);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(CscMatrix::from_triplets(2, &[(2, 0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn rows_sorted_within_column() {
+        let m = CscMatrix::from_triplets(3, &[(2, 0, 1.0), (0, 0, 2.0), (1, 0, 3.0)]).unwrap();
+        let rows: Vec<usize> = m.col(0).map(|(i, _)| i).collect();
+        assert_eq!(rows, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn permute_sym_round_trips() {
+        let m = sample();
+        let perm = vec![2, 0, 1];
+        let pm = m.permute_sym(&perm).unwrap();
+        // B[k,l] = A[perm[k], perm[l]]
+        for k in 0..3 {
+            for l in 0..3 {
+                assert_eq!(pm.get(k, l), m.get(perm[k], perm[l]));
+            }
+        }
+        assert!(pm.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn permute_rejects_bad() {
+        let m = sample();
+        assert!(m.permute_sym(&[0, 0, 1]).is_err());
+        assert!(m.permute_sym(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let x = vec![1.0, 2.0, 3.0];
+        let y = m.matvec(&x);
+        let d = m.to_dense();
+        for i in 0..3 {
+            let want: f64 = (0..3).map(|j| d[i * 3 + j] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn triangle_iterators() {
+        let m = sample();
+        assert_eq!(m.col_below_diag(0).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(m.col_above_diag(1).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(m.col_above_diag(0).count(), 0);
+    }
+}

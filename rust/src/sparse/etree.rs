@@ -1,0 +1,240 @@
+//! Elimination trees (Liu, "The role of elimination trees in sparse
+//! factorization", 1990 — the paper's reference [3]).
+//!
+//! `parent[j]` is the first row index below `j` in column `j` of the
+//! Cholesky factor `L`; computed in near-linear time with path
+//! compression, without forming `L`.
+
+use anyhow::{bail, Result};
+
+use super::csc::CscMatrix;
+
+/// Elimination tree of a symmetric matrix: `parent[j] == j` marks a
+/// root (forests arise for reducible matrices).
+pub fn elimination_tree(a: &CscMatrix) -> Vec<usize> {
+    let n = a.n;
+    let mut parent = vec![usize::MAX; n];
+    let mut ancestor = vec![usize::MAX; n];
+    for j in 0..n {
+        for i in a.col_above_diag(j) {
+            // walk from i up to the current root, compressing to j
+            let mut r = i;
+            while ancestor[r] != usize::MAX && ancestor[r] != j {
+                let next = ancestor[r];
+                ancestor[r] = j;
+                r = next;
+            }
+            if ancestor[r] == usize::MAX {
+                ancestor[r] = j;
+                parent[r] = j;
+            }
+        }
+    }
+    // normalize roots to self-loops
+    for j in 0..n {
+        if parent[j] == usize::MAX {
+            parent[j] = j;
+        }
+    }
+    parent
+}
+
+/// Postorder of an elimination forest (children before parents,
+/// iterative). Returns `post` with `post[k] = k`-th node in postorder.
+pub fn postorder(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut roots = Vec::new();
+    for j in 0..n {
+        if parent[j] == j {
+            roots.push(j);
+        } else {
+            children[parent[j]].push(j);
+        }
+    }
+    let mut post = Vec::with_capacity(n);
+    // two-phase iterative postorder
+    let mut stack: Vec<(usize, bool)> = Vec::with_capacity(n);
+    for &r in roots.iter().rev() {
+        stack.push((r, false));
+    }
+    while let Some((v, expanded)) = stack.pop() {
+        if expanded {
+            post.push(v);
+        } else {
+            stack.push((v, true));
+            for &c in children[v].iter().rev() {
+                stack.push((c, false));
+            }
+        }
+    }
+    post
+}
+
+/// Check `post` is a valid postorder of `parent`.
+pub fn is_postorder(parent: &[usize], post: &[usize]) -> bool {
+    let n = parent.len();
+    if post.len() != n {
+        return false;
+    }
+    let mut pos = vec![usize::MAX; n];
+    for (k, &v) in post.iter().enumerate() {
+        if v >= n || pos[v] != usize::MAX {
+            return false;
+        }
+        pos[v] = k;
+    }
+    (0..n).all(|j| parent[j] == j || pos[j] < pos[parent[j]])
+}
+
+/// Nonzero counts of each column of `L` (including the diagonal),
+/// via row-subtree traversal (simple O(nnz(A) · height) bound — fine
+/// for the problem sizes in this repo; see `symbolic` for the full
+/// pattern).
+pub fn col_counts(a: &CscMatrix, parent: &[usize]) -> Vec<usize> {
+    let n = a.n;
+    let mut count = vec![1usize; n]; // diagonal
+    let mut mark = vec![usize::MAX; n];
+    for i in 0..n {
+        mark[i] = i;
+        // row i of L: walk from each k (A_ik, k<i) up the etree until a
+        // marked node; every unmarked node j on the way gains row i.
+        for k in a.col_above_diag(i) {
+            let mut j = k;
+            while mark[j] != i {
+                mark[j] = i;
+                count[j] += 1;
+                if parent[j] == j {
+                    break;
+                }
+                j = parent[j];
+                if j == i {
+                    break;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Validate that `parent` is a forest over `0..n` with edges pointing
+/// to higher indices (elimination trees are topologically ordered).
+pub fn validate_etree(parent: &[usize]) -> Result<()> {
+    for (j, &p) in parent.iter().enumerate() {
+        if p >= parent.len() {
+            bail!("parent[{j}] = {p} out of range");
+        }
+        if p != j && p < j {
+            bail!("etree edge {j} -> {p} goes downward");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    /// Arrowhead matrix: column 0 connected to all — etree is a chain.
+    fn arrowhead(n: usize) -> CscMatrix {
+        let mut t = vec![(0usize, 0usize, n as f64)];
+        for i in 1..n {
+            t.push((i, i, n as f64));
+            t.push((i, 0, 1.0));
+            t.push((0, i, 1.0));
+        }
+        CscMatrix::from_triplets(n, &t).unwrap()
+    }
+
+    #[test]
+    fn arrowhead_etree_is_chain() {
+        let a = arrowhead(6);
+        let p = elimination_tree(&a);
+        // fill-in makes every column j point to j+1
+        assert_eq!(p, vec![1, 2, 3, 4, 5, 5]);
+        validate_etree(&p).unwrap();
+    }
+
+    #[test]
+    fn tridiagonal_etree_is_chain() {
+        let n = 8;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i + 1 < n {
+                t.push((i + 1, i, -1.0));
+                t.push((i, i + 1, -1.0));
+            }
+        }
+        let a = CscMatrix::from_triplets(n, &t).unwrap();
+        let p = elimination_tree(&a);
+        for j in 0..n - 1 {
+            assert_eq!(p[j], j + 1);
+        }
+        assert_eq!(p[n - 1], n - 1);
+    }
+
+    #[test]
+    fn diagonal_matrix_is_forest_of_singletons() {
+        let t: Vec<(usize, usize, f64)> = (0..5).map(|i| (i, i, 1.0)).collect();
+        let a = CscMatrix::from_triplets(5, &t).unwrap();
+        let p = elimination_tree(&a);
+        assert_eq!(p, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn postorder_is_valid() {
+        let a = gen::grid_laplacian_2d(6);
+        let p = elimination_tree(&a);
+        let post = postorder(&p);
+        assert!(is_postorder(&p, &post));
+    }
+
+    #[test]
+    fn postorder_handles_forest() {
+        let parent = vec![0, 1, 0, 1]; // two roots 0,1 with children 2,3
+        let post = postorder(&parent);
+        assert!(is_postorder(&parent, &post));
+        assert_eq!(post.len(), 4);
+    }
+
+    #[test]
+    fn col_counts_tridiagonal() {
+        // L of a tridiagonal SPD matrix is bidiagonal: counts = 2,…,2,1
+        let n = 6;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i + 1 < n {
+                t.push((i + 1, i, -1.0));
+                t.push((i, i + 1, -1.0));
+            }
+        }
+        let a = CscMatrix::from_triplets(n, &t).unwrap();
+        let p = elimination_tree(&a);
+        let c = col_counts(&a, &p);
+        assert_eq!(c, vec![2, 2, 2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn col_counts_arrowhead_fillin() {
+        // eliminating col 0 fills the whole trailing block: counts are
+        // n, n-1, ..., 1
+        let n = 5;
+        let a = arrowhead(n);
+        let p = elimination_tree(&a);
+        let c = col_counts(&a, &p);
+        assert_eq!(c, vec![5, 4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn grid_etree_root_is_last_column() {
+        let a = gen::grid_laplacian_2d(5);
+        let p = elimination_tree(&a);
+        validate_etree(&p).unwrap();
+        // connected matrix ⇒ single root = n-1
+        let roots: Vec<usize> = (0..a.n).filter(|&j| p[j] == j).collect();
+        assert_eq!(roots, vec![a.n - 1]);
+    }
+}

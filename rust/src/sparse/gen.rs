@@ -1,0 +1,144 @@
+//! Sparse problem generators.
+//!
+//! Stand-in for the University of Florida collection (repro substitution,
+//! DESIGN.md §2): grid Laplacians are the canonical PDE matrices whose
+//! assembly trees the multifrontal literature (and the paper's Figure
+//! 13/14 dataset) is built on; the random SPD generator adds irregular
+//! patterns.
+
+use crate::util::rng::Rng;
+
+use super::csc::CscMatrix;
+
+/// 5-point 2D Laplacian on a `k x k` grid (n = k²), SPD.
+pub fn grid_laplacian_2d(k: usize) -> CscMatrix {
+    let n = k * k;
+    let idx = |x: usize, y: usize| y * k + x;
+    let mut t = Vec::with_capacity(5 * n);
+    for y in 0..k {
+        for x in 0..k {
+            let c = idx(x, y);
+            t.push((c, c, 4.0));
+            if x + 1 < k {
+                t.push((idx(x + 1, y), c, -1.0));
+                t.push((c, idx(x + 1, y), -1.0));
+            }
+            if y + 1 < k {
+                t.push((idx(x, y + 1), c, -1.0));
+                t.push((c, idx(x, y + 1), -1.0));
+            }
+        }
+    }
+    CscMatrix::from_triplets(n, &t).unwrap()
+}
+
+/// 7-point 3D Laplacian on a `k x k x k` grid (n = k³), SPD.
+pub fn grid_laplacian_3d(k: usize) -> CscMatrix {
+    let n = k * k * k;
+    let idx = |x: usize, y: usize, z: usize| (z * k + y) * k + x;
+    let mut t = Vec::with_capacity(7 * n);
+    for z in 0..k {
+        for y in 0..k {
+            for x in 0..k {
+                let c = idx(x, y, z);
+                t.push((c, c, 6.0));
+                let mut nb = |o: usize| {
+                    t.push((o, c, -1.0));
+                    t.push((c, o, -1.0));
+                };
+                if x + 1 < k {
+                    nb(idx(x + 1, y, z));
+                }
+                if y + 1 < k {
+                    nb(idx(x, y + 1, z));
+                }
+                if z + 1 < k {
+                    nb(idx(x, y, z + 1));
+                }
+            }
+        }
+    }
+    CscMatrix::from_triplets(n, &t).unwrap()
+}
+
+/// Random sparse SPD matrix: symmetric pattern with ~`avg_deg`
+/// off-diagonals per row, made diagonally dominant.
+pub fn random_spd(n: usize, avg_deg: usize, rng: &mut Rng) -> CscMatrix {
+    let mut t = Vec::with_capacity(n * (avg_deg + 1));
+    let mut deg = vec![0f64; n];
+    let m = n * avg_deg / 2;
+    for _ in 0..m {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i == j {
+            continue;
+        }
+        let v = -rng.range_f64(0.1, 1.0);
+        t.push((i, j, v));
+        t.push((j, i, v));
+        deg[i] += v.abs();
+        deg[j] += v.abs();
+    }
+    for i in 0..n {
+        t.push((i, i, deg[i] + 1.0)); // strict diagonal dominance ⇒ SPD
+    }
+    CscMatrix::from_triplets(n, &t).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_2d_shape_and_symmetry() {
+        let a = grid_laplacian_2d(4);
+        assert_eq!(a.n, 16);
+        assert!(a.is_symmetric(0.0));
+        // interior node has 4 neighbors + diagonal
+        let c = a.col(5).count();
+        assert_eq!(c, 5);
+        // corner has 2 neighbors
+        assert_eq!(a.col(0).count(), 3);
+    }
+
+    #[test]
+    fn grid_2d_row_sums_nonneg() {
+        // Laplacian row sums are >= 0 (boundary rows positive)
+        let a = grid_laplacian_2d(3);
+        let ones = vec![1.0; a.n];
+        let y = a.matvec(&ones);
+        assert!(y.iter().all(|&v| v >= -1e-12));
+        assert!(y.iter().any(|&v| v > 0.5));
+    }
+
+    #[test]
+    fn grid_3d_shape() {
+        let a = grid_laplacian_3d(3);
+        assert_eq!(a.n, 27);
+        assert!(a.is_symmetric(0.0));
+        // center node (1,1,1) has 6 neighbors + diagonal
+        let center = (1 * 3 + 1) * 3 + 1;
+        assert_eq!(a.col(center).count(), 7);
+    }
+
+    #[test]
+    fn random_spd_is_symmetric_and_dominant() {
+        let mut rng = Rng::new(9);
+        let a = random_spd(50, 4, &mut rng);
+        assert!(a.is_symmetric(1e-12));
+        // diagonal dominance
+        for j in 0..a.n {
+            let diag = a.get(j, j);
+            let off: f64 = a.col(j).filter(|&(i, _)| i != j).map(|(_, v)| v.abs()).sum();
+            assert!(diag > off, "col {j}: diag {diag} <= off {off}");
+        }
+    }
+
+    #[test]
+    fn random_spd_deterministic() {
+        let a = random_spd(30, 3, &mut Rng::new(5));
+        let b = random_spd(30, 3, &mut Rng::new(5));
+        assert_eq!(a.rowidx, b.rowidx);
+        assert_eq!(a.values, b.values);
+    }
+}

@@ -1,0 +1,173 @@
+//! Matrix Market coordinate format I/O (the UF collection's format).
+//!
+//! Supports `matrix coordinate real {general|symmetric}`; symmetric
+//! files are expanded to both triangles on read.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csc::CscMatrix;
+
+/// Read a Matrix Market file into a [`CscMatrix`].
+pub fn read_matrix_market(path: &Path) -> Result<CscMatrix> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    parse_matrix_market(std::io::BufReader::new(f))
+}
+
+/// Parse Matrix Market content from any reader.
+pub fn parse_matrix_market<R: BufRead>(reader: R) -> Result<CscMatrix> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .context("empty file")??
+        .to_lowercase();
+    let fields: Vec<&str> = header.split_whitespace().collect();
+    if fields.len() < 5 || fields[0] != "%%matrixmarket" || fields[1] != "matrix" {
+        bail!("not a MatrixMarket matrix header: {header}");
+    }
+    if fields[2] != "coordinate" || fields[3] != "real" && fields[3] != "integer" {
+        bail!("only coordinate real/integer supported, got {header}");
+    }
+    let symmetric = match fields[4] {
+        "general" => false,
+        "symmetric" => true,
+        other => bail!("unsupported symmetry {other}"),
+    };
+
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('%') {
+            continue;
+        }
+        size_line = Some(trimmed.to_string());
+        break;
+    }
+    let size_line = size_line.context("missing size line")?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .with_context(|| format!("bad size line: {size_line}"))?;
+    if dims.len() != 3 {
+        bail!("size line needs 3 fields: {size_line}");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+    if rows != cols {
+        bail!("only square matrices supported ({rows}x{cols})");
+    }
+
+    let mut triplets = Vec::with_capacity(if symmetric { 2 * nnz } else { nnz });
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("bad entry line")?.parse()?;
+        let j: usize = it.next().context("bad entry line")?.parse()?;
+        let v: f64 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+        if i < 1 || j < 1 || i > rows || j > cols {
+            bail!("entry ({i},{j}) out of bounds");
+        }
+        let (i, j) = (i - 1, j - 1);
+        triplets.push((i, j, v));
+        if symmetric && i != j {
+            triplets.push((j, i, v));
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("expected {nnz} entries, found {seen}");
+    }
+    CscMatrix::from_triplets(rows, &triplets)
+}
+
+/// Write `a` as `matrix coordinate real general`.
+pub fn write_matrix_market(a: &CscMatrix, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by malltree")?;
+    writeln!(w, "{} {} {}", a.n, a.n, a.nnz())?;
+    for j in 0..a.n {
+        for (i, v) in a.col(j) {
+            writeln!(w, "{} {} {}", i + 1, j + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SYM: &str = "%%MatrixMarket matrix coordinate real symmetric\n\
+                       % a comment\n\
+                       3 3 4\n\
+                       1 1 4.0\n\
+                       2 1 1.0\n\
+                       2 2 4.0\n\
+                       3 3 4.0\n";
+
+    #[test]
+    fn parses_symmetric_and_expands() {
+        let a = parse_matrix_market(Cursor::new(SYM)).unwrap();
+        assert_eq!(a.n, 3);
+        assert_eq!(a.get(0, 1), 1.0); // expanded mirror
+        assert_eq!(a.get(1, 0), 1.0);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn rejects_wrong_counts() {
+        let bad = "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n";
+        assert!(parse_matrix_market(Cursor::new(bad)).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let bad = "%%MatrixMarket matrix coordinate real general\n2 3 1\n1 1 1.0\n";
+        assert!(parse_matrix_market(Cursor::new(bad)).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(parse_matrix_market(Cursor::new("hello\n")).is_err());
+        let arr = "%%MatrixMarket matrix array real general\n";
+        assert!(parse_matrix_market(Cursor::new(arr)).is_err());
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let a = crate::sparse::gen::grid_laplacian_2d(4);
+        let dir = std::env::temp_dir().join("malltree_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("grid.mtx");
+        write_matrix_market(&a, &path).unwrap();
+        let b = read_matrix_market(&path).unwrap();
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.nnz(), b.nnz());
+        for j in 0..a.n {
+            for (i, v) in a.col(j) {
+                assert_eq!(b.get(i, j), v);
+            }
+        }
+    }
+
+    #[test]
+    fn one_based_bounds_checked() {
+        let bad = "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n";
+        assert!(parse_matrix_market(Cursor::new(bad)).is_err());
+        let bad2 = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(parse_matrix_market(Cursor::new(bad2)).is_err());
+    }
+}

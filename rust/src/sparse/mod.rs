@@ -1,0 +1,29 @@
+//! Sparse linear algebra substrate (the paper's application domain).
+//!
+//! The paper's malleable task trees are *assembly trees* of multifrontal
+//! sparse Cholesky factorization. This module provides everything needed
+//! to produce such trees from actual sparse matrices, built from
+//! scratch:
+//!
+//! * [`csc`] — compressed sparse column symmetric matrices;
+//! * [`mm`] — Matrix Market coordinate I/O;
+//! * [`gen`] — problem generators (2D/3D grid Laplacians, random SPD)
+//!   standing in for the University of Florida collection (DESIGN.md
+//!   §2 substitution table);
+//! * [`order`] — fill-reducing orderings (grid nested dissection,
+//!   reverse Cuthill–McKee fallback);
+//! * [`etree`] — Liu's elimination-tree algorithm, postorder, column
+//!   counts;
+//! * [`symbolic`] — symbolic factorization, fundamental supernodes,
+//!   amalgamation, and extraction of the weighted assembly [`crate::model::TaskTree`].
+
+pub mod csc;
+pub mod etree;
+pub mod gen;
+pub mod mm;
+pub mod order;
+pub mod symbolic;
+
+pub use csc::CscMatrix;
+pub use etree::{elimination_tree, postorder};
+pub use symbolic::{AssemblyTree, Supernode, SymbolicFactorization};

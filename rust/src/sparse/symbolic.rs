@@ -1,0 +1,335 @@
+//! Symbolic factorization, supernodes and the weighted assembly tree.
+//!
+//! This is the analysis phase of a multifrontal solver (paper §3): from
+//! the matrix pattern we compute the pattern of `L` column by column
+//! (up-looking, guided by the elimination tree), merge columns with
+//! (near-)identical structure into **supernodes**, optionally
+//! *amalgamate* small supernodes into their parents (trading a little
+//! fill for larger fronts, as real solvers do), and emit the **assembly
+//! tree**: one malleable task per supernode, weighted by the flops of
+//! its partial frontal factorization — exactly the task trees the
+//! paper schedules.
+
+use anyhow::Result;
+
+use crate::model::TaskTree;
+
+use super::csc::CscMatrix;
+use super::etree::{elimination_tree, postorder};
+
+/// A supernode: a contiguous run of `width` columns (in the postordered
+/// matrix) sharing the same below-diagonal structure.
+#[derive(Debug, Clone)]
+pub struct Supernode {
+    /// First column of the supernode.
+    pub first_col: usize,
+    /// Number of columns eliminated by this supernode's task.
+    pub width: usize,
+    /// Row indices of the front (the supernode's columns plus the
+    /// union of their below-panel structure), sorted ascending. The
+    /// first `width` entries are the eliminated columns themselves.
+    pub rows: Vec<usize>,
+    /// Parent supernode index (self for roots).
+    pub parent: usize,
+}
+
+impl Supernode {
+    /// Front order `n` (rows of the dense frontal matrix).
+    pub fn front_order(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Flops of the partial factorization of this front
+    /// (`potrf + trsm + schur`, cf. `python/compile/model.py`).
+    pub fn flops(&self) -> f64 {
+        let n = self.front_order() as f64;
+        let k = self.width as f64;
+        let m = n - k;
+        k * k * k / 3.0 + m * k * k + m * m * k
+    }
+}
+
+/// Result of the analysis phase.
+#[derive(Debug, Clone)]
+pub struct SymbolicFactorization {
+    /// Permutation applied (`perm[new] = old`), including postorder.
+    pub perm: Vec<usize>,
+    /// Column elimination-tree parent (on the permuted matrix).
+    pub etree: Vec<usize>,
+    /// Pattern of each column of L (row indices >= column, sorted).
+    pub l_pattern: Vec<Vec<usize>>,
+    /// Supernode partition, in postorder (children before parents).
+    pub supernodes: Vec<Supernode>,
+    /// Supernode index of every column.
+    pub col_to_snode: Vec<usize>,
+}
+
+/// The assembly tree: the task tree the schedulers consume plus the
+/// mapping back to supernodes.
+#[derive(Debug, Clone)]
+pub struct AssemblyTree {
+    pub tree: TaskTree,
+    pub symbolic: SymbolicFactorization,
+}
+
+/// Run the full analysis: permute by `perm` (fill-reducing), postorder
+/// the elimination tree, compute L's pattern, form supernodes (merging
+/// relaxed by `amalgamate` extra rows), and build the assembly tree.
+pub fn analyze(a: &CscMatrix, perm: &[usize], amalgamate: usize) -> Result<AssemblyTree> {
+    // 1. fill-reducing permutation
+    let ap = a.permute_sym(perm)?;
+    // 2. postorder the elimination tree and re-permute
+    let parent = elimination_tree(&ap);
+    let post = postorder(&parent);
+    let ap = ap.permute_sym(&post)?;
+    // compose: final perm[new] = perm[post[new]]
+    let full_perm: Vec<usize> = post.iter().map(|&k| perm[k]).collect();
+    let etree = elimination_tree(&ap);
+
+    // 3. symbolic factorization: pattern of L column by column.
+    // col j's pattern = A(j:, j) ∪ (children's patterns minus their
+    // eliminated column), which is exact for Cholesky.
+    let n = ap.n;
+    let mut l_pattern: Vec<Vec<usize>> = Vec::with_capacity(n);
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for j in 0..n {
+        if etree[j] != j {
+            children[etree[j]].push(j);
+        }
+    }
+    let mut mark = vec![usize::MAX; n];
+    for j in 0..n {
+        let mut rows = vec![j];
+        mark[j] = j;
+        for i in ap.col_below_diag(j) {
+            if mark[i] != j {
+                mark[i] = j;
+                rows.push(i);
+            }
+        }
+        for &c in &children[j] {
+            for &i in &l_pattern[c][1..] {
+                // skip the child's eliminated column itself
+                if i != j && mark[i] != j {
+                    debug_assert!(i > j);
+                    mark[i] = j;
+                    rows.push(i);
+                } else if i == j && mark[j] != j {
+                    mark[j] = j;
+                }
+            }
+        }
+        rows.sort_unstable();
+        l_pattern.push(rows);
+    }
+
+    // 4. fundamental supernodes: extend the current supernode while the
+    // next column is the only child continuation with compatible
+    // structure; relaxed amalgamation allows `amalgamate` extra rows.
+    let mut col_to_snode = vec![usize::MAX; n];
+    let mut snode_first: Vec<usize> = Vec::new();
+    for j in 0..n {
+        let fuse = j > 0 && {
+            let prev = j - 1;
+            // Fundamental supernodes: prev's etree parent is j, j has a
+            // single child, and patterns nest exactly
+            // (|L(:,prev)| == |L(:,j)| + 1). Relaxed amalgamation
+            // (amalgamate > 0) also merges across multi-child columns
+            // and tolerates up to `amalgamate` extra rows of padding —
+            // the trade real multifrontal solvers make for larger
+            // fronts (identity/zero padding keeps numerics exact).
+            etree[prev] == j
+                && (children[j].len() == 1 || amalgamate > 0)
+                && l_pattern[prev].len() <= l_pattern[j].len() + 1 + amalgamate
+        };
+        if fuse {
+            col_to_snode[j] = snode_first.len() - 1;
+        } else {
+            col_to_snode[j] = snode_first.len();
+            snode_first.push(j);
+        }
+    }
+    let num_snodes = snode_first.len();
+
+    // 5. supernode rows (union over member columns = first column's
+    // pattern extended by any amalgamation slack) and parents.
+    let mut supernodes: Vec<Supernode> = Vec::with_capacity(num_snodes);
+    for s in 0..num_snodes {
+        let first = snode_first[s];
+        let last = if s + 1 < num_snodes { snode_first[s + 1] } else { n };
+        let width = last - first;
+        // union of member patterns
+        let mut rows: Vec<usize> = Vec::new();
+        let mut mark2 = std::collections::HashSet::new();
+        for j in first..last {
+            for &i in &l_pattern[j] {
+                if mark2.insert(i) {
+                    rows.push(i);
+                }
+            }
+        }
+        rows.sort_unstable();
+        // parent snode = snode of etree parent of last member column
+        let p = etree[last - 1];
+        let parent = if p == last - 1 { s } else { col_to_snode[p] };
+        supernodes.push(Supernode { first_col: first, width, rows, parent });
+    }
+
+    // 6. assembly task tree (supernodes are already children-first).
+    let parents: Vec<usize> = supernodes.iter().map(|s| s.parent).collect();
+    let lens: Vec<f64> = supernodes.iter().map(|s| s.flops()).collect();
+    // multifrontal forests: attach secondary roots under the last root
+    let mut parents = parents;
+    let roots: Vec<usize> = (0..num_snodes).filter(|&s| parents[s] == s).collect();
+    if roots.len() > 1 {
+        let main = *roots.last().unwrap();
+        for &r in &roots {
+            if r != main {
+                parents[r] = main;
+            }
+        }
+    }
+    let tree = TaskTree::from_parents(&parents, &lens)?;
+
+    Ok(AssemblyTree {
+        tree,
+        symbolic: SymbolicFactorization {
+            perm: full_perm,
+            etree,
+            l_pattern,
+            supernodes,
+            col_to_snode,
+        },
+    })
+}
+
+/// Total factor nonzeros implied by the symbolic pattern.
+pub fn factor_nnz(sym: &SymbolicFactorization) -> usize {
+    sym.l_pattern.iter().map(|p| p.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, order};
+
+    fn analyze_grid(k: usize, amalg: usize) -> AssemblyTree {
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        analyze(&a, &perm, amalg).unwrap()
+    }
+
+    #[test]
+    fn supernodes_partition_columns() {
+        let at = analyze_grid(8, 0);
+        let n = 64;
+        let total: usize = at.symbolic.supernodes.iter().map(|s| s.width).sum();
+        assert_eq!(total, n);
+        // each column maps into its supernode's range
+        for (j, &s) in at.symbolic.col_to_snode.iter().enumerate() {
+            let sn = &at.symbolic.supernodes[s];
+            assert!(sn.first_col <= j && j < sn.first_col + sn.width);
+        }
+    }
+
+    #[test]
+    fn front_rows_start_with_eliminated_columns() {
+        let at = analyze_grid(8, 0);
+        for sn in &at.symbolic.supernodes {
+            for w in 0..sn.width {
+                assert_eq!(sn.rows[w], sn.first_col + w, "supernode {sn:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_is_valid_and_rooted() {
+        let at = analyze_grid(10, 0);
+        at.tree.validate().unwrap();
+        assert_eq!(at.tree.len(), at.symbolic.supernodes.len());
+    }
+
+    #[test]
+    fn l_pattern_contains_a_pattern() {
+        // no cancellations: pattern of L ⊇ lower pattern of A
+        let k = 6;
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let at = analyze(&a, &perm, 0).unwrap();
+        let ap = a
+            .permute_sym(&at.symbolic.perm)
+            .unwrap();
+        for j in 0..ap.n {
+            for i in ap.col_below_diag(j) {
+                assert!(
+                    at.symbolic.l_pattern[j].contains(&i),
+                    "A entry ({i},{j}) missing from L pattern"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l_pattern_parent_containment() {
+        // Cholesky structure theorem: L(:, j) \ {j} ⊆ L(:, parent(j))
+        let at = analyze_grid(7, 0);
+        let sym = &at.symbolic;
+        for j in 0..sym.etree.len() {
+            let p = sym.etree[j];
+            if p == j {
+                continue;
+            }
+            for &i in &sym.l_pattern[j][1..] {
+                if i == p {
+                    continue;
+                }
+                assert!(
+                    sym.l_pattern[p].contains(&i),
+                    "row {i} of col {j} missing in parent col {p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn amalgamation_reduces_task_count() {
+        let none = analyze_grid(12, 0);
+        let some = analyze_grid(12, 8);
+        assert!(
+            some.tree.len() < none.tree.len(),
+            "amalg {} !< fundamental {}",
+            some.tree.len(),
+            none.tree.len()
+        );
+    }
+
+    #[test]
+    fn task_lengths_are_front_flops() {
+        let at = analyze_grid(6, 0);
+        for (i, sn) in at.symbolic.supernodes.iter().enumerate() {
+            assert!((at.tree.nodes[i].len - sn.flops()).abs() < 1e-9);
+            assert!(sn.flops() > 0.0);
+        }
+    }
+
+    #[test]
+    fn random_spd_with_rcm_analyzes() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let a = gen::random_spd(80, 4, &mut rng);
+        let perm = order::reverse_cuthill_mckee(&a);
+        let at = analyze(&a, &perm, 2).unwrap();
+        at.tree.validate().unwrap();
+        let total: usize = at.symbolic.supernodes.iter().map(|s| s.width).sum();
+        assert_eq!(total, 80);
+    }
+
+    #[test]
+    fn factor_nnz_at_least_matrix_lower_nnz() {
+        let k = 9;
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let at = analyze(&a, &perm, 0).unwrap();
+        let lower_nnz = (0..a.n).map(|j| a.col_below_diag(j).count() + 1).sum::<usize>();
+        assert!(factor_nnz(&at.symbolic) >= lower_nnz);
+    }
+}

@@ -1,0 +1,37 @@
+//! Small in-repo utilities replacing crates unavailable offline:
+//! a seedable PRNG (`rng`), a miniature property-testing harness
+//! (`prop`), float helpers, and text-table rendering support.
+
+pub mod prop;
+pub mod rng;
+
+/// Relative-tolerance float comparison used across scheduler math.
+pub fn approx_eq(a: f64, b: f64, rel: f64) -> bool {
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() <= rel * scale
+}
+
+/// `a <= b` up to relative slack (for invariant checks on makespans).
+pub fn approx_le(a: f64, b: f64, rel: f64) -> bool {
+    a <= b + rel * a.abs().max(b.abs()).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basics() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-9));
+        assert!(approx_eq(0.0, 0.0, 1e-9));
+        assert!(approx_eq(1e9, 1e9 * (1.0 + 1e-10), 1e-9));
+    }
+
+    #[test]
+    fn approx_le_basics() {
+        assert!(approx_le(1.0, 2.0, 1e-9));
+        assert!(approx_le(1.0 + 1e-12, 1.0, 1e-9));
+        assert!(!approx_le(1.1, 1.0, 1e-9));
+    }
+}

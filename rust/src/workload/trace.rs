@@ -1,0 +1,112 @@
+//! Dependency-free text format for task trees.
+//!
+//! ```text
+//! # malltree tree v1
+//! <n>
+//! <parent_0> <len_0>
+//! ...
+//! ```
+//! `parent_i == i` marks the root. Deterministic float formatting keeps
+//! traces diff-stable across runs.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::TaskTree;
+
+/// Write `tree` to `path`.
+pub fn write_tree(tree: &TaskTree, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# malltree tree v1")?;
+    writeln!(w, "{}", tree.len())?;
+    for (i, node) in tree.nodes.iter().enumerate() {
+        let parent = node.parent.map(|p| p as usize).unwrap_or(i);
+        writeln!(w, "{} {:e}", parent, node.len)?;
+    }
+    Ok(())
+}
+
+/// Read a tree from `path`.
+pub fn read_tree(path: &Path) -> Result<TaskTree> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    parse_tree(std::io::BufReader::new(f))
+}
+
+/// Parse the trace format from any reader.
+pub fn parse_tree<R: BufRead>(reader: R) -> Result<TaskTree> {
+    let mut lines = reader
+        .lines()
+        .map(|l| l.map_err(anyhow::Error::from))
+        .filter(|l| match l {
+            Ok(s) => !s.trim().is_empty() && !s.trim_start().starts_with('#'),
+            Err(_) => true,
+        });
+    let n: usize = lines
+        .next()
+        .context("missing node count")??
+        .trim()
+        .parse()
+        .context("bad node count")?;
+    let mut parents = Vec::with_capacity(n);
+    let mut lens = Vec::with_capacity(n);
+    for i in 0..n {
+        let line = lines
+            .next()
+            .with_context(|| format!("missing node line {i}"))??;
+        let mut it = line.split_whitespace();
+        let parent: usize = it.next().context("missing parent")?.parse()?;
+        let len: f64 = it.next().context("missing length")?.parse()?;
+        parents.push(parent);
+        lens.push(len);
+    }
+    if lines.next().is_some() {
+        bail!("trailing data after {n} nodes");
+    }
+    TaskTree::from_parents(&parents, &lens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn round_trip() {
+        let t = TaskTree::from_parents(&[0, 0, 0, 1], &[1.5, 2.25, 0.001, 1e9]).unwrap();
+        let dir = std::env::temp_dir().join("malltree_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tree");
+        write_tree(&t, &path).unwrap();
+        let back = read_tree(&path).unwrap();
+        assert_eq!(back.len(), 4);
+        for (a, b) in t.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.parent, b.parent);
+            assert!((a.len - b.len).abs() <= 1e-12 * a.len.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn parses_with_comments() {
+        let text = "# comment\n3\n0 1.0\n# mid comment\n0 2.0\n1 3.0\n";
+        let t = parse_tree(Cursor::new(text)).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.nodes[2].parent, Some(1));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let text = "2\n0 1.0\n0 2.0\n0 3.0\n";
+        assert!(parse_tree(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let text = "3\n0 1.0\n";
+        assert!(parse_tree(Cursor::new(text)).is_err());
+    }
+}

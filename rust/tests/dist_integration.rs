@@ -1,0 +1,117 @@
+//! Integration: the §6 distributed algorithms on real assembly trees
+//! and the Theorem 7 reduction round-trip.
+
+use malltree::dist::{
+    het_schedule, homog_approx, independent_optimal, partition_reduction, subset_sum_exact,
+};
+use malltree::sparse::{gen, order, symbolic};
+use malltree::util::rng::Rng;
+
+#[test]
+fn homog_approx_on_assembly_trees_meets_bound_chain() {
+    // guarantee chain: makespan in [L_G/(2p)^α, (4/3)^α · L_G/p^α]
+    for k in [10usize, 16, 24] {
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let at = symbolic::analyze(&a, &perm, 4).unwrap();
+        for alpha in [0.6, 0.9] {
+            for p in [4.0, 16.0] {
+                let s = homog_approx(&at.tree, alpha, p);
+                assert!(
+                    s.makespan >= s.lower_bound * (1.0 - 1e-9),
+                    "k={k} α={alpha} p={p}: below lower bound"
+                );
+                let g = malltree::model::SpGraph::from_tree(&at.tree);
+                let single_node =
+                    malltree::sched::pm::PmSolution::solve(&g, alpha).total_len / p.powf(alpha);
+                let cap = (4.0f64 / 3.0).powf(alpha) * single_node;
+                assert!(
+                    s.makespan <= cap * (1.0 + 1e-9),
+                    "k={k} α={alpha} p={p}: {} > {cap}",
+                    s.makespan
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn theorem7_reduction_agrees_with_subset_sum() {
+    // The schedule decides Partition iff subset-sum can hit s/2.
+    let mut rng = Rng::new(99);
+    for _ in 0..50 {
+        let n = rng.range(4, 12);
+        let a: Vec<u64> = (0..n).map(|_| rng.range(1, 40) as u64).collect();
+        let s: u64 = a.iter().sum();
+        let alpha = rng.range_f64(0.5, 1.0);
+        let (lens, p, t) = partition_reduction(&a, alpha);
+        let (_, opt) = independent_optimal(&lens, alpha, p, p);
+        let schedule_says_yes = opt <= t + 1e-9;
+        let xs: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+        let (_, best) = subset_sum_exact(&xs, s as f64 / 2.0);
+        let subset_sum_says_yes = (best - s as f64 / 2.0).abs() < 1e-9 && s % 2 == 0;
+        assert_eq!(
+            schedule_says_yes, subset_sum_says_yes,
+            "a={a:?} α={alpha}: schedule {schedule_says_yes} vs subset-sum {subset_sum_says_yes}"
+        );
+    }
+}
+
+#[test]
+fn het_schedule_beats_single_node_when_balanced() {
+    // two similar nodes: using both must beat the best single node
+    let mut rng = Rng::new(7);
+    let lens: Vec<f64> = (0..14).map(|_| rng.log_uniform(1.0, 50.0)).collect();
+    let alpha = 0.9;
+    let (p, q) = (8.0, 7.0);
+    let s = het_schedule(&lens, alpha, p, q, 1.05);
+    let inv = 1.0 / alpha;
+    let single = lens.iter().map(|l| l.powf(inv)).sum::<f64>().powf(alpha) / p.powf(alpha);
+    assert!(
+        s.makespan < single,
+        "two nodes {} should beat one node {single}",
+        s.makespan
+    );
+}
+
+#[test]
+fn het_lambda_sweep_is_monotone_in_quality_bound() {
+    let mut rng = Rng::new(8);
+    let lens: Vec<f64> = (0..10).map(|_| rng.log_uniform(1.0, 80.0)).collect();
+    let (p, q) = (10.0, 3.0);
+    let alpha = 0.8;
+    let (_, opt) = independent_optimal(&lens, alpha, p, q);
+    for lambda in [3.0, 2.0, 1.5, 1.2, 1.05] {
+        let s = het_schedule(&lens, alpha, p, q, lambda);
+        assert!(
+            s.makespan <= lambda * opt * (1.0 + 1e-9),
+            "λ={lambda}: {} > {}",
+            s.makespan,
+            lambda * opt
+        );
+        // partition is a real partition
+        let mut seen = vec![false; lens.len()];
+        for &i in &s.on_p {
+            assert!(!seen[i], "duplicate task in partition");
+            seen[i] = true;
+        }
+    }
+}
+
+#[test]
+fn homog_chain_heavy_trees() {
+    // trees dominated by a chain stress the Lemma-9 normalization path
+    let n = 200;
+    let parents: Vec<usize> = (0..n).map(|i: usize| i.saturating_sub(1)).collect();
+    let mut rng = Rng::new(11);
+    let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(0.1, 10.0)).collect();
+    let tree = malltree::model::TaskTree::from_parents(&parents, &lens).unwrap();
+    let s = homog_approx(&tree, 0.9, 8.0);
+    // a pure chain cannot use the second node: optimal = Σ L_i / p^α
+    let expect: f64 = tree.total_work() / 8f64.powf(0.9);
+    assert!(
+        (s.makespan - expect).abs() < 1e-9 * expect,
+        "chain: {} vs {expect}",
+        s.makespan
+    );
+}

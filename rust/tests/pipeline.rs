@@ -1,0 +1,138 @@
+//! Integration: the full analysis → scheduling → simulation → execution
+//! pipeline over several problem classes, cross-checking every layer
+//! against every other.
+
+use malltree::exec::{execute_parallel, execute_serial};
+use malltree::frontal::{factorize, multifrontal::residual, RustBackend};
+use malltree::model::SpGraph;
+use malltree::sched::{
+    divisible::divisible_makespan_tree, pm::PmSolution, proportional_makespan, relative_distances,
+    PmSchedule, Profile,
+};
+use malltree::sim::des::{simulate, Policy};
+use malltree::sparse::{gen, order, symbolic};
+use malltree::util::approx_eq;
+
+fn problems() -> Vec<(String, malltree::sparse::AssemblyTree, malltree::sparse::CscMatrix)> {
+    let mut out = Vec::new();
+    for k in [8usize, 12, 16] {
+        let a = gen::grid_laplacian_2d(k);
+        let perm = order::nested_dissection_2d(k);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        out.push((format!("grid2d_{k}"), at, ap));
+    }
+    {
+        let a = gen::grid_laplacian_3d(4);
+        let perm = order::nested_dissection_3d(4);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        out.push(("grid3d_4".into(), at, ap));
+    }
+    {
+        let mut rng = malltree::util::rng::Rng::new(5);
+        let a = gen::random_spd(120, 4, &mut rng);
+        let perm = order::reverse_cuthill_mckee(&a);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        out.push(("random_spd_120".into(), at, ap));
+    }
+    out
+}
+
+#[test]
+fn schedule_validates_and_des_agrees_everywhere() {
+    for (name, at, _) in problems() {
+        for alpha in [0.6, 0.9, 1.0] {
+            for p in [4.0, 16.0] {
+                let profile = Profile::constant(p);
+                let pm = PmSchedule::for_tree(&at.tree, alpha, &profile);
+                pm.schedule
+                    .validate(&at.tree, alpha, &profile, 1e-7)
+                    .unwrap_or_else(|e| panic!("{name} α={alpha} p={p}: {e}"));
+                // DES replay of the PM policy agrees with the closed form
+                // (shares can dip below 1 → kinked DES may exceed it, so
+                // only assert when min share >= 1)
+                let g = SpGraph::from_tree(&at.tree);
+                let sol = PmSolution::solve(&g, alpha);
+                if sol.min_task_share(&g, p) >= 1.0 {
+                    let des = simulate(&at.tree, alpha, p, Policy::Pm);
+                    assert!(
+                        approx_eq(des.makespan, pm.schedule.makespan, 1e-6),
+                        "{name} α={alpha} p={p}: DES {} vs analytic {}",
+                        des.makespan,
+                        pm.schedule.makespan
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pm_dominates_baselines_on_real_trees() {
+    for (name, at, _) in problems() {
+        let g = SpGraph::from_tree(&at.tree);
+        for alpha in [0.5, 0.8, 0.95] {
+            let p = 40.0;
+            let pm = PmSolution::solve(&g, alpha).makespan_const(p);
+            let prop = proportional_makespan(&g, alpha, p);
+            let div = divisible_makespan_tree(&at.tree, alpha, p);
+            assert!(pm <= prop * (1.0 + 1e-9), "{name}: pm {pm} > prop {prop}");
+            assert!(pm <= div * (1.0 + 1e-9), "{name}: pm {pm} > div {div}");
+            // relative distances are the Figure 13 quantities: >= 0
+            let (d, pr) = relative_distances(&at.tree, alpha, p);
+            assert!(d >= -1e-6, "{name}: negative Divisible distance {d}");
+            assert!(pr >= -1e-6, "{name}: negative Proportional distance {pr}");
+        }
+    }
+}
+
+#[test]
+fn executors_match_reference_on_every_problem() {
+    for (name, at, ap) in problems() {
+        let pm = PmSchedule::for_tree(&at.tree, 0.9, &Profile::constant(8.0));
+        let reference = factorize(&at, &ap, &RustBackend).unwrap();
+        let (serial, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend).unwrap();
+        let (parallel, _) =
+            execute_parallel(&at, &ap, &pm.schedule, &RustBackend, 4).unwrap();
+        let r_ref = residual(&at, &ap, &reference);
+        let r_ser = residual(&at, &ap, &serial);
+        let r_par = residual(&at, &ap, &parallel);
+        assert!(r_ref < 1e-11, "{name}: reference residual {r_ref}");
+        assert!(r_ser < 1e-11, "{name}: serial residual {r_ser}");
+        assert!(r_par < 1e-11, "{name}: parallel residual {r_par}");
+    }
+}
+
+#[test]
+fn alpha_one_collapses_all_strategies() {
+    // with perfect speedup every work-conserving strategy matches
+    for (name, at, _) in problems() {
+        let g = SpGraph::from_tree(&at.tree);
+        let p = 16.0;
+        let pm = PmSolution::solve(&g, 1.0).makespan_const(p);
+        let div = divisible_makespan_tree(&at.tree, 1.0, p);
+        assert!(approx_eq(pm, div, 1e-9), "{name}: pm {pm} vs div {div}");
+    }
+}
+
+#[test]
+fn step_profiles_preserve_theorem6_on_real_trees() {
+    let (_, at, _) = problems().swap_remove(1);
+    let alpha = 0.85;
+    for profile in [
+        Profile::steps(&[(1e4, 4.0), (1e4, 16.0), (1.0, 8.0)]).unwrap(),
+        Profile::steps(&[(5e3, 40.0), (2e4, 2.0), (1.0, 40.0)]).unwrap(),
+    ] {
+        let pm = PmSchedule::for_tree(&at.tree, alpha, &profile);
+        pm.schedule.validate(&at.tree, alpha, &profile, 1e-6).unwrap();
+        let equiv = profile.completion(alpha, pm.solution.total_len);
+        assert!(
+            approx_eq(pm.schedule.makespan, equiv, 1e-9),
+            "makespan {} != equivalent-task completion {}",
+            pm.schedule.makespan,
+            equiv
+        );
+    }
+}

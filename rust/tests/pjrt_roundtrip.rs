@@ -1,0 +1,124 @@
+//! Integration: the PJRT runtime path — load AOT HLO-text artifacts,
+//! compile, execute, and compare against the pure-Rust oracle.
+//!
+//! Skips gracefully (with a message) when `artifacts/` has not been
+//! built (`make artifacts`); CI runs it after the Python AOT step.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use malltree::frontal::{dense, FrontBackend, PjrtBackend, RustBackend};
+use malltree::runtime::Runtime;
+use malltree::util::rng::Rng;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Runtime::cpu(dir).expect("pjrt runtime")))
+}
+
+fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+    let mut a = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m[i * n + k] * m[j * n + k];
+            }
+            a[i * n + j] = s / n as f64 + if i == j { 2.0 } else { 0.0 };
+        }
+    }
+    a
+}
+
+#[test]
+fn manifest_loads_and_variants_compile() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.manifest.specs.len() >= 8, "expected the full variant menu");
+    let compiled = rt.warm_up().expect("warm up");
+    assert_eq!(compiled, rt.manifest.specs.len());
+}
+
+#[test]
+fn partial_factor_matches_rust_backend_exact_sizes() {
+    let Some(rt) = runtime() else { return };
+    let backend = PjrtBackend::new(rt);
+    for (n, k) in [(32usize, 16usize), (64, 32), (128, 64)] {
+        let a = random_spd(n, (n + k) as u64);
+        let got = backend.partial(&a, n, k).expect("pjrt partial");
+        let want = RustBackend.partial(&a, n, k).unwrap();
+        let max_dev = |x: &[f64], y: &[f64]| {
+            x.iter()
+                .zip(y)
+                .map(|(a, b)| (a - b).abs() / a.abs().max(1.0))
+                .fold(0.0f64, f64::max)
+        };
+        assert!(max_dev(&got.l11, &want.l11) < 1e-4, "L11 deviates (n={n})");
+        assert!(max_dev(&got.l21, &want.l21) < 1e-4, "L21 deviates (n={n})");
+        assert!(max_dev(&got.schur, &want.schur) < 1e-4, "S deviates (n={n})");
+    }
+}
+
+#[test]
+fn padded_sizes_are_exact() {
+    // off-menu sizes exercise the identity-padding embedding
+    let Some(rt) = runtime() else { return };
+    let backend = PjrtBackend::new(rt);
+    for (n, k) in [(20usize, 7usize), (48, 16), (100, 40), (33, 17)] {
+        let a = random_spd(n, (3 * n + k) as u64);
+        let got = backend.partial(&a, n, k).expect("pjrt partial padded");
+        let want = RustBackend.partial(&a, n, k).unwrap();
+        let max_dev = got
+            .schur
+            .iter()
+            .zip(&want.schur)
+            .map(|(a, b)| (a - b).abs() / a.abs().max(1.0))
+            .fold(0.0f64, f64::max);
+        assert!(max_dev < 1e-4, "padded (n={n},k={k}) schur deviates {max_dev}");
+    }
+}
+
+#[test]
+fn full_factor_reconstructs() {
+    let Some(rt) = runtime() else { return };
+    let backend = PjrtBackend::new(rt);
+    for n in [24usize, 64, 100] {
+        let a = random_spd(n, n as u64);
+        let l = backend.full(&a, n).expect("pjrt full");
+        let llt = dense::matmul_nt(&l, &l, n, n, n);
+        let rel = a
+            .iter()
+            .zip(&llt)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(rel < 1e-3, "n={n}: reconstruction error {rel}");
+    }
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.specs[0].clone();
+    let k1 = rt.kernel(&spec).unwrap();
+    let k2 = rt.kernel(&spec).unwrap();
+    assert!(Arc::ptr_eq(&k1, &k2), "second lookup must hit the cache");
+}
+
+#[test]
+fn rejects_wrong_input_size() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt
+        .manifest
+        .specs
+        .iter()
+        .find(|s| s.name == "partial_n32_k16")
+        .unwrap()
+        .clone();
+    let kernel = rt.kernel(&spec).unwrap();
+    assert!(kernel.run_f32(&vec![0f32; 7]).is_err());
+}

@@ -1,0 +1,262 @@
+//! Cross-module property tests (the coordinator invariants), driven by
+//! the in-repo property harness over seeded random trees, profiles and
+//! parameters.
+
+use malltree::model::{SpGraph, SpNode, TaskTree};
+use malltree::sched::{
+    agreg, divisible::divisible_makespan_tree, pm::PmSolution, proportional_makespan,
+    PmSchedule, Profile,
+};
+use malltree::sim::des::{replay_schedule, simulate, Policy};
+use malltree::util::prop::{check, Config};
+use malltree::util::rng::Rng;
+
+fn random_tree(rng: &mut Rng, max_n: usize) -> TaskTree {
+    let n = rng.range(2, max_n);
+    let parents: Vec<usize> = (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+    let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(0.01, 1000.0)).collect();
+    TaskTree::from_parents(&parents, &lens).unwrap()
+}
+
+fn random_profile(rng: &mut Rng) -> Profile {
+    let steps = rng.range(1, 5);
+    let v: Vec<(f64, f64)> = (0..steps)
+        .map(|_| (rng.log_uniform(0.1, 100.0), rng.range_f64(1.0, 64.0)))
+        .collect();
+    Profile::steps(&v).unwrap()
+}
+
+/// L_G is sandwiched between the critical path and the total work.
+/// (Note: L_G is *not* monotone in α — two equal unit tasks give
+/// L_{1||2} = 2^α, increasing — because the p^α model is superlinear
+/// on sub-processor shares; that is exactly what §7's Agreg corrects.)
+#[test]
+fn prop_equiv_length_sandwich() {
+    check(
+        Config { cases: 120, seed: 1 },
+        "L_G sandwich",
+        |rng| random_tree(rng, 80),
+        |tree| {
+            let g = SpGraph::from_tree(tree);
+            for &alpha in &[0.3, 0.5, 0.7, 0.9, 1.0] {
+                let l = PmSolution::solve(&g, alpha).total_len;
+                if l < tree.critical_path() - 1e-6 {
+                    return Err(format!("L_G {l} below critical path"));
+                }
+                if l > tree.total_work() * (1.0 + 1e-9) {
+                    return Err(format!("L_G {l} above total work"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The materialized PM schedule is valid under random step profiles and
+/// its makespan equals the equivalent task's completion (Theorem 6).
+#[test]
+fn prop_pm_schedule_valid_under_step_profiles() {
+    check(
+        Config { cases: 80, seed: 2 },
+        "PM validity on step profiles",
+        |rng| {
+            let tree = random_tree(rng, 60);
+            let profile = random_profile(rng);
+            let alpha = rng.range_f64(0.4, 1.0);
+            (tree, profile, alpha)
+        },
+        |(tree, profile, alpha)| {
+            let pm = PmSchedule::for_tree(tree, *alpha, profile);
+            pm.schedule
+                .validate(tree, *alpha, profile, 1e-6)
+                .map_err(|e| e.to_string())?;
+            let equiv = profile.completion(*alpha, pm.solution.total_len);
+            if (pm.schedule.makespan - equiv).abs() > 1e-6 * equiv {
+                return Err(format!(
+                    "makespan {} vs equivalent completion {equiv}",
+                    pm.schedule.makespan
+                ));
+            }
+            // replay: every task accumulates exactly its length
+            let work = replay_schedule(tree, &pm.schedule, *alpha, profile);
+            for (i, node) in tree.nodes.iter().enumerate() {
+                if (work[i] - node.len).abs() > 1e-6 * node.len.max(1e-9) {
+                    return Err(format!("task {i}: work {} != {}", work[i], node.len));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// PM (pure model) lower-bounds the kink-evaluated baselines.
+#[test]
+fn prop_pm_is_optimal_vs_baselines() {
+    check(
+        Config { cases: 100, seed: 3 },
+        "PM <= baselines",
+        |rng| {
+            let tree = random_tree(rng, 60);
+            let alpha = rng.range_f64(0.4, 1.0);
+            let p = rng.range_f64(1.0, 64.0);
+            (tree, alpha, p)
+        },
+        |(tree, alpha, p)| {
+            let g = SpGraph::from_tree(tree);
+            let pm = PmSolution::solve(&g, *alpha).makespan_const(*p);
+            let prop = proportional_makespan(&g, *alpha, *p);
+            let div = divisible_makespan_tree(tree, *alpha, *p);
+            let des_eq = simulate(tree, *alpha, *p, Policy::EqualSplit).makespan;
+            for (name, other) in [("prop", prop), ("div", div), ("equal", des_eq)] {
+                if pm > other * (1.0 + 1e-7) {
+                    return Err(format!("PM {pm} beaten by {name} {other}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Agreg postcondition: every positive-length task gets >= 1 processor;
+/// the task multiset is preserved; makespan does not improve.
+#[test]
+fn prop_agreg_postconditions() {
+    check(
+        Config { cases: 80, seed: 4 },
+        "Agreg fixpoint",
+        |rng| {
+            let tree = random_tree(rng, 60);
+            let alpha = rng.range_f64(0.4, 1.0);
+            let p = rng.range_f64(1.0, 16.0);
+            (tree, alpha, p)
+        },
+        |(tree, alpha, p)| {
+            let g = SpGraph::from_tree(tree);
+            let before = PmSolution::solve(&g, *alpha);
+            let (out, stats) = agreg(&g, *alpha, *p);
+            if !stats.converged {
+                return Err("did not converge".into());
+            }
+            out.validate().map_err(|e| e.to_string())?;
+            let after = PmSolution::solve(&out, *alpha);
+            if after.min_task_share(&out, *p) < 1.0 - 1e-6 {
+                return Err(format!(
+                    "task below one processor: {}",
+                    after.min_task_share(&out, *p)
+                ));
+            }
+            if out.num_tasks() != tree.len() {
+                return Err("task count changed".into());
+            }
+            if (out.total_work() - tree.total_work()).abs() > 1e-6 * tree.total_work() {
+                return Err("total work changed".into());
+            }
+            if after.total_len < before.total_len * (1.0 - 1e-9) {
+                return Err("aggregation improved the makespan (impossible)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// DES and the analytic evaluators agree for the baseline policies.
+#[test]
+fn prop_des_matches_closed_forms() {
+    check(
+        Config { cases: 80, seed: 5 },
+        "DES == closed forms",
+        |rng| {
+            let tree = random_tree(rng, 50);
+            let alpha = rng.range_f64(0.4, 1.0);
+            let p = rng.range_f64(1.0, 64.0);
+            (tree, alpha, p)
+        },
+        |(tree, alpha, p)| {
+            let g = SpGraph::from_tree(tree);
+            let des_prop = simulate(tree, *alpha, *p, Policy::Proportional).makespan;
+            let cf_prop = proportional_makespan(&g, *alpha, *p);
+            if (des_prop - cf_prop).abs() > 1e-6 * cf_prop {
+                return Err(format!("prop: DES {des_prop} vs closed form {cf_prop}"));
+            }
+            let des_div = simulate(tree, *alpha, *p, Policy::Divisible).makespan;
+            let cf_div = divisible_makespan_tree(tree, *alpha, *p);
+            if (des_div - cf_div).abs() > 1e-6 * cf_div {
+                return Err(format!("div: DES {des_div} vs closed form {cf_div}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Parallel composition ratios: siblings' ratios sum to the parent's
+/// and are ordered by equivalent length (Lemma 4 structure).
+#[test]
+fn prop_ratio_flow_conservation() {
+    check(
+        Config { cases: 80, seed: 6 },
+        "ratio conservation",
+        |rng| (random_tree(rng, 60), rng.range_f64(0.4, 1.0)),
+        |(tree, alpha)| {
+            let g = SpGraph::from_tree(tree);
+            let sol = PmSolution::solve(&g, *alpha);
+            for &v in &g.topo_down() {
+                if let SpNode::Parallel(children) = &g.nodes[v as usize] {
+                    let sum: f64 = children.iter().map(|&c| sol.ratio[c as usize]).sum();
+                    if (sum - sol.ratio[v as usize]).abs() > 1e-9 {
+                        return Err(format!(
+                            "children ratios sum {sum} != parent {}",
+                            sol.ratio[v as usize]
+                        ));
+                    }
+                    // ordering: larger equivalent length ⇒ larger ratio
+                    let mut pairs: Vec<(f64, f64)> = children
+                        .iter()
+                        .map(|&c| (sol.equiv_len[c as usize], sol.ratio[c as usize]))
+                        .collect();
+                    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    for w in pairs.windows(2) {
+                        if w[0].1 > w[1].1 + 1e-12 {
+                            return Err("ratio not monotone in equivalent length".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Makespan monotonicity: more processors never hurt; scaling all
+/// lengths scales the makespan linearly.
+#[test]
+fn prop_makespan_scaling_laws() {
+    check(
+        Config { cases: 80, seed: 7 },
+        "makespan scaling",
+        |rng| (random_tree(rng, 60), rng.range_f64(0.4, 1.0)),
+        |(tree, alpha)| {
+            let g = SpGraph::from_tree(tree);
+            let sol = PmSolution::solve(&g, *alpha);
+            let m4 = sol.makespan_const(4.0);
+            let m8 = sol.makespan_const(8.0);
+            if m8 > m4 * (1.0 + 1e-12) {
+                return Err("more processors increased makespan".into());
+            }
+            // linear scaling in lengths
+            let scaled_lens: Vec<f64> = tree.nodes.iter().map(|n| n.len * 3.0).collect();
+            let parents: Vec<usize> = tree
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| n.parent.map(|p| p as usize).unwrap_or(i))
+                .collect();
+            let scaled = TaskTree::from_parents(&parents, &scaled_lens).unwrap();
+            let g2 = SpGraph::from_tree(&scaled);
+            let m_scaled = PmSolution::solve(&g2, *alpha).makespan_const(4.0);
+            if (m_scaled - 3.0 * m4).abs() > 1e-9 * m_scaled {
+                return Err(format!("scaling violated: {m_scaled} vs {}", 3.0 * m4));
+            }
+            Ok(())
+        },
+    );
+}
