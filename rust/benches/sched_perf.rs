@@ -1,29 +1,56 @@
 //! §Perf harness for the L3 coordinator hot paths: PM solve
-//! throughput, Agreg rewriting, DES event rate, and symbolic analysis —
-//! the numbers tracked in EXPERIMENTS.md §Perf.
+//! throughput (one-shot and workspace-reused), Agreg rewriting
+//! (incremental vs full-resolve), batch scheduling, DES event rate,
+//! and symbolic analysis — the numbers tracked in EXPERIMENTS.md §Perf
+//! and persisted machine-readably to `BENCH_sched.json` at the repo
+//! root (one object per operation: median seconds + throughput).
 //!
-//! Targets (DESIGN.md §8): PM solve >= 1M nodes/s; DES >= 1M events/s.
+//! Targets (DESIGN.md §8): PM solve >= 2 Mnodes/s on the 1M-task tree;
+//! incremental Agreg >= 3x the full-resolve baseline on the 100k-task
+//! stress case; DES >= 1M events/s.
+//!
+//! Scaling knobs: `MALLTREE_BENCH_SCALE` multiplies sizes,
+//! `MALLTREE_BENCH_DIV` divides them (CI smoke uses DIV=20).
 
 mod bench_util;
 
 use bench_util::{env_usize, header, median_time};
 use malltree::metrics::Table;
 use malltree::model::SpGraph;
-use malltree::sched::{agreg, pm::PmSolution};
-use malltree::sim::des::{simulate, Policy};
+use malltree::sched::batch::{effective_threads, schedule_batch, BatchConfig};
+use malltree::sched::{agreg, agreg_full_resolve, pm::PmSolution, SchedWorkspace};
+use malltree::sim::des::{simulate, simulate_with_workspace, Policy};
 use malltree::sparse::{gen, order, symbolic};
 use malltree::util::rng::Rng;
 use malltree::workload::{generator::random_tree, TreeClass};
 
+/// One emitted measurement: label → (size, median seconds, throughput
+/// in the unit named by `unit`).
+struct Row {
+    key: &'static str,
+    size: usize,
+    median_s: f64,
+    throughput: f64,
+    unit: &'static str,
+}
+
 fn main() {
     header("sched_perf", "coordinator hot-path throughput (§Perf)");
-    let scale = env_usize("SCALE", 1);
+    let scale = env_usize("SCALE", 1).max(1);
+    let div = env_usize("DIV", 1).max(1);
+    let sz = |n: usize| (n * scale / div).max(1_000);
 
     let mut table = Table::new(&["operation", "size", "median time", "throughput"]);
+    let mut rows: Vec<Row> = Vec::new();
 
-    // PM solve on a large tree
-    for &n in &[100_000usize, 1_000_000] {
-        let n = n * scale;
+    // PM solve on large trees: one-shot and workspace-reused. Keys are
+    // fixed per loop row (not derived from the scaled size) so the JSON
+    // never emits duplicates under extreme SCALE/DIV settings.
+    for &(base_n, key, ws_key) in &[
+        (100_000usize, "pm_solve_100k", "pm_solve_workspace_100k"),
+        (1_000_000, "pm_solve_1m", "pm_solve_workspace_1m"),
+    ] {
+        let n = sz(base_n);
         let mut rng = Rng::new(7);
         let tree = random_tree(TreeClass::Uniform, n, &mut rng);
         let g = SpGraph::from_tree(&tree);
@@ -37,11 +64,38 @@ fn main() {
             format!("{:.1} ms", t * 1e3),
             format!("{:.2} Mnodes/s", n as f64 / t / 1e6),
         ]);
+        rows.push(Row {
+            key,
+            size: n,
+            median_s: t,
+            throughput: n as f64 / t / 1e6,
+            unit: "Mnodes_per_s",
+        });
+
+        let mut ws = SchedWorkspace::new();
+        ws.solve(&g, 0.9); // warm the buffers: steady state is alloc-free
+        let t = median_time(5, || {
+            let s = ws.solve(&g, 0.9);
+            std::hint::black_box(s.total_len);
+        });
+        table.row(&[
+            "PM solve (workspace)".into(),
+            format!("{n} tasks"),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} Mnodes/s", n as f64 / t / 1e6),
+        ]);
+        rows.push(Row {
+            key: ws_key,
+            size: n,
+            median_s: t,
+            throughput: n as f64 / t / 1e6,
+            unit: "Mnodes_per_s",
+        });
     }
 
     // tree -> SP conversion
     {
-        let n = 1_000_000 * scale;
+        let n = sz(1_000_000);
         let mut rng = Rng::new(8);
         let tree = random_tree(TreeClass::Recent, n, &mut rng);
         let t = median_time(5, || {
@@ -54,30 +108,113 @@ fn main() {
             format!("{:.1} ms", t * 1e3),
             format!("{:.2} Mnodes/s", n as f64 / t / 1e6),
         ]);
+        rows.push(Row {
+            key: "tree_to_sp",
+            size: n,
+            median_s: t,
+            throughput: n as f64 / t / 1e6,
+            unit: "Mnodes_per_s",
+        });
     }
 
-    // Agreg to fixpoint on a stress tree (small p triggers rewrites)
+    // Agreg to fixpoint on a stress tree (small p triggers rewrites):
+    // incremental engine vs the full-resolve baseline
     {
-        let n = 100_000 * scale;
+        let n = sz(100_000);
         let mut rng = Rng::new(9);
         let tree = random_tree(TreeClass::Uniform, n, &mut rng);
         let g = SpGraph::from_tree(&tree);
-        let t = median_time(3, || {
+        let (_, stats) = agreg(&g, 0.9, 8.0);
+        let t_inc = median_time(3, || {
             let (out, stats) = agreg(&g, 0.9, 8.0);
             std::hint::black_box((out.nodes.len(), stats.iterations));
         });
-        let (_, stats) = agreg(&g, 0.9, 8.0);
+        let t_full = median_time(3, || {
+            let (out, stats) = agreg_full_resolve(&g, 0.9, 8.0);
+            std::hint::black_box((out.nodes.len(), stats.iterations));
+        });
         table.row(&[
-            format!("Agreg ({} iters)", stats.iterations),
+            format!("Agreg incremental ({} iters)", stats.iterations),
             format!("{n} tasks"),
-            format!("{:.1} ms", t * 1e3),
-            format!("{:.2} Mnodes/s", n as f64 / t / 1e6),
+            format!("{:.1} ms", t_inc * 1e3),
+            format!("{:.2} Mnodes/s", n as f64 / t_inc / 1e6),
         ]);
+        table.row(&[
+            "Agreg full-resolve".into(),
+            format!("{n} tasks"),
+            format!("{:.1} ms", t_full * 1e3),
+            format!("{:.2} Mnodes/s", n as f64 / t_full / 1e6),
+        ]);
+        table.row(&[
+            "Agreg speedup".into(),
+            format!("{n} tasks"),
+            "-".into(),
+            format!("{:.2}x", t_full / t_inc),
+        ]);
+        rows.push(Row {
+            key: "agreg_incremental_100k",
+            size: n,
+            median_s: t_inc,
+            throughput: n as f64 / t_inc / 1e6,
+            unit: "Mnodes_per_s",
+        });
+        rows.push(Row {
+            key: "agreg_full_resolve_100k",
+            size: n,
+            median_s: t_full,
+            throughput: n as f64 / t_full / 1e6,
+            unit: "Mnodes_per_s",
+        });
+        rows.push(Row {
+            key: "agreg_speedup",
+            size: n,
+            median_s: 0.0,
+            throughput: t_full / t_inc,
+            unit: "x_vs_full_resolve",
+        });
     }
 
-    // DES simulation event rate
+    // batch scheduling throughput (multi-tenant front-end)
     {
-        let n = 200_000 * scale;
+        let n_trees = (64 * scale / div).max(8);
+        // scale grows the tree *count*; per-tree size caps at 20k so the
+        // batch row measures many-tenant throughput, not one giant tree
+        let per_tree = sz(20_000).min(20_000);
+        let mut rng = Rng::new(11);
+        let classes = [
+            TreeClass::Uniform,
+            TreeClass::Recent,
+            TreeClass::Deep,
+            TreeClass::Binary,
+        ];
+        let trees: Vec<_> = (0..n_trees)
+            .map(|i| random_tree(classes[i % classes.len()], per_tree, &mut rng))
+            .collect();
+        let total_tasks: usize = trees.iter().map(|t| t.len()).sum();
+        let workers = effective_threads(0);
+        let cfg = BatchConfig { alpha: 0.9, p: 40.0, threads: 0, agreg: true };
+        let t = median_time(3, || {
+            let r = schedule_batch(&trees, &cfg);
+            std::hint::black_box(r.len());
+        });
+        table.row(&[
+            format!("batch ({workers} threads)"),
+            format!("{n_trees} trees / {total_tasks} tasks"),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} Mtasks/s", total_tasks as f64 / t / 1e6),
+        ]);
+        rows.push(Row {
+            key: "batch_schedule",
+            size: total_tasks,
+            median_s: t,
+            throughput: total_tasks as f64 / t / 1e6,
+            unit: "Mtasks_per_s",
+        });
+    }
+
+    // DES simulation event rate (plus the PM-policy workspace path)
+    {
+        let n = sz(200_000);
         let mut rng = Rng::new(10);
         let tree = random_tree(TreeClass::Uniform, n, &mut rng);
         let events = simulate(&tree, 0.9, 40.0, Policy::Proportional).events;
@@ -91,6 +228,33 @@ fn main() {
             format!("{:.1} ms", t * 1e3),
             format!("{:.2} Mevents/s", events as f64 / t / 1e6),
         ]);
+        rows.push(Row {
+            key: "des_proportional",
+            size: events,
+            median_s: t,
+            throughput: events as f64 / t / 1e6,
+            unit: "Mevents_per_s",
+        });
+
+        let mut ws = SchedWorkspace::new();
+        let pm_events = simulate_with_workspace(&tree, 0.9, 40.0, Policy::Pm, &mut ws).events;
+        let t = median_time(3, || {
+            let r = simulate_with_workspace(&tree, 0.9, 40.0, Policy::Pm, &mut ws);
+            std::hint::black_box(r.makespan);
+        });
+        table.row(&[
+            "DES (PM, workspace)".into(),
+            format!("{pm_events} events"),
+            format!("{:.1} ms", t * 1e3),
+            format!("{:.2} Mevents/s", pm_events as f64 / t / 1e6),
+        ]);
+        rows.push(Row {
+            key: "des_pm_workspace",
+            size: pm_events,
+            median_s: t,
+            throughput: pm_events as f64 / t / 1e6,
+            unit: "Mevents_per_s",
+        });
     }
 
     // symbolic analysis of a grid problem
@@ -108,7 +272,34 @@ fn main() {
             format!("{:.1} ms", t * 1e3),
             format!("{:.2} kcols/s", (k * k) as f64 / t / 1e3),
         ]);
+        rows.push(Row {
+            key: "symbolic_analyze",
+            size: k * k,
+            median_s: t,
+            throughput: (k * k) as f64 / t / 1e3,
+            unit: "kcols_per_s",
+        });
     }
 
     print!("{}", table.render());
+
+    // Machine-readable perf trajectory (BENCH_sched.json at repo root).
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"scale\": {scale},\n  \"div\": {div},\n"));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  \"{}\": {{\"size\": {}, \"median_s\": {:.6}, \"{}\": {:.4}}}{}\n",
+            r.key,
+            r.size,
+            r.median_s,
+            r.unit,
+            r.throughput,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_sched.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_sched.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_sched.json: {e}"),
+    }
 }

@@ -152,6 +152,78 @@ pub fn simulate(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-tenant batch scheduling: generate a corpus of independent
+/// trees and push them through the Agreg + PM pipeline on a thread
+/// pool, reporting throughput (the heavy-traffic scenario `sched_perf`
+/// tracks in EXPERIMENTS.md §Perf).
+pub fn batch(args: &mut Args) -> Result<()> {
+    use crate::sched::batch::{effective_threads, schedule_batch, BatchConfig};
+
+    let trees_n = args.get_usize("trees", 200)?;
+    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
+    let p = args.get_f64("p", 40.0)?;
+    let threads = args.get_usize("threads", 0)?;
+    let min_nodes = args.get_usize("min-nodes", 1_000)?;
+    let max_nodes = args.get_usize("max-nodes", 20_000)?;
+    let seed = args.get_usize("seed", 0xDA7A)? as u64;
+    let agreg_on = !args.has_flag("no-agreg");
+    if agreg_on && p < 1.0 {
+        bail!(
+            "--p {p} is below one processor: the Agreg >= 1-processor guarantee \
+             needs p >= 1 (pass --no-agreg to schedule raw pseudo-trees)"
+        );
+    }
+
+    let spec = DatasetSpec {
+        random_trees: trees_n,
+        min_nodes,
+        max_nodes,
+        include_analysis_trees: false,
+        seed,
+    };
+    let trees: Vec<TaskTree> = gen_dataset(&spec).into_iter().map(|(_, t)| t).collect();
+    let total_tasks: usize = trees.iter().map(|t| t.len()).sum();
+    let workers = effective_threads(threads);
+    println!(
+        "batch: {} trees / {} tasks, alpha={alpha}, p={p}, agreg={agreg_on}, {workers} workers",
+        trees.len(),
+        total_tasks
+    );
+
+    let mut table = Table::new(&["threads", "wall time", "trees/s", "Mtasks/s", "speedup"]);
+    let mut base_secs = None;
+    for t in [1usize, workers] {
+        let cfg = BatchConfig { alpha, p, threads: t, agreg: agreg_on };
+        let t0 = std::time::Instant::now();
+        let results = schedule_batch(&trees, &cfg);
+        let secs = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(results.len() == trees.len(), "lost batch results");
+        if agreg_on {
+            for r in &results {
+                anyhow::ensure!(
+                    r.min_share >= 1.0 - 1e-6,
+                    "tree {} kept a sub-processor share {}",
+                    r.index,
+                    r.min_share
+                );
+            }
+        }
+        let base = *base_secs.get_or_insert(secs);
+        table.row(&[
+            format!("{t}"),
+            format!("{:.3} s", secs),
+            format!("{:.0}", trees.len() as f64 / secs),
+            format!("{:.2}", total_tasks as f64 / secs / 1e6),
+            format!("{:.2}x", base / secs),
+        ]);
+        if workers == 1 {
+            break; // single-core machine: one row is the whole story
+        }
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
 pub fn factorize(args: &mut Args) -> Result<()> {
     use crate::exec::{execute_parallel, execute_serial};
     use crate::frontal::{multifrontal, PjrtBackend, RustBackend};

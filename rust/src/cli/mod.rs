@@ -3,6 +3,7 @@
 //! ```text
 //! malltree analyze   --grid2d 32 [--amalgamate 4]        symbolic analysis summary
 //! malltree schedule  --grid2d 32 --alpha 0.9 -p 40       makespans: PM vs baselines
+//! malltree batch     --trees 200 --threads 8 -p 40       multi-tenant batch throughput
 //! malltree simulate  --trees 100 --alpha 0.9 -p 40       Figure 13/14-style rows
 //! malltree factorize --grid2d 24 [--pjrt] [--workers 4]  numeric factorization + residual
 //! malltree kernelsim --kind cholesky --n 20000 --b 256   Figure 2-6-style T(p) curve
@@ -25,6 +26,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
     match cmd.as_str() {
         "analyze" => commands::analyze(&mut args),
         "schedule" => commands::schedule(&mut args),
+        "batch" => commands::batch(&mut args),
         "simulate" => commands::simulate(&mut args),
         "factorize" => commands::factorize(&mut args),
         "kernelsim" => commands::kernelsim(&mut args),
@@ -44,6 +46,7 @@ fn usage() -> String {
      commands:\n\
      \x20 analyze    symbolic analysis of a sparse problem (tree shape summary)\n\
      \x20 schedule   compare PM / Proportional / Divisible makespans on one tree\n\
+     \x20 batch      schedule a corpus of independent trees on a thread pool\n\
      \x20 simulate   Figure 13/14 rows over a generated tree corpus\n\
      \x20 factorize  end-to-end numeric multifrontal factorization\n\
      \x20 kernelsim  Figure 2-6 kernel timing curves + alpha fit\n\

@@ -8,6 +8,8 @@
 //! binary compositions) so that sibling sets are single `Parallel`
 //! nodes.
 
+use std::sync::OnceLock;
+
 use anyhow::{bail, Result};
 
 use super::tree::TaskTree;
@@ -28,21 +30,45 @@ pub enum SpNode {
 }
 
 /// Arena-allocated series-parallel graph.
+///
+/// The reachable topological order is computed once and cached
+/// ([`SpGraph::topo`]): the scheduler hot paths (`PmSolution::solve`,
+/// `task_spans`, `min_task_share`, the baselines, `Agreg`) all traverse
+/// the graph repeatedly, and materializing a fresh `Vec` per call
+/// dominated large-tree solves (§Perf in EXPERIMENTS.md). Mutating
+/// `nodes`/`root` directly after a traversal requires
+/// [`SpGraph::invalidate_topo`]; the in-crate mutators do this
+/// automatically.
 #[derive(Debug, Clone)]
 pub struct SpGraph {
     pub nodes: Vec<SpNode>,
     pub root: SpNodeId,
+    /// Cached root-first reachable order (`OnceLock` so shared
+    /// references across scheduler threads can fill it lazily).
+    topo: OnceLock<Box<[SpNodeId]>>,
 }
 
 impl SpGraph {
+    /// Build from an arena and a root id.
+    pub fn new(nodes: Vec<SpNode>, root: SpNodeId) -> Self {
+        SpGraph { nodes, root, topo: OnceLock::new() }
+    }
+
     /// Single-task graph.
     pub fn leaf(len: f64) -> Self {
-        SpGraph { nodes: vec![SpNode::Leaf { len, task: None }], root: 0 }
+        SpGraph::new(vec![SpNode::Leaf { len, task: None }], 0)
     }
 
     pub fn push(&mut self, node: SpNode) -> SpNodeId {
+        self.topo.take(); // arena changed: drop the cached order
         self.nodes.push(node);
         (self.nodes.len() - 1) as SpNodeId
+    }
+
+    /// Drop the cached topological order after direct mutation of
+    /// `nodes` / `root`.
+    pub fn invalidate_topo(&mut self) {
+        self.topo.take();
     }
 
     /// Series composition of two graphs (`G1 ; G2`).
@@ -76,7 +102,7 @@ impl SpGraph {
         } else {
             SpNode::Parallel(vec![r1, r2])
         });
-        SpGraph { nodes, root }
+        SpGraph::new(nodes, root)
     }
 
     /// Pseudo-tree conversion of a task tree (paper Figure 7),
@@ -85,7 +111,7 @@ impl SpGraph {
         let n = tree.len();
         // sp node id of each completed tree subtree
         let mut sub: Vec<SpNodeId> = vec![0; n];
-        let mut g = SpGraph { nodes: Vec::with_capacity(2 * n), root: 0 };
+        let mut g = SpGraph::new(Vec::with_capacity(2 * n), 0);
         for &v in &tree.topo_up() {
             let node = &tree.nodes[v as usize];
             let leaf = g.push(SpNode::Leaf { len: node.len, task: Some(v) });
@@ -118,7 +144,7 @@ impl SpGraph {
     /// Total sequential work of all leaves reachable from the root.
     pub fn total_work(&self) -> f64 {
         let mut sum = 0.0;
-        for &v in &self.topo_down() {
+        for &v in self.topo() {
             if let SpNode::Leaf { len, .. } = self.nodes[v as usize] {
                 sum += len;
             }
@@ -126,20 +152,33 @@ impl SpGraph {
         sum
     }
 
-    /// Root-first order over *reachable* nodes (parents before children).
-    pub fn topo_down(&self) -> Vec<SpNodeId> {
-        let mut order = Vec::with_capacity(self.nodes.len());
-        let mut stack = vec![self.root];
-        while let Some(v) = stack.pop() {
-            order.push(v);
-            match &self.nodes[v as usize] {
-                SpNode::Series(c) | SpNode::Parallel(c) => {
-                    stack.extend(c.iter().copied())
+    /// Cached root-first order over *reachable* nodes (parents before
+    /// children). Computed on first use, O(1) afterwards; iterate it in
+    /// reverse for a children-first order. This is the traversal every
+    /// scheduler pass uses — solvers must not allocate per call.
+    pub fn topo(&self) -> &[SpNodeId] {
+        self.topo
+            .get_or_init(|| {
+                let mut order = Vec::with_capacity(self.nodes.len());
+                let mut stack = vec![self.root];
+                while let Some(v) = stack.pop() {
+                    order.push(v);
+                    match &self.nodes[v as usize] {
+                        SpNode::Series(c) | SpNode::Parallel(c) => {
+                            stack.extend(c.iter().copied())
+                        }
+                        SpNode::Leaf { .. } => {}
+                    }
                 }
-                SpNode::Leaf { .. } => {}
-            }
-        }
-        order
+                order.into_boxed_slice()
+            })
+            .as_ref()
+    }
+
+    /// Root-first order as an owned `Vec` (compat wrapper over
+    /// [`SpGraph::topo`]; prefer `topo()` in hot paths).
+    pub fn topo_down(&self) -> Vec<SpNodeId> {
+        self.topo().to_vec()
     }
 
     /// Children-first order over reachable nodes.
@@ -201,9 +240,9 @@ impl SpGraph {
     /// Rebuild the arena keeping only reachable nodes and flattening
     /// nested same-kind compositions / singleton compositions.
     pub fn normalized(&self) -> SpGraph {
-        let mut out = SpGraph { nodes: Vec::with_capacity(self.nodes.len()), root: 0 };
+        let mut out = SpGraph::new(Vec::with_capacity(self.nodes.len()), 0);
         let mut map: Vec<Option<SpNodeId>> = vec![None; self.nodes.len()];
-        for &v in &self.topo_up() {
+        for &v in self.topo().iter().rev() {
             if map[v as usize].is_some() {
                 continue;
             }
@@ -330,14 +369,40 @@ mod tests {
 
     #[test]
     fn validate_rejects_empty_composition() {
-        let g = SpGraph { nodes: vec![SpNode::Parallel(vec![])], root: 0 };
+        let g = SpGraph::new(vec![SpNode::Parallel(vec![])], 0);
         assert!(g.validate().is_err());
     }
 
     #[test]
     fn validate_rejects_cycle() {
-        let g = SpGraph { nodes: vec![SpNode::Series(vec![0])], root: 0 };
+        let g = SpGraph::new(vec![SpNode::Series(vec![0])], 0);
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn topo_cache_survives_reads_and_invalidates_on_push() {
+        let t = sample_tree();
+        let g = SpGraph::from_tree(&t);
+        let first = g.topo().to_vec();
+        // repeated reads return the cached slice with identical content
+        assert_eq!(g.topo(), first.as_slice());
+        assert_eq!(g.topo_down(), first);
+        let mut rev = first.clone();
+        rev.reverse();
+        assert_eq!(g.topo_up(), rev);
+        // mutation invalidates: an orphan push keeps reachable order,
+        // attaching it via a fresh root must be observed
+        let mut g = g;
+        let orphan = g.push(SpNode::Leaf { len: 7.0, task: None });
+        assert_eq!(g.topo().to_vec(), first, "orphan is unreachable");
+        let old_root = g.root;
+        let new_root = g.push(SpNode::Series(vec![old_root, orphan]));
+        g.root = new_root;
+        g.invalidate_topo();
+        let now = g.topo();
+        assert_eq!(now.len(), first.len() + 2);
+        assert_eq!(now[0], new_root);
+        assert_eq!(g.total_work(), 15.0 + 7.0);
     }
 
     #[test]

@@ -1,22 +1,35 @@
 //! PJRT client wrapper and per-variant executable cache.
+//!
+//! The real implementation needs the external `xla` crate, which the
+//! offline build cannot fetch; it is therefore gated behind the `pjrt`
+//! cargo feature (enabling it additionally requires adding `xla` to
+//! `[dependencies]`). Without the feature this module compiles an
+//! API-compatible stub whose constructor reports the missing backend —
+//! all PJRT-path tests and commands skip or fail gracefully at runtime,
+//! and the rest of the crate (the scheduler stack, the pure-Rust
+//! numeric backend) is unaffected.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
 
 use super::artifact::{ArtifactSpec, Manifest};
 
 /// A compiled PJRT executable for one artifact variant.
 pub struct CompiledKernel {
     pub spec: ArtifactSpec,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl CompiledKernel {
     /// Execute on a single `f32[n, n]` input; returns the flattened
     /// output tuple as row-major `Vec<f32>` buffers.
+    #[cfg(feature = "pjrt")]
     pub fn run_f32(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
         let n = self.spec.n;
         anyhow::ensure!(
@@ -37,12 +50,29 @@ impl CompiledKernel {
         }
         Ok(out)
     }
+
+    /// Stub: unreachable in practice (the stub [`Runtime`] cannot be
+    /// constructed), kept so callers compile identically.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let n = self.spec.n;
+        anyhow::ensure!(
+            input.len() == n * n,
+            "variant {} expects {}x{} input, got {} elements",
+            self.spec.name,
+            n,
+            n,
+            input.len()
+        );
+        anyhow::bail!("malltree was built without the `pjrt` feature")
+    }
 }
 
 /// Owns the PJRT client and the executable cache (compile-once per
 /// variant, thread-safe interior mutability so the executor's worker
 /// crew can share one `Runtime`).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, std::sync::Arc<CompiledKernel>>>,
@@ -50,6 +80,7 @@ pub struct Runtime {
 
 impl Runtime {
     /// Create a CPU PJRT client and load the manifest from `dir`.
+    #[cfg(feature = "pjrt")]
     pub fn cpu(dir: &Path) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let manifest = Manifest::load(dir)?;
@@ -60,7 +91,21 @@ impl Runtime {
         })
     }
 
+    /// Stub constructor: always errors (the `xla` crate is absent).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu(dir: &Path) -> Result<Self> {
+        // Validate the manifest anyway so configuration errors surface
+        // even in stub builds.
+        let manifest = Manifest::load(dir)?;
+        let _ = &manifest;
+        anyhow::bail!(
+            "malltree was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the `xla` crate) to use the PJRT backend"
+        )
+    }
+
     /// Human-readable platform string (for logs / `--version`).
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         format!(
             "{} ({} devices)",
@@ -69,7 +114,14 @@ impl Runtime {
         )
     }
 
+    /// Stub platform string.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
     /// Get (compiling on first use) the executable for `spec`.
+    #[cfg(feature = "pjrt")]
     pub fn kernel(&self, spec: &ArtifactSpec) -> Result<std::sync::Arc<CompiledKernel>> {
         {
             let cache = self.cache.lock().unwrap();
@@ -93,6 +145,16 @@ impl Runtime {
         });
         let mut cache = self.cache.lock().unwrap();
         Ok(cache.entry(spec.name.clone()).or_insert(kernel).clone())
+    }
+
+    /// Stub: no compiler available.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn kernel(&self, spec: &ArtifactSpec) -> Result<std::sync::Arc<CompiledKernel>> {
+        let _ = self.cache.lock().unwrap();
+        anyhow::bail!(
+            "cannot compile variant {}: malltree was built without the `pjrt` feature",
+            spec.name
+        )
     }
 
     /// Eagerly compile every variant in the manifest (warm-up).

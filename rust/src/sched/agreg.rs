@@ -10,13 +10,39 @@
 //! new violations deeper down). The result is a series-parallel graph
 //! (the input tree's pseudo-tree rewritten), which is why the whole
 //! scheduling stack operates on [`SpGraph`].
+//!
+//! ## Incremental engine (§Perf)
+//!
+//! The reference implementation ([`agreg_full_resolve`]) re-solves the
+//! whole graph between rounds: O(n) per iteration, O(n·iterations)
+//! total — iterations grow with tree depth, so 100k-task trees paid
+//! tens of full solves. [`agreg`] keeps the *same round semantics*
+//! (every violation test uses the allocation of the round-start
+//! solution, so it reaches the identical fixpoint graph — up to
+//! measure-zero ULP ties against the serialization threshold, since
+//! later rounds accumulate aggregates with different float groupings)
+//! but maintains
+//! the equivalent lengths `L`, power-lengths `L^{1/α}` and a per-node
+//! lower bound `m(v)` on the minimum relative ratio inside the subtree
+//! incrementally:
+//!
+//! * a round is a descent from the root that only enters branches
+//!   whose `ratio · p · m < 1` — regions with no possible violation
+//!   are never visited;
+//! * after serializing a branch, only the path to the root is updated
+//!   (series sums and parallel power-sums by delta, `m` by min-in with
+//!   a rescale when a parallel denominator grows), O(depth) per move.
+//!
+//! Total cost O(n + moved·depth + Σ visited) instead of
+//! O(n·iterations); `sched_perf` tracks the speedup (≥ 3× on the
+//! 100k-task stress case is the EXPERIMENTS.md §Perf bar).
 
 use crate::model::{SpGraph, SpNode};
 
 use super::pm::PmSolution;
 
 /// Statistics from an [`agreg`] run.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct AgregStats {
     /// Rewriting iterations until fixpoint.
     pub iterations: usize,
@@ -31,12 +57,22 @@ pub struct AgregStats {
 const ONE_PROC: f64 = 1.0 - 1e-9;
 
 /// Apply the §7 aggregation to `g` for exponent `alpha` on `p`
-/// processors. Returns the rewritten graph and statistics.
+/// processors, with the incremental engine. Returns the rewritten
+/// graph and statistics.
 ///
 /// Postcondition (checked by tests): the PM schedule of the result
 /// allocates ≥ 1 processor to every task with positive length, provided
-/// `p >= 1`.
+/// `p >= 1`. The result is the same graph [`agreg_full_resolve`]
+/// produces (property-tested), at a fraction of the cost.
 pub fn agreg(g: &SpGraph, alpha: f64, p: f64) -> (SpGraph, AgregStats) {
+    let mut scratch = AgregScratch::default();
+    scratch.run(g, alpha, p)
+}
+
+/// Reference implementation: full `PmSolution` re-solve between
+/// rounds. Kept as the oracle the incremental engine is tested
+/// against, and as the baseline `sched_perf` measures speedups over.
+pub fn agreg_full_resolve(g: &SpGraph, alpha: f64, p: f64) -> (SpGraph, AgregStats) {
     let mut cur = g.normalized();
     let mut stats = AgregStats::default();
     // Each iteration strictly serializes at least one branch, and a
@@ -83,9 +119,340 @@ pub fn agreg(g: &SpGraph, alpha: f64, p: f64) -> (SpGraph, AgregStats) {
             break;
         }
         stats.moved += moved_this_round;
-        cur = SpGraph { nodes: nodes.unwrap(), root: cur.root }.normalized();
+        cur = SpGraph::new(nodes.unwrap(), cur.root).normalized();
     }
     (cur, stats)
+}
+
+/// DFS frame of the guided violation descent.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    v: u32,
+    /// Next child index to examine.
+    i: u32,
+    /// Contextual processor ratio of `v` in the round-start solution.
+    r: f64,
+}
+
+/// One pending rewrite, collected postorder so deeper rewrites are
+/// applied (and their aggregate updates propagated) before shallower
+/// ones in the same round.
+#[derive(Debug)]
+struct Rewrite {
+    v: u32,
+    keep: Vec<u32>,
+    mov: Vec<u32>,
+}
+
+/// Reusable state of the incremental `Agreg` engine (held by
+/// [`super::SchedWorkspace`] so repeated aggregations are
+/// allocation-free up to per-rewrite child lists).
+#[derive(Debug, Default)]
+pub(crate) struct AgregScratch {
+    nodes: Vec<SpNode>,
+    parent: Vec<u32>,
+    /// Equivalent length `L(v)`.
+    ltot: Vec<f64>,
+    /// `L(v)^{1/α}`; for `Parallel` nodes this equals the ratio
+    /// denominator `Σ_c pow(c)`.
+    pow: Vec<f64>,
+    /// Lower bound on `min_{leaf ℓ ∈ subtree(v)} ratio(ℓ)/ratio(v)`.
+    /// Exact after the initial pass; kept conservative (never above
+    /// the true minimum) across incremental updates, and refreshed for
+    /// every subtree the descent visits.
+    mrel: Vec<f64>,
+    topo: Vec<u32>,
+    frames: Vec<Frame>,
+    rewrites: Vec<Rewrite>,
+}
+
+const NO_PARENT: u32 = u32::MAX;
+
+impl AgregScratch {
+    /// Run the incremental aggregation (see module docs).
+    pub(crate) fn run(&mut self, g: &SpGraph, alpha: f64, p: f64) -> (SpGraph, AgregStats) {
+        let inv = 1.0 / alpha;
+        // The two `normalized()` calls (here and on exit) are the only
+        // per-run O(n) allocations besides the arena copy; all solver
+        // state below reuses the scratch buffers across runs.
+        let cur = g.normalized();
+        let root = cur.root;
+        self.nodes.clear();
+        self.nodes.extend(cur.nodes.iter().cloned());
+        let n = self.nodes.len();
+        self.parent.clear();
+        self.parent.resize(n, NO_PARENT);
+        self.ltot.clear();
+        self.ltot.resize(n, 0.0);
+        self.pow.clear();
+        self.pow.resize(n, 0.0);
+        self.mrel.clear();
+        self.mrel.resize(n, 1.0);
+        // Root-first order into the reusable buffer (a normalized graph
+        // has every arena node reachable).
+        self.topo.clear();
+        self.topo.reserve(n);
+        let mut stack: Vec<u32> = vec![root];
+        while let Some(v) = stack.pop() {
+            self.topo.push(v);
+            if let SpNode::Series(c) | SpNode::Parallel(c) = &self.nodes[v as usize] {
+                stack.extend(c.iter().copied());
+                for &x in c {
+                    self.parent[x as usize] = v;
+                }
+            }
+        }
+        // Bottom-up aggregates (identical arithmetic to the PM solve,
+        // so round-1 decisions are bit-for-bit the full-resolve ones).
+        for i in (0..self.topo.len()).rev() {
+            let v = self.topo[i];
+            self.recompute_node(v as usize, alpha, inv);
+        }
+
+        let mut stats = AgregStats::default();
+        let cap = n.max(64);
+        for _ in 0..cap {
+            stats.iterations += 1;
+            self.collect_violations(root, p);
+            if self.rewrites.is_empty() {
+                stats.converged = true;
+                break;
+            }
+            // Take the list so `self` stays borrowable inside the loop.
+            let rewrites = std::mem::take(&mut self.rewrites);
+            for rw in &rewrites {
+                stats.moved += rw.mov.len();
+                self.apply_rewrite(rw, alpha, inv);
+            }
+            self.rewrites = rewrites;
+            self.rewrites.clear();
+        }
+        let out = SpGraph::new(std::mem::take(&mut self.nodes), root).normalized();
+        (out, stats)
+    }
+
+    /// Exact aggregates of one node from its children's stored values.
+    fn recompute_node(&mut self, vi: usize, alpha: f64, inv: f64) {
+        match &self.nodes[vi] {
+            SpNode::Leaf { len, .. } => {
+                self.ltot[vi] = *len;
+                self.pow[vi] = len.powf(inv);
+                self.mrel[vi] = 1.0;
+            }
+            SpNode::Series(c) => {
+                let sum: f64 = c.iter().map(|&x| self.ltot[x as usize]).sum();
+                let m = c
+                    .iter()
+                    .map(|&x| self.mrel[x as usize])
+                    .fold(f64::INFINITY, f64::min);
+                self.ltot[vi] = sum;
+                self.pow[vi] = sum.powf(inv);
+                self.mrel[vi] = m;
+            }
+            SpNode::Parallel(c) => {
+                let denom: f64 = c.iter().map(|&x| self.pow[x as usize]).sum();
+                let k = c.len() as f64;
+                let m = c
+                    .iter()
+                    .map(|&x| {
+                        let f = if denom > 0.0 {
+                            self.pow[x as usize] / denom
+                        } else {
+                            1.0 / k
+                        };
+                        f * self.mrel[x as usize]
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                self.pow[vi] = denom;
+                self.ltot[vi] = denom.powf(alpha);
+                self.mrel[vi] = m;
+            }
+        }
+    }
+
+    /// Contextual ratio of child `c` of composite `vi` whose own ratio
+    /// is `r` (mirrors the PM top-down pass exactly).
+    fn child_ratio(&self, vi: usize, r: f64, c: u32) -> f64 {
+        match &self.nodes[vi] {
+            SpNode::Series(_) => r,
+            SpNode::Parallel(ch) => {
+                let denom = self.pow[vi];
+                if denom > 0.0 {
+                    r * self.pow[c as usize] / denom
+                } else {
+                    r / ch.len() as f64
+                }
+            }
+            SpNode::Leaf { .. } => unreachable!("leaves have no children"),
+        }
+    }
+
+    /// Guided descent from the root: visits only subtrees that may
+    /// contain a violation (`ratio·p·mrel < 1`), refreshes `mrel` for
+    /// everything visited, and records the round's rewrites postorder.
+    /// All ratio tests use the frozen round-start aggregates — the
+    /// updates happen afterwards in [`AgregScratch::apply_rewrite`] —
+    /// so the round semantics equal the full re-solve reference.
+    fn collect_violations(&mut self, root: u32, p: f64) {
+        self.frames.clear();
+        self.rewrites.clear();
+        if matches!(self.nodes[root as usize], SpNode::Leaf { .. }) {
+            return;
+        }
+        self.frames.push(Frame { v: root, i: 0, r: 1.0 });
+        while let Some(&Frame { v, i, r }) = self.frames.last() {
+            let vi = v as usize;
+            let nchildren = match &self.nodes[vi] {
+                SpNode::Series(c) | SpNode::Parallel(c) => c.len(),
+                SpNode::Leaf { .. } => unreachable!(),
+            };
+            if (i as usize) < nchildren {
+                self.frames.last_mut().unwrap().i += 1;
+                let c = match &self.nodes[vi] {
+                    SpNode::Series(ch) | SpNode::Parallel(ch) => ch[i as usize],
+                    SpNode::Leaf { .. } => unreachable!(),
+                };
+                let ci = c as usize;
+                if matches!(self.nodes[ci], SpNode::Leaf { .. }) {
+                    continue; // leaf violations are handled by the parent's exit scan
+                }
+                let rc = self.child_ratio(vi, r, c);
+                if rc * p * self.mrel[ci] < ONE_PROC {
+                    self.frames.push(Frame { v: c, i: 0, r: rc });
+                }
+            } else {
+                // exit: refresh mrel from (partly refreshed) children
+                // and, for parallel nodes, partition by the snapshot
+                // ratios
+                if let SpNode::Parallel(ch) = &self.nodes[vi] {
+                    let denom = self.pow[vi];
+                    let k = ch.len() as f64;
+                    let rc_of = |pw: f64| if denom > 0.0 { r * pw / denom } else { r / k };
+                    // common case: nothing violates — detect without
+                    // allocating the partition vectors
+                    let any = ch
+                        .iter()
+                        .any(|&c| rc_of(self.pow[c as usize]) * p < ONE_PROC);
+                    if any {
+                        let (keep, mov): (Vec<u32>, Vec<u32>) = ch
+                            .iter()
+                            .partition(|&&c| rc_of(self.pow[c as usize]) * p >= ONE_PROC);
+                        self.rewrites.push(Rewrite { v, keep, mov });
+                    }
+                }
+                // exact local refresh tightens any stale lower bound
+                self.refresh_mrel(vi);
+                self.frames.pop();
+            }
+        }
+    }
+
+    /// Recompute `mrel[vi]` from children (exact w.r.t. stored child
+    /// bounds; preserves the conservative invariant).
+    fn refresh_mrel(&mut self, vi: usize) {
+        let m = match &self.nodes[vi] {
+            SpNode::Leaf { .. } => 1.0,
+            SpNode::Series(c) => c
+                .iter()
+                .map(|&x| self.mrel[x as usize])
+                .fold(f64::INFINITY, f64::min),
+            SpNode::Parallel(c) => {
+                let denom = self.pow[vi];
+                let k = c.len() as f64;
+                c.iter()
+                    .map(|&x| {
+                        let f = if denom > 0.0 {
+                            self.pow[x as usize] / denom
+                        } else {
+                            1.0 / k
+                        };
+                        f * self.mrel[x as usize]
+                    })
+                    .fold(f64::INFINITY, f64::min)
+            }
+        };
+        self.mrel[vi] = m;
+    }
+
+    /// Serialize the violating branches of one parallel node and update
+    /// aggregates along the path to the root (O(children) local work +
+    /// O(depth) path walk).
+    fn apply_rewrite(&mut self, rw: &Rewrite, alpha: f64, inv: f64) {
+        let vi = rw.v as usize;
+        debug_assert!(matches!(self.nodes[vi], SpNode::Parallel(_)));
+        let old_l = self.ltot[vi];
+        let old_pow = self.pow[vi];
+
+        let mut seq: Vec<u32> = Vec::with_capacity(1 + rw.mov.len());
+        match rw.keep.len() {
+            0 => {}
+            1 => seq.push(rw.keep[0]),
+            _ => {
+                // new inner parallel over the kept branches
+                let np = self.nodes.len() as u32;
+                self.nodes.push(SpNode::Parallel(rw.keep.clone()));
+                self.parent.push(rw.v);
+                self.ltot.push(0.0);
+                self.pow.push(0.0);
+                self.mrel.push(1.0);
+                for &c in &rw.keep {
+                    self.parent[c as usize] = np;
+                }
+                self.recompute_node(np as usize, alpha, inv);
+                seq.push(np);
+            }
+        }
+        seq.extend(rw.mov.iter().copied());
+        self.nodes[vi] = SpNode::Series(seq);
+        // moved children keep `v` as parent; a single kept child does too
+        self.recompute_node(vi, alpha, inv);
+
+        // Walk the dirty path to the root with delta updates.
+        let mut child_l_old = old_l;
+        let mut child_l_new = self.ltot[vi];
+        let mut child_pow_old = old_pow;
+        let mut child_pow_new = self.pow[vi];
+        let mut child_m = self.mrel[vi];
+        let mut a = self.parent[vi];
+        while a != NO_PARENT {
+            let ai = a as usize;
+            let a_l_old = self.ltot[ai];
+            let a_pow_old = self.pow[ai];
+            let a_m_contrib;
+            match &self.nodes[ai] {
+                SpNode::Series(_) => {
+                    self.ltot[ai] = self.ltot[ai] - child_l_old + child_l_new;
+                    self.pow[ai] = self.ltot[ai].powf(inv);
+                    a_m_contrib = child_m;
+                }
+                SpNode::Parallel(ch) => {
+                    let denom_old = self.pow[ai];
+                    let denom_new = denom_old - child_pow_old + child_pow_new;
+                    self.pow[ai] = denom_new;
+                    self.ltot[ai] = denom_new.powf(alpha);
+                    // other children's relative contributions scale by
+                    // denom_old/denom_new when the denominator grows —
+                    // rescale the stored bound so it stays conservative
+                    if denom_new > denom_old && denom_new > 0.0 {
+                        self.mrel[ai] *= denom_old / denom_new;
+                    }
+                    a_m_contrib = if denom_new > 0.0 {
+                        child_pow_new / denom_new * child_m
+                    } else {
+                        child_m / ch.len() as f64
+                    };
+                }
+                SpNode::Leaf { .. } => unreachable!("leaf cannot be a parent"),
+            }
+            self.mrel[ai] = self.mrel[ai].min(a_m_contrib);
+            child_l_old = a_l_old;
+            child_l_new = self.ltot[ai];
+            child_pow_old = a_pow_old;
+            child_pow_new = self.pow[ai];
+            child_m = self.mrel[ai];
+            a = self.parent[ai];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +472,19 @@ mod tests {
         );
     }
 
+    /// Incremental and full-resolve engines must agree exactly: same
+    /// canonical arena (normalization is deterministic in structure),
+    /// same statistics.
+    fn assert_engines_agree(t: &TaskTree, alpha: f64, p: f64) {
+        let g = SpGraph::from_tree(t);
+        let (inc, si) = agreg(&g, alpha, p);
+        let (full, sf) = agreg_full_resolve(&g, alpha, p);
+        assert_eq!(si, sf, "stats diverge (alpha={alpha}, p={p})");
+        let (inc, full) = (inc.normalized(), full.normalized());
+        assert_eq!(inc.root, full.root, "roots diverge");
+        assert_eq!(inc.nodes, full.nodes, "graphs diverge (alpha={alpha}, p={p})");
+    }
+
     #[test]
     fn no_op_when_everything_fits() {
         let t = TaskTree::from_parents(&[0, 0, 0], &[4.0, 4.0, 4.0]).unwrap();
@@ -113,6 +493,7 @@ mod tests {
         assert!(stats.converged);
         assert_eq!(stats.moved, 0);
         assert_eq!(out.num_tasks(), 3);
+        assert_engines_agree(&t, 0.9, 16.0);
     }
 
     #[test]
@@ -131,6 +512,7 @@ mod tests {
         assert_min_share(&out, alpha, p);
         // no task lost
         assert_eq!(out.num_tasks(), 3);
+        assert_engines_agree(&t, alpha, p);
     }
 
     #[test]
@@ -145,6 +527,7 @@ mod tests {
         assert!(stats.converged);
         assert_min_share(&out, 0.9, 4.0);
         assert_eq!(out.num_tasks(), n);
+        assert_engines_agree(&t, 0.9, 4.0);
     }
 
     #[test]
@@ -159,6 +542,7 @@ mod tests {
         assert!((out.total_work() - g.total_work()).abs() < 1e-9);
         assert_eq!(out.num_tasks(), 9);
         out.validate().unwrap();
+        assert_engines_agree(&t, 0.7, 3.0);
     }
 
     #[test]
@@ -192,5 +576,35 @@ mod tests {
         assert!(stats.converged, "iterations={}", stats.iterations);
         assert_min_share(&out, 0.9, 8.0);
         assert_eq!(out.num_tasks(), n);
+    }
+
+    #[test]
+    fn zero_length_tasks_get_serialized_consistently() {
+        // zero-length leaves inside parallels always violate; both
+        // engines must serialize them the same way and converge
+        let t = TaskTree::from_parents(&[0, 0, 0, 0, 1, 1], &[1.0, 2.0, 0.0, 3.0, 0.0, 4.0])
+            .unwrap();
+        for p in [1.0, 2.0, 8.0] {
+            assert_engines_agree(&t, 0.9, p);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_runs_is_clean() {
+        let mut scratch = AgregScratch::default();
+        let trees = [
+            TaskTree::from_parents(&[0, 0, 0], &[1.0, 1e-6, 10.0]).unwrap(),
+            TaskTree::from_parents(&[0, 0, 0, 1, 1], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap(),
+            TaskTree::from_parents(&[0, 0], &[1.0, 2.0]).unwrap(),
+        ];
+        for t in &trees {
+            for p in [1.5, 4.0] {
+                let g = SpGraph::from_tree(t);
+                let (a, sa) = scratch.run(&g, 0.8, p);
+                let (b, sb) = agreg_full_resolve(&g, 0.8, p);
+                assert_eq!(sa, sb);
+                assert_eq!(a.normalized().nodes, b.normalized().nodes);
+            }
+        }
     }
 }

@@ -1,0 +1,201 @@
+//! Batch scheduling front-end: many independent trees, one thread pool.
+//!
+//! The multi-tenant scenario the ROADMAP targets — heavy traffic of
+//! scheduling requests, each an independent assembly tree — is
+//! embarrassingly parallel *across* trees, and the per-tree pipeline
+//! (pseudo-tree conversion → incremental `Agreg` → PM solve) reuses
+//! all solver state through a per-worker [`SchedWorkspace`] (the
+//! remaining per-tree allocations are the graph materializations
+//! themselves). [`schedule_batch`] claims trees off a shared atomic
+//! counter, so results are deterministic per tree regardless of thread
+//! count or claim order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::model::{SpGraph, TaskTree};
+
+use super::workspace::SchedWorkspace;
+
+/// Batch scheduling parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Speedup exponent α.
+    pub alpha: f64,
+    /// Processors per tree (each tenant schedules against its own
+    /// platform, as in the paper's per-tree evaluation).
+    pub p: f64,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Whether to run the `Agreg` rewriting before the PM solve (the
+    /// realistic ≥ 1-processor pipeline) or solve the raw pseudo-tree.
+    pub agreg: bool,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { alpha: crate::DEFAULT_ALPHA, p: 40.0, threads: 0, agreg: true }
+    }
+}
+
+/// Per-tree output of a batch run.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Index of the tree in the input slice.
+    pub index: usize,
+    /// Task count of the tree.
+    pub tasks: usize,
+    /// PM makespan (of the `Agreg`-rewritten graph when
+    /// `BatchConfig::agreg` is set) on `p` processors.
+    pub makespan: f64,
+    /// Minimum task share of the solved graph (≥ 1 − ε after `Agreg`).
+    pub min_share: f64,
+    /// `Agreg` iterations (0 when `agreg` is off).
+    pub agreg_iterations: usize,
+    /// `Agreg` branches serialized (0 when `agreg` is off).
+    pub agreg_moved: usize,
+}
+
+/// Resolve the worker count: `threads` if positive, else one per
+/// available core.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Schedule one tree with a caller-provided workspace (the per-worker
+/// inner loop of [`schedule_batch`], exposed for reuse and testing).
+pub fn schedule_one(
+    tree: &TaskTree,
+    cfg: &BatchConfig,
+    ws: &mut SchedWorkspace,
+    index: usize,
+) -> BatchResult {
+    let g = SpGraph::from_tree(tree);
+    let (graph, stats) = if cfg.agreg {
+        let (ag, stats) = ws.agreg(&g, cfg.alpha, cfg.p);
+        (ag, stats)
+    } else {
+        (g, Default::default())
+    };
+    let sol = ws.solve(&graph, cfg.alpha);
+    BatchResult {
+        index,
+        tasks: tree.len(),
+        makespan: sol.makespan_const(cfg.p),
+        min_share: sol.min_task_share(&graph, cfg.p),
+        agreg_iterations: stats.iterations,
+        agreg_moved: stats.moved,
+    }
+}
+
+/// Schedule every tree of `trees` concurrently; results are returned
+/// in input order. Deterministic: per-tree outputs are independent of
+/// the thread count.
+pub fn schedule_batch(trees: &[TaskTree], cfg: &BatchConfig) -> Vec<BatchResult> {
+    let workers = effective_threads(cfg.threads).min(trees.len().max(1));
+    if workers <= 1 {
+        let mut ws = SchedWorkspace::new();
+        return trees
+            .iter()
+            .enumerate()
+            .map(|(i, t)| schedule_one(t, cfg, &mut ws, i))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<BatchResult>> = Mutex::new(Vec::with_capacity(trees.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                // one workspace per worker: reused across every tree
+                // this worker claims — the steady state allocates
+                // nothing in the solver
+                let mut ws = SchedWorkspace::new();
+                let mut local: Vec<BatchResult> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= trees.len() {
+                        break;
+                    }
+                    local.push(schedule_one(&trees[i], cfg, &mut ws, i));
+                }
+                results.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|r| r.index);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{generator::random_tree, TreeClass};
+
+    fn corpus(n_trees: usize, size: usize) -> Vec<TaskTree> {
+        let mut rng = Rng::new(0xBA7C);
+        let classes = [
+            TreeClass::Uniform,
+            TreeClass::Recent,
+            TreeClass::Deep,
+            TreeClass::Binary,
+        ];
+        (0..n_trees)
+            .map(|i| random_tree(classes[i % classes.len()], size + i * 13, &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_sequential_and_is_thread_count_invariant() {
+        let trees = corpus(12, 120);
+        let base = BatchConfig { alpha: 0.9, p: 8.0, threads: 1, agreg: true };
+        let seq = schedule_batch(&trees, &base);
+        for threads in [2, 4, 7] {
+            let cfg = BatchConfig { threads, ..base };
+            let par = schedule_batch(&trees, &cfg);
+            assert_eq!(par.len(), seq.len());
+            for (a, b) in par.iter().zip(&seq) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.tasks, b.tasks);
+                assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+                assert_eq!(a.agreg_iterations, b.agreg_iterations);
+                assert_eq!(a.agreg_moved, b.agreg_moved);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_results_respect_agreg_postcondition() {
+        let trees = corpus(8, 150);
+        let cfg = BatchConfig { alpha: 0.85, p: 6.0, threads: 3, agreg: true };
+        for r in schedule_batch(&trees, &cfg) {
+            assert!(r.min_share >= 1.0 - 1e-6, "tree {}: {}", r.index, r.min_share);
+            assert!(r.makespan.is_finite() && r.makespan > 0.0);
+        }
+    }
+
+    #[test]
+    fn batch_without_agreg_matches_direct_solve() {
+        use crate::sched::pm::PmSolution;
+        let trees = corpus(5, 80);
+        let cfg = BatchConfig { alpha: 0.7, p: 16.0, threads: 2, agreg: false };
+        let got = schedule_batch(&trees, &cfg);
+        for (i, r) in got.iter().enumerate() {
+            let g = SpGraph::from_tree(&trees[i]);
+            let want = PmSolution::solve(&g, 0.7).makespan_const(16.0);
+            assert_eq!(r.makespan.to_bits(), want.to_bits());
+            assert_eq!(r.agreg_iterations, 0);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let out = schedule_batch(&[], &BatchConfig::default());
+        assert!(out.is_empty());
+    }
+}

@@ -8,24 +8,33 @@
 //! * [`divisible`] — the perfect-speedup baseline of §7 (sequentialize
 //!   the tree, give every task all processors);
 //! * [`agreg`] — the §7 `Agreg` rewriting that guarantees every task at
-//!   least one processor under PM;
+//!   least one processor under PM (incremental engine; the full
+//!   re-solve reference survives as `agreg_full_resolve`);
+//! * [`workspace`] — reusable solver buffers so repeated solves are
+//!   allocation-free (the hot-path contract of EXPERIMENTS.md §Perf);
+//! * [`batch`] — thread-pool scheduling of many independent trees (the
+//!   multi-tenant front-end);
 //! * [`profile`] — step-function processor profiles `p(t)`;
 //! * [`schedule`] — materialized schedules + validity checking (the
 //!   three conditions of §4).
 
 pub mod agreg;
+pub mod batch;
 pub mod divisible;
 pub mod pm;
 pub mod profile;
 pub mod proportional;
 pub mod schedule;
+pub mod workspace;
 
-pub use agreg::{agreg, AgregStats};
+pub use agreg::{agreg, agreg_full_resolve, AgregStats};
+pub use batch::{schedule_batch, BatchConfig, BatchResult};
 pub use divisible::divisible_makespan;
 pub use pm::{PmSchedule, PmSolution};
 pub use profile::Profile;
 pub use proportional::{proportional_makespan, proportional_shares};
 pub use schedule::{Schedule, ScheduleError, TaskSpan};
+pub use workspace::SchedWorkspace;
 
 /// One tree's relative distances (%) of the baselines to PM — the
 /// quantity plotted in Figures 13–14: `(Divisible%, Proportional%)`,

@@ -25,11 +25,16 @@ use crate::model::{SpGraph, SpNode, TaskTree};
 use super::profile::Profile;
 use super::schedule::{Schedule, TaskSpan};
 
-/// Full PM solution over an SP graph.
+/// Full PM solution over an SP graph, stored as SoA arrays indexed by
+/// SP node id so a [`super::SchedWorkspace`] can reuse the buffers
+/// across solves.
 #[derive(Debug, Clone)]
 pub struct PmSolution {
     /// Equivalent length per SP node (paper Definition 1).
     pub equiv_len: Vec<f64>,
+    /// `L^{1/α}` per SP node (the power-length the parallel split
+    /// ratios are proportional to; cached to avoid re-`powf`).
+    pub equiv_pow: Vec<f64>,
     /// Constant processor ratio per SP node (root = 1).
     pub ratio: Vec<f64>,
     /// θ-interval `[theta_start, theta_end)` per SP node.
@@ -40,6 +45,98 @@ pub struct PmSolution {
     alpha: f64,
 }
 
+/// Solve into `sol`'s existing buffers (clear + resize in place): the
+/// allocation-free core both [`PmSolution::solve`] and
+/// [`super::SchedWorkspace::solve`] drive. Traversals use the graph's
+/// cached topo order — no per-call `Vec` materialization.
+pub(crate) fn solve_into(g: &SpGraph, alpha: f64, sol: &mut PmSolution) {
+    assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1]");
+    let n = g.nodes.len();
+    let inv = 1.0 / alpha;
+    sol.alpha = alpha;
+    reset(&mut sol.equiv_len, n);
+    reset(&mut sol.equiv_pow, n);
+    reset(&mut sol.ratio, n);
+    reset(&mut sol.theta_start, n);
+    reset(&mut sol.theta_end, n);
+    let topo = g.topo();
+
+    // Bottom-up: equivalent lengths (children-first = reverse topo).
+    for &v in topo.iter().rev() {
+        let vi = v as usize;
+        match &g.nodes[vi] {
+            SpNode::Leaf { len, .. } => {
+                sol.equiv_len[vi] = *len;
+                sol.equiv_pow[vi] = len.powf(inv);
+            }
+            SpNode::Series(c) => {
+                let sum: f64 = c.iter().map(|&x| sol.equiv_len[x as usize]).sum();
+                sol.equiv_len[vi] = sum;
+                sol.equiv_pow[vi] = sum.powf(inv);
+            }
+            SpNode::Parallel(c) => {
+                let sum: f64 = c.iter().map(|&x| sol.equiv_pow[x as usize]).sum();
+                sol.equiv_pow[vi] = sum;
+                sol.equiv_len[vi] = sum.powf(alpha);
+            }
+        }
+    }
+    sol.total_len = sol.equiv_len[g.root as usize];
+
+    // Top-down: ratios and θ-intervals.
+    let ri = g.root as usize;
+    sol.ratio[ri] = 1.0;
+    sol.theta_start[ri] = 0.0;
+    sol.theta_end[ri] = sol.total_len; // ratio 1 ⇒ θ-measure = L_G
+    for &v in topo {
+        let vi = v as usize;
+        let (r, t0, t1) = (sol.ratio[vi], sol.theta_start[vi], sol.theta_end[vi]);
+        match &g.nodes[vi] {
+            SpNode::Leaf { .. } => {}
+            SpNode::Series(c) => {
+                // same ratio, consecutive θ-intervals, length-proportional
+                let mut acc = t0;
+                let scale = if sol.equiv_len[vi] > 0.0 {
+                    (t1 - t0) / sol.equiv_len[vi]
+                } else {
+                    0.0
+                };
+                for &x in c {
+                    let xi = x as usize;
+                    sol.ratio[xi] = r;
+                    sol.theta_start[xi] = acc;
+                    acc += sol.equiv_len[xi] * scale;
+                    sol.theta_end[xi] = acc;
+                }
+                // guard rounding: pin the last child to the parent end
+                if let Some(&last) = c.last() {
+                    sol.theta_end[last as usize] = t1;
+                }
+            }
+            SpNode::Parallel(c) => {
+                // same θ-interval, ratio ∝ L^{1/α} (Lemma 4); the
+                // denominator is the parent's cached power-length
+                let denom = sol.equiv_pow[vi];
+                for &x in c {
+                    let xi = x as usize;
+                    sol.ratio[xi] = if denom > 0.0 {
+                        r * sol.equiv_pow[xi] / denom
+                    } else {
+                        r / c.len() as f64
+                    };
+                    sol.theta_start[xi] = t0;
+                    sol.theta_end[xi] = t1;
+                }
+            }
+        }
+    }
+}
+
+fn reset(buf: &mut Vec<f64>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
 /// A PM schedule materialized against a concrete profile.
 #[derive(Debug, Clone)]
 pub struct PmSchedule {
@@ -48,90 +145,36 @@ pub struct PmSchedule {
 }
 
 impl PmSolution {
+    /// An empty solution whose buffers a workspace can reuse across
+    /// solves (`solve_into` resizes them in place).
+    pub(crate) fn empty(alpha: f64) -> PmSolution {
+        PmSolution {
+            equiv_len: Vec::new(),
+            equiv_pow: Vec::new(),
+            ratio: Vec::new(),
+            theta_start: Vec::new(),
+            theta_end: Vec::new(),
+            total_len: 0.0,
+            alpha,
+        }
+    }
+
+    /// The exponent this solution was solved for.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
     /// Solve the PM allocation for `g` with exponent `alpha`.
     ///
-    /// Cost: two linear passes; 2 `powf` per node (see §Perf notes in
-    /// EXPERIMENTS.md for why lengths are carried in both `L` and
-    /// `L^{1/α}` form).
+    /// Cost: two linear passes over the cached topo order; 2 `powf` per
+    /// node (see §Perf notes in EXPERIMENTS.md for why lengths are
+    /// carried in both `L` and `L^{1/α}` form). Allocates the five SoA
+    /// arrays once; reuse a [`super::SchedWorkspace`] to amortize even
+    /// that across repeated solves.
     pub fn solve(g: &SpGraph, alpha: f64) -> PmSolution {
-        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1]");
-        let n = g.nodes.len();
-        let inv = 1.0 / alpha;
-        let mut equiv_len = vec![0f64; n];
-        // L^{1/α}, cached to avoid re-powf in the ratio pass
-        let mut equiv_pow = vec![0f64; n];
-        let up = g.topo_up();
-        for &v in &up {
-            let vi = v as usize;
-            match &g.nodes[vi] {
-                SpNode::Leaf { len, .. } => {
-                    equiv_len[vi] = *len;
-                    equiv_pow[vi] = len.powf(inv);
-                }
-                SpNode::Series(c) => {
-                    let sum: f64 = c.iter().map(|&x| equiv_len[x as usize]).sum();
-                    equiv_len[vi] = sum;
-                    equiv_pow[vi] = sum.powf(inv);
-                }
-                SpNode::Parallel(c) => {
-                    let sum: f64 = c.iter().map(|&x| equiv_pow[x as usize]).sum();
-                    equiv_pow[vi] = sum;
-                    equiv_len[vi] = sum.powf(alpha);
-                }
-            }
-        }
-        let total_len = equiv_len[g.root as usize];
-
-        // Top-down: ratios and θ-intervals.
-        let mut ratio = vec![0f64; n];
-        let mut theta_start = vec![0f64; n];
-        let mut theta_end = vec![0f64; n];
-        let ri = g.root as usize;
-        ratio[ri] = 1.0;
-        theta_start[ri] = 0.0;
-        theta_end[ri] = total_len; // ratio 1 ⇒ θ-measure = L_G
-        for &v in g.topo_down().iter() {
-            let vi = v as usize;
-            let (r, t0, t1) = (ratio[vi], theta_start[vi], theta_end[vi]);
-            match &g.nodes[vi] {
-                SpNode::Leaf { .. } => {}
-                SpNode::Series(c) => {
-                    // same ratio, consecutive θ-intervals, length-proportional
-                    let mut acc = t0;
-                    let scale = if equiv_len[vi] > 0.0 {
-                        (t1 - t0) / equiv_len[vi]
-                    } else {
-                        0.0
-                    };
-                    for &x in c {
-                        let xi = x as usize;
-                        ratio[xi] = r;
-                        theta_start[xi] = acc;
-                        acc += equiv_len[xi] * scale;
-                        theta_end[xi] = acc;
-                    }
-                    // guard rounding: pin the last child to the parent end
-                    if let Some(&last) = c.last() {
-                        theta_end[last as usize] = t1;
-                    }
-                }
-                SpNode::Parallel(c) => {
-                    // same θ-interval, ratio ∝ L^{1/α} (Lemma 4)
-                    let denom: f64 = c.iter().map(|&x| equiv_pow[x as usize]).sum();
-                    for &x in c {
-                        let xi = x as usize;
-                        ratio[xi] = if denom > 0.0 {
-                            r * equiv_pow[xi] / denom
-                        } else {
-                            r / c.len() as f64
-                        };
-                        theta_start[xi] = t0;
-                        theta_end[xi] = t1;
-                    }
-                }
-            }
-        }
-        PmSolution { equiv_len, ratio, theta_start, theta_end, total_len, alpha }
+        let mut sol = PmSolution::empty(alpha);
+        solve_into(g, alpha, &mut sol);
+        sol
     }
 
     /// Makespan under `profile` (Theorem 6: the graph behaves as one
@@ -149,7 +192,17 @@ impl PmSolution {
     /// wall-clock time; each task keeps its constant ratio.
     pub fn task_spans(&self, g: &SpGraph, profile: &Profile) -> Vec<TaskSpan> {
         let mut spans = Vec::with_capacity(g.num_tasks());
-        for &v in &g.topo_down() {
+        self.task_spans_into(g, profile, &mut spans);
+        spans
+    }
+
+    /// [`PmSolution::task_spans`] into a caller-owned buffer (cleared
+    /// first) — the workspace path; iterates the cached topo order, so
+    /// repeated materializations are allocation-free once the buffer
+    /// has grown to the task count.
+    pub fn task_spans_into(&self, g: &SpGraph, profile: &Profile, spans: &mut Vec<TaskSpan>) {
+        spans.clear();
+        for &v in g.topo() {
             let vi = v as usize;
             if let SpNode::Leaf { task, .. } = g.nodes[vi] {
                 spans.push(TaskSpan {
@@ -160,14 +213,14 @@ impl PmSolution {
                 });
             }
         }
-        spans
     }
 
     /// Minimum processor share any task receives under a constant
-    /// profile `p` (the quantity `Agreg` pushes above one).
+    /// profile `p` (the quantity `Agreg` pushes above one). Zero
+    /// allocations: walks the cached topo order.
     pub fn min_task_share(&self, g: &SpGraph, p: f64) -> f64 {
         let mut min = f64::INFINITY;
-        for &v in &g.topo_down() {
+        for &v in g.topo() {
             let vi = v as usize;
             if matches!(g.nodes[vi], SpNode::Leaf { len, .. } if len > 0.0) {
                 min = min.min(self.ratio[vi] * p);
@@ -372,6 +425,75 @@ mod tests {
         ));
         // (1² + 4² + 9²)^0.5 = √98
         assert!(approx_eq(parallel_equiv_len(&lens, a), 98f64.sqrt(), 1e-12));
+    }
+
+    #[test]
+    fn series_theta_end_rounding_guard_pins_last_child() {
+        // A series nested under a parallel receives a sub-interval, so
+        // its children's θ-ends are produced by `acc += len * scale`
+        // with a non-trivial scale — real rounding territory (0.1 is
+        // not representable). The guard must pin the last child's end
+        // to the parent's end *exactly* (bitwise): a sibling that
+        // starts at `theta_end[series]` must never observe a θ-gap.
+        let mut chain = SpGraph::leaf(0.1);
+        for _ in 0..20 {
+            chain = SpGraph::series(chain, SpGraph::leaf(0.1));
+        }
+        let g = SpGraph::parallel(chain, SpGraph::leaf(1.0)).normalized();
+        let s = PmSolution::solve(&g, 0.7);
+        // locate the flattened series node
+        let (si, kids) = g
+            .nodes
+            .iter()
+            .enumerate()
+            .find_map(|(i, n)| match n {
+                SpNode::Series(c) => Some((i, c.clone())),
+                _ => None,
+            })
+            .expect("series survives normalization");
+        assert_eq!(kids.len(), 21);
+        let last = *kids.last().unwrap() as usize;
+        assert_eq!(
+            s.theta_end[last].to_bits(),
+            s.theta_end[si].to_bits(),
+            "last child θ-end must be pinned to the parent θ-end"
+        );
+        // interior children chain consecutively (no gaps, no overlaps)
+        for w in kids.windows(2) {
+            assert_eq!(
+                s.theta_end[w[0] as usize].to_bits(),
+                s.theta_start[w[1] as usize].to_bits()
+            );
+        }
+        // the pin only absorbs rounding noise, never real mass
+        let naive = s.theta_start[si]
+            + kids
+                .iter()
+                .map(|&k| s.equiv_len[k as usize])
+                .sum::<f64>()
+                * (s.theta_end[si] - s.theta_start[si])
+                / s.equiv_len[si];
+        assert!((naive - s.theta_end[si]).abs() <= 1e-9 * s.theta_end[si].abs());
+    }
+
+    #[test]
+    fn solve_into_reuses_buffers_and_matches_fresh_solve() {
+        let mut sol = PmSolution::empty(0.9);
+        for (n, alpha) in [(50usize, 0.9), (200, 0.5), (10, 1.0), (120, 0.7)] {
+            let parents: Vec<usize> =
+                (0..n).map(|i| if i == 0 { 0 } else { (i - 1) / 3 }).collect();
+            let lens: Vec<f64> = (0..n).map(|i| 0.5 + (i % 11) as f64).collect();
+            let tree = TaskTree::from_parents(&parents, &lens).unwrap();
+            let g = SpGraph::from_tree(&tree);
+            super::solve_into(&g, alpha, &mut sol);
+            let fresh = PmSolution::solve(&g, alpha);
+            assert_eq!(sol.total_len.to_bits(), fresh.total_len.to_bits());
+            assert_eq!(sol.ratio, fresh.ratio);
+            assert_eq!(sol.theta_start, fresh.theta_start);
+            assert_eq!(sol.theta_end, fresh.theta_end);
+            assert_eq!(sol.equiv_len, fresh.equiv_len);
+            assert_eq!(sol.equiv_pow, fresh.equiv_pow);
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub fn proportional_shares(g: &SpGraph, p: f64) -> Vec<f64> {
     let n = g.nodes.len();
     // bottom-up total work
     let mut work = vec![0f64; n];
-    for &v in &g.topo_up() {
+    for &v in g.topo().iter().rev() {
         let vi = v as usize;
         work[vi] = match &g.nodes[vi] {
             SpNode::Leaf { len, .. } => *len,
@@ -36,7 +36,7 @@ pub fn proportional_shares(g: &SpGraph, p: f64) -> Vec<f64> {
     // top-down shares
     let mut share = vec![0f64; n];
     share[g.root as usize] = p;
-    for &v in &g.topo_down() {
+    for &v in g.topo() {
         let vi = v as usize;
         match &g.nodes[vi] {
             SpNode::Leaf { .. } => {}
@@ -67,7 +67,7 @@ pub fn proportional_makespan(g: &SpGraph, alpha: f64, p: f64) -> f64 {
     let share = proportional_shares(g, p);
     let n = g.nodes.len();
     let mut dur = vec![0f64; n];
-    for &v in &g.topo_up() {
+    for &v in g.topo().iter().rev() {
         let vi = v as usize;
         dur[vi] = match &g.nodes[vi] {
             SpNode::Leaf { len, .. } => {
@@ -93,7 +93,7 @@ pub fn proportional_schedule(g: &SpGraph, alpha: f64, p: f64) -> Schedule {
     let share = proportional_shares(g, p);
     let n = g.nodes.len();
     let mut dur = vec![0f64; n];
-    for &v in &g.topo_up() {
+    for &v in g.topo().iter().rev() {
         let vi = v as usize;
         dur[vi] = match &g.nodes[vi] {
             SpNode::Leaf { len, .. } => {
@@ -111,7 +111,7 @@ pub fn proportional_schedule(g: &SpGraph, alpha: f64, p: f64) -> Schedule {
         };
     }
     let mut start = vec![0f64; n];
-    for &v in &g.topo_down() {
+    for &v in g.topo() {
         let vi = v as usize;
         match &g.nodes[vi] {
             SpNode::Leaf { .. } => {}
@@ -130,7 +130,7 @@ pub fn proportional_schedule(g: &SpGraph, alpha: f64, p: f64) -> Schedule {
         }
     }
     let mut spans = Vec::with_capacity(g.num_tasks());
-    for &v in &g.topo_down() {
+    for &v in g.topo() {
         let vi = v as usize;
         if let SpNode::Leaf { task, .. } = g.nodes[vi] {
             spans.push(TaskSpan {

@@ -7,7 +7,6 @@
 //! tasks, and precedence.
 
 use anyhow::Result;
-use thiserror::Error;
 
 use crate::model::TaskTree;
 
@@ -36,17 +35,37 @@ pub struct Schedule {
 }
 
 /// Violations detected by [`Schedule::validate`].
-#[derive(Debug, Error)]
+///
+/// `Display`/`Error` are hand-implemented (the offline crate set has no
+/// `thiserror`); messages match the original derive attributes.
+#[derive(Debug)]
 pub enum ScheduleError {
-    #[error("task {task}: resource constraint violated at t={t}: total ratio {total}")]
     Resource { task: u32, t: f64, total: f64 },
-    #[error("task {task}: work {done} != length {len}")]
     Work { task: u32, done: f64, len: f64 },
-    #[error("task {task} starts at {start} before child {child} finishes at {finish}")]
     Precedence { task: u32, start: f64, child: u32, finish: f64 },
-    #[error("task {task} missing from schedule")]
     Missing { task: u32 },
 }
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::Resource { task, t, total } => write!(
+                f,
+                "task {task}: resource constraint violated at t={t}: total ratio {total}"
+            ),
+            ScheduleError::Work { task, done, len } => {
+                write!(f, "task {task}: work {done} != length {len}")
+            }
+            ScheduleError::Precedence { task, start, child, finish } => write!(
+                f,
+                "task {task} starts at {start} before child {child} finishes at {finish}"
+            ),
+            ScheduleError::Missing { task } => write!(f, "task {task} missing from schedule"),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 impl Schedule {
     pub fn new(mut spans: Vec<TaskSpan>) -> Self {

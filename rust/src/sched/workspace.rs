@@ -1,0 +1,150 @@
+//! Reusable scheduler workspace: allocation-free repeated solves.
+//!
+//! The scheduler core is called in tight loops everywhere above it —
+//! `Agreg` fixpoints, α sweeps, DES cross-checks, the batch front-end,
+//! the benches — and a fresh [`PmSolution`] allocates five O(n) arrays
+//! per call. [`SchedWorkspace`] owns those arrays (plus the span buffer
+//! and the incremental `Agreg` scratch) and resizes them in place, so
+//! repeated *solves* and span materializations are allocation-free in
+//! the steady state (§Perf in EXPERIMENTS.md). `agreg` reuses its
+//! scratch arrays the same way, but producing the rewritten graph
+//! itself still costs the input copy and two `normalized()` passes —
+//! graph materialization, not solver state.
+
+use crate::model::SpGraph;
+
+use super::agreg::{AgregScratch, AgregStats};
+use super::pm::{self, PmSolution};
+use super::profile::Profile;
+use super::schedule::TaskSpan;
+
+/// Reusable buffers for the PM solver, span materialization and the
+/// incremental `Agreg` engine. Create once per worker thread; every
+/// method reuses the grown capacity of previous calls.
+#[derive(Debug)]
+pub struct SchedWorkspace {
+    sol: PmSolution,
+    spans: Vec<TaskSpan>,
+    agreg: AgregScratch,
+}
+
+impl Default for SchedWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SchedWorkspace {
+    pub fn new() -> Self {
+        SchedWorkspace {
+            sol: PmSolution::empty(crate::DEFAULT_ALPHA),
+            spans: Vec::new(),
+            agreg: AgregScratch::default(),
+        }
+    }
+
+    /// Solve the PM allocation for `g` into the reused buffers. The
+    /// returned reference is valid until the next workspace call;
+    /// results are bit-identical to [`PmSolution::solve`].
+    pub fn solve(&mut self, g: &SpGraph, alpha: f64) -> &PmSolution {
+        pm::solve_into(g, alpha, &mut self.sol);
+        &self.sol
+    }
+
+    /// The solution of the most recent [`SchedWorkspace::solve`].
+    pub fn solution(&self) -> &PmSolution {
+        &self.sol
+    }
+
+    /// Makespan of `g` under a constant profile `p` (solve + closed
+    /// form, no allocations on reuse).
+    pub fn pm_makespan_const(&mut self, g: &SpGraph, alpha: f64, p: f64) -> f64 {
+        self.solve(g, alpha).makespan_const(p)
+    }
+
+    /// Solve and materialize per-task spans under `profile` into the
+    /// reused span buffer.
+    pub fn task_spans(&mut self, g: &SpGraph, alpha: f64, profile: &Profile) -> &[TaskSpan] {
+        pm::solve_into(g, alpha, &mut self.sol);
+        self.sol.task_spans_into(g, profile, &mut self.spans);
+        &self.spans
+    }
+
+    /// Incremental `Agreg` (same fixpoint as
+    /// [`super::agreg_full_resolve`]) reusing this workspace's scratch
+    /// arrays across calls.
+    pub fn agreg(&mut self, g: &SpGraph, alpha: f64, p: f64) -> (SpGraph, AgregStats) {
+        self.agreg.run(g, alpha, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TaskTree;
+    use crate::sched::{agreg, Profile};
+    use crate::util::approx_eq;
+
+    fn tree(seed: usize) -> TaskTree {
+        let n = 40 + seed * 17;
+        let parents: Vec<usize> =
+            (0..n).map(|i| if i == 0 { 0 } else { (i - 1) / (2 + seed % 3) }).collect();
+        let lens: Vec<f64> = (0..n).map(|i| 0.25 + ((i * 7 + seed) % 13) as f64).collect();
+        TaskTree::from_parents(&parents, &lens).unwrap()
+    }
+
+    #[test]
+    fn workspace_solve_matches_one_shot_across_reuse() {
+        let mut ws = SchedWorkspace::new();
+        for seed in 0..6 {
+            let g = SpGraph::from_tree(&tree(seed));
+            let alpha = 0.5 + 0.1 * (seed % 5) as f64;
+            let got = ws.solve(&g, alpha);
+            let want = PmSolution::solve(&g, alpha);
+            assert_eq!(got.total_len.to_bits(), want.total_len.to_bits());
+            assert_eq!(got.ratio, want.ratio);
+            assert_eq!(got.theta_end, want.theta_end);
+        }
+    }
+
+    #[test]
+    fn workspace_spans_match_solution_spans() {
+        let mut ws = SchedWorkspace::new();
+        let profile = Profile::constant(12.0);
+        for seed in 0..4 {
+            let g = SpGraph::from_tree(&tree(seed));
+            let spans = ws.task_spans(&g, 0.85, &profile).to_vec();
+            let want = PmSolution::solve(&g, 0.85).task_spans(&g, &profile);
+            assert_eq!(spans.len(), want.len());
+            for (a, b) in spans.iter().zip(&want) {
+                assert_eq!(a.task, b.task);
+                assert_eq!(a.start.to_bits(), b.start.to_bits());
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+                assert_eq!(a.ratio.to_bits(), b.ratio.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_agreg_matches_free_function() {
+        let mut ws = SchedWorkspace::new();
+        for seed in 0..4 {
+            let g = SpGraph::from_tree(&tree(seed));
+            let (a, sa) = ws.agreg(&g, 0.9, 4.0);
+            let (b, sb) = agreg(&g, 0.9, 4.0);
+            assert_eq!(sa, sb);
+            assert_eq!(a.normalized().nodes, b.normalized().nodes);
+            // and the aggregated graph satisfies the postcondition
+            let min = ws.solve(&a, 0.9).min_task_share(&a, 4.0);
+            assert!(min >= 1.0 - 1e-6, "min share {min}");
+        }
+    }
+
+    #[test]
+    fn pm_makespan_const_matches() {
+        let mut ws = SchedWorkspace::new();
+        let g = SpGraph::from_tree(&tree(2));
+        let want = PmSolution::solve(&g, 0.9).makespan_const(10.0);
+        assert!(approx_eq(ws.pm_makespan_const(&g, 0.9, 10.0), want, 1e-15));
+    }
+}

@@ -76,6 +76,45 @@ pub fn simulate(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> DesResul
     }
 }
 
+/// Map PM leaf ratios (indexed by SP node) back to task ids.
+fn pm_leaf_ratios(
+    g: &crate::model::SpGraph,
+    sol: &crate::sched::pm::PmSolution,
+    n: usize,
+) -> Vec<f64> {
+    let mut r = vec![0f64; n];
+    for &v in g.topo() {
+        if let crate::model::SpNode::Leaf { task: Some(t), .. } = g.nodes[v as usize] {
+            r[t as usize] = sol.ratio[v as usize];
+        }
+    }
+    r
+}
+
+/// [`simulate`] with a reusable [`crate::sched::SchedWorkspace`]: the
+/// PM policy's closed-form solve runs through the workspace buffers, so
+/// sweeping many trees/α values (the batch and bench paths) does not
+/// re-allocate the solver arrays per simulation (the per-task ratio
+/// vector is still materialized). Other policies delegate to
+/// [`simulate`] unchanged.
+pub fn simulate_with_workspace(
+    tree: &TaskTree,
+    alpha: f64,
+    p: f64,
+    policy: Policy,
+    ws: &mut crate::sched::SchedWorkspace,
+) -> DesResult {
+    match policy {
+        Policy::Pm => {
+            let g = crate::model::SpGraph::from_tree(tree);
+            let sol = ws.solve(&g, alpha);
+            let r = pm_leaf_ratios(&g, sol, tree.len());
+            simulate_with_ratios(tree, alpha, p, &r)
+        }
+        _ => simulate(tree, alpha, p, policy),
+    }
+}
+
 /// Min-heap entry ordered by an f64 key.
 #[derive(PartialEq)]
 struct Ev(f64, u32);
@@ -178,27 +217,23 @@ pub fn simulate_with_ratios(tree: &TaskTree, alpha: f64, p: f64, ratios: &[f64])
 fn static_ratios(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> Vec<f64> {
     let g = crate::model::SpGraph::from_tree(tree);
     let n = tree.len();
-    let mut r = vec![0f64; n];
     match policy {
         Policy::Pm => {
             let sol = crate::sched::pm::PmSolution::solve(&g, alpha);
-            for &v in &g.topo_down() {
-                if let crate::model::SpNode::Leaf { task: Some(t), .. } = g.nodes[v as usize] {
-                    r[t as usize] = sol.ratio[v as usize];
-                }
-            }
+            pm_leaf_ratios(&g, &sol, n)
         }
         Policy::Proportional => {
             let shares = crate::sched::proportional::proportional_shares(&g, p);
-            for &v in &g.topo_down() {
+            let mut r = vec![0f64; n];
+            for &v in g.topo() {
                 if let crate::model::SpNode::Leaf { task: Some(t), .. } = g.nodes[v as usize] {
                     r[t as usize] = shares[v as usize] / p;
                 }
             }
+            r
         }
         _ => unreachable!(),
     }
-    r
 }
 
 /// Divisible: tasks run one at a time (topological order) on all `p`.
@@ -436,6 +471,29 @@ mod tests {
                 "alpha={a}: des={} pm={pm}",
                 des.makespan
             );
+        }
+    }
+
+    #[test]
+    fn des_pm_with_workspace_matches_plain_and_closed_form() {
+        // the workspace is deliberately reused across trees and α
+        // values: stale buffer contents must never leak into a run
+        let mut ws = crate::sched::SchedWorkspace::new();
+        let trees = [
+            tree5(),
+            TaskTree::from_parents(&[0, 0, 1, 1, 2, 2, 3], &[9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0])
+                .unwrap(),
+        ];
+        for t in &trees {
+            for &a in &[0.6, 0.9, 1.0] {
+                let p = 10.0;
+                let plain = simulate(t, a, p, Policy::Pm);
+                let wsd = simulate_with_workspace(t, a, p, Policy::Pm, &mut ws);
+                assert_eq!(plain.makespan.to_bits(), wsd.makespan.to_bits());
+                assert_eq!(plain.events, wsd.events);
+                let pm = PmSolution::solve(&SpGraph::from_tree(t), a).makespan_const(p);
+                assert!(approx_eq(wsd.makespan, pm, 1e-6));
+            }
         }
     }
 

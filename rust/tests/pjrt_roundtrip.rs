@@ -12,6 +12,10 @@ use malltree::runtime::Runtime;
 use malltree::util::rng::Rng;
 
 fn runtime() -> Option<Arc<Runtime>> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     let dir = Path::new("artifacts");
     if !dir.join("manifest.txt").exists() {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");

@@ -1,0 +1,285 @@
+//! Offline, dependency-free subset of the `anyhow` crate API.
+//!
+//! The build container has no crates.io access, so this vendored shim
+//! provides exactly the surface the repository uses:
+//!
+//! * [`Error`] — a message + source chain, `Display`/`Debug`, and a
+//!   blanket `From<E: std::error::Error + Send + Sync + 'static>`;
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (both std errors and `anyhow::Error`) and on `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Semantics follow the real crate closely enough that swapping the
+//! path dependency for crates.io `anyhow = "1"` requires no code
+//! changes. Deliberately not implemented: downcasting, backtraces.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message with an optional chain of sources.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: Display + Send + Sync + 'static,
+    {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C>(self, context: C) -> Error
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message (no chain).
+    pub fn to_msg(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        // `{:#}` renders the whole chain, like the real crate.
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(mut cur) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:")?;
+            loop {
+                write!(f, "\n    {}", cur.msg)?;
+                match cur.source.as_deref() {
+                    Some(next) => cur = next,
+                    None => break,
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// Mirrors the real crate: every std error converts into `Error`. The
+// impl cannot overlap `From<Error> for Error` because `Error` does not
+// implement `std::error::Error` (and, being a local type under a
+// foreign trait, never can downstream).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain: Vec<String> = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error { msg: e.to_string(), source: None };
+        // rebuild the source chain innermost-first
+        for msg in chain.into_iter().rev() {
+            let inner = Error { msg, source: None };
+            attach_innermost(&mut err, inner);
+        }
+        err
+    }
+}
+
+fn attach_innermost(err: &mut Error, inner: Error) {
+    let mut cur = err;
+    loop {
+        if cur.source.is_none() {
+            cur.source = Some(Box::new(inner));
+            return;
+        }
+        cur = cur.source.as_mut().unwrap();
+    }
+}
+
+mod ext {
+    use super::*;
+
+    /// Internal adapter so [`Context`] works uniformly for std errors
+    /// and for `anyhow::Error` itself (the real crate uses the same
+    /// non-overlapping-impl trick).
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> Error;
+    }
+
+    impl<E> IntoAnyhow for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_anyhow(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoAnyhow for Error {
+        fn into_anyhow(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding context to `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with a new message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Wrap the error value with a lazily evaluated message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::IntoAnyhow,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| ext::IntoAnyhow::into_anyhow(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| ext::IntoAnyhow::into_anyhow(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<i32> {
+        let n: i32 = "banana".parse().context("parsing banana")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_on_std_error() {
+        let e = parse_err().unwrap_err();
+        assert_eq!(e.to_string(), "parsing banana");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn context_on_option_and_anyhow_result() {
+        let none: Option<i32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let r: Result<i32> = Err(Error::msg("inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1");
+        assert!(format!("{e:?}").contains("inner"));
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
