@@ -1,16 +1,28 @@
 //! End-to-end factorization bench (EXPERIMENTS.md E14): the complete
 //! pipeline — analysis → PM schedule → numeric multifrontal execution —
-//! timed for the parallel Rust backend (worker sweep) and the PJRT
-//! accelerator-queue backend when artifacts are present.
+//! timed for the parallel Rust backend (worker sweep), the naive-kernel
+//! baseline, and the PJRT accelerator-queue backend when artifacts are
+//! present. Writes the machine-readable **`BENCH_e2e.json`** at the
+//! repo root (per worker count: Mflop/s, assembly fraction, peak front
+//! bytes, parallel efficiency), the numeric-pipeline counterpart of
+//! `BENCH_sched.json`.
 
 mod bench_util;
 
 use bench_util::{env_usize, header, timed};
-use malltree::exec::{execute_parallel, execute_serial};
-use malltree::frontal::{multifrontal, PjrtBackend, RustBackend};
+use malltree::exec::{execute_parallel, execute_serial, ExecReport};
+use malltree::frontal::{multifrontal, NaiveBackend, PjrtBackend, RustBackend};
 use malltree::metrics::Table;
 use malltree::sched::{PmSchedule, Profile};
 use malltree::sparse::{gen, order, symbolic};
+
+struct Row {
+    key: String,
+    report: ExecReport,
+    /// `wall₁ / (w · wall_w)`; `None` for rows outside the worker sweep.
+    efficiency: Option<f64>,
+    residual: f64,
+}
 
 fn main() {
     header("e2e_factorize", "grid Laplacian multifrontal factorization");
@@ -30,21 +42,60 @@ fn main() {
         at.tree.len(),
         at.tree.total_work()
     );
+    println!(
+        "symbolic peak front memory: {:.1} MiB",
+        malltree::frontal::arena::symbolic_peak_f64s(&at) as f64 * 8.0 / (1024.0 * 1024.0)
+    );
     let (pm, secs) = timed(|| PmSchedule::for_tree(&at.tree, alpha, &Profile::constant(p)));
     println!("PM schedule: makespan {:.3e} ({secs:.3}s)", pm.schedule.makespan);
 
-    let mut table = Table::new(&["backend", "workers", "wall (s)", "Gflop/s", "residual"]);
+    let mut table = Table::new(&[
+        "backend", "workers", "wall (s)", "Mflop/s", "assembly", "peak front", "efficiency",
+        "residual",
+    ]);
+    let mut rows: Vec<Row> = Vec::new();
+    let mut base_wall = None;
     for workers in [1usize, 2, 4, 8] {
         let ((fact, report), _) =
             timed(|| execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers).unwrap());
         let r = multifrontal::residual(&at, &ap, &fact);
+        assert!(r < 1e-10, "workers={workers}: residual {r}");
+        let base = *base_wall.get_or_insert(report.wall_seconds);
+        let efficiency = base / (workers as f64 * report.wall_seconds.max(1e-12));
         table.row(&[
-            "rust-f64".into(),
+            report.backend.clone(),
             format!("{workers}"),
             format!("{:.3}", report.wall_seconds),
-            format!("{:.3}", report.flop_rate() / 1e9),
+            format!("{:.1}", report.flop_rate() / 1e6),
+            format!("{:.1}%", 100.0 * report.assembly_fraction()),
+            format!("{:.1} MiB", report.peak_front_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{efficiency:.2}"),
             format!("{r:.1e}"),
         ]);
+        rows.push(Row {
+            key: format!("e2e_workers_{workers}"),
+            report,
+            efficiency: Some(efficiency),
+            residual: r,
+        });
+    }
+
+    // unblocked-kernel baseline at 1 worker: the blocked-vs-naive gap
+    {
+        let ((fact, report), _) =
+            timed(|| execute_parallel(&at, &ap, &pm.schedule, &NaiveBackend, 1).unwrap());
+        let r = multifrontal::residual(&at, &ap, &fact);
+        table.row(&[
+            report.backend.clone(),
+            "1".into(),
+            format!("{:.3}", report.wall_seconds),
+            format!("{:.1}", report.flop_rate() / 1e6),
+            format!("{:.1}%", 100.0 * report.assembly_fraction()),
+            format!("{:.1} MiB", report.peak_front_bytes as f64 / (1024.0 * 1024.0)),
+            "-".into(),
+            format!("{r:.1e}"),
+        ]);
+        rows.push(Row { key: "e2e_naive_workers_1".into(), report, efficiency: None, residual: r });
     }
 
     // PJRT path if artifacts are available
@@ -68,10 +119,13 @@ fn main() {
                     });
                     let r = multifrontal::residual(&at, &ap, &fact);
                     table.row(&[
-                        "pjrt-xla-f32".into(),
+                        report.backend.clone(),
                         "1 (queue)".into(),
                         format!("{:.3}", report.wall_seconds),
-                        format!("{:.3}", report.flop_rate() / 1e9),
+                        format!("{:.1}", report.flop_rate() / 1e6),
+                        format!("{:.1}%", 100.0 * report.assembly_fraction()),
+                        format!("{:.1} MiB", report.peak_front_bytes as f64 / (1024.0 * 1024.0)),
+                        "-".into(),
                         format!("{r:.1e}"),
                     ]);
                 } else {
@@ -84,4 +138,35 @@ fn main() {
         println!("(pjrt skipped: run `make artifacts` first)");
     }
     print!("{}", table.render());
+
+    // Machine-readable perf trajectory (BENCH_e2e.json at repo root).
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"grid\": {k},\n  \"supernodes\": {},\n  \"total_flops\": {:.6e},\n",
+        at.tree.len(),
+        at.tree.total_work()
+    ));
+    for (i, row) in rows.iter().enumerate() {
+        let efficiency = match row.efficiency {
+            Some(e) => format!("{e:.4}"),
+            None => "null".into(),
+        };
+        json.push_str(&format!(
+            "  \"{}\": {{\"wall_s\": {:.6}, \"mflops\": {:.2}, \"assembly_fraction\": {:.4}, \
+             \"peak_front_bytes\": {}, \"parallel_efficiency\": {efficiency}, \
+             \"residual\": {:.3e}}}{}\n",
+            row.key,
+            row.report.wall_seconds,
+            row.report.flop_rate() / 1e6,
+            row.report.assembly_fraction(),
+            row.report.peak_front_bytes,
+            row.residual,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("}\n");
+    match std::fs::write("BENCH_e2e.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_e2e.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_e2e.json: {e}"),
+    }
 }

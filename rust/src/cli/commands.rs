@@ -226,13 +226,20 @@ pub fn batch(args: &mut Args) -> Result<()> {
 
 pub fn factorize(args: &mut Args) -> Result<()> {
     use crate::exec::{execute_parallel, execute_serial};
-    use crate::frontal::{multifrontal, PjrtBackend, RustBackend};
+    use crate::frontal::{multifrontal, NaiveBackend, PjrtBackend, RustBackend};
 
     let (name, a, perm) = load_problem(args)?;
     let amalg = args.get_usize("amalgamate", 4)?;
     let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
     let p = args.get_f64("p", 8.0)?;
     let workers = args.get_usize("workers", 4)?;
+    // backend selection: blocked tiled kernels (default), the unblocked
+    // naive oracle, or the PJRT accelerator queue (--pjrt is kept as an
+    // alias for --backend pjrt)
+    let backend_name = args
+        .get("backend")
+        .unwrap_or(if args.has_flag("pjrt") { "pjrt" } else { "blocked" })
+        .to_string();
     let at: AssemblyTree = symbolic::analyze(&a, &perm, amalg)?;
     let ap = a.permute_sym(&at.symbolic.perm)?;
     let pm = PmSchedule::for_tree(&at.tree, alpha, &Profile::constant(p));
@@ -241,14 +248,19 @@ pub fn factorize(args: &mut Args) -> Result<()> {
         at.tree.len(),
         pm.schedule.makespan
     );
-    let (fact, report) = if args.has_flag("pjrt") {
-        let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-        let rt = std::sync::Arc::new(crate::runtime::Runtime::cpu(&dir)?);
-        println!("pjrt platform: {}", rt.platform());
-        let backend = PjrtBackend::new(rt);
-        execute_serial(&at, &ap, &pm.schedule, &backend)?
-    } else {
-        execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers)?
+    let (fact, report) = match backend_name.as_str() {
+        "pjrt" => {
+            let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            let rt = std::sync::Arc::new(crate::runtime::Runtime::cpu(&dir)?);
+            println!("pjrt platform: {}", rt.platform());
+            let backend = PjrtBackend::new(rt);
+            execute_serial(&at, &ap, &pm.schedule, &backend)?
+        }
+        "naive" => execute_parallel(&at, &ap, &pm.schedule, &NaiveBackend, workers)?,
+        "blocked" | "rust" => {
+            execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers)?
+        }
+        other => bail!("unknown --backend {other} (blocked|naive|pjrt)"),
     };
     println!("{}", report.render());
     let r = multifrontal::residual(&at, &ap, &fact);

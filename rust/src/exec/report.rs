@@ -7,6 +7,13 @@ pub struct ExecReport {
     pub virtual_makespan: f64,
     /// Real wall-clock seconds spent executing fronts.
     pub wall_seconds: f64,
+    /// CPU seconds spent in front assembly (scatter + extend-add),
+    /// summed over all workers.
+    pub assembly_seconds: f64,
+    /// High-water mark of the front arena(s): fronts plus outstanding
+    /// contribution blocks, in bytes (one shared gauge across the crew
+    /// in the parallel path).
+    pub peak_front_bytes: usize,
     /// Number of tasks (supernodes) executed.
     pub tasks: usize,
     /// Total front flops executed.
@@ -27,15 +34,29 @@ impl ExecReport {
         }
     }
 
+    /// Fraction of the crew's busy budget (`wall × workers`) spent in
+    /// assembly rather than factorization kernels.
+    pub fn assembly_fraction(&self) -> f64 {
+        let budget = self.wall_seconds * self.workers.max(1) as f64;
+        if budget > 0.0 {
+            self.assembly_seconds / budget
+        } else {
+            0.0
+        }
+    }
+
     pub fn render(&self) -> String {
         format!(
-            "backend={} workers={} tasks={} flops={:.3e} wall={:.3}s ({:.2} Gflop/s) virtual_makespan={:.3e}",
+            "backend={} workers={} tasks={} flops={:.3e} wall={:.3}s ({:.2} Gflop/s) \
+             assembly={:.1}% peak_front={:.1} MiB virtual_makespan={:.3e}",
             self.backend,
             self.workers,
             self.tasks,
             self.flops,
             self.wall_seconds,
             self.flop_rate() / 1e9,
+            100.0 * self.assembly_fraction(),
+            self.peak_front_bytes as f64 / (1024.0 * 1024.0),
             self.virtual_makespan,
         )
     }
@@ -50,12 +71,15 @@ mod tests {
         let r = ExecReport {
             virtual_makespan: 1.0,
             wall_seconds: 0.0,
+            assembly_seconds: 0.0,
+            peak_front_bytes: 0,
             tasks: 0,
             flops: 0.0,
             backend: "x".into(),
             workers: 1,
         };
         assert_eq!(r.flop_rate(), 0.0);
+        assert_eq!(r.assembly_fraction(), 0.0);
     }
 
     #[test]
@@ -63,6 +87,8 @@ mod tests {
         let r = ExecReport {
             virtual_makespan: 2.0,
             wall_seconds: 1.0,
+            assembly_seconds: 0.25,
+            peak_front_bytes: 1024 * 1024,
             tasks: 3,
             flops: 2e9,
             backend: "rust-f64".into(),
@@ -72,5 +98,8 @@ mod tests {
         assert!(s.contains("rust-f64"));
         assert!(s.contains("workers=4"));
         assert!(s.contains("2.00 Gflop/s"));
+        // 0.25 s of assembly across a 4 s busy budget
+        assert!((r.assembly_fraction() - 0.0625).abs() < 1e-12);
+        assert!(s.contains("peak_front=1.0 MiB"));
     }
 }

@@ -1,13 +1,20 @@
 //! Schedule-driven execution of the numeric multifrontal factorization.
+//!
+//! Both executors run the arena assembly path (precomputed relative
+//! indices, recycled contribution slabs — see [`crate::frontal::arena`]).
+//! The parallel crew is **lock-light**: task outputs live in per-task
+//! write-once slots, so extend-add and front factorization run outside
+//! any shared lock; only the ready-queue push/pop (plus the dependency
+//! counters it guards) is synchronized.
 
-use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use crate::frontal::arena::{FrontArena, MemGauge};
 use crate::frontal::backend::FrontBackend;
-use crate::frontal::multifrontal::{assemble_front, Factorization};
+use crate::frontal::multifrontal::{assemble_front_arena, factor_front_arena, Factorization};
 use crate::sched::Schedule;
 use crate::sparse::{AssemblyTree, CscMatrix};
 
@@ -34,40 +41,6 @@ fn dispatch_order(at: &AssemblyTree, schedule: &Schedule) -> Vec<u32> {
     order
 }
 
-fn factor_one(
-    at: &AssemblyTree,
-    ap: &CscMatrix,
-    s: usize,
-    backend: &dyn FrontBackend,
-    contrib: &mut HashMap<usize, Vec<f64>>,
-    panels: &mut [Vec<f64>],
-) -> Result<f64> {
-    let sn = &at.symbolic.supernodes[s];
-    let nf = sn.front_order();
-    let width = sn.width;
-    let front = assemble_front(at, ap, s, contrib);
-    let flops = sn.flops();
-    if width == nf {
-        panels[s] = backend
-            .full(&front, nf)
-            .with_context(|| format!("full factor of supernode {s}"))?;
-    } else {
-        let f = backend
-            .partial(&front, nf, width)
-            .with_context(|| format!("partial factor of supernode {s}"))?;
-        let m = nf - width;
-        let mut panel = vec![0f64; nf * width];
-        panel[..width * width].copy_from_slice(&f.l11);
-        for i in 0..m {
-            panel[(width + i) * width..(width + i + 1) * width]
-                .copy_from_slice(&f.l21[i * width..(i + 1) * width]);
-        }
-        contrib.insert(s, f.schur);
-        panels[s] = panel;
-    }
-    Ok(flops)
-}
-
 /// Serial ("accelerator command queue") execution: fronts stream to the
 /// backend in schedule-dispatch order. This is the path the PJRT
 /// backend uses — the XLA CPU client is one logical device.
@@ -79,12 +52,16 @@ pub fn execute_serial(
 ) -> Result<(Factorization, super::ExecReport)> {
     let n = at.tree.len();
     let order = dispatch_order(at, schedule);
-    let mut contrib: HashMap<usize, Vec<f64>> = HashMap::new();
+    let mut arena = FrontArena::for_tree(at);
+    let mut contrib: Vec<Option<Vec<f64>>> = vec![None; n];
     let mut panels: Vec<Vec<f64>> = vec![Vec::new(); n];
     let mut flops = 0.0;
+    let mut assembly = 0.0;
     let t0 = Instant::now();
     for &v in &order {
-        flops += factor_one(at, ap, v as usize, backend, &mut contrib, &mut panels)?;
+        let s = v as usize;
+        assembly += factor_front_arena(at, ap, s, backend, &mut arena, &mut contrib, &mut panels)?;
+        flops += at.symbolic.supernodes[s].flops();
     }
     let wall = t0.elapsed().as_secs_f64();
     Ok((
@@ -92,6 +69,8 @@ pub fn execute_serial(
         super::ExecReport {
             virtual_makespan: schedule.makespan,
             wall_seconds: wall,
+            assembly_seconds: assembly,
+            peak_front_bytes: arena.peak_bytes(),
             tasks: n,
             flops,
             backend: backend.name().to_string(),
@@ -100,20 +79,86 @@ pub fn execute_serial(
     ))
 }
 
-struct CrewState {
+/// A per-task write-once output cell. The protocol guarantees exactly
+/// one `set` (by the task's worker, before the dependency counter it
+/// guards is decremented) and at most one `take` (by the parent's
+/// worker, after that counter reached zero) — the inner mutex is never
+/// contended and is held only for the pointer swap, never during
+/// numeric work.
+struct OnceSlot(Mutex<Option<Vec<f64>>>);
+
+impl OnceSlot {
+    fn new() -> Self {
+        OnceSlot(Mutex::new(None))
+    }
+
+    fn set(&self, v: Vec<f64>) {
+        let mut g = self.0.lock().unwrap();
+        debug_assert!(g.is_none(), "OnceSlot written twice");
+        *g = Some(v);
+    }
+
+    fn take(&self) -> Option<Vec<f64>> {
+        self.0.lock().unwrap().take()
+    }
+
+    fn into_value(self) -> Vec<f64> {
+        self.0.into_inner().unwrap().unwrap_or_default()
+    }
+}
+
+/// Unwind guard for a crew worker: numeric work runs outside the queue
+/// lock, so a panicking worker would otherwise exit without waking the
+/// crew and leave the remaining workers blocked on the condvar forever.
+/// On unwind this records an error and notifies everyone; the scoped
+/// join then propagates the panic loudly instead of hanging.
+struct PanicGuard<'a> {
+    queue: &'a Mutex<ReadyQueue>,
+    cv: &'a Condvar,
+    armed: bool,
+}
+
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            // never panic inside an unwinding drop: tolerate poisoning
+            let mut st = match self.queue.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if st.error.is_none() {
+                st.error = Some("worker panicked during factorization".into());
+            }
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// The only shared-mutable state of the crew: the ready queue and the
+/// dependency bookkeeping it guards. Everything numeric flows through
+/// the per-task [`OnceSlot`]s and per-worker arenas.
+struct ReadyQueue {
     /// ready tasks, kept sorted descending by dispatch priority so
     /// `pop()` yields the earliest-starting task
     ready: Vec<u32>,
     unfinished_children: Vec<usize>,
-    contrib: HashMap<usize, Vec<f64>>,
-    panels: Vec<Vec<f64>>,
-    flops: f64,
     remaining: usize,
     error: Option<String>,
+    flops: f64,
+    assembly_seconds: f64,
 }
 
 /// Thread-crew execution for `Send + Sync` backends: real tree
 /// parallelism with the schedule's dispatch order as priority.
+///
+/// Lock discipline: a worker holds the queue mutex only to pop a task
+/// and to publish completion (decrement the parent's counter, push it
+/// when ready). Assembly (extend-add through the relative indices) and
+/// factorization run with no lock held; a child's contribution block
+/// is published into its [`OnceSlot`] *before* the counter decrement,
+/// so the parent — which can only be popped after the decrement — sees
+/// it without further synchronization.
 pub fn execute_parallel<B: FrontBackend + Sync>(
     at: &AssemblyTree,
     ap: &CscMatrix,
@@ -135,102 +180,123 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
     // sorted descending by priority index so pop() gives the smallest
     ready.sort_by(|&a, &b| prio[b as usize].cmp(&prio[a as usize]));
 
-    let state = Mutex::new(CrewState {
+    let queue = Mutex::new(ReadyQueue {
         ready,
         unfinished_children: unfinished,
-        contrib: HashMap::new(),
-        panels: vec![Vec::new(); n],
-        flops: 0.0,
         remaining: n,
         error: None,
+        flops: 0.0,
+        assembly_seconds: 0.0,
     });
     let cv = Condvar::new();
+    let contrib: Vec<OnceSlot> = (0..n).map(|_| OnceSlot::new()).collect();
+    let panels: Vec<OnceSlot> = (0..n).map(|_| OnceSlot::new()).collect();
+    let gauge = std::sync::Arc::new(MemGauge::default());
     let t0 = Instant::now();
 
     std::thread::scope(|scope| {
         for _ in 0..workers.max(1) {
-            scope.spawn(|| loop {
-                let task = {
-                    let mut st = state.lock().unwrap();
-                    loop {
-                        if st.remaining == 0 || st.error.is_some() {
-                            cv.notify_all();
-                            return;
+            scope.spawn(|| {
+                let mut guard = PanicGuard { queue: &queue, cv: &cv, armed: true };
+                let mut arena = FrontArena::for_tree(at).with_gauge(gauge.clone());
+                let mut local_flops = 0.0f64;
+                let mut local_assembly = 0.0f64;
+                loop {
+                    let task = {
+                        let mut st = queue.lock().unwrap();
+                        loop {
+                            if st.remaining == 0 || st.error.is_some() {
+                                st.flops += local_flops;
+                                st.assembly_seconds += local_assembly;
+                                guard.armed = false;
+                                cv.notify_all();
+                                return;
+                            }
+                            if let Some(v) = st.ready.pop() {
+                                break v;
+                            }
+                            st = cv.wait(st).unwrap();
                         }
-                        if let Some(v) = st.ready.pop() {
-                            break v;
+                    };
+                    let s = task as usize;
+                    let sn = &at.symbolic.supernodes[s];
+                    let nf = sn.front_order();
+                    let width = sn.width;
+                    // assembly and factorization both run without any
+                    // shared lock: children blocks were published to
+                    // their slots before this task became ready
+                    let ta = Instant::now();
+                    assemble_front_arena(at, ap, s, &mut arena, |c| contrib[c].take());
+                    local_assembly += ta.elapsed().as_secs_f64();
+                    let outcome: Result<()> = (|| {
+                        if width == nf {
+                            panels[s].set(backend.full(arena.front(), nf)?);
+                        } else {
+                            let m = nf - width;
+                            let mut panel = vec![0f64; nf * width];
+                            let mut schur = arena.alloc_block(m * m);
+                            backend.partial_into(
+                                arena.front(),
+                                nf,
+                                width,
+                                &mut panel,
+                                &mut schur,
+                            )?;
+                            contrib[s].set(schur);
+                            panels[s].set(panel);
                         }
-                        st = cv.wait(st).unwrap();
-                    }
-                };
-                let s = task as usize;
-                let sn = &at.symbolic.supernodes[s];
-                // assemble under the lock (children contributions move
-                // out of the shared map), factor outside it
-                let front = {
-                    let mut st = state.lock().unwrap();
-                    assemble_front(at, ap, s, &mut st.contrib)
-                };
-                let nf = sn.front_order();
-                let width = sn.width;
-                let result: Result<(Vec<f64>, Option<Vec<f64>>)> = (|| {
-                    if width == nf {
-                        Ok((backend.full(&front, nf)?, None))
-                    } else {
-                        let f = backend.partial(&front, nf, width)?;
-                        let m = nf - width;
-                        let mut panel = vec![0f64; nf * width];
-                        panel[..width * width].copy_from_slice(&f.l11);
-                        for i in 0..m {
-                            panel[(width + i) * width..(width + i + 1) * width]
-                                .copy_from_slice(&f.l21[i * width..(i + 1) * width]);
+                        Ok(())
+                    })();
+                    arena.end_front(nf);
+                    let mut st = queue.lock().unwrap();
+                    match outcome {
+                        Ok(()) => {
+                            local_flops += sn.flops();
+                            st.remaining -= 1;
+                            if let Some(parent) = at.tree.nodes[s].parent {
+                                let pi = parent as usize;
+                                st.unfinished_children[pi] -= 1;
+                                if st.unfinished_children[pi] == 0 {
+                                    let pos = st
+                                        .ready
+                                        .binary_search_by(|&x| {
+                                            prio[pi].cmp(&prio[x as usize])
+                                        })
+                                        .unwrap_or_else(|e| e);
+                                    st.ready.insert(pos, parent);
+                                }
+                            }
                         }
-                        Ok((panel, Some(f.schur)))
-                    }
-                })();
-                let mut st = state.lock().unwrap();
-                match result {
-                    Ok((panel, schur)) => {
-                        st.panels[s] = panel;
-                        if let Some(schur) = schur {
-                            st.contrib.insert(s, schur);
-                        }
-                        st.flops += sn.flops();
-                        st.remaining -= 1;
-                        if let Some(parent) = at.tree.nodes[s].parent {
-                            let pi = parent as usize;
-                            st.unfinished_children[pi] -= 1;
-                            if st.unfinished_children[pi] == 0 {
-                                let pos = st
-                                    .ready
-                                    .binary_search_by(|&x| {
-                                        prio[parent as usize].cmp(&prio[x as usize])
-                                    })
-                                    .unwrap_or_else(|e| e);
-                                st.ready.insert(pos, parent);
+                        Err(e) => {
+                            // keep the first failure; later ones are
+                            // usually casualties of the same root cause
+                            if st.error.is_none() {
+                                st.error = Some(format!("task {s}: {e:#}"));
                             }
                         }
                     }
-                    Err(e) => {
-                        st.error = Some(format!("task {s}: {e:#}"));
-                        st.remaining = 0;
-                    }
+                    drop(st);
+                    cv.notify_all();
                 }
-                cv.notify_all();
             });
         }
     });
 
-    let st = state.into_inner().unwrap();
+    let st = queue.into_inner().unwrap();
     if let Some(e) = st.error {
         anyhow::bail!("executor failed: {e}");
     }
     let wall = t0.elapsed().as_secs_f64();
     Ok((
-        Factorization { panels: st.panels, n: ap.n },
+        Factorization {
+            panels: panels.into_iter().map(OnceSlot::into_value).collect(),
+            n: ap.n,
+        },
         super::ExecReport {
             virtual_makespan: schedule.makespan,
             wall_seconds: wall,
+            assembly_seconds: st.assembly_seconds,
+            peak_front_bytes: gauge.peak_bytes(),
             tasks: n,
             flops: st.flops,
             backend: backend.name().to_string(),
@@ -242,6 +308,7 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frontal::backend::FrontFactor;
     use crate::frontal::multifrontal::{factorize, residual};
     use crate::frontal::RustBackend;
     use crate::sched::{PmSchedule, Profile};
@@ -267,6 +334,7 @@ mod tests {
         }
         assert!(report.flops > 0.0);
         assert_eq!(report.tasks, at.tree.len());
+        assert!(report.peak_front_bytes > 0);
         assert!(residual(&at, &ap, &f) < 1e-12);
     }
 
@@ -284,12 +352,9 @@ mod tests {
 
     #[test]
     fn parallel_equals_serial_bitwise() {
-        // deterministic math: panels must be identical regardless of
-        // execution interleaving (extend-add is order-dependent in
-        // floating point ONLY if siblings overlap rows; grid problems
-        // with exact symbolic structure commute here because addition
-        // order per entry is child-set dependent... we still assert
-        // near-equality to catch logic bugs)
+        // deterministic math: each front's panel is a pure function of
+        // its subtree (children are extend-added in child-list order on
+        // both paths), so panels must agree regardless of interleaving
         let (at, ap, schedule) = setup(8);
         let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
         let (fp, _) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
@@ -299,6 +364,66 @@ mod tests {
                 assert!((x - y).abs() <= 1e-9 * x.abs().max(1.0));
             }
         }
+    }
+
+    #[test]
+    fn parallel_report_tracks_memory_and_assembly() {
+        let (at, ap, schedule) = setup(10);
+        let (_, report) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        let widest = at
+            .symbolic
+            .supernodes
+            .iter()
+            .map(|s| s.front_order())
+            .max()
+            .unwrap();
+        assert!(
+            report.peak_front_bytes >= widest * widest * std::mem::size_of::<f64>(),
+            "peak {} below widest front {widest}",
+            report.peak_front_bytes
+        );
+        assert!(report.assembly_seconds >= 0.0);
+        assert!(report.assembly_fraction() <= 1.0 + 1e-9);
+    }
+
+    /// Backend that fails on every front — the executor must surface
+    /// the error from every worker without deadlocking the crew.
+    struct FailingBackend;
+
+    impl FrontBackend for FailingBackend {
+        fn partial(&self, _front: &[f64], n: usize, k: usize) -> Result<FrontFactor> {
+            anyhow::bail!("injected backend failure (n={n}, k={k})")
+        }
+
+        fn full(&self, _front: &[f64], n: usize) -> Result<Vec<f64>> {
+            anyhow::bail!("injected backend failure (n={n})")
+        }
+
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    #[test]
+    fn parallel_surfaces_backend_errors_without_hanging() {
+        let (at, ap, schedule) = setup(8);
+        for workers in [1, 4] {
+            let err = execute_parallel(&at, &ap, &schedule, &FailingBackend, workers)
+                .expect_err("failing backend must fail the run");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("injected backend failure"),
+                "workers={workers}: unexpected error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn serial_surfaces_backend_errors() {
+        let (at, ap, schedule) = setup(6);
+        let err = execute_serial(&at, &ap, &schedule, &FailingBackend)
+            .expect_err("failing backend must fail the run");
+        assert!(format!("{err:#}").contains("injected backend failure"));
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Front arena: reusable numeric-assembly memory (DESIGN.md §9).
+//!
+//! Contribution-block memory layout is a first-class scheduling concern
+//! in the memory-aware tree-scheduling literature (Marchal–Sinnen–
+//! Vivien; Eyraud-Dubois et al.), so the multifrontal numeric pipeline
+//! treats it as an explicit, measurable subsystem rather than a
+//! `HashMap<usize, Vec<f64>>`. A [`FrontArena`] owns
+//!
+//! * the reused **front buffer** (grown once to the widest front),
+//! * a **slab pool** of recycled contribution blocks (a child's Schur
+//!   complement borrows a slab; the parent's assembly releases it),
+//! * the **global-row → front-local scatter map** used for
+//!   original-entry assembly (filled per front in O(front), reset by
+//!   walking the same rows — never cleared wholesale),
+//! * live/peak accounting in f64 words, optionally mirrored into a
+//!   shared [`MemGauge`] so the parallel executor's per-worker arenas
+//!   report one process-wide peak.
+//!
+//! In the steady state the serial driver performs no heap allocation
+//! per front: slabs cycle through the free list and the front buffer
+//! is reused. [`symbolic_peak_f64s`] predicts the serial-path peak
+//! from the symbolic structure alone.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::sparse::AssemblyTree;
+
+/// Process-wide live/peak memory gauge shared by per-worker arenas.
+#[derive(Debug, Default)]
+pub struct MemGauge {
+    live: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemGauge {
+    fn add(&self, n: usize) {
+        let cur = self.live.fetch_add(n, Ordering::Relaxed) + n;
+        self.peak.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    fn sub(&self, n: usize) {
+        self.live.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// High-water mark in f64 words.
+    pub fn peak_f64s(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark in bytes.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_f64s() * std::mem::size_of::<f64>()
+    }
+}
+
+/// Reusable front + contribution-slab memory for one execution lane
+/// (the serial driver, or one worker of the parallel crew).
+#[derive(Debug)]
+pub struct FrontArena {
+    front: Vec<f64>,
+    front_len: usize,
+    glmap: Vec<u32>,
+    free: Vec<Vec<f64>>,
+    live: usize,
+    peak: usize,
+    shared: Option<Arc<MemGauge>>,
+}
+
+impl FrontArena {
+    /// Arena for an `n`-column problem (sizes the scatter map).
+    pub fn new(n: usize) -> Self {
+        FrontArena {
+            front: Vec::new(),
+            front_len: 0,
+            glmap: vec![u32::MAX; n],
+            free: Vec::new(),
+            live: 0,
+            peak: 0,
+            shared: None,
+        }
+    }
+
+    /// Arena presized for `at`: the front buffer is reserved at the
+    /// widest front so the first traversal already runs allocation-free
+    /// on the front path.
+    pub fn for_tree(at: &AssemblyTree) -> Self {
+        let n = at.symbolic.col_to_snode.len();
+        let widest = at
+            .symbolic
+            .supernodes
+            .iter()
+            .map(|s| s.front_order())
+            .max()
+            .unwrap_or(0);
+        let mut arena = FrontArena::new(n);
+        arena.front.reserve(widest * widest);
+        arena
+    }
+
+    /// Mirror live/peak accounting into `gauge` (parallel crews share
+    /// one gauge across their per-worker arenas).
+    pub fn with_gauge(mut self, gauge: Arc<MemGauge>) -> Self {
+        self.shared = Some(gauge);
+        self
+    }
+
+    fn account_add(&mut self, n: usize) {
+        self.live += n;
+        self.peak = self.peak.max(self.live);
+        if let Some(g) = &self.shared {
+            g.add(n);
+        }
+    }
+
+    fn account_sub(&mut self, n: usize) {
+        // saturating: a parent's arena may release a slab a sibling
+        // worker's arena allocated (migration). The per-arena number is
+        // then only a local view — the shared gauge stays exact.
+        self.live = self.live.saturating_sub(n);
+        if let Some(g) = &self.shared {
+            g.sub(n);
+        }
+    }
+
+    /// Start a front of order `nf`: the front buffer is resized and
+    /// zeroed, and `nf * nf` words go live until [`FrontArena::end_front`].
+    pub fn begin_front(&mut self, nf: usize) {
+        let len = nf * nf;
+        self.front.clear();
+        self.front.resize(len, 0.0);
+        self.front_len = len;
+        self.account_add(len);
+    }
+
+    /// The current front (valid between `begin_front` and `end_front`).
+    pub fn front(&self) -> &[f64] {
+        &self.front[..self.front_len]
+    }
+
+    /// Split borrow of the current front and the scatter map (both are
+    /// needed simultaneously during assembly).
+    pub fn front_and_glmap(&mut self) -> (&mut [f64], &mut [u32]) {
+        (&mut self.front[..self.front_len], &mut self.glmap[..])
+    }
+
+    /// Finish the current front, releasing its words.
+    pub fn end_front(&mut self, nf: usize) {
+        debug_assert_eq!(self.front_len, nf * nf);
+        self.account_sub(nf * nf);
+        self.front_len = 0;
+    }
+
+    /// Take a contribution slab of exactly `len` words (recycled from
+    /// the free list when possible). Contents are zeroed.
+    pub fn alloc_block(&mut self, len: usize) -> Vec<f64> {
+        let mut b = self.free.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0.0);
+        self.account_add(len);
+        b
+    }
+
+    /// Return a consumed contribution slab to the pool. Slabs may
+    /// migrate between arenas (a child's worker allocates, the parent's
+    /// worker releases); the shared gauge keeps the accounting global.
+    pub fn release_block(&mut self, b: Vec<f64>) {
+        self.account_sub(b.len());
+        self.free.push(b);
+    }
+
+    /// Words currently live through this arena.
+    pub fn live_f64s(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark in f64 words seen by this arena.
+    pub fn peak_f64s(&self) -> usize {
+        self.peak
+    }
+
+    /// High-water mark in bytes seen by this arena.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak * std::mem::size_of::<f64>()
+    }
+}
+
+/// Predicted serial-path peak (f64 words) from the symbolic structure:
+/// replay the `topo_up` traversal, charging each front plus the
+/// contribution blocks stacked while it is assembled. This is the
+/// number the arena's measured peak must match on the serial driver
+/// (tested), and the quantity the memory-aware scheduling literature
+/// minimizes by reordering the traversal.
+pub fn symbolic_peak_f64s(at: &AssemblyTree) -> usize {
+    let sns = &at.symbolic.supernodes;
+    let mut live = 0usize;
+    let mut peak = 0usize;
+    for &v in &at.tree.topo_up() {
+        let s = v as usize;
+        let sn = &sns[s];
+        let nf = sn.front_order();
+        // assembly: front + children blocks live together
+        live += nf * nf;
+        peak = peak.max(live);
+        for &c in &at.tree.nodes[s].children {
+            let csn = &sns[c as usize];
+            let m = csn.front_order() - csn.width;
+            live -= m * m;
+        }
+        // partial factorization: the outgoing Schur slab coexists with
+        // the front (the panel is retained factor storage, not arena)
+        let m = nf - sn.width;
+        live += m * m;
+        peak = peak.max(live);
+        live -= nf * nf;
+    }
+    peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, order, symbolic};
+
+    #[test]
+    fn slabs_are_recycled_and_accounted() {
+        let mut a = FrontArena::new(16);
+        let b1 = a.alloc_block(9);
+        assert_eq!(b1.len(), 9);
+        assert!(b1.iter().all(|&x| x == 0.0));
+        assert_eq!(a.live_f64s(), 9);
+        a.release_block(b1);
+        assert_eq!(a.live_f64s(), 0);
+        // the recycled slab is reused (capacity retained) and re-zeroed
+        let mut b2 = a.alloc_block(4);
+        assert!(b2.iter().all(|&x| x == 0.0));
+        b2[0] = 5.0;
+        a.release_block(b2);
+        assert_eq!(a.peak_f64s(), 9);
+    }
+
+    #[test]
+    fn front_accounting_peaks_with_blocks() {
+        let mut a = FrontArena::new(8);
+        let blk = a.alloc_block(4);
+        a.begin_front(3);
+        assert_eq!(a.live_f64s(), 4 + 9);
+        assert_eq!(a.front().len(), 9);
+        a.end_front(3);
+        a.release_block(blk);
+        assert_eq!(a.live_f64s(), 0);
+        assert_eq!(a.peak_f64s(), 13);
+    }
+
+    #[test]
+    fn gauge_merges_across_arenas() {
+        let g = Arc::new(MemGauge::default());
+        let mut a1 = FrontArena::new(4).with_gauge(g.clone());
+        let mut a2 = FrontArena::new(4).with_gauge(g.clone());
+        let b1 = a1.alloc_block(10);
+        let b2 = a2.alloc_block(20);
+        // slab migration: a2 releases what a1 allocated
+        a2.release_block(b1);
+        a1.release_block(b2);
+        assert_eq!(g.peak_f64s(), 30);
+        assert_eq!(g.peak_bytes(), 240);
+    }
+
+    #[test]
+    fn symbolic_peak_covers_widest_front() {
+        let a = gen::grid_laplacian_2d(10);
+        let perm = order::nested_dissection_2d(10);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let widest = at
+            .symbolic
+            .supernodes
+            .iter()
+            .map(|s| s.front_order())
+            .max()
+            .unwrap();
+        let peak = symbolic_peak_f64s(&at);
+        assert!(peak >= widest * widest, "peak {peak} < widest front {widest}^2");
+    }
+}

@@ -38,15 +38,78 @@ pub trait FrontBackend {
     /// Full factorization (`k == n`); returns the lower factor.
     fn full(&self, front: &[f64], n: usize) -> Result<Vec<f64>>;
 
+    /// Partial factorization into caller-owned buffers: `panel` (`n x
+    /// k` row-major, receives `[L11; L21]`) and `schur` (`(n-k)²`).
+    /// The default routes through [`FrontBackend::partial`] and copies;
+    /// allocation-free backends override it. This is the call the
+    /// multifrontal drivers make on their hot path — `panel` is the
+    /// retained factor storage, `schur` an arena slab.
+    fn partial_into(
+        &self,
+        front: &[f64],
+        n: usize,
+        k: usize,
+        panel: &mut [f64],
+        schur: &mut [f64],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            k <= n && panel.len() == n * k && schur.len() == (n - k) * (n - k),
+            "partial_into: output buffer mismatch (n={n}, k={k})"
+        );
+        let f = self.partial(front, n, k)?;
+        panel[..k * k].copy_from_slice(&f.l11);
+        panel[k * k..].copy_from_slice(&f.l21);
+        schur.copy_from_slice(&f.schur);
+        Ok(())
+    }
+
     /// Human-readable name for logs and reports.
     fn name(&self) -> &'static str;
 }
 
-/// Pure-Rust reference backend.
+/// Pure-Rust production backend: cache-blocked tiled kernels
+/// (`dense::potrf_blocked` and friends), allocation-free through
+/// [`FrontBackend::partial_into`].
 #[derive(Debug, Default, Clone, Copy)]
 pub struct RustBackend;
 
 impl FrontBackend for RustBackend {
+    fn partial(&self, front: &[f64], n: usize, k: usize) -> Result<FrontFactor> {
+        let m = n - k;
+        let mut panel = vec![0f64; n * k];
+        let mut schur = vec![0f64; m * m];
+        dense::partial_factor_into(front, n, k, &mut panel, &mut schur)?;
+        let l21 = panel.split_off(k * k);
+        Ok(FrontFactor { l11: panel, l21, schur, n, k })
+    }
+
+    fn full(&self, front: &[f64], n: usize) -> Result<Vec<f64>> {
+        dense::full_factor_blocked(front, n)
+    }
+
+    fn partial_into(
+        &self,
+        front: &[f64],
+        n: usize,
+        k: usize,
+        panel: &mut [f64],
+        schur: &mut [f64],
+    ) -> Result<()> {
+        dense::partial_factor_into(front, n, k, panel, schur)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-f64"
+    }
+}
+
+/// Unblocked pure-Rust reference backend: the original kernels, kept
+/// as the property-test oracle and reachable from the CLI
+/// (`--backend naive`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NaiveBackend;
+
+impl FrontBackend for NaiveBackend {
     fn partial(&self, front: &[f64], n: usize, k: usize) -> Result<FrontFactor> {
         let (l11, l21, schur) = dense::partial_factor(front, n, k)?;
         Ok(FrontFactor { l11, l21, schur, n, k })
@@ -57,7 +120,7 @@ impl FrontBackend for RustBackend {
     }
 
     fn name(&self) -> &'static str {
-        "rust-f64"
+        "rust-naive"
     }
 }
 
@@ -106,32 +169,74 @@ impl FrontBackend for PjrtBackend {
 mod tests {
     use super::*;
 
-    #[test]
-    fn rust_backend_partial_matches_dense() {
-        let n = 12;
-        let k = 5;
-        // diagonally dominant SPD
+    fn diag_dominant(n: usize) -> Vec<f64> {
         let mut a = vec![0.1f64; n * n];
         for i in 0..n {
             a[i * n + i] = n as f64;
         }
+        a
+    }
+
+    fn close(a: &[f64], b: &[f64], tol: f64) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn rust_backend_partial_matches_naive_oracle() {
+        // the blocked production backend vs the unblocked oracle:
+        // equal up to floating-point reassociation
+        let n = 12;
+        let k = 5;
+        let a = diag_dominant(n);
         let b = RustBackend;
+        let f = b.partial(&a, n, k).unwrap();
+        let (l11, l21, schur) = dense::partial_factor(&a, n, k).unwrap();
+        assert!(close(&f.l11, &l11, 1e-12));
+        assert!(close(&f.l21, &l21, 1e-12));
+        assert!(close(&f.schur, &schur, 1e-12));
+        assert_eq!(b.name(), "rust-f64");
+    }
+
+    #[test]
+    fn naive_backend_is_bitwise_the_reference_kernels() {
+        let n = 12;
+        let k = 5;
+        let a = diag_dominant(n);
+        let b = NaiveBackend;
         let f = b.partial(&a, n, k).unwrap();
         let (l11, l21, schur) = dense::partial_factor(&a, n, k).unwrap();
         assert_eq!(f.l11, l11);
         assert_eq!(f.l21, l21);
         assert_eq!(f.schur, schur);
-        assert_eq!(b.name(), "rust-f64");
+        assert_eq!(b.full(&a, n).unwrap(), dense::full_factor(&a, n).unwrap());
+        assert_eq!(b.name(), "rust-naive");
     }
 
     #[test]
-    fn rust_backend_full_matches_dense() {
+    fn rust_backend_full_matches_naive_oracle() {
         let n = 9;
-        let mut a = vec![0.2f64; n * n];
-        for i in 0..n {
-            a[i * n + i] = 5.0;
-        }
-        let b = RustBackend;
-        assert_eq!(b.full(&a, n).unwrap(), dense::full_factor(&a, n).unwrap());
+        let a = diag_dominant(n);
+        let blocked = RustBackend.full(&a, n).unwrap();
+        let naive = dense::full_factor(&a, n).unwrap();
+        assert!(close(&blocked, &naive, 1e-12));
+    }
+
+    #[test]
+    fn default_partial_into_stacks_the_panel() {
+        // exercised through NaiveBackend, which does not override it
+        let n = 10;
+        let k = 4;
+        let m = n - k;
+        let a = diag_dominant(n);
+        let mut panel = vec![0f64; n * k];
+        let mut schur = vec![0f64; m * m];
+        NaiveBackend.partial_into(&a, n, k, &mut panel, &mut schur).unwrap();
+        let f = NaiveBackend.partial(&a, n, k).unwrap();
+        assert_eq!(&panel[..k * k], &f.l11[..]);
+        assert_eq!(&panel[k * k..], &f.l21[..]);
+        assert_eq!(schur, f.schur);
+        // buffer-size misuse is reported, not UB
+        let mut bad = vec![0f64; 1];
+        assert!(NaiveBackend.partial_into(&a, n, k, &mut bad, &mut schur).is_err());
     }
 }

@@ -109,6 +109,226 @@ pub fn full_factor(front: &[f64], n: usize) -> Result<Vec<f64>> {
     Ok(l)
 }
 
+// ---------------------------------------------------------------------
+// Cache-blocked kernels (DESIGN.md §9). Right-looking tiled variants of
+// the reference kernels above: the unblocked versions stay as the
+// property-test oracle; these are the production path (`RustBackend`).
+// Micro-kernel inner loops run over contiguous `t` ranges of both
+// operands so the compiler can autovectorize the dot products.
+// ---------------------------------------------------------------------
+
+/// Tile edge for the blocked kernels (~64² f64 = 32 KiB per tile pair,
+/// sized for L1/L2 residency).
+pub const BLOCK: usize = 64;
+
+/// In-place factorization of the `nb x nb` diagonal block at `(j0, j0)`
+/// of a matrix with row stride `lda` (inner-product Cholesky; the block
+/// is small enough that blocking buys nothing here).
+fn factor_diag(a: &mut [f64], lda: usize, j0: usize, nb: usize) -> Result<()> {
+    for j in 0..nb {
+        let rj = (j0 + j) * lda + j0;
+        let mut d = a[rj + j];
+        for k in 0..j {
+            d -= a[rj + k] * a[rj + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            bail!("potrf: matrix not positive definite at pivot {} (d={d})", j0 + j);
+        }
+        let d = d.sqrt();
+        a[rj + j] = d;
+        for i in j + 1..nb {
+            let ri = (j0 + i) * lda + j0;
+            let mut s = a[ri + j];
+            for k in 0..j {
+                s -= a[ri + k] * a[rj + k];
+            }
+            a[ri + j] = s / d;
+        }
+    }
+    Ok(())
+}
+
+/// Solve the panel rows `i0..i0+m` against the factored diagonal block
+/// at `(j0, j0)` (width `nb`), in place, row stride `lda`.
+fn trsm_tile(a: &mut [f64], lda: usize, j0: usize, nb: usize, i0: usize, m: usize) {
+    for i in 0..m {
+        let ri = (i0 + i) * lda + j0;
+        for j in 0..nb {
+            let rj = (j0 + j) * lda + j0;
+            let mut s = a[ri + j];
+            for t in 0..j {
+                s -= a[ri + t] * a[rj + t];
+            }
+            a[ri + j] = s / a[rj + j];
+        }
+    }
+}
+
+/// Trailing update `A22 -= L21 L21ᵀ` for the panel of width `kb` at
+/// column `j0`: tiled over the `m x m` trailing block starting at
+/// `(i0, i0)`, lower block-triangle only (the upper triangle is never
+/// read and is zeroed at the end of the factorization).
+fn syrk_tile(a: &mut [f64], lda: usize, j0: usize, kb: usize, i0: usize, m: usize) {
+    let mut bi = 0;
+    while bi < m {
+        let ib = BLOCK.min(m - bi);
+        let mut bj = 0;
+        while bj <= bi {
+            let jb = BLOCK.min(m - bj);
+            for i in 0..ib {
+                let ri = (i0 + bi + i) * lda;
+                let li = ri + j0;
+                let ci = ri + i0 + bj;
+                let jmax = if bj == bi { i + 1 } else { jb };
+                for j in 0..jmax {
+                    let lj = (i0 + bj + j) * lda + j0;
+                    let mut s = 0.0;
+                    for t in 0..kb {
+                        s += a[li + t] * a[lj + t];
+                    }
+                    a[ci + j] -= s;
+                }
+            }
+            bj += BLOCK;
+        }
+        bi += BLOCK;
+    }
+}
+
+/// Cache-blocked in-place lower Cholesky (right-looking, tile edge
+/// [`BLOCK`]); the strict upper triangle is zeroed. Agrees with
+/// [`potrf`] up to floating-point reassociation.
+pub fn potrf_blocked(a: &mut [f64], n: usize) -> Result<()> {
+    if a.len() != n * n {
+        bail!("potrf_blocked: buffer mismatch");
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = BLOCK.min(n - j0);
+        factor_diag(a, n, j0, jb)?;
+        let i0 = j0 + jb;
+        if i0 < n {
+            trsm_tile(a, n, j0, jb, i0, n - i0);
+            syrk_tile(a, n, j0, jb, i0, n - i0);
+        }
+        j0 = i0;
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            a[i * n + j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Cache-blocked `X Lᵀ = B` panel solve (same contract as [`trsm_rt`]):
+/// each column panel folds in the already-solved columns with a dense
+/// dot (the GEMM part), then solves against its diagonal block.
+pub fn trsm_rt_blocked(l: &[f64], k: usize, b: &mut [f64], m: usize) -> Result<()> {
+    if l.len() != k * k || b.len() != m * k {
+        bail!("trsm_rt_blocked: buffer mismatch");
+    }
+    let mut j0 = 0;
+    while j0 < k {
+        let jb = BLOCK.min(k - j0);
+        for i in 0..m {
+            let bi = i * k;
+            for j in 0..jb {
+                let lj = (j0 + j) * k;
+                let mut s = 0.0;
+                for t in 0..j0 {
+                    s += b[bi + t] * l[lj + t];
+                }
+                b[bi + j0 + j] -= s;
+            }
+            for j in 0..jb {
+                let lj = (j0 + j) * k;
+                let mut s = b[bi + j0 + j];
+                for t in 0..j {
+                    s -= b[bi + j0 + t] * l[lj + j0 + t];
+                }
+                b[bi + j0 + j] = s / l[lj + j0 + j];
+            }
+        }
+        j0 += jb;
+    }
+    Ok(())
+}
+
+/// Cache-blocked Schur update `C -= A Aᵀ` (same contract as
+/// [`syrk_sub`]): tiled over the inner dimension and the columns of C
+/// so each `A` panel stays cache-resident across a column tile.
+pub fn syrk_sub_blocked(c: &mut [f64], a: &[f64], m: usize, k: usize) -> Result<()> {
+    if c.len() != m * m || a.len() != m * k {
+        bail!("syrk_sub_blocked: buffer mismatch");
+    }
+    let mut t0 = 0;
+    while t0 < k {
+        let tb = BLOCK.min(k - t0);
+        let mut j0 = 0;
+        while j0 < m {
+            let jb = BLOCK.min(m - j0);
+            for i in 0..m {
+                let ai = i * k + t0;
+                let ci = i * m + j0;
+                for j in 0..jb {
+                    let aj = (j0 + j) * k + t0;
+                    let mut s = 0.0;
+                    for t in 0..tb {
+                        s += a[ai + t] * a[aj + t];
+                    }
+                    c[ci + j] -= s;
+                }
+            }
+            j0 += jb;
+        }
+        t0 += tb;
+    }
+    Ok(())
+}
+
+/// Blocked partial factorization writing straight into caller buffers:
+/// `panel` receives `[L11; L21]` row-major (`n x k`), `schur` the
+/// `(n-k) x (n-k)` Schur complement. Zero heap allocation — the hot
+/// path of the multifrontal drivers (the arena owns `schur`, the
+/// factorization output owns `panel`).
+pub fn partial_factor_into(
+    front: &[f64],
+    n: usize,
+    k: usize,
+    panel: &mut [f64],
+    schur: &mut [f64],
+) -> Result<()> {
+    if front.len() != n * n || k == 0 || k > n {
+        bail!("partial_factor_into: bad arguments n={n} k={k}");
+    }
+    let m = n - k;
+    if panel.len() != n * k || schur.len() != m * m {
+        bail!("partial_factor_into: output buffer mismatch");
+    }
+    for i in 0..n {
+        panel[i * k..(i + 1) * k].copy_from_slice(&front[i * n..i * n + k]);
+    }
+    {
+        let (l11, l21) = panel.split_at_mut(k * k);
+        potrf_blocked(l11, k)?;
+        trsm_rt_blocked(l11, k, l21, m)?;
+    }
+    for i in 0..m {
+        let src = (k + i) * n + k;
+        schur[i * m..(i + 1) * m].copy_from_slice(&front[src..src + m]);
+    }
+    syrk_sub_blocked(schur, &panel[k * k..], m, k)?;
+    Ok(())
+}
+
+/// Blocked full Cholesky of a front (returns lower factor).
+pub fn full_factor_blocked(front: &[f64], n: usize) -> Result<Vec<f64>> {
+    let mut l = front.to_vec();
+    potrf_blocked(&mut l, n)?;
+    Ok(l)
+}
+
 /// `C = A B^T` helper for tests.
 pub fn matmul_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     let mut c = vec![0f64; m * n];
@@ -282,5 +502,92 @@ mod tests {
     fn fro_norm_basics() {
         assert!((fro_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
         assert_eq!(fro_norm(&[]), 0.0);
+    }
+
+    fn max_rel_diff(a: &[f64], b: &[f64]) -> f64 {
+        let norm = fro_norm(a).max(1.0);
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+            / norm
+    }
+
+    #[test]
+    fn blocked_potrf_matches_naive_oracle() {
+        // sizes below, at, just above and at multiple tile edges
+        for &n in &[1usize, 5, 63, 64, 65, 130] {
+            let a = random_spd(n, 11 + n as u64);
+            let mut naive = a.clone();
+            potrf(&mut naive, n).unwrap();
+            let mut blocked = a.clone();
+            potrf_blocked(&mut blocked, n).unwrap();
+            let d = max_rel_diff(&naive, &blocked);
+            assert!(d < 1e-12, "n={n}: rel diff {d}");
+        }
+    }
+
+    #[test]
+    fn blocked_potrf_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(potrf_blocked(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn blocked_trsm_matches_naive_oracle() {
+        for &(k, m) in &[(7usize, 13usize), (64, 40), (100, 70)] {
+            let a = random_spd(k, 21 + k as u64);
+            let mut l = a.clone();
+            potrf(&mut l, k).unwrap();
+            let mut rng = Rng::new(5);
+            let b0: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let mut naive = b0.clone();
+            trsm_rt(&l, k, &mut naive, m).unwrap();
+            let mut blocked = b0.clone();
+            trsm_rt_blocked(&l, k, &mut blocked, m).unwrap();
+            let d = max_rel_diff(&naive, &blocked);
+            assert!(d < 1e-12, "k={k} m={m}: rel diff {d}");
+        }
+    }
+
+    #[test]
+    fn blocked_syrk_matches_naive_oracle() {
+        for &(m, k) in &[(9usize, 4usize), (70, 64), (65, 130)] {
+            let mut rng = Rng::new(31);
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let c0: Vec<f64> = (0..m * m).map(|_| rng.normal()).collect();
+            let mut naive = c0.clone();
+            syrk_sub(&mut naive, &a, m, k).unwrap();
+            let mut blocked = c0.clone();
+            syrk_sub_blocked(&mut blocked, &a, m, k).unwrap();
+            let d = max_rel_diff(&naive, &blocked);
+            assert!(d < 1e-12, "m={m} k={k}: rel diff {d}");
+        }
+    }
+
+    #[test]
+    fn partial_factor_into_matches_naive_partial() {
+        for &(n, k) in &[(20usize, 8usize), (130, 64), (96, 96)] {
+            let a = random_spd(n, 40 + n as u64);
+            let m = n - k;
+            let (l11, l21, schur) = partial_factor(&a, n, k).unwrap();
+            let mut panel = vec![0f64; n * k];
+            let mut schur_b = vec![0f64; m * m];
+            partial_factor_into(&a, n, k, &mut panel, &mut schur_b).unwrap();
+            let d11 = max_rel_diff(&l11, &panel[..k * k]);
+            let d21 = max_rel_diff(&l21, &panel[k * k..]);
+            let ds = max_rel_diff(&schur, &schur_b);
+            assert!(d11 < 1e-12 && d21 < 1e-12 && ds < 1e-11, "n={n} k={k}: {d11} {d21} {ds}");
+        }
+    }
+
+    #[test]
+    fn blocked_full_factor_reconstructs() {
+        let n = 100;
+        let a = random_spd(n, 77);
+        let l = full_factor_blocked(&a, n).unwrap();
+        let llt = matmul_nt(&l, &l, n, n, n);
+        let d = max_rel_diff(&a, &llt);
+        assert!(d < 1e-12, "rel diff {d}");
     }
 }

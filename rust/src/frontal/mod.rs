@@ -1,19 +1,28 @@
 //! Dense frontal-matrix math and the numeric multifrontal driver.
 //!
-//! * [`dense`] — pure-Rust dense Cholesky building blocks (the fallback
-//!   backend, and the oracle the PJRT path is validated against);
+//! * [`dense`] — pure-Rust dense Cholesky building blocks: cache-blocked
+//!   tiled production kernels plus the unblocked reference versions
+//!   (the property-test oracle, and what the PJRT path is validated
+//!   against);
+//! * [`arena`] — the front arena: reused front buffer, recycled
+//!   contribution-block slabs, global-row scatter map, and live/peak
+//!   memory accounting (DESIGN.md §9);
 //! * [`backend`] — the `FrontBackend` abstraction: `RustBackend`
-//!   (in-process f64) vs `PjrtBackend` (AOT HLO artifacts via
-//!   [`crate::runtime`], the TPU-shaped path);
+//!   (blocked in-process f64), `NaiveBackend` (unblocked oracle) and
+//!   `PjrtBackend` (AOT HLO artifacts via [`crate::runtime`], the
+//!   TPU-shaped path);
 //! * [`multifrontal`] — the numeric factorization: assemble fronts in
-//!   assembly-tree postorder, extend-add children contributions,
-//!   partial-factor each front, and emit the sparse factor.
+//!   assembly-tree postorder, extend-add children contributions via
+//!   precomputed relative indices, partial-factor each front, and emit
+//!   the sparse factor.
 
+pub mod arena;
 pub mod backend;
 pub mod dense;
 pub mod multifrontal;
 pub mod solve;
 
-pub use backend::{FrontBackend, PjrtBackend, RustBackend};
-pub use multifrontal::{factorize, Factorization};
+pub use arena::{FrontArena, MemGauge};
+pub use backend::{FrontBackend, NaiveBackend, PjrtBackend, RustBackend};
+pub use multifrontal::{factorize, factorize_with_arena, Factorization};
 pub use solve::{backward_solve_sn, forward_solve_sn, solve_sn};

@@ -14,6 +14,7 @@ use anyhow::{Context, Result};
 
 use crate::sparse::{AssemblyTree, CscMatrix};
 
+use super::arena::FrontArena;
 use super::backend::FrontBackend;
 use super::dense;
 
@@ -58,8 +59,86 @@ impl Factorization {
     }
 }
 
+/// Assemble the front of supernode `s` into `arena`'s front buffer:
+/// original matrix entries plus extend-add of the children's
+/// contribution blocks (fetched once each via `take_block`, released
+/// into the arena after use).
+///
+/// This is the production assembly path: original entries scatter
+/// through the arena's global-row → front-local map (filled in
+/// O(front) and reset by walking the same rows), and extend-add is a
+/// pure integer-indexed scatter/add over the precomputed relative
+/// indices `at.symbolic.rel` — no hashing, no per-front allocation.
+/// [`assemble_front`] below is the HashMap reference implementation it
+/// is property-tested against.
+pub fn assemble_front_arena<F>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    s: usize,
+    arena: &mut FrontArena,
+    mut take_block: F,
+) where
+    F: FnMut(usize) -> Option<Vec<f64>>,
+{
+    let sn = &at.symbolic.supernodes[s];
+    let nf = sn.front_order();
+    let width = sn.width;
+    arena.begin_front(nf);
+    {
+        let (front, glmap) = arena.front_and_glmap();
+        for (l, &g) in sn.rows.iter().enumerate() {
+            glmap[g] = l as u32;
+        }
+        for lj in 0..width {
+            let gj = sn.first_col + lj;
+            for (gi, v) in ap.col(gj) {
+                if gi >= gj {
+                    // A's pattern is contained in L's, so the row is
+                    // always present in the front
+                    let li = glmap[gi] as usize;
+                    debug_assert!(li < nf, "row {gi} missing from front {s}");
+                    front[li * nf + lj] = v;
+                    front[lj * nf + li] = v;
+                }
+            }
+        }
+        for &g in &sn.rows {
+            glmap[g] = u32::MAX;
+        }
+    }
+    for &c in &at.tree.nodes[s].children {
+        let c = c as usize;
+        let Some(block) = take_block(c) else {
+            // only children without a Schur complement may have no block
+            debug_assert!(
+                at.symbolic.rel[c].is_empty(),
+                "child {c} contribution missing (postorder violated)"
+            );
+            continue;
+        };
+        let rel = &at.symbolic.rel[c];
+        let m = rel.len();
+        debug_assert_eq!(block.len(), m * m);
+        {
+            let (front, _) = arena.front_and_glmap();
+            for (a, &ra) in rel.iter().enumerate() {
+                let fa = ra as usize * nf;
+                let brow = &block[a * m..(a + 1) * m];
+                for (&bv, &rb) in brow.iter().zip(rel.iter()) {
+                    front[fa + rb as usize] += bv;
+                }
+            }
+        }
+        arena.release_block(block);
+    }
+}
+
 /// Assemble the front of supernode `s`: original entries + children
 /// contributions (children Schur blocks are consumed from `contrib`).
+///
+/// Reference implementation (per-entry `HashMap` lookups); the hot
+/// paths use [`assemble_front_arena`], which must produce bit-identical
+/// fronts (see `indexed_assembly_matches_hashmap_reference`).
 pub fn assemble_front(
     at: &AssemblyTree,
     ap: &CscMatrix,
@@ -110,6 +189,82 @@ pub fn assemble_front(
     front
 }
 
+/// Assemble + factor one supernode through the arena path: the shared
+/// per-front step of the serial drivers ([`factorize_with_arena`] and
+/// `exec::execute_serial`). For non-root supernodes the Schur
+/// complement lands in `contrib[s]` (an arena slab); the panel — `[l]`
+/// for `width == nf`, `[L11; L21]` otherwise — in `panels[s]`. Returns
+/// the seconds spent in assembly.
+pub(crate) fn factor_front_arena(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    s: usize,
+    backend: &dyn FrontBackend,
+    arena: &mut FrontArena,
+    contrib: &mut [Option<Vec<f64>>],
+    panels: &mut [Vec<f64>],
+) -> Result<f64> {
+    let sn = &at.symbolic.supernodes[s];
+    let nf = sn.front_order();
+    let width = sn.width;
+    let t0 = std::time::Instant::now();
+    assemble_front_arena(at, ap, s, arena, |c| contrib[c].take());
+    let assembly = t0.elapsed().as_secs_f64();
+    // end_front / release_block run on the error paths too, so a
+    // failed factorization leaves the arena's live accounting at zero
+    // (the arena is documented as reusable across traversals)
+    if width == nf {
+        let result = backend
+            .full(arena.front(), nf)
+            .with_context(|| format!("full factor of supernode {s} (n={nf})"));
+        arena.end_front(nf);
+        panels[s] = result?;
+    } else {
+        let m = nf - width;
+        let mut panel = vec![0f64; nf * width];
+        let mut schur = arena.alloc_block(m * m);
+        let result = backend
+            .partial_into(arena.front(), nf, width, &mut panel, &mut schur)
+            .with_context(|| format!("partial factor of supernode {s} (n={nf}, k={width})"));
+        arena.end_front(nf);
+        if let Err(e) = result {
+            arena.release_block(schur);
+            return Err(e);
+        }
+        contrib[s] = Some(schur);
+        panels[s] = panel;
+    }
+    Ok(assembly)
+}
+
+/// Run the numeric multifrontal factorization of the permuted matrix
+/// `ap` (must be `at.symbolic.perm`-permuted) with `backend`, through a
+/// caller-provided [`FrontArena`] (the arena's peak accounting then
+/// covers the whole traversal).
+pub fn factorize_with_arena(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    backend: &dyn FrontBackend,
+    arena: &mut FrontArena,
+) -> Result<Factorization> {
+    let ns = at.symbolic.supernodes.len();
+    let mut panels: Vec<Vec<f64>> = vec![Vec::new(); ns];
+    let mut contrib: Vec<Option<Vec<f64>>> = vec![None; ns];
+    for &v in &at.tree.topo_up() {
+        if let Err(e) =
+            factor_front_arena(at, ap, v as usize, backend, arena, &mut contrib, &mut panels)
+        {
+            // return the pending contribution slabs so the caller's
+            // arena accounting drops back to zero after a failed run
+            for block in contrib.iter_mut().filter_map(Option::take) {
+                arena.release_block(block);
+            }
+            return Err(e);
+        }
+    }
+    Ok(Factorization { panels, n: ap.n })
+}
+
 /// Run the numeric multifrontal factorization of the permuted matrix
 /// `ap` (must be `at.symbolic.perm`-permuted) with `backend`.
 pub fn factorize(
@@ -117,40 +272,8 @@ pub fn factorize(
     ap: &CscMatrix,
     backend: &dyn FrontBackend,
 ) -> Result<Factorization> {
-    let ns = at.symbolic.supernodes.len();
-    let mut panels: Vec<Vec<f64>> = vec![Vec::new(); ns];
-    let mut contrib: HashMap<usize, Vec<f64>> = HashMap::new();
-    for &v in &at.tree.topo_up() {
-        let s = v as usize;
-        let sn = &at.symbolic.supernodes[s];
-        let nf = sn.front_order();
-        let width = sn.width;
-        let front = assemble_front(at, ap, s, &mut contrib);
-        if width == nf {
-            let l = backend
-                .full(&front, nf)
-                .with_context(|| format!("full factor of supernode {s} (n={nf})"))?;
-            panels[s] = l; // nf x nf == rows x width
-        } else {
-            let f = backend
-                .partial(&front, nf, width)
-                .with_context(|| format!("partial factor of supernode {s} (n={nf}, k={width})"))?;
-            // stack [L11; L21] into rows x width
-            let m = nf - width;
-            let mut panel = vec![0f64; nf * width];
-            for i in 0..width {
-                panel[i * width..(i + 1) * width]
-                    .copy_from_slice(&f.l11[i * width..(i + 1) * width]);
-            }
-            for i in 0..m {
-                panel[(width + i) * width..(width + i + 1) * width]
-                    .copy_from_slice(&f.l21[i * width..(i + 1) * width]);
-            }
-            contrib.insert(s, f.schur);
-            panels[s] = panel;
-        }
-    }
-    Ok(Factorization { panels, n: ap.n })
+    let mut arena = FrontArena::for_tree(at);
+    factorize_with_arena(at, ap, backend, &mut arena)
 }
 
 /// Relative factorization residual `‖P A Pᵀ − L Lᵀ‖_F / ‖A‖_F`
@@ -235,6 +358,98 @@ mod tests {
         let f = factorize(&at, &ap, &RustBackend).unwrap();
         let r = residual(&at, &ap, &f);
         assert!(r < 1e-12, "residual {r}");
+    }
+
+    #[test]
+    fn indexed_assembly_matches_hashmap_reference() {
+        // the arena/relative-index assembly must produce bit-identical
+        // fronts to the HashMap reference, on grids (fundamental and
+        // amalgamated) and random SPD matrices
+        let mut cases: Vec<(AssemblyTree, CscMatrix)> = vec![setup(9, 0), setup(10, 4)];
+        let mut rng = crate::util::rng::Rng::new(99);
+        for seed in 0..4usize {
+            let a = gen::random_spd(50 + seed * 13, 4, &mut rng);
+            let perm = order::reverse_cuthill_mckee(&a);
+            let at = symbolic::analyze(&a, &perm, seed).unwrap();
+            let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+            cases.push((at, ap));
+        }
+        for (case, (at, ap)) in cases.iter().enumerate() {
+            let ns = at.symbolic.supernodes.len();
+            let mut contrib_ref: HashMap<usize, Vec<f64>> = HashMap::new();
+            let mut contrib_new: Vec<Option<Vec<f64>>> = vec![None; ns];
+            let mut arena = FrontArena::for_tree(at);
+            for &v in &at.tree.topo_up() {
+                let s = v as usize;
+                let sn = &at.symbolic.supernodes[s];
+                let nf = sn.front_order();
+                let width = sn.width;
+                let f_ref = assemble_front(at, ap, s, &mut contrib_ref);
+                assemble_front_arena(at, ap, s, &mut arena, |c| contrib_new[c].take());
+                for (i, (&x, &y)) in f_ref.iter().zip(arena.front()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "case {case} snode {s} entry {i}: {x} vs {y}"
+                    );
+                }
+                // advance both paths with the same naive kernels so the
+                // next fronts see identical inputs
+                if width < nf {
+                    let (_, _, schur) = dense::partial_factor(&f_ref, nf, width).unwrap();
+                    contrib_ref.insert(s, schur.clone());
+                    contrib_new[s] = Some(schur);
+                }
+                arena.end_front(nf);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_arena_peak_matches_symbolic_prediction() {
+        use crate::frontal::arena::symbolic_peak_f64s;
+        for (at, ap) in [setup(8, 0), setup(10, 4)] {
+            let mut arena = FrontArena::for_tree(&at);
+            let f = factorize_with_arena(&at, &ap, &RustBackend, &mut arena).unwrap();
+            assert!(residual(&at, &ap, &f) < 1e-12);
+            assert_eq!(arena.peak_f64s(), symbolic_peak_f64s(&at));
+            assert_eq!(arena.live_f64s(), 0, "arena leaked live words");
+        }
+    }
+
+    #[test]
+    fn failed_factorization_leaves_arena_clean() {
+        use crate::frontal::backend::{FrontFactor, NaiveBackend};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        /// Succeeds for the first few fronts (so contribution slabs
+        /// accumulate), then fails mid-traversal.
+        struct FailAfter(AtomicUsize);
+        impl FrontBackend for FailAfter {
+            fn partial(&self, front: &[f64], n: usize, k: usize) -> Result<FrontFactor> {
+                if self.0.fetch_add(1, Ordering::Relaxed) >= 5 {
+                    anyhow::bail!("injected mid-traversal failure");
+                }
+                NaiveBackend.partial(front, n, k)
+            }
+            fn full(&self, front: &[f64], n: usize) -> Result<Vec<f64>> {
+                NaiveBackend.full(front, n)
+            }
+            fn name(&self) -> &'static str {
+                "fail-after"
+            }
+        }
+
+        let (at, ap) = setup(8, 0);
+        let mut arena = FrontArena::for_tree(&at);
+        let err = factorize_with_arena(&at, &ap, &FailAfter(AtomicUsize::new(0)), &mut arena)
+            .expect_err("backend stops after 5 fronts");
+        assert!(format!("{err:#}").contains("injected mid-traversal failure"));
+        assert_eq!(arena.live_f64s(), 0, "failed run left live words in the arena");
+        // the same arena stays usable for a subsequent successful run
+        let f = factorize_with_arena(&at, &ap, &RustBackend, &mut arena).unwrap();
+        assert!(residual(&at, &ap, &f) < 1e-12);
+        assert_eq!(arena.live_f64s(), 0);
     }
 
     #[test]

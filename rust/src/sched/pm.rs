@@ -45,6 +45,18 @@ pub struct PmSolution {
     alpha: f64,
 }
 
+/// Scatter per-SP-node leaf ratios back to task ids
+/// (`out[task] = ratio[leaf node]`; non-leaf entries of `out` are left
+/// untouched). The one copy of the task-id mapping shared by the DES
+/// policy paths and [`super::SchedWorkspace::pm_task_ratios`].
+pub(crate) fn scatter_leaf_ratios(g: &SpGraph, ratio: &[f64], out: &mut [f64]) {
+    for &v in g.topo() {
+        if let SpNode::Leaf { task: Some(t), .. } = g.nodes[v as usize] {
+            out[t as usize] = ratio[v as usize];
+        }
+    }
+}
+
 /// Solve into `sol`'s existing buffers (clear + resize in place): the
 /// allocation-free core both [`PmSolution::solve`] and
 /// [`super::SchedWorkspace::solve`] drive. Traversals use the graph's

@@ -26,6 +26,7 @@ pub struct SchedWorkspace {
     sol: PmSolution,
     spans: Vec<TaskSpan>,
     agreg: AgregScratch,
+    ratios: Vec<f64>,
 }
 
 impl Default for SchedWorkspace {
@@ -40,7 +41,21 @@ impl SchedWorkspace {
             sol: PmSolution::empty(crate::DEFAULT_ALPHA),
             spans: Vec::new(),
             agreg: AgregScratch::default(),
+            ratios: Vec::new(),
         }
+    }
+
+    /// Solve the PM allocation for `g` and scatter the leaf ratios back
+    /// to task ids (`n_tasks` entries) through the reused per-task
+    /// buffer — the DES's PM policy path, allocation-free on reuse.
+    /// Values are bit-identical to mapping [`PmSolution::solve`]'s leaf
+    /// ratios by hand.
+    pub fn pm_task_ratios(&mut self, g: &SpGraph, alpha: f64, n_tasks: usize) -> &[f64] {
+        pm::solve_into(g, alpha, &mut self.sol);
+        self.ratios.clear();
+        self.ratios.resize(n_tasks, 0.0);
+        pm::scatter_leaf_ratios(g, &self.sol.ratio, &mut self.ratios);
+        &self.ratios
     }
 
     /// Solve the PM allocation for `g` into the reused buffers. The
@@ -137,6 +152,25 @@ mod tests {
             // and the aggregated graph satisfies the postcondition
             let min = ws.solve(&a, 0.9).min_task_share(&a, 4.0);
             assert!(min >= 1.0 - 1e-6, "min share {min}");
+        }
+    }
+
+    #[test]
+    fn pm_task_ratios_match_one_shot_mapping() {
+        let mut ws = SchedWorkspace::new();
+        // reuse across trees of different sizes: stale entries must not leak
+        for seed in [3usize, 0, 2, 1] {
+            let t = tree(seed);
+            let g = SpGraph::from_tree(&t);
+            let got = ws.pm_task_ratios(&g, 0.8, t.len()).to_vec();
+            let sol = PmSolution::solve(&g, 0.8);
+            let mut want = vec![0f64; t.len()];
+            for &v in g.topo() {
+                if let crate::model::SpNode::Leaf { task: Some(tk), .. } = g.nodes[v as usize] {
+                    want[tk as usize] = sol.ratio[v as usize];
+                }
+            }
+            assert_eq!(got, want);
         }
     }
 

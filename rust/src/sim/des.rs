@@ -83,20 +83,16 @@ fn pm_leaf_ratios(
     n: usize,
 ) -> Vec<f64> {
     let mut r = vec![0f64; n];
-    for &v in g.topo() {
-        if let crate::model::SpNode::Leaf { task: Some(t), .. } = g.nodes[v as usize] {
-            r[t as usize] = sol.ratio[v as usize];
-        }
-    }
+    crate::sched::pm::scatter_leaf_ratios(g, &sol.ratio, &mut r);
     r
 }
 
 /// [`simulate`] with a reusable [`crate::sched::SchedWorkspace`]: the
-/// PM policy's closed-form solve runs through the workspace buffers, so
-/// sweeping many trees/α values (the batch and bench paths) does not
-/// re-allocate the solver arrays per simulation (the per-task ratio
-/// vector is still materialized). Other policies delegate to
-/// [`simulate`] unchanged.
+/// PM policy's closed-form solve runs through the workspace buffers,
+/// and the per-task ratio vector lives in the workspace too
+/// (`pm_task_ratios`), so sweeping many trees/α values (the batch and
+/// bench paths) performs no per-simulation allocation in the policy
+/// setup. Other policies delegate to [`simulate`] unchanged.
 pub fn simulate_with_workspace(
     tree: &TaskTree,
     alpha: f64,
@@ -107,9 +103,8 @@ pub fn simulate_with_workspace(
     match policy {
         Policy::Pm => {
             let g = crate::model::SpGraph::from_tree(tree);
-            let sol = ws.solve(&g, alpha);
-            let r = pm_leaf_ratios(&g, sol, tree.len());
-            simulate_with_ratios(tree, alpha, p, &r)
+            let r = ws.pm_task_ratios(&g, alpha, tree.len());
+            simulate_with_ratios(tree, alpha, p, r)
         }
         _ => simulate(tree, alpha, p, policy),
     }
