@@ -62,6 +62,13 @@ pub struct SymbolicFactorization {
     pub supernodes: Vec<Supernode>,
     /// Supernode index of every column.
     pub col_to_snode: Vec<usize>,
+    /// Relative indices for extend-add: `rel[c][a]` is the
+    /// parent-front-local row of the `a`-th contribution row of
+    /// supernode `c` (i.e. of `supernodes[c].rows[width + a]`). Empty
+    /// for supernodes without a Schur complement (roots). Precomputed
+    /// here so numeric assembly is pure integer-indexed scatter/add —
+    /// no hashing on the hot path.
+    pub rel: Vec<Vec<u32>>,
 }
 
 /// The assembly tree: the task tree the schedulers consume plus the
@@ -191,6 +198,40 @@ pub fn analyze(a: &CscMatrix, perm: &[usize], amalgamate: usize) -> Result<Assem
     }
     let tree = TaskTree::from_parents(&parents, &lens)?;
 
+    // 7. relative indices: map each supernode's contribution rows into
+    // its (tree-)parent's front-local positions by a two-pointer merge
+    // over the sorted row lists. The assembly-tree invariant (a child's
+    // contribution pattern is contained in the parent front) makes the
+    // merge exact; the numeric layer consumes these for hash-free
+    // extend-add.
+    let mut rel: Vec<Vec<u32>> = vec![Vec::new(); num_snodes];
+    for c in 0..num_snodes {
+        let p = parents[c];
+        if p == c {
+            continue;
+        }
+        let csn = &supernodes[c];
+        let crows = &csn.rows[csn.width..];
+        if crows.is_empty() {
+            continue;
+        }
+        let prows = &supernodes[p].rows;
+        let mut out = Vec::with_capacity(crows.len());
+        let mut j = 0usize;
+        for &g in crows {
+            while j < prows.len() && prows[j] < g {
+                j += 1;
+            }
+            anyhow::ensure!(
+                j < prows.len() && prows[j] == g,
+                "contribution row {g} of supernode {c} missing from parent {p} front"
+            );
+            out.push(j as u32);
+            j += 1;
+        }
+        rel[c] = out;
+    }
+
     Ok(AssemblyTree {
         tree,
         symbolic: SymbolicFactorization {
@@ -199,6 +240,7 @@ pub fn analyze(a: &CscMatrix, perm: &[usize], amalgamate: usize) -> Result<Assem
             l_pattern,
             supernodes,
             col_to_snode,
+            rel,
         },
     })
 }
@@ -321,6 +363,40 @@ mod tests {
         at.tree.validate().unwrap();
         let total: usize = at.symbolic.supernodes.iter().map(|s| s.width).sum();
         assert_eq!(total, 80);
+    }
+
+    #[test]
+    fn relative_indices_agree_with_row_search() {
+        // rel[c][a] must be exactly the position of the child's a-th
+        // contribution row inside the parent's sorted row list, for
+        // fundamental and amalgamated trees alike
+        for at in [analyze_grid(9, 0), analyze_grid(9, 4)] {
+            let sym = &at.symbolic;
+            assert_eq!(sym.rel.len(), sym.supernodes.len());
+            for (s, node) in at.tree.nodes.iter().enumerate() {
+                for &c in &node.children {
+                    let c = c as usize;
+                    let csn = &sym.supernodes[c];
+                    let crows = &csn.rows[csn.width..];
+                    assert_eq!(sym.rel[c].len(), crows.len());
+                    let prows = &sym.supernodes[s].rows;
+                    for (a, &g) in crows.iter().enumerate() {
+                        let want = prows.binary_search(&g).unwrap();
+                        assert_eq!(sym.rel[c][a] as usize, want, "snode {c} row {a}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roots_have_no_relative_indices() {
+        let at = analyze_grid(8, 2);
+        for (s, sn) in at.symbolic.supernodes.iter().enumerate() {
+            if sn.width == sn.front_order() {
+                assert!(at.symbolic.rel[s].is_empty());
+            }
+        }
     }
 
     #[test]
