@@ -1,5 +1,9 @@
 //! Shared helpers for the harness-free bench binaries.
 
+// each bench binary compiles this module afresh and uses a different
+// subset of the helpers — unused ones are fine
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time a closure; returns (result, seconds).
@@ -36,4 +40,20 @@ pub fn header(id: &str, what: &str) {
     println!("================================================================");
     println!("bench {id}: {what}");
     println!("================================================================");
+}
+
+/// Repo-root path for a machine-readable bench artifact. Anchored at
+/// `CARGO_MANIFEST_DIR` (compile-time), **not** the process CWD —
+/// `cargo bench` offers no CWD guarantee, and CI asserts these files
+/// exist at the repo root before archiving them.
+pub fn bench_output_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(name)
+}
+
+/// True when the bench binary was invoked with `--<name>` (args after
+/// `cargo bench ... --` reach us verbatim; harness-style flags that
+/// other runners inject are simply never matched).
+pub fn has_flag(name: &str) -> bool {
+    let want = format!("--{name}");
+    std::env::args().any(|a| a == want)
 }

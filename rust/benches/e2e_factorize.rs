@@ -1,20 +1,27 @@
-//! End-to-end factorization bench (EXPERIMENTS.md E14): the complete
-//! pipeline — analysis → PM schedule → numeric multifrontal execution —
-//! timed for the parallel Rust backend (worker sweep), the naive-kernel
-//! baseline, and the PJRT accelerator-queue backend when artifacts are
-//! present. Writes the machine-readable **`BENCH_e2e.json`** at the
+//! End-to-end factorization bench (EXPERIMENTS.md E14/E15): the
+//! complete pipeline — analysis → PM schedule → numeric multifrontal
+//! execution — timed for the parallel Rust backend (worker sweep), the
+//! naive-kernel baseline, the PJRT accelerator-queue backend when
+//! artifacts are present, and (E15) the **malleable** executor against
+//! the task-parallel one on a 3D problem whose root front dominates
+//! the flops. Writes the machine-readable **`BENCH_e2e.json`** at the
 //! repo root (per worker count: Mflop/s, assembly fraction, peak front
-//! bytes, parallel efficiency), the numeric-pipeline counterpart of
+//! bytes, parallel efficiency; plus `malleable_speedup_8w` and
+//! per-width team occupancy), the numeric-pipeline counterpart of
 //! `BENCH_sched.json`.
+//!
+//! Flags: `--malleable` (default on) / `--no-malleable` toggle the E15
+//! section; `MALLTREE_BENCH_GRID` scales the 2D sweep,
+//! `MALLTREE_BENCH_GRID3D` the malleable comparison.
 
 mod bench_util;
 
-use bench_util::{env_usize, header, timed};
-use malltree::exec::{execute_parallel, execute_serial, ExecReport};
-use malltree::frontal::{multifrontal, NaiveBackend, PjrtBackend, RustBackend};
+use bench_util::{bench_output_path, env_usize, has_flag, header, timed};
+use malltree::exec::{execute_malleable, execute_parallel, execute_serial, ExecReport};
+use malltree::frontal::{multifrontal, Factorization, NaiveBackend, PjrtBackend, RustBackend};
 use malltree::metrics::Table;
-use malltree::sched::{PmSchedule, Profile};
-use malltree::sparse::{gen, order, symbolic};
+use malltree::sched::{PmSchedule, Profile, Schedule};
+use malltree::sparse::{gen, order, symbolic, AssemblyTree, CscMatrix};
 
 struct Row {
     key: String,
@@ -24,19 +31,145 @@ struct Row {
     residual: f64,
 }
 
+fn analyze_2d(k: usize) -> (AssemblyTree, CscMatrix) {
+    let a = gen::grid_laplacian_2d(k);
+    let perm = order::nested_dissection_2d(k);
+    let at = symbolic::analyze(&a, &perm, 4).unwrap();
+    let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+    (at, ap)
+}
+
+fn analyze_3d(k: usize) -> (AssemblyTree, CscMatrix) {
+    let a = gen::grid_laplacian_3d(k);
+    let perm = order::nested_dissection_3d(k);
+    let at = symbolic::analyze(&a, &perm, 8).unwrap();
+    let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+    (at, ap)
+}
+
+fn assert_bitwise(reference: &Factorization, got: &Factorization, what: &str) {
+    for (s, (a, b)) in reference.panels.iter().zip(&got.panels).enumerate() {
+        assert_eq!(a.len(), b.len(), "{what}: snode {s} panel length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{what}: snode {s} entry {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// The E15 malleable-vs-task-parallel comparison. Returns JSON lines
+/// plus the 8-worker speedup.
+fn malleable_section(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    json: &mut Vec<String>,
+) -> f64 {
+    let widest = at
+        .symbolic
+        .supernodes
+        .iter()
+        .map(|s| s.front_order())
+        .max()
+        .unwrap();
+    let root_share = {
+        let root_flops: f64 = at
+            .symbolic
+            .supernodes
+            .iter()
+            .filter(|s| s.front_order() * 2 > widest)
+            .map(|s| s.flops())
+            .sum();
+        root_flops / at.tree.total_work()
+    };
+    println!(
+        "malleable comparison: {} supernodes, widest front {widest}, \
+         wide-front flop share {:.0}%",
+        at.tree.len(),
+        100.0 * root_share
+    );
+
+    // serial blocked reference: both executors must be bit-identical
+    let (reference, _) = execute_serial(at, ap, schedule, &RustBackend).unwrap();
+
+    let mut table = Table::new(&[
+        "executor", "workers", "wall (s)", "Mflop/s", "efficiency", "avg team", "max team",
+    ]);
+    let mut tp_wall = std::collections::BTreeMap::new();
+    let mut ml_wall = std::collections::BTreeMap::new();
+    let mut base_wall = None;
+    for workers in [1usize, 2, 4, 8] {
+        for malleable in [false, true] {
+            let ((fact, report), _) = timed(|| {
+                if malleable {
+                    execute_malleable(at, ap, schedule, &RustBackend, workers).unwrap()
+                } else {
+                    execute_parallel(at, ap, schedule, &RustBackend, workers).unwrap()
+                }
+            });
+            let label = if malleable { "malleable" } else { "task-parallel" };
+            assert_bitwise(&reference, &fact, label);
+            let base = *base_wall.get_or_insert(report.wall_seconds);
+            let efficiency = base / (workers as f64 * report.wall_seconds.max(1e-12));
+            table.row(&[
+                label.into(),
+                format!("{workers}"),
+                format!("{:.3}", report.wall_seconds),
+                format!("{:.1}", report.flop_rate() / 1e6),
+                format!("{efficiency:.2}"),
+                format!("{:.2}", report.avg_team()),
+                format!("{}", report.max_team()),
+            ]);
+            if malleable {
+                ml_wall.insert(workers, report.wall_seconds);
+            } else {
+                tp_wall.insert(workers, report.wall_seconds);
+            }
+            json.push(format!(
+                "  \"e2e_{}_workers_{workers}\": {{\"wall_s\": {:.6}, \"mflops\": {:.2}, \
+                 \"parallel_efficiency\": {efficiency:.4}, \"avg_team\": {:.4}, \
+                 \"max_team\": {}}}",
+                if malleable { "malleable" } else { "taskpar" },
+                report.wall_seconds,
+                report.flop_rate() / 1e6,
+                report.avg_team(),
+                report.max_team(),
+            ));
+            if malleable && workers == 8 {
+                for occ in report.occupancy() {
+                    println!(
+                        "  occupancy ({}, {}]: {} fronts, avg team {:.2}, max team {}",
+                        occ.lo,
+                        if occ.hi == usize::MAX { "inf".into() } else { occ.hi.to_string() },
+                        occ.fronts,
+                        occ.avg_team,
+                        occ.max_team
+                    );
+                }
+            }
+        }
+    }
+    print!("{}", table.render());
+    let speedup = tp_wall[&8] / ml_wall[&8].max(1e-12);
+    println!("malleable speedup at 8 workers: {speedup:.3}x");
+    json.push(format!(
+        "  \"malleable_widest_front\": {widest}, \"malleable_root_flop_share\": {root_share:.4}, \
+         \"malleable_speedup_8w\": {speedup:.4}"
+    ));
+    speedup
+}
+
 fn main() {
     header("e2e_factorize", "grid Laplacian multifrontal factorization");
     let k = env_usize("GRID", 40);
+    let k3 = env_usize("GRID3D", 14);
+    let malleable_on = !has_flag("no-malleable") || has_flag("malleable");
     let alpha = 0.9;
     let p = 8.0;
 
-    let ((at, ap), secs) = timed(|| {
-        let a = gen::grid_laplacian_2d(k);
-        let perm = order::nested_dissection_2d(k);
-        let at = symbolic::analyze(&a, &perm, 4).unwrap();
-        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
-        (at, ap)
-    });
+    let ((at, ap), secs) = timed(|| analyze_2d(k));
     println!(
         "analysis: grid {k}x{k}, {} supernodes, {:.3e} flops ({secs:.2}s)",
         at.tree.len(),
@@ -139,14 +272,35 @@ fn main() {
     }
     print!("{}", table.render());
 
+    // E15: malleable vs task-parallel on a root-dominated 3D problem
+    let mut extra_json: Vec<String> = Vec::new();
+    if malleable_on {
+        println!();
+        header(
+            "e2e_factorize --malleable",
+            "share-driven worker teams vs task parallelism",
+        );
+        let ((at3, ap3), secs) = timed(|| analyze_3d(k3));
+        println!(
+            "analysis: grid {k3}x{k3}x{k3}, {} supernodes, {:.3e} flops ({secs:.2}s)",
+            at3.tree.len(),
+            at3.tree.total_work()
+        );
+        let pm3 = PmSchedule::for_tree(&at3.tree, alpha, &Profile::constant(p));
+        malleable_section(&at3, &ap3, &pm3.schedule, &mut extra_json);
+    } else {
+        println!("(malleable comparison skipped: --no-malleable)");
+    }
+
     // Machine-readable perf trajectory (BENCH_e2e.json at repo root).
     let mut json = String::from("{\n");
     json.push_str(&format!(
-        "  \"grid\": {k},\n  \"supernodes\": {},\n  \"total_flops\": {:.6e},\n",
+        "  \"grid\": {k},\n  \"grid3d\": {k3},\n  \"supernodes\": {},\n  \
+         \"total_flops\": {:.6e},\n",
         at.tree.len(),
         at.tree.total_work()
     ));
-    for (i, row) in rows.iter().enumerate() {
+    for row in rows.iter() {
         let efficiency = match row.efficiency {
             Some(e) => format!("{e:.4}"),
             None => "null".into(),
@@ -154,19 +308,24 @@ fn main() {
         json.push_str(&format!(
             "  \"{}\": {{\"wall_s\": {:.6}, \"mflops\": {:.2}, \"assembly_fraction\": {:.4}, \
              \"peak_front_bytes\": {}, \"parallel_efficiency\": {efficiency}, \
-             \"residual\": {:.3e}}}{}\n",
+             \"residual\": {:.3e}}},\n",
             row.key,
             row.report.wall_seconds,
             row.report.flop_rate() / 1e6,
             row.report.assembly_fraction(),
             row.report.peak_front_bytes,
             row.residual,
-            if i + 1 == rows.len() { "" } else { "," }
         ));
     }
-    json.push_str("}\n");
-    match std::fs::write("BENCH_e2e.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_e2e.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_e2e.json: {e}"),
+    json.push_str(&extra_json.join(",\n"));
+    if extra_json.is_empty() {
+        // drop the dangling comma of the last worker row
+        json.truncate(json.trim_end_matches(",\n").len());
+    }
+    json.push_str("\n}\n");
+    let out = bench_output_path("BENCH_e2e.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
     }
 }

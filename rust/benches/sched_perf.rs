@@ -298,8 +298,10 @@ fn main() {
         ));
     }
     json.push_str("}\n");
-    match std::fs::write("BENCH_sched.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_sched.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_sched.json: {e}"),
+    // repo-root path via CARGO_MANIFEST_DIR, not the bench CWD
+    let out = bench_util::bench_output_path("BENCH_sched.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
     }
 }

@@ -225,7 +225,7 @@ pub fn batch(args: &mut Args) -> Result<()> {
 }
 
 pub fn factorize(args: &mut Args) -> Result<()> {
-    use crate::exec::{execute_parallel, execute_serial};
+    use crate::exec::{execute_malleable, execute_parallel, execute_serial};
     use crate::frontal::{multifrontal, NaiveBackend, PjrtBackend, RustBackend};
 
     let (name, a, perm) = load_problem(args)?;
@@ -233,6 +233,10 @@ pub fn factorize(args: &mut Args) -> Result<()> {
     let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
     let p = args.get_f64("p", 8.0)?;
     let workers = args.get_usize("workers", 4)?;
+    // --malleable: realize the schedule's fractional shares as worker
+    // teams per front (share-driven team sizes + intra-front tile
+    // parallelism) instead of one worker per front
+    let malleable = args.has_flag("malleable");
     // backend selection: blocked tiled kernels (default), the unblocked
     // naive oracle, or the PJRT accelerator queue (--pjrt is kept as an
     // alias for --backend pjrt)
@@ -250,19 +254,41 @@ pub fn factorize(args: &mut Args) -> Result<()> {
     );
     let (fact, report) = match backend_name.as_str() {
         "pjrt" => {
+            if malleable {
+                bail!("--malleable needs a thread-crew backend (blocked|naive), not pjrt");
+            }
             let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
             let rt = std::sync::Arc::new(crate::runtime::Runtime::cpu(&dir)?);
             println!("pjrt platform: {}", rt.platform());
             let backend = PjrtBackend::new(rt);
             execute_serial(&at, &ap, &pm.schedule, &backend)?
         }
+        "naive" if malleable => {
+            execute_malleable(&at, &ap, &pm.schedule, &NaiveBackend, workers)?
+        }
         "naive" => execute_parallel(&at, &ap, &pm.schedule, &NaiveBackend, workers)?,
+        "blocked" | "rust" if malleable => {
+            execute_malleable(&at, &ap, &pm.schedule, &RustBackend, workers)?
+        }
         "blocked" | "rust" => {
             execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers)?
         }
         other => bail!("unknown --backend {other} (blocked|naive|pjrt)"),
     };
     println!("{}", report.render());
+    if report.malleable {
+        for row in report.occupancy() {
+            let hi = if row.hi == usize::MAX {
+                "∞".to_string()
+            } else {
+                row.hi.to_string()
+            };
+            println!(
+                "  fronts of order ({}, {hi}]: {} fronts, avg team {:.2}, max team {}",
+                row.lo, row.fronts, row.avg_team, row.max_team
+            );
+        }
+    }
     let r = multifrontal::residual(&at, &ap, &fact);
     println!("relative residual |PAP' - LL'|_F / |A|_F = {r:.3e}");
     if r > 1e-3 {

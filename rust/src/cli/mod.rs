@@ -5,8 +5,8 @@
 //! malltree schedule  --grid2d 32 --alpha 0.9 -p 40       makespans: PM vs baselines
 //! malltree batch     --trees 200 --threads 8 -p 40       multi-tenant batch throughput
 //! malltree simulate  --trees 100 --alpha 0.9 -p 40       Figure 13/14-style rows
-//! malltree factorize --grid2d 24 [--workers 4] [--backend blocked|naive|pjrt]
-//!                                                        numeric factorization + residual
+//! malltree factorize --grid2d 24 [--workers 4] [--malleable]
+//!                    [--backend blocked|naive|pjrt]      numeric factorization + residual
 //! malltree kernelsim --kind cholesky --n 20000 --b 256   Figure 2-6-style T(p) curve
 //! malltree dataset   --out DIR --trees 600               write the workload corpus
 //! malltree figures                                       regenerate every paper table/figure
@@ -56,6 +56,7 @@ fn usage() -> String {
      \n\
      common flags: --grid2d K | --grid3d K | --mtx FILE | --tree FILE,\n\
      \x20 --alpha A, -p N, --amalgamate W, --seed S, --workers N,\n\
+     \x20 --malleable (schedule-share-driven worker teams per front),\n\
      \x20 --backend blocked|naive|pjrt (--pjrt is an alias)\n"
         .to_string()
 }

@@ -10,16 +10,26 @@
 //! * **wall time** is the real execution of each front through a
 //!   [`FrontBackend`]. The PJRT backend is a single accelerator
 //!   command queue (`Rc` client), so `execute_serial` streams fronts
-//!   in schedule order; `execute_parallel` adds true thread-crew tree
-//!   parallelism for `Send + Sync` backends (the pure-Rust one).
+//!   in schedule order; `execute_parallel` adds thread-crew tree
+//!   parallelism for `Send + Sync` backends (the pure-Rust one); and
+//!   `execute_malleable` realizes the paper's malleable-task model in
+//!   wall time too — a [`TeamPlan`] turns fractional schedule shares
+//!   into integer worker teams per front (re-rounded at every
+//!   completion event), and team-capable backends factor a front's
+//!   tiles cooperatively through the
+//!   [`crate::frontal::FrontTeamJob`] cursor.
 //!
-//! Both paths produce bit-identical factors to
+//! All paths produce bit-identical factors to
 //! [`crate::frontal::factorize`]; tests enforce it.
+//!
+//! [`FrontBackend`]: crate::frontal::FrontBackend
 
 mod report;
 mod shares;
+pub mod team;
 mod worker;
 
 pub use report::ExecReport;
 pub use shares::integer_shares;
-pub use worker::{execute_parallel, execute_serial};
+pub use team::{occupancy_by_width, OccupancyRow, TeamPlan};
+pub use worker::{execute_malleable, execute_parallel, execute_serial};

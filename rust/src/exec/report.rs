@@ -1,5 +1,7 @@
 //! Execution reports.
 
+use super::team::{occupancy_by_width, OccupancyRow};
+
 /// What an executor run produced, beyond the factorization itself.
 #[derive(Debug, Clone)]
 pub struct ExecReport {
@@ -22,6 +24,12 @@ pub struct ExecReport {
     pub backend: String,
     /// Worker threads (1 for the serial accelerator-queue path).
     pub workers: usize,
+    /// Whether schedule shares were realized as worker teams.
+    pub malleable: bool,
+    /// Per completed front: `(front order, realized team size)` — the
+    /// measurement behind [`ExecReport::occupancy`]. Empty for the
+    /// serial path.
+    pub team_log: Vec<(usize, usize)>,
 }
 
 impl ExecReport {
@@ -45,8 +53,31 @@ impl ExecReport {
         }
     }
 
+    /// Team occupancy bucketed by front width: the evidence that the
+    /// malleable executor gives wide (root) fronts wide teams while
+    /// leaf fronts keep one worker.
+    pub fn occupancy(&self) -> Vec<OccupancyRow> {
+        occupancy_by_width(&self.team_log)
+    }
+
+    /// Mean team size across completed fronts (1.0 when no teams were
+    /// formed or the log is empty).
+    pub fn avg_team(&self) -> f64 {
+        if self.team_log.is_empty() {
+            1.0
+        } else {
+            self.team_log.iter().map(|&(_, t)| t).sum::<usize>() as f64
+                / self.team_log.len() as f64
+        }
+    }
+
+    /// Largest team any front ran with.
+    pub fn max_team(&self) -> usize {
+        self.team_log.iter().map(|&(_, t)| t).max().unwrap_or(1)
+    }
+
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "backend={} workers={} tasks={} flops={:.3e} wall={:.3}s ({:.2} Gflop/s) \
              assembly={:.1}% peak_front={:.1} MiB virtual_makespan={:.3e}",
             self.backend,
@@ -58,7 +89,15 @@ impl ExecReport {
             100.0 * self.assembly_fraction(),
             self.peak_front_bytes as f64 / (1024.0 * 1024.0),
             self.virtual_makespan,
-        )
+        );
+        if self.malleable {
+            s.push_str(&format!(
+                " avg_team={:.2} max_team={}",
+                self.avg_team(),
+                self.max_team()
+            ));
+        }
+        s
     }
 }
 
@@ -66,9 +105,8 @@ impl ExecReport {
 mod tests {
     use super::*;
 
-    #[test]
-    fn flop_rate_handles_zero_time() {
-        let r = ExecReport {
+    fn base() -> ExecReport {
+        ExecReport {
             virtual_makespan: 1.0,
             wall_seconds: 0.0,
             assembly_seconds: 0.0,
@@ -77,9 +115,19 @@ mod tests {
             flops: 0.0,
             backend: "x".into(),
             workers: 1,
-        };
+            malleable: false,
+            team_log: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn flop_rate_handles_zero_time() {
+        let r = base();
         assert_eq!(r.flop_rate(), 0.0);
         assert_eq!(r.assembly_fraction(), 0.0);
+        assert_eq!(r.avg_team(), 1.0);
+        assert_eq!(r.max_team(), 1);
+        assert!(r.occupancy().is_empty());
     }
 
     #[test]
@@ -93,6 +141,7 @@ mod tests {
             flops: 2e9,
             backend: "rust-f64".into(),
             workers: 4,
+            ..base()
         };
         let s = r.render();
         assert!(s.contains("rust-f64"));
@@ -101,5 +150,21 @@ mod tests {
         // 0.25 s of assembly across a 4 s busy budget
         assert!((r.assembly_fraction() - 0.0625).abs() < 1e-12);
         assert!(s.contains("peak_front=1.0 MiB"));
+        assert!(!s.contains("avg_team"), "non-malleable run rendered team stats");
+    }
+
+    #[test]
+    fn render_includes_team_stats_for_malleable_runs() {
+        let r = ExecReport {
+            malleable: true,
+            team_log: vec![(32, 1), (32, 1), (300, 6)],
+            ..base()
+        };
+        let s = r.render();
+        assert!(s.contains("max_team=6"), "{s}");
+        assert!((r.avg_team() - 8.0 / 3.0).abs() < 1e-12);
+        let occ = r.occupancy();
+        assert_eq!(occ.len(), 2);
+        assert_eq!(occ[1].max_team, 6);
     }
 }

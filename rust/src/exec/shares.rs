@@ -30,7 +30,11 @@ pub fn integer_shares(raw: &[f64], total: usize) -> Vec<usize> {
         .enumerate()
         .map(|(i, &s)| (s - s.floor(), i))
         .collect();
-    rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // total_cmp: a NaN share (degenerate schedule input) must not
+    // panic — the executor's TeamPlan calls this under its queue
+    // mutex, where a panic would poison the whole crew. NaN
+    // remainders sort last and the `frac > 0.0` guard skips them.
+    rema.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut left = budget.saturating_sub(used);
     for (frac, i) in rema {
         if left == 0 {
@@ -68,6 +72,17 @@ mod tests {
     fn never_exceeds_total() {
         let s = integer_shares(&[0.9, 0.9, 0.9], 2);
         assert!(s.iter().sum::<usize>() <= 2);
+    }
+
+    #[test]
+    fn nan_shares_do_not_panic() {
+        // degenerate schedules can surface NaN ratios; rounding must
+        // stay total (NaN sorts last, gets nothing) instead of
+        // panicking inside the executor's queue lock
+        let s = integer_shares(&[f64::NAN, 2.5, 1.5], 4);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], 0, "NaN share must round to zero: {s:?}");
+        assert!(s.iter().sum::<usize>() <= 4);
     }
 
     #[test]

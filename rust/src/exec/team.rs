@@ -1,0 +1,215 @@
+//! Schedule-share-driven worker-team planning (DESIGN.md §10).
+//!
+//! The paper's tasks are *malleable*: a front's PM share `p^α` is a
+//! fractional slice of the platform. The task-parallel executor
+//! ignores that and pins one worker per front, so the wide root fronts
+//! — which dominate the flops of any assembly tree — serialize.
+//! [`TeamPlan`] closes the loop: at every task-completion event the
+//! fractional shares of the *currently active* fronts (running ∪
+//! ready) are re-rounded into integer worker-team sizes by the same
+//! largest-remainder mechanism the virtual-time model uses
+//! ([`integer_shares`]), so freed workers rejoin live teams instead of
+//! idling behind an empty ready queue.
+
+use crate::sched::Schedule;
+
+use super::shares::integer_shares;
+
+/// Fractional-share → integer-team mapping for one executor run.
+#[derive(Debug, Clone)]
+pub struct TeamPlan {
+    /// Per-task constant schedule ratio (fraction of the platform).
+    ratios: Vec<f64>,
+    /// Crew size the shares are scaled to.
+    workers: usize,
+    /// When false every team has size 1 (the task-parallel baseline).
+    malleable: bool,
+}
+
+impl TeamPlan {
+    /// Plan for `n` tasks under `schedule`, scaling shares to a crew of
+    /// `workers`. With `malleable` off the plan degenerates to one
+    /// worker per front.
+    pub fn new(schedule: &Schedule, n: usize, workers: usize, malleable: bool) -> TeamPlan {
+        let mut ratios = schedule.task_ratios(n);
+        // degenerate schedules (NaN/∞ spans) must not corrupt the
+        // rounding: treat such tasks like tasks without a span — the
+        // ≥1 clamp in team_sizes still guarantees them a leader
+        for r in &mut ratios {
+            if !r.is_finite() {
+                *r = 0.0;
+            }
+        }
+        TeamPlan {
+            ratios,
+            workers: workers.max(1),
+            malleable: malleable && workers > 1,
+        }
+    }
+
+    /// Whether this plan ever forms teams larger than one.
+    pub fn malleable(&self) -> bool {
+        self.malleable
+    }
+
+    /// Integer team sizes for the `active` tasks: each task's schedule
+    /// ratio scaled to the crew, rounded by largest remainder
+    /// ([`integer_shares`]), clamped to at least one worker (a running
+    /// front always owns its leader).
+    pub fn team_sizes(&self, active: &[u32]) -> Vec<usize> {
+        if !self.malleable || active.is_empty() {
+            return vec![1; active.len()];
+        }
+        let raw: Vec<f64> = active
+            .iter()
+            .map(|&t| self.ratios[t as usize] * self.workers as f64)
+            .collect();
+        let mut sizes = integer_shares(&raw, self.workers);
+        for s in &mut sizes {
+            *s = (*s).max(1);
+        }
+        sizes
+    }
+
+    /// Team size for one task among `active` (which must contain it).
+    pub fn team_size_of(&self, task: u32, active: &[u32]) -> usize {
+        let sizes = self.team_sizes(active);
+        active
+            .iter()
+            .position(|&t| t == task)
+            .map(|i| sizes[i])
+            .unwrap_or(1)
+    }
+}
+
+/// One bucket of the per-width team-occupancy table: fronts whose
+/// order falls in `(lo, hi]`, the average and maximum team size they
+/// ran with. This is the measurement that shows malleability doing its
+/// job — wide (root) fronts get wide teams, leaf fronts stay at one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OccupancyRow {
+    /// Exclusive lower front-order bound of the bucket.
+    pub lo: usize,
+    /// Inclusive upper bound (`usize::MAX` for the last bucket).
+    pub hi: usize,
+    /// Fronts in the bucket.
+    pub fronts: usize,
+    /// Mean team size over those fronts.
+    pub avg_team: f64,
+    /// Largest team any of them ran with.
+    pub max_team: usize,
+}
+
+/// Bucket a `(front_order, team_size)` log by front width. Empty
+/// buckets are dropped.
+pub fn occupancy_by_width(log: &[(usize, usize)]) -> Vec<OccupancyRow> {
+    const EDGES: [usize; 5] = [64, 128, 256, 512, usize::MAX];
+    let mut rows = Vec::new();
+    let mut lo = 0usize;
+    for &hi in &EDGES {
+        let bucket: Vec<usize> = log
+            .iter()
+            .filter(|&&(nf, _)| nf > lo && nf <= hi)
+            .map(|&(_, team)| team)
+            .collect();
+        if !bucket.is_empty() {
+            rows.push(OccupancyRow {
+                lo,
+                hi,
+                fronts: bucket.len(),
+                avg_team: bucket.iter().sum::<usize>() as f64 / bucket.len() as f64,
+                max_team: bucket.iter().copied().max().unwrap_or(1),
+            });
+        }
+        lo = hi;
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::TaskSpan;
+
+    fn sched(ratios: &[f64]) -> Schedule {
+        Schedule::new(
+            ratios
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| TaskSpan {
+                    task: i as u32,
+                    start: 0.0,
+                    finish: 1.0,
+                    ratio: r,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn shares_scale_to_the_crew() {
+        // root at 80%, two small children: an 8-crew gives the root ~6
+        let s = sched(&[0.8, 0.1, 0.1]);
+        let plan = TeamPlan::new(&s, 3, 8, true);
+        let sizes = plan.team_sizes(&[0, 1, 2]);
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+        assert!(sizes[0] >= 6, "root share under-realized: {sizes:?}");
+        assert!(sizes[1] >= 1 && sizes[2] >= 1);
+    }
+
+    #[test]
+    fn lone_active_task_gets_every_worker_of_its_share() {
+        let s = sched(&[1.0, 0.5]);
+        let plan = TeamPlan::new(&s, 2, 4, true);
+        assert_eq!(plan.team_sizes(&[0]), vec![4]);
+        assert_eq!(plan.team_size_of(1, &[1]), 2);
+    }
+
+    #[test]
+    fn non_malleable_plan_pins_one_worker() {
+        let s = sched(&[0.9, 0.1]);
+        let plan = TeamPlan::new(&s, 2, 8, false);
+        assert!(!plan.malleable());
+        assert_eq!(plan.team_sizes(&[0, 1]), vec![1, 1]);
+    }
+
+    #[test]
+    fn single_worker_crew_never_forms_teams() {
+        let s = sched(&[1.0]);
+        let plan = TeamPlan::new(&s, 1, 1, true);
+        assert!(!plan.malleable());
+        assert_eq!(plan.team_sizes(&[0]), vec![1]);
+    }
+
+    #[test]
+    fn nan_ratios_are_neutralized() {
+        let s = Schedule::new(vec![
+            TaskSpan { task: 0, start: 0.0, finish: 1.0, ratio: f64::NAN },
+            TaskSpan { task: 1, start: 0.0, finish: 1.0, ratio: 0.5 },
+        ]);
+        let plan = TeamPlan::new(&s, 2, 4, true);
+        let sizes = plan.team_sizes(&[0, 1]);
+        assert!(sizes.iter().all(|&t| t >= 1), "{sizes:?}");
+        assert!(sizes.iter().sum::<usize>() <= 4 + 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn tiny_shares_are_clamped_to_one() {
+        let s = sched(&[0.96, 0.01, 0.01, 0.01, 0.01]);
+        let plan = TeamPlan::new(&s, 5, 4, true);
+        let sizes = plan.team_sizes(&[0, 1, 2, 3, 4]);
+        assert!(sizes.iter().all(|&s| s >= 1), "{sizes:?}");
+    }
+
+    #[test]
+    fn occupancy_buckets_by_front_width() {
+        let log = vec![(10, 1), (50, 1), (100, 2), (300, 6), (300, 8)];
+        let rows = occupancy_by_width(&log);
+        assert_eq!(rows.len(), 3);
+        assert_eq!((rows[0].fronts, rows[0].max_team), (2, 1));
+        assert_eq!((rows[1].fronts, rows[1].max_team), (1, 2));
+        assert_eq!(rows[2].fronts, 2);
+        assert!((rows[2].avg_team - 7.0).abs() < 1e-12);
+        assert_eq!(rows[2].max_team, 8);
+    }
+}

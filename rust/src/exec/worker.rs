@@ -1,22 +1,38 @@
 //! Schedule-driven execution of the numeric multifrontal factorization.
 //!
-//! Both executors run the arena assembly path (precomputed relative
+//! All executors run the arena assembly path (precomputed relative
 //! indices, recycled contribution slabs — see [`crate::frontal::arena`]).
 //! The parallel crew is **lock-light**: task outputs live in per-task
 //! write-once slots, so extend-add and front factorization run outside
 //! any shared lock; only the ready-queue push/pop (plus the dependency
 //! counters it guards) is synchronized.
+//!
+//! The crew is a **two-level scheduler** (DESIGN.md §10):
+//!
+//! 1. a ready queue of *fronts*, prioritized by schedule dispatch
+//!    order (tree parallelism), and
+//! 2. inside each front, an atomic *tile cursor*
+//!    ([`crate::frontal::FrontTeamJob`]) that a worker **team** shares
+//!    (intra-front parallelism).
+//!
+//! In malleable mode the [`TeamPlan`] converts the schedule's
+//! fractional shares into integer team sizes, re-evaluated at every
+//! task-completion event, so workers freed near the top of the tree
+//! rejoin the live teams of the wide root fronts instead of idling.
 
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::frontal::arena::{FrontArena, MemGauge};
 use crate::frontal::backend::FrontBackend;
+use crate::frontal::dense::FrontTeamJob;
 use crate::frontal::multifrontal::{assemble_front_arena, factor_front_arena, Factorization};
 use crate::sched::Schedule;
 use crate::sparse::{AssemblyTree, CscMatrix};
+
+use super::team::TeamPlan;
 
 /// Order tasks by schedule start time, tie-broken by topological
 /// position (children first). For any valid schedule this is a
@@ -32,10 +48,13 @@ fn dispatch_order(at: &AssemblyTree, schedule: &Schedule) -> Vec<u32> {
         topo_pos[v as usize] = i;
     }
     let mut order: Vec<u32> = (0..n as u32).collect();
+    // total_cmp: a NaN span start (degenerate schedule input) must not
+    // panic the executor — NaNs sort last, like tasks missing from the
+    // schedule. Dispatch order is only a priority; precedence is
+    // enforced by the crew's dependency counters either way.
     order.sort_by(|&a, &b| {
         start[a as usize]
-            .partial_cmp(&start[b as usize])
-            .unwrap()
+            .total_cmp(&start[b as usize])
             .then(topo_pos[a as usize].cmp(&topo_pos[b as usize]))
     });
     order
@@ -75,6 +94,8 @@ pub fn execute_serial(
             flops,
             backend: backend.name().to_string(),
             workers: 1,
+            malleable: false,
+            team_log: Vec::new(),
         },
     ))
 }
@@ -135,30 +156,67 @@ impl Drop for PanicGuard<'_> {
     }
 }
 
+/// A live team job whose leader published helper seats.
+struct OpenTeam {
+    task: u32,
+    /// Helper seats still free (replanned at completion events).
+    seats: usize,
+    /// Tile-grid cap on useful team size for this front.
+    cap: usize,
+    job: Arc<FrontTeamJob>,
+}
+
 /// The only shared-mutable state of the crew: the ready queue and the
 /// dependency bookkeeping it guards. Everything numeric flows through
-/// the per-task [`OnceSlot`]s and per-worker arenas.
+/// the per-task [`OnceSlot`]s, per-worker arenas and per-front team
+/// jobs.
 struct ReadyQueue {
     /// ready tasks, kept sorted descending by dispatch priority so
     /// `pop()` yields the earliest-starting task
     ready: Vec<u32>,
     unfinished_children: Vec<usize>,
     remaining: usize,
+    /// tasks currently being factored (the share-replan active set,
+    /// together with `ready`)
+    running: Vec<u32>,
+    /// live team jobs with published seats
+    open: Vec<OpenTeam>,
     error: Option<String>,
     flops: f64,
     assembly_seconds: f64,
+    /// per completed front: (front order, realized team size)
+    team_log: Vec<(usize, usize)>,
 }
 
-/// Thread-crew execution for `Send + Sync` backends: real tree
-/// parallelism with the schedule's dispatch order as priority.
-///
-/// Lock discipline: a worker holds the queue mutex only to pop a task
-/// and to publish completion (decrement the parent's counter, push it
-/// when ready). Assembly (extend-add through the relative indices) and
-/// factorization run with no lock held; a child's contribution block
-/// is published into its [`OnceSlot`] *before* the counter decrement,
-/// so the parent — which can only be popped after the decrement — sees
-/// it without further synchronization.
+/// Re-round the schedule shares of the active fronts into team sizes
+/// and refresh the open jobs' free seats — called under the queue lock
+/// at every task-completion event, so workers idled by a completion
+/// can immediately rejoin the live teams.
+fn replan(st: &mut ReadyQueue, plan: &TeamPlan) {
+    if !plan.malleable() || st.open.is_empty() {
+        return;
+    }
+    let active: Vec<u32> = st.running.iter().chain(st.ready.iter()).copied().collect();
+    let sizes = plan.team_sizes(&active);
+    for ot in &mut st.open {
+        if let Some(pos) = active.iter().position(|&t| t == ot.task) {
+            let want = sizes[pos].min(ot.cap);
+            let members = 1 + ot.job.joined();
+            ot.seats = want.saturating_sub(members);
+        }
+    }
+}
+
+/// What an idle worker decided to do next.
+enum Duty {
+    /// Lead the factorization of a popped front with this team size.
+    Run(u32, usize),
+    /// Join a live team as a helper.
+    Help(Arc<FrontTeamJob>),
+}
+
+/// Task-parallel thread-crew execution (one worker per front): real
+/// tree parallelism with the schedule's dispatch order as priority.
 pub fn execute_parallel<B: FrontBackend + Sync>(
     at: &AssemblyTree,
     ap: &CscMatrix,
@@ -166,7 +224,43 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, false)
+}
+
+/// Malleable thread-crew execution: like [`execute_parallel`], but the
+/// schedule's fractional shares become integer worker *teams* per
+/// front ([`TeamPlan`]), and team-capable backends factor each front's
+/// tiles cooperatively ([`FrontTeamJob`]) — bit-identical to the
+/// serial blocked path, since tile ownership rather than reduction
+/// order is partitioned.
+pub fn execute_malleable<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, true)
+}
+
+/// Lock discipline (both modes): a worker holds the queue mutex only
+/// to pop a task / claim a team seat and to publish completion
+/// (decrement the parent's counter, push it when ready, replan seats).
+/// Assembly (extend-add through the relative indices) and
+/// factorization run with no lock held; a child's contribution block
+/// is published into its [`OnceSlot`] *before* the counter decrement,
+/// so the parent — which can only be popped after the decrement — sees
+/// it without further synchronization.
+fn run_crew<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+    malleable: bool,
+) -> Result<(Factorization, super::ExecReport)> {
     let n = at.tree.len();
+    let workers = workers.max(1);
     let order = dispatch_order(at, schedule);
     // priority = position in dispatch order (lower = sooner)
     let mut prio = vec![0usize; n];
@@ -180,29 +274,34 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
     // sorted descending by priority index so pop() gives the smallest
     ready.sort_by(|&a, &b| prio[b as usize].cmp(&prio[a as usize]));
 
+    let plan = TeamPlan::new(schedule, n, workers, malleable);
+    let team_backend = backend.team_capable();
     let queue = Mutex::new(ReadyQueue {
         ready,
         unfinished_children: unfinished,
         remaining: n,
+        running: Vec::new(),
+        open: Vec::new(),
         error: None,
         flops: 0.0,
         assembly_seconds: 0.0,
+        team_log: Vec::new(),
     });
     let cv = Condvar::new();
     let contrib: Vec<OnceSlot> = (0..n).map(|_| OnceSlot::new()).collect();
     let panels: Vec<OnceSlot> = (0..n).map(|_| OnceSlot::new()).collect();
-    let gauge = std::sync::Arc::new(MemGauge::default());
+    let gauge = Arc::new(MemGauge::default());
     let t0 = Instant::now();
 
     std::thread::scope(|scope| {
-        for _ in 0..workers.max(1) {
+        for _ in 0..workers {
             scope.spawn(|| {
                 let mut guard = PanicGuard { queue: &queue, cv: &cv, armed: true };
                 let mut arena = FrontArena::for_tree(at).with_gauge(gauge.clone());
                 let mut local_flops = 0.0f64;
                 let mut local_assembly = 0.0f64;
                 loop {
-                    let task = {
+                    let duty = {
                         let mut st = queue.lock().unwrap();
                         loop {
                             if st.remaining == 0 || st.error.is_some() {
@@ -213,70 +312,151 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
                                 return;
                             }
                             if let Some(v) = st.ready.pop() {
-                                break v;
+                                st.running.push(v);
+                                let team = if plan.malleable() && team_backend {
+                                    let active: Vec<u32> = st
+                                        .running
+                                        .iter()
+                                        .chain(st.ready.iter())
+                                        .copied()
+                                        .collect();
+                                    plan.team_size_of(v, &active)
+                                } else {
+                                    1
+                                };
+                                break Duty::Run(v, team);
+                            }
+                            if let Some(ot) = st.open.iter_mut().find(|o| o.seats > 0) {
+                                ot.seats -= 1;
+                                // register with the job while the lock
+                                // is held: the leader's close-drain must
+                                // wait for this worker even if it is
+                                // descheduled before help_reserved()
+                                ot.job.reserve();
+                                break Duty::Help(ot.job.clone());
                             }
                             st = cv.wait(st).unwrap();
                         }
+                    };
+                    let (task, team) = match duty {
+                        Duty::Help(job) => {
+                            // cooperate on the live front until it
+                            // closes, then rejoin the scheduler (the
+                            // seat was reserved under the lock above)
+                            job.help_reserved();
+                            continue;
+                        }
+                        Duty::Run(v, team) => (v, team),
                     };
                     let s = task as usize;
                     let sn = &at.symbolic.supernodes[s];
                     let nf = sn.front_order();
                     let width = sn.width;
+                    let m = nf - width;
                     // assembly and factorization both run without any
                     // shared lock: children blocks were published to
                     // their slots before this task became ready
                     let ta = Instant::now();
                     assemble_front_arena(at, ap, s, &mut arena, |c| contrib[c].take());
                     local_assembly += ta.elapsed().as_secs_f64();
-                    let outcome: Result<()> = (|| {
-                        if width == nf {
-                            panels[s].set(backend.full(arena.front(), nf)?);
-                        } else {
-                            let m = nf - width;
-                            let mut panel = vec![0f64; nf * width];
-                            let mut schur = arena.alloc_block(m * m);
-                            backend.partial_into(
-                                arena.front(),
-                                nf,
-                                width,
-                                &mut panel,
-                                &mut schur,
-                            )?;
-                            contrib[s].set(schur);
-                            panels[s].set(panel);
+                    if malleable {
+                        // team path: outputs ride in the job so helpers
+                        // can reach them through the tile cursor
+                        let panel_buf = vec![0f64; nf * width];
+                        let schur_buf =
+                            if m > 0 { arena.alloc_block(m * m) } else { Vec::new() };
+                        let job =
+                            Arc::new(FrontTeamJob::new(nf, width, panel_buf, schur_buf));
+                        let cap = FrontTeamJob::max_useful_team(nf, width);
+                        let seats = team.min(cap).saturating_sub(1);
+                        if seats > 0 && team_backend {
+                            let mut st = queue.lock().unwrap();
+                            st.open.push(OpenTeam {
+                                task,
+                                seats,
+                                cap,
+                                job: job.clone(),
+                            });
+                            drop(st);
+                            cv.notify_all();
                         }
-                        Ok(())
-                    })();
-                    arena.end_front(nf);
-                    let mut st = queue.lock().unwrap();
-                    match outcome {
-                        Ok(()) => {
-                            local_flops += sn.flops();
-                            st.remaining -= 1;
-                            if let Some(parent) = at.tree.nodes[s].parent {
-                                let pi = parent as usize;
-                                st.unfinished_children[pi] -= 1;
-                                if st.unfinished_children[pi] == 0 {
-                                    let pos = st
-                                        .ready
-                                        .binary_search_by(|&x| {
-                                            prio[pi].cmp(&prio[x as usize])
-                                        })
-                                        .unwrap_or_else(|e| e);
-                                    st.ready.insert(pos, parent);
+                        let outcome = backend.factor_front_team(arena.front(), &job);
+                        arena.end_front(nf);
+                        // the job closed before factor_front_team
+                        // returned (leader guard), so the buffers are
+                        // exclusively ours again
+                        let (panel, schur) = job.take_outputs();
+                        let members = 1 + job.joined();
+                        let ok = outcome.is_ok();
+                        if ok {
+                            // publish before the counter decrement
+                            if m > 0 {
+                                contrib[s].set(schur);
+                            }
+                            panels[s].set(panel);
+                        } else if m > 0 {
+                            arena.release_block(schur);
+                        }
+                        let mut st = queue.lock().unwrap();
+                        st.open.retain(|o| o.task != task);
+                        st.running.retain(|&r| r != task);
+                        match outcome {
+                            Ok(()) => {
+                                local_flops += sn.flops();
+                                st.team_log.push((nf, members));
+                                st.remaining -= 1;
+                                complete(&mut st, at, s, &prio);
+                                replan(&mut st, &plan);
+                            }
+                            Err(e) => {
+                                if st.error.is_none() {
+                                    st.error = Some(format!("task {s}: {e:#}"));
                                 }
                             }
                         }
-                        Err(e) => {
-                            // keep the first failure; later ones are
-                            // usually casualties of the same root cause
-                            if st.error.is_none() {
-                                st.error = Some(format!("task {s}: {e:#}"));
+                        drop(st);
+                        cv.notify_all();
+                    } else {
+                        // task-parallel path: one worker per front
+                        let outcome: Result<()> = (|| {
+                            if width == nf {
+                                panels[s].set(backend.full(arena.front(), nf)?);
+                            } else {
+                                let mut panel = vec![0f64; nf * width];
+                                let mut schur = arena.alloc_block(m * m);
+                                backend.partial_into(
+                                    arena.front(),
+                                    nf,
+                                    width,
+                                    &mut panel,
+                                    &mut schur,
+                                )?;
+                                contrib[s].set(schur);
+                                panels[s].set(panel);
+                            }
+                            Ok(())
+                        })();
+                        arena.end_front(nf);
+                        let mut st = queue.lock().unwrap();
+                        st.running.retain(|&r| r != task);
+                        match outcome {
+                            Ok(()) => {
+                                local_flops += sn.flops();
+                                st.team_log.push((nf, 1));
+                                st.remaining -= 1;
+                                complete(&mut st, at, s, &prio);
+                            }
+                            Err(e) => {
+                                // keep the first failure; later ones are
+                                // usually casualties of the same root cause
+                                if st.error.is_none() {
+                                    st.error = Some(format!("task {s}: {e:#}"));
+                                }
                             }
                         }
+                        drop(st);
+                        cv.notify_all();
                     }
-                    drop(st);
-                    cv.notify_all();
                 }
             });
         }
@@ -300,9 +480,28 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
             tasks: n,
             flops: st.flops,
             backend: backend.name().to_string(),
-            workers: workers.max(1),
+            workers,
+            malleable,
+            team_log: st.team_log,
         },
     ))
+}
+
+/// Completion bookkeeping under the queue lock: decrement the parent's
+/// dependency counter and insert it into the priority-sorted ready
+/// list once its last child finished.
+fn complete(st: &mut ReadyQueue, at: &AssemblyTree, s: usize, prio: &[usize]) {
+    if let Some(parent) = at.tree.nodes[s].parent {
+        let pi = parent as usize;
+        st.unfinished_children[pi] -= 1;
+        if st.unfinished_children[pi] == 0 {
+            let pos = st
+                .ready
+                .binary_search_by(|&x| prio[pi].cmp(&prio[x as usize]))
+                .unwrap_or_else(|e| e);
+            st.ready.insert(pos, parent);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -313,6 +512,7 @@ mod tests {
     use crate::frontal::RustBackend;
     use crate::sched::{PmSchedule, Profile};
     use crate::sparse::{gen, order, symbolic};
+    use crate::util::prop::{check, Config};
     use crate::DEFAULT_ALPHA;
 
     fn setup(k: usize) -> (AssemblyTree, CscMatrix, Schedule) {
@@ -322,6 +522,20 @@ mod tests {
         let ap = a.permute_sym(&at.symbolic.perm).unwrap();
         let pm = PmSchedule::for_tree(&at.tree, DEFAULT_ALPHA, &Profile::constant(8.0));
         (at, ap, pm.schedule)
+    }
+
+    fn assert_bitwise(a: &Factorization, b: &Factorization, what: &str) {
+        assert_eq!(a.panels.len(), b.panels.len());
+        for (s, (pa, pb)) in a.panels.iter().zip(&b.panels).enumerate() {
+            assert_eq!(pa.len(), pb.len(), "{what}: snode {s} panel length");
+            for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: snode {s} entry {i}: {x} vs {y}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -347,6 +561,7 @@ mod tests {
             let r = residual(&at, &ap, &f);
             assert!(r < 1e-12, "workers={workers}: residual {r}");
             assert_eq!(report.workers, workers);
+            assert!(!report.malleable);
         }
     }
 
@@ -364,6 +579,84 @@ mod tests {
                 assert!((x - y).abs() <= 1e-9 * x.abs().max(1.0));
             }
         }
+    }
+
+    #[test]
+    fn malleable_equals_serial_bitwise_randomized() {
+        // the tentpole invariant: team-parallel factorization is
+        // *bit-identical* to the serial blocked backend, across
+        // randomized grid sizes, amalgamation settings and crew sizes
+        check(
+            Config { cases: 6, seed: 0x7EA2 },
+            "malleable == serial blocked (bitwise)",
+            |rng| (rng.range(6, 12), rng.range(0, 6), rng.range(2, 8)),
+            |&(k, amalg, workers)| {
+                let a = gen::grid_laplacian_2d(k);
+                let perm = order::nested_dissection_2d(k);
+                let at = symbolic::analyze(&a, &perm, amalg).unwrap();
+                let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+                let pm = PmSchedule::for_tree(
+                    &at.tree,
+                    DEFAULT_ALPHA,
+                    &Profile::constant(workers as f64),
+                );
+                let (fs, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend).unwrap();
+                let (fm, report) =
+                    execute_malleable(&at, &ap, &pm.schedule, &RustBackend, workers).unwrap();
+                for (s, (pa, pb)) in fs.panels.iter().zip(&fm.panels).enumerate() {
+                    if pa.len() != pb.len() {
+                        return Err(format!("snode {s}: panel length mismatch"));
+                    }
+                    for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("snode {s} entry {i}: {x} vs {y}"));
+                        }
+                    }
+                }
+                if report.team_log.len() != at.tree.len() {
+                    return Err(format!(
+                        "team log covers {} of {} fronts",
+                        report.team_log.len(),
+                        at.tree.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn malleable_wide_fronts_match_serial_bitwise() {
+        // a 3D problem: the root separator front (~k²) dominates the
+        // flops and spans several tiles, so real teams form
+        let a = gen::grid_laplacian_3d(10);
+        let perm = order::nested_dissection_3d(10);
+        let at = symbolic::analyze(&a, &perm, 8).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        let widest = at
+            .symbolic
+            .supernodes
+            .iter()
+            .map(|s| s.front_order())
+            .max()
+            .unwrap();
+        assert!(widest > crate::frontal::dense::BLOCK, "widest front {widest} fits one tile");
+        let pm = PmSchedule::for_tree(&at.tree, DEFAULT_ALPHA, &Profile::constant(8.0));
+        let (fs, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend).unwrap();
+        let (fm, report) = execute_malleable(&at, &ap, &pm.schedule, &RustBackend, 8).unwrap();
+        assert_bitwise(&fs, &fm, "grid3d_10");
+        assert!(report.malleable);
+        assert_eq!(report.team_log.len(), at.tree.len());
+        assert!(report.flops > 0.0);
+    }
+
+    #[test]
+    fn malleable_single_worker_degenerates_to_serial() {
+        let (at, ap, schedule) = setup(9);
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fm, report) = execute_malleable(&at, &ap, &schedule, &RustBackend, 1).unwrap();
+        assert_bitwise(&fs, &fm, "1 worker");
+        assert!(report.team_log.iter().all(|&(_, t)| t == 1));
     }
 
     #[test]
@@ -419,6 +712,22 @@ mod tests {
     }
 
     #[test]
+    fn malleable_surfaces_backend_errors_without_hanging() {
+        // FailingBackend is not team-capable: this exercises the
+        // serial-fallback job path and its error/cleanup protocol
+        let (at, ap, schedule) = setup(8);
+        for workers in [1, 4] {
+            let err = execute_malleable(&at, &ap, &schedule, &FailingBackend, workers)
+                .expect_err("failing backend must fail the run");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("injected backend failure"),
+                "workers={workers}: unexpected error {msg}"
+            );
+        }
+    }
+
+    #[test]
     fn serial_surfaces_backend_errors() {
         let (at, ap, schedule) = setup(6);
         let err = execute_serial(&at, &ap, &schedule, &FailingBackend)
@@ -439,5 +748,25 @@ mod tests {
                 assert!(pos[c as usize] < pos[i], "child {c} after parent {i}");
             }
         }
+    }
+
+    #[test]
+    fn dispatch_order_survives_nan_starts() {
+        // a degenerate schedule (NaN span starts) must not panic the
+        // sort — NaN tasks just sort to the back of the priority, and
+        // the executor still runs correctly because precedence comes
+        // from the dependency counters, not the priority order
+        let (at, ap, mut schedule) = setup(6);
+        for span in schedule.spans.iter_mut().take(3) {
+            span.start = f64::NAN;
+        }
+        let order = dispatch_order(&at, &schedule);
+        let mut seen = vec![false; at.tree.len()];
+        for &v in &order {
+            assert!(!std::mem::replace(&mut seen[v as usize], true));
+        }
+        assert!(seen.iter().all(|&s| s), "order is not a permutation");
+        let (f, _) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        assert!(residual(&at, &ap, &f) < 1e-12);
     }
 }

@@ -163,7 +163,11 @@ impl FrontArena {
 
     /// Return a consumed contribution slab to the pool. Slabs may
     /// migrate between arenas (a child's worker allocates, the parent's
-    /// worker releases); the shared gauge keeps the accounting global.
+    /// worker releases) and ride through a
+    /// [`crate::frontal::FrontTeamJob`] while a team factors the front
+    /// that fills them; either way the words stay live from
+    /// [`FrontArena::alloc_block`] until this call, so the shared gauge
+    /// accounting is exact under the malleable executor too.
     pub fn release_block(&mut self, b: Vec<f64>) {
         self.account_sub(b.len());
         self.free.push(b);

@@ -63,6 +63,35 @@ pub trait FrontBackend {
         Ok(())
     }
 
+    /// True when [`FrontBackend::factor_front_team`] actually exploits
+    /// a worker team. The executor only recruits helpers (publishes
+    /// team seats) for such backends; everyone else runs the serial
+    /// default below untouched.
+    fn team_capable(&self) -> bool {
+        false
+    }
+
+    /// Factor one front through a [`dense::FrontTeamJob`] — the
+    /// malleable executor's per-front entry point. The job carries the
+    /// output buffers (panel, Schur slab) and, for team-capable
+    /// backends, the tile-cursor protocol helpers cooperate through.
+    ///
+    /// Serial default: run [`FrontBackend::partial_into`] /
+    /// [`FrontBackend::full`] into the job's buffers and close it. The
+    /// executor guarantees no helper ever joins a job of a backend
+    /// whose `team_capable()` is false.
+    fn factor_front_team(&self, front: &[f64], job: &dense::FrontTeamJob) -> Result<()> {
+        job.run_serial(|n, k, panel, schur| {
+            if k == n {
+                let l = self.full(front, n)?;
+                panel.copy_from_slice(&l);
+                Ok(())
+            } else {
+                self.partial_into(front, n, k, panel, schur)
+            }
+        })
+    }
+
     /// Human-readable name for logs and reports.
     fn name(&self) -> &'static str;
 }
@@ -96,6 +125,16 @@ impl FrontBackend for RustBackend {
         schur: &mut [f64],
     ) -> Result<()> {
         dense::partial_factor_into(front, n, k, panel, schur)
+    }
+
+    fn team_capable(&self) -> bool {
+        true
+    }
+
+    fn factor_front_team(&self, front: &[f64], job: &dense::FrontTeamJob) -> Result<()> {
+        // the job *is* the blocked tiled algorithm, driven by this
+        // thread as team leader; helpers share the tile cursor
+        job.run_leader(front)
     }
 
     fn name(&self) -> &'static str {

@@ -164,6 +164,31 @@ fn trsm_tile(a: &mut [f64], lda: usize, j0: usize, nb: usize, i0: usize, m: usiz
     }
 }
 
+/// One `(bi, bj)` tile of the trailing update `A22 -= L21 L21ᵀ` for the
+/// panel of width `kb` at column `j0` (`bi`/`bj` are element offsets
+/// into the `m x m` trailing block at `(i0, i0)`, `bj <= bi`, lower
+/// block-triangle only). Shared by the serial sweep [`syrk_tile`] and
+/// the team dispatch ([`FrontTeamJob`]) so both produce bit-identical
+/// entries.
+fn syrk_block(a: &mut [f64], lda: usize, j0: usize, kb: usize, i0: usize, m: usize, bi: usize, bj: usize) {
+    let ib = BLOCK.min(m - bi);
+    let jb = BLOCK.min(m - bj);
+    for i in 0..ib {
+        let ri = (i0 + bi + i) * lda;
+        let li = ri + j0;
+        let ci = ri + i0 + bj;
+        let jmax = if bj == bi { i + 1 } else { jb };
+        for j in 0..jmax {
+            let lj = (i0 + bj + j) * lda + j0;
+            let mut s = 0.0;
+            for t in 0..kb {
+                s += a[li + t] * a[lj + t];
+            }
+            a[ci + j] -= s;
+        }
+    }
+}
+
 /// Trailing update `A22 -= L21 L21ᵀ` for the panel of width `kb` at
 /// column `j0`: tiled over the `m x m` trailing block starting at
 /// `(i0, i0)`, lower block-triangle only (the upper triangle is never
@@ -171,24 +196,9 @@ fn trsm_tile(a: &mut [f64], lda: usize, j0: usize, nb: usize, i0: usize, m: usiz
 fn syrk_tile(a: &mut [f64], lda: usize, j0: usize, kb: usize, i0: usize, m: usize) {
     let mut bi = 0;
     while bi < m {
-        let ib = BLOCK.min(m - bi);
         let mut bj = 0;
         while bj <= bi {
-            let jb = BLOCK.min(m - bj);
-            for i in 0..ib {
-                let ri = (i0 + bi + i) * lda;
-                let li = ri + j0;
-                let ci = ri + i0 + bj;
-                let jmax = if bj == bi { i + 1 } else { jb };
-                for j in 0..jmax {
-                    let lj = (i0 + bj + j) * lda + j0;
-                    let mut s = 0.0;
-                    for t in 0..kb {
-                        s += a[li + t] * a[lj + t];
-                    }
-                    a[ci + j] -= s;
-                }
-            }
+            syrk_block(a, lda, j0, kb, i0, m, bi, bj);
             bj += BLOCK;
         }
         bi += BLOCK;
@@ -221,17 +231,17 @@ pub fn potrf_blocked(a: &mut [f64], n: usize) -> Result<()> {
     Ok(())
 }
 
-/// Cache-blocked `X Lᵀ = B` panel solve (same contract as [`trsm_rt`]):
-/// each column panel folds in the already-solved columns with a dense
-/// dot (the GEMM part), then solves against its diagonal block.
-pub fn trsm_rt_blocked(l: &[f64], k: usize, b: &mut [f64], m: usize) -> Result<()> {
-    if l.len() != k * k || b.len() != m * k {
-        bail!("trsm_rt_blocked: buffer mismatch");
-    }
+/// Rows `r0..r0+rows` of the blocked `X Lᵀ = B` panel solve. Rows are
+/// mutually independent (each row solves against `l` alone), so any
+/// row partition — the serial full-range call in [`trsm_rt_blocked`] or
+/// one row tile of a team dispatch — produces bit-identical entries:
+/// the per-row operation sequence (column panels in ascending order) is
+/// fixed here.
+fn trsm_rt_rows(l: &[f64], k: usize, b: &mut [f64], r0: usize, rows: usize) {
     let mut j0 = 0;
     while j0 < k {
         let jb = BLOCK.min(k - j0);
-        for i in 0..m {
+        for i in r0..r0 + rows {
             let bi = i * k;
             for j in 0..jb {
                 let lj = (j0 + j) * k;
@@ -252,7 +262,43 @@ pub fn trsm_rt_blocked(l: &[f64], k: usize, b: &mut [f64], m: usize) -> Result<(
         }
         j0 += jb;
     }
+}
+
+/// Cache-blocked `X Lᵀ = B` panel solve (same contract as [`trsm_rt`]):
+/// each column panel folds in the already-solved columns with a dense
+/// dot (the GEMM part), then solves against its diagonal block.
+pub fn trsm_rt_blocked(l: &[f64], k: usize, b: &mut [f64], m: usize) -> Result<()> {
+    if l.len() != k * k || b.len() != m * k {
+        bail!("trsm_rt_blocked: buffer mismatch");
+    }
+    trsm_rt_rows(l, k, b, 0, m);
     Ok(())
+}
+
+/// One `(i0, j0)` output tile of the Schur update `C -= A Aᵀ`: rows
+/// `i0..i0+ib`, columns `j0..j0+jb`, folding the whole inner dimension
+/// in ascending `BLOCK` panels. Every entry's accumulation sequence is
+/// fixed here (inner panels in ascending `t0` order), so any tiling of
+/// the output — the serial column sweep in [`syrk_sub_blocked`] or a
+/// team's 2-D tile grid — produces bit-identical results.
+fn syrk_sub_block(c: &mut [f64], a: &[f64], m: usize, k: usize, i0: usize, ib: usize, j0: usize, jb: usize) {
+    let mut t0 = 0;
+    while t0 < k {
+        let tb = BLOCK.min(k - t0);
+        for i in i0..i0 + ib {
+            let ai = i * k + t0;
+            let ci = i * m + j0;
+            for j in 0..jb {
+                let aj = (j0 + j) * k + t0;
+                let mut s = 0.0;
+                for t in 0..tb {
+                    s += a[ai + t] * a[aj + t];
+                }
+                c[ci + j] -= s;
+            }
+        }
+        t0 += tb;
+    }
 }
 
 /// Cache-blocked Schur update `C -= A Aᵀ` (same contract as
@@ -262,27 +308,11 @@ pub fn syrk_sub_blocked(c: &mut [f64], a: &[f64], m: usize, k: usize) -> Result<
     if c.len() != m * m || a.len() != m * k {
         bail!("syrk_sub_blocked: buffer mismatch");
     }
-    let mut t0 = 0;
-    while t0 < k {
-        let tb = BLOCK.min(k - t0);
-        let mut j0 = 0;
-        while j0 < m {
-            let jb = BLOCK.min(m - j0);
-            for i in 0..m {
-                let ai = i * k + t0;
-                let ci = i * m + j0;
-                for j in 0..jb {
-                    let aj = (j0 + j) * k + t0;
-                    let mut s = 0.0;
-                    for t in 0..tb {
-                        s += a[ai + t] * a[aj + t];
-                    }
-                    c[ci + j] -= s;
-                }
-            }
-            j0 += jb;
-        }
-        t0 += tb;
+    let mut j0 = 0;
+    while j0 < m {
+        let jb = BLOCK.min(m - j0);
+        syrk_sub_block(c, a, m, k, 0, m, j0, jb);
+        j0 += jb;
     }
     Ok(())
 }
@@ -327,6 +357,492 @@ pub fn full_factor_blocked(front: &[f64], n: usize) -> Result<Vec<f64>> {
     let mut l = front.to_vec();
     potrf_blocked(&mut l, n)?;
     Ok(l)
+}
+
+// ---------------------------------------------------------------------
+// Team-parallel blocked factorization (DESIGN.md §10). A front's tiles
+// are dispatched over a worker *team* through an atomic tile cursor;
+// tile ownership — not reduction order — is partitioned, so the result
+// is bit-identical to the serial blocked path above (both run the same
+// per-tile primitives: `factor_diag` / `trsm_tile` / `syrk_block` /
+// `trsm_rt_rows` / `syrk_sub_block`).
+// ---------------------------------------------------------------------
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Kind of one parallel step of a team factorization.
+#[derive(Debug, Clone, Copy)]
+enum StepKind {
+    /// Row tiles of the trailing panel solve below diagonal block `j0`
+    /// of the in-place Cholesky of the leading `k x k` block.
+    CholTrsm { j0: usize, jb: usize },
+    /// Lower-triangle `(bi, bj)` tiles of the trailing Schur update for
+    /// panel `j0` of the in-place Cholesky.
+    CholSyrk { j0: usize, jb: usize },
+    /// Row tiles of the `L21 L11ᵀ = A21` panel solve (partial path).
+    PanelTrsm,
+    /// `(ti, tj)` output tiles of the front's Schur complement
+    /// `C -= L21 L21ᵀ` (partial path).
+    SchurSyrk,
+}
+
+/// One parallel step: a contiguous range of global tile ids.
+#[derive(Debug, Clone, Copy)]
+struct Step {
+    kind: StepKind,
+    /// First global tile id of the step.
+    base: usize,
+    /// Number of tiles.
+    tiles: usize,
+}
+
+/// `t`-th pair of a row-major lower-triangle enumeration:
+/// `(0,0) (1,0) (1,1) (2,0) ...` — the exact order the serial
+/// [`syrk_tile`] sweep visits tiles in.
+fn tri_index(t: usize) -> (usize, usize) {
+    let mut bi = (((8 * t + 1) as f64).sqrt() as usize).saturating_sub(1) / 2;
+    while (bi + 1) * (bi + 2) / 2 <= t {
+        bi += 1;
+    }
+    while bi * (bi + 1) / 2 > t {
+        bi -= 1;
+    }
+    (bi, t - bi * (bi + 1) / 2)
+}
+
+/// Interior-mutable buffer shared across a team.
+///
+/// Safety contract (upheld by the [`FrontTeamJob`] protocol): during a
+/// parallel step every claimed tile writes a disjoint region and reads
+/// only regions finalized by earlier steps; between steps only the
+/// leader touches the buffer.
+struct BufCell(UnsafeCell<Vec<f64>>);
+
+impl BufCell {
+    fn new(v: Vec<f64>) -> BufCell {
+        BufCell(UnsafeCell::new(v))
+    }
+
+    /// Raw view of the buffer. Callers must respect the tile
+    /// disjointness contract above; the protocol (gate, done counter,
+    /// helper drain) provides the required happens-before edges.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice(&self) -> &mut [f64] {
+        (*self.0.get()).as_mut_slice()
+    }
+}
+
+// SAFETY: see the BufCell contract — all cross-thread access is
+// tile-disjoint and ordered by the job's atomics.
+unsafe impl Sync for BufCell {}
+unsafe impl Send for BufCell {}
+
+/// A team-parallel blocked front factorization in flight.
+///
+/// The *leader* (the worker that owns the front) drives the job through
+/// [`FrontTeamJob::run_leader`]; any number of *helpers* may join at
+/// any time via [`FrontTeamJob::help`] and leave when the job closes.
+/// Work is split into **steps** (panel solves, trailing updates) whose
+/// tiles are claimed through a single monotonically increasing atomic
+/// cursor bounded by a `gate`:
+///
+/// * the step table is immutable after construction, so a claimed tile
+///   id maps to its step parameters without any cross-thread handshake;
+/// * the leader raises the gate to the end of step *s* only after every
+///   tile of step *s − 1* is done (`done` counter), which both orders
+///   the numeric dependencies (Release/Acquire on `gate`/`done`) and
+///   makes stale claims impossible — the cursor can never pass the gate;
+/// * tile ownership is exclusive (CAS on the cursor) and the per-tile
+///   code is byte-for-byte the serial blocked path, so the factor is
+///   bit-identical to [`partial_factor_into`] / [`full_factor_blocked`]
+///   regardless of team size or interleaving.
+///
+/// A helper that panics mid-tile marks the job `aborted` (its unwind
+/// guard) and the leader fails the front instead of waiting forever; a
+/// leader that unwinds closes the job so helpers never hang.
+pub struct FrontTeamJob {
+    n: usize,
+    k: usize,
+    /// `n*k` row-major `[L11; L21]` output (the retained panel; the
+    /// whole `L` when `k == n`).
+    panel: BufCell,
+    /// `(n-k)²` Schur complement output (empty when `k == n`).
+    schur: BufCell,
+    steps: Vec<Step>,
+    /// Highest tile id currently claimable (end of the open step).
+    gate: AtomicUsize,
+    /// Next tile id to claim; monotonic, never passes `gate`.
+    cursor: AtomicUsize,
+    /// Completed tiles; monotonic.
+    done: AtomicUsize,
+    /// Set once, when the job is over (success, error or unwind).
+    closed: AtomicBool,
+    /// Set when a team member panicked mid-tile.
+    aborted: AtomicBool,
+    /// Helpers currently inside [`FrontTeamJob::help`].
+    helpers: AtomicUsize,
+    /// Helpers that ever joined (occupancy statistics).
+    joined: AtomicUsize,
+    /// Test hook: global tile id whose execution panics.
+    poison: AtomicUsize,
+}
+
+impl FrontTeamJob {
+    /// Plan the team factorization of an `n x n` front eliminating `k`
+    /// columns (`k == n` plans a full Cholesky). `panel` must hold
+    /// `n*k` f64s and `schur` `(n-k)²` (both typically recycled
+    /// buffers; contents are overwritten).
+    pub fn new(n: usize, k: usize, panel: Vec<f64>, schur: Vec<f64>) -> FrontTeamJob {
+        assert!(k > 0 && k <= n, "FrontTeamJob: bad arguments n={n} k={k}");
+        assert_eq!(panel.len(), n * k, "FrontTeamJob: panel buffer mismatch");
+        assert_eq!(schur.len(), (n - k) * (n - k), "FrontTeamJob: schur buffer mismatch");
+        let mut steps = Vec::new();
+        let mut base = 0usize;
+        // in-place Cholesky of the leading k x k block (row stride k)
+        let mut j0 = 0;
+        while j0 < k {
+            let jb = BLOCK.min(k - j0);
+            let i0 = j0 + jb;
+            if i0 < k {
+                let m = k - i0;
+                let t = m.div_ceil(BLOCK);
+                steps.push(Step { kind: StepKind::CholTrsm { j0, jb }, base, tiles: t });
+                base += t;
+                let nb = m.div_ceil(BLOCK);
+                let t = nb * (nb + 1) / 2;
+                steps.push(Step { kind: StepKind::CholSyrk { j0, jb }, base, tiles: t });
+                base += t;
+            }
+            j0 = i0;
+        }
+        if k < n {
+            let m = n - k;
+            let t = m.div_ceil(BLOCK);
+            steps.push(Step { kind: StepKind::PanelTrsm, base, tiles: t });
+            base += t;
+            let nb = m.div_ceil(BLOCK);
+            let t = nb * nb;
+            steps.push(Step { kind: StepKind::SchurSyrk, base, tiles: t });
+        }
+        FrontTeamJob {
+            n,
+            k,
+            panel: BufCell::new(panel),
+            schur: BufCell::new(schur),
+            steps,
+            gate: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            aborted: AtomicBool::new(false),
+            helpers: AtomicUsize::new(0),
+            joined: AtomicUsize::new(0),
+            poison: AtomicUsize::new(usize::MAX),
+        }
+    }
+
+    /// Front order.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Columns eliminated (`k == n` for a full factorization).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Helpers that ever joined this job (for occupancy reports).
+    pub fn joined(&self) -> usize {
+        self.joined.load(Ordering::Relaxed)
+    }
+
+    /// Largest team size this front's tile grid can keep busy: the
+    /// widest single step. Teams beyond this would only spin.
+    pub fn max_useful_team(n: usize, k: usize) -> usize {
+        let mut widest = 1usize;
+        let trail = k.saturating_sub(BLOCK);
+        if trail > 0 {
+            let nb = trail.div_ceil(BLOCK);
+            widest = widest.max(nb).max(nb * (nb + 1) / 2);
+        }
+        if k < n {
+            let nb = (n - k).div_ceil(BLOCK);
+            widest = widest.max(nb).max(nb * nb);
+        }
+        widest
+    }
+
+    /// Drive the factorization as the team leader: stage the front into
+    /// the output buffers, factor panel by panel opening parallel steps
+    /// for the trailing tiles, and close the job (also on error or
+    /// unwind) so helpers always return. On success the buffers hold
+    /// exactly what [`partial_factor_into`] (or
+    /// [`full_factor_blocked`] for `k == n`) would have produced.
+    pub fn run_leader(&self, front: &[f64]) -> Result<()> {
+        struct CloseGuard<'a>(&'a FrontTeamJob);
+        impl Drop for CloseGuard<'_> {
+            fn drop(&mut self) {
+                self.0.closed.store(true, Ordering::Release);
+                // drain helpers before the caller reclaims the buffers
+                while self.0.helpers.load(Ordering::Acquire) != 0 {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        let _close = CloseGuard(self);
+        self.drive(front)
+    }
+
+    fn drive(&self, front: &[f64]) -> Result<()> {
+        let (n, k) = (self.n, self.k);
+        if front.len() != n * n {
+            bail!("team factor: front buffer mismatch (n={n})");
+        }
+        // leader-exclusive staging: no tile is claimable yet (gate = 0)
+        // SAFETY: helpers only touch the buffers through claimed tiles.
+        let panel = unsafe { self.panel.slice() };
+        for i in 0..n {
+            panel[i * k..(i + 1) * k].copy_from_slice(&front[i * n..i * n + k]);
+        }
+        // blocked Cholesky of the leading k x k block: the diagonal
+        // factor is serial (leader), trailing trsm/syrk tiles are team
+        // steps
+        let mut next_step = 0usize;
+        let mut j0 = 0;
+        while j0 < k {
+            let jb = BLOCK.min(k - j0);
+            factor_diag(panel, k, j0, jb)?;
+            if j0 + jb < k {
+                self.run_step(next_step)?;
+                self.run_step(next_step + 1)?;
+                next_step += 2;
+            }
+            j0 += jb;
+        }
+        // potrf contract: zero the strict upper triangle of L11
+        for i in 0..k {
+            for j in i + 1..k {
+                panel[i * k + j] = 0.0;
+            }
+        }
+        if k < n {
+            // L21 solve over row tiles
+            self.run_step(next_step)?;
+            // leader-exclusive staging of the Schur block (between
+            // steps the gate is saturated, so no helper is in a tile)
+            let m = n - k;
+            // SAFETY: leader-exclusive between steps.
+            let schur = unsafe { self.schur.slice() };
+            for i in 0..m {
+                let src = (k + i) * n + k;
+                schur[i * m..(i + 1) * m].copy_from_slice(&front[src..src + m]);
+            }
+            self.run_step(next_step + 1)?;
+        }
+        Ok(())
+    }
+
+    /// Open step `ix`, work its tiles alongside any helpers, and wait
+    /// for stragglers before returning.
+    fn run_step(&self, ix: usize) -> Result<()> {
+        let step = self.steps[ix];
+        let hi = step.base + step.tiles;
+        debug_assert_eq!(self.gate.load(Ordering::Relaxed), step.base);
+        self.gate.store(hi, Ordering::Release);
+        self.work_tiles();
+        while self.done.load(Ordering::Acquire) < hi {
+            if self.aborted.load(Ordering::Relaxed) {
+                bail!("team worker panicked mid-front");
+            }
+            std::thread::yield_now();
+        }
+        if self.aborted.load(Ordering::Relaxed) {
+            bail!("team worker panicked mid-front");
+        }
+        Ok(())
+    }
+
+    /// Claim the next tile below the gate, if any.
+    fn claim(&self) -> Option<usize> {
+        loop {
+            let gate = self.gate.load(Ordering::Acquire);
+            let c = self.cursor.load(Ordering::Relaxed);
+            if c >= gate {
+                return None;
+            }
+            if self
+                .cursor
+                .compare_exchange_weak(c, c + 1, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(c);
+            }
+        }
+    }
+
+    /// Claim-and-execute until the current step is drained.
+    fn work_tiles(&self) {
+        while let Some(t) = self.claim() {
+            // a panicking tile must not strand the leader's wait loop
+            struct TileGuard<'a>(&'a FrontTeamJob, bool);
+            impl Drop for TileGuard<'_> {
+                fn drop(&mut self) {
+                    if self.1 {
+                        self.0.aborted.store(true, Ordering::Release);
+                    }
+                }
+            }
+            let mut guard = TileGuard(self, true);
+            self.exec_tile(t);
+            guard.1 = false;
+            drop(guard);
+            self.done.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    /// Execute global tile `t` (the step table is immutable, so the
+    /// mapping needs no synchronization).
+    fn exec_tile(&self, t: usize) {
+        if self.poison.load(Ordering::Relaxed) == t {
+            panic!("injected tile panic (tile {t})");
+        }
+        let ix = self.steps.partition_point(|s| s.base + s.tiles <= t);
+        let step = self.steps[ix];
+        let local = t - step.base;
+        let k = self.k;
+        // SAFETY: exclusive tile ownership via the claimed cursor slot;
+        // reads are confined to regions finalized by earlier steps.
+        let panel = unsafe { self.panel.slice() };
+        match step.kind {
+            StepKind::CholTrsm { j0, jb } => {
+                let i0 = j0 + jb;
+                let r0 = i0 + local * BLOCK;
+                let rows = BLOCK.min(k - r0);
+                trsm_tile(panel, k, j0, jb, r0, rows);
+            }
+            StepKind::CholSyrk { j0, jb } => {
+                let i0 = j0 + jb;
+                let m = k - i0;
+                let (ti, tj) = tri_index(local);
+                syrk_block(panel, k, j0, jb, i0, m, ti * BLOCK, tj * BLOCK);
+            }
+            StepKind::PanelTrsm => {
+                let m = self.n - k;
+                let r0 = local * BLOCK;
+                let rows = BLOCK.min(m - r0);
+                let (l11, l21) = panel.split_at_mut(k * k);
+                trsm_rt_rows(l11, k, l21, r0, rows);
+            }
+            StepKind::SchurSyrk => {
+                let m = self.n - k;
+                let nb = m.div_ceil(BLOCK);
+                let (ti, tj) = (local / nb, local % nb);
+                let (i0, j0) = (ti * BLOCK, tj * BLOCK);
+                let (ib, jb) = (BLOCK.min(m - i0), BLOCK.min(m - j0));
+                // SAFETY: same contract as `panel`.
+                let schur = unsafe { self.schur.slice() };
+                let l21 = &panel[k * k..];
+                syrk_sub_block(schur, l21, m, k, i0, ib, j0, jb);
+            }
+        }
+    }
+
+    /// Register this thread with the job *before* it starts helping —
+    /// the leader's close-drain then waits for it even if it has not
+    /// yet entered [`FrontTeamJob::help_reserved`]. The executor calls
+    /// this under its queue lock when a worker claims a team seat, so
+    /// there is no window in which a seat has been granted but the
+    /// leader cannot see the incoming helper (it would otherwise race
+    /// [`FrontTeamJob::take_outputs`]'s exclusivity check). Every
+    /// `reserve` must be followed by exactly one `help_reserved`.
+    pub fn reserve(&self) {
+        self.helpers.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Join the team as a helper: claim and execute tiles until the
+    /// job closes. Returns immediately if it already has. Safe to call
+    /// from any thread, at any point of the job's life.
+    pub fn help(&self) {
+        self.reserve();
+        self.help_reserved();
+    }
+
+    /// [`FrontTeamJob::help`] after a prior [`FrontTeamJob::reserve`].
+    pub fn help_reserved(&self) {
+        self.joined.fetch_add(1, Ordering::Relaxed);
+        struct HelperGuard<'a>(&'a FrontTeamJob);
+        impl Drop for HelperGuard<'_> {
+            fn drop(&mut self) {
+                self.0.helpers.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        let _leave = HelperGuard(self);
+        let mut idle = 0u32;
+        while !self.closed.load(Ordering::Acquire) {
+            let before = self.cursor.load(Ordering::Relaxed);
+            self.work_tiles();
+            if self.cursor.load(Ordering::Relaxed) != before {
+                idle = 0;
+                continue;
+            }
+            // between steps: the leader is factoring a diagonal block
+            // or staging; spin politely, then back off
+            idle += 1;
+            if idle < 128 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(20));
+            }
+        }
+    }
+
+    /// Serial fallback for backends without team kernels: hand the
+    /// caller exclusive access to the output buffers, then close the
+    /// job. The executor never publishes helper seats for such
+    /// backends, so exclusive access is free.
+    pub fn run_serial(
+        &self,
+        f: impl FnOnce(usize, usize, &mut [f64], &mut [f64]) -> Result<()>,
+    ) -> Result<()> {
+        struct CloseGuard<'a>(&'a FrontTeamJob);
+        impl Drop for CloseGuard<'_> {
+            fn drop(&mut self) {
+                self.0.closed.store(true, Ordering::Release);
+                while self.0.helpers.load(Ordering::Acquire) != 0 {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        let _close = CloseGuard(self);
+        debug_assert_eq!(self.joined(), 0, "helpers joined a serial-fallback job");
+        // SAFETY: no seats published — the leader is the only thread.
+        let (panel, schur) = unsafe { (self.panel.slice(), self.schur.slice()) };
+        f(self.n, self.k, panel, schur)
+    }
+
+    /// Reclaim the output buffers. Must only be called after the job
+    /// closed and the last helper left (both guaranteed once
+    /// [`FrontTeamJob::run_leader`] / [`FrontTeamJob::run_serial`]
+    /// returned).
+    pub fn take_outputs(&self) -> (Vec<f64>, Vec<f64>) {
+        assert!(
+            self.closed.load(Ordering::Acquire) && self.helpers.load(Ordering::Acquire) == 0,
+            "take_outputs before the job closed"
+        );
+        // SAFETY: closed + drained — no other thread touches the cells.
+        unsafe {
+            (
+                std::mem::take(&mut *self.panel.0.get()),
+                std::mem::take(&mut *self.schur.0.get()),
+            )
+        }
+    }
+
+    #[cfg(test)]
+    fn poison_tile(&self, t: usize) {
+        self.poison.store(t, Ordering::Relaxed);
+    }
 }
 
 /// `C = A B^T` helper for tests.
@@ -589,5 +1105,166 @@ mod tests {
         let llt = matmul_nt(&l, &l, n, n, n);
         let d = max_rel_diff(&a, &llt);
         assert!(d < 1e-12, "rel diff {d}");
+    }
+
+    #[test]
+    fn tri_index_matches_serial_sweep_order() {
+        // the CholSyrk tile enumeration must visit exactly the pairs
+        // the serial lower-triangle sweep visits
+        let mut t = 0usize;
+        for bi in 0..12 {
+            for bj in 0..=bi {
+                assert_eq!(tri_index(t), (bi, bj), "tile {t}");
+                t += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn max_useful_team_tracks_tile_grids() {
+        // single-tile fronts cannot use helpers
+        assert_eq!(FrontTeamJob::max_useful_team(64, 64), 1);
+        assert_eq!(FrontTeamJob::max_useful_team(64, 32), 1);
+        // a 256-order full front: widest step is the first trailing
+        // syrk (192 trailing rows = 3 row tiles → 6 triangle tiles)
+        assert_eq!(FrontTeamJob::max_useful_team(256, 256), 6);
+        // partial 256/64: Schur grid is 3x3 = 9 tiles
+        assert_eq!(FrontTeamJob::max_useful_team(256, 64), 9);
+    }
+
+    /// Run a team job with `helpers` live helper threads; returns the
+    /// leader's outcome and the output buffers.
+    fn run_team(
+        front: &[f64],
+        n: usize,
+        k: usize,
+        helpers: usize,
+        poison: Option<usize>,
+    ) -> (Result<()>, Vec<f64>, Vec<f64>, usize) {
+        let m = n - k;
+        let job = FrontTeamJob::new(n, k, vec![0f64; n * k], vec![0f64; m * m]);
+        if let Some(t) = poison {
+            job.poison_tile(t);
+        }
+        let out = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..helpers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        // a poisoned tile panics whoever claims it; the
+                        // catch keeps the scope join quiet — the real
+                        // executor instead propagates via its own guard
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            job.help()
+                        }));
+                    })
+                })
+                .collect();
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                job.run_leader(front)
+            }));
+            for h in handles {
+                h.join().unwrap();
+            }
+            out
+        });
+        // flatten: a leader panic counts as an error outcome
+        let outcome = match out {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("leader panicked")),
+        };
+        let joined = job.joined();
+        let (panel, schur) = job.take_outputs();
+        (outcome, panel, schur, joined)
+    }
+
+    #[test]
+    fn team_partial_is_bitwise_serial_blocked() {
+        // several tile-grid shapes: single tile, tile-edge straddling,
+        // multi-tile Cholesky + Schur grids
+        for &(n, k, helpers) in &[
+            (20usize, 8usize, 2usize),
+            (130, 64, 3),
+            (150, 70, 4),
+            (260, 130, 7),
+            (96, 96, 2),
+            (200, 200, 3),
+        ] {
+            let a = random_spd(n, 500 + n as u64);
+            let m = n - k;
+            let mut want_panel = vec![0f64; n * k];
+            let mut want_schur = vec![0f64; m * m];
+            if k == n {
+                want_panel = full_factor_blocked(&a, n).unwrap();
+            } else {
+                partial_factor_into(&a, n, k, &mut want_panel, &mut want_schur).unwrap();
+            }
+            let (outcome, panel, schur, _) = run_team(&a, n, k, helpers, None);
+            outcome.unwrap();
+            for (i, (x, y)) in want_panel.iter().zip(&panel).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n} k={k} panel[{i}]: {x} vs {y}");
+            }
+            for (i, (x, y)) in want_schur.iter().zip(&schur).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n} k={k} schur[{i}]: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn team_helpers_actually_join() {
+        let n = 260;
+        let a = random_spd(n, 33);
+        let (outcome, _, _, joined) = run_team(&a, n, 130, 3, None);
+        outcome.unwrap();
+        assert_eq!(joined, 3, "helpers never joined the job");
+    }
+
+    #[test]
+    fn team_leader_alone_completes_the_job() {
+        let n = 150;
+        let a = random_spd(n, 44);
+        let (outcome, panel, _, _) = run_team(&a, n, n, 0, None);
+        outcome.unwrap();
+        let want = full_factor_blocked(&a, n).unwrap();
+        assert_eq!(panel.len(), want.len());
+        for (x, y) in want.iter().zip(&panel) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn team_worker_panic_mid_front_does_not_hang() {
+        // poison a tile of the Schur step: whichever team member claims
+        // it panics mid-front. The job must abort (leader error or
+        // leader panic), close, and drain — this test *completing* is
+        // the property under test.
+        let n = 260;
+        let k = 130;
+        let a = random_spd(n, 55);
+        let job_probe = FrontTeamJob::new(n, k, vec![0f64; n * k], vec![0f64; (n - k) * (n - k)]);
+        // poison the last tile so earlier steps complete and helpers
+        // are deep in the protocol when it fires
+        let last = {
+            let s = job_probe.steps.last().unwrap();
+            s.base + s.tiles - 1
+        };
+        let (outcome, _, _, _) = run_team(&a, n, k, 3, Some(last));
+        let err = outcome.expect_err("poisoned job must not succeed");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("panicked"),
+            "unexpected outcome for poisoned job: {msg}"
+        );
+    }
+
+    #[test]
+    fn team_rejects_indefinite_matrices_cleanly() {
+        // an indefinite pivot fails factor_diag on the leader; helpers
+        // must still be released (the test would hang otherwise)
+        let n = 130;
+        let mut a = random_spd(n, 66);
+        a[0] = -1.0; // break positive definiteness at the first pivot
+        let (outcome, _, _, _) = run_team(&a, n, 65, 2, None);
+        let msg = format!("{:#}", outcome.expect_err("indefinite must fail"));
+        assert!(msg.contains("positive definite"), "{msg}");
     }
 }

@@ -3,7 +3,9 @@
 //! * [`dense`] — pure-Rust dense Cholesky building blocks: cache-blocked
 //!   tiled production kernels plus the unblocked reference versions
 //!   (the property-test oracle, and what the PJRT path is validated
-//!   against);
+//!   against), and the team-parallel tile-cursor protocol
+//!   ([`dense::FrontTeamJob`], DESIGN.md §10) that lets a worker team
+//!   share one front's tiles bit-identically to the serial path;
 //! * [`arena`] — the front arena: reused front buffer, recycled
 //!   contribution-block slabs, global-row scatter map, and live/peak
 //!   memory accounting (DESIGN.md §9);
@@ -24,5 +26,6 @@ pub mod solve;
 
 pub use arena::{FrontArena, MemGauge};
 pub use backend::{FrontBackend, NaiveBackend, PjrtBackend, RustBackend};
+pub use dense::FrontTeamJob;
 pub use multifrontal::{factorize, factorize_with_arena, Factorization};
 pub use solve::{backward_solve_sn, forward_solve_sn, solve_sn};

@@ -182,6 +182,21 @@ impl Schedule {
         peak
     }
 
+    /// Per-task constant ratio vector for an `n`-task tree: `r[task]`
+    /// is the fraction of the platform the schedule grants that task
+    /// (0 for tasks without a span). This is what the malleable
+    /// executor turns into integer worker-team sizes
+    /// (`exec::TeamPlan`).
+    pub fn task_ratios(&self, n: usize) -> Vec<f64> {
+        let mut r = vec![0.0; n];
+        for s in &self.spans {
+            if (s.task as usize) < n {
+                r[s.task as usize] = s.ratio;
+            }
+        }
+        r
+    }
+
     /// Minimum share (ratio × p) ever allocated to a task, under a
     /// constant profile — what `Agreg` must push above 1.
     pub fn min_share(&self, p: f64) -> f64 {

@@ -2,7 +2,7 @@
 //! pipeline over several problem classes, cross-checking every layer
 //! against every other.
 
-use malltree::exec::{execute_parallel, execute_serial};
+use malltree::exec::{execute_malleable, execute_parallel, execute_serial};
 use malltree::frontal::{factorize, multifrontal::residual, RustBackend};
 use malltree::model::SpGraph;
 use malltree::sched::{
@@ -96,12 +96,26 @@ fn executors_match_reference_on_every_problem() {
         let (serial, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend).unwrap();
         let (parallel, _) =
             execute_parallel(&at, &ap, &pm.schedule, &RustBackend, 4).unwrap();
+        let (malleable, report) =
+            execute_malleable(&at, &ap, &pm.schedule, &RustBackend, 4).unwrap();
         let r_ref = residual(&at, &ap, &reference);
         let r_ser = residual(&at, &ap, &serial);
         let r_par = residual(&at, &ap, &parallel);
         assert!(r_ref < 1e-11, "{name}: reference residual {r_ref}");
         assert!(r_ser < 1e-11, "{name}: serial residual {r_ser}");
         assert!(r_par < 1e-11, "{name}: parallel residual {r_par}");
+        // the malleable team path must be *bit-identical* to the
+        // serial blocked factorization, whatever teams formed
+        for (s, (a, b)) in serial.panels.iter().zip(&malleable.panels).enumerate() {
+            assert_eq!(a.len(), b.len(), "{name}: snode {s} panel length");
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{name}: snode {s} entry {i}: {x} vs {y}"
+                );
+            }
+        }
+        assert_eq!(report.team_log.len(), at.tree.len(), "{name}: team log incomplete");
     }
 }
 
