@@ -109,6 +109,97 @@ pub fn schedule(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Distributed scheduling (paper §6): map a tree onto an N-node
+/// platform, build one PM schedule per node, replay through the
+/// cross-node DES and compare the mapping strategies.
+pub fn distribute(args: &mut Args) -> Result<()> {
+    use crate::dist::{self, MappingStrategy};
+    use crate::model::Platform;
+
+    let (name, tree) = load_tree(args)?;
+    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
+    let lambda = args.get_f64("lambda", 1.1)?;
+    let strategy = MappingStrategy::parse(args.get("mapping").unwrap_or("pm"))?;
+    let platform = if let Some(spec) = args.get("speeds") {
+        let speeds = spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("--speeds {spec}: bad entry {s:?}"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        Platform::Heterogeneous { speeds }
+    } else {
+        let nodes = args.get_usize("nodes", 2)?;
+        let p = args.get_f64("p", 8.0)?;
+        if nodes <= 1 {
+            Platform::Shared { p }
+        } else {
+            Platform::Homogeneous { nodes, p }
+        }
+    };
+    platform.validate()?;
+    println!(
+        "tree {name}: {} tasks, alpha={alpha}, lambda={lambda}, {} nodes / {} cores pooled",
+        tree.len(),
+        platform.num_nodes(),
+        platform.total_cores()
+    );
+
+    let mut table = Table::new(&[
+        "mapping",
+        "DES makespan",
+        "/ lower bound",
+        "vs single node",
+        "cross-node stall",
+    ]);
+    let mut selected = None;
+    for s in [
+        MappingStrategy::Pm,
+        MappingStrategy::Proportional,
+        MappingStrategy::CriticalPath,
+    ] {
+        let d = dist::distribute(&tree, &platform, alpha, s, lambda)?;
+        let marker = if s == strategy { "*" } else { "" };
+        table.row(&[
+            format!("{}{marker}", s.name()),
+            format!("{:.6e}", d.makespan),
+            format!("{:.4}", d.approx_ratio()),
+            format!(
+                "{:+.2}%",
+                100.0 * (d.makespan - d.single_node_makespan) / d.single_node_makespan
+            ),
+            format!("{:.3e}", d.sim.cross_stall),
+        ]);
+        if s == strategy {
+            selected = Some(d);
+        }
+    }
+    print!("{}", table.render());
+    let d = selected.expect("selected strategy is always in the sweep");
+    println!(
+        "selected mapping {}: lower bound {:.6e}, {} DES events, {} cross-node edges{}",
+        strategy.name(),
+        d.lower_bound,
+        d.sim.events,
+        d.sim.cross_edges,
+        if d.fell_back { " (fell back to one node)" } else { "" }
+    );
+    let mut per_node = Table::new(&["node", "cores", "tasks", "local PM makespan", "DES finish"]);
+    for (k, sched) in d.per_node.iter().enumerate() {
+        per_node.row(&[
+            format!("{k}"),
+            format!("{}", d.platform.node_cores(k)),
+            format!("{}", sched.spans.len()),
+            format!("{:.6e}", sched.makespan),
+            format!("{:.6e}", d.sim.node_finish[k]),
+        ]);
+    }
+    print!("{}", per_node.render());
+    Ok(())
+}
+
 pub fn simulate(args: &mut Args) -> Result<()> {
     let trees = args.get_usize("trees", 100)?;
     let p = args.get_f64("p", 40.0)?;

@@ -5,6 +5,9 @@
 //! malltree schedule  --grid2d 32 --alpha 0.9 -p 40       makespans: PM vs baselines
 //! malltree batch     --trees 200 --threads 8 -p 40       multi-tenant batch throughput
 //! malltree simulate  --trees 100 --alpha 0.9 -p 40       Figure 13/14-style rows
+//! malltree distribute --grid2d 32 --nodes 4 -p 8
+//!                    [--speeds 8,4,4] [--lambda 1.1]
+//!                    [--mapping pm|prop|cp]              N-node mapping + cross-node DES
 //! malltree factorize --grid2d 24 [--workers 4] [--malleable]
 //!                    [--backend blocked|naive|pjrt]      numeric factorization + residual
 //! malltree kernelsim --kind cholesky --n 20000 --b 256   Figure 2-6-style T(p) curve
@@ -29,6 +32,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "schedule" => commands::schedule(&mut args),
         "batch" => commands::batch(&mut args),
         "simulate" => commands::simulate(&mut args),
+        "distribute" => commands::distribute(&mut args),
         "factorize" => commands::factorize(&mut args),
         "kernelsim" => commands::kernelsim(&mut args),
         "dataset" => commands::dataset(&mut args),
@@ -49,6 +53,7 @@ fn usage() -> String {
      \x20 schedule   compare PM / Proportional / Divisible makespans on one tree\n\
      \x20 batch      schedule a corpus of independent trees on a thread pool\n\
      \x20 simulate   Figure 13/14 rows over a generated tree corpus\n\
+     \x20 distribute map a tree onto N multicore nodes (Alg 11/12) + cross-node DES\n\
      \x20 factorize  end-to-end numeric multifrontal factorization\n\
      \x20 kernelsim  Figure 2-6 kernel timing curves + alpha fit\n\
      \x20 dataset    write the workload corpus to disk\n\
@@ -57,7 +62,9 @@ fn usage() -> String {
      common flags: --grid2d K | --grid3d K | --mtx FILE | --tree FILE,\n\
      \x20 --alpha A, -p N, --amalgamate W, --seed S, --workers N,\n\
      \x20 --malleable (schedule-share-driven worker teams per front),\n\
-     \x20 --backend blocked|naive|pjrt (--pjrt is an alias)\n"
+     \x20 --backend blocked|naive|pjrt (--pjrt is an alias),\n\
+     \x20 distribute: --nodes N -p CORES | --speeds P0,P1,.. (heterogeneous),\n\
+     \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp\n"
         .to_string()
 }
 

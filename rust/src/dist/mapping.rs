@@ -1,0 +1,476 @@
+//! Tree → node mapping for distributed platforms (Algorithm 11
+//! generalized to N nodes, paper §6).
+//!
+//! Tasks may not span nodes, so the unit of placement is a whole
+//! subtree. The mapping descends the single-child chain from the root
+//! to the first branching task `b` (the chain must run after
+//! everything below it and is kept on one node — the fastest), then
+//! assigns the independent sibling subtrees below `b` to nodes:
+//!
+//! * [`MappingStrategy::Pm`] — LPT over pseudo-tree *power-lengths*
+//!   `Leq(c)^{1/α}` (speedup-aware: a node's forest of subtrees `S`
+//!   finishes at `(Σ_{c∈S} Leq(c)^{1/α})^α / p^α` under PM, so
+//!   balancing power-sums balances actual completion times). On two
+//!   heterogeneous nodes the split instead runs Algorithm 12's
+//!   λ-trimmed subset enumeration over the subtree equivalent lengths
+//!   (exact below 20 subtrees) — the two-sided case where greedy LPT
+//!   loses its guarantee;
+//! * [`MappingStrategy::Proportional`] — LPT over subtree *work*
+//!   `Σ L_i` (the α-unaware baseline: what a Pothen–Sun-style runtime
+//!   balances);
+//! * [`MappingStrategy::CriticalPath`] — LPT over subtree critical
+//!   paths (a depth-aware but speedup-unaware baseline).
+//!
+//! All sorts use `f64::total_cmp` — a NaN task length must degrade the
+//! mapping, not panic it.
+
+use anyhow::{bail, Result};
+
+use crate::model::{Platform, TaskTree};
+
+use super::het::het_schedule;
+
+/// How sibling subtrees are weighed when balancing them over nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingStrategy {
+    /// Speedup-aware: balance pseudo-tree power-lengths `Leq^{1/α}`.
+    Pm,
+    /// α-unaware baseline: balance subtree total work.
+    Proportional,
+    /// Depth-aware baseline: balance subtree critical paths.
+    CriticalPath,
+}
+
+impl MappingStrategy {
+    /// Parse the CLI spelling (`pm | prop | cp`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pm" => Ok(MappingStrategy::Pm),
+            "prop" | "proportional" => Ok(MappingStrategy::Proportional),
+            "cp" | "critical-path" => Ok(MappingStrategy::CriticalPath),
+            other => bail!("unknown mapping strategy {other:?} (pm|prop|cp)"),
+        }
+    }
+
+    /// Stable short name (the CLI spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MappingStrategy::Pm => "pm",
+            MappingStrategy::Proportional => "prop",
+            MappingStrategy::CriticalPath => "cp",
+        }
+    }
+}
+
+/// A task → node assignment for one tree on one platform.
+#[derive(Debug, Clone)]
+pub struct TreeMapping {
+    /// Node index per task id.
+    pub node_of: Vec<usize>,
+    /// Root chain (root down to and including the first branching
+    /// task); runs on [`TreeMapping::chain_node`] after all subtrees.
+    pub chain: Vec<u32>,
+    /// Sibling subtree roots below the chain (empty when the tree is a
+    /// pure chain or the platform has one node).
+    pub branch_roots: Vec<u32>,
+    /// Node the chain (and any single-node fallback) runs on.
+    pub chain_node: usize,
+    /// The strategy that produced this mapping.
+    pub strategy: MappingStrategy,
+}
+
+impl TreeMapping {
+    /// All tasks on one node (the mapping every `Platform::Shared` run
+    /// and the single-node fallback use).
+    pub fn single_node(tree: &TaskTree, node: usize, strategy: MappingStrategy) -> TreeMapping {
+        TreeMapping {
+            node_of: vec![node; tree.len()],
+            chain: Vec::new(),
+            branch_roots: Vec::new(),
+            chain_node: node,
+            strategy,
+        }
+    }
+
+    /// Per-node membership masks (`masks[k][t]` ⇔ task `t` on node `k`).
+    pub fn node_members(&self, n_nodes: usize) -> Vec<Vec<bool>> {
+        let mut masks = vec![vec![false; self.node_of.len()]; n_nodes];
+        for (t, &k) in self.node_of.iter().enumerate() {
+            masks[k][t] = true;
+        }
+        masks
+    }
+}
+
+/// Bottom-up pseudo-tree equivalent lengths (Definition 1 on the
+/// Figure-7 pseudo-tree):
+/// `Leq(v) = len(v) + (Σ_c Leq(c)^{1/α})^α`.
+pub fn pseudo_equiv_lens(tree: &TaskTree, alpha: f64) -> Vec<f64> {
+    let inv = 1.0 / alpha;
+    let n = tree.len();
+    let mut leq = vec![0f64; n];
+    for &v in &tree.topo_up() {
+        let vi = v as usize;
+        let node = &tree.nodes[vi];
+        let kids: f64 = node
+            .children
+            .iter()
+            .map(|&c| leq[c as usize].powf(inv))
+            .sum();
+        leq[vi] = node.len + if kids > 0.0 { kids.powf(alpha) } else { 0.0 };
+    }
+    leq
+}
+
+/// Root chain of a tree: the tasks from the root down to (and
+/// including) the first task with ≠ 1 children. Returns the chain and
+/// the sibling subtree roots below it (children of the last chain
+/// task; empty for pure chains).
+pub fn root_chain(tree: &TaskTree) -> (Vec<u32>, Vec<u32>) {
+    let mut chain = Vec::new();
+    let mut b = tree.root;
+    loop {
+        chain.push(b);
+        match tree.nodes[b as usize].children.as_slice() {
+            [only] => b = *only,
+            _ => break,
+        }
+    }
+    let branches = tree.nodes[b as usize].children.clone();
+    (chain, branches)
+}
+
+/// Per-subtree critical path (max root-to-leaf length sum), bottom-up.
+fn subtree_critical_paths(tree: &TaskTree) -> Vec<f64> {
+    let mut cp = vec![0f64; tree.len()];
+    for &v in &tree.topo_up() {
+        let node = &tree.nodes[v as usize];
+        let child_max = node
+            .children
+            .iter()
+            .map(|&c| cp[c as usize])
+            .fold(0f64, f64::max);
+        cp[v as usize] = node.len + child_max;
+    }
+    cp
+}
+
+/// Map `tree` onto `platform` (Algorithm 11 generalized): chain on the
+/// fastest node, sibling subtrees balanced by `strategy`; `lambda` is
+/// the Algorithm-12 approximation parameter used on the heterogeneous
+/// two-node Pm path (values ≤ 1 are clamped just above 1).
+pub fn map_tree(
+    tree: &TaskTree,
+    platform: &Platform,
+    alpha: f64,
+    strategy: MappingStrategy,
+    lambda: f64,
+) -> TreeMapping {
+    let n_nodes = platform.num_nodes();
+    let chain_node = platform.fastest_node();
+    if n_nodes == 1 {
+        return TreeMapping::single_node(tree, chain_node, strategy);
+    }
+    let (chain, branches) = root_chain(tree);
+    if branches.len() < 2 {
+        // pure chain (or a single branch): one node is all the tree
+        // can use
+        return TreeMapping::single_node(tree, chain_node, strategy);
+    }
+
+    // branch index -> node index
+    let assign: Vec<usize> = match platform {
+        Platform::Heterogeneous { speeds }
+            if speeds.len() == 2 && strategy == MappingStrategy::Pm =>
+        {
+            // two-sided heterogeneous case: λ-trimmed subset
+            // enumeration over the subtree equivalent lengths
+            // (Algorithm 12; exact below 20 subtrees)
+            let leq = pseudo_equiv_lens(tree, alpha);
+            let lens: Vec<f64> = branches.iter().map(|&c| leq[c as usize]).collect();
+            let lam = if lambda > 1.0 { lambda } else { 1.000001 };
+            let het = het_schedule(&lens, alpha, speeds[0], speeds[1], lam);
+            let mut a = vec![1usize; branches.len()];
+            for &i in &het.on_p {
+                a[i] = 0;
+            }
+            a
+        }
+        _ => {
+            // per-branch balance weights
+            let weights: Vec<f64> = match strategy {
+                MappingStrategy::Pm => {
+                    let inv = 1.0 / alpha;
+                    let leq = pseudo_equiv_lens(tree, alpha);
+                    branches.iter().map(|&c| leq[c as usize].powf(inv)).collect()
+                }
+                MappingStrategy::Proportional => {
+                    let w = tree.subtree_work();
+                    branches.iter().map(|&c| w[c as usize]).collect()
+                }
+                MappingStrategy::CriticalPath => {
+                    let cp = subtree_critical_paths(tree);
+                    branches.iter().map(|&c| cp[c as usize]).collect()
+                }
+            };
+            greedy_lpt(&weights, platform)
+        }
+    };
+
+    let mut node_of = vec![chain_node; tree.len()];
+    for (bi, &c) in branches.iter().enumerate() {
+        for t in tree.subtree_tasks(c) {
+            node_of[t as usize] = assign[bi];
+        }
+    }
+    for &t in &chain {
+        node_of[t as usize] = chain_node;
+    }
+    TreeMapping { node_of, chain, branch_roots: branches, chain_node, strategy }
+}
+
+/// Greedy LPT: weights in descending order, each to the node whose
+/// projected finish time grows least. The finish proxy is
+/// `(load_k + w) / p_k` for every strategy: for `Pm` the weights live
+/// in power space where node `k` finishes at `(load_k)^α / p_k^α`,
+/// and taking the α-th root of that (monotone, α > 0) gives exactly
+/// `load_k / p_k`; the α-unaware strategies balance work or critical
+/// path per core, the same proxy.
+fn greedy_lpt(weights: &[f64], platform: &Platform) -> Vec<usize> {
+    let n_nodes = platform.num_nodes();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&i, &j| weights[j].total_cmp(&weights[i]));
+    let scale: Vec<f64> = (0..n_nodes).map(|k| platform.node_cores(k)).collect();
+    let mut load = vec![0f64; n_nodes];
+    let mut assign = vec![0usize; weights.len()];
+    for &bi in &order {
+        let w = weights[bi];
+        let mut best = 0usize;
+        let mut best_t = f64::INFINITY;
+        for k in 0..n_nodes {
+            let t = (load[k] + w) / scale[k];
+            if t < best_t {
+                best_t = t;
+                best = k;
+            }
+        }
+        load[best] += w;
+        assign[bi] = best;
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Star of `k` leaf branches under a root.
+    fn star(lens: &[f64]) -> TaskTree {
+        let parents = vec![0usize; lens.len() + 1];
+        let mut all = vec![1.0];
+        all.extend_from_slice(lens);
+        TaskTree::from_parents(&parents, &all).unwrap()
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [
+            MappingStrategy::Pm,
+            MappingStrategy::Proportional,
+            MappingStrategy::CriticalPath,
+        ] {
+            assert_eq!(MappingStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(MappingStrategy::parse("lpt").is_err());
+    }
+
+    #[test]
+    fn shared_platform_maps_everything_to_node_zero() {
+        let t = star(&[1.0, 2.0, 3.0]);
+        let m = map_tree(&t, &Platform::Shared { p: 8.0 }, 0.9, MappingStrategy::Pm, 1.1);
+        assert!(m.node_of.iter().all(|&k| k == 0));
+    }
+
+    #[test]
+    fn pure_chain_stays_on_the_fastest_node() {
+        let parents: Vec<usize> = (0..20).map(|i: usize| i.saturating_sub(1)).collect();
+        let t = TaskTree::from_parents(&parents, &[1.0; 20]).unwrap();
+        let plat = Platform::Heterogeneous { speeds: vec![2.0, 8.0, 4.0] };
+        let m = map_tree(&t, &plat, 0.9, MappingStrategy::Pm, 1.1);
+        assert!(m.node_of.iter().all(|&k| k == 1), "fastest node is index 1");
+        assert!(m.branch_roots.is_empty());
+    }
+
+    #[test]
+    fn mapping_assigns_whole_subtrees_and_chain() {
+        // root -> a -> {b-subtree, c-subtree}: chain is {root, a}
+        let t = TaskTree::from_parents(&[0, 0, 1, 1, 2, 2, 3, 3], &[1.0; 8]).unwrap();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let m = map_tree(&t, &plat, 0.9, MappingStrategy::Pm, 1.1);
+        assert_eq!(m.chain, vec![0, 1]);
+        assert_eq!(m.branch_roots, vec![2, 3]);
+        assert_eq!(m.node_of[0], 0);
+        assert_eq!(m.node_of[1], 0);
+        // each branch's tasks share the branch's node
+        for &b in &m.branch_roots {
+            let k = m.node_of[b as usize];
+            for t_id in t.subtree_tasks(b) {
+                assert_eq!(m.node_of[t_id as usize], k);
+            }
+        }
+        // both nodes used (two equal branches)
+        assert_ne!(m.node_of[2], m.node_of[3]);
+        // masks partition the task set
+        let masks = m.node_members(2);
+        for t_id in 0..t.len() {
+            let owners = masks.iter().filter(|mk| mk[t_id]).count();
+            assert_eq!(owners, 1);
+        }
+    }
+
+    #[test]
+    fn pm_lpt_meets_list_scheduling_bound_on_stars() {
+        // greedy list scheduling guarantee on m identical machines:
+        // max load ≤ total/m + w_max·(m−1)/m — holds for every order,
+        // so in particular for the LPT order the Pm strategy uses
+        let mut rng = Rng::new(17);
+        for _ in 0..30 {
+            let k = rng.range(4, 12);
+            let lens: Vec<f64> = (0..k).map(|_| rng.log_uniform(0.5, 200.0)).collect();
+            let t = star(&lens);
+            let alpha = rng.range_f64(0.5, 1.0);
+            let inv = 1.0 / alpha;
+            let m = 3usize;
+            let plat = Platform::Homogeneous { nodes: m, p: 4.0 };
+            let pm = map_tree(&t, &plat, alpha, MappingStrategy::Pm, 1.1);
+            let mut load = vec![0f64; m];
+            for &c in &pm.branch_roots {
+                load[pm.node_of[c as usize]] += lens[c as usize - 1].powf(inv);
+            }
+            let max_load = load.into_iter().fold(0f64, f64::max);
+            let total: f64 = lens.iter().map(|l| l.powf(inv)).sum();
+            let w_max = lens.iter().map(|l| l.powf(inv)).fold(0f64, f64::max);
+            let bound = total / m as f64 + w_max * (m as f64 - 1.0) / m as f64;
+            assert!(
+                max_load <= bound * (1.0 + 1e-9),
+                "alpha={alpha}: max load {max_load} exceeds list bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn pm_beats_prop_when_subtree_shapes_differ() {
+        // Two chain-shaped branches (Leq = work = 4) and one bushy,
+        // work-heaviest branch (work 8.5 but Leq ≈ 2 at α = 0.5): the
+        // work balancer places the bushy branch alone and pairs the two
+        // chains — in power space (where node finish times live) that
+        // node carries 16+16 = 32; the power-length balancer separates
+        // the chains for a max power-sum of 20.25.
+        // tree: root 0 with branch roots {1, 2, 3}
+        let mut parents = vec![0usize; 4];
+        let mut lens = vec![0.0, 1.0, 0.0, 1.0];
+        // chain below 1: tasks 4,5,6 (branch work 4)
+        parents.extend([1, 4, 5]);
+        lens.extend([1.0, 1.0, 1.0]);
+        // 17 leaves below 2: tasks 7..=23 (branch work 8.5)
+        parents.extend([2; 17]);
+        lens.extend([0.5; 17]);
+        // chain below 3: tasks 24,25,26 (branch work 4)
+        parents.extend([3, 24, 25]);
+        lens.extend([1.0, 1.0, 1.0]);
+        let t = TaskTree::from_parents(&parents, &lens).unwrap();
+        let alpha = 0.5;
+        let inv = 1.0 / alpha;
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let leq = pseudo_equiv_lens(&t, alpha);
+        let max_power = |m: &TreeMapping| -> f64 {
+            let mut load = vec![0f64; 2];
+            for &c in &m.branch_roots {
+                load[m.node_of[c as usize]] += leq[c as usize].powf(inv);
+            }
+            load.into_iter().fold(0f64, f64::max)
+        };
+        let pm = map_tree(&t, &plat, alpha, MappingStrategy::Pm, 1.1);
+        let prop = map_tree(&t, &plat, alpha, MappingStrategy::Proportional, 1.1);
+        assert_eq!(
+            prop.node_of[1], prop.node_of[3],
+            "work balancing pairs the chains on this instance"
+        );
+        assert_ne!(pm.node_of[1], pm.node_of[3], "Pm must separate the chains");
+        assert!(
+            max_power(&pm) < max_power(&prop) * (1.0 - 1e-9),
+            "pm {} should beat prop {}",
+            max_power(&pm),
+            max_power(&prop)
+        );
+    }
+
+    #[test]
+    fn het_greedy_scales_finish_by_cores_not_power_cores() {
+        // speeds [4,1,1], α=0.5: branch power-lengths [16,4,4] → the
+        // correct finish proxy (load/p) gives one branch per node and
+        // max finish 2.0; scaling loads by p^{1/α} instead would pile
+        // every branch onto the fast node (finish ≈ 2.45)
+        let t = star(&[4.0, 2.0, 2.0]);
+        let plat = Platform::Heterogeneous { speeds: vec![4.0, 1.0, 1.0] };
+        let alpha = 0.5;
+        let m = map_tree(&t, &plat, alpha, MappingStrategy::Pm, 1.1);
+        let inv = 1.0 / alpha;
+        let mut load = vec![0f64; 3];
+        for &c in &m.branch_roots {
+            load[m.node_of[c as usize]] += t.nodes[c as usize].len.powf(inv);
+        }
+        let finish = load
+            .iter()
+            .enumerate()
+            .map(|(k, l)| l.powf(alpha) / plat.node_cores(k).powf(alpha))
+            .fold(0f64, f64::max);
+        assert!((finish - 2.0).abs() < 1e-12, "max finish {finish}");
+    }
+
+    #[test]
+    fn het_two_node_pm_uses_optimal_partition_below_threshold() {
+        // ≤ 20 branches: the Algorithm-12 path is exact, so the achieved
+        // two-node objective equals the independent optimum over the
+        // branch equivalent lengths
+        let mut rng = Rng::new(23);
+        let lens: Vec<f64> = (0..10).map(|_| rng.log_uniform(1.0, 60.0)).collect();
+        let t = star(&lens);
+        let (alpha, p, q) = (0.8, 8.0, 3.0);
+        let plat = Platform::Heterogeneous { speeds: vec![p, q] };
+        let m = map_tree(&t, &plat, alpha, MappingStrategy::Pm, 1.5);
+        let inv = 1.0 / alpha;
+        let mut a = 0f64;
+        let mut b = 0f64;
+        for &c in &m.branch_roots {
+            let x = lens[c as usize - 1].powf(inv);
+            if m.node_of[c as usize] == 0 {
+                a += x;
+            } else {
+                b += x;
+            }
+        }
+        let achieved = (a.powf(alpha) / p.powf(alpha)).max(b.powf(alpha) / q.powf(alpha));
+        let (_, opt) = crate::dist::independent_optimal(&lens, alpha, p, q);
+        assert!(
+            (achieved - opt).abs() <= 1e-9 * opt,
+            "achieved {achieved} vs optimal {opt}"
+        );
+    }
+
+    #[test]
+    fn nan_branch_length_does_not_panic_mapping() {
+        // regression: the LPT sort must tolerate NaN weights
+        let t = star(&[1.0, f64::NAN, 3.0, 2.0]);
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        for s in [
+            MappingStrategy::Pm,
+            MappingStrategy::Proportional,
+            MappingStrategy::CriticalPath,
+        ] {
+            let m = map_tree(&t, &plat, 0.9, s, 1.1);
+            assert_eq!(m.node_of.len(), t.len());
+        }
+    }
+}

@@ -1,443 +1,208 @@
-//! Two-node distributed-memory extensions (paper §6).
+//! Distributed-memory scheduling (paper §6): trees of malleable tasks
+//! on platforms of several multicore nodes, where a task may not span
+//! nodes and the `p^α` model applies within a node.
 //!
-//! Tasks may not span nodes: each malleable task runs entirely on one
-//! multicore node, and the `p^α` model applies within a node. The paper
-//! proves that even two homogeneous nodes make the problem NP-hard
-//! (Theorem 7, by reduction from PARTITION) and gives:
+//! Module tree:
 //!
-//! * **Algorithm 11** ([`homog_approx`]) — a `(4/3)^α`-approximation
-//!   for trees on two *homogeneous* nodes: split the sibling subtrees
-//!   below the root chain across the nodes by longest-processing-time
-//!   (LPT) balancing in `L^{1/α}` ("power-length") space, then run the
-//!   serial root chain on the first node. LPT on two machines is a
-//!   `7/6`-approximation of the balancing step in power space, which
-//!   the `x ↦ x^α` map (α ≤ 1) contracts to `(7/6)^α ≤ (4/3)^α`;
-//! * **Algorithm 12** ([`het_schedule`]) — a λ-approximation scheme for
-//!   *independent* tasks on two heterogeneous nodes `(p, q)`, via
-//!   trimmed enumeration of achievable power-sums (an FPTAS; exact
-//!   exhaustive search below 20 tasks);
-//! * the PARTITION gadget ([`partition_reduction`]) behind Theorem 7,
-//!   plus exact ([`subset_sum_exact`]) and FPTAS
-//!   ([`subset_sum_fptas`]) subset-sum solvers used by the reduction
-//!   cross-checks and quality benches.
+//! * [`homog`] — Algorithm 11, the `(4/3)^α`-approximation for trees
+//!   on two *homogeneous* nodes (closed-form analysis);
+//! * [`het`] — Algorithm 12, the λ-approximation scheme for
+//!   *independent* tasks on two heterogeneous nodes via trimmed
+//!   enumeration of achievable power-sums (exact below 20 tasks);
+//! * [`subset`] — the PARTITION gadget behind Theorem 7's NP-hardness
+//!   proof plus exact / FPTAS subset-sum solvers;
+//! * [`mapping`] — the N-node generalization: assign sibling subtrees
+//!   to nodes by LPT over pseudo-tree power-lengths `Leq^{1/α}`
+//!   (speedup-aware), with `Proportional` (work-LPT) and
+//!   `CriticalPath` baselines, and the Algorithm-12 trimmed split on
+//!   two heterogeneous nodes.
+//!
+//! [`distribute`] is the end-to-end pipeline: map the tree onto a
+//! [`Platform`], solve one Prasanna–Musicus schedule per node over the
+//! node-local sub-forest, replay the whole thing through the
+//! cross-node DES ([`crate::sim::des::simulate_distributed`]) and
+//! return a [`DistSchedule`] — per-node [`Schedule`]s plus the
+//! stall-aware makespan, the pooled `L_G/(Σp)^α` lower bound, and the
+//! single-node fallback comparison (for the `Pm` strategy the returned
+//! makespan never exceeds the best single node's, Algorithm 11 style).
 //!
 //! Throughout, a set `S` of independent tasks on one node of `p` cores
 //! completes no earlier than `PL(S)/p^α` where `PL(S) = (Σ_{i∈S}
 //! L_i^{1/α})^α` is the parallel equivalent length (Definition 1), and
-//! that bound is achieved by the PM schedule — so two-node scheduling
-//! of independent tasks reduces to partitioning power-lengths.
+//! that bound is achieved by the PM schedule — so node-level
+//! scheduling reduces to partitioning power-lengths.
 
-use crate::model::TaskTree;
+pub mod het;
+pub mod homog;
+pub mod mapping;
+pub mod subset;
 
-/// Result of the homogeneous two-node approximation (Algorithm 11).
+pub use het::{het_schedule, independent_optimal, HetSchedule};
+pub use homog::{homog_approx, HomogSchedule};
+pub use mapping::{map_tree, pseudo_equiv_lens, root_chain, MappingStrategy, TreeMapping};
+pub use subset::{partition_reduction, subset_sum_exact, subset_sum_fptas};
+
+use anyhow::Result;
+
+use crate::model::{Platform, SpGraph, TaskTree};
+use crate::sched::pm::PmSchedule;
+use crate::sched::{Profile, Schedule, SchedWorkspace};
+use crate::sim::des::{simulate_distributed_with_workspace, DistDesResult, Policy};
+
+/// A distributed schedule: one per-node PM schedule over the
+/// node-local sub-forest, plus the cross-node DES replay that prices
+/// the dependency stalls between nodes.
 #[derive(Debug, Clone)]
-pub struct HomogSchedule {
-    /// Achieved makespan of the constructed feasible schedule.
+pub struct DistSchedule {
+    /// The platform the schedule was built for.
+    pub platform: Platform,
+    /// The task → node assignment (after candidate selection / the
+    /// single-node fallback; `mapping.strategy` names the heuristic
+    /// that generated the winning candidate).
+    pub mapping: TreeMapping,
+    /// One [`Schedule`] per node: the node-local PM spans under a
+    /// constant profile of that node's cores, on the node-local
+    /// timeline (t = 0 is when the node's first local root may start;
+    /// the DES shifts starts by cross-node stalls when replaying).
+    /// Nodes without tasks hold an empty schedule.
+    pub per_node: Vec<Schedule>,
+    /// DES makespan of the mapped run (cross-node stalls included).
     pub makespan: f64,
-    /// Pooled-platform lower bound `L_G / (2p)^α` (no schedule on two
-    /// `p`-core nodes can beat the shared-memory optimum on `2p`).
+    /// Pooled lower bound `L_G / (Σ_k cores_k)^α` — `L_G/(Np)^α` on a
+    /// homogeneous platform.
     pub lower_bound: f64,
-    /// Tree node ids of the subtree roots offloaded to the second node.
-    pub on_second: Vec<u32>,
-    /// 1 when everything stayed on one node, 2 when both nodes run.
-    pub phases: usize,
+    /// DES makespan of the best single node running the whole tree
+    /// (the fallback candidate of Algorithm 11).
+    pub single_node_makespan: f64,
+    /// True when the single-node candidate won and replaced the
+    /// mapping (only ever set for [`MappingStrategy::Pm`]).
+    pub fell_back: bool,
+    /// The full DES replay (per-node finish times, cross-edge count,
+    /// accumulated stall time).
+    pub sim: DistDesResult,
 }
 
-/// Result of the heterogeneous two-node scheme (Algorithm 12).
-#[derive(Debug, Clone)]
-pub struct HetSchedule {
-    /// Achieved makespan `max(PL(S)/p^α, PL(S̄)/q^α)`.
-    pub makespan: f64,
-    /// Indices of the tasks placed on the `p`-core node.
-    pub on_p: Vec<usize>,
-    /// The approximation parameter the schedule was built for.
-    pub lambda: f64,
+impl DistSchedule {
+    /// `makespan / lower_bound` — the approximation-ratio estimate the
+    /// `dist_sim` bench tracks (≥ 1 by construction).
+    pub fn approx_ratio(&self) -> f64 {
+        self.makespan / self.lower_bound
+    }
+
+    /// Relative gain (%) of this schedule over another makespan
+    /// (positive when this one is faster).
+    pub fn gain_over(&self, other_makespan: f64) -> f64 {
+        100.0 * (other_makespan - self.makespan) / other_makespan
+    }
 }
 
-/// Exhaustive optimum for independent tasks on nodes of `p` and `q`
-/// cores: minimizes `max(PL(S)/p^α, PL(S̄)/q^α)` over all `2^n`
-/// subsets. Returns the `p`-node subset and the optimal makespan.
-/// Intended for the small instances of the §6 evaluation (n ≤ 24).
-pub fn independent_optimal(lens: &[f64], alpha: f64, p: f64, q: f64) -> (Vec<usize>, f64) {
-    let n = lens.len();
-    assert!(n <= 24, "independent_optimal is exhaustive; got n = {n} > 24");
-    let inv = 1.0 / alpha;
-    let xs: Vec<f64> = lens.iter().map(|l| l.powf(inv)).collect();
-    let total: f64 = xs.iter().sum();
-    let pa = p.powf(alpha);
-    let qa = q.powf(alpha);
-    let mut best = f64::INFINITY;
-    let mut best_mask: u32 = 0;
-    for mask in 0u32..(1u32 << n) {
-        let mut a = 0.0;
-        for (i, x) in xs.iter().enumerate() {
-            if mask >> i & 1 == 1 {
-                a += x;
+/// End-to-end distributed pipeline (the CLI `distribute` command):
+/// map, solve per-node PM schedules, replay through the cross-node
+/// DES. `lambda` parameterizes the Algorithm-12 trimmed split used on
+/// two heterogeneous nodes.
+///
+/// [`MappingStrategy::Pm`] is *makespan-aware* in the Algorithm-11
+/// sense of keeping fallback candidates: it generates the power-length
+/// LPT partition (or the Alg-12 trimmed split), the two baseline
+/// partitions and the all-on-the-fastest-node mapping, replays each
+/// through the DES (which prices the realistic sub-processor kink and
+/// the cross-node stalls the closed forms cannot see) and returns the
+/// best — so its makespan never exceeds the single-node PM makespan
+/// *or* either baseline's, all measured by the same DES. The baseline
+/// strategies are returned as mapped, so their true cost is visible.
+pub fn distribute(
+    tree: &TaskTree,
+    platform: &Platform,
+    alpha: f64,
+    strategy: MappingStrategy,
+    lambda: f64,
+) -> Result<DistSchedule> {
+    platform.validate()?;
+    let n_nodes = platform.num_nodes();
+    let mut ws = SchedWorkspace::new();
+
+    let total_len = ws.solve_forest(tree, &[tree.root], alpha).total_len;
+    let lower_bound = platform.pooled_lower_bound(total_len, alpha);
+
+    let mut mapping = map_tree(tree, platform, alpha, strategy, lambda);
+    let mut sim =
+        simulate_distributed_with_workspace(tree, alpha, platform, &mapping.node_of, Policy::Pm, &mut ws);
+
+    if strategy == MappingStrategy::Pm && n_nodes > 1 {
+        // candidate sweep: the baseline partitions can win once the
+        // realistic kink is priced in; strict `<` keeps the power-LPT
+        // attribution on ties, and identical partitions are skipped
+        // rather than replayed
+        for cand in [MappingStrategy::Proportional, MappingStrategy::CriticalPath] {
+            let m = map_tree(tree, platform, alpha, cand, lambda);
+            if m.node_of == mapping.node_of {
+                continue;
+            }
+            let s = simulate_distributed_with_workspace(
+                tree,
+                alpha,
+                platform,
+                &m.node_of,
+                Policy::Pm,
+                &mut ws,
+            );
+            if s.makespan < sim.makespan {
+                mapping = m;
+                sim = s;
             }
         }
-        let ms = (a.powf(alpha) / pa).max((total - a).powf(alpha) / qa);
-        if ms < best {
-            best = ms;
-            best_mask = mask;
-        }
-    }
-    let on_p = (0..n).filter(|&i| best_mask >> i & 1 == 1).collect();
-    (on_p, best)
-}
-
-/// Algorithm 11: trees of malleable tasks on two homogeneous `p`-core
-/// nodes, guarantee `makespan ≤ (4/3)^α · L_G / p^α` (and trivially
-/// `≥ L_G / (2p)^α`).
-///
-/// Structure: descend the single-child chain from the root to the
-/// first branching node `b`; the chain (including `b`) must run after
-/// everything below it and cannot be split across nodes without idling.
-/// The sibling subtrees below `b` are independent; balance their
-/// power-lengths over the two nodes with LPT, run the remainder tree on
-/// node 1 and the offloaded set on node 2, then the chain on node 1
-/// once both sides complete. The all-on-one-node PM schedule is kept as
-/// a fallback candidate, so the result never exceeds `L_G / p^α`.
-pub fn homog_approx(tree: &TaskTree, alpha: f64, p: f64) -> HomogSchedule {
-    let inv = 1.0 / alpha;
-    let pa = p.powf(alpha);
-
-    // Bottom-up pseudo-tree equivalent lengths:
-    // Leq(v) = len(v) + (Σ_c Leq(c)^{1/α})^α.
-    let n = tree.len();
-    let mut leq = vec![0f64; n];
-    for &v in &tree.topo_up() {
-        let vi = v as usize;
-        let node = &tree.nodes[vi];
-        let kids: f64 = node
-            .children
-            .iter()
-            .map(|&c| leq[c as usize].powf(inv))
-            .sum();
-        leq[vi] = node.len + if kids > 0.0 { kids.powf(alpha) } else { 0.0 };
-    }
-    let total_equiv = leq[tree.root as usize];
-    let lower_bound = total_equiv / (2.0 * p).powf(alpha);
-    let single_node = total_equiv / pa;
-
-    // Root chain: follow single children to the first branching node.
-    let mut chain_work = 0.0;
-    let mut b = tree.root;
-    loop {
-        chain_work += tree.nodes[b as usize].len;
-        match tree.nodes[b as usize].children.as_slice() {
-            [only] => b = *only,
-            _ => break,
-        }
-    }
-    let branches = &tree.nodes[b as usize].children;
-    if branches.len() < 2 {
-        // pure chain (or the branching node is a leaf): one node is
-        // optimal, the second cannot help.
-        return HomogSchedule {
-            makespan: single_node,
-            lower_bound,
-            on_second: Vec::new(),
-            phases: 1,
-        };
     }
 
-    // LPT balance of subtree power-lengths across the two nodes.
-    let mut items: Vec<(f64, u32)> = branches
-        .iter()
-        .map(|&c| (leq[c as usize].powf(inv), c))
-        .collect();
-    items.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-    let (mut load1, mut load2) = (0f64, 0f64);
-    let mut on_second = Vec::new();
-    for &(x, c) in &items {
-        if load1 <= load2 {
-            load1 += x;
-        } else {
-            load2 += x;
-            on_second.push(c);
-        }
-    }
-    // Both nodes run their forests from t=0 (PM within the node); the
-    // chain starts on node 1 when the slower side finishes.
-    let split = (load1.max(load2).powf(alpha) + chain_work) / pa;
-
-    if split < single_node {
-        HomogSchedule { makespan: split, lower_bound, on_second, phases: 2 }
+    // Single-node fallback candidate (Algorithm 11 keeps it too). When
+    // the current mapping already is that single-node mapping (1-node
+    // platforms, pure chains), its replay is the run we just did.
+    let best_node = platform.fastest_node();
+    let single = TreeMapping::single_node(tree, best_node, strategy);
+    let mut fell_back = false;
+    let single_node_makespan = if single.node_of == mapping.node_of {
+        sim.makespan
     } else {
-        HomogSchedule {
-            makespan: single_node,
-            lower_bound,
-            on_second: Vec::new(),
-            phases: 1,
+        let sim_single = simulate_distributed_with_workspace(
+            tree,
+            alpha,
+            platform,
+            &single.node_of,
+            Policy::Pm,
+            &mut ws,
+        );
+        let ms = sim_single.makespan;
+        if strategy == MappingStrategy::Pm && ms < sim.makespan {
+            mapping = single;
+            sim = sim_single;
+            fell_back = true;
         }
-    }
-}
-
-/// Evaluate a `p`-node power-sum `a` against the complement under the
-/// two-node objective.
-fn het_objective(a: f64, total: f64, alpha: f64, pa: f64, qa: f64) -> f64 {
-    (a.powf(alpha) / pa).max(((total - a).max(0.0)).powf(alpha) / qa)
-}
-
-/// Algorithm 12: independent tasks on two heterogeneous nodes `(p, q)`
-/// with guarantee `makespan ≤ λ · optimal` (λ > 1).
-///
-/// The objective `max(A^α/p^α, (X−A)^α/q^α)` over achievable power-sums
-/// `A` is evaluated on a trimmed enumeration of subset power-sums; the
-/// trimming step keeps a `(1+δ)`-net with `δ = (λ^{1/α}−1)/(2n)`, run
-/// from both sides (tracking the `p`-side and the `q`-side sums) so the
-/// multiplicative error bounds whichever side carries at least half the
-/// total. Below 20 tasks the enumeration is exact, so the returned
-/// schedule is optimal regardless of λ.
-pub fn het_schedule(lens: &[f64], alpha: f64, p: f64, q: f64, lambda: f64) -> HetSchedule {
-    assert!(lambda > 1.0, "lambda must exceed 1");
-    let n = lens.len();
-    if n <= 20 {
-        // exact: also what the §6 evaluation instances exercise
-        let (on_p, opt) = independent_optimal(lens, alpha, p, q);
-        return HetSchedule { makespan: opt, on_p, lambda };
-    }
-    let inv = 1.0 / alpha;
-    let xs: Vec<f64> = lens.iter().map(|l| l.powf(inv)).collect();
-    let total: f64 = xs.iter().sum();
-    let pa = p.powf(alpha);
-    let qa = q.powf(alpha);
-    let eps = (lambda.powf(inv) - 1.0) / 2.0;
-    let delta = eps / n as f64;
-
-    // Trimmed enumeration of achievable power-sums, built once. The
-    // (1+δ)-net keeps the *smallest* representative of each cluster,
-    // which multiplicatively under-approximates whichever side the
-    // tracked sum represents — so the same net is evaluated under both
-    // orientations (tracked sum on the p-node, or on the q-node) and
-    // the better schedule wins; the analysis bound holds for the
-    // orientation whose side carries at least half the total.
-    // arena of (sum, parent index, item index)
-    let mut arena: Vec<(f64, usize, usize)> = vec![(0.0, usize::MAX, usize::MAX)];
-    let mut cur: Vec<usize> = vec![0];
-    for (i, &x) in xs.iter().enumerate() {
-        let mut merged: Vec<usize> = Vec::with_capacity(2 * cur.len());
-        let mut with: Vec<usize> = Vec::with_capacity(cur.len());
-        for &e in &cur {
-            arena.push((arena[e].0 + x, e, i));
-            with.push(arena.len() - 1);
-        }
-        // merge two sorted lists by sum
-        let (mut a, mut bq) = (0usize, 0usize);
-        while a < cur.len() || bq < with.len() {
-            let take_a =
-                bq >= with.len() || (a < cur.len() && arena[cur[a]].0 <= arena[with[bq]].0);
-            let e = if take_a {
-                let e = cur[a];
-                a += 1;
-                e
-            } else {
-                let e = with[bq];
-                bq += 1;
-                e
-            };
-            match merged.last() {
-                Some(&last) if arena[e].0 <= arena[last].0 * (1.0 + delta) => {}
-                _ => merged.push(e),
-            }
-        }
-        cur = merged;
-    }
-
-    let pick = |swap: bool| -> (Vec<usize>, f64) {
-        let mut best = f64::INFINITY;
-        let mut best_entry = 0usize;
-        for &e in &cur {
-            let a = arena[e].0;
-            let ms = if swap {
-                het_objective(total - a, total, alpha, pa, qa)
-            } else {
-                het_objective(a, total, alpha, pa, qa)
-            };
-            if ms < best {
-                best = ms;
-                best_entry = e;
-            }
-        }
-        // reconstruct the enumerated subset
-        let mut subset = Vec::new();
-        let mut e = best_entry;
-        while arena[e].1 != usize::MAX {
-            subset.push(arena[e].2);
-            e = arena[e].1;
-        }
-        subset.sort_unstable();
-        if swap {
-            // enumerated sums were the q-side; the p-side is the complement
-            let mut on_p = Vec::new();
-            let mut it = subset.iter().peekable();
-            for i in 0..n {
-                if it.peek() == Some(&&i) {
-                    it.next();
-                } else {
-                    on_p.push(i);
-                }
-            }
-            (on_p, best)
-        } else {
-            (subset, best)
-        }
+        ms
     };
 
-    let (on_a, ms_a) = pick(false);
-    let (on_b, ms_b) = pick(true);
-    if ms_a <= ms_b {
-        HetSchedule { makespan: ms_a, on_p: on_a, lambda }
-    } else {
-        HetSchedule { makespan: ms_b, on_p: on_b, lambda }
-    }
-}
-
-/// Theorem 7 gadget: map a PARTITION instance `a` to an independent-
-/// task scheduling instance on two identical single-core nodes.
-/// Returns `(lens, p, deadline)` with `lens_i = a_i^α`, `p = 1`: the
-/// optimal two-node makespan is `≤ deadline = (Σa/2)^α` **iff** `a`
-/// splits into two halves of equal sum.
-pub fn partition_reduction(a: &[u64], alpha: f64) -> (Vec<f64>, f64, f64) {
-    let lens: Vec<f64> = a.iter().map(|&x| (x as f64).powf(alpha)).collect();
-    let s: f64 = a.iter().map(|&x| x as f64).sum();
-    (lens, 1.0, (s / 2.0).powf(alpha))
-}
-
-/// Exact subset sum: the subset of `xs` with the largest sum `≤ target`
-/// (branch and bound over descending items). Returns
-/// `(indices, best_sum)`.
-///
-/// Exactness holds whenever the search finishes within the internal
-/// 20M-node budget — comfortably true for every `n ≤ ~24` instance the
-/// Theorem 7 reduction uses (`2^n` nodes). On adversarially dense
-/// large instances the budget may trip and the best subset found so
-/// far is returned (a valid, possibly sub-optimal subset); callers
-/// needing guaranteed bounds at scale should use
-/// [`subset_sum_fptas`].
-pub fn subset_sum_exact(xs: &[f64], target: f64) -> (Vec<usize>, f64) {
-    let n = xs.len();
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| xs[j].partial_cmp(&xs[i]).unwrap());
-    let sorted: Vec<f64> = order.iter().map(|&i| xs[i]).collect();
-    // suffix sums for the bounding rule
-    let mut suffix = vec![0f64; n + 1];
-    for i in (0..n).rev() {
-        suffix[i] = suffix[i + 1] + sorted[i];
-    }
-
-    struct State {
-        best: f64,
-        best_set: Vec<usize>,
-        target: f64,
-        done: bool,
-        nodes: usize,
-    }
-    // Node budget: exhaustive below it (covers every instance the
-    // reduction tests use, 2^n ≪ budget), graceful best-so-far above it
-    // so dense bench instances stay bounded.
-    const NODE_BUDGET: usize = 20_000_000;
-    fn go(
-        i: usize,
-        sum: f64,
-        chosen: &mut Vec<usize>,
-        sorted: &[f64],
-        suffix: &[f64],
-        st: &mut State,
-    ) {
-        if st.done {
-            return;
-        }
-        st.nodes += 1;
-        if st.nodes > NODE_BUDGET {
-            st.done = true;
-            return;
-        }
-        if sum > st.best {
-            st.best = sum;
-            st.best_set = chosen.clone();
-            if st.best >= st.target - 1e-12 * st.target.abs().max(1.0) {
-                st.done = true; // cannot do better than hitting the target
-                return;
+    // Materialize the per-node PM schedules.
+    let masks = mapping.node_members(n_nodes);
+    let mut per_node = Vec::with_capacity(n_nodes);
+    for (k, mask) in masks.iter().enumerate() {
+        match SpGraph::from_induced(tree, mask) {
+            Some(gk) => {
+                let pm =
+                    PmSchedule::for_graph(&gk, alpha, &Profile::constant(platform.node_cores(k)));
+                per_node.push(pm.schedule);
             }
+            None => per_node.push(Schedule::new(Vec::new())),
         }
-        if i == sorted.len() || sum + suffix[i] <= st.best {
-            return; // no remaining item set can improve
-        }
-        if sum + sorted[i] <= st.target {
-            chosen.push(i);
-            go(i + 1, sum + sorted[i], chosen, sorted, suffix, st);
-            chosen.pop();
-        }
-        go(i + 1, sum, chosen, sorted, suffix, st);
     }
 
-    let mut st = State { best: 0.0, best_set: Vec::new(), target, done: false, nodes: 0 };
-    let mut chosen = Vec::new();
-    go(0, 0.0, &mut chosen, &sorted, &suffix, &mut st);
-    let mut indices: Vec<usize> = st.best_set.iter().map(|&k| order[k]).collect();
-    indices.sort_unstable();
-    (indices, st.best)
-}
-
-/// FPTAS subset sum (CLRS-style trimmed enumeration): returns a subset
-/// with sum `≥ (1−eps) · OPT` and `≤ target`, in time
-/// `O(n² ln(target) / eps)`.
-pub fn subset_sum_fptas(xs: &[f64], target: f64, eps: f64) -> (Vec<usize>, f64) {
-    assert!(eps > 0.0 && eps < 1.0, "eps in (0, 1)");
-    let n = xs.len().max(1);
-    let delta = eps / (2.0 * n as f64);
-    // arena of (sum, parent, item) with backpointers for reconstruction
-    let mut arena: Vec<(f64, usize, usize)> = vec![(0.0, usize::MAX, usize::MAX)];
-    let mut cur: Vec<usize> = vec![0];
-    for (i, &x) in xs.iter().enumerate() {
-        if x > target {
-            continue;
-        }
-        let mut with: Vec<usize> = Vec::with_capacity(cur.len());
-        for &e in &cur {
-            let s = arena[e].0 + x;
-            if s <= target {
-                arena.push((s, e, i));
-                with.push(arena.len() - 1);
-            }
-        }
-        let mut merged: Vec<usize> = Vec::with_capacity(cur.len() + with.len());
-        let (mut a, mut b) = (0usize, 0usize);
-        while a < cur.len() || b < with.len() {
-            let take_a =
-                b >= with.len() || (a < cur.len() && arena[cur[a]].0 <= arena[with[b]].0);
-            let e = if take_a {
-                let e = cur[a];
-                a += 1;
-                e
-            } else {
-                let e = with[b];
-                b += 1;
-                e
-            };
-            match merged.last() {
-                Some(&last)
-                    if arena[e].0 <= arena[last].0 * (1.0 + delta)
-                        && arena[last].0 > 0.0 => {}
-                Some(&last) if arena[e].0 == arena[last].0 => {}
-                _ => merged.push(e),
-            }
-        }
-        cur = merged;
-    }
-    let &best_entry = cur
-        .iter()
-        .max_by(|&&a, &&b| arena[a].0.partial_cmp(&arena[b].0).unwrap())
-        .unwrap();
-    let mut indices = Vec::new();
-    let mut e = best_entry;
-    while arena[e].1 != usize::MAX {
-        indices.push(arena[e].2);
-        e = arena[e].1;
-    }
-    indices.sort_unstable();
-    (indices, arena[best_entry].0)
+    Ok(DistSchedule {
+        platform: platform.clone(),
+        mapping,
+        per_node,
+        makespan: sim.makespan,
+        lower_bound,
+        single_node_makespan,
+        fell_back,
+        sim,
+    })
 }
 
 #[cfg(test)]
@@ -445,126 +210,127 @@ mod tests {
     use super::*;
     use crate::util::approx_eq;
     use crate::util::rng::Rng;
+    use crate::workload::generator::random_tree;
+    use crate::workload::TreeClass;
 
     #[test]
-    fn independent_optimal_two_equal_tasks() {
-        // two equal tasks, equal nodes: one per node
-        let (on_p, opt) = independent_optimal(&[8.0, 8.0], 0.5, 2.0, 2.0);
-        assert_eq!(on_p.len(), 1);
-        // each node: L/p^α = 8 / sqrt(2)
-        assert!(approx_eq(opt, 8.0 / 2f64.sqrt(), 1e-12));
-    }
-
-    #[test]
-    fn homog_respects_guarantee_on_star() {
-        let mut rng = Rng::new(3);
-        for _ in 0..50 {
-            let n = rng.range(3, 12);
-            let alpha = rng.range_f64(0.5, 1.0);
-            let p = rng.range_f64(1.0, 16.0);
-            let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(0.5, 100.0)).collect();
-            let mut parents = vec![0usize];
-            parents.extend(std::iter::repeat(0).take(n));
-            let mut all = vec![0.0];
-            all.extend_from_slice(&lens);
-            let tree = TaskTree::from_parents(&parents, &all).unwrap();
-            let s = homog_approx(&tree, alpha, p);
-            let (_, opt) = independent_optimal(&lens, alpha, p, p);
-            assert!(
-                s.makespan <= (4.0f64 / 3.0).powf(alpha) * opt * (1.0 + 1e-9),
-                "ratio {} exceeds guarantee",
-                s.makespan / opt
-            );
-            assert!(s.makespan >= s.lower_bound * (1.0 - 1e-9));
+    fn distribute_bounds_hold_on_random_trees() {
+        let mut rng = Rng::new(41);
+        for (i, class) in [
+            TreeClass::Uniform,
+            TreeClass::Recent,
+            TreeClass::Deep,
+            TreeClass::Binary,
+        ]
+        .iter()
+        .enumerate()
+        {
+            let tree = random_tree(*class, 400 + 100 * i, &mut rng);
+            for alpha in [0.7, 0.9, 1.0] {
+                for nodes in [2usize, 4] {
+                    let plat = Platform::Homogeneous { nodes, p: 8.0 };
+                    let d = distribute(&tree, &plat, alpha, MappingStrategy::Pm, 1.1).unwrap();
+                    assert!(
+                        d.makespan >= d.lower_bound * (1.0 - 1e-9),
+                        "{class:?} α={alpha} N={nodes}: below pooled bound"
+                    );
+                    assert!(
+                        d.makespan <= d.single_node_makespan * (1.0 + 1e-9),
+                        "{class:?} α={alpha} N={nodes}: mapped {} worse than single node {}",
+                        d.makespan,
+                        d.single_node_makespan
+                    );
+                    assert!(d.approx_ratio() >= 1.0 - 1e-9);
+                }
+            }
         }
     }
 
     #[test]
-    fn homog_chain_is_single_node_exact() {
-        let n = 50;
+    fn distribute_shared_platform_equals_whole_tree_pm() {
+        let mut rng = Rng::new(43);
+        let tree = random_tree(TreeClass::Uniform, 300, &mut rng);
+        let p = 16.0;
+        let d = distribute(
+            &tree,
+            &Platform::Shared { p },
+            0.9,
+            MappingStrategy::Pm,
+            1.1,
+        )
+        .unwrap();
+        let shared = crate::sim::des::simulate(&tree, 0.9, p, Policy::Pm);
+        assert_eq!(d.makespan.to_bits(), shared.makespan.to_bits());
+        assert_eq!(d.per_node.len(), 1);
+        assert_eq!(d.per_node[0].spans.len(), tree.len());
+        assert_eq!(d.sim.cross_edges, 0);
+    }
+
+    #[test]
+    fn per_node_schedules_partition_the_task_set() {
+        let mut rng = Rng::new(47);
+        let tree = random_tree(TreeClass::Uniform, 500, &mut rng);
+        let plat = Platform::Heterogeneous { speeds: vec![8.0, 4.0, 4.0] };
+        let d = distribute(&tree, &plat, 0.9, MappingStrategy::Pm, 1.1).unwrap();
+        let mut seen = vec![false; tree.len()];
+        for (k, sched) in d.per_node.iter().enumerate() {
+            for s in &sched.spans {
+                assert_eq!(d.mapping.node_of[s.task as usize], k, "span on wrong node");
+                assert!(!seen[s.task as usize], "task {} scheduled twice", s.task);
+                seen[s.task as usize] = true;
+            }
+        }
+        assert!(seen.into_iter().all(|b| b), "every task scheduled somewhere");
+    }
+
+    #[test]
+    fn pm_strategy_never_loses_to_baselines_or_single_node() {
+        // the Pm candidate sweep replays the baseline partitions too,
+        // so under the same DES it can never end up strictly worse
+        let mut rng = Rng::new(53);
+        for (n, nodes) in [(600usize, 4usize), (350, 2), (500, 3)] {
+            let tree = random_tree(TreeClass::Uniform, n, &mut rng);
+            let plat = Platform::Homogeneous { nodes, p: 8.0 };
+            let pm = distribute(&tree, &plat, 0.9, MappingStrategy::Pm, 1.1).unwrap();
+            assert!(pm.makespan <= pm.single_node_makespan * (1.0 + 1e-9));
+            for s in [MappingStrategy::Proportional, MappingStrategy::CriticalPath] {
+                let base = distribute(&tree, &plat, 0.9, s, 1.1).unwrap();
+                assert!(base.makespan >= base.lower_bound * (1.0 - 1e-9));
+                assert!(
+                    pm.makespan <= base.makespan * (1.0 + 1e-9),
+                    "pm {} lost to {} {}",
+                    pm.makespan,
+                    s.name(),
+                    base.makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chain_heavy_tree_falls_back_to_single_node() {
+        // a pure chain cannot use a second node; the mapping layer
+        // already returns the single-node mapping, and distribute
+        // reports the exact single-node PM makespan
+        let n = 120;
         let parents: Vec<usize> = (0..n).map(|i: usize| i.saturating_sub(1)).collect();
-        let lens = vec![2.0; n];
+        let mut rng = Rng::new(59);
+        let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(0.5, 5.0)).collect();
         let tree = TaskTree::from_parents(&parents, &lens).unwrap();
-        let s = homog_approx(&tree, 0.9, 4.0);
-        assert!(approx_eq(s.makespan, 100.0 / 4f64.powf(0.9), 1e-12));
-        assert_eq!(s.phases, 1);
-        assert!(s.on_second.is_empty());
+        let plat = Platform::Homogeneous { nodes: 4, p: 8.0 };
+        let d = distribute(&tree, &plat, 0.9, MappingStrategy::Pm, 1.1).unwrap();
+        let expect = tree.total_work() / 8f64.powf(0.9);
+        assert!(approx_eq(d.makespan, expect, 1e-9));
+        assert_eq!(d.sim.cross_edges, 0);
     }
 
     #[test]
-    fn het_exact_below_threshold_matches_optimal() {
-        let mut rng = Rng::new(5);
-        let lens: Vec<f64> = (0..10).map(|_| rng.log_uniform(1.0, 40.0)).collect();
-        let (alpha, p, q) = (0.8, 6.0, 3.0);
-        let (_, opt) = independent_optimal(&lens, alpha, p, q);
-        let s = het_schedule(&lens, alpha, p, q, 1.5);
-        assert!(approx_eq(s.makespan, opt, 1e-12));
-        // the reported partition realizes the reported makespan
-        let inv = 1.0 / alpha;
-        let on: f64 = s.on_p.iter().map(|&i| lens[i].powf(inv)).sum();
-        let total: f64 = lens.iter().map(|l| l.powf(inv)).sum();
-        let realized = (on.powf(alpha) / p.powf(alpha))
-            .max((total - on).powf(alpha) / q.powf(alpha));
-        assert!(approx_eq(realized, s.makespan, 1e-9));
-    }
-
-    #[test]
-    fn het_fptas_respects_lambda_above_threshold() {
-        let mut rng = Rng::new(9);
-        let lens: Vec<f64> = (0..26).map(|_| rng.log_uniform(1.0, 60.0)).collect();
-        let (alpha, p, q) = (0.9, 8.0, 5.0);
-        // brute-force optimum is out of reach at n=26 through the public
-        // API; a tight FPTAS run upper-bounds it, and the λ-guarantee is
-        // relative to the true optimum ≤ tight, so the chain
-        // `s.makespan ≤ λ·opt ≤ λ·tight` must hold.
-        let tight = het_schedule(&lens, alpha, p, q, 1.01);
-        for lambda in [2.0, 1.3, 1.05] {
-            let s = het_schedule(&lens, alpha, p, q, lambda);
-            assert!(
-                s.makespan <= lambda * tight.makespan * (1.0 + 1e-6),
-                "λ={lambda}: {} vs tight {}",
-                s.makespan,
-                tight.makespan
-            );
-        }
-    }
-
-    #[test]
-    fn partition_gadget_decides_small_instances() {
-        // YES: {3,1,2,2} -> {3,1} vs {2,2}
-        let (lens, p, t) = partition_reduction(&[3, 1, 2, 2], 0.7);
-        let (_, opt) = independent_optimal(&lens, 0.7, p, p);
-        assert!(opt <= t + 1e-9);
-        // NO: odd total sum
-        let (lens, p, t) = partition_reduction(&[3, 1, 1], 0.7);
-        let (_, opt) = independent_optimal(&lens, 0.7, p, p);
-        assert!(opt > t + 1e-9);
-    }
-
-    #[test]
-    fn subset_sum_exact_hits_partition() {
-        let xs = [3.0, 1.0, 2.0, 2.0];
-        let (idx, best) = subset_sum_exact(&xs, 4.0);
-        assert!(approx_eq(best, 4.0, 1e-12));
-        let s: f64 = idx.iter().map(|&i| xs[i]).sum();
-        assert!(approx_eq(s, best, 1e-12));
-    }
-
-    #[test]
-    fn subset_sum_fptas_meets_guarantee() {
-        let mut rng = Rng::new(11);
-        let xs: Vec<f64> = (0..40).map(|_| rng.log_uniform(1.0, 500.0)).collect();
-        let target = xs.iter().sum::<f64>() * 0.37;
-        let (_, exact) = subset_sum_exact(&xs, target);
-        for eps in [0.3, 0.1, 0.01] {
-            let (idx, got) = subset_sum_fptas(&xs, target, eps);
-            assert!(got <= target * (1.0 + 1e-12));
-            assert!(
-                got >= (1.0 - eps) * exact - 1e-9,
-                "eps={eps}: {got} vs exact {exact}"
-            );
-            let s: f64 = idx.iter().map(|&i| xs[i]).sum();
-            assert!(approx_eq(s, got, 1e-9));
-        }
+    fn pm_total_len_drives_the_lower_bound() {
+        use crate::sched::pm::PmSolution;
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 4.0, 4.0]).unwrap();
+        let plat = Platform::Homogeneous { nodes: 2, p: 2.0 };
+        let d = distribute(&t, &plat, 0.5, MappingStrategy::Pm, 1.1).unwrap();
+        let lg = PmSolution::solve(&SpGraph::from_tree(&t), 0.5).total_len;
+        assert!(approx_eq(d.lower_bound, lg / 4f64.powf(0.5), 1e-12));
     }
 }

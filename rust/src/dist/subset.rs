@@ -1,0 +1,219 @@
+//! Subset-sum machinery behind Theorem 7 (paper §6).
+//!
+//! The PARTITION gadget ([`partition_reduction`]) maps a PARTITION
+//! instance to a two-node independent-task scheduling instance; the
+//! exact ([`subset_sum_exact`]) and FPTAS ([`subset_sum_fptas`])
+//! subset-sum solvers cross-check the reduction and feed the quality
+//! benches.
+
+/// Theorem 7 gadget: map a PARTITION instance `a` to an independent-
+/// task scheduling instance on two identical single-core nodes.
+/// Returns `(lens, p, deadline)` with `lens_i = a_i^α`, `p = 1`: the
+/// optimal two-node makespan is `≤ deadline = (Σa/2)^α` **iff** `a`
+/// splits into two halves of equal sum.
+pub fn partition_reduction(a: &[u64], alpha: f64) -> (Vec<f64>, f64, f64) {
+    let lens: Vec<f64> = a.iter().map(|&x| (x as f64).powf(alpha)).collect();
+    let s: f64 = a.iter().map(|&x| x as f64).sum();
+    (lens, 1.0, (s / 2.0).powf(alpha))
+}
+
+/// Exact subset sum: the subset of `xs` with the largest sum `≤ target`
+/// (branch and bound over descending items). Returns
+/// `(indices, best_sum)`.
+///
+/// Exactness holds whenever the search finishes within the internal
+/// 20M-node budget — comfortably true for every `n ≤ ~24` instance the
+/// Theorem 7 reduction uses (`2^n` nodes). On adversarially dense
+/// large instances the budget may trip and the best subset found so
+/// far is returned (a valid, possibly sub-optimal subset); callers
+/// needing guaranteed bounds at scale should use
+/// [`subset_sum_fptas`].
+pub fn subset_sum_exact(xs: &[f64], target: f64) -> (Vec<usize>, f64) {
+    let n = xs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    // total_cmp, not partial_cmp().unwrap(): a NaN item must not panic
+    // the sort (it sorts above every number and is then never chosen,
+    // since NaN fails the `sum + x <= target` test)
+    order.sort_by(|&i, &j| xs[j].total_cmp(&xs[i]));
+    let sorted: Vec<f64> = order.iter().map(|&i| xs[i]).collect();
+    // suffix sums for the bounding rule
+    let mut suffix = vec![0f64; n + 1];
+    for i in (0..n).rev() {
+        suffix[i] = suffix[i + 1] + sorted[i];
+    }
+
+    struct State {
+        best: f64,
+        best_set: Vec<usize>,
+        target: f64,
+        done: bool,
+        nodes: usize,
+    }
+    // Node budget: exhaustive below it (covers every instance the
+    // reduction tests use, 2^n ≪ budget), graceful best-so-far above it
+    // so dense bench instances stay bounded.
+    const NODE_BUDGET: usize = 20_000_000;
+    fn go(
+        i: usize,
+        sum: f64,
+        chosen: &mut Vec<usize>,
+        sorted: &[f64],
+        suffix: &[f64],
+        st: &mut State,
+    ) {
+        if st.done {
+            return;
+        }
+        st.nodes += 1;
+        if st.nodes > NODE_BUDGET {
+            st.done = true;
+            return;
+        }
+        if sum > st.best {
+            st.best = sum;
+            st.best_set = chosen.clone();
+            if st.best >= st.target - 1e-12 * st.target.abs().max(1.0) {
+                st.done = true; // cannot do better than hitting the target
+                return;
+            }
+        }
+        if i == sorted.len() || sum + suffix[i] <= st.best {
+            return; // no remaining item set can improve
+        }
+        if sum + sorted[i] <= st.target {
+            chosen.push(i);
+            go(i + 1, sum + sorted[i], chosen, sorted, suffix, st);
+            chosen.pop();
+        }
+        go(i + 1, sum, chosen, sorted, suffix, st);
+    }
+
+    let mut st = State { best: 0.0, best_set: Vec::new(), target, done: false, nodes: 0 };
+    let mut chosen = Vec::new();
+    go(0, 0.0, &mut chosen, &sorted, &suffix, &mut st);
+    let mut indices: Vec<usize> = st.best_set.iter().map(|&k| order[k]).collect();
+    indices.sort_unstable();
+    (indices, st.best)
+}
+
+/// FPTAS subset sum (CLRS-style trimmed enumeration): returns a subset
+/// with sum `≥ (1−eps) · OPT` and `≤ target`, in time
+/// `O(n² ln(target) / eps)`.
+pub fn subset_sum_fptas(xs: &[f64], target: f64, eps: f64) -> (Vec<usize>, f64) {
+    assert!(eps > 0.0 && eps < 1.0, "eps in (0, 1)");
+    let n = xs.len().max(1);
+    let delta = eps / (2.0 * n as f64);
+    // arena of (sum, parent, item) with backpointers for reconstruction
+    let mut arena: Vec<(f64, usize, usize)> = vec![(0.0, usize::MAX, usize::MAX)];
+    let mut cur: Vec<usize> = vec![0];
+    for (i, &x) in xs.iter().enumerate() {
+        if x > target {
+            continue;
+        }
+        let mut with: Vec<usize> = Vec::with_capacity(cur.len());
+        for &e in &cur {
+            let s = arena[e].0 + x;
+            if s <= target {
+                arena.push((s, e, i));
+                with.push(arena.len() - 1);
+            }
+        }
+        let mut merged: Vec<usize> = Vec::with_capacity(cur.len() + with.len());
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < cur.len() || b < with.len() {
+            let take_a =
+                b >= with.len() || (a < cur.len() && arena[cur[a]].0 <= arena[with[b]].0);
+            let e = if take_a {
+                let e = cur[a];
+                a += 1;
+                e
+            } else {
+                let e = with[b];
+                b += 1;
+                e
+            };
+            match merged.last() {
+                Some(&last)
+                    if arena[e].0 <= arena[last].0 * (1.0 + delta)
+                        && arena[last].0 > 0.0 => {}
+                Some(&last) if arena[e].0 == arena[last].0 => {}
+                _ => merged.push(e),
+            }
+        }
+        cur = merged;
+    }
+    // total_cmp: a NaN entry (from a NaN input length that slipped the
+    // `x > target` guard) must not panic the max scan
+    let &best_entry = cur
+        .iter()
+        .max_by(|&&a, &&b| arena[a].0.total_cmp(&arena[b].0))
+        .unwrap();
+    let mut indices = Vec::new();
+    let mut e = best_entry;
+    while arena[e].1 != usize::MAX {
+        indices.push(arena[e].2);
+        e = arena[e].1;
+    }
+    indices.sort_unstable();
+    (indices, arena[best_entry].0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::independent_optimal;
+    use crate::util::approx_eq;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn partition_gadget_decides_small_instances() {
+        // YES: {3,1,2,2} -> {3,1} vs {2,2}
+        let (lens, p, t) = partition_reduction(&[3, 1, 2, 2], 0.7);
+        let (_, opt) = independent_optimal(&lens, 0.7, p, p);
+        assert!(opt <= t + 1e-9);
+        // NO: odd total sum
+        let (lens, p, t) = partition_reduction(&[3, 1, 1], 0.7);
+        let (_, opt) = independent_optimal(&lens, 0.7, p, p);
+        assert!(opt > t + 1e-9);
+    }
+
+    #[test]
+    fn subset_sum_exact_hits_partition() {
+        let xs = [3.0, 1.0, 2.0, 2.0];
+        let (idx, best) = subset_sum_exact(&xs, 4.0);
+        assert!(approx_eq(best, 4.0, 1e-12));
+        let s: f64 = idx.iter().map(|&i| xs[i]).sum();
+        assert!(approx_eq(s, best, 1e-12));
+    }
+
+    #[test]
+    fn subset_sum_fptas_meets_guarantee() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..40).map(|_| rng.log_uniform(1.0, 500.0)).collect();
+        let target = xs.iter().sum::<f64>() * 0.37;
+        let (_, exact) = subset_sum_exact(&xs, target);
+        for eps in [0.3, 0.1, 0.01] {
+            let (idx, got) = subset_sum_fptas(&xs, target, eps);
+            assert!(got <= target * (1.0 + 1e-12));
+            assert!(
+                got >= (1.0 - eps) * exact - 1e-9,
+                "eps={eps}: {got} vs exact {exact}"
+            );
+            let s: f64 = idx.iter().map(|&i| xs[i]).sum();
+            assert!(approx_eq(s, got, 1e-9));
+        }
+    }
+
+    #[test]
+    fn nan_items_do_not_panic_the_solvers() {
+        // regression for the partial_cmp().unwrap() sorts: a NaN item
+        // must be ignored, not panic
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let (idx, best) = subset_sum_exact(&xs, 4.0);
+        assert!(approx_eq(best, 4.0, 1e-12));
+        assert!(!idx.contains(&1), "NaN item must never be chosen");
+        let (idx, best) = subset_sum_fptas(&xs, 4.0, 0.1);
+        assert!(best.is_finite() && best <= 4.0 + 1e-12);
+        assert!(!idx.contains(&1), "NaN item must never be chosen");
+    }
+}

@@ -13,11 +13,12 @@
 //! * [`sched`] — the Prasanna–Musicus optimal schedule and the
 //!   `Proportional` / `Divisible` baselines (paper §5, §7), schedule
 //!   validation, step processor profiles, the `Agreg` transformation;
-//! * [`dist`] — two-node distributed-memory extensions: the
-//!   `(4/3)^α`-approximation for trees on homogeneous nodes, the
-//!   subset-sum based FPTAS for independent tasks on heterogeneous
-//!   nodes, and the Partition reduction behind the NP-hardness proof
-//!   (paper §6);
+//! * [`dist`] — distributed-memory scheduling on N-node platforms
+//!   ([`model::Platform`]): the subtree→node mapping layer (Algorithm
+//!   11 generalized to N nodes, Algorithm 12's λ-scheme on two
+//!   heterogeneous nodes), the `distribute` pipeline producing one PM
+//!   schedule per node replayed through the cross-node DES, and the
+//!   Partition reduction behind the NP-hardness proof (paper §6);
 //! * [`sparse`] — the sparse-linear-algebra substrate: CSC matrices,
 //!   Matrix Market I/O, problem generators, elimination trees,
 //!   supernode amalgamation and assembly-tree extraction;

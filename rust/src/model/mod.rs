@@ -8,10 +8,12 @@
 //! paper's dataset has trees of depth 75 000, far beyond any default
 //! thread stack.
 
+mod platform;
 mod sp;
 mod tree;
 
 pub mod dot;
 
+pub use platform::Platform;
 pub use sp::{SpGraph, SpNode, SpNodeId};
 pub use tree::{TaskTree, TreeNode};

@@ -1,0 +1,155 @@
+//! Execution platforms (paper §6).
+//!
+//! The first half of the paper schedules on a single shared-memory
+//! multicore ([`Platform::Shared`]); §6 moves to *distributed*
+//! platforms of several multicore nodes where a malleable task may not
+//! span nodes — the `p^α` model applies within a node only. The
+//! scheduling layers thread a `Platform` value from the CLI / benches
+//! down to the mapping layer ([`crate::dist::mapping`]) and the
+//! cross-node simulator ([`crate::sim::des::simulate_distributed`]):
+//!
+//! * [`Platform::Shared`] — one node of `p` cores: the whole-tree
+//!   Prasanna–Musicus path of §5, kept as the 1-node special case of
+//!   the sub-forest machinery;
+//! * [`Platform::Homogeneous`] — `nodes` identical nodes of `p` cores
+//!   each (Theorem 7 territory: NP-complete already at 2 nodes;
+//!   Algorithm 11 approximates);
+//! * [`Platform::Heterogeneous`] — one node per entry of `speeds`
+//!   (core counts may differ; Algorithm 12's λ-scheme covers the
+//!   two-node independent-task core).
+
+use anyhow::{bail, Result};
+
+/// A distributed platform of multicore nodes. Tasks may not span
+/// nodes; within node `k` a task on share `s ≤ cores(k)` speeds up as
+/// `s^α`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Platform {
+    /// A single shared-memory node of `p` cores.
+    Shared { p: f64 },
+    /// `nodes` identical nodes of `p` cores each.
+    Homogeneous { nodes: usize, p: f64 },
+    /// One node per entry; `speeds[k]` is the core count of node `k`.
+    Heterogeneous { speeds: Vec<f64> },
+}
+
+impl Platform {
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        match self {
+            Platform::Shared { .. } => 1,
+            Platform::Homogeneous { nodes, .. } => *nodes,
+            Platform::Heterogeneous { speeds } => speeds.len(),
+        }
+    }
+
+    /// Core count of node `k` (panics when `k` is out of range).
+    pub fn node_cores(&self, k: usize) -> f64 {
+        match self {
+            Platform::Shared { p } => {
+                assert!(k == 0, "shared platform has one node, asked for {k}");
+                *p
+            }
+            Platform::Homogeneous { nodes, p } => {
+                assert!(k < *nodes, "node {k} out of range ({nodes} nodes)");
+                *p
+            }
+            Platform::Heterogeneous { speeds } => speeds[k],
+        }
+    }
+
+    /// Total cores pooled over all nodes (`Σ_k cores(k)`).
+    pub fn total_cores(&self) -> f64 {
+        match self {
+            Platform::Shared { p } => *p,
+            Platform::Homogeneous { nodes, p } => *nodes as f64 * p,
+            Platform::Heterogeneous { speeds } => speeds.iter().sum(),
+        }
+    }
+
+    /// Index of a node with the most cores (ties broken toward the
+    /// lowest index) — where single-node fallbacks and root chains run.
+    pub fn fastest_node(&self) -> usize {
+        match self {
+            Platform::Shared { .. } | Platform::Homogeneous { .. } => 0,
+            Platform::Heterogeneous { speeds } => {
+                let mut best = 0usize;
+                for (k, &s) in speeds.iter().enumerate() {
+                    if s > speeds[best] {
+                        best = k;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Structural sanity: at least one node, every core count positive
+    /// and finite.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_nodes() == 0 {
+            bail!("platform has no nodes");
+        }
+        for k in 0..self.num_nodes() {
+            let c = self.node_cores(k);
+            if !c.is_finite() || c <= 0.0 {
+                bail!("node {k} has invalid core count {c}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Pooled lower bound on any distributed makespan: no schedule on
+    /// this platform beats the shared-memory optimum on `Σ_k cores(k)`
+    /// processors, i.e. `L_G / (Σ_k cores(k))^α` (the `L_G/(Np)^α`
+    /// bound of §6 in the homogeneous case).
+    pub fn pooled_lower_bound(&self, equiv_len: f64, alpha: f64) -> f64 {
+        equiv_len / self.total_cores().powf(alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn shapes_and_totals() {
+        let s = Platform::Shared { p: 8.0 };
+        assert_eq!(s.num_nodes(), 1);
+        assert_eq!(s.node_cores(0), 8.0);
+        assert_eq!(s.total_cores(), 8.0);
+
+        let h = Platform::Homogeneous { nodes: 4, p: 8.0 };
+        assert_eq!(h.num_nodes(), 4);
+        assert_eq!(h.node_cores(3), 8.0);
+        assert_eq!(h.total_cores(), 32.0);
+        assert_eq!(h.fastest_node(), 0);
+
+        let g = Platform::Heterogeneous { speeds: vec![4.0, 12.0, 8.0] };
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.node_cores(1), 12.0);
+        assert_eq!(g.total_cores(), 24.0);
+        assert_eq!(g.fastest_node(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_platforms() {
+        assert!(Platform::Heterogeneous { speeds: vec![] }.validate().is_err());
+        assert!(Platform::Heterogeneous { speeds: vec![4.0, 0.0] }.validate().is_err());
+        assert!(Platform::Homogeneous { nodes: 0, p: 4.0 }.validate().is_err());
+        assert!(Platform::Shared { p: f64::NAN }.validate().is_err());
+        assert!(Platform::Homogeneous { nodes: 2, p: 8.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn pooled_bound_matches_closed_form() {
+        let h = Platform::Homogeneous { nodes: 4, p: 8.0 };
+        // L_G / (N p)^α
+        assert!(approx_eq(
+            h.pooled_lower_bound(100.0, 0.9),
+            100.0 / 32f64.powf(0.9),
+            1e-12
+        ));
+    }
+}

@@ -133,6 +133,105 @@ impl SpGraph {
         g
     }
 
+    /// Pseudo-tree conversion of a *sub-forest*: the full subtrees of
+    /// `tree` rooted at each of `roots` (which must be disjoint),
+    /// composed in parallel — disjoint subtrees share no precedence,
+    /// so a node-local root set behaves exactly like independent trees
+    /// (paper §6). With `roots == [tree.root]` the arena produced is
+    /// bit-identical to [`SpGraph::from_tree`]: the whole-tree path is
+    /// the single-root special case of this builder (property-tested
+    /// in `dist_integration.rs`).
+    pub fn from_forest(tree: &TaskTree, roots: &[u32]) -> Self {
+        Self::build_forest(tree, roots, None)
+    }
+
+    /// Pseudo-tree conversion of the sub-forest *induced* by a
+    /// membership mask: member tasks only, with tree edges kept when
+    /// both endpoints are members. Local roots are the member tasks
+    /// whose parent is absent or a non-member, taken in increasing
+    /// task-id order (deterministic, and matching the natural sibling
+    /// order of [`TaskTree::from_parents`] trees). Returns `None` when
+    /// no task is a member. This is the node-local view of a
+    /// distributed mapping: a node owning a root chain sees the chain
+    /// with its offloaded children cut away.
+    pub fn from_induced(tree: &TaskTree, member: &[bool]) -> Option<Self> {
+        assert_eq!(member.len(), tree.len(), "membership mask size mismatch");
+        let roots: Vec<u32> = (0..tree.len() as u32)
+            .filter(|&v| {
+                if !member[v as usize] {
+                    return false;
+                }
+                match tree.nodes[v as usize].parent {
+                    Some(p) => !member[p as usize],
+                    None => true,
+                }
+            })
+            .collect();
+        if roots.is_empty() {
+            return None;
+        }
+        Some(Self::build_forest(tree, &roots, Some(member)))
+    }
+
+    /// Shared core of [`SpGraph::from_forest`] / [`SpGraph::from_induced`]:
+    /// iterative DFS from the given roots (children filtered by the
+    /// optional mask), then the bottom-up arena construction of
+    /// [`SpGraph::from_tree`] over that order.
+    fn build_forest(tree: &TaskTree, roots: &[u32], member: Option<&[bool]>) -> Self {
+        assert!(!roots.is_empty(), "forest needs at least one root");
+        let n = tree.len();
+        let keep = |t: u32| match member {
+            Some(m) => m[t as usize],
+            None => true,
+        };
+        // Root-first order; seeded so roots[0] is processed first, and
+        // children are stacked exactly as in `TaskTree::topo_down` so
+        // the single-root case reproduces `from_tree` bit for bit.
+        let mut order: Vec<u32> = Vec::with_capacity(n);
+        let mut stack: Vec<u32> = roots.iter().rev().copied().collect();
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            stack.extend(
+                tree.nodes[v as usize]
+                    .children
+                    .iter()
+                    .copied()
+                    .filter(|&c| keep(c)),
+            );
+        }
+        let mut sub: Vec<SpNodeId> = vec![0; n];
+        let mut g = SpGraph::new(Vec::with_capacity(2 * order.len() + 1), 0);
+        for &v in order.iter().rev() {
+            let node = &tree.nodes[v as usize];
+            let leaf = g.push(SpNode::Leaf { len: node.len, task: Some(v) });
+            let kids: Vec<SpNodeId> = node
+                .children
+                .iter()
+                .copied()
+                .filter(|&c| keep(c))
+                .map(|c| sub[c as usize])
+                .collect();
+            let id = if kids.is_empty() {
+                leaf
+            } else {
+                let par = if kids.len() == 1 {
+                    kids[0]
+                } else {
+                    g.push(SpNode::Parallel(kids))
+                };
+                g.push(SpNode::Series(vec![par, leaf]))
+            };
+            sub[v as usize] = id;
+        }
+        let rids: Vec<SpNodeId> = roots.iter().map(|&r| sub[r as usize]).collect();
+        g.root = if rids.len() == 1 {
+            rids[0]
+        } else {
+            g.push(SpNode::Parallel(rids))
+        };
+        g
+    }
+
     /// Number of actual tasks (leaves).
     pub fn num_tasks(&self) -> usize {
         self.nodes
@@ -403,6 +502,58 @@ mod tests {
         assert_eq!(now.len(), first.len() + 2);
         assert_eq!(now[0], new_root);
         assert_eq!(g.total_work(), 15.0 + 7.0);
+    }
+
+    #[test]
+    fn from_forest_single_root_is_bit_identical_to_from_tree() {
+        let t = sample_tree();
+        let whole = SpGraph::from_tree(&t);
+        let forest = SpGraph::from_forest(&t, &[t.root]);
+        assert_eq!(forest.nodes, whole.nodes);
+        assert_eq!(forest.root, whole.root);
+    }
+
+    #[test]
+    fn from_forest_composes_disjoint_subtrees_in_parallel() {
+        // roots 1 and 2 of the sample: subtree {1,3,4} plus leaf {2}
+        let t = sample_tree();
+        let g = SpGraph::from_forest(&t, &[1, 2]);
+        g.validate().unwrap();
+        assert_eq!(g.num_tasks(), 4);
+        assert_eq!(g.total_work(), 2.0 + 3.0 + 4.0 + 5.0);
+        let SpNode::Parallel(kids) = &g.nodes[g.root as usize] else {
+            panic!("multi-root forest must be a parallel composition");
+        };
+        assert_eq!(kids.len(), 2);
+    }
+
+    #[test]
+    fn from_induced_cuts_edges_to_non_members() {
+        // keep the root chain {0} and subtree root 1, drop 3 and 4:
+        // node 1 loses its children, 2 is absent -> forest {0 <- 1}
+        let t = sample_tree();
+        let mut member = vec![false; t.len()];
+        member[0] = true;
+        member[1] = true;
+        let g = SpGraph::from_induced(&t, &member).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.num_tasks(), 2);
+        assert_eq!(g.total_work(), 1.0 + 2.0);
+        // structure: Series(leaf1, leaf0) — one local root (task 0)
+        let SpNode::Series(kids) = &g.nodes[g.root as usize] else {
+            panic!("chain must stay a series");
+        };
+        assert_eq!(kids.len(), 2);
+    }
+
+    #[test]
+    fn from_induced_empty_mask_is_none() {
+        let t = sample_tree();
+        assert!(SpGraph::from_induced(&t, &vec![false; t.len()]).is_none());
+        // full mask reproduces the whole tree
+        let g = SpGraph::from_induced(&t, &vec![true; t.len()]).unwrap();
+        assert_eq!(g.nodes, SpGraph::from_tree(&t).nodes);
+        assert_eq!(g.root, SpGraph::from_tree(&t).root);
     }
 
     #[test]

@@ -161,6 +161,19 @@ impl TaskTree {
     pub fn num_leaves(&self) -> usize {
         self.nodes.iter().filter(|n| n.children.is_empty()).count()
     }
+
+    /// All task ids in the subtree rooted at `root` (root-first,
+    /// iterative) — the unit the distributed mapping layer assigns to
+    /// a node (tasks may not span nodes, so whole subtrees move).
+    pub fn subtree_tasks(&self, root: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut stack = vec![root];
+        while let Some(v) = stack.pop() {
+            out.push(v);
+            stack.extend(self.nodes[v as usize].children.iter().copied());
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +260,18 @@ mod tests {
         let t = TaskTree::from_parents(&parents, &lens).unwrap();
         assert_eq!(t.height() as usize, n - 1);
         assert_eq!(t.critical_path(), n as f64);
+    }
+
+    #[test]
+    fn subtree_tasks_covers_exactly_the_subtree() {
+        let t = sample();
+        let mut s = t.subtree_tasks(1);
+        s.sort_unstable();
+        assert_eq!(s, vec![1, 3, 4]);
+        assert_eq!(t.subtree_tasks(2), vec![2]);
+        let mut whole = t.subtree_tasks(t.root);
+        whole.sort_unstable();
+        assert_eq!(whole, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! itself still costs the input copy and two `normalized()` passes —
 //! graph materialization, not solver state.
 
-use crate::model::SpGraph;
+use crate::model::{SpGraph, TaskTree};
 
 use super::agreg::{AgregScratch, AgregStats};
 use super::pm::{self, PmSolution};
@@ -27,6 +27,11 @@ pub struct SchedWorkspace {
     spans: Vec<TaskSpan>,
     agreg: AgregScratch,
     ratios: Vec<f64>,
+    /// Pseudo-tree of the most recent sub-forest solve (the node-local
+    /// root-set path of the distributed layer). Rebuilding it is graph
+    /// materialization, not solver state — the five SoA solver arrays
+    /// above stay reused, same contract as [`SchedWorkspace::agreg`].
+    forest: SpGraph,
 }
 
 impl Default for SchedWorkspace {
@@ -42,6 +47,7 @@ impl SchedWorkspace {
             spans: Vec::new(),
             agreg: AgregScratch::default(),
             ratios: Vec::new(),
+            forest: SpGraph::leaf(0.0),
         }
     }
 
@@ -90,6 +96,96 @@ impl SchedWorkspace {
     /// arrays across calls.
     pub fn agreg(&mut self, g: &SpGraph, alpha: f64, p: f64) -> (SpGraph, AgregStats) {
         self.agreg.run(g, alpha, p)
+    }
+
+    // --- sub-forest path (distributed platforms, paper §6) ---
+    //
+    // A node of a distributed platform owns a *root set* of disjoint
+    // subtrees rather than the whole tree; these entry points build the
+    // forest pseudo-tree (`SpGraph::from_forest`) and run the same
+    // allocation-free solver core over it. The classic whole-tree path
+    // is exactly `roots == [tree.root]` (bit-identical, see the
+    // conservativity property test in `dist_integration.rs`).
+
+    /// Solve the PM allocation over the sub-forest rooted at `roots`
+    /// (disjoint subtrees of `tree`, composed in parallel). The graph
+    /// is kept in the workspace ([`SchedWorkspace::forest_graph`]); the
+    /// solver arrays are reused as in [`SchedWorkspace::solve`].
+    pub fn solve_forest(&mut self, tree: &TaskTree, roots: &[u32], alpha: f64) -> &PmSolution {
+        self.forest = SpGraph::from_forest(tree, roots);
+        pm::solve_into(&self.forest, alpha, &mut self.sol);
+        &self.sol
+    }
+
+    /// Solve the PM allocation over the sub-forest *induced* by a
+    /// membership mask (edges kept when both endpoints are members) —
+    /// the node-local view of a distributed mapping. Returns `None`
+    /// when no task is a member.
+    pub fn solve_induced(
+        &mut self,
+        tree: &TaskTree,
+        member: &[bool],
+        alpha: f64,
+    ) -> Option<&PmSolution> {
+        let g = SpGraph::from_induced(tree, member)?;
+        self.forest = g;
+        pm::solve_into(&self.forest, alpha, &mut self.sol);
+        Some(&self.sol)
+    }
+
+    /// The forest pseudo-tree built by the most recent
+    /// [`SchedWorkspace::solve_forest`] / [`SchedWorkspace::solve_induced`].
+    pub fn forest_graph(&self) -> &SpGraph {
+        &self.forest
+    }
+
+    /// Makespan of the sub-forest under a constant profile `p` — the
+    /// per-node completion time the mapping layer balances.
+    pub fn forest_makespan_const(
+        &mut self,
+        tree: &TaskTree,
+        roots: &[u32],
+        alpha: f64,
+        p: f64,
+    ) -> f64 {
+        self.solve_forest(tree, roots, alpha).makespan_const(p)
+    }
+
+    /// Solve the sub-forest and scatter the leaf ratios back to global
+    /// task ids (`n_tasks` entries; tasks outside the forest stay 0) —
+    /// the per-node allocation vector the distributed DES replays.
+    pub fn forest_task_ratios(
+        &mut self,
+        tree: &TaskTree,
+        roots: &[u32],
+        alpha: f64,
+        n_tasks: usize,
+    ) -> &[f64] {
+        self.solve_forest(tree, roots, alpha);
+        self.scatter_forest_ratios(n_tasks)
+    }
+
+    /// [`SchedWorkspace::forest_task_ratios`] over the *induced*
+    /// sub-forest of a membership mask (the distributed DES's per-node
+    /// allocation setup). `None` when no task is a member.
+    pub fn induced_task_ratios(
+        &mut self,
+        tree: &TaskTree,
+        member: &[bool],
+        alpha: f64,
+        n_tasks: usize,
+    ) -> Option<&[f64]> {
+        self.solve_induced(tree, member, alpha)?;
+        Some(self.scatter_forest_ratios(n_tasks))
+    }
+
+    /// Scatter the current forest solution's leaf ratios to global task
+    /// ids through the reused per-task buffer.
+    fn scatter_forest_ratios(&mut self, n_tasks: usize) -> &[f64] {
+        self.ratios.clear();
+        self.ratios.resize(n_tasks, 0.0);
+        pm::scatter_leaf_ratios(&self.forest, &self.sol.ratio, &mut self.ratios);
+        &self.ratios
     }
 }
 
@@ -172,6 +268,77 @@ mod tests {
             }
             assert_eq!(got, want);
         }
+    }
+
+    #[test]
+    fn solve_forest_single_root_matches_whole_tree_path() {
+        let mut ws = SchedWorkspace::new();
+        for seed in 0..4 {
+            let t = tree(seed);
+            let alpha = 0.6 + 0.1 * (seed % 4) as f64;
+            let got = ws.solve_forest(&t, &[t.root], alpha);
+            let want = PmSolution::solve(&SpGraph::from_tree(&t), alpha);
+            assert_eq!(got.total_len.to_bits(), want.total_len.to_bits());
+            assert_eq!(got.ratio, want.ratio);
+            assert_eq!(got.theta_end, want.theta_end);
+            assert_eq!(ws.forest_graph().nodes, SpGraph::from_tree(&t).nodes);
+        }
+    }
+
+    #[test]
+    fn solve_forest_parallel_composes_subtree_lengths() {
+        // forest of the root's children == parallel composition of the
+        // per-subtree equivalent lengths
+        let t = tree(1);
+        let roots: Vec<u32> = t.nodes[t.root as usize].children.clone();
+        assert!(roots.len() >= 2, "test tree must branch at the root");
+        let alpha = 0.8;
+        let mut ws = SchedWorkspace::new();
+        let total = ws.solve_forest(&t, &roots, alpha).total_len;
+        let inv = 1.0 / alpha;
+        let want: f64 = roots
+            .iter()
+            .map(|&r| {
+                PmSolution::solve(&SpGraph::from_forest(&t, &[r]), alpha)
+                    .total_len
+                    .powf(inv)
+            })
+            .sum::<f64>()
+            .powf(alpha);
+        assert!(approx_eq(total, want, 1e-12));
+    }
+
+    #[test]
+    fn forest_task_ratios_scatter_only_forest_tasks() {
+        let t = tree(2);
+        let roots: Vec<u32> = t.nodes[t.root as usize].children.clone();
+        let mut ws = SchedWorkspace::new();
+        let ratios = ws.forest_task_ratios(&t, &roots, 0.9, t.len()).to_vec();
+        // the root is not part of the forest: its ratio must stay 0,
+        // and the forest roots' ratios must sum to 1
+        assert_eq!(ratios[t.root as usize], 0.0);
+        let sum: f64 = roots.iter().map(|&r| ratios[r as usize]).sum();
+        // forest roots are the *last* tasks of their subtrees, each at
+        // its subtree's branch ratio; ratios are positive and <= 1
+        assert!(sum > 0.0 && sum <= 1.0 + 1e-12);
+        for &r in &roots {
+            assert!(ratios[r as usize] > 0.0);
+        }
+    }
+
+    #[test]
+    fn solve_induced_matches_forest_on_whole_subtrees() {
+        let t = tree(3);
+        let roots: Vec<u32> = t.nodes[t.root as usize].children.clone();
+        let mut member = vec![true; t.len()];
+        member[t.root as usize] = false;
+        let mut ws = SchedWorkspace::new();
+        let via_induced = ws.solve_induced(&t, &member, 0.85).unwrap().total_len;
+        let mut ws2 = SchedWorkspace::new();
+        let via_forest = ws2.solve_forest(&t, &roots, 0.85).total_len;
+        assert_eq!(via_induced.to_bits(), via_forest.to_bits());
+        // nobody home -> None
+        assert!(ws.solve_induced(&t, &vec![false; t.len()], 0.85).is_none());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! closed-form scheduler math, `DES(PM policy) == PmSolution.makespan`
 //! is a powerful cross-check (and similarly for the baselines).
 
-use crate::model::TaskTree;
+use crate::model::{Platform, TaskTree};
 use crate::sched::profile::Profile;
 use crate::sched::Schedule;
 
@@ -207,6 +207,178 @@ pub fn simulate_with_ratios(tree: &TaskTree, alpha: f64, p: f64, ratios: &[f64])
         }
     }
     DesResult { makespan, completion, events }
+}
+
+/// Result of a distributed simulation run
+/// ([`simulate_distributed`]).
+#[derive(Debug, Clone)]
+pub struct DistDesResult {
+    /// Global makespan (last completion over all nodes).
+    pub makespan: f64,
+    /// Completion time per task.
+    pub completion: Vec<f64>,
+    /// Number of DES events processed.
+    pub events: usize,
+    /// Completion time of the last task on each node (0 for nodes that
+    /// received no task).
+    pub node_finish: Vec<f64>,
+    /// Tree edges whose endpoints are mapped to different nodes.
+    pub cross_edges: usize,
+    /// Total extra waiting caused by remote children: for every task,
+    /// `max(0, latest remote-child completion − latest same-node-child
+    /// completion)`, summed. Zero when the mapping cuts no edge on a
+    /// critical wait.
+    pub cross_stall: f64,
+}
+
+/// Distributed DES (paper §6): replay per-node static-share schedules
+/// with cross-node dependency stalls.
+///
+/// Each node `k` owns the tasks with `node_of[t] == k`; its allocation
+/// is computed over the *induced* node-local sub-forest (tree edges
+/// with both endpoints on `k`): PM constant ratios for [`Policy::Pm`],
+/// Pothen–Sun proportional shares for [`Policy::Proportional`] (the
+/// other policies are not static-share and are rejected). A task runs
+/// at `speedup(ratio · p_k)` from the moment every child — local *or
+/// remote* — has completed: a parent whose children were mapped
+/// elsewhere stalls until the slowest remote subtree finishes, which
+/// is exactly the phase structure of Algorithm 11 when the mapping
+/// came from [`crate::dist::mapping`].
+///
+/// With one node this degenerates bit-for-bit to the shared-memory
+/// static engine ([`simulate`] under the same policy) — the whole-tree
+/// path is the 1-node special case.
+pub fn simulate_distributed(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+) -> DistDesResult {
+    let mut ws = crate::sched::SchedWorkspace::new();
+    simulate_distributed_with_workspace(tree, alpha, platform, node_of, policy, &mut ws)
+}
+
+/// [`simulate_distributed`] with a caller-owned workspace so mapping
+/// sweeps (the `dist_sim` bench, the `distribute` pipeline) reuse the
+/// solver buffers across nodes and runs.
+pub fn simulate_distributed_with_workspace(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    ws: &mut crate::sched::SchedWorkspace,
+) -> DistDesResult {
+    use std::collections::BinaryHeap;
+    let n = tree.len();
+    assert_eq!(node_of.len(), n, "node_of must cover every task");
+    let n_nodes = platform.num_nodes();
+    for &k in node_of {
+        assert!(k < n_nodes, "task mapped to node {k}, platform has {n_nodes} nodes");
+    }
+    assert!(
+        matches!(policy, Policy::Pm | Policy::Proportional),
+        "distributed DES replays static-share policies (Pm, Proportional), got {policy:?}"
+    );
+
+    // Per-task absolute share (processors on the owning node).
+    let mut share = vec![0f64; n];
+    let mut member = vec![false; n];
+    for k in 0..n_nodes {
+        for (t, m) in member.iter_mut().enumerate() {
+            *m = node_of[t] == k;
+        }
+        let p_k = platform.node_cores(k);
+        match policy {
+            Policy::Pm => {
+                if let Some(r) = ws.induced_task_ratios(tree, &member, alpha, n) {
+                    for t in 0..n {
+                        if member[t] {
+                            share[t] = r[t] * p_k;
+                        }
+                    }
+                }
+            }
+            Policy::Proportional => {
+                if let Some(g) = crate::model::SpGraph::from_induced(tree, &member) {
+                    let shares = crate::sched::proportional::proportional_shares(&g, p_k);
+                    for &v in g.topo() {
+                        if let crate::model::SpNode::Leaf { task: Some(t), .. } =
+                            g.nodes[v as usize]
+                        {
+                            // ratio first, share second — the exact float
+                            // path of the shared engine, so the 1-node
+                            // case stays bit-identical to `simulate`
+                            let ratio = shares[v as usize] / p_k;
+                            share[t as usize] = ratio * p_k;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    // Event loop: identical structure to the shared static engine, but
+    // with per-task shares and per-parent local/remote wait tracking.
+    let mut unfinished: Vec<usize> = tree.nodes.iter().map(|t| t.children.len()).collect();
+    let mut completion = vec![0f64; n];
+    let mut ready_all = vec![0f64; n]; // latest child completion
+    let mut ready_local = vec![0f64; n]; // latest same-node child completion
+    let mut node_finish = vec![0f64; n_nodes];
+    let mut cross_edges = 0usize;
+    for (t, node) in tree.nodes.iter().enumerate() {
+        if let Some(p) = node.parent {
+            if node_of[t] != node_of[p as usize] {
+                cross_edges += 1;
+            }
+        }
+    }
+    let dur = |v: u32| -> f64 {
+        let len = tree.nodes[v as usize].len;
+        if len <= 0.0 {
+            0.0
+        } else {
+            len / speedup(share[v as usize], alpha)
+        }
+    };
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(n);
+    for v in 0..n as u32 {
+        if unfinished[v as usize] == 0 {
+            heap.push(Ev(dur(v), v));
+        }
+    }
+    let mut events = 0usize;
+    let mut makespan = 0.0f64;
+    let mut cross_stall = 0.0f64;
+    while let Some(Ev(t, v)) = heap.pop() {
+        events += 1;
+        let vi = v as usize;
+        completion[vi] = t;
+        makespan = makespan.max(t);
+        node_finish[node_of[vi]] = node_finish[node_of[vi]].max(t);
+        if let Some(parent) = tree.nodes[vi].parent {
+            let pi = parent as usize;
+            unfinished[pi] -= 1;
+            ready_all[pi] = ready_all[pi].max(t);
+            if node_of[pi] == node_of[vi] {
+                ready_local[pi] = ready_local[pi].max(t);
+            }
+            if unfinished[pi] == 0 {
+                cross_stall += (ready_all[pi] - ready_local[pi]).max(0.0);
+                heap.push(Ev(ready_all[pi] + dur(parent), parent));
+            }
+        }
+    }
+    DistDesResult {
+        makespan,
+        completion,
+        events,
+        node_finish,
+        cross_edges,
+        cross_stall,
+    }
 }
 
 fn static_ratios(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> Vec<f64> {
@@ -571,6 +743,113 @@ mod tests {
                     let slow = super::simulate_reference(tree, *alpha, *p, pol).makespan;
                     if (fast - slow).abs() > 1e-6 * slow.max(1e-12) {
                         return Err(format!("{pol:?}: fast {fast} vs reference {slow}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn distributed_on_one_node_matches_shared_engine_bitwise() {
+        // the whole-tree path is the 1-node special case
+        let trees = [
+            tree5(),
+            TaskTree::from_parents(&[0, 0, 1, 1, 2, 2, 3], &[9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0])
+                .unwrap(),
+        ];
+        for t in &trees {
+            for &a in &[0.6, 0.9, 1.0] {
+                let p = 10.0;
+                let plat = crate::model::Platform::Shared { p };
+                let node_of = vec![0usize; t.len()];
+                for pol in [Policy::Pm, Policy::Proportional] {
+                    let dd = simulate_distributed(t, a, &plat, &node_of, pol);
+                    let sd = simulate(t, a, p, pol);
+                    assert_eq!(dd.makespan.to_bits(), sd.makespan.to_bits());
+                    assert_eq!(dd.events, sd.events);
+                    assert_eq!(dd.cross_edges, 0);
+                    assert_eq!(dd.cross_stall, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_two_node_star_matches_closed_form() {
+        // root with two equal leaf children, one per node: each node
+        // runs its leaf at full speed; the root waits for the remote
+        // child and then runs on node 0
+        let t = TaskTree::from_parents(&[0, 0, 0], &[2.0, 8.0, 8.0]).unwrap();
+        let (a, p) = (0.5, 4.0);
+        let plat = crate::model::Platform::Homogeneous { nodes: 2, p };
+        let node_of = vec![0usize, 0, 1];
+        let r = simulate_distributed(&t, a, &plat, &node_of, Policy::Pm);
+        // leaves: 8 / 4^0.5 = 4 each (full node); root: +2/2 = 1
+        assert!(approx_eq(r.completion[1], 4.0, 1e-9));
+        assert!(approx_eq(r.completion[2], 4.0, 1e-9));
+        assert!(approx_eq(r.makespan, 5.0, 1e-9));
+        assert_eq!(r.cross_edges, 1);
+        // both children finish at the same instant: no extra stall
+        assert!(r.cross_stall.abs() < 1e-12);
+        assert!(approx_eq(r.node_finish[0], 5.0, 1e-9));
+        assert!(approx_eq(r.node_finish[1], 4.0, 1e-9));
+    }
+
+    #[test]
+    fn distributed_stall_accounts_remote_wait() {
+        // unbalanced split: node 1 gets the long leaf, the root (node
+        // 0, with a short local leaf) must stall for the remote one
+        let t = TaskTree::from_parents(&[0, 0, 0], &[2.0, 1.0, 16.0]).unwrap();
+        let (a, p) = (1.0, 2.0);
+        let plat = crate::model::Platform::Homogeneous { nodes: 2, p };
+        let node_of = vec![0usize, 0, 1];
+        let r = simulate_distributed(&t, a, &plat, &node_of, Policy::Pm);
+        // node 0: leaf of len 1 alone -> 0.5; node 1: 16/2 = 8
+        assert!(approx_eq(r.completion[1], 0.5, 1e-9));
+        assert!(approx_eq(r.completion[2], 8.0, 1e-9));
+        // root waits for the remote child: stall = 8 - 0.5
+        assert!(approx_eq(r.cross_stall, 7.5, 1e-9));
+        assert!(approx_eq(r.makespan, 8.0 + 2.0 / 2.0, 1e-9));
+    }
+
+    #[test]
+    fn distributed_beats_pooled_lower_bound_randomized() {
+        check(
+            Config { cases: 30, seed: 31 },
+            "distributed DES >= pooled lower bound",
+            |rng: &mut Rng| {
+                let n = rng.range(3, 40);
+                let parents: Vec<usize> =
+                    (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+                let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 100.0)).collect();
+                let alpha = rng.range_f64(0.5, 1.0);
+                let nodes = rng.range(2, 5);
+                let node_of: Vec<usize> = {
+                    // random subtree-respecting-ish mapping is not
+                    // needed: ANY mapping obeys the pooled bound
+                    (0..n).map(|_| rng.below(nodes)).collect()
+                };
+                (
+                    TaskTree::from_parents(&parents, &lens).unwrap(),
+                    alpha,
+                    nodes,
+                    node_of,
+                )
+            },
+            |(tree, alpha, nodes, node_of)| {
+                let p = 4.0;
+                let plat = crate::model::Platform::Homogeneous { nodes: *nodes, p };
+                let g = SpGraph::from_tree(tree);
+                let lg = PmSolution::solve(&g, *alpha).total_len;
+                let bound = plat.pooled_lower_bound(lg, *alpha);
+                for pol in [Policy::Pm, Policy::Proportional] {
+                    let r = simulate_distributed(tree, *alpha, &plat, node_of, pol);
+                    if r.makespan < bound * (1.0 - 1e-9) {
+                        return Err(format!(
+                            "{pol:?}: makespan {} below pooled bound {bound}",
+                            r.makespan
+                        ));
                     }
                 }
                 Ok(())

@@ -10,9 +10,14 @@
 //!   shared memory-bandwidth roofline, producing the `T(p)` curves and
 //!   α fits of Figures 2–6 / Tables 1–2 (DESIGN.md §2 explains why this
 //!   simulator substitutes for the paper's 40-core machine).
+//!
+//! The DES also has a distributed mode
+//! ([`des::simulate_distributed`], paper §6): per-node static-share
+//! schedules over a task→node mapping, with cross-node dependency
+//! stalls (DESIGN.md §11).
 
 pub mod des;
 pub mod kerneldag;
 
-pub use des::{simulate, DesResult, Policy};
+pub use des::{simulate, simulate_distributed, DesResult, DistDesResult, Policy};
 pub use kerneldag::{simulate_dag, timing_curve, KernelDag, MachineModel};

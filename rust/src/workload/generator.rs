@@ -94,6 +94,40 @@ pub fn random_tree(class: TreeClass, n: usize, rng: &mut Rng) -> TaskTree {
     TaskTree::from_parents(&parents, &lens).unwrap()
 }
 
+/// Root-dominated, shape-diverse family for the distributed mapping
+/// study (§6, the `dist_sim` bench): a heavy root over `pairs`
+/// chain-shaped branches (`Leq = work`) interleaved with `pairs`
+/// bushy branches (`Leq ≪ work` for α < 1) of exactly equal work.
+/// Balancing raw work (proportional mapping) cannot tell the two
+/// shapes apart and pairs chains on a node; balancing power-lengths
+/// (Algorithm 11 generalized) separates them — the family where the
+/// speedup-aware mapping provably wins. `c` scales every task length.
+pub fn root_shape_mix(pairs: usize, c: f64, chain_len: usize, leaves: usize) -> TaskTree {
+    assert!(pairs >= 1 && chain_len >= 1 && leaves >= 1);
+    // bushy leaves sized so both branch kinds carry chain_len · c work
+    let leaf_len = chain_len as f64 * c / leaves as f64;
+    let mut parents = vec![0usize];
+    let mut lens = vec![chain_len as f64 * c]; // the dominating root
+    for _ in 0..pairs {
+        // chain branch: chain_len tasks of length c
+        parents.push(0);
+        lens.push(c);
+        for _ in 1..chain_len {
+            parents.push(parents.len() - 1);
+            lens.push(c);
+        }
+        // bushy branch: `leaves` parallel leaves under a 0-length root
+        let broot = parents.len();
+        parents.push(0);
+        lens.push(0.0);
+        for _ in 0..leaves {
+            parents.push(broot);
+            lens.push(leaf_len);
+        }
+    }
+    TaskTree::from_parents(&parents, &lens).unwrap()
+}
+
 /// Analysis trees of in-repo sparse problems (the "real" subset).
 pub fn analysis_trees(rng: &mut Rng) -> Vec<(String, TaskTree)> {
     let mut out = Vec::new();
@@ -192,6 +226,20 @@ mod tests {
             .collect();
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
         assert!(mean(&shallow) > 2.0 * mean(&deep));
+    }
+
+    #[test]
+    fn root_shape_mix_has_equal_work_branches() {
+        let t = root_shape_mix(3, 2.0, 4, 5);
+        t.validate().unwrap();
+        let w = t.subtree_work();
+        let branches = &t.nodes[t.root as usize].children;
+        assert_eq!(branches.len(), 6);
+        for &b in branches {
+            assert!((w[b as usize] - 8.0).abs() < 1e-12, "branch work {}", w[b as usize]);
+        }
+        // root carries one branch's worth of work itself
+        assert_eq!(t.nodes[t.root as usize].len, 8.0);
     }
 
     #[test]

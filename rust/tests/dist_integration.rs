@@ -1,10 +1,16 @@
-//! Integration: the §6 distributed algorithms on real assembly trees
-//! and the Theorem 7 reduction round-trip.
+//! Integration: the §6 distributed algorithms on real assembly trees,
+//! the Theorem 7 reduction round-trip, the λ-guarantee on the trimmed
+//! enumeration path, the sub-forest scheduler conservativity property,
+//! and the N-node `distribute` pipeline end to end.
 
 use malltree::dist::{
-    het_schedule, homog_approx, independent_optimal, partition_reduction, subset_sum_exact,
+    distribute, het_schedule, homog_approx, independent_optimal, partition_reduction,
+    subset_sum_exact, MappingStrategy,
 };
+use malltree::model::{Platform, SpGraph};
+use malltree::sched::{pm::PmSolution, SchedWorkspace};
 use malltree::sparse::{gen, order, symbolic};
+use malltree::util::prop::{check, Config};
 use malltree::util::rng::Rng;
 
 #[test]
@@ -95,6 +101,174 @@ fn het_lambda_sweep_is_monotone_in_quality_bound() {
             assert!(!seen[i], "duplicate task in partition");
             seen[i] = true;
         }
+    }
+}
+
+#[test]
+fn het_lambda_guarantee_holds_on_trimmed_path() {
+    // n > 20 forces the λ-trimmed enumeration (the exact branch is
+    // unreachable); n ≤ 24 keeps the exhaustive reference affordable.
+    // Property: makespan ≤ λ · independent_optimal on random instances.
+    check(
+        Config { cases: 5, seed: 0x7A11 },
+        "λ-guarantee on the trimmed path",
+        |rng: &mut Rng| {
+            let n = rng.range(21, 22); // inclusive: strictly above the exact cutoff
+            let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 80.0)).collect();
+            let alpha = rng.range_f64(0.55, 1.0);
+            let p = rng.range_f64(2.0, 12.0);
+            let q = rng.range_f64(1.0, 8.0);
+            (lens, alpha, p, q)
+        },
+        |(lens, alpha, p, q)| {
+            let (_, opt) = independent_optimal(lens, *alpha, *p, *q);
+            for lambda in [2.0, 1.3, 1.05] {
+                let s = het_schedule(lens, *alpha, *p, *q, lambda);
+                if s.makespan > lambda * opt * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "λ={lambda}: {} > {} (opt {opt})",
+                        s.makespan,
+                        lambda * opt
+                    ));
+                }
+                // and the reported partition must realize the makespan
+                let inv = 1.0 / alpha;
+                let on: f64 = s.on_p.iter().map(|&i| lens[i].powf(inv)).sum();
+                let total: f64 = lens.iter().map(|l| l.powf(inv)).sum();
+                let realized = (on.powf(*alpha) / p.powf(*alpha))
+                    .max((total - on).powf(*alpha) / q.powf(*alpha));
+                if (realized - s.makespan).abs() > 1e-6 * s.makespan {
+                    return Err(format!(
+                        "λ={lambda}: partition realizes {realized}, reported {}",
+                        s.makespan
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sub_forest_refactor_is_conservative() {
+    // the whole tree solved as a single-root forest through the new
+    // API must be bit-identical to the classic whole-tree path —
+    // graph arena, solution arrays, and DES replay alike
+    check(
+        Config { cases: 25, seed: 0xF0BE },
+        "single-root forest == whole tree (bitwise)",
+        |rng: &mut Rng| {
+            let n = rng.range(2, 200);
+            let parents: Vec<usize> =
+                (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+            let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(0.1, 100.0)).collect();
+            let alpha = rng.range_f64(0.4, 1.0);
+            (malltree::model::TaskTree::from_parents(&parents, &lens).unwrap(), alpha)
+        },
+        |(tree, alpha)| {
+            let whole = SpGraph::from_tree(tree);
+            let forest = SpGraph::from_forest(tree, &[tree.root]);
+            if forest.nodes != whole.nodes || forest.root != whole.root {
+                return Err("forest arena differs from the whole-tree arena".into());
+            }
+            let mut ws = SchedWorkspace::new();
+            let got = ws.solve_forest(tree, &[tree.root], *alpha);
+            let want = PmSolution::solve(&whole, *alpha);
+            if got.total_len.to_bits() != want.total_len.to_bits() {
+                return Err(format!(
+                    "total_len {} != {}",
+                    got.total_len, want.total_len
+                ));
+            }
+            if got.ratio != want.ratio
+                || got.theta_start != want.theta_start
+                || got.theta_end != want.theta_end
+            {
+                return Err("solution arrays differ".into());
+            }
+            // the 1-node distributed DES path equals the shared engine
+            let plat = Platform::Shared { p: 7.0 };
+            let node_of = vec![0usize; tree.len()];
+            let dd = malltree::sim::des::simulate_distributed(
+                tree,
+                *alpha,
+                &plat,
+                &node_of,
+                malltree::sim::Policy::Pm,
+            );
+            let sd = malltree::sim::des::simulate(tree, *alpha, 7.0, malltree::sim::Policy::Pm);
+            if dd.makespan.to_bits() != sd.makespan.to_bits() {
+                return Err(format!(
+                    "distributed 1-node {} != shared {}",
+                    dd.makespan, sd.makespan
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn distribute_pipeline_end_to_end_on_assembly_tree() {
+    // acceptance chain on a real analysis tree: pooled lower bound ≤
+    // mapped DES makespan ≤ single-node PM makespan, per-node
+    // schedules partition the task set, makespans are consistent
+    let a = gen::grid_laplacian_2d(24);
+    let perm = order::nested_dissection_2d(24);
+    let at = symbolic::analyze(&a, &perm, 4).unwrap();
+    for nodes in [2usize, 4] {
+        let plat = Platform::Homogeneous { nodes, p: 8.0 };
+        for alpha in [0.7, 0.9] {
+            let d = distribute(&at.tree, &plat, alpha, MappingStrategy::Pm, 1.1).unwrap();
+            assert!(d.makespan >= d.lower_bound * (1.0 - 1e-9));
+            assert!(d.makespan <= d.single_node_makespan * (1.0 + 1e-9));
+            let mut seen = vec![false; at.tree.len()];
+            for (k, sched) in d.per_node.iter().enumerate() {
+                for s in &sched.spans {
+                    assert_eq!(d.mapping.node_of[s.task as usize], k);
+                    assert!(!seen[s.task as usize]);
+                    seen[s.task as usize] = true;
+                }
+            }
+            assert!(seen.into_iter().all(|b| b));
+            // the per-node local makespans never exceed the stall-aware
+            // DES finish of that node
+            for (k, sched) in d.per_node.iter().enumerate() {
+                assert!(
+                    sched.makespan <= d.sim.node_finish[k] * (1.0 + 1e-9) + 1e-12,
+                    "node {k}: local plan {} vs DES finish {}",
+                    sched.makespan,
+                    d.sim.node_finish[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn distribute_beats_proportional_mapping_on_root_shape_mix() {
+    // the speedup-aware mapping's whole point: on a root-dominated
+    // tree whose equal-work branches differ in *shape*, balancing
+    // power-lengths beats balancing raw work for α < 1 (work-LPT
+    // pairs the chain branches on a node; power-LPT separates them)
+    for nodes in [2usize, 4] {
+        let plat = Platform::Homogeneous { nodes, p: 8.0 };
+        for alpha in [0.7, 0.9] {
+            let tree = malltree::workload::generator::root_shape_mix(nodes, 3.7, 3, 3);
+            let pm = distribute(&tree, &plat, alpha, MappingStrategy::Pm, 1.1).unwrap();
+            let prop =
+                distribute(&tree, &plat, alpha, MappingStrategy::Proportional, 1.1).unwrap();
+            let gain = pm.gain_over(prop.makespan);
+            assert!(
+                gain > 0.5,
+                "N={nodes} α={alpha}: pm should beat prop clearly, gain {gain:+.3}%"
+            );
+        }
+        // at α = 1 power-lengths equal works: the strategies tie
+        let tree = malltree::workload::generator::root_shape_mix(nodes, 3.7, 3, 3);
+        let pm = distribute(&tree, &plat, 1.0, MappingStrategy::Pm, 1.1).unwrap();
+        let prop = distribute(&tree, &plat, 1.0, MappingStrategy::Proportional, 1.1).unwrap();
+        assert!(pm.gain_over(prop.makespan).abs() < 1e-9);
     }
 }
 
