@@ -54,6 +54,51 @@ fn load_tree(args: &Args) -> Result<(String, TaskTree)> {
     Ok((name, at.tree))
 }
 
+/// Tree plus per-task memory weights: exact symbolic weights for
+/// generated/real problems, trace-carried weights for v2 trace files,
+/// and the synthetic family for v1 traces.
+fn load_tree_mem(args: &Args) -> Result<(String, TaskTree, crate::mem::MemWeights, &'static str)> {
+    if let Some(path) = args.get("tree") {
+        let (t, mem) = crate::workload::read_tree_mem(std::path::Path::new(path))?;
+        return Ok(match mem {
+            Some(w) => (path.to_string(), t, w, "trace (v2)"),
+            None => {
+                let seed = args.get_usize("seed", 0xDA7A)? as u64;
+                let mut rng = Rng::new(seed);
+                let w = crate::workload::synthetic_mem_weights(&t, &mut rng);
+                (path.to_string(), t, w, "synthetic")
+            }
+        });
+    }
+    let (name, a, perm) = load_problem(args)?;
+    let amalg = args.get_usize("amalgamate", 4)?;
+    let at = symbolic::analyze(&a, &perm, amalg)?;
+    let w = crate::mem::MemWeights::from_symbolic(&at);
+    Ok((name, at.tree, w, "symbolic"))
+}
+
+/// Parse a `--profile d:p[,d:p...]` step-profile spec (durations and
+/// processor counts; the last step persists forever).
+fn parse_profile(spec: &str) -> Result<Profile> {
+    let steps = spec
+        .split(',')
+        .map(|tok| {
+            let (d, p) = tok
+                .split_once(':')
+                .with_context(|| format!("--profile {spec}: step {tok:?} is not d:p"))?;
+            Ok((
+                d.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("--profile {spec}: bad duration {d:?}"))?,
+                p.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("--profile {spec}: bad processors {p:?}"))?,
+            ))
+        })
+        .collect::<Result<Vec<(f64, f64)>>>()?;
+    Profile::steps(&steps)
+}
+
 pub fn analyze(args: &mut Args) -> Result<()> {
     let (name, a, perm) = load_problem(args)?;
     let amalg = args.get_usize("amalgamate", 4)?;
@@ -106,6 +151,18 @@ pub fn schedule(args: &mut Args) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
+    if let Some(spec) = args.get("profile") {
+        // step processor profile (paper §4): the PM makespan comes from
+        // Theorem 6's θ-inversion; Agreg's ≥ 1-processor guarantee is
+        // proved against the profile's minimum step
+        let profile = parse_profile(spec)?;
+        let (agp, _) = agreg(&g, alpha, profile.min_p());
+        let m = PmSolution::solve(&agp, alpha).makespan(&profile);
+        println!(
+            "PM makespan under step profile [{spec}] (agreg at p_min={}): {m:.6e}",
+            profile.min_p()
+        );
+    }
     Ok(())
 }
 
@@ -240,6 +297,127 @@ pub fn simulate(args: &mut Args) -> Result<()> {
         }
     }
     print!("{}", table.render());
+    if let Some(spec) = args.get("profile") {
+        // step processor profile: per α, the corpus-mean PM makespan
+        // under the profile (Theorem 6 θ-inversion) next to the
+        // constant-p closed form at the profile's maximum
+        let profile = parse_profile(spec)?;
+        let mut ws = crate::sched::SchedWorkspace::new();
+        let mut t2 = Table::new(&[
+            "alpha",
+            "mean PM makespan (profile)",
+            "mean PM makespan (const max_p)",
+        ]);
+        for alpha in [0.7, 0.9, 1.0] {
+            let (mut mp, mut mc) = (0.0f64, 0.0f64);
+            for (_, tree) in &corpus {
+                let g = SpGraph::from_tree(tree);
+                let sol = ws.solve(&g, alpha);
+                mp += sol.makespan(&profile);
+                mc += sol.makespan_const(profile.max_p());
+            }
+            let k = corpus.len() as f64;
+            t2.row(&[
+                format!("{alpha:.2}"),
+                format!("{:.6e}", mp / k),
+                format!("{:.6e}", mc / k),
+            ]);
+        }
+        println!("\nstep profile [{spec}]:");
+        print!("{}", t2.render());
+    }
+    Ok(())
+}
+
+/// Memory-aware planning (`mem/`, DESIGN.md §12): sequential traversal
+/// peaks (Liu vs default), the unbounded PM schedule's replayed peak,
+/// memory-bounded schedules under a cap, and the makespan /
+/// peak-memory Pareto front.
+pub fn memory(args: &mut Args) -> Result<()> {
+    use crate::mem::{bounded_schedule, liu_order, peak};
+    use crate::sim::replay_memory;
+
+    let (name, tree, w, source) = load_tree_mem(args)?;
+    w.validate(&tree)?;
+    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
+    let p = args.get_f64("p", 8.0)?;
+    let order_sel = args.get("order").unwrap_or("liu").to_string();
+    if order_sel != "liu" && order_sel != "default" {
+        anyhow::bail!("unknown --order {order_sel} (liu|default)");
+    }
+    println!(
+        "tree {name}: {} tasks, alpha={alpha}, p={p}, weights: {source}",
+        tree.len()
+    );
+
+    let default_peak = peak(&tree, &w, &tree.topo_up());
+    let liu = liu_order(&tree, &w);
+    let liu_peak = peak(&tree, &w, &liu);
+    let reduction = 100.0 * (default_peak - liu_peak) / default_peak.max(1e-300);
+    for (nm, pk) in [("default", default_peak), ("liu", liu_peak)] {
+        let marker = if nm == order_sel { "*" } else { "" };
+        println!("sequential peak ({nm}{marker}): {pk:.4e} words");
+    }
+    println!("liu reduction vs default order: {reduction:.2}%");
+
+    let profile = Profile::constant(p);
+    let unbounded = bounded_schedule(&tree, &w, alpha, &profile, f64::INFINITY);
+    let replay = replay_memory(&tree, &w, &unbounded.schedule, None);
+    println!(
+        "unbounded PM: makespan {:.6e}, replayed peak {:.4e} words ({:.2}x the liu serial peak)",
+        unbounded.makespan,
+        replay.peak,
+        replay.peak / liu_peak.max(1e-300)
+    );
+
+    let cap = if let Some(r) = args.get("cap-ratio") {
+        let r: f64 = r.parse().context("--cap-ratio R")?;
+        Some(r * replay.peak)
+    } else {
+        args.get("cap")
+            .map(|c| c.parse::<f64>().context("--cap WORDS"))
+            .transpose()?
+    };
+    if let Some(cap) = cap {
+        let b = bounded_schedule(&tree, &w, alpha, &profile, cap);
+        let br = replay_memory(&tree, &w, &b.schedule, Some(cap));
+        println!(
+            "cap {cap:.4e} words: makespan {:.6e} ({:+.2}% vs unbounded), planned peak \
+             {:.4e}, {} serialized nodes, feasible={}",
+            b.makespan,
+            100.0 * (b.makespan - unbounded.makespan) / unbounded.makespan,
+            b.planned_peak,
+            b.serialized,
+            b.feasible
+        );
+        println!(
+            "  DES replay: peak {:.4e} words, {} stalled tasks ({:.3e} stall time), {} forced",
+            br.peak, br.stalled_tasks, br.stall_time, br.forced
+        );
+    }
+
+    if args.has_flag("pareto") || args.get("pareto").is_some() {
+        let points = args.get_usize("pareto", 6)?;
+        let front = crate::mem::pareto_front(&tree, &w, alpha, p, points);
+        let mut table = Table::new(&[
+            "cap (words)",
+            "makespan",
+            "vs unbounded",
+            "replay peak",
+            "serialized",
+        ]);
+        let base = front.last().map(|pt| pt.makespan).unwrap_or(1.0);
+        for pt in &front {
+            table.row(&[
+                format!("{:.4e}", pt.cap),
+                format!("{:.6e}", pt.makespan),
+                format!("{:+.2}%", 100.0 * (pt.makespan - base) / base),
+                format!("{:.4e}", pt.replay_peak),
+                format!("{}", pt.serialized),
+            ]);
+        }
+        print!("{}", table.render());
+    }
     Ok(())
 }
 
@@ -316,7 +494,9 @@ pub fn batch(args: &mut Args) -> Result<()> {
 }
 
 pub fn factorize(args: &mut Args) -> Result<()> {
-    use crate::exec::{execute_malleable, execute_parallel, execute_serial};
+    use crate::exec::{
+        execute_malleable, execute_malleable_capped, execute_parallel, execute_serial,
+    };
     use crate::frontal::{multifrontal, NaiveBackend, PjrtBackend, RustBackend};
 
     let (name, a, perm) = load_problem(args)?;
@@ -328,6 +508,11 @@ pub fn factorize(args: &mut Args) -> Result<()> {
     // teams per front (share-driven team sizes + intra-front tile
     // parallelism) instead of one worker per front
     let malleable = args.has_flag("malleable");
+    // --mem-cap WORDS: MemGauge-backed admission gate (malleable only)
+    let mem_cap = args.get_usize("mem-cap", 0)?;
+    if mem_cap > 0 && !malleable {
+        bail!("--mem-cap needs --malleable (the admission gate lives in the malleable crew)");
+    }
     // backend selection: blocked tiled kernels (default), the unblocked
     // naive oracle, or the PJRT accelerator queue (--pjrt is kept as an
     // alias for --backend pjrt)
@@ -354,10 +539,16 @@ pub fn factorize(args: &mut Args) -> Result<()> {
             let backend = PjrtBackend::new(rt);
             execute_serial(&at, &ap, &pm.schedule, &backend)?
         }
+        "naive" if malleable && mem_cap > 0 => {
+            execute_malleable_capped(&at, &ap, &pm.schedule, &NaiveBackend, workers, mem_cap)?
+        }
         "naive" if malleable => {
             execute_malleable(&at, &ap, &pm.schedule, &NaiveBackend, workers)?
         }
         "naive" => execute_parallel(&at, &ap, &pm.schedule, &NaiveBackend, workers)?,
+        "blocked" | "rust" if malleable && mem_cap > 0 => {
+            execute_malleable_capped(&at, &ap, &pm.schedule, &RustBackend, workers, mem_cap)?
+        }
         "blocked" | "rust" if malleable => {
             execute_malleable(&at, &ap, &pm.schedule, &RustBackend, workers)?
         }
@@ -520,4 +711,48 @@ pub fn figures(args: &mut Args) -> Result<()> {
 #[allow(dead_code)]
 fn _strategy_used(s: Strategy) -> Strategy {
     s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::new(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn parse_profile_accepts_step_specs() {
+        let pr = parse_profile("1:2,0.5:8,3:4").unwrap();
+        assert_eq!(pr.at(0.5), 2.0);
+        assert_eq!(pr.at(1.2), 8.0);
+        assert_eq!(pr.at(100.0), 4.0); // last step persists
+        assert_eq!(pr.min_p(), 2.0);
+        assert_eq!(pr.max_p(), 8.0);
+        assert!(parse_profile("1:2,banana").is_err());
+        assert!(parse_profile("1").is_err());
+        assert!(parse_profile("0:2").is_err()); // zero duration
+    }
+
+    #[test]
+    fn memory_command_runs_on_grid_and_rejects_bad_order() {
+        let mut a = args("--grid2d 8 --alpha 0.9 -p 4 --pareto 3 --cap-ratio 0.8");
+        memory(&mut a).unwrap();
+        let mut bad = args("--grid2d 8 --order sideways");
+        assert!(memory(&mut bad).is_err());
+    }
+
+    #[test]
+    fn schedule_command_prints_profile_makespan() {
+        let mut a = args("--grid2d 8 --alpha 0.9 -p 6 --profile 1:2,1:6");
+        schedule(&mut a).unwrap();
+        let mut bad = args("--grid2d 8 --profile 1:2:3");
+        assert!(schedule(&mut bad).is_err());
+    }
+
+    #[test]
+    fn factorize_rejects_mem_cap_without_malleable() {
+        let mut a = args("--grid2d 6 --mem-cap 1000");
+        assert!(factorize(&mut a).is_err());
+    }
 }

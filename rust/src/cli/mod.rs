@@ -9,7 +9,11 @@
 //!                    [--speeds 8,4,4] [--lambda 1.1]
 //!                    [--mapping pm|prop|cp]              N-node mapping + cross-node DES
 //! malltree factorize --grid2d 24 [--workers 4] [--malleable]
+//!                    [--mem-cap WORDS]
 //!                    [--backend blocked|naive|pjrt]      numeric factorization + residual
+//! malltree memory    --grid2d 32 [--order liu|default]
+//!                    [--cap WORDS | --cap-ratio R]
+//!                    [--pareto [N]]                      memory-aware planning + Pareto front
 //! malltree kernelsim --kind cholesky --n 20000 --b 256   Figure 2-6-style T(p) curve
 //! malltree dataset   --out DIR --trees 600               write the workload corpus
 //! malltree figures                                       regenerate every paper table/figure
@@ -34,6 +38,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "simulate" => commands::simulate(&mut args),
         "distribute" => commands::distribute(&mut args),
         "factorize" => commands::factorize(&mut args),
+        "memory" => commands::memory(&mut args),
         "kernelsim" => commands::kernelsim(&mut args),
         "dataset" => commands::dataset(&mut args),
         "figures" => commands::figures(&mut args),
@@ -55,16 +60,20 @@ fn usage() -> String {
      \x20 simulate   Figure 13/14 rows over a generated tree corpus\n\
      \x20 distribute map a tree onto N multicore nodes (Alg 11/12) + cross-node DES\n\
      \x20 factorize  end-to-end numeric multifrontal factorization\n\
+     \x20 memory     memory-aware planning: Liu traversal, caps, Pareto front\n\
      \x20 kernelsim  Figure 2-6 kernel timing curves + alpha fit\n\
      \x20 dataset    write the workload corpus to disk\n\
      \x20 figures    regenerate every paper table/figure (see benches for timing)\n\
      \n\
      common flags: --grid2d K | --grid3d K | --mtx FILE | --tree FILE,\n\
      \x20 --alpha A, -p N, --amalgamate W, --seed S, --workers N,\n\
+     \x20 --profile d:p[,d:p...] (step processor profile, schedule/simulate),\n\
      \x20 --malleable (schedule-share-driven worker teams per front),\n\
+     \x20 --mem-cap WORDS (malleable memory admission gate),\n\
      \x20 --backend blocked|naive|pjrt (--pjrt is an alias),\n\
      \x20 distribute: --nodes N -p CORES | --speeds P0,P1,.. (heterogeneous),\n\
-     \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp\n"
+     \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp,\n\
+     \x20 memory: --order liu|default, --cap WORDS | --cap-ratio R, --pareto [N]\n"
         .to_string()
 }
 

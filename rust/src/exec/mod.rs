@@ -32,4 +32,6 @@ mod worker;
 pub use report::ExecReport;
 pub use shares::integer_shares;
 pub use team::{occupancy_by_width, OccupancyRow, TeamPlan};
-pub use worker::{execute_malleable, execute_parallel, execute_serial};
+pub use worker::{
+    execute_malleable, execute_malleable_capped, execute_parallel, execute_serial,
+};

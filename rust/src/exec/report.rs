@@ -30,6 +30,13 @@ pub struct ExecReport {
     /// measurement behind [`ExecReport::occupancy`]. Empty for the
     /// serial path.
     pub team_log: Vec<(usize, usize)>,
+    /// Wait episodes at the memory-cap admission gate
+    /// ([`crate::exec::execute_malleable_capped`]; 0 without a cap).
+    pub mem_stalls: usize,
+    /// Over-cap admissions forced because nothing was running (an
+    /// infeasibly small cap degrades to serial execution, never
+    /// deadlocks).
+    pub mem_forced: usize,
 }
 
 impl ExecReport {
@@ -97,6 +104,12 @@ impl ExecReport {
                 self.max_team()
             ));
         }
+        if self.mem_stalls > 0 || self.mem_forced > 0 {
+            s.push_str(&format!(
+                " mem_stalls={} mem_forced={}",
+                self.mem_stalls, self.mem_forced
+            ));
+        }
         s
     }
 }
@@ -117,6 +130,8 @@ mod tests {
             workers: 1,
             malleable: false,
             team_log: Vec::new(),
+            mem_stalls: 0,
+            mem_forced: 0,
         }
     }
 

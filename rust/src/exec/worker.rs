@@ -96,6 +96,8 @@ pub fn execute_serial(
             workers: 1,
             malleable: false,
             team_log: Vec::new(),
+            mem_stalls: 0,
+            mem_forced: 0,
         },
     ))
 }
@@ -186,6 +188,19 @@ struct ReadyQueue {
     assembly_seconds: f64,
     /// per completed front: (front order, realized team size)
     team_log: Vec<(usize, usize)>,
+    /// memory-cap admission gate (f64 words; `None` = unbounded)
+    mem_cap: Option<usize>,
+    /// reserved words of admitted tasks: `front + schur` at admission,
+    /// front and consumed children blocks returned at completion. The
+    /// reservation covers the admit→allocate window the [`MemGauge`]
+    /// cannot see, so `planned >= gauge.live` always and an admission
+    /// check against `planned` caps the measured peak too.
+    planned: usize,
+    /// wait episodes caused by the memory gate
+    mem_stalls: usize,
+    /// admissions forced through an over-cap gate because nothing was
+    /// running (a smaller cap would deadlock, not help)
+    mem_forced: usize,
 }
 
 /// Re-round the schedule shares of the active fronts into team sizes
@@ -224,7 +239,7 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, false)
+    run_crew(at, ap, schedule, backend, workers, false, None)
 }
 
 /// Malleable thread-crew execution: like [`execute_parallel`], but the
@@ -240,7 +255,29 @@ pub fn execute_malleable<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, true)
+    run_crew(at, ap, schedule, backend, workers, true, None)
+}
+
+/// [`execute_malleable`] with a **memory-cap admission gate**
+/// (DESIGN.md §12): a ready front is only popped while the crew's
+/// planned live words (admitted fronts + their Schur slabs +
+/// outstanding contribution blocks, the reservation mirror of the
+/// shared [`MemGauge`]) plus the front's own `nf² + m²` cost stay
+/// under `cap_f64s`. Memory-blocked workers help open teams or wait
+/// for a completion; when nothing is running the head task is
+/// force-admitted (an infeasibly small cap degrades to near-serial
+/// execution instead of deadlocking). When no forced admission
+/// occurred, the gauge-measured peak is ≤ the cap (tested). Stall and
+/// forced counts are reported in the [`super::ExecReport`].
+pub fn execute_malleable_capped<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+    cap_f64s: usize,
+) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, true, Some(cap_f64s))
 }
 
 /// Lock discipline (both modes): a worker holds the queue mutex only
@@ -258,6 +295,7 @@ fn run_crew<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
     malleable: bool,
+    mem_cap: Option<usize>,
 ) -> Result<(Factorization, super::ExecReport)> {
     let n = at.tree.len();
     let workers = workers.max(1);
@@ -274,6 +312,41 @@ fn run_crew<B: FrontBackend + Sync>(
     // sorted descending by priority index so pop() gives the smallest
     ready.sort_by(|&a, &b| prio[b as usize].cmp(&prio[a as usize]));
 
+    // memory gate tables: admission reserves `front + schur` words; a
+    // completion returns the front and the children blocks its
+    // assembly consumed (their reservations were made at the
+    // children's own admissions)
+    let mem_cost: Vec<usize> = at
+        .symbolic
+        .supernodes
+        .iter()
+        .map(|sn| {
+            let nf = sn.front_order();
+            let m = nf - sn.width;
+            nf * nf + m * m
+        })
+        .collect();
+    let mem_release: Vec<usize> = at
+        .tree
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(s, node)| {
+            let sn = &at.symbolic.supernodes[s];
+            let nf = sn.front_order();
+            let children: usize = node
+                .children
+                .iter()
+                .map(|&c| {
+                    let csn = &at.symbolic.supernodes[c as usize];
+                    let m = csn.front_order() - csn.width;
+                    m * m
+                })
+                .sum();
+            nf * nf + children
+        })
+        .collect();
+
     let plan = TeamPlan::new(schedule, n, workers, malleable);
     let team_backend = backend.team_capable();
     let queue = Mutex::new(ReadyQueue {
@@ -286,6 +359,10 @@ fn run_crew<B: FrontBackend + Sync>(
         flops: 0.0,
         assembly_seconds: 0.0,
         team_log: Vec::new(),
+        mem_cap,
+        planned: 0,
+        mem_stalls: 0,
+        mem_forced: 0,
     });
     let cv = Condvar::new();
     let contrib: Vec<OnceSlot> = (0..n).map(|_| OnceSlot::new()).collect();
@@ -303,6 +380,9 @@ fn run_crew<B: FrontBackend + Sync>(
                 loop {
                     let duty = {
                         let mut st = queue.lock().unwrap();
+                        // one stall episode per continuous memory-blocked
+                        // wait, not one per condvar wakeup
+                        let mut stall_counted = false;
                         loop {
                             if st.remaining == 0 || st.error.is_some() {
                                 st.flops += local_flops;
@@ -311,20 +391,39 @@ fn run_crew<B: FrontBackend + Sync>(
                                 cv.notify_all();
                                 return;
                             }
-                            if let Some(v) = st.ready.pop() {
-                                st.running.push(v);
-                                let team = if plan.malleable() && team_backend {
-                                    let active: Vec<u32> = st
-                                        .running
-                                        .iter()
-                                        .chain(st.ready.iter())
-                                        .copied()
-                                        .collect();
-                                    plan.team_size_of(v, &active)
-                                } else {
-                                    1
-                                };
-                                break Duty::Run(v, team);
+                            // memory-cap admission gate: the head task
+                            // is popped only while its reservation fits
+                            // under the cap; when nothing is running or
+                            // helping, force-admit (a smaller cap must
+                            // degrade to serial, never deadlock)
+                            let admissible = match (st.mem_cap, st.ready.last()) {
+                                (Some(cap), Some(&v)) => {
+                                    st.planned + mem_cost[v as usize] <= cap
+                                }
+                                _ => true,
+                            };
+                            if admissible || (st.running.is_empty() && st.open.is_empty()) {
+                                if let Some(v) = st.ready.pop() {
+                                    if !admissible {
+                                        st.mem_forced += 1;
+                                    }
+                                    if st.mem_cap.is_some() {
+                                        st.planned += mem_cost[v as usize];
+                                    }
+                                    st.running.push(v);
+                                    let team = if plan.malleable() && team_backend {
+                                        let active: Vec<u32> = st
+                                            .running
+                                            .iter()
+                                            .chain(st.ready.iter())
+                                            .copied()
+                                            .collect();
+                                        plan.team_size_of(v, &active)
+                                    } else {
+                                        1
+                                    };
+                                    break Duty::Run(v, team);
+                                }
                             }
                             if let Some(ot) = st.open.iter_mut().find(|o| o.seats > 0) {
                                 ot.seats -= 1;
@@ -334,6 +433,10 @@ fn run_crew<B: FrontBackend + Sync>(
                                 // descheduled before help_reserved()
                                 ot.job.reserve();
                                 break Duty::Help(ot.job.clone());
+                            }
+                            if !admissible && !st.ready.is_empty() && !stall_counted {
+                                st.mem_stalls += 1;
+                                stall_counted = true;
                             }
                             st = cv.wait(st).unwrap();
                         }
@@ -405,7 +508,7 @@ fn run_crew<B: FrontBackend + Sync>(
                                 local_flops += sn.flops();
                                 st.team_log.push((nf, members));
                                 st.remaining -= 1;
-                                complete(&mut st, at, s, &prio);
+                                complete(&mut st, at, s, &prio, &mem_release);
                                 replan(&mut st, &plan);
                             }
                             Err(e) => {
@@ -444,7 +547,7 @@ fn run_crew<B: FrontBackend + Sync>(
                                 local_flops += sn.flops();
                                 st.team_log.push((nf, 1));
                                 st.remaining -= 1;
-                                complete(&mut st, at, s, &prio);
+                                complete(&mut st, at, s, &prio, &mem_release);
                             }
                             Err(e) => {
                                 // keep the first failure; later ones are
@@ -483,14 +586,26 @@ fn run_crew<B: FrontBackend + Sync>(
             workers,
             malleable,
             team_log: st.team_log,
+            mem_stalls: st.mem_stalls,
+            mem_forced: st.mem_forced,
         },
     ))
 }
 
-/// Completion bookkeeping under the queue lock: decrement the parent's
-/// dependency counter and insert it into the priority-sorted ready
-/// list once its last child finished.
-fn complete(st: &mut ReadyQueue, at: &AssemblyTree, s: usize, prio: &[usize]) {
+/// Completion bookkeeping under the queue lock: return the task's
+/// memory reservation (its front plus the children blocks its assembly
+/// consumed), decrement the parent's dependency counter and insert it
+/// into the priority-sorted ready list once its last child finished.
+fn complete(
+    st: &mut ReadyQueue,
+    at: &AssemblyTree,
+    s: usize,
+    prio: &[usize],
+    mem_release: &[usize],
+) {
+    if st.mem_cap.is_some() {
+        st.planned = st.planned.saturating_sub(mem_release[s]);
+    }
     if let Some(parent) = at.tree.nodes[s].parent {
         let pi = parent as usize;
         st.unfinished_children[pi] -= 1;
@@ -657,6 +772,53 @@ mod tests {
         let (fm, report) = execute_malleable(&at, &ap, &schedule, &RustBackend, 1).unwrap();
         assert_bitwise(&fs, &fm, "1 worker");
         assert!(report.team_log.iter().all(|&(_, t)| t == 1));
+    }
+
+    #[test]
+    fn capped_generous_matches_serial_with_no_gate_activity() {
+        let (at, ap, schedule) = setup(10);
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fm, report) =
+            execute_malleable_capped(&at, &ap, &schedule, &RustBackend, 4, usize::MAX / 2)
+                .unwrap();
+        assert_bitwise(&fs, &fm, "generous cap");
+        assert_eq!(report.mem_stalls, 0);
+        assert_eq!(report.mem_forced, 0);
+    }
+
+    #[test]
+    fn capped_run_respects_cap_when_not_forced() {
+        use crate::frontal::arena::symbolic_peak_f64s;
+        // caps from comfortably above the serial-optimal peak down to
+        // absurd: factors stay bit-identical; whenever no admission was
+        // forced, the gauge-measured peak respects the cap
+        let (at, ap, schedule) = setup(12);
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let serial_peak = symbolic_peak_f64s(&at);
+        for cap in [4 * serial_peak, serial_peak + serial_peak / 4, 1usize] {
+            let (fm, report) =
+                execute_malleable_capped(&at, &ap, &schedule, &RustBackend, 4, cap).unwrap();
+            assert_bitwise(&fs, &fm, "capped");
+            if report.mem_forced == 0 {
+                assert!(
+                    report.peak_front_bytes <= cap * std::mem::size_of::<f64>(),
+                    "cap {cap}: measured peak {} bytes over the gate",
+                    report.peak_front_bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn absurd_cap_degrades_to_serial_not_deadlock() {
+        let (at, ap, schedule) = setup(8);
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fm, report) =
+            execute_malleable_capped(&at, &ap, &schedule, &RustBackend, 4, 1).unwrap();
+        assert_bitwise(&fs, &fm, "absurd cap");
+        // essentially every front is over the 1-word cap: the gate
+        // forces them through one at a time instead of deadlocking
+        assert!(report.mem_forced > 0, "1-word cap never forced an admission");
     }
 
     #[test]

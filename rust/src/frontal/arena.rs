@@ -43,6 +43,13 @@ impl MemGauge {
         self.live.fetch_sub(n, Ordering::Relaxed);
     }
 
+    /// Words currently live across every arena sharing this gauge —
+    /// what the executor's memory-cap admission gate reads
+    /// ([`crate::exec::execute_malleable_capped`]).
+    pub fn live_f64s(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
     /// High-water mark in f64 words.
     pub fn peak_f64s(&self) -> usize {
         self.peak.load(Ordering::Relaxed)

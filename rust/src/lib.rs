@@ -27,10 +27,14 @@
 //! * [`runtime`] — the PJRT bridge that loads the AOT HLO artifacts
 //!   produced by `python/compile/aot.py`;
 //! * [`exec`] — the malleable work-crew executor realizing fractional
-//!   shares as time-sliced integer core assignments;
+//!   shares as time-sliced integer core assignments (with an optional
+//!   memory-cap admission gate);
+//! * [`mem`] — memory-aware scheduling: per-task memory weights, Liu's
+//!   optimal sequential traversal, and memory-bounded malleable
+//!   schedules (the makespan / peak-memory Pareto front);
 //! * [`sim`] — simulators: a discrete-event engine for malleable
-//!   schedules and the tiled kernel-DAG simulator used to reproduce the
-//!   paper's §3 speedup measurements;
+//!   schedules (plus a memory-replay mode), and the tiled kernel-DAG
+//!   simulator used to reproduce the paper's §3 speedup measurements;
 //! * [`workload`] — the assembly-tree dataset surrogate for the
 //!   University of Florida collection used in §7;
 //! * [`metrics`] — statistics, regression (α fitting) and table/boxplot
@@ -42,6 +46,7 @@ pub mod config;
 pub mod dist;
 pub mod exec;
 pub mod frontal;
+pub mod mem;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

@@ -1,0 +1,447 @@
+//! Memory-bounded malleable scheduling (DESIGN.md §12).
+//!
+//! Given a cap `M` on live words, select which sibling subtrees may be
+//! concurrently active and re-run the PM solver on the induced
+//! structure. The plan is computed bottom-up: per node, the children
+//! are packed (in Liu order — decreasing `m(c) − cb(c)`) into
+//! **batches** whose conservative concurrent peak fits under `M`;
+//! batch members run in parallel, batches run sequentially. The
+//! resulting execution structure *is* a series-parallel graph — a
+//! serialized sibling set is a series composition of its batches — so
+//! the schedule is just the PM optimum of that constrained graph,
+//! solved through the same [`SchedWorkspace`] core as every other
+//! schedule in the repo (the single-batch case is the plain
+//! sub-forest/parallel composition `solve_forest` handles; a
+//! multi-batch node chains those forests in series).
+//!
+//! Two exact degeneracies anchor the construction:
+//!
+//! * `M = ∞` (or `M ≥` the unbounded planned peak) makes every node a
+//!   single batch in original child order; the graph is then
+//!   **bit-identical** to [`SpGraph::from_tree`], so the schedule is
+//!   the unbounded PM schedule (tested bitwise);
+//! * `M` below everything makes every batch a singleton in Liu order:
+//!   the plan degenerates to Liu's optimal sequential traversal, whose
+//!   peak is the minimum over all postorders.
+//!
+//! The per-node bound `m(v)` is conservative (concurrent children are
+//! charged the sum of their subtree peaks), so a feasible plan's DES
+//! memory replay never exceeds the cap (property-tested).
+
+use crate::model::{SpGraph, SpNode, TaskTree};
+use crate::sched::{Profile, SchedWorkspace, Schedule};
+
+use super::model::MemWeights;
+
+/// A cap-constrained PM schedule and its plan metadata.
+#[derive(Debug, Clone)]
+pub struct BoundedSchedule {
+    /// The materialized schedule (PM optimum of the constrained graph).
+    pub schedule: Schedule,
+    /// Makespan under the given profile.
+    pub makespan: f64,
+    /// Conservative bound on the schedule's peak live words (`m(root)`).
+    pub planned_peak: f64,
+    /// Nodes whose children were split into more than one batch.
+    pub serialized: usize,
+    /// Whether `planned_peak ≤ cap` (false means even full
+    /// serialization — Liu's optimal traversal — exceeds the cap; the
+    /// returned schedule is then that minimal-memory serial plan).
+    pub feasible: bool,
+    /// The constrained SP graph the schedule was solved on.
+    pub graph: SpGraph,
+}
+
+/// One point of the makespan / peak-memory Pareto front.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    /// The cap this plan was built for (words).
+    pub cap: f64,
+    /// PM makespan of the constrained schedule.
+    pub makespan: f64,
+    /// Conservative planned peak (≤ cap when feasible).
+    pub planned_peak: f64,
+    /// Peak of the DES memory replay of the schedule (≤ planned).
+    pub replay_peak: f64,
+    /// Nodes with serialized (multi-batch) children.
+    pub serialized: usize,
+    pub feasible: bool,
+}
+
+/// Per-node child batches: members parallel, batches sequential.
+struct Plan {
+    batches: Vec<Vec<Vec<u32>>>,
+    planned_peak: f64,
+    serialized: usize,
+}
+
+/// Bottom-up batch planning under `cap`. For each node, first try the
+/// all-parallel batch in *original* child order (so the unbounded case
+/// reproduces `from_tree` exactly); if its conservative peak exceeds
+/// the cap, re-sort the children in Liu order and greedily pack.
+fn plan(tree: &TaskTree, w: &MemWeights, cap: f64) -> Plan {
+    let n = tree.len();
+    let mut m = vec![0.0f64; n];
+    let mut batches: Vec<Vec<Vec<u32>>> = vec![Vec::new(); n];
+    let mut serialized = 0usize;
+    for &v in &tree.topo_up() {
+        let vi = v as usize;
+        let children = &tree.nodes[vi].children;
+        if children.is_empty() {
+            m[vi] = w.front[vi] + w.cb[vi];
+            continue;
+        }
+        let cb_sum: f64 = children.iter().map(|&c| w.cb[c as usize]).sum();
+        // assembly (all children blocks + front), then front + own block
+        let own = (cb_sum + w.front[vi]).max(w.front[vi] + w.cb[vi]);
+        let par_sum: f64 = children.iter().map(|&c| m[c as usize]).sum();
+        if par_sum.max(own) <= cap {
+            m[vi] = par_sum.max(own);
+            batches[vi] = vec![children.clone()];
+            continue;
+        }
+        // cap binds: Liu-sort, then greedily pack batches that fit
+        let mut order = children.clone();
+        order.sort_by(|&a, &b| {
+            let ka = m[a as usize] - w.cb[a as usize];
+            let kb = m[b as usize] - w.cb[b as usize];
+            kb.total_cmp(&ka).then(a.cmp(&b))
+        });
+        let mut bs: Vec<Vec<u32>> = Vec::new();
+        let mut residual = 0.0f64; // blocks of completed earlier batches
+        let mut pk = 0.0f64;
+        let mut cur: Vec<u32> = Vec::new();
+        let (mut cur_m, mut cur_cb) = (0.0f64, 0.0f64);
+        for &c in &order {
+            let mc = m[c as usize];
+            if !cur.is_empty() && residual + cur_m + mc > cap {
+                pk = pk.max(residual + cur_m);
+                residual += cur_cb;
+                bs.push(std::mem::take(&mut cur));
+                cur_m = 0.0;
+                cur_cb = 0.0;
+            }
+            cur.push(c);
+            cur_m += mc;
+            cur_cb += w.cb[c as usize];
+        }
+        pk = pk.max(residual + cur_m);
+        residual += cur_cb;
+        bs.push(cur);
+        if bs.len() > 1 {
+            serialized += 1;
+        }
+        // assembly term from the sorted-order residual: with singleton
+        // batches this reproduces the Liu recursion's float ops
+        // bit-for-bit, so the serial fallback's planned peak equals
+        // `subtree_peaks` exactly (the Pareto front's lower anchor)
+        pk = pk.max(residual + w.front[vi]);
+        m[vi] = pk.max(w.front[vi] + w.cb[vi]);
+        batches[vi] = bs;
+    }
+    Plan { batches, planned_peak: m[tree.root as usize], serialized }
+}
+
+/// Build the constrained SP graph of a plan. Mirrors
+/// [`SpGraph::from_tree`]'s arena layout node for node, so a plan with
+/// a single all-children batch at every node produces a bit-identical
+/// graph (and therefore a bit-identical PM schedule).
+fn build_graph(tree: &TaskTree, plan: &Plan) -> SpGraph {
+    let n = tree.len();
+    let mut sub: Vec<u32> = vec![0; n];
+    let mut g = SpGraph::new(Vec::with_capacity(2 * n), 0);
+    for &v in &tree.topo_up() {
+        let vi = v as usize;
+        let node = &tree.nodes[vi];
+        let leaf = g.push(SpNode::Leaf { len: node.len, task: Some(v) });
+        let id = if node.children.is_empty() {
+            leaf
+        } else {
+            let mut members = Vec::with_capacity(plan.batches[vi].len() + 1);
+            for batch in &plan.batches[vi] {
+                let kids: Vec<u32> = batch.iter().map(|&c| sub[c as usize]).collect();
+                members.push(if kids.len() == 1 {
+                    kids[0]
+                } else {
+                    g.push(SpNode::Parallel(kids))
+                });
+            }
+            members.push(leaf);
+            g.push(SpNode::Series(members))
+        };
+        sub[vi] = id;
+    }
+    g.root = sub[tree.root as usize];
+    g
+}
+
+/// Memory-bounded PM schedule for `tree` under `cap` live words
+/// (`f64::INFINITY` for unbounded), materialized against `profile`.
+pub fn bounded_schedule(
+    tree: &TaskTree,
+    w: &MemWeights,
+    alpha: f64,
+    profile: &Profile,
+    cap: f64,
+) -> BoundedSchedule {
+    let mut ws = SchedWorkspace::new();
+    bounded_schedule_with_workspace(tree, w, alpha, profile, cap, &mut ws)
+}
+
+/// [`bounded_schedule`] with a caller-owned [`SchedWorkspace`] so cap
+/// sweeps (the Pareto front, the `mem_sched` bench) reuse the PM
+/// solver's SoA buffers across plans.
+pub fn bounded_schedule_with_workspace(
+    tree: &TaskTree,
+    w: &MemWeights,
+    alpha: f64,
+    profile: &Profile,
+    cap: f64,
+    ws: &mut SchedWorkspace,
+) -> BoundedSchedule {
+    debug_assert!(w.front.len() == tree.len() && w.cb.len() == tree.len());
+    // The bottom-up packer is context-blind: a child batched right up
+    // to the cap can push an ancestor's residual context over it. When
+    // that happens, tighten the *packing* budget geometrically (the
+    // admission cap stays `cap`) until the composed bound fits; the
+    // zero-budget plan is Liu's serial traversal, so any
+    // `cap ≥ liu peak` ends feasible.
+    let mut pl = plan(tree, w, cap);
+    if pl.planned_peak > cap {
+        let mut eff = cap;
+        for _ in 0..64 {
+            eff *= 0.5;
+            if eff < f64::MIN_POSITIVE {
+                break;
+            }
+            pl = plan(tree, w, eff);
+            if pl.planned_peak <= cap {
+                break;
+            }
+        }
+        if pl.planned_peak > cap {
+            pl = plan(tree, w, 0.0);
+        }
+    }
+    let graph = build_graph(tree, &pl);
+    let spans = ws.task_spans(&graph, alpha, profile).to_vec();
+    let schedule = Schedule::new(spans);
+    BoundedSchedule {
+        makespan: schedule.makespan,
+        schedule,
+        planned_peak: pl.planned_peak,
+        serialized: pl.serialized,
+        feasible: pl.planned_peak <= cap,
+        graph,
+    }
+}
+
+/// Makespan / peak-memory Pareto front: caps swept geometrically from
+/// the Liu-optimal sequential peak (full serialization — the minimum
+/// any schedule can reach) to the unbounded plan's conservative peak,
+/// each point DES-replayed to report the realized peak.
+pub fn pareto_front(
+    tree: &TaskTree,
+    w: &MemWeights,
+    alpha: f64,
+    p: f64,
+    points: usize,
+) -> Vec<ParetoPoint> {
+    let profile = Profile::constant(p);
+    let mut ws = SchedWorkspace::new();
+    let unbounded =
+        bounded_schedule_with_workspace(tree, w, alpha, &profile, f64::INFINITY, &mut ws);
+    let hi = unbounded.planned_peak;
+    let lo = super::traversal::subtree_peaks(tree, w)[tree.root as usize];
+    let points = points.max(2);
+    let mut out = Vec::with_capacity(points);
+    for i in 0..points {
+        let t = i as f64 / (points - 1) as f64;
+        // geometric interpolation; degenerate span falls back to `hi`
+        let cap = if lo > 0.0 && hi > lo {
+            lo * (hi / lo).powf(t)
+        } else {
+            hi
+        };
+        let b = bounded_schedule_with_workspace(tree, w, alpha, &profile, cap, &mut ws);
+        let replay = crate::sim::replay_memory(tree, w, &b.schedule, None);
+        out.push(ParetoPoint {
+            cap,
+            makespan: b.makespan,
+            planned_peak: b.planned_peak,
+            replay_peak: replay.peak,
+            serialized: b.serialized,
+            feasible: b.feasible,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::traversal::{liu_order, peak, subtree_peaks};
+    use crate::sim::replay_memory;
+    use crate::util::{approx_eq, approx_le};
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+    use crate::workload::generator::{random_tree, synthetic_mem_weights, TreeClass};
+
+    fn case(rng: &mut Rng) -> (TaskTree, MemWeights, f64) {
+        let classes = [TreeClass::Uniform, TreeClass::Deep, TreeClass::Binary];
+        let t = random_tree(classes[rng.below(3)], rng.range(2, 120), rng);
+        let w = synthetic_mem_weights(&t, rng);
+        let alpha = rng.range_f64(0.5, 1.0);
+        (t, w, alpha)
+    }
+
+    #[test]
+    fn unbounded_cap_reproduces_from_tree_bitwise() {
+        check(
+            Config { cases: 20, seed: 0xB0 },
+            "cap >= unbounded peak degenerates to the plain PM schedule",
+            case,
+            |(t, w, alpha)| {
+                let profile = Profile::constant(8.0);
+                let unb = bounded_schedule(t, w, *alpha, &profile, f64::INFINITY);
+                // cap exactly at the unbounded planned peak: still all-parallel
+                let at_peak = bounded_schedule(t, w, *alpha, &profile, unb.planned_peak);
+                if at_peak.serialized != 0 || !at_peak.feasible {
+                    return Err("cap == unbounded peak still serialized".into());
+                }
+                let want = SpGraph::from_tree(t);
+                if unb.graph.nodes != want.nodes || at_peak.graph.nodes != want.nodes {
+                    return Err("constrained graph differs from from_tree".into());
+                }
+                let pm = crate::sched::PmSchedule::for_tree(t, *alpha, &profile);
+                if unb.schedule.spans.len() != pm.schedule.spans.len() {
+                    return Err("span count differs".into());
+                }
+                for (a, b) in unb.schedule.spans.iter().zip(&pm.schedule.spans) {
+                    if a.task != b.task
+                        || a.start.to_bits() != b.start.to_bits()
+                        || a.finish.to_bits() != b.finish.to_bits()
+                        || a.ratio.to_bits() != b.ratio.to_bits()
+                    {
+                        return Err(format!("span for task {} differs", a.task));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn replay_never_exceeds_cap_and_makespan_degrades_monotonically() {
+        check(
+            Config { cases: 25, seed: 0xB1 },
+            "bounded schedules respect the cap in DES replay",
+            case,
+            |(t, w, alpha)| {
+                let profile = Profile::constant(6.0);
+                let unb = bounded_schedule(t, w, *alpha, &profile, f64::INFINITY);
+                let lo = subtree_peaks(t, w)[t.root as usize];
+                let hi = unb.planned_peak;
+                for frac in [0.0, 0.3, 0.6, 1.0] {
+                    let cap = lo + frac * (hi - lo);
+                    let b = bounded_schedule(t, w, *alpha, &profile, cap);
+                    if !b.feasible {
+                        return Err(format!("cap {cap} >= liu peak {lo} must be feasible"));
+                    }
+                    if !approx_le(b.planned_peak, cap, 1e-9) {
+                        return Err(format!("planned {} > cap {cap}", b.planned_peak));
+                    }
+                    let r = replay_memory(t, w, &b.schedule, None);
+                    if !approx_le(r.peak, b.planned_peak, 1e-9) {
+                        return Err(format!(
+                            "replay peak {} > planned {} (cap {cap})",
+                            r.peak, b.planned_peak
+                        ));
+                    }
+                    // schedule stays valid under the tighter structure
+                    if b.schedule
+                        .validate(t, *alpha, &profile, 1e-6)
+                        .is_err()
+                    {
+                        return Err(format!("invalid schedule at cap {cap}"));
+                    }
+                    // tighter caps can only lengthen the makespan
+                    if !approx_le(unb.makespan, b.makespan, 1e-9) {
+                        return Err(format!(
+                            "bounded makespan {} beat unbounded {}",
+                            b.makespan, unb.makespan
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tiny_cap_degenerates_to_liu_serial_traversal() {
+        let mut rng = Rng::new(0xB2);
+        for _ in 0..10 {
+            let (t, w, alpha) = case(&mut rng);
+            let profile = Profile::constant(4.0);
+            let b = bounded_schedule(&t, &w, alpha, &profile, 0.0);
+            // fully serialized plan == Liu's optimal sequential peak
+            let liu = peak(&t, &w, &liu_order(&t, &w));
+            assert!(
+                approx_eq(b.planned_peak, liu, 1e-9),
+                "fully-serial planned peak {} != liu {liu}",
+                b.planned_peak
+            );
+            assert!(!b.feasible);
+            let r = replay_memory(&t, &w, &b.schedule, None);
+            assert!(approx_le(r.peak, liu, 1e-9), "replay {} > liu {liu}", r.peak);
+        }
+    }
+
+    #[test]
+    fn serialization_kicks_in_between_extremes() {
+        // wide star: many identical children — a mid cap forces batches
+        let n = 17;
+        let parents = vec![0usize; n]; // node 0 root, 16 leaf children
+        let lens = vec![8.0; n];
+        let t = TaskTree::from_parents(&parents, &lens).unwrap();
+        let mut w = MemWeights::uniform(n, 100.0, 10.0);
+        w.cb[0] = 0.0;
+        let profile = Profile::constant(8.0);
+        let unb = bounded_schedule(&t, &w, 0.9, &profile, f64::INFINITY);
+        // 16 children in parallel: planned peak 16 * 110
+        assert_eq!(unb.planned_peak, 16.0 * 110.0);
+        let b = bounded_schedule(&t, &w, 0.9, &profile, 500.0);
+        assert!(b.feasible);
+        assert_eq!(b.serialized, 1);
+        assert!(b.planned_peak <= 500.0);
+        assert!(b.makespan > unb.makespan);
+        let r = replay_memory(&t, &w, &b.schedule, None);
+        assert!(r.peak <= 500.0 + 1e-9, "replay {} over cap", r.peak);
+    }
+
+    #[test]
+    fn pareto_front_is_monotone_in_both_axes() {
+        let mut rng = Rng::new(0xB3);
+        let t = random_tree(TreeClass::Uniform, 200, &mut rng);
+        let w = synthetic_mem_weights(&t, &mut rng);
+        let front = pareto_front(&t, &w, 0.9, 8.0, 6);
+        assert_eq!(front.len(), 6);
+        // the widest cap is the unbounded schedule
+        let last = front.last().unwrap();
+        assert_eq!(last.serialized, 0);
+        assert!(last.feasible);
+        for pair in front.windows(2) {
+            assert!(pair[0].cap <= pair[1].cap, "caps must increase");
+        }
+        for pt in &front {
+            // every point is feasible (caps start at the Liu peak),
+            // respects its cap in replay, and none beats the
+            // unbounded PM optimum
+            assert!(pt.feasible, "cap {} infeasible", pt.cap);
+            assert!(approx_le(pt.replay_peak, pt.cap, 1e-9));
+            assert!(approx_le(pt.replay_peak, pt.planned_peak, 1e-9));
+            assert!(approx_le(last.makespan, pt.makespan, 1e-9));
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Memory-aware scheduling (DESIGN.md §12).
+//!
+//! The multifrontal method's real-world ceiling is memory, not flops:
+//! each front plus its children's contribution blocks must be live
+//! simultaneously, and parallel tree traversals multiply that peak.
+//! This subsystem *plans* for the quantity the numeric layer already
+//! measures ([`crate::frontal::arena::MemGauge`],
+//! `symbolic_peak_f64s`):
+//!
+//! * [`model`] — per-task memory weights (front storage `n_i`,
+//!   contribution block `f_i`) from real symbolic analyses or the
+//!   synthetic family in [`crate::workload::generator`];
+//! * [`traversal`] — Liu's exact optimal sequential postorder for peak
+//!   minimization, plus `peak(order)` evaluation of any postorder
+//!   (the default `topo_up` order is the baseline);
+//! * [`bounded`] — memory-bounded malleable schedules: under a cap
+//!   `M`, sibling subtrees are packed into concurrency batches and the
+//!   PM solver runs on the induced series-parallel structure,
+//!   producing the makespan / peak-memory Pareto front.
+//!
+//! The loop is closed on both ends: [`crate::sim::replay_memory`]
+//! replays any schedule's live words over time (the serial-postorder
+//! replay pins the arena-measured peak exactly), and
+//! [`crate::exec::execute_malleable_capped`] enforces a cap at run
+//! time through a `MemGauge`-backed admission gate.
+
+pub mod bounded;
+pub mod model;
+pub mod traversal;
+
+pub use bounded::{bounded_schedule, pareto_front, BoundedSchedule, ParetoPoint};
+pub use model::MemWeights;
+pub use traversal::{liu_order, peak, subtree_peaks};

@@ -1,0 +1,137 @@
+//! Per-task memory weights on a [`TaskTree`] (DESIGN.md §12).
+//!
+//! The multifrontal method's working set at a task is *not* its flop
+//! count: while front `i` is assembled, its dense **front storage**
+//! `n_i` (the `nf × nf` frontal matrix) and every child's
+//! **contribution block** `f_c` (the child's `m × m` Schur complement)
+//! are live simultaneously; the front then releases, leaving the
+//! task's own contribution block live until the parent consumes it.
+//! This is the pebble game of the memory-aware tree-scheduling
+//! literature (Liu; Marchal–Sinnen–Vivien; Eyraud-Dubois et al.), and
+//! [`MemWeights`] is its per-task weight vector: `front[i]` words of
+//! front storage, `cb[i]` words of contribution block.
+//!
+//! Weights come from two sources:
+//!
+//! * [`MemWeights::from_symbolic`] — exact words of a real analysis
+//!   (`front = nf²`, `cb = m²`), the numbers
+//!   [`crate::frontal::arena::symbolic_peak_f64s`] replays and the
+//!   [`crate::frontal::FrontArena`] measures;
+//! * [`crate::workload::generator::synthetic_mem_weights`] — a
+//!   calibrated synthetic family for random trees (dense-front scaling
+//!   `mem ∝ flops^{2/3}`).
+
+use anyhow::{ensure, Result};
+
+use crate::model::TaskTree;
+use crate::sparse::AssemblyTree;
+
+/// Per-task memory weights in f64 words: `front[i]` is the dense front
+/// storage live while task `i` executes, `cb[i]` the contribution
+/// block it leaves live until its parent's assembly consumes it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemWeights {
+    pub front: Vec<f64>,
+    pub cb: Vec<f64>,
+}
+
+impl MemWeights {
+    /// Exact weights of a real symbolic analysis: `front = nf²`,
+    /// `cb = m²` with `m = nf − width` (words of f64). The pebble-game
+    /// replay of these weights over the default postorder equals
+    /// [`crate::frontal::arena::symbolic_peak_f64s`] exactly (tested).
+    pub fn from_symbolic(at: &AssemblyTree) -> MemWeights {
+        let mut front = Vec::with_capacity(at.tree.len());
+        let mut cb = Vec::with_capacity(at.tree.len());
+        for sn in &at.symbolic.supernodes {
+            let nf = sn.front_order();
+            let m = nf - sn.width;
+            front.push((nf * nf) as f64);
+            cb.push((m * m) as f64);
+        }
+        MemWeights { front, cb }
+    }
+
+    /// Uniform weights (tests and toy models).
+    pub fn uniform(n: usize, front: f64, cb: f64) -> MemWeights {
+        MemWeights { front: vec![front; n], cb: vec![cb; n] }
+    }
+
+    /// Number of tasks covered.
+    pub fn len(&self) -> usize {
+        self.front.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.front.is_empty()
+    }
+
+    /// Check the weights cover `tree` and satisfy the multifrontal
+    /// invariants: finite, non-negative, and `cb ≤ front` (a
+    /// contribution block is a trailing sub-block of its front).
+    pub fn validate(&self, tree: &TaskTree) -> Result<()> {
+        ensure!(
+            self.front.len() == tree.len() && self.cb.len() == tree.len(),
+            "weights cover {} fronts / {} blocks for a {}-task tree",
+            self.front.len(),
+            self.cb.len(),
+            tree.len()
+        );
+        for i in 0..tree.len() {
+            let (f, c) = (self.front[i], self.cb[i]);
+            ensure!(f.is_finite() && c.is_finite(), "task {i}: non-finite weight");
+            ensure!(f >= 0.0 && c >= 0.0, "task {i}: negative weight ({f}, {c})");
+            ensure!(c <= f, "task {i}: contribution block {c} exceeds front {f}");
+        }
+        Ok(())
+    }
+
+    /// Largest single-task working set `max_i (front_i + cb_i)` — a
+    /// trivial lower bound on any traversal's peak.
+    pub fn min_possible_peak(&self) -> f64 {
+        self.front
+            .iter()
+            .zip(&self.cb)
+            .map(|(f, c)| f + c)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, order, symbolic};
+
+    #[test]
+    fn symbolic_weights_cover_tree_and_validate() {
+        let a = gen::grid_laplacian_2d(10);
+        let perm = order::nested_dissection_2d(10);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let w = MemWeights::from_symbolic(&at);
+        assert_eq!(w.len(), at.tree.len());
+        w.validate(&at.tree).unwrap();
+        // the root front is full-width: no contribution block
+        assert_eq!(w.cb[at.tree.root as usize], 0.0);
+        // fronts are squares of the symbolic front orders
+        for (i, sn) in at.symbolic.supernodes.iter().enumerate() {
+            assert_eq!(w.front[i], (sn.front_order() * sn.front_order()) as f64);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_mismatch_and_bad_values() {
+        let t = TaskTree::from_parents(&[0, 0], &[1.0, 2.0]).unwrap();
+        assert!(MemWeights::uniform(3, 1.0, 0.5).validate(&t).is_err());
+        assert!(MemWeights::uniform(2, 1.0, 2.0).validate(&t).is_err()); // cb > front
+        let mut w = MemWeights::uniform(2, 1.0, 0.5);
+        w.front[1] = f64::NAN;
+        assert!(w.validate(&t).is_err());
+        MemWeights::uniform(2, 4.0, 1.0).validate(&t).unwrap();
+    }
+
+    #[test]
+    fn min_possible_peak_is_widest_working_set() {
+        let w = MemWeights { front: vec![9.0, 16.0, 4.0], cb: vec![4.0, 1.0, 4.0] };
+        assert_eq!(w.min_possible_peak(), 17.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! Sequential traversals of the assembly tree and their memory peaks.
+//!
+//! A sequential multifrontal factorization is a *postorder*: each
+//! subtree is processed contiguously, children before their parent.
+//! Different postorders have different peaks — the peak is the maximum,
+//! over the traversal, of the live contribution blocks plus the
+//! current front. Liu's classical result (the working-storage theorem
+//! behind `MA27`-style solvers) gives the exact optimal postorder: at
+//! every node, process the children in **decreasing `P(c) − cb(c)`**,
+//! where `P(c)` is the child subtree's (recursively optimal) peak and
+//! `cb(c)` the residual it leaves behind. [`liu_order`] implements it
+//! iteratively (trees here reach 10⁵+ nodes and 10⁴+ depth);
+//! [`peak`] evaluates any postorder with the same pebble-game
+//! arithmetic as [`crate::frontal::arena::symbolic_peak_f64s`], so the
+//! default-order peak of symbolic weights reproduces that prediction
+//! exactly.
+
+use crate::model::TaskTree;
+
+use super::model::MemWeights;
+
+/// Peak live words of the pebble game along `order` (a postorder of
+/// `tree`): per task, the front goes live over the children's
+/// still-live contribution blocks, the children blocks release during
+/// assembly, the task's own block goes live, and the front releases.
+/// With [`MemWeights::from_symbolic`] weights and the default
+/// `topo_up` order this equals `symbolic_peak_f64s` exactly (same
+/// arithmetic, tested).
+///
+/// Panics if `order` is not a postorder permutation of the tree.
+pub fn peak(tree: &TaskTree, w: &MemWeights, order: &[u32]) -> f64 {
+    let n = tree.len();
+    assert_eq!(order.len(), n, "order must cover every task");
+    let mut pos = vec![usize::MAX; n];
+    for (i, &v) in order.iter().enumerate() {
+        assert!(pos[v as usize] == usize::MAX, "task {v} repeated in order");
+        pos[v as usize] = i;
+    }
+    for (i, node) in tree.nodes.iter().enumerate() {
+        for &c in &node.children {
+            assert!(
+                pos[c as usize] < pos[i],
+                "not a postorder: child {c} after parent {i}"
+            );
+        }
+    }
+
+    let mut live = 0.0f64;
+    let mut pk = 0.0f64;
+    for &v in order {
+        let vi = v as usize;
+        live += w.front[vi];
+        pk = pk.max(live);
+        for &c in &tree.nodes[vi].children {
+            live -= w.cb[c as usize];
+        }
+        live += w.cb[vi];
+        pk = pk.max(live);
+        live -= w.front[vi];
+    }
+    pk
+}
+
+/// Per-node sorted child lists and subtree peaks of the Liu-optimal
+/// traversal (shared core of [`liu_order`] / [`subtree_peaks`]).
+fn liu_plan(tree: &TaskTree, w: &MemWeights) -> (Vec<f64>, Vec<Vec<u32>>) {
+    let n = tree.len();
+    let mut p = vec![0.0f64; n];
+    let mut kids: Vec<Vec<u32>> = tree.nodes.iter().map(|nd| nd.children.clone()).collect();
+    for &v in &tree.topo_up() {
+        let vi = v as usize;
+        // Liu's theorem: decreasing P − cb minimizes the sequential
+        // peak over all child orders (ties broken by id: deterministic)
+        kids[vi].sort_by(|&a, &b| {
+            let ka = p[a as usize] - w.cb[a as usize];
+            let kb = p[b as usize] - w.cb[b as usize];
+            kb.total_cmp(&ka).then(a.cmp(&b))
+        });
+        let mut residual = 0.0f64;
+        let mut pk = 0.0f64;
+        for &c in &kids[vi] {
+            pk = pk.max(residual + p[c as usize]);
+            residual += w.cb[c as usize];
+        }
+        // assembly: all children blocks + own front; then front + own block
+        pk = pk.max(residual + w.front[vi]);
+        pk = pk.max(w.front[vi] + w.cb[vi]);
+        p[vi] = pk;
+    }
+    (p, kids)
+}
+
+/// Liu's exact optimal sequential postorder for peak-memory
+/// minimization: children at every node in decreasing `P(c) − cb(c)`.
+/// `peak(tree, w, &liu_order(..))` is minimal over all postorders — in
+/// particular ≤ the default `topo_up` order's peak (property-tested).
+pub fn liu_order(tree: &TaskTree, w: &MemWeights) -> Vec<u32> {
+    let (_, kids) = liu_plan(tree, w);
+    // iterative postorder emission over the sorted child lists
+    let mut order = Vec::with_capacity(tree.len());
+    let mut stack: Vec<(u32, usize)> = vec![(tree.root, 0)];
+    while let Some((v, i)) = stack.last_mut() {
+        let vi = *v as usize;
+        if *i < kids[vi].len() {
+            let c = kids[vi][*i];
+            *i += 1;
+            stack.push((c, 0));
+        } else {
+            order.push(*v);
+            stack.pop();
+        }
+    }
+    order
+}
+
+/// Per-node optimal sequential subtree peaks `P(v)` (the values the
+/// Liu order minimizes; `subtree_peaks(..)[root]` equals
+/// `peak(tree, w, &liu_order(..))` up to float association).
+pub fn subtree_peaks(tree: &TaskTree, w: &MemWeights) -> Vec<f64> {
+    liu_plan(tree, w).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{approx_eq, approx_le};
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+    use crate::workload::generator::{random_tree, synthetic_mem_weights, TreeClass};
+
+    /// Crafted instance where the default order is strictly worse:
+    /// root with leaf children [B, A] where B = (peak 2H, residual H)
+    /// and A = (peak G ≫ H, residual ε). Default processes B first
+    /// (peak H + G); Liu processes A first (peak max(G, ε + 2H)).
+    fn adversarial() -> (TaskTree, MemWeights) {
+        let h = 1000.0;
+        let g = 4.0 * h;
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 1.0, 1.0]).unwrap();
+        let w = MemWeights {
+            front: vec![500.0, h, g], // root, B, A
+            cb: vec![0.0, h, 1.0],
+        };
+        (t, w)
+    }
+
+    #[test]
+    fn liu_strictly_beats_default_on_adversarial_case() {
+        let (t, w) = adversarial();
+        let default = peak(&t, &w, &t.topo_up());
+        let liu = peak(&t, &w, &liu_order(&t, &w));
+        // default: B then A -> peak H + (G + 1) = 5001;
+        // Liu: A then B -> peak max(G + 1, 1 + 2H) = 4001
+        assert_eq!(default, 5001.0);
+        assert_eq!(liu, 4001.0);
+        assert!(liu < default, "liu {liu} !< default {default}");
+        assert!(approx_eq(subtree_peaks(&t, &w)[0], liu, 1e-12));
+    }
+
+    #[test]
+    fn liu_order_is_a_postorder_and_matches_formula() {
+        let mut rng = Rng::new(0x11);
+        for class in [TreeClass::Uniform, TreeClass::Deep, TreeClass::Binary] {
+            let t = random_tree(class, 400, &mut rng);
+            let w = synthetic_mem_weights(&t, &mut rng);
+            let order = liu_order(&t, &w);
+            // `peak` asserts postorder validity internally
+            let evaluated = peak(&t, &w, &order);
+            let formula = subtree_peaks(&t, &w)[t.root as usize];
+            assert!(
+                approx_eq(evaluated, formula, 1e-9),
+                "{class:?}: evaluated {evaluated} vs formula {formula}"
+            );
+        }
+    }
+
+    #[test]
+    fn liu_never_worse_than_default_randomized() {
+        check(
+            Config { cases: 40, seed: 0x417 },
+            "Liu peak <= default postorder peak",
+            |rng: &mut Rng| {
+                let classes = [
+                    TreeClass::Uniform,
+                    TreeClass::Recent,
+                    TreeClass::Deep,
+                    TreeClass::Binary,
+                ];
+                let class = classes[rng.below(4)];
+                let n = rng.range(2, 300);
+                let t = random_tree(class, n, rng);
+                let w = synthetic_mem_weights(&t, rng);
+                (t, w)
+            },
+            |(t, w)| {
+                let default = peak(t, w, &t.topo_up());
+                let liu = peak(t, w, &liu_order(t, w));
+                if !approx_le(liu, default, 1e-9) {
+                    return Err(format!("liu {liu} > default {default}"));
+                }
+                if liu < w.min_possible_peak() - 1e-9 {
+                    return Err(format!(
+                        "liu {liu} below the widest working set {}",
+                        w.min_possible_peak()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn default_order_reproduces_symbolic_peak_exactly() {
+        use crate::frontal::arena::symbolic_peak_f64s;
+        use crate::mem::MemWeights;
+        use crate::sparse::{gen, order, symbolic};
+        for (k, amalg) in [(8usize, 0usize), (10, 4)] {
+            let a = gen::grid_laplacian_2d(k);
+            let perm = order::nested_dissection_2d(k);
+            let at = symbolic::analyze(&a, &perm, amalg).unwrap();
+            let w = MemWeights::from_symbolic(&at);
+            let got = peak(&at.tree, &w, &at.tree.topo_up());
+            assert_eq!(got, symbolic_peak_f64s(&at) as f64, "grid {k} amalg {amalg}");
+        }
+    }
+
+    #[test]
+    fn liu_improves_or_ties_symbolic_trees() {
+        use crate::sparse::{gen, order, symbolic};
+        let a = gen::grid_laplacian_3d(8);
+        let perm = order::nested_dissection_3d(8);
+        let at = symbolic::analyze(&a, &perm, 4).unwrap();
+        let w = MemWeights::from_symbolic(&at);
+        let default = peak(&at.tree, &w, &at.tree.topo_up());
+        let liu = peak(&at.tree, &w, &liu_order(&at.tree, &w));
+        assert!(approx_le(liu, default, 1e-12), "liu {liu} > default {default}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a postorder")]
+    fn peak_rejects_non_postorder() {
+        let t = TaskTree::from_parents(&[0, 0], &[1.0, 1.0]).unwrap();
+        let w = MemWeights::uniform(2, 1.0, 0.5);
+        peak(&t, &w, &[0, 1]); // root before its child
+    }
+
+    #[test]
+    fn deep_chain_no_stack_overflow() {
+        let n = 100_000;
+        let parents: Vec<usize> = (0..n).map(|i| i.saturating_sub(1)).collect();
+        let lens = vec![1.0; n];
+        let t = TaskTree::from_parents(&parents, &lens).unwrap();
+        let w = MemWeights::uniform(n, 4.0, 1.0);
+        let order = liu_order(&t, &w);
+        assert_eq!(order.len(), n);
+        // chain: one front + one child block at a time
+        assert_eq!(peak(&t, &w, &order), 5.0);
+    }
+}

@@ -64,6 +64,14 @@ impl Profile {
         self.steps.iter().map(|s| s.p).fold(0.0, f64::max)
     }
 
+    /// Min processors over all steps — the constant platform the
+    /// `Agreg` ≥ 1-processor guarantee must be proved against when a
+    /// step profile varies over time (every instant then has at least
+    /// this many processors).
+    pub fn min_p(&self) -> f64 {
+        self.steps.iter().map(|s| s.p).fold(f64::INFINITY, f64::min)
+    }
+
     /// Time points where `p(t)` changes, strictly increasing.
     pub fn breakpoints(&self) -> Vec<f64> {
         let mut out = Vec::new();
@@ -160,7 +168,9 @@ mod tests {
         assert_eq!(pr.at(2.5), 5.0);
         assert_eq!(pr.at(100.0), 5.0); // last step persists
         assert_eq!(pr.max_p(), 5.0);
+        assert_eq!(pr.min_p(), 3.0);
         assert_eq!(pr.breakpoints(), vec![2.0]);
+        assert_eq!(Profile::constant(4.0).min_p(), 4.0);
     }
 
     #[test]

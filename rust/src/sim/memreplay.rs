@@ -1,0 +1,396 @@
+//! DES memory replay: live words over time for any [`Schedule`].
+//!
+//! Replays a materialized schedule's spans against per-task
+//! [`MemWeights`] with the multifrontal pebble-game semantics: at a
+//! task's start its front goes live, the children's contribution
+//! blocks (live since *their* starts) release during assembly, and the
+//! task's own block goes live; at its finish the front releases, the
+//! block surviving until the parent's start. The micro-step order
+//! within a start matches [`crate::frontal::FrontArena`]'s
+//! `begin_front → release children → alloc_block` sequence, so
+//! replaying a fully serialized postorder reproduces the
+//! arena-measured / `symbolic_peak_f64s` peak **exactly** (tested on a
+//! real factorization).
+//!
+//! With a cap, the replay becomes a frozen-duration rescheduler: a
+//! task becomes *eligible* at `max(schedule start, last child
+//! finish)` and is admitted FIFO (in schedule-start order) only when
+//! both of its start transients fit under the cap; otherwise it
+//! stalls until a completion frees memory. When nothing is running
+//! and the head task still does not fit, it is force-started (counted
+//! in [`MemReplay::forced`]) so an infeasibly small cap degrades into
+//! a measured violation instead of a deadlock.
+
+use std::collections::BinaryHeap;
+
+use crate::mem::MemWeights;
+use crate::model::TaskTree;
+use crate::sched::{Schedule, TaskSpan};
+
+/// Result of a memory replay.
+#[derive(Debug, Clone)]
+pub struct MemReplay {
+    /// Peak live words over the replay.
+    pub peak: f64,
+    /// Completion time of the last task.
+    pub makespan: f64,
+    /// Total cap-induced start delay summed over tasks.
+    pub stall_time: f64,
+    /// Tasks whose start was delayed by the cap.
+    pub stalled_tasks: usize,
+    /// Force-started tasks (cap too small even with nothing running).
+    pub forced: usize,
+    /// Events processed (starts + finishes).
+    pub events: usize,
+    /// `(time, live_words)` after every change, time-ordered.
+    pub timeline: Vec<(f64, f64)>,
+}
+
+/// Min-heap entry `(time, rank, task)`: finishes (rank 0) before
+/// releases (rank 1) at equal times, releases before admissions.
+#[derive(PartialEq)]
+struct Ev(f64, u8, u32);
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap
+        other
+            .0
+            .total_cmp(&self.0)
+            .then(other.1.cmp(&self.1))
+            .then(other.2.cmp(&self.2))
+    }
+}
+
+/// Build global-timeline spans from per-task completion times (e.g. a
+/// [`crate::sim::DistDesResult`]'s `completion` vector): a task's span
+/// starts when its last child completes — exactly the static-share DES
+/// semantics — and finishes at its recorded completion. This is how a
+/// *distributed* schedule is replayed for memory: per-node schedules
+/// live on node-local timelines, but the DES completion times are
+/// global.
+pub fn spans_from_completions(tree: &TaskTree, completion: &[f64]) -> Vec<TaskSpan> {
+    assert_eq!(completion.len(), tree.len());
+    tree.nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| {
+            let start = node
+                .children
+                .iter()
+                .map(|&c| completion[c as usize])
+                .fold(0.0f64, f64::max);
+            TaskSpan {
+                task: i as u32,
+                start,
+                finish: completion[i].max(start),
+                ratio: 1.0,
+            }
+        })
+        .collect()
+}
+
+/// Replay `schedule`'s live words over time; `cap` (words) enables the
+/// stalling rescheduler. Tasks missing from the schedule are treated
+/// as zero-duration at `t = 0`.
+pub fn replay_memory(
+    tree: &TaskTree,
+    w: &MemWeights,
+    schedule: &Schedule,
+    cap: Option<f64>,
+) -> MemReplay {
+    replay_memory_spans(tree, w, &schedule.spans, cap)
+}
+
+/// [`replay_memory`] over raw spans (the distributed path pairs this
+/// with [`spans_from_completions`]).
+pub fn replay_memory_spans(
+    tree: &TaskTree,
+    w: &MemWeights,
+    spans: &[TaskSpan],
+    cap: Option<f64>,
+) -> MemReplay {
+    let n = tree.len();
+    debug_assert!(w.front.len() == n && w.cb.len() == n);
+    let mut sched_start = vec![0.0f64; n];
+    let mut dur = vec![0.0f64; n];
+    for s in spans {
+        let t = s.task as usize;
+        if t < n {
+            sched_start[t] = s.start.max(0.0);
+            dur[t] = (s.finish - s.start).max(0.0);
+        }
+    }
+    // dispatch priority: schedule start, tie-broken children-first.
+    // Starts are clamped non-negative, so their IEEE bit patterns sort
+    // numerically and a BTreeSet key gives O(log n) queue ops (wide
+    // trees release thousands of tasks at once).
+    let mut topo_pos = vec![0usize; n];
+    for (i, &v) in tree.topo_up().iter().enumerate() {
+        topo_pos[v as usize] = i;
+    }
+    let prio_key = |v: u32| (sched_start[v as usize].to_bits(), topo_pos[v as usize], v);
+    let child_cb_sum: Vec<f64> = tree
+        .nodes
+        .iter()
+        .map(|nd| nd.children.iter().map(|&c| w.cb[c as usize]).sum())
+        .collect();
+
+    let mut unfinished: Vec<usize> = tree.nodes.iter().map(|t| t.children.len()).collect();
+    let mut child_done = vec![0.0f64; n]; // latest child finish
+    let mut eligible_at = vec![0.0f64; n];
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(2 * n);
+    // admission queue ordered by dispatch priority
+    let mut ready: std::collections::BTreeSet<(u64, usize, u32)> = std::collections::BTreeSet::new();
+    for v in 0..n as u32 {
+        if unfinished[v as usize] == 0 {
+            heap.push(Ev(sched_start[v as usize], 1, v));
+        }
+    }
+
+    let mut live = 0.0f64;
+    let mut peak = 0.0f64;
+    let mut running = 0usize;
+    let mut makespan = 0.0f64;
+    let (mut stall_time, mut stalled_tasks, mut forced, mut events) = (0.0, 0usize, 0usize, 0);
+    let mut timeline: Vec<(f64, f64)> = Vec::new();
+
+    while let Some(Ev(t, rank, v)) = heap.pop() {
+        match rank {
+            0 => {
+                // finish: the front releases, the block stays
+                live -= w.front[v as usize];
+                timeline.push((t, live));
+                running -= 1;
+                makespan = makespan.max(t);
+                events += 1;
+                if let Some(parent) = tree.nodes[v as usize].parent {
+                    let pi = parent as usize;
+                    unfinished[pi] -= 1;
+                    child_done[pi] = child_done[pi].max(t);
+                    if unfinished[pi] == 0 {
+                        let rel = sched_start[pi].max(child_done[pi]);
+                        heap.push(Ev(rel, 1, parent));
+                    }
+                }
+            }
+            _ => {
+                // release: the task joins the ready set at its priority
+                eligible_at[v as usize] = t;
+                ready.insert(prio_key(v));
+            }
+        }
+        // drain events sharing this timestamp before admitting
+        if heap.peek().is_some_and(|e| e.0 == t) {
+            continue;
+        }
+        // FIFO admission in priority order
+        while let Some(&(_, _, v)) = ready.first() {
+            let vi = v as usize;
+            // start transients: +front (children blocks still live),
+            // then −children blocks +own block
+            let t1 = live + w.front[vi];
+            let t2 = t1 - child_cb_sum[vi] + w.cb[vi];
+            let admit = match cap {
+                None => true,
+                Some(m) => t1 <= m && t2 <= m,
+            };
+            if !admit && running > 0 {
+                break; // no bypass: wait for a completion
+            }
+            if !admit {
+                forced += 1;
+            }
+            ready.pop_first();
+            let stall = t - eligible_at[vi];
+            if stall > 1e-12 * t.abs().max(1.0) {
+                stall_time += stall;
+                stalled_tasks += 1;
+            }
+            live += w.front[vi];
+            peak = peak.max(live);
+            timeline.push((t, live));
+            live -= child_cb_sum[vi];
+            live += w.cb[vi];
+            peak = peak.max(live);
+            timeline.push((t, live));
+            running += 1;
+            events += 1;
+            heap.push(Ev(t + dur[vi], 0, v));
+        }
+    }
+    MemReplay {
+        peak,
+        makespan,
+        stall_time,
+        stalled_tasks,
+        forced,
+        events,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontal::arena::symbolic_peak_f64s;
+    use crate::frontal::multifrontal::{factorize_with_arena, residual};
+    use crate::frontal::{FrontArena, RustBackend};
+    use crate::mem::{bounded_schedule, liu_order, peak as order_peak};
+    use crate::sched::{PmSchedule, Profile};
+    use crate::sim::des::{simulate, simulate_distributed, Policy};
+    use crate::sparse::{gen, order, symbolic};
+    use crate::util::{approx_eq, approx_le};
+
+    /// Serialize `order` into back-to-back unit spans.
+    fn serial_schedule(order: &[u32]) -> Schedule {
+        Schedule::new(
+            order
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| TaskSpan {
+                    task: v,
+                    start: i as f64,
+                    finish: (i + 1) as f64,
+                    ratio: 1.0,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn serial_postorder_replay_pins_arena_measured_peak() {
+        // the tentpole loop-closer: DES memory replay of the serial
+        // postorder == FrontArena measured peak == symbolic prediction,
+        // on real factorized grid problems (exact, not approximate)
+        for (k, amalg) in [(8usize, 0usize), (10, 4)] {
+            let a = gen::grid_laplacian_2d(k);
+            let perm = order::nested_dissection_2d(k);
+            let at = symbolic::analyze(&a, &perm, amalg).unwrap();
+            let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+            let mut arena = FrontArena::for_tree(&at);
+            let f = factorize_with_arena(&at, &ap, &RustBackend, &mut arena).unwrap();
+            assert!(residual(&at, &ap, &f) < 1e-12);
+
+            let w = crate::mem::MemWeights::from_symbolic(&at);
+            let replay =
+                replay_memory(&at.tree, &w, &serial_schedule(&at.tree.topo_up()), None);
+            assert_eq!(replay.peak, arena.peak_f64s() as f64, "grid {k} amalg {amalg}");
+            assert_eq!(replay.peak, symbolic_peak_f64s(&at) as f64);
+            assert_eq!(replay.stalled_tasks, 0);
+            assert_eq!(replay.forced, 0);
+            // and the traversal evaluator agrees with the replay
+            assert_eq!(
+                order_peak(&at.tree, &w, &at.tree.topo_up()),
+                replay.peak
+            );
+        }
+    }
+
+    #[test]
+    fn liu_serial_replay_matches_traversal_peak() {
+        let a = gen::grid_laplacian_3d(6);
+        let perm = order::nested_dissection_3d(6);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let w = crate::mem::MemWeights::from_symbolic(&at);
+        let liu = liu_order(&at.tree, &w);
+        let replay = replay_memory(&at.tree, &w, &serial_schedule(&liu), None);
+        assert_eq!(replay.peak, order_peak(&at.tree, &w, &liu));
+    }
+
+    #[test]
+    fn pm_replay_peak_between_serial_optimum_and_parallel_sum() {
+        let a = gen::grid_laplacian_2d(12);
+        let perm = order::nested_dissection_2d(12);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let w = crate::mem::MemWeights::from_symbolic(&at);
+        let pm = PmSchedule::for_tree(&at.tree, 0.9, &Profile::constant(8.0));
+        let r = replay_memory(&at.tree, &w, &pm.schedule, None);
+        // the widest single working set is live at some instant; the
+        // total of all working sets bounds any concurrency from above
+        assert!(r.peak >= w.min_possible_peak());
+        let sum: f64 = w.front.iter().zip(&w.cb).map(|(f, c)| f + c).sum();
+        assert!(r.peak <= sum);
+        // full tree parallelism costs more memory than the optimal
+        // serial traversal on this grid (all leaves live at t = 0)
+        let liu = order_peak(&at.tree, &w, &liu_order(&at.tree, &w));
+        assert!(r.peak > 0.0 && liu > 0.0);
+        assert!(approx_eq(r.makespan, pm.schedule.makespan, 1e-9));
+        assert_eq!(r.events, 2 * at.tree.len());
+    }
+
+    #[test]
+    fn cap_induces_stalls_but_never_violations_when_feasible() {
+        // wide star: the unbounded PM schedule runs all leaves at once
+        let n = 9;
+        let parents = vec![0usize; n];
+        let lens: Vec<f64> = (0..n).map(|i| 4.0 + i as f64).collect();
+        let t = TaskTree::from_parents(&parents, &lens).unwrap();
+        let mut w = crate::mem::MemWeights::uniform(n, 50.0, 5.0);
+        w.cb[0] = 0.0;
+        let pm = PmSchedule::for_tree(&t, 0.8, &Profile::constant(8.0));
+        let unbounded = replay_memory(&t, &w, &pm.schedule, None);
+        assert!(unbounded.peak > 200.0); // 8 concurrent leaves
+        // cap at 3 concurrent working sets: must stall, never exceed
+        let cap = 170.0;
+        let capped = replay_memory(&t, &w, &pm.schedule, Some(cap));
+        assert!(capped.stalled_tasks > 0);
+        assert_eq!(capped.forced, 0);
+        assert!(capped.peak <= cap + 1e-9, "peak {} over cap", capped.peak);
+        assert!(capped.makespan > unbounded.makespan);
+        // infeasibly small cap: forced starts, bounded violation count
+        let absurd = replay_memory(&t, &w, &pm.schedule, Some(10.0));
+        assert!(absurd.forced > 0);
+        assert!(absurd.peak >= 55.0);
+    }
+
+    #[test]
+    fn bounded_schedule_replay_respects_its_cap_under_gating() {
+        let a = gen::grid_laplacian_2d(10);
+        let perm = order::nested_dissection_2d(10);
+        let at = symbolic::analyze(&a, &perm, 2).unwrap();
+        let w = crate::mem::MemWeights::from_symbolic(&at);
+        let profile = Profile::constant(8.0);
+        let unb = bounded_schedule(&at.tree, &w, 0.9, &profile, f64::INFINITY);
+        let cap = 0.6 * unb.planned_peak;
+        let b = bounded_schedule(&at.tree, &w, 0.9, &profile, cap);
+        assert!(b.feasible);
+        // hair of slack on the gate: the replay's live accumulates in a
+        // different float association than the plan's bound
+        let r = replay_memory(&at.tree, &w, &b.schedule, Some(cap * (1.0 + 1e-9)));
+        assert!(approx_le(r.peak, cap, 1e-9), "peak {} over cap {cap}", r.peak);
+        assert_eq!(r.forced, 0);
+        assert_eq!(r.stalled_tasks, 0, "planned schedule should never hit the gate");
+    }
+
+    #[test]
+    fn distributed_completions_replay_matches_shared_on_one_node() {
+        let t = TaskTree::from_parents(&[0, 0, 0, 1, 1], &[6.0, 7.0, 8.0, 9.0, 10.0]).unwrap();
+        let w = crate::mem::MemWeights::uniform(5, 12.0, 3.0);
+        let plat = crate::model::Platform::Shared { p: 6.0 };
+        let dd = simulate_distributed(&t, 0.9, &plat, &[0; 5], Policy::Pm);
+        let sd = simulate(&t, 0.9, 6.0, Policy::Pm);
+        let from_dist =
+            replay_memory_spans(&t, &w, &spans_from_completions(&t, &dd.completion), None);
+        let from_shared =
+            replay_memory_spans(&t, &w, &spans_from_completions(&t, &sd.completion), None);
+        assert_eq!(from_dist.peak.to_bits(), from_shared.peak.to_bits());
+        assert_eq!(from_dist.events, from_shared.events);
+    }
+
+    #[test]
+    fn missing_tasks_are_tolerated_as_zero_duration() {
+        let t = TaskTree::from_parents(&[0, 0], &[1.0, 2.0]).unwrap();
+        let w = crate::mem::MemWeights::uniform(2, 8.0, 2.0);
+        let s = Schedule::new(vec![TaskSpan { task: 1, start: 0.0, finish: 1.0, ratio: 1.0 }]);
+        let r = replay_memory(&t, &w, &s, None);
+        // leaf runs [0,1); root (missing) starts at its child's finish
+        assert_eq!(r.peak, 10.0);
+        assert!(approx_eq(r.makespan, 1.0, 1e-12));
+    }
+}

@@ -14,10 +14,15 @@
 //! The DES also has a distributed mode
 //! ([`des::simulate_distributed`], paper §6): per-node static-share
 //! schedules over a task→node mapping, with cross-node dependency
-//! stalls (DESIGN.md §11).
+//! stalls (DESIGN.md §11), and a **memory replay** mode
+//! ([`memreplay`], DESIGN.md §12) that tracks live words over time for
+//! any materialized schedule — shared or distributed — reporting peak,
+//! timeline and cap-induced stalls against [`crate::mem::MemWeights`].
 
 pub mod des;
 pub mod kerneldag;
+pub mod memreplay;
 
 pub use des::{simulate, simulate_distributed, DesResult, DistDesResult, Policy};
 pub use kerneldag::{simulate_dag, timing_curve, KernelDag, MachineModel};
+pub use memreplay::{replay_memory, replay_memory_spans, spans_from_completions, MemReplay};

@@ -128,6 +128,30 @@ pub fn root_shape_mix(pairs: usize, c: f64, chain_len: usize, leaves: usize) -> 
     TaskTree::from_parents(&parents, &lens).unwrap()
 }
 
+/// Synthetic per-task memory weights for a random tree, calibrated to
+/// dense-front scaling: a front doing `L` flops is roughly `n × n`
+/// with `L ∝ n³`, so its storage scales as `L^{2/3}` (jittered
+/// log-normally). The contribution block is a random trailing
+/// sub-block (`cb ≤ front`); the root keeps none, matching the
+/// multifrontal root front (`m = 0`). This is the synthetic
+/// counterpart of [`crate::mem::MemWeights::from_symbolic`] for trees
+/// that did not come from a real analysis.
+pub fn synthetic_mem_weights(tree: &TaskTree, rng: &mut Rng) -> crate::mem::MemWeights {
+    let n = tree.len();
+    let mut front = Vec::with_capacity(n);
+    let mut cb = Vec::with_capacity(n);
+    for (i, node) in tree.nodes.iter().enumerate() {
+        let f = node.len.max(1e-9).powf(2.0 / 3.0) * rng.log_normal(0.0, 0.3);
+        front.push(f);
+        cb.push(if i as u32 == tree.root {
+            0.0
+        } else {
+            f * rng.range_f64(0.1, 0.8)
+        });
+    }
+    crate::mem::MemWeights { front, cb }
+}
+
 /// Analysis trees of in-repo sparse problems (the "real" subset).
 pub fn analysis_trees(rng: &mut Rng) -> Vec<(String, TaskTree)> {
     let mut out = Vec::new();
@@ -240,6 +264,21 @@ mod tests {
         }
         // root carries one branch's worth of work itself
         assert_eq!(t.nodes[t.root as usize].len, 8.0);
+    }
+
+    #[test]
+    fn synthetic_mem_weights_are_valid_and_scale_with_length() {
+        let mut rng = Rng::new(0x3E3);
+        let t = random_tree(TreeClass::Uniform, 800, &mut rng);
+        let w = synthetic_mem_weights(&t, &mut rng);
+        w.validate(&t).unwrap();
+        assert_eq!(w.cb[t.root as usize], 0.0);
+        // heavier tasks carry more memory on average (2/3-power law)
+        let mut idx: Vec<usize> = (0..t.len()).collect();
+        idx.sort_by(|&a, &b| t.nodes[a].len.total_cmp(&t.nodes[b].len));
+        let q = t.len() / 4;
+        let mean = |ix: &[usize]| ix.iter().map(|&i| w.front[i]).sum::<f64>() / ix.len() as f64;
+        assert!(mean(&idx[t.len() - q..]) > 2.0 * mean(&idx[..q]));
     }
 
     #[test]

@@ -16,10 +16,13 @@
 //!   log-normally distributed task lengths.
 //!
 //! [`trace`] serializes trees to a dependency-free text format so
-//! datasets are reproducible artifacts.
+//! datasets are reproducible artifacts; the v2 extension carries the
+//! per-task memory weights of [`crate::mem::MemWeights`]
+//! ([`generator::synthetic_mem_weights`] produces the synthetic
+//! family for random trees).
 
 pub mod generator;
 pub mod trace;
 
-pub use generator::{dataset, DatasetSpec, TreeClass};
-pub use trace::{read_tree, write_tree};
+pub use generator::{dataset, synthetic_mem_weights, DatasetSpec, TreeClass};
+pub use trace::{read_tree, read_tree_mem, write_tree, write_tree_mem};

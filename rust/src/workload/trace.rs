@@ -6,17 +6,29 @@
 //! <parent_0> <len_0>
 //! ...
 //! ```
-//! `parent_i == i` marks the root. Deterministic float formatting keeps
-//! traces diff-stable across runs.
+//! `parent_i == i` marks the root. The v2 extension appends the
+//! per-task memory weights of [`crate::mem::MemWeights`]:
+//!
+//! ```text
+//! # malltree tree v2 (parent len front cb)
+//! <n>
+//! <parent_0> <len_0> <front_0> <cb_0>
+//! ...
+//! ```
+//! Column counts must be consistent across lines; v1 readers
+//! ([`parse_tree`]) accept v2 files and ignore the weights.
+//! Deterministic float formatting keeps traces diff-stable across
+//! runs.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::mem::MemWeights;
 use crate::model::TaskTree;
 
-/// Write `tree` to `path`.
+/// Write `tree` to `path` (v1: no memory weights).
 pub fn write_tree(tree: &TaskTree, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
@@ -30,15 +42,45 @@ pub fn write_tree(tree: &TaskTree, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Read a tree from `path`.
-pub fn read_tree(path: &Path) -> Result<TaskTree> {
-    let f = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
-    parse_tree(std::io::BufReader::new(f))
+/// Write `tree` with its per-task memory weights to `path` (v2).
+pub fn write_tree_mem(tree: &TaskTree, mem: &MemWeights, path: &Path) -> Result<()> {
+    mem.validate(tree)?;
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# malltree tree v2 (parent len front cb)")?;
+    writeln!(w, "{}", tree.len())?;
+    for (i, node) in tree.nodes.iter().enumerate() {
+        let parent = node.parent.map(|p| p as usize).unwrap_or(i);
+        writeln!(
+            w,
+            "{} {:e} {:e} {:e}",
+            parent, node.len, mem.front[i], mem.cb[i]
+        )?;
+    }
+    Ok(())
 }
 
-/// Parse the trace format from any reader.
+/// Read a tree from `path`, ignoring memory weights if present.
+pub fn read_tree(path: &Path) -> Result<TaskTree> {
+    read_tree_mem(path).map(|(t, _)| t)
+}
+
+/// Read a tree and, when the trace is v2, its memory weights.
+pub fn read_tree_mem(path: &Path) -> Result<(TaskTree, Option<MemWeights>)> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    parse_tree_mem(std::io::BufReader::new(f))
+}
+
+/// Parse the trace format from any reader, ignoring memory weights.
 pub fn parse_tree<R: BufRead>(reader: R) -> Result<TaskTree> {
+    parse_tree_mem(reader).map(|(t, _)| t)
+}
+
+/// Parse the trace format, returning memory weights for v2 traces
+/// (`None` for v1). Column counts must be consistent across lines.
+pub fn parse_tree_mem<R: BufRead>(reader: R) -> Result<(TaskTree, Option<MemWeights>)> {
     let mut lines = reader
         .lines()
         .map(|l| l.map_err(anyhow::Error::from))
@@ -54,6 +96,9 @@ pub fn parse_tree<R: BufRead>(reader: R) -> Result<TaskTree> {
         .context("bad node count")?;
     let mut parents = Vec::with_capacity(n);
     let mut lens = Vec::with_capacity(n);
+    let mut front = Vec::with_capacity(n);
+    let mut cb = Vec::with_capacity(n);
+    let mut has_mem: Option<bool> = None;
     for i in 0..n {
         let line = lines
             .next()
@@ -63,24 +108,58 @@ pub fn parse_tree<R: BufRead>(reader: R) -> Result<TaskTree> {
         let len: f64 = it.next().context("missing length")?.parse()?;
         parents.push(parent);
         lens.push(len);
+        let mem_cols = match (it.next(), it.next()) {
+            (None, _) => false,
+            (Some(f), Some(c)) => {
+                front.push(f.parse::<f64>().with_context(|| format!("bad front, node {i}"))?);
+                cb.push(c.parse::<f64>().with_context(|| format!("bad cb, node {i}"))?);
+                true
+            }
+            (Some(_), None) => bail!("node {i}: expected `parent len [front cb]`"),
+        };
+        match has_mem {
+            None => has_mem = Some(mem_cols),
+            Some(h) if h != mem_cols => {
+                bail!("node {i}: inconsistent column count (mixed v1/v2 lines)")
+            }
+            _ => {}
+        }
+        if it.next().is_some() {
+            bail!("node {i}: trailing columns beyond `parent len front cb`");
+        }
     }
     if lines.next().is_some() {
         bail!("trailing data after {n} nodes");
     }
-    TaskTree::from_parents(&parents, &lens)
+    let tree = TaskTree::from_parents(&parents, &lens)?;
+    let mem = if has_mem == Some(true) {
+        let m = MemWeights { front, cb };
+        m.validate(&tree)?;
+        Some(m)
+    } else {
+        None
+    };
+    Ok((tree, mem))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+    use crate::workload::generator::{random_tree, synthetic_mem_weights, TreeClass};
     use std::io::Cursor;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("malltree_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
 
     #[test]
     fn round_trip() {
         let t = TaskTree::from_parents(&[0, 0, 0, 1], &[1.5, 2.25, 0.001, 1e9]).unwrap();
-        let dir = std::env::temp_dir().join("malltree_trace_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t.tree");
+        let path = tmp("t.tree");
         write_tree(&t, &path).unwrap();
         let back = read_tree(&path).unwrap();
         assert_eq!(back.len(), 4);
@@ -91,11 +170,86 @@ mod tests {
     }
 
     #[test]
+    fn round_trip_randomized_v1_and_v2() {
+        // the satellite property: write → parse recovers structure,
+        // lengths and (v2) memory weights across random trees
+        check(
+            Config { cases: 12, seed: 0x77ACE },
+            "trace round-trip (v1 + v2)",
+            |rng: &mut Rng| {
+                let classes = [TreeClass::Uniform, TreeClass::Deep, TreeClass::Binary];
+                let t = random_tree(classes[rng.below(3)], rng.range(2, 200), rng);
+                let w = synthetic_mem_weights(&t, rng);
+                let tag = rng.next_u64();
+                (t, w, tag)
+            },
+            |(t, w, tag)| {
+                let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(1.0);
+                // v1
+                let p1 = tmp(&format!("prop_v1_{tag}.tree"));
+                write_tree(t, &p1).map_err(|e| e.to_string())?;
+                let (t1, m1) = read_tree_mem(&p1).map_err(|e| e.to_string())?;
+                if m1.is_some() {
+                    return Err("v1 trace produced weights".into());
+                }
+                // v2
+                let p2 = tmp(&format!("prop_v2_{tag}.tree"));
+                write_tree_mem(t, w, &p2).map_err(|e| e.to_string())?;
+                let (t2, m2) = read_tree_mem(&p2).map_err(|e| e.to_string())?;
+                let m2 = m2.ok_or("v2 trace lost its weights")?;
+                for (back, orig) in [(&t1, t), (&t2, t)] {
+                    if back.len() != orig.len() {
+                        return Err("node count changed".into());
+                    }
+                    for (a, b) in back.nodes.iter().zip(&orig.nodes) {
+                        if a.parent != b.parent || !close(a.len, b.len) {
+                            return Err("structure or length changed".into());
+                        }
+                    }
+                }
+                for i in 0..t.len() {
+                    if !close(m2.front[i], w.front[i]) || !close(m2.cb[i], w.cb[i]) {
+                        return Err(format!("weights changed at task {i}"));
+                    }
+                }
+                // v1 readers accept v2 files
+                let t2v1 = read_tree(&p2).map_err(|e| e.to_string())?;
+                if t2v1.len() != t.len() {
+                    return Err("v1 reader rejected v2 trace".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn parses_with_comments() {
         let text = "# comment\n3\n0 1.0\n# mid comment\n0 2.0\n1 3.0\n";
         let t = parse_tree(Cursor::new(text)).unwrap();
         assert_eq!(t.len(), 3);
         assert_eq!(t.nodes[2].parent, Some(1));
+    }
+
+    #[test]
+    fn parses_v2_weights() {
+        let text = "# malltree tree v2 (parent len front cb)\n2\n0 1.0 16.0 4.0\n0 2.0 9.0 1.0\n";
+        let (t, m) = parse_tree_mem(Cursor::new(text)).unwrap();
+        assert_eq!(t.len(), 2);
+        let m = m.unwrap();
+        assert_eq!(m.front, vec![16.0, 9.0]);
+        assert_eq!(m.cb, vec![4.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_mixed_column_counts() {
+        let text = "2\n0 1.0 16.0 4.0\n0 2.0\n";
+        assert!(parse_tree_mem(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn rejects_three_column_lines() {
+        let text = "1\n0 1.0 16.0\n";
+        assert!(parse_tree_mem(Cursor::new(text)).is_err());
     }
 
     #[test]
