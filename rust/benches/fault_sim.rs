@@ -1,0 +1,235 @@
+//! §Fault harness: fault-tolerant elastic scheduling (DESIGN.md §13).
+//!
+//! Two measurements land in `BENCH_fault.json`:
+//!
+//! * **DES failure replay** — for each tree family × platform size ×
+//!   α × crash lateness, a node crash at `frac · M_ff` (a fraction of
+//!   the fault-free makespan) is replayed under the three recovery
+//!   policies. The per-crash lookahead makes `Best` never worse than
+//!   the restart-from-scratch baseline *by construction* — asserted
+//!   hard on every cell (`best <= restart`). The recovery overhead of
+//!   `Best` over the fault-free makespan is reported per cell; note it
+//!   can be slightly **negative**: a mid-run share re-solve over the
+//!   remaining forest is not bound by the static schedule's
+//!   equal-finish structure once shares fall below the one-core
+//!   speedup kink.
+//! * **self-healing executor** — a real malleable factorization with
+//!   injected transient failures (`FaultPlan`) and elastic crew
+//!   events; the crew retries, re-rounds teams, and must still produce
+//!   a factorization whose residual passes (asserted), with the retry
+//!   count and lost flops reported.
+//!
+//! CI runs a reduced-size smoke (`MALLTREE_BENCH_DIV`) and archives
+//! the JSON artifact.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::dist::{map_tree, MappingStrategy};
+use malltree::exec::{execute_malleable, execute_malleable_faulty, FaultPlan};
+use malltree::frontal::{multifrontal, RustBackend};
+use malltree::metrics::Table;
+use malltree::model::{FaultEvent, FaultKind, FaultTrace, Platform, TaskTree};
+use malltree::sched::{PmSchedule, Profile};
+use malltree::sim::{replay_faults_distributed, Policy, RecoveryPolicy};
+use malltree::sparse::{gen, order, symbolic};
+use malltree::util::rng::Rng;
+use malltree::workload::generator::{random_tree, TreeClass};
+
+struct Cell {
+    key: String,
+    mff: f64,
+    best: f64,
+    remap: f64,
+    restart: f64,
+    overhead_pct: f64,
+    gain_vs_restart_pct: f64,
+    lost_work: f64,
+    remapped: usize,
+    restarted: bool,
+}
+
+fn main() {
+    header("fault_sim", "fault replay + self-healing executor (§Fault)");
+    let scale = env_usize("SCALE", 1).max(1);
+    let div = env_usize("DIV", 1).max(1);
+    let grid2d = (24 * scale / div).max(8);
+    let grid3d = (8 * scale / div).max(4);
+    let rand_n = (3_000 * scale / div).max(200);
+    let lambda = 1.1;
+
+    let mut rng = Rng::new(0xFA17);
+    let mut families: Vec<(String, TaskTree)> = Vec::new();
+    {
+        let a = gen::grid_laplacian_2d(grid2d);
+        let perm = order::nested_dissection_2d(grid2d);
+        let at = symbolic::analyze(&a, &perm, 4).expect("grid2d analysis");
+        families.push((format!("grid2d_{grid2d}"), at.tree));
+    }
+    {
+        let a = gen::grid_laplacian_3d(grid3d);
+        let perm = order::nested_dissection_3d(grid3d);
+        let at = symbolic::analyze(&a, &perm, 4).expect("grid3d analysis");
+        families.push((format!("grid3d_{grid3d}"), at.tree));
+    }
+    for class in [TreeClass::Uniform, TreeClass::Deep] {
+        let t = random_tree(class, rand_n, &mut rng);
+        families.push((format!("rand_{class:?}"), t));
+    }
+
+    let mut table = Table::new(&[
+        "family", "nodes", "alpha", "crash@", "overhead", "best vs restart", "remapped",
+    ]);
+    let mut cells: Vec<Cell> = Vec::new();
+    let (_, replay_secs) = timed(|| {
+        for (name, tree) in &families {
+            for nodes in [2usize, 4] {
+                let platform = Platform::Homogeneous { nodes, p: 8.0 };
+                for alpha in [0.7, 0.9, 1.0] {
+                    let mapping = map_tree(tree, &platform, alpha, MappingStrategy::Pm, lambda);
+                    let run = |trace: &FaultTrace, rec: RecoveryPolicy| {
+                        replay_faults_distributed(
+                            tree, alpha, &platform, &mapping.node_of, Policy::Pm, trace, rec,
+                        )
+                        .expect("fault replay")
+                    };
+                    let mff = run(&FaultTrace::empty(), RecoveryPolicy::Best).makespan;
+                    for frac in [0.25, 0.5, 0.75] {
+                        // crash the last node: under the PM mapping it
+                        // hosts mapped subtrees but never the root chain
+                        // (map_tree pins that to the fastest = first)
+                        let trace = FaultTrace::new(vec![FaultEvent {
+                            time: frac * mff,
+                            kind: FaultKind::Crash { node: nodes - 1 },
+                        }]);
+                        let best = run(&trace, RecoveryPolicy::Best);
+                        let remap = run(&trace, RecoveryPolicy::RemapOnly);
+                        let restart = run(&trace, RecoveryPolicy::RestartOnly);
+                        // the headline robustness guarantee: lookahead
+                        // recovery never loses to restart-from-scratch
+                        assert!(
+                            best.makespan <= restart.makespan * (1.0 + 1e-9),
+                            "{name} nodes={nodes} α={alpha} crash@{frac}: Best \
+                             {} worse than restart {}",
+                            best.makespan,
+                            restart.makespan
+                        );
+                        assert!(
+                            (best.fault_free_makespan - mff).abs() <= 1e-9 * mff,
+                            "{name}: fault-free reference drifted"
+                        );
+                        let overhead_pct = 100.0 * best.recovery_overhead() / mff;
+                        let gain_vs_restart_pct =
+                            100.0 * (restart.makespan - best.makespan) / restart.makespan;
+                        table.row(&[
+                            name.clone(),
+                            format!("{nodes}"),
+                            format!("{alpha:.2}"),
+                            format!("{frac:.2}"),
+                            format!("{overhead_pct:+.2}%"),
+                            format!("{gain_vs_restart_pct:+.2}%"),
+                            format!(
+                                "{}{}",
+                                best.remapped_subtrees,
+                                if best.restarted { " (restart)" } else { "" }
+                            ),
+                        ]);
+                        cells.push(Cell {
+                            key: format!("{name}_n{nodes}_a{alpha:.2}_f{frac:.2}"),
+                            mff,
+                            best: best.makespan,
+                            remap: remap.makespan,
+                            restart: restart.makespan,
+                            overhead_pct,
+                            gain_vs_restart_pct,
+                            lost_work: best.lost_work,
+                            remapped: best.remapped_subtrees,
+                            restarted: best.restarted,
+                        });
+                    }
+                }
+            }
+        }
+    });
+    print!("{}", table.render());
+    println!("replayed {} cells in {replay_secs:.2}s", cells.len());
+
+    // self-healing executor: injected transient faults + elastic crew
+    // on a real factorization; clean run first for the overhead ratio
+    let exec_grid = (16 * scale / div).max(6);
+    let a = gen::grid_laplacian_2d(exec_grid);
+    let perm = order::nested_dissection_2d(exec_grid);
+    let at = symbolic::analyze(&a, &perm, 4).expect("exec analysis");
+    let ap = a.permute_sym(&at.symbolic.perm).expect("permute");
+    let pm = PmSchedule::for_tree(&at.tree, 0.9, &Profile::constant(8.0));
+    let workers = 4;
+    let (clean, clean_secs) = timed(|| {
+        execute_malleable(&at, &ap, &pm.schedule, &RustBackend, workers).expect("clean run")
+    });
+    let mut plan = FaultPlan::new();
+    plan.backoff_ms = 0;
+    plan.parse_inject("every:7:1", at.tree.len()).expect("inject spec");
+    plan.parse_elastic("-2@4,+2@16").expect("elastic spec");
+    let expected_retries: usize = plan.injected_failures(at.tree.len()).iter().sum();
+    let (healed, healed_secs) = timed(|| {
+        execute_malleable_faulty(&at, &ap, &pm.schedule, &RustBackend, workers, &plan)
+            .expect("self-healing run")
+    });
+    let (fact, report) = healed;
+    assert_eq!(report.retries, expected_retries, "every injected fault retries once");
+    assert!(report.lost_flops > 0.0, "retried fronts must report lost work");
+    let residual = multifrontal::residual(&at, &ap, &fact);
+    assert!(
+        residual < 1e-10,
+        "self-healed factorization lost accuracy: residual {residual:.3e}"
+    );
+    let slowdown = healed_secs / clean_secs.max(1e-12);
+    println!(
+        "executor grid2d_{exec_grid}: {} fronts, {} retries, lost {:.3e} flops, \
+         recovery {:.3}s, wall {healed_secs:.3}s vs clean {clean_secs:.3}s ({slowdown:.2}x)",
+        at.tree.len(),
+        report.retries,
+        report.lost_flops,
+        report.recovery_seconds
+    );
+    drop(clean);
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"scale\": {scale},\n  \"div\": {div},\n"));
+    json.push_str(&format!(
+        "  \"executor\": {{\"grid\": {exec_grid}, \"tasks\": {}, \"retries\": {}, \
+         \"lost_flops\": {:.6e}, \"recovery_seconds\": {:.6}, \"wall_seconds\": {:.6}, \
+         \"clean_wall_seconds\": {:.6}, \"residual\": {:.6e}}},\n",
+        at.tree.len(),
+        report.retries,
+        report.lost_flops,
+        report.recovery_seconds,
+        healed_secs,
+        clean_secs,
+        residual
+    ));
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  \"{}\": {{\"fault_free\": {:.6e}, \"best\": {:.6e}, \"remap\": {:.6e}, \
+             \"restart\": {:.6e}, \"overhead_pct\": {:.4}, \"gain_vs_restart_pct\": {:.4}, \
+             \"lost_work\": {:.6e}, \"remapped_subtrees\": {}, \"restarted\": {}}}{}\n",
+            c.key,
+            c.mff,
+            c.best,
+            c.remap,
+            c.restart,
+            c.overhead_pct,
+            c.gain_vs_restart_pct,
+            c.lost_work,
+            c.remapped,
+            c.restarted,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("}\n");
+    let out = bench_util::bench_output_path("BENCH_fault.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

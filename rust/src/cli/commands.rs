@@ -99,6 +99,79 @@ fn parse_profile(spec: &str) -> Result<Profile> {
     Profile::steps(&steps)
 }
 
+/// Parse a `--faults` disturbance spec: comma-separated
+/// `crash:N@F`, `leave:N:C@F`, `join:N:C@F`, `slow:N:X:D@F` items.
+/// Event times `F` (and slowdown durations `D`) are *fractions of the
+/// fault-free makespan* — materialized per tree by
+/// [`materialize_faults`] so one spec stresses trees of any size at
+/// comparable points of their run.
+fn parse_fault_spec(spec: &str) -> Result<Vec<(f64, crate::model::FaultKind)>> {
+    use crate::model::FaultKind;
+    let mut out = Vec::new();
+    for item in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let item = item.trim();
+        let (head, frac) = item
+            .rsplit_once('@')
+            .with_context(|| format!("--faults {item:?}: missing @FRACTION"))?;
+        let frac: f64 = frac
+            .parse()
+            .with_context(|| format!("--faults {item:?}: bad fraction {frac:?}"))?;
+        if !frac.is_finite() || frac < 0.0 {
+            bail!("--faults {item:?}: fraction must be finite and >= 0");
+        }
+        let node = |v: &str| -> Result<usize> {
+            v.parse()
+                .with_context(|| format!("--faults {item:?}: bad node {v:?}"))
+        };
+        let num = |what: &str, v: &str| -> Result<f64> {
+            v.parse()
+                .with_context(|| format!("--faults {item:?}: bad {what} {v:?}"))
+        };
+        let toks: Vec<&str> = head.split(':').collect();
+        let kind = match toks.as_slice() {
+            ["crash", n] => FaultKind::Crash { node: node(n)? },
+            ["leave", n, c] => FaultKind::Leave { node: node(n)?, cores: num("cores", c)? },
+            ["join", n, c] => FaultKind::Join { node: node(n)?, cores: num("cores", c)? },
+            ["slow", n, x, d] => FaultKind::Slowdown {
+                node: node(n)?,
+                factor: num("factor", x)?,
+                duration: num("duration", d)?,
+            },
+            _ => bail!(
+                "--faults {item:?}: want crash:N@F, leave:N:C@F, join:N:C@F or slow:N:X:D@F"
+            ),
+        };
+        out.push((frac, kind));
+    }
+    if out.is_empty() {
+        bail!("--faults {spec:?}: empty spec");
+    }
+    Ok(out)
+}
+
+/// Scale a parsed fault-spec template to one tree's fault-free
+/// makespan (slowdown durations scale too).
+fn materialize_faults(
+    template: &[(f64, crate::model::FaultKind)],
+    mff: f64,
+) -> crate::model::FaultTrace {
+    use crate::model::{FaultEvent, FaultKind, FaultTrace};
+    FaultTrace::new(
+        template
+            .iter()
+            .map(|&(frac, kind)| FaultEvent {
+                time: frac * mff,
+                kind: match kind {
+                    FaultKind::Slowdown { node, factor, duration } => {
+                        FaultKind::Slowdown { node, factor, duration: duration * mff }
+                    }
+                    k => k,
+                },
+            })
+            .collect(),
+    )
+}
+
 pub fn analyze(args: &mut Args) -> Result<()> {
     let (name, a, perm) = load_problem(args)?;
     let amalg = args.get_usize("amalgamate", 4)?;
@@ -326,6 +399,78 @@ pub fn simulate(args: &mut Args) -> Result<()> {
         println!("\nstep profile [{spec}]:");
         print!("{}", t2.render());
     }
+    if let Some(fspec) = args.get("faults").map(str::to_string) {
+        // fault replay (DESIGN.md §13): map each tree onto an N-node
+        // platform, disturb the replay at fixed fractions of its
+        // fault-free makespan, and compare the recovery policies.
+        // Note the overhead of Best can be *negative*: a mid-run share
+        // re-solve over the remaining forest is not bound by the static
+        // schedule's equal-finish structure once shares hit the 1-core
+        // speedup kink.
+        use crate::dist::{map_tree, MappingStrategy};
+        use crate::model::{FaultTrace, Platform};
+        use crate::sim::{replay_faults_distributed, Policy, RecoveryPolicy};
+
+        let template = parse_fault_spec(&fspec)?;
+        let nodes = args.get_usize("nodes", 2)?;
+        if nodes < 2 {
+            bail!("--faults needs --nodes >= 2 (crash recovery re-maps onto survivors)");
+        }
+        let node_cores = args.get_f64("node-cores", 8.0)?;
+        let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
+        let lambda = args.get_f64("lambda", 1.1)?;
+        let subset = args.get_usize("fault-trees", 6)?.min(corpus.len());
+        let platform = Platform::Homogeneous { nodes, p: node_cores };
+        platform.validate()?;
+        println!(
+            "\nfault replay [{fspec}] on {nodes} nodes x {node_cores} cores, alpha={alpha} \
+             (event times are fractions of each tree's fault-free makespan):"
+        );
+        let mut ft = Table::new(&[
+            "tree",
+            "fault-free",
+            "best",
+            "overhead",
+            "remap-only",
+            "restart-only",
+            "best vs restart",
+            "lost work",
+            "remapped",
+        ]);
+        for (tname, tree) in corpus.iter().take(subset) {
+            let mapping = map_tree(tree, &platform, alpha, MappingStrategy::Pm, lambda);
+            let run = |trace: &FaultTrace, rec: RecoveryPolicy| {
+                replay_faults_distributed(
+                    tree, alpha, &platform, &mapping.node_of, Policy::Pm, trace, rec,
+                )
+            };
+            let mff = run(&FaultTrace::empty(), RecoveryPolicy::Best)?.makespan;
+            let trace = materialize_faults(&template, mff);
+            trace.validate(platform.num_nodes())?;
+            let best = run(&trace, RecoveryPolicy::Best)?;
+            let remap = run(&trace, RecoveryPolicy::RemapOnly)?;
+            let restart = run(&trace, RecoveryPolicy::RestartOnly)?;
+            ft.row(&[
+                tname.clone(),
+                format!("{mff:.4e}"),
+                format!("{:.4e}", best.makespan),
+                format!("{:+.2}%", 100.0 * best.recovery_overhead() / mff),
+                format!("{:.4e}", remap.makespan),
+                format!("{:.4e}", restart.makespan),
+                format!(
+                    "{:+.2}%",
+                    100.0 * (best.makespan - restart.makespan) / restart.makespan
+                ),
+                format!("{:.3e}", best.lost_work),
+                format!(
+                    "{}{}",
+                    best.remapped_subtrees,
+                    if best.restarted { " (restart)" } else { "" }
+                ),
+            ]);
+        }
+        print!("{}", ft.render());
+    }
     Ok(())
 }
 
@@ -495,7 +640,8 @@ pub fn batch(args: &mut Args) -> Result<()> {
 
 pub fn factorize(args: &mut Args) -> Result<()> {
     use crate::exec::{
-        execute_malleable, execute_malleable_capped, execute_parallel, execute_serial,
+        execute_malleable, execute_malleable_capped, execute_malleable_faulty, execute_parallel,
+        execute_serial, FaultPlan,
     };
     use crate::frontal::{multifrontal, NaiveBackend, PjrtBackend, RustBackend};
 
@@ -513,6 +659,20 @@ pub fn factorize(args: &mut Args) -> Result<()> {
     if mem_cap > 0 && !malleable {
         bail!("--mem-cap needs --malleable (the admission gate lives in the malleable crew)");
     }
+    // --fault-plan / --elastic: self-healing malleable run (DESIGN.md
+    // §13) with injected transient failures and crew leave/join events
+    let fault_spec = args.get("fault-plan").map(str::to_string);
+    let elastic_spec = args.get("elastic").map(str::to_string);
+    let faulted = fault_spec.is_some() || elastic_spec.is_some();
+    if faulted && !malleable {
+        bail!("--fault-plan/--elastic need --malleable (retries requeue into the team crew)");
+    }
+    if faulted && mem_cap > 0 {
+        bail!(
+            "--fault-plan/--elastic cannot combine with --mem-cap \
+             (the admission gate's reservation does not survive a retry)"
+        );
+    }
     // backend selection: blocked tiled kernels (default), the unblocked
     // naive oracle, or the PJRT accelerator queue (--pjrt is kept as an
     // alias for --backend pjrt)
@@ -528,6 +688,20 @@ pub fn factorize(args: &mut Args) -> Result<()> {
         at.tree.len(),
         pm.schedule.makespan
     );
+    let fault_plan = if faulted {
+        let mut plan = FaultPlan::new();
+        plan.max_retries = args.get_usize("retries", 3)?;
+        plan.backoff_ms = args.get_usize("backoff-ms", 1)? as u64;
+        if let Some(s) = &fault_spec {
+            plan.parse_inject(s, at.tree.len())?;
+        }
+        if let Some(s) = &elastic_spec {
+            plan.parse_elastic(s)?;
+        }
+        Some(plan)
+    } else {
+        None
+    };
     let (fact, report) = match backend_name.as_str() {
         "pjrt" => {
             if malleable {
@@ -539,6 +713,10 @@ pub fn factorize(args: &mut Args) -> Result<()> {
             let backend = PjrtBackend::new(rt);
             execute_serial(&at, &ap, &pm.schedule, &backend)?
         }
+        "naive" if fault_plan.is_some() => {
+            let plan = fault_plan.as_ref().expect("guarded by is_some");
+            execute_malleable_faulty(&at, &ap, &pm.schedule, &NaiveBackend, workers, plan)?
+        }
         "naive" if malleable && mem_cap > 0 => {
             execute_malleable_capped(&at, &ap, &pm.schedule, &NaiveBackend, workers, mem_cap)?
         }
@@ -546,6 +724,10 @@ pub fn factorize(args: &mut Args) -> Result<()> {
             execute_malleable(&at, &ap, &pm.schedule, &NaiveBackend, workers)?
         }
         "naive" => execute_parallel(&at, &ap, &pm.schedule, &NaiveBackend, workers)?,
+        "blocked" | "rust" if fault_plan.is_some() => {
+            let plan = fault_plan.as_ref().expect("guarded by is_some");
+            execute_malleable_faulty(&at, &ap, &pm.schedule, &RustBackend, workers, plan)?
+        }
         "blocked" | "rust" if malleable && mem_cap > 0 => {
             execute_malleable_capped(&at, &ap, &pm.schedule, &RustBackend, workers, mem_cap)?
         }
@@ -754,5 +936,62 @@ mod tests {
     fn factorize_rejects_mem_cap_without_malleable() {
         let mut a = args("--grid2d 6 --mem-cap 1000");
         assert!(factorize(&mut a).is_err());
+    }
+
+    #[test]
+    fn parse_fault_spec_reads_all_event_kinds() {
+        use crate::model::FaultKind;
+        let t = parse_fault_spec("crash:1@0.5, leave:0:2@0.1, join:0:2@0.7, slow:1:0.5:0.2@0.3")
+            .unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0], (0.5, FaultKind::Crash { node: 1 }));
+        assert_eq!(t[1], (0.1, FaultKind::Leave { node: 0, cores: 2.0 }));
+        assert_eq!(t[2], (0.7, FaultKind::Join { node: 0, cores: 2.0 }));
+        assert_eq!(
+            t[3],
+            (0.3, FaultKind::Slowdown { node: 1, factor: 0.5, duration: 0.2 })
+        );
+        // slowdown durations scale with the fault-free makespan too
+        let trace = materialize_faults(&t, 10.0);
+        assert_eq!(trace.events[0].time, 1.0); // sorted by time
+        match trace.events[1].kind {
+            FaultKind::Slowdown { duration, .. } => assert_eq!(duration, 2.0),
+            ref k => panic!("expected slowdown, got {k:?}"),
+        }
+        for bad in ["crash:1", "crash:x@0.5", "melt:1@0.5", "crash:1@-0.1", ""] {
+            assert!(parse_fault_spec(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn factorize_rejects_fault_plans_outside_the_malleable_crew() {
+        let mut a = args("--grid2d 6 --fault-plan every:4:1");
+        assert!(factorize(&mut a).is_err(), "--fault-plan without --malleable");
+        let mut b = args("--grid2d 6 --elastic -1@2");
+        assert!(factorize(&mut b).is_err(), "--elastic without --malleable");
+        let mut c = args("--grid2d 6 --malleable --mem-cap 100000 --fault-plan every:4:1");
+        assert!(factorize(&mut c).is_err(), "--fault-plan with --mem-cap");
+    }
+
+    #[test]
+    fn factorize_heals_injected_faults_and_elastic_crews() {
+        let mut a = args(
+            "--grid2d 8 --malleable --workers 4 --backoff-ms 0 \
+             --fault-plan every:5:1 --elastic -2@3,+1@10",
+        );
+        factorize(&mut a).unwrap();
+    }
+
+    #[test]
+    fn simulate_replays_fault_traces_over_the_corpus() {
+        let mut a = args(
+            "--trees 2 --max-nodes 4000 -p 8 --fault-trees 2 --nodes 2 \
+             --faults crash:1@0.5,slow:0:0.5:0.2@0.1",
+        );
+        simulate(&mut a).unwrap();
+        let mut bad = args("--trees 2 --max-nodes 4000 --faults crash:1@0.5 --nodes 1");
+        assert!(simulate(&mut bad).is_err(), "--faults on one node");
+        let mut malformed = args("--trees 2 --max-nodes 4000 --faults melt:1@0.5");
+        assert!(simulate(&mut malformed).is_err());
     }
 }

@@ -5,11 +5,14 @@
 //! malltree schedule  --grid2d 32 --alpha 0.9 -p 40       makespans: PM vs baselines
 //! malltree batch     --trees 200 --threads 8 -p 40       multi-tenant batch throughput
 //! malltree simulate  --trees 100 --alpha 0.9 -p 40       Figure 13/14-style rows
+//!                    [--faults crash:N@F,... --nodes N]   + fault replay vs restart baseline
 //! malltree distribute --grid2d 32 --nodes 4 -p 8
 //!                    [--speeds 8,4,4] [--lambda 1.1]
 //!                    [--mapping pm|prop|cp]              N-node mapping + cross-node DES
 //! malltree factorize --grid2d 24 [--workers 4] [--malleable]
 //!                    [--mem-cap WORDS]
+//!                    [--fault-plan task:ID:F|every:K:F]
+//!                    [--elastic ±N@C,...] [--retries N]  self-healing malleable crew
 //!                    [--backend blocked|naive|pjrt]      numeric factorization + residual
 //! malltree memory    --grid2d 32 [--order liu|default]
 //!                    [--cap WORDS | --cap-ratio R]
@@ -70,6 +73,12 @@ fn usage() -> String {
      \x20 --profile d:p[,d:p...] (step processor profile, schedule/simulate),\n\
      \x20 --malleable (schedule-share-driven worker teams per front),\n\
      \x20 --mem-cap WORDS (malleable memory admission gate),\n\
+     \x20 --fault-plan task:ID:F|every:K:F (inject F transient failures; with\n\
+     \x20   --retries N --backoff-ms MS the crew retries and self-heals),\n\
+     \x20 --elastic \u{b1}N@C[,..] (crew grows/shrinks by N after C completions),\n\
+     \x20 simulate: --faults crash:N@F|leave:N:C@F|join:N:C@F|slow:N:X:D@F\n\
+     \x20   (F,D are fractions of the fault-free makespan) --nodes N\n\
+     \x20   --node-cores P --fault-trees K (replay vs remap/restart baselines),\n\
      \x20 --backend blocked|naive|pjrt (--pjrt is an alias),\n\
      \x20 distribute: --nodes N -p CORES | --speeds P0,P1,.. (heterogeneous),\n\
      \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp,\n\

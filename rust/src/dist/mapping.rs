@@ -260,6 +260,86 @@ fn greedy_lpt(weights: &[f64], platform: &Platform) -> Vec<usize> {
     assign
 }
 
+/// Re-map the subtrees lost to a node crash onto the survivors
+/// (DESIGN.md §13).
+///
+/// `needed[t]` marks the tasks whose results were lost (they lived on
+/// the dead node and must re-run); `remaining[t]` is the work each
+/// needs. The unit of placement is a *component*: a maximal
+/// needed-connected subtree (a needed task whose parent is absent or
+/// not needed roots one). Components are balanced over the alive
+/// nodes by the same power-space LPT as [`map_tree`]'s Pm strategy —
+/// component weight `Σ remaining^{1/α}` — except the per-node loads
+/// start from `node_load` (the survivors' own residual power-load), so
+/// lost work lands on the least-busy survivor, not merely the largest.
+///
+/// Returns `(component_root, node)` pairs; the caller re-assigns every
+/// needed task in each component's needed-descent to the chosen node.
+pub fn remap_lost(
+    tree: &TaskTree,
+    needed: &[bool],
+    remaining: &[f64],
+    alpha: f64,
+    alive: &[bool],
+    cores: &[f64],
+    node_load: &[f64],
+) -> Vec<(u32, usize)> {
+    let inv = 1.0 / alpha;
+    let n = tree.len();
+    // component roots and their power-weights (needed-only descent)
+    let mut roots: Vec<u32> = Vec::new();
+    let mut weights: Vec<f64> = Vec::new();
+    for v in 0..n {
+        if !needed[v] {
+            continue;
+        }
+        let is_root = match tree.nodes[v].parent {
+            None => true,
+            Some(p) => !needed[p as usize],
+        };
+        if !is_root {
+            continue;
+        }
+        let mut w = 0f64;
+        let mut stack = vec![v as u32];
+        while let Some(t) = stack.pop() {
+            let ti = t as usize;
+            w += remaining[ti].max(0.0).powf(inv);
+            for &c in &tree.nodes[ti].children {
+                if needed[c as usize] {
+                    stack.push(c);
+                }
+            }
+        }
+        roots.push(v as u32);
+        weights.push(w);
+    }
+    // LPT over alive nodes, loads seeded with the survivors' own queues
+    let mut order: Vec<usize> = (0..roots.len()).collect();
+    order.sort_by(|&i, &j| weights[j].total_cmp(&weights[i]));
+    let mut load = node_load.to_vec();
+    let mut out = vec![(0u32, 0usize); roots.len()];
+    for &i in &order {
+        let w = weights[i];
+        let mut best = usize::MAX;
+        let mut best_t = f64::INFINITY;
+        for k in 0..alive.len() {
+            if !alive[k] || cores[k] <= 0.0 {
+                continue;
+            }
+            let t = (load[k] + w) / cores[k];
+            if t < best_t {
+                best_t = t;
+                best = k;
+            }
+        }
+        debug_assert!(best != usize::MAX, "remap_lost needs a surviving node");
+        load[best] += w;
+        out[i] = (roots[i], best);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -457,6 +537,47 @@ mod tests {
             (achieved - opt).abs() <= 1e-9 * opt,
             "achieved {achieved} vs optimal {opt}"
         );
+    }
+
+    #[test]
+    fn remap_lost_splits_components_and_prefers_idle_survivors() {
+        // star: root 0 (chain node), branches {1, 2, 3} each a single
+        // leaf; node 2 (dead) held branches 2 and 3 — two components
+        let t = star(&[4.0, 8.0, 8.0]);
+        let needed = vec![false, false, true, true];
+        let remaining = vec![1.0, 4.0, 8.0, 8.0];
+        let alive = vec![true, true, false];
+        let cores = vec![4.0, 4.0, 4.0];
+        let alpha = 1.0;
+        // node 0 carries heavy residual load, node 1 is idle
+        let assign = remap_lost(&t, &needed, &remaining, alpha, &alive, &cores, &[20.0, 0.0]);
+        assert_eq!(assign.len(), 2, "two lost components");
+        for &(root, k) in &assign {
+            assert!(root == 2 || root == 3);
+            assert_eq!(k, 1, "lost work must land on the idle survivor");
+        }
+        // balanced residuals → components split across survivors
+        let assign = remap_lost(&t, &needed, &remaining, alpha, &alive, &cores, &[0.0, 0.0]);
+        assert_ne!(assign[0].1, assign[1].1, "equal survivors each take one component");
+    }
+
+    #[test]
+    fn remap_lost_keeps_nested_needed_tasks_in_one_component() {
+        // chain 0 <- 1 <- 2: tasks 1 and 2 both lost → one component
+        // rooted at 1 with power-weight remaining(1)^{1/α}+remaining(2)^{1/α}
+        let t = TaskTree::from_parents(&[0, 0, 1], &[1.0, 2.0, 3.0]).unwrap();
+        let needed = vec![false, true, true];
+        let remaining = vec![1.0, 2.0, 3.0];
+        let assign = remap_lost(
+            &t,
+            &needed,
+            &remaining,
+            0.5,
+            &[true, false],
+            &[4.0, 4.0],
+            &[0.0, 0.0],
+        );
+        assert_eq!(assign, vec![(1, 0)]);
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod subset;
 
 pub use het::{het_schedule, independent_optimal, HetSchedule};
 pub use homog::{homog_approx, HomogSchedule};
-pub use mapping::{map_tree, pseudo_equiv_lens, root_chain, MappingStrategy, TreeMapping};
+pub use mapping::{map_tree, pseudo_equiv_lens, remap_lost, root_chain, MappingStrategy, TreeMapping};
 pub use subset::{partition_reduction, subset_sum_exact, subset_sum_fptas};
 
 use anyhow::Result;

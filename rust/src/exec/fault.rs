@@ -1,0 +1,227 @@
+//! Fault-injection and elasticity plans for the malleable executor
+//! (DESIGN.md §13).
+//!
+//! A [`FaultPlan`] makes the crew's failure handling *testable and
+//! benchmarkable*: it injects deterministic transient failures into
+//! chosen fronts (the first `F` executions of a front fail, then it
+//! succeeds) and moves the live crew size at completion thresholds
+//! (workers leave and rejoin mid-run). The executor treats an injected
+//! failure exactly like a real backend error under an active plan:
+//! discard the attempt, requeue the front, back off, retry up to
+//! [`FaultPlan::max_retries`] times — so the same machinery covers
+//! genuinely flaky backends.
+
+use anyhow::{anyhow, bail, Result};
+
+/// One elasticity event: after `after_completions` fronts have
+/// completed, the live crew target moves by `delta` workers (clamped
+/// to `1..=workers` by the executor — the crew never empties and never
+/// exceeds the threads actually spawned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticEvent {
+    /// Completion-count threshold at which the event fires.
+    pub after_completions: usize,
+    /// Signed crew-size change (workers joining `> 0`, leaving `< 0`).
+    pub delta: isize,
+}
+
+/// Deterministic disturbance plan for one executor run: injected
+/// transient failures, the retry budget/backoff that answers them, and
+/// elastic crew events.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// `(task, failures)` pairs: the first `failures` executions of
+    /// `task` fail with an injected transient error. Repeated entries
+    /// for one task accumulate.
+    pub inject: Vec<(usize, usize)>,
+    /// Failed executions tolerated per task before the run errors out.
+    pub max_retries: usize,
+    /// Base backoff before a retry; attempt `k` sleeps `k * backoff_ms`
+    /// (bounded linear backoff).
+    pub backoff_ms: u64,
+    /// Crew-size events, in any order (the executor sorts them).
+    pub elastic: Vec<ElasticEvent>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultPlan {
+    /// An empty plan: nothing injected, no elasticity, 3 retries with
+    /// 1 ms base backoff (the defaults real transient faults get).
+    pub fn new() -> FaultPlan {
+        FaultPlan {
+            inject: Vec::new(),
+            max_retries: 3,
+            backoff_ms: 1,
+            elastic: Vec::new(),
+        }
+    }
+
+    /// Builder: inject `failures` transient failures into `task`.
+    pub fn inject_task(mut self, task: usize, failures: usize) -> FaultPlan {
+        self.inject.push((task, failures));
+        self
+    }
+
+    /// Builder: add one elastic crew event.
+    pub fn elastic_event(mut self, after_completions: usize, delta: isize) -> FaultPlan {
+        self.elastic.push(ElasticEvent { after_completions, delta });
+        self
+    }
+
+    /// Whether the plan disturbs anything at all. A no-op plan must
+    /// leave the executor bit-identical to a plain malleable run
+    /// (tested).
+    pub fn is_noop(&self) -> bool {
+        self.elastic.is_empty() && self.inject.iter().all(|&(_, f)| f == 0)
+    }
+
+    /// Materialize per-task pending-failure counts for an `n_tasks`
+    /// run. Out-of-range rules are dropped.
+    pub fn injected_failures(&self, n_tasks: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n_tasks];
+        for &(t, f) in &self.inject {
+            if t < n_tasks {
+                counts[t] += f;
+            }
+        }
+        counts
+    }
+
+    /// Elastic events sorted by completion threshold (stable: events
+    /// sharing a threshold apply in insertion order).
+    pub fn sorted_elastic(&self) -> Vec<ElasticEvent> {
+        let mut ev = self.elastic.clone();
+        ev.sort_by_key(|e| e.after_completions);
+        ev
+    }
+
+    /// Parse a CLI injection spec: comma-separated `task:ID:F` (the
+    /// first `F` executions of task `ID` fail) and `every:K:F` (every
+    /// K-th task — ids `0, K, 2K, …` — fails `F` times).
+    pub fn parse_inject(&mut self, spec: &str, n_tasks: usize) -> Result<()> {
+        for item in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let item = item.trim();
+            let toks: Vec<&str> = item.split(':').collect();
+            let num = |what: &str, v: &str| -> Result<usize> {
+                v.parse()
+                    .map_err(|_| anyhow!("fault plan: bad {what} {v:?} in {item:?}"))
+            };
+            match toks.as_slice() {
+                ["task", id, f] => {
+                    let id = num("task id", id)?;
+                    if id >= n_tasks {
+                        bail!("fault plan: task {id} out of range (tree has {n_tasks} tasks)");
+                    }
+                    self.inject.push((id, num("failure count", f)?));
+                }
+                ["every", k, f] => {
+                    let k = num("period", k)?;
+                    if k == 0 {
+                        bail!("fault plan: every:0 is invalid");
+                    }
+                    let f = num("failure count", f)?;
+                    let mut t = 0;
+                    while t < n_tasks {
+                        self.inject.push((t, f));
+                        t += k;
+                    }
+                }
+                _ => bail!("fault plan: bad inject item {item:?} (want task:ID:F or every:K:F)"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI elasticity spec: comma-separated `±N@C` items — the
+    /// crew target moves by `±N` workers after `C` completions, e.g.
+    /// `-2@5,+2@40`.
+    pub fn parse_elastic(&mut self, spec: &str) -> Result<()> {
+        for item in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let item = item.trim();
+            let Some((d, at)) = item.split_once('@') else {
+                bail!("elastic plan: bad item {item:?} (want ±N@COMPLETIONS)");
+            };
+            let delta: isize = d
+                .parse()
+                .map_err(|_| anyhow!("elastic plan: bad delta {d:?} in {item:?}"))?;
+            if delta == 0 {
+                bail!("elastic plan: zero delta in {item:?}");
+            }
+            let after_completions: usize = at
+                .parse()
+                .map_err(|_| anyhow!("elastic plan: bad threshold {at:?} in {item:?}"))?;
+            self.elastic.push(ElasticEvent { after_completions, delta });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_a_noop_with_a_retry_budget() {
+        let p = FaultPlan::new();
+        assert!(p.is_noop());
+        assert_eq!(p.max_retries, 3);
+        assert_eq!(p.backoff_ms, 1);
+        assert_eq!(p.injected_failures(5), vec![0; 5]);
+    }
+
+    #[test]
+    fn parse_inject_expands_task_and_every_rules() {
+        let mut p = FaultPlan::new();
+        p.parse_inject("task:3:2, every:4:1", 10).unwrap();
+        let counts = p.injected_failures(10);
+        assert_eq!(counts, vec![1, 0, 0, 2, 1, 0, 0, 0, 1, 0]);
+        assert!(!p.is_noop());
+    }
+
+    #[test]
+    fn parse_inject_rejects_malformed_specs() {
+        for bad in [
+            "task:3",          // missing count
+            "task:3:2:1",      // extra field
+            "task:99:1",       // out of range
+            "every:0:1",       // zero period
+            "melt:1:1",        // unknown rule
+            "task:x:1",        // non-numeric id
+            "task:1:y",        // non-numeric count
+        ] {
+            let mut p = FaultPlan::new();
+            assert!(p.parse_inject(bad, 10).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_elastic_reads_signed_deltas_and_sorts() {
+        let mut p = FaultPlan::new();
+        p.parse_elastic("+2@9,-1@4").unwrap();
+        let ev = p.sorted_elastic();
+        assert_eq!(
+            ev,
+            vec![
+                ElasticEvent { after_completions: 4, delta: -1 },
+                ElasticEvent { after_completions: 9, delta: 2 },
+            ]
+        );
+        for bad in ["2", "-1@x", "z@3", "0@4"] {
+            let mut p = FaultPlan::new();
+            assert!(p.parse_elastic(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn builder_entries_accumulate_per_task() {
+        let p = FaultPlan::new().inject_task(2, 1).inject_task(2, 3);
+        assert_eq!(p.injected_failures(4)[2], 4);
+        // out-of-range rules are dropped at materialization
+        assert_eq!(p.injected_failures(2), vec![0, 0]);
+    }
+}

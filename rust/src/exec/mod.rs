@@ -22,16 +22,26 @@
 //! All paths produce bit-identical factors to
 //! [`crate::frontal::factorize`]; tests enforce it.
 //!
+//! `execute_malleable_faulty` is the **self-healing** variant
+//! (DESIGN.md §13): a [`FaultPlan`] injects deterministic transient
+//! failures and elastic crew leave/join events; failed fronts are
+//! requeued with bounded backoff (children contributions survive via
+//! arena-accounted copies), and the live crew re-rounds team shares at
+//! every completion — factors stay bit-identical throughout.
+//!
 //! [`FrontBackend`]: crate::frontal::FrontBackend
 
+mod fault;
 mod report;
 mod shares;
 pub mod team;
 mod worker;
 
+pub use fault::{ElasticEvent, FaultPlan};
 pub use report::ExecReport;
 pub use shares::integer_shares;
 pub use team::{occupancy_by_width, OccupancyRow, TeamPlan};
 pub use worker::{
-    execute_malleable, execute_malleable_capped, execute_parallel, execute_serial,
+    execute_malleable, execute_malleable_capped, execute_malleable_faulty, execute_parallel,
+    execute_serial,
 };

@@ -37,6 +37,16 @@ pub struct ExecReport {
     /// infeasibly small cap degrades to serial execution, never
     /// deadlocks).
     pub mem_forced: usize,
+    /// Failed front executions requeued for another attempt under a
+    /// [`crate::exec::FaultPlan`]
+    /// ([`crate::exec::execute_malleable_faulty`]; 0 without a plan).
+    pub retries: usize,
+    /// Front flops discarded by those failed executions (work that had
+    /// to be redone).
+    pub lost_flops: f64,
+    /// Wall seconds the crew spent in retry backoff, summed over
+    /// workers.
+    pub recovery_seconds: f64,
 }
 
 impl ExecReport {
@@ -110,6 +120,12 @@ impl ExecReport {
                 self.mem_stalls, self.mem_forced
             ));
         }
+        if self.retries > 0 {
+            s.push_str(&format!(
+                " retries={} lost_flops={:.3e} recovery={:.3}s",
+                self.retries, self.lost_flops, self.recovery_seconds
+            ));
+        }
         s
     }
 }
@@ -132,6 +148,9 @@ mod tests {
             team_log: Vec::new(),
             mem_stalls: 0,
             mem_forced: 0,
+            retries: 0,
+            lost_flops: 0.0,
+            recovery_seconds: 0.0,
         }
     }
 
@@ -166,6 +185,22 @@ mod tests {
         assert!((r.assembly_fraction() - 0.0625).abs() < 1e-12);
         assert!(s.contains("peak_front=1.0 MiB"));
         assert!(!s.contains("avg_team"), "non-malleable run rendered team stats");
+    }
+
+    #[test]
+    fn render_includes_fault_stats_only_when_faulted() {
+        let clean = base();
+        assert!(!clean.render().contains("retries="), "{}", clean.render());
+        let r = ExecReport {
+            retries: 3,
+            lost_flops: 1e7,
+            recovery_seconds: 0.25,
+            ..base()
+        };
+        let s = r.render();
+        assert!(s.contains("retries=3"), "{s}");
+        assert!(s.contains("lost_flops=1.000e7"), "{s}");
+        assert!(s.contains("recovery=0.250s"), "{s}");
     }
 
     #[test]

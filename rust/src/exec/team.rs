@@ -57,14 +57,23 @@ impl TeamPlan {
     /// ([`integer_shares`]), clamped to at least one worker (a running
     /// front always owns its leader).
     pub fn team_sizes(&self, active: &[u32]) -> Vec<usize> {
+        self.team_sizes_for_crew(active, self.workers)
+    }
+
+    /// [`TeamPlan::team_sizes`] scaled to a *live* crew of `crew`
+    /// workers instead of the plan's full crew — the elastic executor
+    /// re-rounds shares to however many workers are currently serving
+    /// ([`crate::exec::FaultPlan`] leave/join events).
+    pub fn team_sizes_for_crew(&self, active: &[u32], crew: usize) -> Vec<usize> {
         if !self.malleable || active.is_empty() {
             return vec![1; active.len()];
         }
+        let crew = crew.max(1);
         let raw: Vec<f64> = active
             .iter()
-            .map(|&t| self.ratios[t as usize] * self.workers as f64)
+            .map(|&t| self.ratios[t as usize] * crew as f64)
             .collect();
-        let mut sizes = integer_shares(&raw, self.workers);
+        let mut sizes = integer_shares(&raw, crew);
         for s in &mut sizes {
             *s = (*s).max(1);
         }
@@ -73,7 +82,12 @@ impl TeamPlan {
 
     /// Team size for one task among `active` (which must contain it).
     pub fn team_size_of(&self, task: u32, active: &[u32]) -> usize {
-        let sizes = self.team_sizes(active);
+        self.team_size_of_crew(task, active, self.workers)
+    }
+
+    /// [`TeamPlan::team_size_of`] against a live crew of `crew`.
+    pub fn team_size_of_crew(&self, task: u32, active: &[u32], crew: usize) -> usize {
+        let sizes = self.team_sizes_for_crew(active, crew);
         active
             .iter()
             .position(|&t| t == task)
@@ -191,6 +205,26 @@ mod tests {
         let sizes = plan.team_sizes(&[0, 1]);
         assert!(sizes.iter().all(|&t| t >= 1), "{sizes:?}");
         assert!(sizes.iter().sum::<usize>() <= 4 + 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn crew_parameterized_sizes_follow_the_live_crew() {
+        let s = sched(&[0.8, 0.1, 0.1]);
+        let plan = TeamPlan::new(&s, 3, 8, true);
+        // full crew: the default methods are the crew == workers case
+        assert_eq!(
+            plan.team_sizes_for_crew(&[0, 1, 2], 8),
+            plan.team_sizes(&[0, 1, 2])
+        );
+        // a shrunken live crew of 4: shares re-round to the 4 workers
+        let shrunk = plan.team_sizes_for_crew(&[0, 1, 2], 4);
+        assert!(shrunk.iter().all(|&t| t >= 1), "{shrunk:?}");
+        assert!(shrunk[0] >= 2, "root share lost in the shrink: {shrunk:?}");
+        assert!(shrunk.iter().sum::<usize>() <= 4 + 2, "{shrunk:?}");
+        // a lone task gets its share of whatever crew is live
+        assert_eq!(plan.team_size_of_crew(0, &[0], 2), 2);
+        // zero crews are clamped, never divide the plan by zero
+        assert_eq!(plan.team_sizes_for_crew(&[0], 0), vec![1]);
     }
 
     #[test]

@@ -20,8 +20,8 @@
 //! task-completion event, so workers freed near the top of the tree
 //! rejoin the live teams of the wide root fronts instead of idling.
 
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -32,7 +32,19 @@ use crate::frontal::multifrontal::{assemble_front_arena, factor_front_arena, Fac
 use crate::sched::Schedule;
 use crate::sparse::{AssemblyTree, CscMatrix};
 
+use super::fault::FaultPlan;
 use super::team::TeamPlan;
+
+/// Poison-tolerant lock acquisition. Every crew invariant holds at
+/// every lock release point (numeric work runs outside the lock), so
+/// the state behind a mutex poisoned by a panicking worker is still
+/// consistent — recover the guard instead of cascading secondary
+/// panics through the rest of the crew. The original panic is still
+/// propagated loudly by the scoped join; this only keeps the other
+/// workers orderly on their way out.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Order tasks by schedule start time, tie-broken by topological
 /// position (children first). For any valid schedule this is a
@@ -98,6 +110,9 @@ pub fn execute_serial(
             team_log: Vec::new(),
             mem_stalls: 0,
             mem_forced: 0,
+            retries: 0,
+            lost_flops: 0.0,
+            recovery_seconds: 0.0,
         },
     ))
 }
@@ -116,17 +131,28 @@ impl OnceSlot {
     }
 
     fn set(&self, v: Vec<f64>) {
-        let mut g = self.0.lock().unwrap();
+        let mut g = lock_clean(&self.0);
         debug_assert!(g.is_none(), "OnceSlot written twice");
         *g = Some(v);
     }
 
     fn take(&self) -> Option<Vec<f64>> {
-        self.0.lock().unwrap().take()
+        lock_clean(&self.0).take()
+    }
+
+    /// Copy the value without consuming it. The fault-tolerant
+    /// assembly path reads children non-destructively so a failed
+    /// attempt can re-read them on retry; the slot is consumed (and
+    /// its block released) only once the parent succeeds.
+    fn cloned(&self) -> Option<Vec<f64>> {
+        lock_clean(&self.0).clone()
     }
 
     fn into_value(self) -> Vec<f64> {
-        self.0.into_inner().unwrap().unwrap_or_default()
+        self.0
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner)
+            .unwrap_or_default()
     }
 }
 
@@ -145,10 +171,7 @@ impl Drop for PanicGuard<'_> {
     fn drop(&mut self) {
         if self.armed {
             // never panic inside an unwinding drop: tolerate poisoning
-            let mut st = match self.queue.lock() {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
+            let mut st = lock_clean(self.queue);
             if st.error.is_none() {
                 st.error = Some("worker panicked during factorization".into());
             }
@@ -201,6 +224,26 @@ struct ReadyQueue {
     /// admissions forced through an over-cap gate because nothing was
     /// running (a smaller cap would deadlock, not help)
     mem_forced: usize,
+    /// live crew-size target (elasticity): worker `w` parks on the
+    /// condvar while `w >= crew_target`; worker 0 never parks, so the
+    /// crew always makes progress
+    crew_target: usize,
+    /// completed fronts so far (drives elastic event thresholds)
+    completions: usize,
+    /// elastic crew events sorted by threshold; `elastic_next` indexes
+    /// the first unapplied one
+    elastic: Vec<super::fault::ElasticEvent>,
+    elastic_next: usize,
+    /// per-task injected failures still pending (fault plans only)
+    inject_left: Vec<usize>,
+    /// per-task failed-execution counts (the retry budget)
+    attempts: Vec<usize>,
+    /// failed executions that were requeued for another attempt
+    retries: usize,
+    /// front flops discarded by failed executions
+    lost_flops: f64,
+    /// wall seconds the crew spent in retry backoff
+    recovery_seconds: f64,
 }
 
 /// Re-round the schedule shares of the active fronts into team sizes
@@ -212,7 +255,7 @@ fn replan(st: &mut ReadyQueue, plan: &TeamPlan) {
         return;
     }
     let active: Vec<u32> = st.running.iter().chain(st.ready.iter()).copied().collect();
-    let sizes = plan.team_sizes(&active);
+    let sizes = plan.team_sizes_for_crew(&active, st.crew_target);
     for ot in &mut st.open {
         if let Some(pos) = active.iter().position(|&t| t == ot.task) {
             let want = sizes[pos].min(ot.cap);
@@ -224,8 +267,10 @@ fn replan(st: &mut ReadyQueue, plan: &TeamPlan) {
 
 /// What an idle worker decided to do next.
 enum Duty {
-    /// Lead the factorization of a popped front with this team size.
-    Run(u32, usize),
+    /// Lead the factorization of a popped front with this team size;
+    /// the flag marks an injected transient failure consumed for this
+    /// execution (the attempt dies after assembly, before the backend).
+    Run(u32, usize, bool),
     /// Join a live team as a helper.
     Help(Arc<FrontTeamJob>),
 }
@@ -239,7 +284,7 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, false, None)
+    run_crew(at, ap, schedule, backend, workers, false, None, None)
 }
 
 /// Malleable thread-crew execution: like [`execute_parallel`], but the
@@ -255,7 +300,7 @@ pub fn execute_malleable<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, true, None)
+    run_crew(at, ap, schedule, backend, workers, true, None, None)
 }
 
 /// [`execute_malleable`] with a **memory-cap admission gate**
@@ -277,7 +322,34 @@ pub fn execute_malleable_capped<B: FrontBackend + Sync>(
     workers: usize,
     cap_f64s: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, true, Some(cap_f64s))
+    run_crew(at, ap, schedule, backend, workers, true, Some(cap_f64s), None)
+}
+
+/// [`execute_malleable`] under a [`FaultPlan`] — the self-healing mode
+/// (DESIGN.md §13). The plan's injected failures kill the chosen
+/// fronts' executions transiently; a failed front's partial work is
+/// discarded, the front is requeued priority-sorted, and the worker
+/// backs off linearly (`attempt × backoff_ms`), up to
+/// [`FaultPlan::max_retries`] failures per front before the run errors
+/// out. While a plan is active the crew assembles every front from
+/// arena-accounted *copies* of its children's contribution blocks —
+/// the originals are consumed only on success — so injected *and real*
+/// backend failures are both retryable without losing inputs, and the
+/// memory gauge stays balanced. The plan's elastic events shrink/grow
+/// the live crew at completion thresholds: parked workers block on the
+/// queue condvar (worker 0 never parks), and team shares are re-rounded
+/// to the live crew at every completion. Retries, lost flops and
+/// backoff time land in the [`super::ExecReport`]; factors stay
+/// bit-identical to the serial blocked path (tested).
+pub fn execute_malleable_faulty<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+    plan: &FaultPlan,
+) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, true, None, Some(plan))
 }
 
 /// Lock discipline (both modes): a worker holds the queue mutex only
@@ -288,6 +360,7 @@ pub fn execute_malleable_capped<B: FrontBackend + Sync>(
 /// is published into its [`OnceSlot`] *before* the counter decrement,
 /// so the parent — which can only be popped after the decrement — sees
 /// it without further synchronization.
+#[allow(clippy::too_many_arguments)]
 fn run_crew<B: FrontBackend + Sync>(
     at: &AssemblyTree,
     ap: &CscMatrix,
@@ -296,9 +369,13 @@ fn run_crew<B: FrontBackend + Sync>(
     workers: usize,
     malleable: bool,
     mem_cap: Option<usize>,
+    fault: Option<&FaultPlan>,
 ) -> Result<(Factorization, super::ExecReport)> {
     let n = at.tree.len();
     let workers = workers.max(1);
+    // fault plans ride the team path only: retries need the pre-cloned
+    // assembly + requeue protocol implemented there
+    debug_assert!(fault.is_none() || malleable, "fault plans require the malleable crew");
     let order = dispatch_order(at, schedule);
     // priority = position in dispatch order (lower = sooner)
     let mut prio = vec![0usize; n];
@@ -363,6 +440,17 @@ fn run_crew<B: FrontBackend + Sync>(
         planned: 0,
         mem_stalls: 0,
         mem_forced: 0,
+        crew_target: workers,
+        completions: 0,
+        elastic: fault.map(FaultPlan::sorted_elastic).unwrap_or_default(),
+        elastic_next: 0,
+        inject_left: fault
+            .map(|f| f.injected_failures(n))
+            .unwrap_or_else(|| vec![0; n]),
+        attempts: vec![0usize; n],
+        retries: 0,
+        lost_flops: 0.0,
+        recovery_seconds: 0.0,
     });
     let cv = Condvar::new();
     let contrib: Vec<OnceSlot> = (0..n).map(|_| OnceSlot::new()).collect();
@@ -371,15 +459,25 @@ fn run_crew<B: FrontBackend + Sync>(
     let t0 = Instant::now();
 
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
-                let mut guard = PanicGuard { queue: &queue, cv: &cv, armed: true };
-                let mut arena = FrontArena::for_tree(at).with_gauge(gauge.clone());
+        for w in 0..workers {
+            let gauge = gauge.clone();
+            let queue = &queue;
+            let cv = &cv;
+            let contrib = &contrib;
+            let panels = &panels;
+            let prio = &prio;
+            let mem_cost = &mem_cost;
+            let mem_release = &mem_release;
+            let plan = &plan;
+            scope.spawn(move || {
+                let mut guard = PanicGuard { queue, cv, armed: true };
+                let mut arena = FrontArena::for_tree(at).with_gauge(gauge);
                 let mut local_flops = 0.0f64;
                 let mut local_assembly = 0.0f64;
+                let mut local_recovery = 0.0f64;
                 loop {
                     let duty = {
-                        let mut st = queue.lock().unwrap();
+                        let mut st = lock_clean(queue);
                         // one stall episode per continuous memory-blocked
                         // wait, not one per condvar wakeup
                         let mut stall_counted = false;
@@ -387,9 +485,19 @@ fn run_crew<B: FrontBackend + Sync>(
                             if st.remaining == 0 || st.error.is_some() {
                                 st.flops += local_flops;
                                 st.assembly_seconds += local_assembly;
+                                st.recovery_seconds += local_recovery;
                                 guard.armed = false;
                                 cv.notify_all();
                                 return;
+                            }
+                            // elastic parking: workers beyond the live
+                            // crew target sit out on the condvar until a
+                            // join event (or the end of the run) wakes
+                            // them; worker 0 never parks since the
+                            // target is clamped to at least one
+                            if w >= st.crew_target {
+                                st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                                continue;
                             }
                             // memory-cap admission gate: the head task
                             // is popped only while its reservation fits
@@ -410,6 +518,12 @@ fn run_crew<B: FrontBackend + Sync>(
                                     if st.mem_cap.is_some() {
                                         st.planned += mem_cost[v as usize];
                                     }
+                                    // consume one pending injected
+                                    // failure for this execution, if any
+                                    let injected = st.inject_left[v as usize] > 0;
+                                    if injected {
+                                        st.inject_left[v as usize] -= 1;
+                                    }
                                     st.running.push(v);
                                     let team = if plan.malleable() && team_backend {
                                         let active: Vec<u32> = st
@@ -418,11 +532,11 @@ fn run_crew<B: FrontBackend + Sync>(
                                             .chain(st.ready.iter())
                                             .copied()
                                             .collect();
-                                        plan.team_size_of(v, &active)
+                                        plan.team_size_of_crew(v, &active, st.crew_target)
                                     } else {
                                         1
                                     };
-                                    break Duty::Run(v, team);
+                                    break Duty::Run(v, team, injected);
                                 }
                             }
                             if let Some(ot) = st.open.iter_mut().find(|o| o.seats > 0) {
@@ -438,10 +552,10 @@ fn run_crew<B: FrontBackend + Sync>(
                                 st.mem_stalls += 1;
                                 stall_counted = true;
                             }
-                            st = cv.wait(st).unwrap();
+                            st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
                         }
                     };
-                    let (task, team) = match duty {
+                    let (task, team, injected) = match duty {
                         Duty::Help(job) => {
                             // cooperate on the live front until it
                             // closes, then rejoin the scheduler (the
@@ -449,7 +563,7 @@ fn run_crew<B: FrontBackend + Sync>(
                             job.help_reserved();
                             continue;
                         }
-                        Duty::Run(v, team) => (v, team),
+                        Duty::Run(v, team, injected) => (v, team, injected),
                     };
                     let s = task as usize;
                     let sn = &at.symbolic.supernodes[s];
@@ -460,47 +574,89 @@ fn run_crew<B: FrontBackend + Sync>(
                     // shared lock: children blocks were published to
                     // their slots before this task became ready
                     let ta = Instant::now();
-                    assemble_front_arena(at, ap, s, &mut arena, |c| contrib[c].take());
+                    if fault.is_some() {
+                        // fault-tolerant assembly: consume arena-
+                        // accounted *copies* of the children blocks so
+                        // a failed attempt can re-read the originals;
+                        // they are taken (and released) only on success
+                        let kids = &at.tree.nodes[s].children;
+                        let mut clones: Vec<Option<Vec<f64>>> =
+                            Vec::with_capacity(kids.len());
+                        for &c in kids {
+                            clones.push(contrib[c as usize].cloned().map(|src| {
+                                let mut b = arena.alloc_block(src.len());
+                                b.copy_from_slice(&src);
+                                b
+                            }));
+                        }
+                        assemble_front_arena(at, ap, s, &mut arena, |c| {
+                            let i = kids.iter().position(|&k| k as usize == c)?;
+                            clones[i].take()
+                        });
+                    } else {
+                        assemble_front_arena(at, ap, s, &mut arena, |c| contrib[c].take());
+                    }
                     local_assembly += ta.elapsed().as_secs_f64();
                     if malleable {
-                        // team path: outputs ride in the job so helpers
-                        // can reach them through the tile cursor
-                        let panel_buf = vec![0f64; nf * width];
-                        let schur_buf =
-                            if m > 0 { arena.alloc_block(m * m) } else { Vec::new() };
-                        let job =
-                            Arc::new(FrontTeamJob::new(nf, width, panel_buf, schur_buf));
-                        let cap = FrontTeamJob::max_useful_team(nf, width);
-                        let seats = team.min(cap).saturating_sub(1);
-                        if seats > 0 && team_backend {
-                            let mut st = queue.lock().unwrap();
-                            st.open.push(OpenTeam {
-                                task,
-                                seats,
-                                cap,
-                                job: job.clone(),
-                            });
-                            drop(st);
-                            cv.notify_all();
-                        }
-                        let outcome = backend.factor_front_team(arena.front(), &job);
-                        arena.end_front(nf);
-                        // the job closed before factor_front_team
-                        // returned (leader guard), so the buffers are
-                        // exclusively ours again
-                        let (panel, schur) = job.take_outputs();
-                        let members = 1 + job.joined();
-                        let ok = outcome.is_ok();
-                        if ok {
-                            // publish before the counter decrement
-                            if m > 0 {
-                                contrib[s].set(schur);
+                        let mut members = 1usize;
+                        let outcome: Result<()> = if injected {
+                            // injected transient fault: the attempt dies
+                            // after assembly, before the backend runs;
+                            // the front's words are simply dropped
+                            arena.end_front(nf);
+                            Err(anyhow::anyhow!("injected transient fault"))
+                        } else {
+                            // team path: outputs ride in the job so
+                            // helpers can reach them through the tile
+                            // cursor
+                            let panel_buf = vec![0f64; nf * width];
+                            let schur_buf =
+                                if m > 0 { arena.alloc_block(m * m) } else { Vec::new() };
+                            let job =
+                                Arc::new(FrontTeamJob::new(nf, width, panel_buf, schur_buf));
+                            let cap = FrontTeamJob::max_useful_team(nf, width);
+                            let seats = team.min(cap).saturating_sub(1);
+                            if seats > 0 && team_backend {
+                                let mut st = lock_clean(queue);
+                                st.open.push(OpenTeam {
+                                    task,
+                                    seats,
+                                    cap,
+                                    job: job.clone(),
+                                });
+                                drop(st);
+                                cv.notify_all();
                             }
-                            panels[s].set(panel);
-                        } else if m > 0 {
-                            arena.release_block(schur);
+                            let outcome = backend.factor_front_team(arena.front(), &job);
+                            arena.end_front(nf);
+                            // the job closed before factor_front_team
+                            // returned (leader guard), so the buffers are
+                            // exclusively ours again
+                            let (panel, schur) = job.take_outputs();
+                            members = 1 + job.joined();
+                            if outcome.is_ok() {
+                                // publish before the counter decrement
+                                if m > 0 {
+                                    contrib[s].set(schur);
+                                }
+                                panels[s].set(panel);
+                            } else if m > 0 {
+                                arena.release_block(schur);
+                            }
+                            outcome
+                        };
+                        if outcome.is_ok() && fault.is_some() {
+                            // success under a fault plan: the originals
+                            // the assembly worked from copies of are now
+                            // consumed for real
+                            for &c in &at.tree.nodes[s].children {
+                                if let Some(b) = contrib[c as usize].take() {
+                                    arena.release_block(b);
+                                }
+                            }
                         }
-                        let mut st = queue.lock().unwrap();
+                        let mut backoff: Option<u64> = None;
+                        let mut st = lock_clean(queue);
                         st.open.retain(|o| o.task != task);
                         st.running.retain(|&r| r != task);
                         match outcome {
@@ -508,17 +664,67 @@ fn run_crew<B: FrontBackend + Sync>(
                                 local_flops += sn.flops();
                                 st.team_log.push((nf, members));
                                 st.remaining -= 1;
-                                complete(&mut st, at, s, &prio, &mem_release);
-                                replan(&mut st, &plan);
+                                complete(&mut st, at, s, prio, mem_release);
+                                st.completions += 1;
+                                while st.elastic_next < st.elastic.len()
+                                    && st.elastic[st.elastic_next].after_completions
+                                        <= st.completions
+                                {
+                                    let d = st.elastic[st.elastic_next].delta;
+                                    st.elastic_next += 1;
+                                    st.crew_target = (st.crew_target as isize + d)
+                                        .clamp(1, workers as isize)
+                                        as usize;
+                                }
+                                replan(&mut st, plan);
                             }
                             Err(e) => {
-                                if st.error.is_none() {
-                                    st.error = Some(format!("task {s}: {e:#}"));
+                                let mut retry = None;
+                                if let Some(fp) = fault {
+                                    st.attempts[s] += 1;
+                                    if st.attempts[s] <= fp.max_retries {
+                                        retry = Some((st.attempts[s], fp.backoff_ms));
+                                    }
+                                }
+                                match retry {
+                                    Some((attempt, ms)) => {
+                                        // transient: discard the attempt,
+                                        // requeue priority-sorted, back
+                                        // off outside the lock
+                                        st.retries += 1;
+                                        st.lost_flops += sn.flops();
+                                        let pos = st
+                                            .ready
+                                            .binary_search_by(|&x| {
+                                                prio[s].cmp(&prio[x as usize])
+                                            })
+                                            .unwrap_or_else(|i| i);
+                                        st.ready.insert(pos, task);
+                                        backoff = Some(ms.saturating_mul(attempt as u64));
+                                    }
+                                    None => {
+                                        if st.error.is_none() {
+                                            st.error = Some(if fault.is_some() {
+                                                format!("task {s}: retries exhausted: {e:#}")
+                                            } else {
+                                                format!("task {s}: {e:#}")
+                                            });
+                                        }
+                                    }
                                 }
                             }
                         }
                         drop(st);
                         cv.notify_all();
+                        if let Some(ms) = backoff {
+                            // bounded linear backoff, reported as
+                            // recovery time
+                            let tr = Instant::now();
+                            if ms > 0 {
+                                std::thread::sleep(Duration::from_millis(ms));
+                            }
+                            local_recovery += tr.elapsed().as_secs_f64();
+                        }
                     } else {
                         // task-parallel path: one worker per front
                         let outcome: Result<()> = (|| {
@@ -540,14 +746,14 @@ fn run_crew<B: FrontBackend + Sync>(
                             Ok(())
                         })();
                         arena.end_front(nf);
-                        let mut st = queue.lock().unwrap();
+                        let mut st = lock_clean(queue);
                         st.running.retain(|&r| r != task);
                         match outcome {
                             Ok(()) => {
                                 local_flops += sn.flops();
                                 st.team_log.push((nf, 1));
                                 st.remaining -= 1;
-                                complete(&mut st, at, s, &prio, &mem_release);
+                                complete(&mut st, at, s, prio, mem_release);
                             }
                             Err(e) => {
                                 // keep the first failure; later ones are
@@ -565,7 +771,7 @@ fn run_crew<B: FrontBackend + Sync>(
         }
     });
 
-    let st = queue.into_inner().unwrap();
+    let st = queue.into_inner().unwrap_or_else(|p| p.into_inner());
     if let Some(e) = st.error {
         anyhow::bail!("executor failed: {e}");
     }
@@ -588,6 +794,9 @@ fn run_crew<B: FrontBackend + Sync>(
             team_log: st.team_log,
             mem_stalls: st.mem_stalls,
             mem_forced: st.mem_forced,
+            retries: st.retries,
+            lost_flops: st.lost_flops,
+            recovery_seconds: st.recovery_seconds,
         },
     ))
 }
@@ -930,5 +1139,134 @@ mod tests {
         assert!(seen.iter().all(|&s| s), "order is not a permutation");
         let (f, _) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
         assert!(residual(&at, &ap, &f) < 1e-12);
+    }
+
+    #[test]
+    fn empty_fault_plan_matches_plain_malleable_bitwise() {
+        // the self-healing machinery (clone-assembly, retry accounting,
+        // elastic bookkeeping) must be invisible when nothing is
+        // injected
+        let (at, ap, schedule) = setup(9);
+        let plan = FaultPlan::new();
+        assert!(plan.is_noop());
+        let (fm, rm) = execute_malleable(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        let (ff, rf) =
+            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan).unwrap();
+        assert_bitwise(&fm, &ff, "noop fault plan");
+        assert_eq!(rf.retries, 0);
+        assert_eq!(rf.lost_flops, 0.0);
+        assert_eq!(rf.recovery_seconds, 0.0);
+        assert_eq!(rf.team_log.len(), rm.team_log.len());
+    }
+
+    #[test]
+    fn injected_failures_retry_to_bitwise_identical_factors() {
+        let (at, ap, schedule) = setup(8);
+        let n = at.tree.len();
+        let mut plan = FaultPlan::new();
+        plan.parse_inject("every:3:1", n).unwrap();
+        let plan = plan.inject_task(n - 1, 2);
+        let injected: usize = plan.injected_failures(n).iter().sum();
+        assert!(injected > 2, "fixture too small to exercise retries");
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (ff, report) =
+            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan).unwrap();
+        assert_bitwise(&fs, &ff, "injected faults");
+        // every injected failure burns one retry (counts stay under the
+        // per-task budget), the redone flops are accounted, and every
+        // front still completes exactly once
+        assert_eq!(report.retries, injected);
+        assert!(report.lost_flops > 0.0);
+        assert!(report.recovery_seconds >= 0.0);
+        assert_eq!(report.team_log.len(), n);
+        assert!(residual(&at, &ap, &ff) < 1e-12);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_surfaces_an_error() {
+        let (at, ap, schedule) = setup(6);
+        let mut plan = FaultPlan::new().inject_task(0, 10);
+        plan.max_retries = 2;
+        plan.backoff_ms = 0;
+        let err = execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan)
+            .expect_err("a fault deeper than the retry budget must fail the run");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("retries exhausted"), "unexpected error: {msg}");
+        assert!(msg.contains("injected transient fault"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn elastic_crew_events_keep_factors_bitwise() {
+        let (at, ap, schedule) = setup(9);
+        let mut plan = FaultPlan::new();
+        // shrink the 4-crew to 1 almost immediately, regrow to 3 later
+        plan.parse_elastic("-3@2,+2@12").unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fm, report) =
+            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan).unwrap();
+        assert_bitwise(&fs, &fm, "elastic crew");
+        assert_eq!(report.retries, 0);
+        assert_eq!(report.team_log.len(), at.tree.len());
+    }
+
+    #[test]
+    fn once_slot_tolerates_a_poisoned_mutex() {
+        // regression for the poison-hardening audit: a worker panic
+        // must not turn every subsequent slot access into a second
+        // panic — the write-once protocol makes the state consistent
+        // at any release point
+        let slot = OnceSlot::new();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = slot.0.lock().unwrap();
+            panic!("poison the slot");
+        }));
+        assert!(caught.is_err());
+        assert!(slot.0.is_poisoned());
+        slot.set(vec![2.5]);
+        assert_eq!(slot.cloned(), Some(vec![2.5]));
+        assert_eq!(slot.take(), Some(vec![2.5]));
+        assert_eq!(slot.take(), None);
+    }
+
+    #[test]
+    fn lock_clean_recovers_state_behind_a_poisoned_lock() {
+        let m = Mutex::new(vec![1u32, 2]);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the lock");
+        }));
+        assert!(caught.is_err() && m.is_poisoned());
+        lock_clean(&m).push(3);
+        assert_eq!(*lock_clean(&m), vec![1, 2, 3]);
+    }
+
+    /// Backend that panics (rather than erroring) on every front.
+    struct PanickingBackend;
+
+    impl FrontBackend for PanickingBackend {
+        fn partial(&self, _front: &[f64], _n: usize, _k: usize) -> Result<FrontFactor> {
+            panic!("injected backend panic")
+        }
+
+        fn full(&self, _front: &[f64], _n: usize) -> Result<Vec<f64>> {
+            panic!("injected backend panic")
+        }
+
+        fn name(&self) -> &'static str {
+            "panicking"
+        }
+    }
+
+    #[test]
+    fn panicking_backend_propagates_without_hanging_the_crew() {
+        // the PanicGuard + poison-tolerant locks keep the rest of the
+        // crew orderly: they observe the recorded error and exit, the
+        // scoped join re-raises the original panic instead of
+        // deadlocking on the condvar
+        let (at, ap, schedule) = setup(6);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = execute_parallel(&at, &ap, &schedule, &PanickingBackend, 4);
+        }));
+        assert!(caught.is_err(), "worker panic must propagate, not hang");
     }
 }

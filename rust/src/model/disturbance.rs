@@ -1,0 +1,181 @@
+//! Disturbance model: failure and elasticity events over a platform
+//! (DESIGN.md §13).
+//!
+//! The malleable model (`p^α` speedup, shares re-solvable at any
+//! event) extends naturally to platforms that change under the
+//! schedule. A [`FaultTrace`] is a time-sorted list of disturbance
+//! events against the node indices of a [`crate::model::Platform`]:
+//!
+//! * [`FaultKind::Crash`] — the node dies; every contribution block
+//!   resident on it is lost and the affected subtrees must be
+//!   re-mapped onto survivors ([`crate::sim::faults`]);
+//! * [`FaultKind::Leave`] / [`FaultKind::Join`] — elastic capacity:
+//!   cores leave or join a node mid-run;
+//! * [`FaultKind::Slowdown`] — a transient multiplicative speed drop
+//!   (e.g. co-tenancy interference) that clears after `duration`.
+//!
+//! Traces are deterministic values — generated seeded by
+//! [`crate::workload::generator::random_fault_trace`], serialized in
+//! trace v3 ([`crate::workload::trace`]) — so every fault experiment
+//! is reproducible.
+
+use anyhow::{bail, Result};
+
+/// One disturbance against a platform node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Node `node` dies permanently; resident data is lost.
+    Crash { node: usize },
+    /// `cores` processors leave `node` (capacity must stay positive).
+    Leave { node: usize, cores: f64 },
+    /// `cores` processors join `node`.
+    Join { node: usize, cores: f64 },
+    /// `node` runs at `factor ×` its nominal speed for `duration`
+    /// seconds (factor < 1 is a slowdown; > 1 a transient boost).
+    Slowdown { node: usize, factor: f64, duration: f64 },
+}
+
+impl FaultKind {
+    /// The node this event targets.
+    pub fn node(&self) -> usize {
+        match *self {
+            FaultKind::Crash { node }
+            | FaultKind::Leave { node, .. }
+            | FaultKind::Join { node, .. }
+            | FaultKind::Slowdown { node, .. } => node,
+        }
+    }
+
+    /// Short name used by the trace v3 format and CLI tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash { .. } => "crash",
+            FaultKind::Leave { .. } => "leave",
+            FaultKind::Join { .. } => "join",
+            FaultKind::Slowdown { .. } => "slow",
+        }
+    }
+}
+
+/// A [`FaultKind`] at an absolute simulation time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub time: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, time-sorted disturbance trace.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultTrace {
+    /// Events sorted by time (stable: same-time events keep insertion
+    /// order, which makes replay deterministic).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultTrace {
+    /// The fault-free trace.
+    pub fn empty() -> Self {
+        FaultTrace { events: Vec::new() }
+    }
+
+    /// Build a trace, sorting events by time (stable on ties).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| a.time.total_cmp(&b.time));
+        FaultTrace { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Number of crash events.
+    pub fn crashes(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Crash { .. }))
+            .count()
+    }
+
+    /// Check the trace against a platform of `n_nodes` nodes: finite
+    /// non-negative times, in-range node indices, positive magnitudes,
+    /// and at least one node left uncrashed.
+    pub fn validate(&self, n_nodes: usize) -> Result<()> {
+        let mut crashed = vec![false; n_nodes];
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.time.is_finite() || e.time < 0.0 {
+                bail!("event {i}: bad time {}", e.time);
+            }
+            let node = e.kind.node();
+            if node >= n_nodes {
+                bail!("event {i}: node {node} out of range (platform has {n_nodes})");
+            }
+            match e.kind {
+                FaultKind::Crash { node } => crashed[node] = true,
+                FaultKind::Leave { cores, .. } | FaultKind::Join { cores, .. } => {
+                    if !(cores > 0.0) || !cores.is_finite() {
+                        bail!("event {i}: cores must be positive, got {cores}");
+                    }
+                }
+                FaultKind::Slowdown { factor, duration, .. } => {
+                    if !(factor > 0.0) || !factor.is_finite() {
+                        bail!("event {i}: slowdown factor must be positive, got {factor}");
+                    }
+                    if !(duration > 0.0) || !duration.is_finite() {
+                        bail!("event {i}: slowdown duration must be positive, got {duration}");
+                    }
+                }
+            }
+        }
+        if n_nodes > 0 && crashed.iter().all(|&c| c) {
+            bail!("trace crashes every node; at least one must survive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_by_time() {
+        let t = FaultTrace::new(vec![
+            FaultEvent { time: 5.0, kind: FaultKind::Crash { node: 1 } },
+            FaultEvent { time: 1.0, kind: FaultKind::Join { node: 0, cores: 2.0 } },
+        ]);
+        assert_eq!(t.events[0].time, 1.0);
+        assert_eq!(t.events[1].time, 5.0);
+        assert_eq!(t.crashes(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_events() {
+        let n = 2;
+        let bad = [
+            FaultEvent { time: -1.0, kind: FaultKind::Crash { node: 0 } },
+            FaultEvent { time: f64::INFINITY, kind: FaultKind::Crash { node: 0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::Crash { node: 2 } },
+            FaultEvent { time: 1.0, kind: FaultKind::Leave { node: 0, cores: 0.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::Slowdown { node: 0, factor: -0.5, duration: 1.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::Slowdown { node: 0, factor: 0.5, duration: 0.0 } },
+        ];
+        for e in bad {
+            assert!(FaultTrace::new(vec![e]).validate(n).is_err(), "{e:?}");
+        }
+        assert!(FaultTrace::empty().validate(n).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_total_crash() {
+        let t = FaultTrace::new(vec![
+            FaultEvent { time: 1.0, kind: FaultKind::Crash { node: 0 } },
+            FaultEvent { time: 2.0, kind: FaultKind::Crash { node: 1 } },
+        ]);
+        assert!(t.validate(2).is_err());
+        assert!(t.validate(3).is_ok());
+    }
+}

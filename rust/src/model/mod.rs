@@ -8,12 +8,14 @@
 //! paper's dataset has trees of depth 75 000, far beyond any default
 //! thread stack.
 
+mod disturbance;
 mod platform;
 mod sp;
 mod tree;
 
 pub mod dot;
 
+pub use disturbance::{FaultEvent, FaultKind, FaultTrace};
 pub use platform::Platform;
 pub use sp::{SpGraph, SpNode, SpNodeId};
 pub use tree::{TaskTree, TreeNode};

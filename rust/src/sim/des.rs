@@ -42,7 +42,7 @@ pub struct DesResult {
 /// processor) so that α-unaware policies are charged fairly, exactly
 /// as §7 evaluates them. PM allocations stay ≥ 1 processor whenever
 /// the tree was `Agreg`-transformed, in which case this matches `p^α`.
-fn speedup(share: f64, alpha: f64) -> f64 {
+pub(crate) fn speedup(share: f64, alpha: f64) -> f64 {
     if share >= 1.0 {
         share.powf(alpha)
     } else {

@@ -1,0 +1,896 @@
+//! Failure/elasticity replay over the distributed DES (DESIGN.md §13).
+//!
+//! [`replay_faults_distributed`] replays a static-share schedule (PM
+//! or proportional, as [`super::des::simulate_distributed`]) while a
+//! [`FaultTrace`] disturbs the platform. The engine is segmented: it
+//! runs the ordinary time-keyed completion heap up to the next
+//! disturbance, charges partial progress to every running task, applies
+//! the event, re-solves the per-node shares over the *remaining*
+//! forest (the malleable model makes every event a cheap re-solve) and
+//! continues. With an empty trace it delegates to the fault-free
+//! engine, so fault-free replay is bit-identical by construction.
+//!
+//! **Tie-break.** A disturbance landing exactly on a task boundary
+//! processes the completion first: the segment drains every heap event
+//! with `t <= event.time` before the event applies. A crash at the
+//! instant a remote subtree finishes therefore loses nothing — its
+//! parent has already consumed the contribution (deterministic, see
+//! the boundary tests).
+//!
+//! **Crash semantics.** A crash kills a node permanently. Results are
+//! lost by *residency*: a completed task's contribution block lives on
+//! its own node until the parent **starts** (assembly consumes it);
+//! survivors keep consumed contributions inside their running fronts.
+//! So the lost set is: every incomplete task of the dead node, plus
+//! every completed task (on any node) whose parent has not started,
+//! whose block lived on the dead node, plus — recursively — completed
+//! dead-node children of lost dead-node parents (the re-run parent
+//! must re-consume them). Lost components are either re-mapped onto
+//! survivors ([`crate::dist::mapping::remap_lost`]) or the whole tree
+//! restarts from scratch on the surviving platform; under
+//! [`RecoveryPolicy::Best`] both candidates are evaluated by an exact
+//! run-to-completion lookahead and the better one is kept, so
+//! re-mapped recovery is never worse than restart by construction
+//! (the PR 4 candidate-selection pattern).
+
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+use crate::dist::mapping::{map_tree, remap_lost, MappingStrategy};
+use crate::model::{FaultKind, FaultTrace, Platform, TaskTree};
+use crate::sched::SchedWorkspace;
+
+use super::des::{simulate_distributed_with_workspace, speedup, Policy};
+
+/// How a crash is recovered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Evaluate re-map and restart by lookahead, keep the better —
+    /// never worse than either alternative alone.
+    Best,
+    /// Always re-map lost components onto survivors.
+    RemapOnly,
+    /// Always restart the whole tree on the surviving platform (the
+    /// checkpoint-free baseline).
+    RestartOnly,
+}
+
+/// Result of a fault replay.
+#[derive(Debug, Clone)]
+pub struct FaultReplay {
+    /// Makespan under the disturbance trace.
+    pub makespan: f64,
+    /// Final completion time per task (re-run tasks carry their last
+    /// completion).
+    pub completion: Vec<f64>,
+    /// DES completion events processed (re-runs count again).
+    pub events: usize,
+    /// Disturbance events applied.
+    pub fault_events: usize,
+    /// Work units destroyed by crashes (and restarts).
+    pub lost_work: f64,
+    /// Lost components re-mapped onto survivors.
+    pub remapped_subtrees: usize,
+    /// Whether any crash was recovered by restart-from-scratch.
+    pub restarted: bool,
+    /// Makespan of the same schedule with no disturbance.
+    pub fault_free_makespan: f64,
+    /// Final task → node assignment (after any re-mapping).
+    pub node_of: Vec<usize>,
+}
+
+impl FaultReplay {
+    /// Absolute recovery overhead over the fault-free run.
+    pub fn recovery_overhead(&self) -> f64 {
+        self.makespan - self.fault_free_makespan
+    }
+}
+
+/// Shared-memory fault replay: one node of `p` processors. Crashes are
+/// rejected by validation (the only node must survive); leave/join and
+/// slowdown events model elastic capacity.
+pub fn replay_faults(
+    tree: &TaskTree,
+    alpha: f64,
+    p: f64,
+    policy: Policy,
+    trace: &FaultTrace,
+) -> Result<FaultReplay> {
+    let platform = Platform::Shared { p };
+    let node_of = vec![0usize; tree.len()];
+    replay_faults_distributed(tree, alpha, &platform, &node_of, policy, trace, RecoveryPolicy::Best)
+}
+
+/// Min-heap entry ordered by an f64 key (the fault engine's copy of
+/// the DES event — same ordering so the fault-free path is
+/// bit-identical).
+#[derive(PartialEq)]
+struct FEv(f64, u32);
+impl Eq for FEv {}
+impl PartialOrd for FEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for FEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap
+        other.0.partial_cmp(&self.0).unwrap()
+    }
+}
+
+/// Mutable replay state — cloneable so recovery candidates can be
+/// evaluated by lookahead without committing.
+#[derive(Clone)]
+struct EngineState {
+    node_of: Vec<usize>,
+    cores: Vec<f64>,
+    slow: Vec<f64>,
+    alive: Vec<bool>,
+    remaining: Vec<f64>,
+    completed: Vec<bool>,
+    /// Pushed to the completion heap at some point: the task began and
+    /// its children's contribution blocks were consumed.
+    started: Vec<bool>,
+    completion: Vec<f64>,
+    unfinished: Vec<usize>,
+    ready_all: Vec<f64>,
+    events: usize,
+    lost_work: f64,
+    remapped: usize,
+    restarted: bool,
+}
+
+/// Internal (expanded) disturbance: slowdowns become a set/clear pair.
+enum Dist {
+    Crash(usize),
+    Leave(usize, f64),
+    Join(usize, f64),
+    SlowSet(usize, f64),
+    SlowClear(usize),
+}
+
+struct Timed {
+    time: f64,
+    what: Dist,
+    /// Counts toward `fault_events` (slowdown-clear markers do not).
+    counted: bool,
+}
+
+/// Per-node static shares over the remaining (incomplete) forest —
+/// the exact float path of the distributed engine, restricted to alive
+/// nodes at their current capacity.
+fn solve_shares(
+    tree2: &TaskTree,
+    alpha: f64,
+    policy: Policy,
+    st: &EngineState,
+    ws: &mut SchedWorkspace,
+) -> Vec<f64> {
+    let n = tree2.len();
+    let mut share = vec![0f64; n];
+    let mut member = vec![false; n];
+    for k in 0..st.alive.len() {
+        if !st.alive[k] {
+            continue;
+        }
+        for (t, m) in member.iter_mut().enumerate() {
+            *m = !st.completed[t] && st.node_of[t] == k;
+        }
+        let p_k = st.cores[k] * st.slow[k];
+        match policy {
+            Policy::Pm => {
+                if let Some(r) = ws.induced_task_ratios(tree2, &member, alpha, n) {
+                    for t in 0..n {
+                        if member[t] {
+                            share[t] = r[t] * p_k;
+                        }
+                    }
+                }
+            }
+            Policy::Proportional => {
+                if let Some(g) = crate::model::SpGraph::from_induced(tree2, &member) {
+                    let shares = crate::sched::proportional::proportional_shares(&g, p_k);
+                    for &v in g.topo() {
+                        if let crate::model::SpNode::Leaf { task: Some(t), .. } =
+                            g.nodes[v as usize]
+                        {
+                            let ratio = shares[v as usize] / p_k;
+                            share[t as usize] = ratio * p_k;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    share
+}
+
+/// Run the completion heap from `t_start` up to `until` (inclusive —
+/// the boundary tie-break), or to exhaustion when `None`. Charges
+/// partial progress to still-running tasks at the cut.
+#[allow(clippy::too_many_arguments)]
+fn run_segment(
+    tree: &TaskTree,
+    tree2: &mut TaskTree,
+    alpha: f64,
+    policy: Policy,
+    ws: &mut SchedWorkspace,
+    st: &mut EngineState,
+    t_start: f64,
+    until: Option<f64>,
+) {
+    let n = tree.len();
+    for v in 0..n {
+        tree2.nodes[v].len = st.remaining[v];
+    }
+    let share = solve_shares(tree2, alpha, policy, st, ws);
+    let len_now = st.remaining.clone();
+    let dur = |v: u32| -> f64 {
+        let len = len_now[v as usize];
+        if len <= 0.0 {
+            0.0
+        } else {
+            len / speedup(share[v as usize], alpha)
+        }
+    };
+    let mut heap: BinaryHeap<FEv> = BinaryHeap::with_capacity(n);
+    let mut run_since = vec![t_start; n];
+    let mut in_heap = vec![false; n];
+    for v in 0..n as u32 {
+        let vi = v as usize;
+        if !st.completed[vi] && st.unfinished[vi] == 0 {
+            heap.push(FEv(t_start + dur(v), v));
+            in_heap[vi] = true;
+            st.started[vi] = true;
+        }
+    }
+    while let Some(&FEv(t, v)) = heap.peek() {
+        if let Some(u) = until {
+            if t > u {
+                break;
+            }
+        }
+        heap.pop();
+        st.events += 1;
+        let vi = v as usize;
+        in_heap[vi] = false;
+        st.completed[vi] = true;
+        st.remaining[vi] = 0.0;
+        st.completion[vi] = t;
+        if let Some(parent) = tree.nodes[vi].parent {
+            let pi = parent as usize;
+            st.unfinished[pi] -= 1;
+            st.ready_all[pi] = st.ready_all[pi].max(t);
+            if st.unfinished[pi] == 0 {
+                st.started[pi] = true;
+                run_since[pi] = st.ready_all[pi];
+                in_heap[pi] = true;
+                heap.push(FEv(st.ready_all[pi] + dur(parent), parent));
+            }
+        }
+    }
+    if let Some(u) = until {
+        for v in 0..n {
+            if in_heap[v] {
+                let done = (u - run_since[v]).max(0.0) * speedup(share[v], alpha);
+                st.remaining[v] = (st.remaining[v] - done).max(0.0);
+            }
+        }
+    }
+}
+
+/// Recompute dependency counters and ready times from the completion
+/// flags (after a crash reset rewires them wholesale).
+fn rebuild_dependencies(tree: &TaskTree, st: &mut EngineState) {
+    let n = tree.len();
+    for v in 0..n {
+        st.unfinished[v] = 0;
+        st.ready_all[v] = 0.0;
+    }
+    for v in 0..n {
+        if let Some(p) = tree.nodes[v].parent {
+            let pi = p as usize;
+            if st.completed[v] {
+                st.ready_all[pi] = st.ready_all[pi].max(st.completion[v]);
+            } else {
+                st.unfinished[pi] += 1;
+            }
+        }
+    }
+}
+
+/// Run a candidate state to completion and report its makespan (exact
+/// when the crash is the last disturbance; a lookahead bound
+/// otherwise).
+fn lookahead(
+    tree: &TaskTree,
+    alpha: f64,
+    policy: Policy,
+    ws: &mut SchedWorkspace,
+    st: &EngineState,
+    t_now: f64,
+) -> f64 {
+    let mut s = st.clone();
+    let mut scratch = tree.clone();
+    run_segment(tree, &mut scratch, alpha, policy, ws, &mut s, t_now, None);
+    s.completion.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+/// Kill `node` at time `at`: compute the lost set, reset it, and
+/// recover per `recovery` (re-map vs restart candidates).
+#[allow(clippy::too_many_arguments)]
+fn apply_crash(
+    tree: &TaskTree,
+    alpha: f64,
+    policy: Policy,
+    ws: &mut SchedWorkspace,
+    st: &mut EngineState,
+    node: usize,
+    at: f64,
+    recovery: RecoveryPolicy,
+) -> Result<()> {
+    st.alive[node] = false;
+    if !st.alive.iter().any(|&a| a) {
+        bail!("all nodes crashed by t={at}");
+    }
+    let n = tree.len();
+    // Lost set, parents before children so the recursive residency
+    // rule sees the parent's fate first.
+    let mut needed = vec![false; n];
+    for &v in &tree.topo_down() {
+        let vi = v as usize;
+        if st.node_of[vi] != node {
+            continue;
+        }
+        needed[vi] = if !st.completed[vi] {
+            true
+        } else {
+            match tree.nodes[vi].parent {
+                None => false,
+                Some(p) => {
+                    let pi = p as usize;
+                    // block still resident (parent never consumed it),
+                    // or a lost dead-node parent must re-consume it
+                    !st.started[pi] || (st.node_of[pi] == node && needed[pi])
+                }
+            }
+        };
+    }
+    let lost: f64 = (0..n)
+        .filter(|&v| needed[v])
+        .map(|v| tree.nodes[v].len - st.remaining[v])
+        .sum();
+    st.lost_work += lost;
+    for v in 0..n {
+        if needed[v] {
+            st.remaining[v] = tree.nodes[v].len;
+            st.completed[v] = false;
+            st.started[v] = false;
+            st.completion[v] = 0.0;
+        }
+    }
+    rebuild_dependencies(tree, st);
+
+    // Candidate A: re-map lost components onto the least-busy
+    // survivors (power-space LPT seeded with survivor residuals).
+    let inv = 1.0 / alpha;
+    let mut node_load = vec![0f64; st.alive.len()];
+    for v in 0..n {
+        if !st.completed[v] && !needed[v] {
+            node_load[st.node_of[v]] += st.remaining[v].max(0.0).powf(inv);
+        }
+    }
+    let comps = remap_lost(tree, &needed, &st.remaining, alpha, &st.alive, &st.cores, &node_load);
+    let mut remapped = st.clone();
+    for &(root, k) in &comps {
+        let mut stack = vec![root];
+        while let Some(t) = stack.pop() {
+            let ti = t as usize;
+            remapped.node_of[ti] = k;
+            for &c in &tree.nodes[ti].children {
+                if needed[c as usize] {
+                    stack.push(c);
+                }
+            }
+        }
+    }
+    remapped.remapped += comps.len();
+
+    // Candidate B: restart from scratch — discard all progress and
+    // re-map the whole tree onto the surviving platform.
+    let mut restart = st.clone();
+    let extra: f64 = (0..n).map(|v| tree.nodes[v].len - restart.remaining[v]).sum();
+    restart.lost_work += extra;
+    let alive_ids: Vec<usize> = (0..st.alive.len()).filter(|&k| st.alive[k]).collect();
+    let speeds: Vec<f64> = alive_ids.iter().map(|&k| st.cores[k]).collect();
+    let survivors = Platform::Heterogeneous { speeds };
+    let fresh = map_tree(tree, &survivors, alpha, MappingStrategy::Pm, 1.1);
+    for v in 0..n {
+        restart.node_of[v] = alive_ids[fresh.node_of[v]];
+        restart.remaining[v] = tree.nodes[v].len;
+        restart.completed[v] = false;
+        restart.started[v] = false;
+        restart.completion[v] = 0.0;
+    }
+    rebuild_dependencies(tree, &mut restart);
+    restart.restarted = true;
+
+    *st = match recovery {
+        RecoveryPolicy::RemapOnly => remapped,
+        RecoveryPolicy::RestartOnly => restart,
+        RecoveryPolicy::Best => {
+            let ma = lookahead(tree, alpha, policy, ws, &remapped, at);
+            let mb = lookahead(tree, alpha, policy, ws, &restart, at);
+            if ma <= mb {
+                remapped
+            } else {
+                restart
+            }
+        }
+    };
+    Ok(())
+}
+
+/// Replay a distributed static-share schedule under `trace`,
+/// recovering crashes per `recovery`. With an empty trace this
+/// delegates to [`super::des::simulate_distributed`] — bit-identical
+/// fault-free behaviour by construction.
+pub fn replay_faults_distributed(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    trace: &FaultTrace,
+    recovery: RecoveryPolicy,
+) -> Result<FaultReplay> {
+    let n = tree.len();
+    let n_nodes = platform.num_nodes();
+    if node_of.len() != n {
+        bail!("node_of covers {} tasks, tree has {n}", node_of.len());
+    }
+    for &k in node_of {
+        if k >= n_nodes {
+            bail!("task mapped to node {k}, platform has {n_nodes} nodes");
+        }
+    }
+    if !matches!(policy, Policy::Pm | Policy::Proportional) {
+        bail!("fault replay supports static-share policies (Pm, Proportional), got {policy:?}");
+    }
+    trace.validate(n_nodes)?;
+
+    let mut ws = SchedWorkspace::new();
+    let base = simulate_distributed_with_workspace(tree, alpha, platform, node_of, policy, &mut ws);
+    let fault_free = base.makespan;
+    if trace.is_empty() {
+        return Ok(FaultReplay {
+            makespan: base.makespan,
+            completion: base.completion,
+            events: base.events,
+            fault_events: 0,
+            lost_work: 0.0,
+            remapped_subtrees: 0,
+            restarted: false,
+            fault_free_makespan: fault_free,
+            node_of: node_of.to_vec(),
+        });
+    }
+
+    let mut timed: Vec<Timed> = Vec::with_capacity(trace.len() * 2);
+    for e in &trace.events {
+        match e.kind {
+            FaultKind::Crash { node } => {
+                timed.push(Timed { time: e.time, what: Dist::Crash(node), counted: true });
+            }
+            FaultKind::Leave { node, cores } => {
+                timed.push(Timed { time: e.time, what: Dist::Leave(node, cores), counted: true });
+            }
+            FaultKind::Join { node, cores } => {
+                timed.push(Timed { time: e.time, what: Dist::Join(node, cores), counted: true });
+            }
+            FaultKind::Slowdown { node, factor, duration } => {
+                timed.push(Timed { time: e.time, what: Dist::SlowSet(node, factor), counted: true });
+                timed.push(Timed {
+                    time: e.time + duration,
+                    what: Dist::SlowClear(node),
+                    counted: false,
+                });
+            }
+        }
+    }
+    timed.sort_by(|a, b| a.time.total_cmp(&b.time));
+
+    let mut st = EngineState {
+        node_of: node_of.to_vec(),
+        cores: (0..n_nodes).map(|k| platform.node_cores(k)).collect(),
+        slow: vec![1.0; n_nodes],
+        alive: vec![true; n_nodes],
+        remaining: tree.nodes.iter().map(|t| t.len).collect(),
+        completed: vec![false; n],
+        started: vec![false; n],
+        completion: vec![0f64; n],
+        unfinished: tree.nodes.iter().map(|t| t.children.len()).collect(),
+        ready_all: vec![0f64; n],
+        events: 0,
+        lost_work: 0.0,
+        remapped: 0,
+        restarted: false,
+    };
+    let mut tree2 = tree.clone();
+    let mut t_now = 0.0f64;
+    let mut fault_events = 0usize;
+    for ev in &timed {
+        run_segment(tree, &mut tree2, alpha, policy, &mut ws, &mut st, t_now, Some(ev.time));
+        t_now = t_now.max(ev.time);
+        if st.completed.iter().all(|&c| c) {
+            break;
+        }
+        if ev.counted {
+            fault_events += 1;
+        }
+        match ev.what {
+            Dist::Crash(k) => {
+                if st.alive[k] {
+                    apply_crash(tree, alpha, policy, &mut ws, &mut st, k, ev.time, recovery)?;
+                }
+            }
+            Dist::Leave(k, c) => {
+                if st.alive[k] {
+                    st.cores[k] -= c;
+                    if st.cores[k] <= 1e-12 {
+                        bail!("node {k} has no cores left at t={}", ev.time);
+                    }
+                }
+            }
+            Dist::Join(k, c) => {
+                if st.alive[k] {
+                    st.cores[k] += c;
+                }
+            }
+            Dist::SlowSet(k, f) => {
+                if st.alive[k] {
+                    st.slow[k] = f;
+                }
+            }
+            Dist::SlowClear(k) => {
+                if st.alive[k] {
+                    st.slow[k] = 1.0;
+                }
+            }
+        }
+    }
+    if !st.completed.iter().all(|&c| c) {
+        run_segment(tree, &mut tree2, alpha, policy, &mut ws, &mut st, t_now, None);
+    }
+    let makespan = st.completion.iter().fold(0.0f64, |a, &b| a.max(b));
+    Ok(FaultReplay {
+        makespan,
+        completion: st.completion,
+        events: st.events,
+        fault_events,
+        lost_work: st.lost_work,
+        remapped_subtrees: st.remapped,
+        restarted: st.restarted,
+        fault_free_makespan: fault_free,
+        node_of: st.node_of,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::FaultEvent;
+    use crate::sim::des::{simulate, simulate_distributed};
+    use crate::sim::memreplay::{replay_memory_spans, spans_from_completions};
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+    use crate::workload::generator::{random_tree, synthetic_mem_weights, TreeClass};
+
+    fn bits(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn empty_trace_matches_shared_engine_bitwise() {
+        // the satellite property: fault-free replay IS the fault-free
+        // engine, down to the last bit — makespan, completions, event
+        // count, and the memory replay derived from the completions
+        check(
+            Config { cases: 24, seed: 0xFA117 },
+            "empty trace == shared DES (bitwise)",
+            |rng: &mut Rng| {
+                let classes = [TreeClass::Uniform, TreeClass::Deep, TreeClass::Binary];
+                let t = random_tree(classes[rng.below(3)], rng.range(2, 120), rng);
+                let w = synthetic_mem_weights(&t, rng);
+                let alpha = rng.range_f64(0.55, 1.0);
+                let p = rng.range_f64(2.0, 32.0);
+                let policy = if rng.bool(0.5) { Policy::Pm } else { Policy::Proportional };
+                (t, w, alpha, p, policy)
+            },
+            |(t, w, alpha, p, policy)| {
+                let base = simulate(t, *alpha, *p, *policy);
+                let f = replay_faults(t, *alpha, *p, *policy, &FaultTrace::empty())
+                    .map_err(|e| e.to_string())?;
+                if f.makespan.to_bits() != base.makespan.to_bits() {
+                    return Err(format!("makespan {} vs {}", f.makespan, base.makespan));
+                }
+                if bits(&f.completion) != bits(&base.completion) {
+                    return Err("completion vectors differ".into());
+                }
+                if f.events != base.events {
+                    return Err(format!("events {} vs {}", f.events, base.events));
+                }
+                let sa = spans_from_completions(t, &base.completion);
+                let sb = spans_from_completions(t, &f.completion);
+                let ra = replay_memory_spans(t, w, &sa, None);
+                let rb = replay_memory_spans(t, w, &sb, None);
+                if ra.peak.to_bits() != rb.peak.to_bits() {
+                    return Err(format!("mem peak {} vs {}", ra.peak, rb.peak));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_trace_matches_distributed_engine_bitwise() {
+        check(
+            Config { cases: 16, seed: 0xFA118 },
+            "empty trace == distributed DES (bitwise)",
+            |rng: &mut Rng| {
+                let t = random_tree(TreeClass::Uniform, rng.range(4, 150), rng);
+                let alpha = rng.range_f64(0.55, 1.0);
+                let nodes = rng.range(2, 5);
+                let p = rng.range_f64(2.0, 16.0);
+                let plat = Platform::Homogeneous { nodes, p };
+                let m = map_tree(&t, &plat, alpha, MappingStrategy::Pm, 1.1);
+                (t, alpha, plat, m.node_of)
+            },
+            |(t, alpha, plat, node_of)| {
+                let base = simulate_distributed(t, *alpha, plat, node_of, Policy::Pm);
+                let f = replay_faults_distributed(
+                    t,
+                    *alpha,
+                    plat,
+                    node_of,
+                    Policy::Pm,
+                    &FaultTrace::empty(),
+                    RecoveryPolicy::Best,
+                )
+                .map_err(|e| e.to_string())?;
+                if f.makespan.to_bits() != base.makespan.to_bits()
+                    || bits(&f.completion) != bits(&base.completion)
+                    || f.events != base.events
+                {
+                    return Err("fault-free distributed replay diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn crash_at_infinity_equals_fault_free_bitwise() {
+        // a crash after the last completion never fires: every segment
+        // drains to exhaustion first, so the replay is the fault-free
+        // run bit-for-bit
+        check(
+            Config { cases: 16, seed: 0xFA119 },
+            "crash at t=∞ == fault-free (bitwise)",
+            |rng: &mut Rng| {
+                let t = random_tree(TreeClass::Uniform, rng.range(4, 150), rng);
+                let alpha = rng.range_f64(0.55, 1.0);
+                let nodes = rng.range(2, 5);
+                let plat = Platform::Homogeneous { nodes, p: 4.0 };
+                let m = map_tree(&t, &plat, alpha, MappingStrategy::Pm, 1.1);
+                let victim = rng.below(nodes);
+                (t, alpha, plat, m.node_of, victim)
+            },
+            |(t, alpha, plat, node_of, victim)| {
+                let base = simulate_distributed(t, *alpha, plat, node_of, Policy::Pm);
+                let trace = FaultTrace::new(vec![FaultEvent {
+                    time: 1e300,
+                    kind: FaultKind::Crash { node: *victim },
+                }]);
+                let f = replay_faults_distributed(
+                    t,
+                    *alpha,
+                    plat,
+                    node_of,
+                    Policy::Pm,
+                    &trace,
+                    RecoveryPolicy::Best,
+                )
+                .map_err(|e| e.to_string())?;
+                if f.makespan.to_bits() != base.makespan.to_bits()
+                    || bits(&f.completion) != bits(&base.completion)
+                {
+                    return Err("late crash perturbed the run".into());
+                }
+                if f.lost_work != 0.0 || f.restarted || f.remapped_subtrees != 0 {
+                    return Err("late crash charged recovery".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// root(2.0)@node0 ← a(0.0)@node1 ← leaf(8.0)@node1, plus
+    /// leaf2(8.0)@node0 under the root. α = 1, p = 4 per node: both
+    /// leaves finish at t = 2, the zero-length `a` cascades at t = 2,
+    /// the root starts at t = 2 and finishes at 2.5.
+    fn boundary_fixture() -> (TaskTree, Platform, Vec<usize>) {
+        let t = TaskTree::from_parents(&[0, 0, 1, 0], &[2.0, 0.0, 8.0, 8.0]).unwrap();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0, 1, 1, 0];
+        (t, plat, node_of)
+    }
+
+    #[test]
+    fn boundary_crash_processes_completion_before_the_event() {
+        // the zero-duration-span satellite: a crash landing exactly on
+        // the subtree's completion (including its zero-length cascade)
+        // must lose nothing
+        let (t, plat, node_of) = boundary_fixture();
+        let base = simulate_distributed(&t, 1.0, &plat, &node_of, Policy::Pm);
+        assert!((base.makespan - 2.5).abs() < 1e-12, "fixture makespan {}", base.makespan);
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 2.0,
+            kind: FaultKind::Crash { node: 1 },
+        }]);
+        let f = replay_faults_distributed(
+            &t,
+            1.0,
+            &plat,
+            &node_of,
+            Policy::Pm,
+            &trace,
+            RecoveryPolicy::Best,
+        )
+        .unwrap();
+        assert_eq!(f.lost_work, 0.0, "boundary completion must precede the crash");
+        assert_eq!(f.remapped_subtrees, 0);
+        assert!(!f.restarted);
+        assert!((f.makespan - 2.5).abs() < 1e-12, "makespan {}", f.makespan);
+    }
+
+    #[test]
+    fn crash_just_before_the_boundary_loses_the_subtree() {
+        // control for the tie-break: ε earlier the subtree is still
+        // running, so its work is lost and re-run on the survivor
+        let (t, plat, node_of) = boundary_fixture();
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 2.0 - 1e-6,
+            kind: FaultKind::Crash { node: 1 },
+        }]);
+        let f = replay_faults_distributed(
+            &t,
+            1.0,
+            &plat,
+            &node_of,
+            Policy::Pm,
+            &trace,
+            RecoveryPolicy::Best,
+        )
+        .unwrap();
+        assert!(f.lost_work > 7.9, "nearly all of the leaf is lost, got {}", f.lost_work);
+        assert!(f.makespan > 2.5 + 1e-6, "recovery must cost time, got {}", f.makespan);
+        assert!(f.node_of.iter().all(|&k| k == 0), "everything ends on the survivor");
+    }
+
+    #[test]
+    fn best_recovery_never_worse_than_restart() {
+        // the acceptance property: candidate selection makes re-mapped
+        // recovery ≤ restart-from-scratch on every trace
+        check(
+            Config { cases: 24, seed: 0xFA120 },
+            "Best ≤ RestartOnly",
+            |rng: &mut Rng| {
+                let classes = [TreeClass::Uniform, TreeClass::Recent, TreeClass::Binary];
+                let t = random_tree(classes[rng.below(3)], rng.range(6, 120), rng);
+                let alpha = rng.range_f64(0.55, 1.0);
+                let nodes = rng.range(2, 4);
+                let plat = Platform::Homogeneous { nodes, p: 4.0 };
+                let m = map_tree(&t, &plat, alpha, MappingStrategy::Pm, 1.1);
+                let victim = rng.below(nodes);
+                let frac = rng.range_f64(0.05, 0.95);
+                (t, alpha, plat, m.node_of, victim, frac)
+            },
+            |(t, alpha, plat, node_of, victim, frac)| {
+                let base = simulate_distributed(t, *alpha, plat, node_of, Policy::Pm);
+                let trace = FaultTrace::new(vec![FaultEvent {
+                    time: frac * base.makespan,
+                    kind: FaultKind::Crash { node: *victim },
+                }]);
+                let run = |rec| {
+                    replay_faults_distributed(t, *alpha, plat, node_of, Policy::Pm, &trace, rec)
+                        .map_err(|e| e.to_string())
+                };
+                let best = run(RecoveryPolicy::Best)?;
+                let restart = run(RecoveryPolicy::RestartOnly)?;
+                if best.makespan > restart.makespan * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "best {} worse than restart {}",
+                        best.makespan, restart.makespan
+                    ));
+                }
+                if !best.makespan.is_finite() || best.makespan <= 0.0 {
+                    return Err(format!("degenerate recovered makespan {}", best.makespan));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut rng = Rng::new(0xDE7);
+        let t = random_tree(TreeClass::Uniform, 80, &mut rng);
+        let plat = Platform::Homogeneous { nodes: 3, p: 4.0 };
+        let m = map_tree(&t, &plat, 0.8, MappingStrategy::Pm, 1.1);
+        let base = simulate_distributed(&t, 0.8, &plat, &m.node_of, Policy::Pm);
+        let trace = FaultTrace::new(vec![
+            FaultEvent { time: 0.2 * base.makespan, kind: FaultKind::Slowdown { node: 0, factor: 0.5, duration: 0.2 * base.makespan } },
+            FaultEvent { time: 0.4 * base.makespan, kind: FaultKind::Crash { node: 1 } },
+            FaultEvent { time: 0.5 * base.makespan, kind: FaultKind::Leave { node: 2, cores: 1.0 } },
+            FaultEvent { time: 0.7 * base.makespan, kind: FaultKind::Join { node: 2, cores: 2.0 } },
+        ]);
+        let a = replay_faults_distributed(
+            &t, 0.8, &plat, &m.node_of, Policy::Pm, &trace, RecoveryPolicy::Best,
+        )
+        .unwrap();
+        let b = replay_faults_distributed(
+            &t, 0.8, &plat, &m.node_of, Policy::Pm, &trace, RecoveryPolicy::Best,
+        )
+        .unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(bits(&a.completion), bits(&b.completion));
+        assert_eq!(a.lost_work.to_bits(), b.lost_work.to_bits());
+        assert!(a.makespan.is_finite() && a.makespan > 0.0);
+    }
+
+    #[test]
+    fn elastic_capacity_moves_the_makespan_the_right_way() {
+        // shared platform (1 node): leaving cores slows the run, a
+        // transient slowdown too; joining cores speeds it up
+        let mut rng = Rng::new(0xE1A);
+        let t = random_tree(TreeClass::Binary, 40, &mut rng);
+        let base = simulate(&t, 0.8, 8.0, Policy::Pm);
+        let at = 0.3 * base.makespan;
+        let run = |kind| {
+            let trace = FaultTrace::new(vec![FaultEvent { time: at, kind }]);
+            replay_faults(&t, 0.8, 8.0, Policy::Pm, &trace).unwrap()
+        };
+        let leave = run(FaultKind::Leave { node: 0, cores: 6.0 });
+        assert!(leave.makespan > base.makespan * (1.0 + 1e-9), "leave must slow the run");
+        let join = run(FaultKind::Join { node: 0, cores: 8.0 });
+        assert!(join.makespan < base.makespan * (1.0 - 1e-9), "join must speed the run");
+        let slow = run(FaultKind::Slowdown { node: 0, factor: 0.25, duration: 0.2 * base.makespan });
+        assert!(slow.makespan > base.makespan * (1.0 + 1e-9), "slowdown must slow the run");
+        assert!(slow.makespan < leave.makespan, "a transient hit beats a permanent leave");
+        assert_eq!(leave.fault_events, 1);
+    }
+
+    #[test]
+    fn leave_below_zero_cores_is_rejected() {
+        let t = TaskTree::from_parents(&[0, 0], &[1.0, 4.0]).unwrap();
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 0.1,
+            kind: FaultKind::Leave { node: 0, cores: 8.0 },
+        }]);
+        assert!(replay_faults(&t, 0.9, 4.0, Policy::Pm, &trace).is_err());
+    }
+
+    #[test]
+    fn crash_on_shared_platform_is_rejected_by_validation() {
+        let t = TaskTree::from_parents(&[0, 0], &[1.0, 4.0]).unwrap();
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 0.1,
+            kind: FaultKind::Crash { node: 0 },
+        }]);
+        assert!(replay_faults(&t, 0.9, 4.0, Policy::Pm, &trace).is_err());
+    }
+}

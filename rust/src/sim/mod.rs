@@ -14,15 +14,22 @@
 //! The DES also has a distributed mode
 //! ([`des::simulate_distributed`], paper §6): per-node static-share
 //! schedules over a task→node mapping, with cross-node dependency
-//! stalls (DESIGN.md §11), and a **memory replay** mode
+//! stalls (DESIGN.md §11), a **memory replay** mode
 //! ([`memreplay`], DESIGN.md §12) that tracks live words over time for
 //! any materialized schedule — shared or distributed — reporting peak,
-//! timeline and cap-induced stalls against [`crate::mem::MemWeights`].
+//! timeline and cap-induced stalls against [`crate::mem::MemWeights`],
+//! and a **fault replay** mode ([`faults`], DESIGN.md §13) that
+//! disturbs the platform with a [`crate::model::FaultTrace`] (crashes,
+//! elastic leave/join, transient slowdowns), re-solving shares at
+//! every event and recovering crashes by subtree re-mapping with a
+//! restart-from-scratch fallback.
 
 pub mod des;
+pub mod faults;
 pub mod kerneldag;
 pub mod memreplay;
 
 pub use des::{simulate, simulate_distributed, DesResult, DistDesResult, Policy};
+pub use faults::{replay_faults, replay_faults_distributed, FaultReplay, RecoveryPolicy};
 pub use kerneldag::{simulate_dag, timing_curve, KernelDag, MachineModel};
 pub use memreplay::{replay_memory, replay_memory_spans, spans_from_completions, MemReplay};

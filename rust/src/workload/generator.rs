@@ -152,6 +152,42 @@ pub fn synthetic_mem_weights(tree: &TaskTree, rng: &mut Rng) -> crate::mem::MemW
     crate::mem::MemWeights { front, cb }
 }
 
+/// Seedable random disturbance trace over `n_nodes` platform nodes
+/// (DESIGN.md §13): `events` events uniform in `(0, horizon)`, mixing
+/// crashes (at most `n_nodes − 1`, so the platform survives),
+/// leave/join pairs of whole cores, and transient slowdowns. With
+/// `n_nodes == 1` no crashes are generated. Determinism comes from
+/// `rng` alone, so fault experiments are reproducible artifacts.
+pub fn random_fault_trace(
+    n_nodes: usize,
+    horizon: f64,
+    events: usize,
+    rng: &mut Rng,
+) -> crate::model::FaultTrace {
+    use crate::model::{FaultEvent, FaultKind};
+    let mut out = Vec::with_capacity(events);
+    let mut crashes_left = n_nodes.saturating_sub(1);
+    for _ in 0..events {
+        let time = rng.range_f64(0.0, horizon).max(horizon * 1e-6);
+        let node = rng.below(n_nodes);
+        let kind = match rng.below(4) {
+            0 if crashes_left > 0 => {
+                crashes_left -= 1;
+                FaultKind::Crash { node }
+            }
+            1 => FaultKind::Leave { node, cores: (1 + rng.below(2)) as f64 },
+            2 => FaultKind::Join { node, cores: (1 + rng.below(2)) as f64 },
+            _ => FaultKind::Slowdown {
+                node,
+                factor: rng.range_f64(0.2, 0.9),
+                duration: rng.range_f64(0.05, 0.3) * horizon,
+            },
+        };
+        out.push(FaultEvent { time, kind });
+    }
+    crate::model::FaultTrace::new(out)
+}
+
 /// Analysis trees of in-repo sparse problems (the "real" subset).
 pub fn analysis_trees(rng: &mut Rng) -> Vec<(String, TaskTree)> {
     let mut out = Vec::new();
@@ -218,6 +254,24 @@ mod tests {
             t.validate().unwrap();
             assert_eq!(t.len(), 500);
         }
+    }
+
+    #[test]
+    fn random_fault_traces_are_valid_sorted_and_deterministic() {
+        for n_nodes in [1usize, 2, 4] {
+            let mut rng = Rng::new(0xFA);
+            let t = random_fault_trace(n_nodes, 100.0, 12, &mut rng);
+            t.validate(n_nodes).unwrap();
+            assert_eq!(t.len(), 12);
+            for w in t.events.windows(2) {
+                assert!(w[0].time <= w[1].time, "trace must be time-sorted");
+            }
+            assert!(t.crashes() < n_nodes.max(1), "platform must survive");
+            let mut rng2 = Rng::new(0xFA);
+            assert_eq!(t, random_fault_trace(n_nodes, 100.0, 12, &mut rng2));
+        }
+        let mut rng = Rng::new(0xFB);
+        assert!(random_fault_trace(1, 50.0, 40, &mut rng).crashes() == 0);
     }
 
     #[test]

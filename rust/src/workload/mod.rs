@@ -24,5 +24,7 @@
 pub mod generator;
 pub mod trace;
 
-pub use generator::{dataset, synthetic_mem_weights, DatasetSpec, TreeClass};
-pub use trace::{read_tree, read_tree_mem, write_tree, write_tree_mem};
+pub use generator::{dataset, random_fault_trace, synthetic_mem_weights, DatasetSpec, TreeClass};
+pub use trace::{
+    read_tree, read_tree_faults, read_tree_mem, write_tree, write_tree_faults, write_tree_mem,
+};

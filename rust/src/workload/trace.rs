@@ -17,8 +17,27 @@
 //! ```
 //! Column counts must be consistent across lines; v1 readers
 //! ([`parse_tree`]) accept v2 files and ignore the weights.
-//! Deterministic float formatting keeps traces diff-stable across
-//! runs.
+//!
+//! The v3 extension appends an optional *disturbance section* after
+//! the node lines (DESIGN.md §13): a single-integer event count, then
+//! one `time kind node [args]` line per event of a
+//! [`crate::model::FaultTrace`]:
+//!
+//! ```text
+//! # malltree tree v3 (parent len [front cb]; time kind node [args])
+//! <n>
+//! <parent_0> <len_0> [...]
+//! ...
+//! <k>
+//! <time> crash <node>
+//! <time> leave <node> <cores>
+//! <time> join <node> <cores>
+//! <time> slow <node> <factor> <duration>
+//! ```
+//!
+//! v1/v2 readers ([`parse_tree`], [`parse_tree_mem`]) accept v3 files
+//! and drop the disturbances. Deterministic float formatting keeps
+//! traces diff-stable across runs.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
@@ -26,7 +45,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::mem::MemWeights;
-use crate::model::TaskTree;
+use crate::model::{FaultEvent, FaultKind, FaultTrace, TaskTree};
 
 /// Write `tree` to `path` (v1: no memory weights).
 pub fn write_tree(tree: &TaskTree, path: &Path) -> Result<()> {
@@ -61,6 +80,47 @@ pub fn write_tree_mem(tree: &TaskTree, mem: &MemWeights, path: &Path) -> Result<
     Ok(())
 }
 
+/// Write `tree` — with optional memory weights — plus a disturbance
+/// trace to `path` (v3).
+pub fn write_tree_faults(
+    tree: &TaskTree,
+    mem: Option<&MemWeights>,
+    faults: &FaultTrace,
+    path: &Path,
+) -> Result<()> {
+    if let Some(m) = mem {
+        m.validate(tree)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# malltree tree v3 (parent len [front cb]; time kind node [args])")?;
+    writeln!(w, "{}", tree.len())?;
+    for (i, node) in tree.nodes.iter().enumerate() {
+        let parent = node.parent.map(|p| p as usize).unwrap_or(i);
+        match mem {
+            Some(m) => {
+                writeln!(w, "{} {:e} {:e} {:e}", parent, node.len, m.front[i], m.cb[i])?
+            }
+            None => writeln!(w, "{} {:e}", parent, node.len)?,
+        }
+    }
+    writeln!(w, "{}", faults.len())?;
+    for e in &faults.events {
+        match e.kind {
+            FaultKind::Crash { node } => writeln!(w, "{:e} crash {node}", e.time)?,
+            FaultKind::Leave { node, cores } => {
+                writeln!(w, "{:e} leave {node} {cores:e}", e.time)?
+            }
+            FaultKind::Join { node, cores } => writeln!(w, "{:e} join {node} {cores:e}", e.time)?,
+            FaultKind::Slowdown { node, factor, duration } => {
+                writeln!(w, "{:e} slow {node} {factor:e} {duration:e}", e.time)?
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Read a tree from `path`, ignoring memory weights if present.
 pub fn read_tree(path: &Path) -> Result<TaskTree> {
     read_tree_mem(path).map(|(t, _)| t)
@@ -68,9 +128,17 @@ pub fn read_tree(path: &Path) -> Result<TaskTree> {
 
 /// Read a tree and, when the trace is v2, its memory weights.
 pub fn read_tree_mem(path: &Path) -> Result<(TaskTree, Option<MemWeights>)> {
+    read_tree_faults(path).map(|(t, m, _)| (t, m))
+}
+
+/// Read a tree with memory weights (v2+) and disturbance trace (v3)
+/// when present.
+pub fn read_tree_faults(
+    path: &Path,
+) -> Result<(TaskTree, Option<MemWeights>, Option<FaultTrace>)> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
-    parse_tree_mem(std::io::BufReader::new(f))
+    parse_tree_full(std::io::BufReader::new(f))
 }
 
 /// Parse the trace format from any reader, ignoring memory weights.
@@ -79,8 +147,17 @@ pub fn parse_tree<R: BufRead>(reader: R) -> Result<TaskTree> {
 }
 
 /// Parse the trace format, returning memory weights for v2 traces
-/// (`None` for v1). Column counts must be consistent across lines.
+/// (`None` for v1) and dropping any v3 disturbance section. Column
+/// counts must be consistent across lines.
 pub fn parse_tree_mem<R: BufRead>(reader: R) -> Result<(TaskTree, Option<MemWeights>)> {
+    parse_tree_full(reader).map(|(t, m, _)| (t, m))
+}
+
+/// Parse the full trace format: tree, optional memory weights (v2),
+/// optional disturbance section (v3).
+pub fn parse_tree_full<R: BufRead>(
+    reader: R,
+) -> Result<(TaskTree, Option<MemWeights>, Option<FaultTrace>)> {
     let mut lines = reader
         .lines()
         .map(|l| l.map_err(anyhow::Error::from))
@@ -128,9 +205,62 @@ pub fn parse_tree_mem<R: BufRead>(reader: R) -> Result<(TaskTree, Option<MemWeig
             bail!("node {i}: trailing columns beyond `parent len front cb`");
         }
     }
-    if lines.next().is_some() {
-        bail!("trailing data after {n} nodes");
-    }
+    // optional v3 disturbance section: a single-integer event count,
+    // then `time kind node [args]` lines — anything else is garbage
+    let faults = match lines.next() {
+        None => None,
+        Some(line) => {
+            let line = line?;
+            let k: usize = match line.trim().parse() {
+                Ok(k) => k,
+                Err(_) => bail!("trailing data after {n} nodes"),
+            };
+            let mut events = Vec::with_capacity(k);
+            for i in 0..k {
+                let l = lines
+                    .next()
+                    .with_context(|| format!("missing disturbance line {i}"))??;
+                let toks: Vec<&str> = l.split_whitespace().collect();
+                let [time, kind, node, args @ ..] = toks.as_slice() else {
+                    bail!("disturbance {i}: expected `time kind node [args]`");
+                };
+                let time: f64 = time
+                    .parse()
+                    .with_context(|| format!("bad time, disturbance {i}"))?;
+                let node: usize = node
+                    .parse()
+                    .with_context(|| format!("bad node, disturbance {i}"))?;
+                let farg = |j: usize, what: &str| -> Result<f64> {
+                    args.get(j)
+                        .with_context(|| format!("disturbance {i}: missing {what}"))?
+                        .parse::<f64>()
+                        .with_context(|| format!("bad {what}, disturbance {i}"))
+                };
+                let (kind, used) = match *kind {
+                    "crash" => (FaultKind::Crash { node }, 0),
+                    "leave" => (FaultKind::Leave { node, cores: farg(0, "cores")? }, 1),
+                    "join" => (FaultKind::Join { node, cores: farg(0, "cores")? }, 1),
+                    "slow" => (
+                        FaultKind::Slowdown {
+                            node,
+                            factor: farg(0, "factor")?,
+                            duration: farg(1, "duration")?,
+                        },
+                        2,
+                    ),
+                    other => bail!("disturbance {i}: unknown kind {other:?}"),
+                };
+                if args.len() > used {
+                    bail!("disturbance {i}: trailing columns");
+                }
+                events.push(FaultEvent { time, kind });
+            }
+            if lines.next().is_some() {
+                bail!("trailing data after {k} disturbance events");
+            }
+            Some(FaultTrace::new(events))
+        }
+    };
     let tree = TaskTree::from_parents(&parents, &lens)?;
     let mem = if has_mem == Some(true) {
         let m = MemWeights { front, cb };
@@ -139,7 +269,7 @@ pub fn parse_tree_mem<R: BufRead>(reader: R) -> Result<(TaskTree, Option<MemWeig
     } else {
         None
     };
-    Ok((tree, mem))
+    Ok((tree, mem, faults))
 }
 
 #[cfg(test)]
@@ -256,6 +386,57 @@ mod tests {
     fn rejects_trailing_garbage() {
         let text = "2\n0 1.0\n0 2.0\n0 3.0\n";
         assert!(parse_tree(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn v3_round_trip_with_and_without_weights() {
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 2.0, 3.0]).unwrap();
+        // dyadic values so exact equality survives the text format
+        let trace = FaultTrace::new(vec![
+            FaultEvent { time: 0.5, kind: FaultKind::Crash { node: 1 } },
+            FaultEvent { time: 1.25, kind: FaultKind::Leave { node: 0, cores: 2.0 } },
+            FaultEvent { time: 2.0, kind: FaultKind::Join { node: 0, cores: 1.0 } },
+            FaultEvent {
+                time: 3.5,
+                kind: FaultKind::Slowdown { node: 2, factor: 0.5, duration: 0.75 },
+            },
+        ]);
+        let p = tmp("v3_plain.tree");
+        write_tree_faults(&t, None, &trace, &p).unwrap();
+        let (t2, m2, f2) = read_tree_faults(&p).unwrap();
+        assert_eq!(t2.len(), 3);
+        assert!(m2.is_none());
+        assert_eq!(f2.unwrap(), trace);
+        let mut rng = Rng::new(9);
+        let w = synthetic_mem_weights(&t, &mut rng);
+        let p = tmp("v3_mem.tree");
+        write_tree_faults(&t, Some(&w), &trace, &p).unwrap();
+        let (_, m3, f3) = read_tree_faults(&p).unwrap();
+        assert!(m3.is_some());
+        assert_eq!(f3.unwrap(), trace);
+        // v1/v2 readers accept v3 files and drop the disturbances
+        let (t4, m4) = read_tree_mem(&p).unwrap();
+        assert_eq!(t4.len(), 3);
+        assert!(m4.is_some());
+        assert_eq!(read_tree(&p).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_disturbance_sections() {
+        for bad in [
+            "1\n0 1.0\n2\n5e-1 crash 0\n",          // truncated event list
+            "1\n0 1.0\n1\n5e-1 melt 0\n",           // unknown kind
+            "1\n0 1.0\n1\n5e-1 leave 0\n",          // missing cores
+            "1\n0 1.0\n1\n5e-1 slow 0 5e-1\n",      // missing duration
+            "1\n0 1.0\n1\n5e-1 crash 0 7\n",        // trailing columns
+            "1\n0 1.0\n1\n5e-1 crash 0\nextra\n",   // data after the events
+            "1\n0 1.0\n1\n5e-1 crash zero\n",       // bad node
+        ] {
+            assert!(parse_tree_full(Cursor::new(bad)).is_err(), "{bad:?}");
+        }
+        // an explicit empty disturbance section is fine
+        let (_, _, f) = parse_tree_full(Cursor::new("1\n0 1.0\n0\n")).unwrap();
+        assert!(f.unwrap().is_empty());
     }
 
     #[test]
