@@ -1,0 +1,262 @@
+//! §Online harness: multi-tenant service under load (DESIGN.md §14).
+//!
+//! A load sweep lands in `BENCH_online.json`: for every α ∈ {0.7, 0.9,
+//! 1.0} and offered load λ/capacity ∈ {0.5, 0.9, 1.2, 2.0} (capacity
+//! calibrated as `p / mean(L)` from a probe stream — with shares capped
+//! at one core per running job the service completes at most `p` units
+//! of work per unit time), the same Poisson job stream is replayed
+//! twice:
+//!
+//! * **admitted** — bounded queue + deadline-driven admission control
+//!   (`deadline_ratio · T_iso` implied deadlines, Reject backpressure);
+//! * **baseline** — no admission control: unbounded queue, no
+//!   deadlines, everything is accepted and eventually completes.
+//!
+//! The headline robustness guarantee is asserted hard whenever the
+//! sweep contains both the 0.9 and 2.0 load cells: at 2× capacity the
+//! admitted service sheds load, its p99 sojourn stays (a) under the
+//! structural bound `deadline_ratio · max T_iso` and (b) within a
+//! constant factor of its own λ = 0.9 p99, while the baseline's p99
+//! diverges past the admitted one.
+//!
+//! CI runs a reduced smoke (`MALLTREE_BENCH_DIV=20`,
+//! `MALLTREE_BENCH_LOADS=0.9,2.0`) and archives the JSON artifact.
+
+mod bench_util;
+
+use bench_util::{env_usize, header, timed};
+use malltree::metrics::Table;
+use malltree::online::{job_stream, OverloadPolicy, ServiceConfig, StreamSpec};
+use malltree::sim::simulate_online;
+use malltree::workload::generator::ArrivalProcess;
+
+/// Admitted p99 at λ = 2.0 must stay within this factor of the λ = 0.9
+/// cell. The structural deadline bound alone gives
+/// `ratio · max T_iso / p99(0.9)` and p99(0.9) is at least about one
+/// isolated runtime, so this is generous but not vacuous.
+const P99_BLOWUP_LIMIT: f64 = 25.0;
+
+fn loads_from_env() -> Vec<f64> {
+    match std::env::var("MALLTREE_BENCH_LOADS") {
+        Ok(s) => {
+            let loads: Vec<f64> = s
+                .split(',')
+                .filter(|t| !t.trim().is_empty())
+                .map(|t| {
+                    let x: f64 = t.trim().parse().unwrap_or_else(|_| {
+                        panic!("MALLTREE_BENCH_LOADS: bad load factor {t:?}")
+                    });
+                    assert!(x.is_finite() && x > 0.0, "load factor must be > 0 (got {x})");
+                    x
+                })
+                .collect();
+            assert!(!loads.is_empty(), "MALLTREE_BENCH_LOADS is empty");
+            loads
+        }
+        Err(_) => vec![0.5, 0.9, 1.2, 2.0],
+    }
+}
+
+struct Cell {
+    key: String,
+    alpha: f64,
+    load: f64,
+    rate: f64,
+    adm_completed: usize,
+    adm_shed: usize,
+    adm_timed_out: usize,
+    adm_p50: f64,
+    adm_p99: f64,
+    adm_slo: f64,
+    adm_throughput: f64,
+    adm_max_queue: usize,
+    base_p99: f64,
+    base_max_queue: usize,
+    bound: f64,
+}
+
+fn main() {
+    header("online_sim", "online service load sweep: admission vs baseline (§Online)");
+    let scale = env_usize("SCALE", 1).max(1);
+    let div = env_usize("DIV", 1).max(1);
+    let jobs_per_cell = (600 * scale / div).max(160);
+    let loads = loads_from_env();
+    let p = 8usize;
+    let queue_cap = 8usize;
+    let deadline_ratio = 8.0;
+
+    let mut table = Table::new(&[
+        "alpha", "load", "completed", "shed", "timeout", "adm p50", "adm p99", "slo",
+        "base p99", "base queue",
+    ]);
+    let mut cells: Vec<Cell> = Vec::new();
+    let (_, sweep_secs) = timed(|| {
+        for alpha in [0.7, 0.9, 1.0] {
+            let spec = StreamSpec {
+                jobs: jobs_per_cell,
+                tenants: 4,
+                min_nodes: 10,
+                max_nodes: 40,
+                seed: 0x0A11 + (alpha * 100.0) as u64,
+            };
+            // calibrate capacity from a probe stream: with per-job
+            // shares in [1, p] the machine retires at most p units of
+            // work per unit time, so it sustains p / mean(L) jobs/sec
+            let probe = job_stream(ArrivalProcess::Poisson { rate: 1.0 }, &spec);
+            let mean_work: f64 =
+                probe.iter().map(|j| j.tree.total_work()).sum::<f64>() / probe.len() as f64;
+            let capacity = p as f64 / mean_work;
+            let max_t_iso = probe
+                .iter()
+                .map(|j| j.tree.total_work())
+                .fold(0.0f64, f64::max)
+                / (p as f64).powf(alpha);
+            for &load in &loads {
+                let rate = load * capacity;
+                let jobs = job_stream(ArrivalProcess::Poisson { rate }, &spec);
+                let adm = simulate_online(
+                    &jobs,
+                    ServiceConfig {
+                        alpha,
+                        p,
+                        queue_cap,
+                        deadline_ratio,
+                        overload: OverloadPolicy::Reject,
+                        ..ServiceConfig::default()
+                    },
+                )
+                .expect("admitted replay");
+                let base = simulate_online(
+                    &jobs,
+                    ServiceConfig {
+                        alpha,
+                        p,
+                        queue_cap: usize::MAX,
+                        deadline_ratio: f64::INFINITY,
+                        overload: OverloadPolicy::Reject,
+                        ..ServiceConfig::default()
+                    },
+                )
+                .expect("baseline replay");
+                assert!(adm.conserved(), "α={alpha} load={load}: admitted run not conserved");
+                assert!(base.conserved(), "α={alpha} load={load}: baseline run not conserved");
+                assert_eq!(
+                    base.shed + base.timed_out,
+                    0,
+                    "the no-admission baseline accepts and completes everything"
+                );
+                // structural bound: every completed admitted job made
+                // its implied deadline `arrival + ratio · T_iso`
+                let bound = deadline_ratio * max_t_iso;
+                assert!(
+                    adm.p99_sojourn <= bound * (1.0 + 1e-9),
+                    "α={alpha} load={load}: admitted p99 {} exceeds deadline bound {bound}",
+                    adm.p99_sojourn
+                );
+                table.row(&[
+                    format!("{alpha:.2}"),
+                    format!("{load:.2}"),
+                    format!("{}/{}", adm.completed, jobs.len()),
+                    format!("{}", adm.shed),
+                    format!("{}", adm.timed_out),
+                    format!("{:.2}", adm.p50_sojourn),
+                    format!("{:.2}", adm.p99_sojourn),
+                    format!("{:.3}", adm.slo_attainment),
+                    format!("{:.2}", base.p99_sojourn),
+                    format!("{}", base.max_queue),
+                ]);
+                cells.push(Cell {
+                    key: format!("a{alpha:.2}_l{load:.2}"),
+                    alpha,
+                    load,
+                    rate,
+                    adm_completed: adm.completed,
+                    adm_shed: adm.shed,
+                    adm_timed_out: adm.timed_out,
+                    adm_p50: adm.p50_sojourn,
+                    adm_p99: adm.p99_sojourn,
+                    adm_slo: adm.slo_attainment,
+                    adm_throughput: adm.throughput,
+                    adm_max_queue: adm.max_queue,
+                    base_p99: base.p99_sojourn,
+                    base_max_queue: base.max_queue,
+                    bound,
+                });
+            }
+        }
+    });
+    print!("{}", table.render());
+    println!("swept {} cells in {sweep_secs:.2}s", cells.len());
+
+    // headline guarantee, per α, whenever the sweep has both cells:
+    // overload sheds, the admitted tail stays within a constant factor
+    // of the near-capacity tail, and the baseline tail diverges
+    for alpha in [0.7, 0.9, 1.0] {
+        let cell = |load: f64| {
+            cells.iter().find(|c| c.alpha == alpha && (c.load - load).abs() < 1e-12)
+        };
+        let (Some(near), Some(over)) = (cell(0.9), cell(2.0)) else { continue };
+        assert!(
+            over.adm_shed > 0,
+            "α={alpha}: 2× overload must shed ({} shed)",
+            over.adm_shed
+        );
+        assert!(over.adm_completed > 0, "α={alpha}: overload cell completed nothing");
+        assert!(
+            near.adm_p99 > 0.0 && over.adm_p99 <= P99_BLOWUP_LIMIT * near.adm_p99,
+            "α={alpha}: admitted p99 blew up under overload: {} at λ=2.0 vs {} at λ=0.9",
+            over.adm_p99,
+            near.adm_p99
+        );
+        assert!(
+            over.base_p99 > over.adm_p99,
+            "α={alpha}: baseline p99 {} should diverge past admitted p99 {}",
+            over.base_p99,
+            over.adm_p99
+        );
+        println!(
+            "α={alpha}: admitted p99 {:.2} → {:.2} ({:.1}x) under 2x load; baseline {:.2}",
+            near.adm_p99,
+            over.adm_p99,
+            over.adm_p99 / near.adm_p99,
+            over.base_p99
+        );
+    }
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"scale\": {scale},\n  \"div\": {div},\n  \"jobs_per_cell\": {jobs_per_cell},\n  \
+         \"p\": {p},\n  \"queue_cap\": {queue_cap},\n  \"deadline_ratio\": {deadline_ratio},\n"
+    ));
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  \"{}\": {{\"alpha\": {}, \"load\": {}, \"rate\": {:.6e}, \
+             \"completed\": {}, \"shed\": {}, \"timed_out\": {}, \
+             \"p50_sojourn\": {:.6e}, \"p99_sojourn\": {:.6e}, \"slo\": {:.6}, \
+             \"throughput\": {:.6e}, \"max_queue\": {}, \"deadline_bound\": {:.6e}, \
+             \"baseline_p99\": {:.6e}, \"baseline_max_queue\": {}}}{}\n",
+            c.key,
+            c.alpha,
+            c.load,
+            c.rate,
+            c.adm_completed,
+            c.adm_shed,
+            c.adm_timed_out,
+            c.adm_p50,
+            c.adm_p99,
+            c.adm_slo,
+            c.adm_throughput,
+            c.adm_max_queue,
+            c.bound,
+            c.base_p99,
+            c.base_max_queue,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("}\n");
+    let out = bench_util::bench_output_path("BENCH_online.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

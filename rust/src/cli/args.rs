@@ -2,7 +2,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 /// Parsed argument bag.
 #[derive(Debug, Clone)]
@@ -72,6 +72,46 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("--{name} {v}: not an integer")),
         }
     }
+
+    /// Numeric option that must be finite and strictly positive
+    /// (rejects NaN, ±inf, zero and negatives with the offending value).
+    pub fn get_f64_positive(&self, name: &str, default: f64) -> Result<f64> {
+        let v = self.get_f64(name, default)?;
+        if !v.is_finite() || v <= 0.0 {
+            bail!("--{name} must be a finite number > 0 (got {v})");
+        }
+        Ok(v)
+    }
+
+    /// Numeric option that must be finite and non-negative (fault
+    /// fractions, cap ratios of zero are meaningful).
+    pub fn get_f64_nonneg(&self, name: &str, default: f64) -> Result<f64> {
+        let v = self.get_f64(name, default)?;
+        if !v.is_finite() || v < 0.0 {
+            bail!("--{name} must be a finite number >= 0 (got {v})");
+        }
+        Ok(v)
+    }
+
+    /// A malleability exponent: must lie in `(0, 1]` (the `p^α` model
+    /// is only concave there).
+    pub fn get_alpha(&self, name: &str, default: f64) -> Result<f64> {
+        let v = self.get_f64(name, default)?;
+        if !(v > 0.0 && v <= 1.0) {
+            bail!("--{name} must be in (0, 1], the malleable speedup exponent (got {v})");
+        }
+        Ok(v)
+    }
+
+    /// A positive usize option (`0` is rejected with a pointer at the
+    /// flag, e.g. core or node counts).
+    pub fn get_usize_positive(&self, name: &str, default: usize) -> Result<usize> {
+        let v = self.get_usize(name, default)?;
+        if v == 0 {
+            bail!("--{name} must be >= 1");
+        }
+        Ok(v)
+    }
 }
 
 #[cfg(test)]
@@ -109,5 +149,42 @@ mod tests {
     fn bad_number_errors() {
         let a = args("cmd --alpha banana");
         assert!(a.get_f64("alpha", 1.0).is_err());
+    }
+
+    #[test]
+    fn alpha_getter_enforces_the_unit_interval() {
+        for bad in ["NaN", "0", "-0.5", "1.5", "inf"] {
+            let a = args(&format!("cmd --alpha {bad}"));
+            assert!(a.get_alpha("alpha", 0.9).is_err(), "accepted --alpha {bad}");
+        }
+        assert_eq!(args("cmd --alpha 1.0").get_alpha("alpha", 0.9).unwrap(), 1.0);
+        assert_eq!(args("cmd").get_alpha("alpha", 0.9).unwrap(), 0.9);
+    }
+
+    #[test]
+    fn positive_getter_rejects_nan_zero_negative_and_infinite() {
+        for bad in ["NaN", "0", "-2", "inf", "-inf"] {
+            let a = args(&format!("cmd --cap-ratio {bad}"));
+            assert!(
+                a.get_f64_positive("cap-ratio", 1.0).is_err(),
+                "accepted --cap-ratio {bad}"
+            );
+        }
+        assert_eq!(args("cmd --cap-ratio 0.4").get_f64_positive("cap-ratio", 1.0).unwrap(), 0.4);
+    }
+
+    #[test]
+    fn nonneg_getter_allows_zero_but_not_nan_or_negative() {
+        assert_eq!(args("cmd --frac 0").get_f64_nonneg("frac", 0.1).unwrap(), 0.0);
+        for bad in ["NaN", "-0.1", "inf"] {
+            let a = args(&format!("cmd --frac {bad}"));
+            assert!(a.get_f64_nonneg("frac", 0.1).is_err(), "accepted --frac {bad}");
+        }
+    }
+
+    #[test]
+    fn positive_usize_getter_rejects_zero() {
+        assert!(args("cmd --nodes 0").get_usize_positive("nodes", 4).is_err());
+        assert_eq!(args("cmd --nodes 3").get_usize_positive("nodes", 4).unwrap(), 3);
     }
 }

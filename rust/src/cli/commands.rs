@@ -203,8 +203,8 @@ pub fn analyze(args: &mut Args) -> Result<()> {
 
 pub fn schedule(args: &mut Args) -> Result<()> {
     let (name, tree) = load_tree(args)?;
-    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
-    let p = args.get_f64("p", 40.0)?;
+    let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+    let p = args.get_f64_positive("p", 40.0)?;
     let g = SpGraph::from_tree(&tree);
     let (ag, stats) = agreg(&g, alpha, p);
     let pm = PmSolution::solve(&ag, alpha).makespan_const(p);
@@ -247,8 +247,8 @@ pub fn distribute(args: &mut Args) -> Result<()> {
     use crate::model::Platform;
 
     let (name, tree) = load_tree(args)?;
-    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
-    let lambda = args.get_f64("lambda", 1.1)?;
+    let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+    let lambda = args.get_f64_positive("lambda", 1.1)?;
     let strategy = MappingStrategy::parse(args.get("mapping").unwrap_or("pm"))?;
     let platform = if let Some(spec) = args.get("speeds") {
         let speeds = spec
@@ -262,7 +262,7 @@ pub fn distribute(args: &mut Args) -> Result<()> {
         Platform::Heterogeneous { speeds }
     } else {
         let nodes = args.get_usize("nodes", 2)?;
-        let p = args.get_f64("p", 8.0)?;
+        let p = args.get_f64_positive("p", 8.0)?;
         if nodes <= 1 {
             Platform::Shared { p }
         } else {
@@ -332,7 +332,7 @@ pub fn distribute(args: &mut Args) -> Result<()> {
 
 pub fn simulate(args: &mut Args) -> Result<()> {
     let trees = args.get_usize("trees", 100)?;
-    let p = args.get_f64("p", 40.0)?;
+    let p = args.get_f64_positive("p", 40.0)?;
     let seed = args.get_usize("seed", 0xDA7A)? as u64;
     let max_nodes = args.get_usize("max-nodes", 20_000)?;
     let spec = DatasetSpec {
@@ -416,9 +416,9 @@ pub fn simulate(args: &mut Args) -> Result<()> {
         if nodes < 2 {
             bail!("--faults needs --nodes >= 2 (crash recovery re-maps onto survivors)");
         }
-        let node_cores = args.get_f64("node-cores", 8.0)?;
-        let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
-        let lambda = args.get_f64("lambda", 1.1)?;
+        let node_cores = args.get_f64_positive("node-cores", 8.0)?;
+        let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+        let lambda = args.get_f64_positive("lambda", 1.1)?;
         let subset = args.get_usize("fault-trees", 6)?.min(corpus.len());
         let platform = Platform::Homogeneous { nodes, p: node_cores };
         platform.validate()?;
@@ -484,8 +484,8 @@ pub fn memory(args: &mut Args) -> Result<()> {
 
     let (name, tree, w, source) = load_tree_mem(args)?;
     w.validate(&tree)?;
-    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
-    let p = args.get_f64("p", 8.0)?;
+    let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+    let p = args.get_f64_positive("p", 8.0)?;
     let order_sel = args.get("order").unwrap_or("liu").to_string();
     if order_sel != "liu" && order_sel != "default" {
         anyhow::bail!("unknown --order {order_sel} (liu|default)");
@@ -515,13 +515,12 @@ pub fn memory(args: &mut Args) -> Result<()> {
         replay.peak / liu_peak.max(1e-300)
     );
 
-    let cap = if let Some(r) = args.get("cap-ratio") {
-        let r: f64 = r.parse().context("--cap-ratio R")?;
-        Some(r * replay.peak)
+    let cap = if args.get("cap-ratio").is_some() {
+        Some(args.get_f64_positive("cap-ratio", 1.0)? * replay.peak)
+    } else if args.get("cap").is_some() {
+        Some(args.get_f64_positive("cap", 1.0)?)
     } else {
-        args.get("cap")
-            .map(|c| c.parse::<f64>().context("--cap WORDS"))
-            .transpose()?
+        None
     };
     if let Some(cap) = cap {
         let b = bounded_schedule(&tree, &w, alpha, &profile, cap);
@@ -574,8 +573,8 @@ pub fn batch(args: &mut Args) -> Result<()> {
     use crate::sched::batch::{effective_threads, schedule_batch, BatchConfig};
 
     let trees_n = args.get_usize("trees", 200)?;
-    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
-    let p = args.get_f64("p", 40.0)?;
+    let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+    let p = args.get_f64_positive("p", 40.0)?;
     let threads = args.get_usize("threads", 0)?;
     let min_nodes = args.get_usize("min-nodes", 1_000)?;
     let max_nodes = args.get_usize("max-nodes", 20_000)?;
@@ -647,9 +646,9 @@ pub fn factorize(args: &mut Args) -> Result<()> {
 
     let (name, a, perm) = load_problem(args)?;
     let amalg = args.get_usize("amalgamate", 4)?;
-    let alpha = args.get_f64("alpha", DEFAULT_ALPHA)?;
-    let p = args.get_f64("p", 8.0)?;
-    let workers = args.get_usize("workers", 4)?;
+    let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+    let p = args.get_f64_positive("p", 8.0)?;
+    let workers = args.get_usize_positive("workers", 4)?;
     // --malleable: realize the schedule's fractional shares as worker
     // teams per front (share-driven team sizes + intra-front tile
     // parallelism) instead of one worker per front
@@ -792,8 +791,90 @@ pub fn kernelsim(args: &mut Args) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
-    let (alpha, fit) = fit_alpha(&curve, args.get_f64("pcap", 10.0)?);
-    println!("alpha = {alpha:.3} (r² = {:.4}, p <= {})", fit.r2, args.get_f64("pcap", 10.0)?);
+    let pcap = args.get_f64_positive("pcap", 10.0)?;
+    let (alpha, fit) = fit_alpha(&curve, pcap);
+    println!("alpha = {alpha:.3} (r² = {:.4}, p <= {pcap})", fit.r2);
+    Ok(())
+}
+
+/// Online multi-tenant scheduling service (DESIGN.md §14): replay a
+/// job-arrival stream through the admission-controlled service and
+/// report throughput, sojourn quantiles and SLO attainment.
+pub fn serve(args: &mut Args) -> Result<()> {
+    use crate::online::{
+        job_stream, jobs_from_trace, parse_arrival_spec, ArrivalSource, FairnessMode,
+        OverloadPolicy, ServiceConfig, StreamSpec,
+    };
+    use crate::sim::simulate_online;
+    use crate::util::retry::LinearBackoff;
+
+    let spec = args.get("arrivals").unwrap_or("poisson:2").to_string();
+    let source = parse_arrival_spec(&spec)?;
+    let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+    let p = args.get_usize_positive("p", 8)?;
+    let queue_cap = args.get_usize("admit", 8)?;
+    // inf disables the implied deadline, so the positive getter's
+    // finiteness requirement is relaxed for this one flag
+    let deadline_ratio = args.get_f64("deadline-ratio", f64::INFINITY)?;
+    if deadline_ratio.is_nan() || deadline_ratio <= 0.0 {
+        bail!("--deadline-ratio must be > 0 (got {deadline_ratio}; inf disables deadlines)");
+    }
+    let mode = FairnessMode::parse(args.get("policy").unwrap_or("makespan"))?;
+    let overload = OverloadPolicy::parse(args.get("overload").unwrap_or("reject"))?;
+    let degrade_factor = args.get_f64_positive("degrade-factor", 0.5)?;
+    let retries = args.get_usize("retries", 3)?;
+    let backoff = args.get_f64_nonneg("backoff", 0.5)?;
+    let cfg = ServiceConfig {
+        alpha,
+        p,
+        queue_cap,
+        deadline_ratio,
+        mode,
+        overload,
+        defer: LinearBackoff::new(backoff, retries),
+        degrade_factor,
+    };
+    cfg.validate()?;
+
+    let jobs = match source {
+        ArrivalSource::Process(process) => {
+            let stream = StreamSpec {
+                jobs: args.get_usize("jobs", 200)?,
+                tenants: args.get_usize_positive("tenants", 4)?,
+                min_nodes: args.get_usize_positive("min-nodes", 20)?,
+                max_nodes: args.get_usize_positive("max-nodes", 80)?,
+                seed: args.get_usize("seed", 0xDA7A)? as u64,
+            };
+            job_stream(process, &stream)
+        }
+        ArrivalSource::Trace(path) => jobs_from_trace(&path)?,
+    };
+    println!(
+        "serve: {} jobs [{spec}], alpha={alpha}, p={p}, queue cap {queue_cap}, \
+         deadline ratio {deadline_ratio}, mode {mode:?}, overload {overload:?}",
+        jobs.len()
+    );
+    let report = simulate_online(&jobs, cfg)?;
+    anyhow::ensure!(report.conserved(), "outcome conservation violated");
+    let mut table = Table::new(&["metric", "value"]);
+    for (k, v) in [
+        ("submitted", format!("{}", report.submitted)),
+        ("completed", format!("{}", report.completed)),
+        ("shed", format!("{}", report.shed)),
+        ("timed out", format!("{}", report.timed_out)),
+        ("horizon", format!("{:.4e}", report.horizon)),
+        ("throughput (jobs/s)", format!("{:.4}", report.throughput)),
+        ("p50 sojourn", format!("{:.4e}", report.p50_sojourn)),
+        ("p99 sojourn", format!("{:.4e}", report.p99_sojourn)),
+        ("mean sojourn", format!("{:.4e}", report.mean_sojourn)),
+        ("SLO attainment", format!("{:.3}", report.slo_attainment)),
+        ("max queue depth", format!("{}", report.max_queue)),
+        ("events / resolves", format!("{} / {}", report.events, report.resolves)),
+        ("deferred / degraded", format!("{} / {}", report.deferred, report.degraded)),
+    ] {
+        table.row(&[k.to_string(), v]);
+    }
+    print!("{}", table.render());
     Ok(())
 }
 
@@ -980,6 +1061,44 @@ mod tests {
              --fault-plan every:5:1 --elastic -2@3,+1@10",
         );
         factorize(&mut a).unwrap();
+    }
+
+    #[test]
+    fn serve_command_runs_and_validates_its_flags() {
+        let mut a = args(
+            "--arrivals poisson:4 --jobs 30 --min-nodes 3 --max-nodes 10 -p 4 \
+             --admit 4 --deadline-ratio 4 --policy fair --overload defer",
+        );
+        serve(&mut a).unwrap();
+        for bad in [
+            "--arrivals poisson:0",
+            "--arrivals sawtooth:2",
+            "--arrivals poisson:2 --alpha 2",
+            "--arrivals poisson:2 --alpha NaN",
+            "--arrivals poisson:2 --deadline-ratio 0",
+            "--arrivals poisson:2 --deadline-ratio NaN",
+            "--arrivals poisson:2 --policy lifo",
+            "--arrivals poisson:2 --overload panic",
+            "--arrivals poisson:2 --degrade-factor 0",
+            "--arrivals poisson:2 -p 0",
+        ] {
+            let mut a = args(bad);
+            assert!(serve(&mut a).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn commands_reject_invalid_numeric_flags() {
+        let mut a = args("--grid2d 8 --alpha NaN");
+        assert!(schedule(&mut a).is_err(), "NaN alpha");
+        let mut b = args("--trees 2 --alpha -0.5");
+        assert!(batch(&mut b).is_err(), "negative alpha");
+        let mut c = args("--grid2d 8 --alpha 0.9 -p 0");
+        assert!(schedule(&mut c).is_err(), "zero p");
+        let mut d = args("--grid2d 8 --cap-ratio -1");
+        assert!(memory(&mut d).is_err(), "negative cap ratio");
+        let mut e = args("--grid2d 8 --cap-ratio NaN");
+        assert!(memory(&mut e).is_err(), "NaN cap ratio");
     }
 
     #[test]

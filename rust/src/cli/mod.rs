@@ -17,6 +17,10 @@
 //! malltree memory    --grid2d 32 [--order liu|default]
 //!                    [--cap WORDS | --cap-ratio R]
 //!                    [--pareto [N]]                      memory-aware planning + Pareto front
+//! malltree serve     --arrivals poisson:2 --tenants 4
+//!                    [--policy fair|makespan] [--admit Q]
+//!                    [--deadline-ratio R]
+//!                    [--overload reject|defer|degrade]   online multi-tenant service replay
 //! malltree kernelsim --kind cholesky --n 20000 --b 256   Figure 2-6-style T(p) curve
 //! malltree dataset   --out DIR --trees 600               write the workload corpus
 //! malltree figures                                       regenerate every paper table/figure
@@ -42,6 +46,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "distribute" => commands::distribute(&mut args),
         "factorize" => commands::factorize(&mut args),
         "memory" => commands::memory(&mut args),
+        "serve" => commands::serve(&mut args),
         "kernelsim" => commands::kernelsim(&mut args),
         "dataset" => commands::dataset(&mut args),
         "figures" => commands::figures(&mut args),
@@ -64,6 +69,7 @@ fn usage() -> String {
      \x20 distribute map a tree onto N multicore nodes (Alg 11/12) + cross-node DES\n\
      \x20 factorize  end-to-end numeric multifrontal factorization\n\
      \x20 memory     memory-aware planning: Liu traversal, caps, Pareto front\n\
+     \x20 serve      online multi-tenant service: arrivals, admission, deadlines\n\
      \x20 kernelsim  Figure 2-6 kernel timing curves + alpha fit\n\
      \x20 dataset    write the workload corpus to disk\n\
      \x20 figures    regenerate every paper table/figure (see benches for timing)\n\
@@ -82,7 +88,11 @@ fn usage() -> String {
      \x20 --backend blocked|naive|pjrt (--pjrt is an alias),\n\
      \x20 distribute: --nodes N -p CORES | --speeds P0,P1,.. (heterogeneous),\n\
      \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp,\n\
-     \x20 memory: --order liu|default, --cap WORDS | --cap-ratio R, --pareto [N]\n"
+     \x20 memory: --order liu|default, --cap WORDS | --cap-ratio R, --pareto [N],\n\
+     \x20 serve: --arrivals poisson:RATE|bursty:RATE:B|heavy:RATE:S|trace:FILE,\n\
+     \x20   --jobs N --tenants K --policy fair|makespan --admit QUEUE\n\
+     \x20   --deadline-ratio R --overload reject|defer|degrade\n\
+     \x20   --retries N --backoff F --degrade-factor F\n"
         .to_string()
 }
 

@@ -13,6 +13,8 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::util::retry::LinearBackoff;
+
 /// One elasticity event: after `after_completions` fronts have
 /// completed, the live crew target moves by `delta` workers (clamped
 /// to `1..=workers` by the executor — the crew never empties and never
@@ -71,6 +73,14 @@ impl FaultPlan {
     pub fn elastic_event(mut self, after_completions: usize, delta: isize) -> FaultPlan {
         self.elastic.push(ElasticEvent { after_completions, delta });
         self
+    }
+
+    /// The bounded linear backoff answering this plan's failures: the
+    /// shared [`crate::util::retry`] implementation with `base` in
+    /// milliseconds (attempt `k` sleeps `k × backoff_ms`, up to
+    /// [`FaultPlan::max_retries`] attempts).
+    pub fn backoff(&self) -> LinearBackoff {
+        LinearBackoff::new(self.backoff_ms as f64, self.max_retries)
     }
 
     /// Whether the plan disturbs anything at all. A no-op plan must
@@ -172,6 +182,18 @@ mod tests {
         assert_eq!(p.max_retries, 3);
         assert_eq!(p.backoff_ms, 1);
         assert_eq!(p.injected_failures(5), vec![0; 5]);
+    }
+
+    #[test]
+    fn backoff_is_the_shared_linear_schedule() {
+        let mut p = FaultPlan::new();
+        p.max_retries = 2;
+        p.backoff_ms = 4;
+        let b = p.backoff();
+        assert_eq!(b, LinearBackoff::new(4.0, 2));
+        assert_eq!(b.delay(1), Some(4.0));
+        assert_eq!(b.delay(2), Some(8.0));
+        assert_eq!(b.delay(3), None, "the third failure exhausts the budget");
     }
 
     #[test]

@@ -679,15 +679,16 @@ fn run_crew<B: FrontBackend + Sync>(
                                 replan(&mut st, plan);
                             }
                             Err(e) => {
-                                let mut retry = None;
-                                if let Some(fp) = fault {
+                                // shared linear-backoff schedule
+                                // (util::retry): None both when no
+                                // fault plan is active and when the
+                                // retry budget is exhausted
+                                let retry = fault.and_then(|fp| {
                                     st.attempts[s] += 1;
-                                    if st.attempts[s] <= fp.max_retries {
-                                        retry = Some((st.attempts[s], fp.backoff_ms));
-                                    }
-                                }
+                                    fp.backoff().delay(st.attempts[s])
+                                });
                                 match retry {
-                                    Some((attempt, ms)) => {
+                                    Some(delay_ms) => {
                                         // transient: discard the attempt,
                                         // requeue priority-sorted, back
                                         // off outside the lock
@@ -700,7 +701,7 @@ fn run_crew<B: FrontBackend + Sync>(
                                             })
                                             .unwrap_or_else(|i| i);
                                         st.ready.insert(pos, task);
-                                        backoff = Some(ms.saturating_mul(attempt as u64));
+                                        backoff = Some(delay_ms.round() as u64);
                                     }
                                     None => {
                                         if st.error.is_none() {

@@ -32,6 +32,10 @@
 //! * [`mem`] — memory-aware scheduling: per-task memory weights, Liu's
 //!   optimal sequential traversal, and memory-bounded malleable
 //!   schedules (the makespan / peak-memory Pareto front);
+//! * [`online`] — the online multi-tenant scheduling service: stochastic
+//!   job-arrival streams, admission control from the pooled `L_G/p^α`
+//!   bound, deadline timeouts, and reject/defer/degrade backpressure
+//!   under overload;
 //! * [`sim`] — simulators: a discrete-event engine for malleable
 //!   schedules (plus a memory-replay mode), and the tiled kernel-DAG
 //!   simulator used to reproduce the paper's §3 speedup measurements;
@@ -49,6 +53,7 @@ pub mod frontal;
 pub mod mem;
 pub mod metrics;
 pub mod model;
+pub mod online;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

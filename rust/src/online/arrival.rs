@@ -1,0 +1,273 @@
+//! Job arrivals for the online service: seeded stochastic streams
+//! (over the [`crate::workload::generator::ArrivalProcess`] family) and
+//! v4 multi-job trace files ([`crate::workload::trace`]).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::TaskTree;
+use crate::util::rng::Rng;
+use crate::workload::generator::{arrival_times, random_tree, ArrivalProcess, TreeClass};
+use crate::workload::trace::{read_jobs, TraceJob};
+
+/// One job submitted to the online service. `id`s are dense
+/// (`0..n_jobs`) and double as indices into the service's state.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Dense job id (index into the stream).
+    pub id: usize,
+    /// Owning tenant.
+    pub tenant: usize,
+    /// Absolute submission time.
+    pub arrival: f64,
+    /// Scheduling weight (> 0).
+    pub priority: f64,
+    /// Absolute explicit deadline (`f64::INFINITY` = none; the service
+    /// may still imply one via its `deadline_ratio`).
+    pub deadline: f64,
+    /// The malleable task tree to schedule.
+    pub tree: TaskTree,
+}
+
+/// Where a `serve` run's jobs come from.
+#[derive(Debug, Clone)]
+pub enum ArrivalSource {
+    /// Generate a synthetic stream from a stochastic process.
+    Process(ArrivalProcess),
+    /// Replay a v4 multi-job trace file.
+    Trace(PathBuf),
+}
+
+/// Parse a CLI `--arrivals` spec: `poisson:RATE`, `bursty:RATE:BURST`,
+/// `heavy:RATE:SHAPE` or `trace:FILE`. Rates must be finite and
+/// positive; burst sizes >= 1; Pareto shapes > 1.
+pub fn parse_arrival_spec(spec: &str) -> Result<ArrivalSource> {
+    let num = |what: &str, v: &str| -> Result<f64> {
+        let x: f64 = v
+            .parse()
+            .with_context(|| format!("--arrivals {spec:?}: bad {what} {v:?}"))?;
+        if !x.is_finite() {
+            bail!("--arrivals {spec:?}: {what} must be finite (got {x})");
+        }
+        Ok(x)
+    };
+    let toks: Vec<&str> = spec.splitn(2, ':').collect();
+    let source = match toks.as_slice() {
+        ["trace", path] => return Ok(ArrivalSource::Trace(PathBuf::from(path))),
+        _ => {
+            let parts: Vec<&str> = spec.split(':').collect();
+            match parts.as_slice() {
+                ["poisson", r] => {
+                    let rate = num("rate", r)?;
+                    if rate <= 0.0 {
+                        bail!("--arrivals {spec:?}: rate must be > 0 (got {rate})");
+                    }
+                    ArrivalProcess::Poisson { rate }
+                }
+                ["bursty", r, b] => {
+                    let (rate, burst) = (num("rate", r)?, num("burst size", b)?);
+                    if rate <= 0.0 {
+                        bail!("--arrivals {spec:?}: rate must be > 0 (got {rate})");
+                    }
+                    if burst < 1.0 {
+                        bail!("--arrivals {spec:?}: burst size must be >= 1 (got {burst})");
+                    }
+                    ArrivalProcess::Bursty { rate, burst }
+                }
+                ["heavy", r, a] => {
+                    let (rate, shape) = (num("rate", r)?, num("shape", a)?);
+                    if rate <= 0.0 {
+                        bail!("--arrivals {spec:?}: rate must be > 0 (got {rate})");
+                    }
+                    if shape <= 1.0 {
+                        bail!(
+                            "--arrivals {spec:?}: pareto shape must be > 1 so the mean \
+                             interarrival exists (got {shape})"
+                        );
+                    }
+                    ArrivalProcess::HeavyTailed { rate, shape }
+                }
+                _ => bail!(
+                    "--arrivals {spec:?}: want poisson:RATE, bursty:RATE:BURST, \
+                     heavy:RATE:SHAPE or trace:FILE"
+                ),
+            }
+        }
+    };
+    Ok(ArrivalSource::Process(source))
+}
+
+/// Shape of a synthetic job stream.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    /// Number of jobs to generate.
+    pub jobs: usize,
+    /// Tenants to spread jobs across (>= 1).
+    pub tenants: usize,
+    /// Per-job tree size range (log-uniform).
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// RNG seed (arrivals, tenants, priorities and trees all derive
+    /// from it).
+    pub seed: u64,
+}
+
+impl Default for StreamSpec {
+    fn default() -> Self {
+        StreamSpec { jobs: 200, tenants: 4, min_nodes: 20, max_nodes: 80, seed: 0x0A11 }
+    }
+}
+
+/// Generate a seeded synthetic job stream: arrival times from
+/// `process`, tenants uniform, priorities log-uniform in `[0.5, 2]`,
+/// trees drawn from the random-tree classes. Explicit deadlines are
+/// left open (`inf`) — the service's `deadline_ratio` implies them.
+pub fn job_stream(process: ArrivalProcess, spec: &StreamSpec) -> Vec<JobSpec> {
+    assert!(spec.tenants >= 1, "at least one tenant");
+    assert!(
+        1 <= spec.min_nodes && spec.min_nodes <= spec.max_nodes,
+        "node range must satisfy 1 <= min <= max"
+    );
+    let mut rng = Rng::new(spec.seed);
+    let times = arrival_times(process, spec.jobs, &mut rng);
+    let classes = [TreeClass::Uniform, TreeClass::Recent, TreeClass::Deep, TreeClass::Binary];
+    times
+        .into_iter()
+        .enumerate()
+        .map(|(id, arrival)| {
+            let n = rng
+                .log_uniform(spec.min_nodes as f64, (spec.max_nodes + 1) as f64)
+                .floor() as usize;
+            let tree = random_tree(
+                classes[rng.below(classes.len())],
+                n.clamp(spec.min_nodes, spec.max_nodes),
+                &mut rng,
+            );
+            JobSpec {
+                id,
+                tenant: rng.below(spec.tenants),
+                arrival,
+                priority: rng.log_uniform(0.5, 2.0),
+                deadline: f64::INFINITY,
+                tree,
+            }
+        })
+        .collect()
+}
+
+/// Load a v4 trace as a job stream: jobs are sorted by arrival time
+/// and re-numbered densely.
+pub fn jobs_from_trace(path: &std::path::Path) -> Result<Vec<JobSpec>> {
+    let mut jobs: Vec<TraceJob> = read_jobs(path)?;
+    jobs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    Ok(jobs
+        .into_iter()
+        .enumerate()
+        .map(|(id, j)| JobSpec {
+            id,
+            tenant: j.tenant,
+            arrival: j.arrival,
+            priority: j.priority,
+            deadline: j.deadline,
+            tree: j.tree,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_arrival_specs() {
+        match parse_arrival_spec("poisson:3.5").unwrap() {
+            ArrivalSource::Process(ArrivalProcess::Poisson { rate }) => assert_eq!(rate, 3.5),
+            other => panic!("{other:?}"),
+        }
+        match parse_arrival_spec("bursty:2:8").unwrap() {
+            ArrivalSource::Process(ArrivalProcess::Bursty { rate, burst }) => {
+                assert_eq!((rate, burst), (2.0, 8.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_arrival_spec("heavy:1.5:2.5").unwrap() {
+            ArrivalSource::Process(ArrivalProcess::HeavyTailed { rate, shape }) => {
+                assert_eq!((rate, shape), (1.5, 2.5));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_arrival_spec("trace:/tmp/x.jobs").unwrap() {
+            ArrivalSource::Trace(p) => assert_eq!(p, PathBuf::from("/tmp/x.jobs")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_arrival_spec_rejects_invalid_parameters() {
+        for bad in [
+            "poisson:0",        // zero rate
+            "poisson:-2",       // negative rate
+            "poisson:NaN",      // NaN rate
+            "poisson:inf",      // infinite rate
+            "bursty:2:0.5",     // burst below one
+            "heavy:2:1.0",      // shape at the mean-divergence boundary
+            "heavy:2:0.5",      // shape below one
+            "poisson",          // missing rate
+            "sawtooth:2",       // unknown process
+            "bursty:2",         // missing burst
+        ] {
+            assert!(parse_arrival_spec(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn job_streams_are_seeded_and_well_formed() {
+        let spec = StreamSpec { jobs: 40, tenants: 3, min_nodes: 5, max_nodes: 30, seed: 11 };
+        let a = job_stream(ArrivalProcess::Poisson { rate: 2.0 }, &spec);
+        let b = job_stream(ArrivalProcess::Poisson { rate: 2.0 }, &spec);
+        assert_eq!(a.len(), 40);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.id, i, "ids are dense");
+            assert_eq!(x.arrival, y.arrival, "streams are seeded");
+            assert_eq!(x.tree.len(), y.tree.len());
+            assert!(x.tenant < 3);
+            assert!(x.priority > 0.0 && x.priority.is_finite());
+            assert!((5..=30).contains(&x.tree.len()));
+            assert_eq!(x.deadline, f64::INFINITY);
+            x.tree.validate().unwrap();
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn trace_round_trips_into_a_job_stream() {
+        use crate::workload::trace::write_jobs;
+        let dir = std::env::temp_dir().join("malltree_online_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.jobs");
+        let mut rng = Rng::new(5);
+        let jobs: Vec<TraceJob> = [(1usize, 4.0), (0, 1.0), (2, 2.5)]
+            .iter()
+            .map(|&(tenant, arrival)| TraceJob {
+                tenant,
+                arrival,
+                priority: 1.0,
+                deadline: if tenant == 0 { 10.0 } else { f64::INFINITY },
+                tree: random_tree(TreeClass::Uniform, 10, &mut rng),
+            })
+            .collect();
+        write_jobs(&jobs, &path).unwrap();
+        let stream = jobs_from_trace(&path).unwrap();
+        assert_eq!(stream.len(), 3);
+        // sorted by arrival, re-numbered densely
+        assert_eq!(
+            stream.iter().map(|j| (j.id, j.tenant)).collect::<Vec<_>>(),
+            vec![(0, 0), (1, 2), (2, 1)]
+        );
+        assert_eq!(stream[0].deadline, 10.0);
+        assert_eq!(stream[2].deadline, f64::INFINITY);
+    }
+}

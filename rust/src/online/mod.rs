@@ -1,0 +1,36 @@
+//! Online multi-tenant scheduling service (DESIGN.md §14).
+//!
+//! PRs 1–6 schedule one tree (or one fixed batch) per invocation; this
+//! module turns the repro into a *service*: a stream of jobs — each a
+//! malleable task tree with a tenant, priority and optional deadline —
+//! arrives over time ([`arrival`]), and an event-driven front-end
+//! ([`service`]) re-solves processor shares at every arrival and
+//! completion. Robustness under overload is the headline:
+//!
+//! * **admission control** — a bounded queue plus a deadline
+//!   feasibility estimate from the pooled `L_G/(Σp)^α` lower bound
+//!   ([`crate::model::Platform::pooled_lower_bound`]) decide whether a
+//!   job may enter;
+//! * **backpressure** — when the queue watermark is exceeded the
+//!   [`service::OverloadPolicy`] sheds the job, defers it with the
+//!   shared bounded linear backoff ([`crate::util::retry`]), or
+//!   degrades it to a smaller share weight;
+//! * **deadline timeouts** — jobs past their (explicit or
+//!   `deadline_ratio`-implied) deadline are cancelled and their shares
+//!   reclaimed at the next re-solve;
+//! * **fairness modes** — per-tenant weighted-fair shares versus the
+//!   global PM makespan split (`rem^{1/α}`-proportional, paper
+//!   Lemma 4).
+//!
+//! The deterministic DES replay lives in [`crate::sim::online`]; the
+//! CLI front-end is `malltree serve`.
+
+pub mod arrival;
+pub mod service;
+
+pub use arrival::{
+    job_stream, jobs_from_trace, parse_arrival_spec, ArrivalSource, JobSpec, StreamSpec,
+};
+pub use service::{
+    Admission, FairnessMode, OnlineService, Outcome, OverloadPolicy, ServiceConfig, ServiceStats,
+};

@@ -198,4 +198,55 @@ mod tests {
         let out = schedule_batch(&[], &BatchConfig::default());
         assert!(out.is_empty());
     }
+
+    #[test]
+    fn single_node_trees_reduce_to_the_closed_form() {
+        // a lone task on p processors finishes in L/p^α and holds the
+        // whole machine
+        let trees: Vec<TaskTree> = [3.0, 1.0, 0.5].iter().map(|&l| TaskTree::singleton(l)).collect();
+        let cfg = BatchConfig { alpha: 0.9, p: 8.0, threads: 2, agreg: true };
+        for (i, r) in schedule_batch(&trees, &cfg).iter().enumerate() {
+            let want = trees[i].nodes[0].len / 8f64.powf(0.9);
+            assert_eq!(r.tasks, 1);
+            assert!((r.makespan - want).abs() <= 1e-12 * want.max(1.0), "tree {i}");
+            assert!((r.min_share - 8.0).abs() < 1e-9, "lone task takes all of p");
+        }
+    }
+
+    #[test]
+    fn zero_work_tasks_mixed_into_a_tree_do_not_break_the_pipeline() {
+        // chains/branches of zero-length tasks exercise the agreg and
+        // PM zero-denominator guards
+        let mut trees = corpus(3, 60);
+        for t in trees.iter_mut() {
+            for (i, node) in t.nodes.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    node.len = 0.0;
+                }
+            }
+        }
+        let cfg = BatchConfig { alpha: 0.9, p: 8.0, threads: 2, agreg: true };
+        let out = schedule_batch(&trees, &cfg);
+        assert_eq!(out.len(), trees.len());
+        for r in &out {
+            assert!(r.makespan.is_finite() && r.makespan > 0.0, "tree {}", r.index);
+        }
+    }
+
+    #[test]
+    fn all_zero_work_trees_schedule_to_zero_makespan() {
+        // an entirely empty job (every task length 0): the solve must
+        // terminate and report a zero makespan rather than NaN. The
+        // raw pseudo-tree path covers the degenerate L_G = 0 solve.
+        let mut t = corpus(1, 40).pop().unwrap();
+        for node in t.nodes.iter_mut() {
+            node.len = 0.0;
+        }
+        let trees = [t, TaskTree::singleton(0.0)];
+        let cfg = BatchConfig { alpha: 0.9, p: 4.0, threads: 1, agreg: false };
+        for r in schedule_batch(&trees, &cfg) {
+            assert_eq!(r.makespan, 0.0, "tree {}", r.index);
+            assert!(!r.makespan.is_nan());
+        }
+    }
 }

@@ -22,14 +22,19 @@
 //! disturbs the platform with a [`crate::model::FaultTrace`] (crashes,
 //! elastic leave/join, transient slowdowns), re-solving shares at
 //! every event and recovering crashes by subtree re-mapping with a
-//! restart-from-scratch fallback.
+//! restart-from-scratch fallback, and an **online replay**
+//! ([`online`], DESIGN.md §14) that drives the multi-tenant
+//! [`crate::online::OnlineService`] over a job-arrival stream and
+//! reports throughput, sojourn quantiles and SLO attainment.
 
 pub mod des;
 pub mod faults;
 pub mod kerneldag;
 pub mod memreplay;
+pub mod online;
 
 pub use des::{simulate, simulate_distributed, DesResult, DistDesResult, Policy};
 pub use faults::{replay_faults, replay_faults_distributed, FaultReplay, RecoveryPolicy};
 pub use kerneldag::{simulate_dag, timing_curve, KernelDag, MachineModel};
 pub use memreplay::{replay_memory, replay_memory_spans, spans_from_completions, MemReplay};
+pub use online::{simulate_online, OnlineReport};

@@ -1,8 +1,10 @@
 //! Small in-repo utilities replacing crates unavailable offline:
 //! a seedable PRNG (`rng`), a miniature property-testing harness
-//! (`prop`), float helpers, and text-table rendering support.
+//! (`prop`), bounded retry backoff (`retry`), float helpers, and
+//! text-table rendering support.
 
 pub mod prop;
+pub mod retry;
 pub mod rng;
 
 /// Relative-tolerance float comparison used across scheduler math.

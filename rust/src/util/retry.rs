@@ -1,0 +1,79 @@
+//! Bounded linear backoff: the one retry-pacing implementation shared
+//! by the self-healing executor ([`crate::exec::FaultPlan`], wall-clock
+//! milliseconds) and the online service's deferred re-admission
+//! ([`crate::online`], virtual seconds). Attempt `k` waits `k × base`,
+//! and the budget is `max_retries` attempts — after that the caller
+//! gives up (the executor errors the run, the service sheds the job).
+
+/// A bounded linear backoff schedule. `base` is unit-agnostic: the
+/// executor feeds milliseconds, the online service virtual seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearBackoff {
+    /// Delay added per attempt (attempt `k` waits `k * base`).
+    pub base: f64,
+    /// Attempts allowed before the budget is exhausted.
+    pub max_retries: usize,
+}
+
+impl LinearBackoff {
+    /// A schedule waiting `k * base` before attempt `k`, for at most
+    /// `max_retries` attempts.
+    pub fn new(base: f64, max_retries: usize) -> LinearBackoff {
+        assert!(base >= 0.0 && base.is_finite(), "backoff base must be finite and >= 0");
+        LinearBackoff { base, max_retries }
+    }
+
+    /// Delay before the `attempt`-th retry (1-based): `attempt * base`
+    /// while the budget lasts, `None` once it is exhausted (attempt 0
+    /// is the initial try — it never waits and never consumes budget).
+    pub fn delay(&self, attempt: usize) -> Option<f64> {
+        (1..=self.max_retries)
+            .contains(&attempt)
+            .then(|| attempt as f64 * self.base)
+    }
+
+    /// Total time a caller can spend backing off if every retry is
+    /// needed: `base * (1 + 2 + … + max_retries)`.
+    pub fn total_delay(&self) -> f64 {
+        let k = self.max_retries as f64;
+        self.base * k * (k + 1.0) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_linearly_then_exhaust() {
+        let b = LinearBackoff::new(2.0, 3);
+        assert_eq!(b.delay(0), None); // the initial try is free
+        assert_eq!(b.delay(1), Some(2.0));
+        assert_eq!(b.delay(2), Some(4.0));
+        assert_eq!(b.delay(3), Some(6.0));
+        assert_eq!(b.delay(4), None); // budget exhausted
+        assert_eq!(b.total_delay(), 12.0);
+    }
+
+    #[test]
+    fn zero_base_retries_without_waiting() {
+        let b = LinearBackoff::new(0.0, 2);
+        assert_eq!(b.delay(1), Some(0.0));
+        assert_eq!(b.delay(2), Some(0.0));
+        assert_eq!(b.delay(3), None);
+        assert_eq!(b.total_delay(), 0.0);
+    }
+
+    #[test]
+    fn zero_budget_never_retries() {
+        let b = LinearBackoff::new(5.0, 0);
+        assert_eq!(b.delay(1), None);
+        assert_eq!(b.total_delay(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_base() {
+        LinearBackoff::new(f64::NAN, 3);
+    }
+}

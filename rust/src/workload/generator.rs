@@ -188,6 +188,89 @@ pub fn random_fault_trace(
     crate::model::FaultTrace::new(out)
 }
 
+/// Stochastic job-arrival processes for the online service
+/// (DESIGN.md §14). Every draw comes from the caller's [`Rng`] alone,
+/// so arrival streams are reproducible artifacts; all three processes
+/// share the same long-run mean rate, so load sweeps compare like
+/// with like.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless Poisson process: exponential interarrivals with mean
+    /// `1/rate`.
+    Poisson {
+        /// Mean arrivals per unit time.
+        rate: f64,
+    },
+    /// On/off burst process: silent gaps with mean `burst/rate`
+    /// separate bursts of mean size `burst` back-to-back arrivals, so
+    /// the long-run rate stays `rate` while short-term demand spikes.
+    Bursty {
+        /// Long-run mean arrivals per unit time.
+        rate: f64,
+        /// Mean burst size (>= 1; 1 degenerates to Poisson-like gaps).
+        burst: f64,
+    },
+    /// Heavy-tailed Pareto interarrivals with tail index `shape` > 1
+    /// and mean `1/rate`: occasional very long quiet periods followed
+    /// by dense clusters.
+    HeavyTailed {
+        /// Long-run mean arrivals per unit time.
+        rate: f64,
+        /// Pareto tail index (> 1 so the mean exists; smaller =
+        /// heavier tail).
+        shape: f64,
+    },
+}
+
+/// Draw `n` nondecreasing arrival times from `process`. Panics on
+/// non-finite or non-positive rates (the CLI validates before calling;
+/// library users get the contract in debug and release alike).
+pub fn arrival_times(process: ArrivalProcess, n: usize, rng: &mut Rng) -> Vec<f64> {
+    let exp = |rng: &mut Rng, mean: f64| -> f64 {
+        // inverse-CDF with u in [0, 1): -ln(1-u) is finite
+        -(1.0 - rng.range_f64(0.0, 1.0)).ln() * mean
+    };
+    let check = |rate: f64| {
+        assert!(rate.is_finite() && rate > 0.0, "arrival rate must be finite and > 0");
+    };
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    match process {
+        ArrivalProcess::Poisson { rate } => {
+            check(rate);
+            for _ in 0..n {
+                t += exp(rng, 1.0 / rate);
+                out.push(t);
+            }
+        }
+        ArrivalProcess::Bursty { rate, burst } => {
+            check(rate);
+            assert!(burst >= 1.0 && burst.is_finite(), "burst size must be finite and >= 1");
+            while out.len() < n {
+                // gap with mean burst/rate, then a burst of
+                // uniform-sized back-to-back arrivals (mean `burst`)
+                t += exp(rng, burst / rate);
+                let k = 1 + rng.below((2.0 * burst).ceil() as usize - 1);
+                for _ in 0..k.min(n - out.len()) {
+                    out.push(t);
+                }
+            }
+        }
+        ArrivalProcess::HeavyTailed { rate, shape } => {
+            check(rate);
+            assert!(shape > 1.0 && shape.is_finite(), "pareto shape must be finite and > 1");
+            // scale x_m chosen so the mean a·x_m/(a-1) equals 1/rate
+            let xm = (shape - 1.0) / (shape * rate);
+            for _ in 0..n {
+                let u = 1.0 - rng.range_f64(0.0, 1.0); // u in (0, 1]
+                t += xm * u.powf(-1.0 / shape);
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
 /// Analysis trees of in-repo sparse problems (the "real" subset).
 pub fn analysis_trees(rng: &mut Rng) -> Vec<(String, TaskTree)> {
     let mut out = Vec::new();
@@ -333,6 +416,46 @@ mod tests {
         let q = t.len() / 4;
         let mean = |ix: &[usize]| ix.iter().map(|&i| w.front[i]).sum::<f64>() / ix.len() as f64;
         assert!(mean(&idx[t.len() - q..]) > 2.0 * mean(&idx[..q]));
+    }
+
+    #[test]
+    fn arrival_processes_match_their_mean_rate() {
+        // all three processes share the long-run rate, so load sweeps
+        // over λ compare like with like (20% tolerance on 4000 draws;
+        // heavy tails get 35%)
+        let n = 4000;
+        for (process, tol) in [
+            (ArrivalProcess::Poisson { rate: 3.0 }, 0.2),
+            (ArrivalProcess::Bursty { rate: 3.0, burst: 5.0 }, 0.2),
+            (ArrivalProcess::HeavyTailed { rate: 3.0, shape: 2.5 }, 0.35),
+        ] {
+            let mut rng = Rng::new(0xA221);
+            let times = arrival_times(process, n, &mut rng);
+            assert_eq!(times.len(), n);
+            assert!(times[0] >= 0.0);
+            for w in times.windows(2) {
+                assert!(w[1] >= w[0], "{process:?}: arrivals must be nondecreasing");
+            }
+            let rate = n as f64 / times[n - 1];
+            assert!(
+                (rate - 3.0).abs() <= 3.0 * tol,
+                "{process:?}: empirical rate {rate:.3} vs 3.0"
+            );
+        }
+    }
+
+    #[test]
+    fn arrival_streams_are_deterministic_and_bursty_clusters() {
+        let p = ArrivalProcess::Bursty { rate: 2.0, burst: 6.0 };
+        let a = arrival_times(p, 500, &mut Rng::new(7));
+        let b = arrival_times(p, 500, &mut Rng::new(7));
+        assert_eq!(a, b);
+        // bursts produce ties (back-to-back arrivals) that a Poisson
+        // stream essentially never does
+        let ties = a.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(ties > 100, "bursty stream had only {ties} tied arrivals");
+        let pois = arrival_times(ArrivalProcess::Poisson { rate: 2.0 }, 500, &mut Rng::new(7));
+        assert_eq!(pois.windows(2).filter(|w| w[0] == w[1]).count(), 0);
     }
 
     #[test]

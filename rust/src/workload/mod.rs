@@ -19,12 +19,19 @@
 //! datasets are reproducible artifacts; the v2 extension carries the
 //! per-task memory weights of [`crate::mem::MemWeights`]
 //! ([`generator::synthetic_mem_weights`] produces the synthetic
-//! family for random trees).
+//! family for random trees), and the v4 extension carries multi-job
+//! arrival traces (tenant/arrival/priority/deadline per job) for the
+//! online service, whose stochastic arrival processes
+//! ([`generator::arrival_times`]) also live here.
 
 pub mod generator;
 pub mod trace;
 
-pub use generator::{dataset, random_fault_trace, synthetic_mem_weights, DatasetSpec, TreeClass};
+pub use generator::{
+    arrival_times, dataset, random_fault_trace, synthetic_mem_weights, ArrivalProcess,
+    DatasetSpec, TreeClass,
+};
 pub use trace::{
-    read_tree, read_tree_faults, read_tree_mem, write_tree, write_tree_faults, write_tree_mem,
+    read_jobs, read_tree, read_tree_faults, read_tree_mem, write_jobs, write_tree,
+    write_tree_faults, write_tree_mem, TraceJob,
 };

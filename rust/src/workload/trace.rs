@@ -38,11 +38,32 @@
 //! v1/v2 readers ([`parse_tree`], [`parse_tree_mem`]) accept v3 files
 //! and drop the disturbances. Deterministic float formatting keeps
 //! traces diff-stable across runs.
+//!
+//! The v4 extension is a *multi-job* format for the online service
+//! (DESIGN.md §14): a `jobs <j>` header, then per job one metadata
+//! line `tenant arrival priority deadline` (deadline `inf` = none)
+//! followed by a v1/v2-style tree block:
+//!
+//! ```text
+//! # malltree jobs v4 (tenant arrival priority deadline; tree blocks)
+//! jobs <j>
+//! <tenant> <arrival> <priority> <deadline>
+//! <n>
+//! <parent_0> <len_0> [front cb]
+//! ...
+//! ```
+//!
+//! v1–v3 readers reject v4 files with a typed error (the `jobs`
+//! header is not a node count); [`parse_jobs`] rejects v1–v3 files the
+//! same way. Every reader is hardened against malformed input —
+//! truncated records, negative weights and out-of-range node ids
+//! return errors, never panic (property-tested on mutated byte
+//! streams).
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::mem::MemWeights;
 use crate::model::{FaultEvent, FaultKind, FaultTrace, TaskTree};
@@ -153,36 +174,60 @@ pub fn parse_tree_mem<R: BufRead>(reader: R) -> Result<(TaskTree, Option<MemWeig
     parse_tree_full(reader).map(|(t, m, _)| (t, m))
 }
 
-/// Parse the full trace format: tree, optional memory weights (v2),
-/// optional disturbance section (v3).
-pub fn parse_tree_full<R: BufRead>(
-    reader: R,
-) -> Result<(TaskTree, Option<MemWeights>, Option<FaultTrace>)> {
-    let mut lines = reader
+/// Preallocation cap for parsed counts: a malformed count like
+/// `999999999999` must produce a clean error from the missing lines
+/// that follow, not an allocation abort.
+const MAX_PREALLOC: usize = 1 << 16;
+
+/// Content lines of a trace: comments and blanks dropped, I/O errors
+/// passed through.
+fn content_lines<R: BufRead>(reader: R) -> impl Iterator<Item = Result<String>> {
+    reader
         .lines()
         .map(|l| l.map_err(anyhow::Error::from))
         .filter(|l| match l {
             Ok(s) => !s.trim().is_empty() && !s.trim_start().starts_with('#'),
             Err(_) => true,
-        });
+        })
+}
+
+/// Parse one `<n>` + node-lines tree block off `lines` — the shared
+/// hardened core of the v1–v4 readers. Out-of-range parents, multiple
+/// roots and cycles are rejected by [`TaskTree::from_parents`];
+/// negative or non-finite lengths and weights are rejected here.
+fn read_tree_block<I: Iterator<Item = Result<String>>>(
+    lines: &mut I,
+) -> Result<(TaskTree, Option<MemWeights>)> {
     let n: usize = lines
         .next()
         .context("missing node count")??
         .trim()
         .parse()
         .context("bad node count")?;
-    let mut parents = Vec::with_capacity(n);
-    let mut lens = Vec::with_capacity(n);
-    let mut front = Vec::with_capacity(n);
-    let mut cb = Vec::with_capacity(n);
+    let mut parents = Vec::with_capacity(n.min(MAX_PREALLOC));
+    let mut lens = Vec::with_capacity(n.min(MAX_PREALLOC));
+    let mut front = Vec::new();
+    let mut cb = Vec::new();
     let mut has_mem: Option<bool> = None;
     for i in 0..n {
         let line = lines
             .next()
             .with_context(|| format!("missing node line {i}"))??;
         let mut it = line.split_whitespace();
-        let parent: usize = it.next().context("missing parent")?.parse()?;
-        let len: f64 = it.next().context("missing length")?.parse()?;
+        let parent: usize = it
+            .next()
+            .context("missing parent")?
+            .parse()
+            .with_context(|| format!("bad parent, node {i}"))?;
+        let len: f64 = it
+            .next()
+            .with_context(|| format!("node {i}: missing length"))?
+            .parse()
+            .with_context(|| format!("bad length, node {i}"))?;
+        ensure!(
+            len.is_finite() && len >= 0.0,
+            "node {i}: task length must be finite and >= 0 (got {len})"
+        );
         parents.push(parent);
         lens.push(len);
         let mem_cols = match (it.next(), it.next()) {
@@ -205,6 +250,25 @@ pub fn parse_tree_full<R: BufRead>(
             bail!("node {i}: trailing columns beyond `parent len front cb`");
         }
     }
+    let tree = TaskTree::from_parents(&parents, &lens)?;
+    let mem = if has_mem == Some(true) {
+        let m = MemWeights { front, cb };
+        m.validate(&tree)?;
+        Some(m)
+    } else {
+        None
+    };
+    Ok((tree, mem))
+}
+
+/// Parse the full trace format: tree, optional memory weights (v2),
+/// optional disturbance section (v3).
+pub fn parse_tree_full<R: BufRead>(
+    reader: R,
+) -> Result<(TaskTree, Option<MemWeights>, Option<FaultTrace>)> {
+    let mut lines = content_lines(reader);
+    let (tree, mem) = read_tree_block(&mut lines)?;
+    let n = tree.len();
     // optional v3 disturbance section: a single-integer event count,
     // then `time kind node [args]` lines — anything else is garbage
     let faults = match lines.next() {
@@ -215,7 +279,7 @@ pub fn parse_tree_full<R: BufRead>(
                 Ok(k) => k,
                 Err(_) => bail!("trailing data after {n} nodes"),
             };
-            let mut events = Vec::with_capacity(k);
+            let mut events = Vec::with_capacity(k.min(MAX_PREALLOC));
             for i in 0..k {
                 let l = lines
                     .next()
@@ -261,15 +325,117 @@ pub fn parse_tree_full<R: BufRead>(
             Some(FaultTrace::new(events))
         }
     };
-    let tree = TaskTree::from_parents(&parents, &lens)?;
-    let mem = if has_mem == Some(true) {
-        let m = MemWeights { front, cb };
-        m.validate(&tree)?;
-        Some(m)
-    } else {
-        None
-    };
     Ok((tree, mem, faults))
+}
+
+/// One job of a v4 multi-job trace: scheduling metadata plus the task
+/// tree itself. `deadline` is an absolute completion time
+/// (`f64::INFINITY` = no deadline). Per-task memory weights inside a
+/// job's tree block are accepted on read and dropped (the online
+/// service does not consume them yet).
+#[derive(Debug, Clone)]
+pub struct TraceJob {
+    /// Owning tenant id.
+    pub tenant: usize,
+    /// Absolute submission time.
+    pub arrival: f64,
+    /// Scheduling weight (> 0; higher = more share under weighted-fair
+    /// modes).
+    pub priority: f64,
+    /// Absolute completion deadline; `f64::INFINITY` means none.
+    pub deadline: f64,
+    /// The malleable task tree the job schedules.
+    pub tree: TaskTree,
+}
+
+fn validate_job_meta(i: usize, tenant: usize, arrival: f64, priority: f64, deadline: f64) -> Result<()> {
+    let _ = tenant;
+    ensure!(
+        arrival.is_finite() && arrival >= 0.0,
+        "job {i}: arrival must be finite and >= 0 (got {arrival})"
+    );
+    ensure!(
+        priority.is_finite() && priority > 0.0,
+        "job {i}: priority must be finite and > 0 (got {priority})"
+    );
+    ensure!(
+        !deadline.is_nan() && deadline > arrival,
+        "job {i}: deadline must be > arrival or inf (got {deadline})"
+    );
+    Ok(())
+}
+
+/// Write a multi-job arrival trace to `path` (v4).
+pub fn write_jobs(jobs: &[TraceJob], path: &Path) -> Result<()> {
+    for (i, j) in jobs.iter().enumerate() {
+        validate_job_meta(i, j.tenant, j.arrival, j.priority, j.deadline)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# malltree jobs v4 (tenant arrival priority deadline; one tree block per job)")?;
+    writeln!(w, "jobs {}", jobs.len())?;
+    for j in jobs {
+        writeln!(w, "{} {:e} {:e} {:e}", j.tenant, j.arrival, j.priority, j.deadline)?;
+        writeln!(w, "{}", j.tree.len())?;
+        for (i, node) in j.tree.nodes.iter().enumerate() {
+            let parent = node.parent.map(|p| p as usize).unwrap_or(i);
+            writeln!(w, "{} {:e}", parent, node.len)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a v4 multi-job arrival trace from `path`.
+pub fn read_jobs(path: &Path) -> Result<Vec<TraceJob>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    parse_jobs(std::io::BufReader::new(f))
+}
+
+/// Parse a v4 multi-job trace from any reader. v1–v3 single-tree
+/// traces are rejected with a typed error (their first content line is
+/// a node count, not the `jobs <j>` header).
+pub fn parse_jobs<R: BufRead>(reader: R) -> Result<Vec<TraceJob>> {
+    let mut lines = content_lines(reader);
+    let header = lines.next().context("empty jobs trace")??;
+    let j: usize = header
+        .trim()
+        .strip_prefix("jobs")
+        .context("not a v4 jobs trace (want a `jobs <count>` header line)")?
+        .trim()
+        .parse()
+        .context("bad job count")?;
+    let mut jobs = Vec::with_capacity(j.min(MAX_PREALLOC));
+    for i in 0..j {
+        let meta = lines
+            .next()
+            .with_context(|| format!("missing metadata line for job {i}"))??;
+        let toks: Vec<&str> = meta.split_whitespace().collect();
+        let [tenant, arrival, priority, deadline] = toks.as_slice() else {
+            bail!("job {i}: expected `tenant arrival priority deadline`, got {meta:?}");
+        };
+        let tenant: usize = tenant
+            .parse()
+            .with_context(|| format!("bad tenant, job {i}"))?;
+        let arrival: f64 = arrival
+            .parse()
+            .with_context(|| format!("bad arrival, job {i}"))?;
+        let priority: f64 = priority
+            .parse()
+            .with_context(|| format!("bad priority, job {i}"))?;
+        let deadline: f64 = deadline
+            .parse()
+            .with_context(|| format!("bad deadline, job {i}"))?;
+        validate_job_meta(i, tenant, arrival, priority, deadline)?;
+        let (tree, _mem) = read_tree_block(&mut lines)
+            .with_context(|| format!("reading the tree block of job {i}"))?;
+        jobs.push(TraceJob { tenant, arrival, priority, deadline, tree });
+    }
+    if lines.next().is_some() {
+        bail!("trailing data after {j} jobs");
+    }
+    Ok(jobs)
 }
 
 #[cfg(test)]
@@ -443,5 +609,188 @@ mod tests {
     fn rejects_truncated() {
         let text = "3\n0 1.0\n";
         assert!(parse_tree(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn rejects_negative_and_non_finite_lengths() {
+        for bad in [
+            "2\n0 1.0\n0 -2.0\n",   // negative length
+            "2\n0 NaN\n0 2.0\n",    // NaN length
+            "2\n0 inf\n0 2.0\n",    // infinite length
+            "2\n0 1.0 -1.0 0.5\n0 2.0 4.0 1.0\n", // negative front weight
+            "2\n0 1.0 4.0 -0.5\n0 2.0 4.0 1.0\n", // negative cb weight
+        ] {
+            assert!(parse_tree_mem(Cursor::new(bad)).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_parent_without_panicking() {
+        // from_parents turns these into typed errors, not panics
+        for bad in ["2\n0 1.0\n9 2.0\n", "2\n1 1.0\n0 2.0\n"] {
+            assert!(parse_tree(Cursor::new(bad)).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn huge_counts_error_cleanly_instead_of_aborting() {
+        // a lying node/event/job count must hit "missing line", not an
+        // allocation abort from with_capacity
+        assert!(parse_tree(Cursor::new("999999999999999\n0 1.0\n")).is_err());
+        assert!(parse_tree_full(Cursor::new("1\n0 1.0\n999999999999999\n")).is_err());
+        assert!(parse_jobs(Cursor::new("jobs 999999999999999\n")).is_err());
+    }
+
+    fn v4_jobs(rng: &mut Rng) -> Vec<TraceJob> {
+        let classes = [TreeClass::Uniform, TreeClass::Deep, TreeClass::Binary];
+        (0..rng.range(1, 6))
+            .map(|i| {
+                let arrival = i as f64 * rng.range_f64(0.25, 2.0);
+                TraceJob {
+                    tenant: rng.below(4),
+                    arrival,
+                    priority: rng.range_f64(0.5, 3.0),
+                    deadline: if rng.bool(0.5) {
+                        f64::INFINITY
+                    } else {
+                        arrival + rng.range_f64(1.0, 100.0)
+                    },
+                    tree: random_tree(classes[rng.below(3)], rng.range(1, 60), rng),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn v4_round_trip_randomized() {
+        check(
+            Config { cases: 12, seed: 0x4B4B },
+            "jobs trace round-trip (v4)",
+            |rng: &mut Rng| (v4_jobs(rng), rng.next_u64()),
+            |(jobs, tag)| {
+                let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(1.0);
+                let p = tmp(&format!("prop_v4_{tag}.jobs"));
+                write_jobs(jobs, &p).map_err(|e| e.to_string())?;
+                let back = read_jobs(&p).map_err(|e| e.to_string())?;
+                if back.len() != jobs.len() {
+                    return Err("job count changed".into());
+                }
+                for (a, b) in back.iter().zip(jobs) {
+                    if a.tenant != b.tenant
+                        || !close(a.arrival, b.arrival)
+                        || !close(a.priority, b.priority)
+                        || (a.deadline != b.deadline && !close(a.deadline, b.deadline))
+                    {
+                        return Err("job metadata changed".into());
+                    }
+                    if a.tree.len() != b.tree.len() {
+                        return Err("tree size changed".into());
+                    }
+                    for (x, y) in a.tree.nodes.iter().zip(&b.tree.nodes) {
+                        if x.parent != y.parent || !close(x.len, y.len) {
+                            return Err("tree structure or length changed".into());
+                        }
+                    }
+                }
+                // v1–v3 readers reject the v4 file with an error
+                if read_tree_faults(&p).is_ok() {
+                    return Err("v1-v3 reader accepted a v4 file".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn v4_rejects_malformed_jobs() {
+        for bad in [
+            "jobs 2\n0 0 1 inf\n1\n0 1.0\n",               // truncated job list
+            "jobs 1\n0 0 1\n1\n0 1.0\n",                    // short metadata line
+            "jobs 1\n0 0 1 inf extra\n1\n0 1.0\n",          // long metadata line
+            "jobs 1\n0 -1 1 inf\n1\n0 1.0\n",               // negative arrival
+            "jobs 1\n0 0 0 inf\n1\n0 1.0\n",                // zero priority
+            "jobs 1\n0 0 NaN inf\n1\n0 1.0\n",              // NaN priority
+            "jobs 1\n0 5 1 2\n1\n0 1.0\n",                  // deadline before arrival
+            "jobs 1\n0 0 1 NaN\n1\n0 1.0\n",                // NaN deadline
+            "jobs 1\n0 0 1 inf\n1\n0 -1.0\n",               // negative task length
+            "jobs 1\n0 0 1 inf\n2\n0 1.0\n",                // truncated tree block
+            "jobs 1\n0 0 1 inf\n1\n0 1.0\nextra\n",         // trailing data
+            "jobs x\n",                                     // bad job count
+            "2\n0 1.0\n0 2.0\n",                            // a v1 trace is not v4
+        ] {
+            assert!(parse_jobs(Cursor::new(bad)).is_err(), "accepted {bad:?}");
+        }
+        // an explicitly empty jobs trace is fine
+        assert!(parse_jobs(Cursor::new("jobs 0\n")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn mutated_byte_streams_error_but_never_panic_in_any_reader() {
+        // the satellite-b property: take a valid v1/v2/v3/v4 trace,
+        // mutate its bytes (truncate / flip / insert), and feed the
+        // result to every reader — each must return Ok or Err, never
+        // panic or abort (a panic fails this test)
+        check(
+            Config { cases: 40, seed: 0xF422 },
+            "mutated trace bytes never panic a reader",
+            |rng: &mut Rng| {
+                let t = random_tree(TreeClass::Uniform, rng.range(1, 30), rng);
+                let w = synthetic_mem_weights(&t, rng);
+                let faults = crate::workload::generator::random_fault_trace(2, 10.0, 3, rng);
+                let tag = rng.next_u64();
+                let paths = [
+                    tmp(&format!("fuzz_v1_{tag}.tree")),
+                    tmp(&format!("fuzz_v2_{tag}.tree")),
+                    tmp(&format!("fuzz_v3_{tag}.tree")),
+                    tmp(&format!("fuzz_v4_{tag}.jobs")),
+                ];
+                write_tree(&t, &paths[0]).unwrap();
+                write_tree_mem(&t, &w, &paths[1]).unwrap();
+                write_tree_faults(&t, Some(&w), &faults, &paths[2]).unwrap();
+                let job = TraceJob {
+                    tenant: 0,
+                    arrival: 0.0,
+                    priority: 1.0,
+                    deadline: f64::INFINITY,
+                    tree: t,
+                };
+                write_jobs(std::slice::from_ref(&job), &paths[3]).unwrap();
+                let mut variants: Vec<Vec<u8>> = Vec::new();
+                for p in &paths {
+                    let bytes = std::fs::read(p).unwrap();
+                    for _ in 0..4 {
+                        let mut m = bytes.clone();
+                        match rng.below(3) {
+                            0 => m.truncate(rng.below(m.len().max(1))),
+                            1 => {
+                                if !m.is_empty() {
+                                    let at = rng.below(m.len());
+                                    m[at] = b' ' + rng.below(95) as u8;
+                                }
+                            }
+                            _ => {
+                                let at = rng.below(m.len() + 1);
+                                m.insert(at, b"-9x\n#"[rng.below(5)]);
+                            }
+                        }
+                        variants.push(m);
+                    }
+                    variants.push(bytes);
+                }
+                variants
+            },
+            |variants| {
+                for bytes in variants {
+                    // outcomes are unconstrained (a mutation can leave a
+                    // trace valid); reaching the end without a panic is
+                    // the property
+                    let _ = parse_tree(Cursor::new(bytes.as_slice()));
+                    let _ = parse_tree_mem(Cursor::new(bytes.as_slice()));
+                    let _ = parse_tree_full(Cursor::new(bytes.as_slice()));
+                    let _ = parse_jobs(Cursor::new(bytes.as_slice()));
+                }
+                Ok(())
+            },
+        );
     }
 }
