@@ -26,6 +26,15 @@
 //! exercises the Algorithm-12 λ-trimmed split (> 20 sibling
 //! subtrees).
 //!
+//! The `net_*` cells price the links (DESIGN.md §15): the
+//! network-aware pipeline (`distribute_networked`) versus the
+//! comm-blind pm mapping under the same priced DES, plus a link-fault
+//! replay of the winning mapping. They add per-cell
+//! `gain_comm_aware_vs_blind_pct`, `bytes_moved`, `transfer_stall`,
+//! `retransmits`, `remaps` and `best_vs_wait_pct` columns, and
+//! hard-assert the structural bounds: network-aware ≤ comm-blind,
+//! network-aware ≤ single node, Best recovery ≤ WaitOnly.
+//!
 //! Scaling knobs: `MALLTREE_BENCH_SCALE` multiplies sizes,
 //! `MALLTREE_BENCH_DIV` divides them (CI smoke uses DIV=20 and skips
 //! the N=8 row).
@@ -33,9 +42,12 @@
 mod bench_util;
 
 use bench_util::{env_usize, header};
-use malltree::dist::{distribute, MappingStrategy};
+use malltree::dist::{distribute, distribute_networked, MappingStrategy};
+use malltree::mem::MemWeights;
 use malltree::metrics::Table;
-use malltree::model::{Platform, TaskTree};
+use malltree::model::{FaultEvent, FaultKind, FaultTrace, Platform, TaskTree};
+use malltree::net::{replay_link_faults, NetModel, NetRecovery, NetSimConfig};
+use malltree::sim::Policy;
 use malltree::util::rng::Rng;
 use malltree::workload::generator::{random_tree, root_shape_mix};
 use malltree::workload::TreeClass;
@@ -74,6 +86,21 @@ struct Cell {
     gain_vs_prop_pct: f64,
     gain_vs_cp_pct: f64,
     vs_single_node: f64,
+}
+
+/// One §Net cell: the network-aware pipeline on priced links, plus the
+/// link-fault replay of the winning mapping under both recovery
+/// policies.
+struct NetCell {
+    key: String,
+    makespan: f64,
+    gain_comm_aware_vs_blind_pct: f64,
+    vs_single_node: f64,
+    bytes_moved: f64,
+    transfer_stall: f64,
+    retransmits: usize,
+    remaps: usize,
+    best_vs_wait_pct: f64,
 }
 
 fn main() {
@@ -214,6 +241,123 @@ fn main() {
 
     print!("{}", table.render());
 
+    // §Net cells (DESIGN.md §15): price the links, let the candidate
+    // sweep see them, then stress the winner with a link-fault trace.
+    // Hard invariants: the network-aware selection never loses to the
+    // comm-blind pm mapping or the best single node under the same
+    // priced DES, and Best recovery never loses to WaitOnly.
+    let mut net_table = Table::new(&[
+        "family", "N", "net", "makespan", "gain vs blind", "words moved", "xfer stall",
+        "retx", "remaps", "best vs wait",
+    ]);
+    let mut net_cells: Vec<NetCell> = Vec::new();
+    let cfg = NetSimConfig { timeout_factor: 2.0, ..NetSimConfig::default() };
+    for (fam_i, (fam, gen)) in families.iter().enumerate().take(3) {
+        for &nodes in &nodes_list {
+            if nodes > 4 {
+                continue; // the priced DES rows stay at the smoke sizes
+            }
+            let plat = Platform::Homogeneous { nodes, p };
+            let alpha = 0.9;
+            for (net_name, lat, bw) in [("lan", 0.02, 8.0), ("wan", 0.5, 0.5)] {
+                let net = NetModel::uniform(nodes, lat, bw);
+                let mut rng = Rng::new(0x4E7 + fam_i as u64);
+                let (mut mk, mut gain, mut v_single, mut bytes, mut stall) =
+                    (0.0, 0.0, 0.0, 0.0, 0.0);
+                let (mut retx, mut remaps) = (0usize, 0usize);
+                let mut best_vs_wait = 0.0;
+                let cell_trees = 2usize;
+                for _ in 0..cell_trees {
+                    let tree = gen(&mut rng, nodes);
+                    let weights = MemWeights::from_task_lens(&tree);
+                    let nd = distribute_networked(&tree, &plat, alpha, lambda, &weights, &net, &cfg)
+                        .expect("networked distribute");
+                    assert!(
+                        nd.sim.makespan <= nd.comm_blind_makespan * (1.0 + 1e-9),
+                        "{fam} N={nodes} {net_name}: network-aware lost to comm-blind pm"
+                    );
+                    assert!(
+                        nd.sim.makespan <= nd.single_node_makespan * (1.0 + 1e-9),
+                        "{fam} N={nodes} {net_name}: network-aware lost to single node"
+                    );
+                    let mff = nd.sim.makespan;
+                    let trace = FaultTrace::new(vec![
+                        FaultEvent {
+                            time: 0.25 * mff,
+                            kind: FaultKind::LinkDegrade {
+                                a: 0,
+                                b: 1,
+                                factor: 0.25,
+                                duration: 0.2 * mff,
+                            },
+                        },
+                        FaultEvent {
+                            time: 0.55 * mff,
+                            kind: FaultKind::LinkDown { a: 0, b: 1, duration: 0.15 * mff },
+                        },
+                    ]);
+                    let replay = |rec: NetRecovery| {
+                        let cfg = NetSimConfig { recovery: rec, ..cfg };
+                        replay_link_faults(
+                            &tree,
+                            alpha,
+                            &plat,
+                            &nd.mapping.node_of,
+                            Policy::Pm,
+                            &weights,
+                            &net,
+                            &cfg,
+                            &trace,
+                        )
+                        .expect("link-fault replay")
+                    };
+                    let best = replay(NetRecovery::Best);
+                    let wait = replay(NetRecovery::WaitOnly);
+                    assert!(
+                        best.sim.makespan <= wait.sim.makespan * (1.0 + 1e-9),
+                        "{fam} N={nodes} {net_name}: Best recovery lost to WaitOnly"
+                    );
+                    mk += nd.sim.makespan;
+                    gain += nd.gain_comm_aware_vs_blind_pct();
+                    v_single += nd.sim.makespan / nd.single_node_makespan;
+                    bytes += best.sim.bytes_moved;
+                    stall += best.sim.transfer_stall;
+                    retx += best.sim.retransmits;
+                    remaps += best.sim.remaps;
+                    best_vs_wait += 100.0 * (best.sim.makespan - wait.sim.makespan)
+                        / wait.sim.makespan;
+                }
+                let k = cell_trees as f64;
+                let cell = NetCell {
+                    key: format!("net_{net_name}_N{nodes}_a{alpha:.2}_{fam}"),
+                    makespan: mk / k,
+                    gain_comm_aware_vs_blind_pct: gain / k,
+                    vs_single_node: v_single / k,
+                    bytes_moved: bytes / k,
+                    transfer_stall: stall / k,
+                    retransmits: retx,
+                    remaps,
+                    best_vs_wait_pct: best_vs_wait / k,
+                };
+                net_table.row(&[
+                    fam.to_string(),
+                    format!("{nodes}"),
+                    net_name.to_string(),
+                    format!("{:.3e}", cell.makespan),
+                    format!("{:+.2}%", cell.gain_comm_aware_vs_blind_pct),
+                    format!("{:.3e}", cell.bytes_moved),
+                    format!("{:.3e}", cell.transfer_stall),
+                    format!("{}", cell.retransmits),
+                    format!("{}", cell.remaps),
+                    format!("{:+.2}%", cell.best_vs_wait_pct),
+                ]);
+                net_cells.push(cell);
+            }
+        }
+    }
+    println!("\nnetworked cells (faulty-link replay on the winning mapping):");
+    print!("{}", net_table.render());
+
     // The §6 headline: the speedup-aware mapping must beat the
     // proportional baseline on the root-dominated family (the crafted
     // RootMix construction guarantees a strict win for α < 1).
@@ -236,16 +380,28 @@ fn main() {
     json.push_str(&format!(
         "  \"best_rootmix_gain_vs_prop_pct\": {best_rootmix_gain:.4},\n"
     ));
-    for (i, c) in cells.iter().enumerate() {
+    for c in cells.iter() {
         json.push_str(&format!(
             "  \"{}\": {{\"approx_ratio\": {:.6}, \"gain_vs_prop_pct\": {:.4}, \
-             \"gain_vs_cp_pct\": {:.4}, \"vs_single_node\": {:.6}}}{}\n",
+             \"gain_vs_cp_pct\": {:.4}, \"vs_single_node\": {:.6}}},\n",
+            c.key, c.approx_ratio, c.gain_vs_prop_pct, c.gain_vs_cp_pct, c.vs_single_node,
+        ));
+    }
+    for (i, c) in net_cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  \"{}\": {{\"makespan\": {:.6e}, \"gain_comm_aware_vs_blind_pct\": {:.4}, \
+             \"vs_single_node\": {:.6}, \"bytes_moved\": {:.6e}, \"transfer_stall\": {:.6e}, \
+             \"retransmits\": {}, \"remaps\": {}, \"best_vs_wait_pct\": {:.4}}}{}\n",
             c.key,
-            c.approx_ratio,
-            c.gain_vs_prop_pct,
-            c.gain_vs_cp_pct,
+            c.makespan,
+            c.gain_comm_aware_vs_blind_pct,
             c.vs_single_node,
-            if i + 1 == cells.len() { "" } else { "," }
+            c.bytes_moved,
+            c.transfer_stall,
+            c.retransmits,
+            c.remaps,
+            c.best_vs_wait_pct,
+            if i + 1 == net_cells.len() { "" } else { "," }
         ));
     }
     json.push_str("}\n");

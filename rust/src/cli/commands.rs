@@ -99,10 +99,11 @@ fn parse_profile(spec: &str) -> Result<Profile> {
     Profile::steps(&steps)
 }
 
-/// Parse a `--faults` disturbance spec: comma-separated
-/// `crash:N@F`, `leave:N:C@F`, `join:N:C@F`, `slow:N:X:D@F` items.
-/// Event times `F` (and slowdown durations `D`) are *fractions of the
-/// fault-free makespan* — materialized per tree by
+/// Parse a `--faults` / `--link-faults` disturbance spec:
+/// comma-separated `crash:N@F`, `leave:N:C@F`, `join:N:C@F`,
+/// `slow:N:X:D@F`, `linkslow:A:B:X:D@F`, `linkdown:A:B:D@F` items.
+/// Event times `F` (and slowdown / link-fault durations `D`) are
+/// *fractions of the fault-free makespan* — materialized per tree by
 /// [`materialize_faults`] so one spec stresses trees of any size at
 /// comparable points of their run.
 fn parse_fault_spec(spec: &str) -> Result<Vec<(f64, crate::model::FaultKind)>> {
@@ -137,8 +138,20 @@ fn parse_fault_spec(spec: &str) -> Result<Vec<(f64, crate::model::FaultKind)>> {
                 factor: num("factor", x)?,
                 duration: num("duration", d)?,
             },
+            ["linkslow", a, b, x, d] => FaultKind::LinkDegrade {
+                a: node(a)?,
+                b: node(b)?,
+                factor: num("factor", x)?,
+                duration: num("duration", d)?,
+            },
+            ["linkdown", a, b, d] => FaultKind::LinkDown {
+                a: node(a)?,
+                b: node(b)?,
+                duration: num("duration", d)?,
+            },
             _ => bail!(
-                "--faults {item:?}: want crash:N@F, leave:N:C@F, join:N:C@F or slow:N:X:D@F"
+                "--faults {item:?}: want crash:N@F, leave:N:C@F, join:N:C@F, slow:N:X:D@F, \
+                 linkslow:A:B:X:D@F or linkdown:A:B:D@F"
             ),
         };
         out.push((frac, kind));
@@ -149,8 +162,31 @@ fn parse_fault_spec(spec: &str) -> Result<Vec<(f64, crate::model::FaultKind)>> {
     Ok(out)
 }
 
+/// Parse a `--net LAT:BW` uniform-network spec: inter-node latency
+/// (seconds, finite and >= 0) and bandwidth (words per second, > 0;
+/// `inf` models free links).
+fn parse_net_spec(spec: &str, n_nodes: usize) -> Result<crate::net::NetModel> {
+    let (lat, bw) = spec
+        .split_once(':')
+        .with_context(|| format!("--net {spec:?}: want LAT:BW"))?;
+    let lat: f64 = lat
+        .trim()
+        .parse()
+        .with_context(|| format!("--net {spec}: bad latency {lat:?}"))?;
+    let bw = bw.trim();
+    let bw: f64 = if bw.eq_ignore_ascii_case("inf") {
+        f64::INFINITY
+    } else {
+        bw.parse()
+            .with_context(|| format!("--net {spec}: bad bandwidth {bw:?}"))?
+    };
+    let net = crate::net::NetModel::uniform(n_nodes, lat, bw);
+    net.validate().with_context(|| format!("--net {spec}"))?;
+    Ok(net)
+}
+
 /// Scale a parsed fault-spec template to one tree's fault-free
-/// makespan (slowdown durations scale too).
+/// makespan (slowdown and link-fault durations scale too).
 fn materialize_faults(
     template: &[(f64, crate::model::FaultKind)],
     mff: f64,
@@ -164,6 +200,12 @@ fn materialize_faults(
                 kind: match kind {
                     FaultKind::Slowdown { node, factor, duration } => {
                         FaultKind::Slowdown { node, factor, duration: duration * mff }
+                    }
+                    FaultKind::LinkDegrade { a, b, factor, duration } => {
+                        FaultKind::LinkDegrade { a, b, factor, duration: duration * mff }
+                    }
+                    FaultKind::LinkDown { a, b, duration } => {
+                        FaultKind::LinkDown { a, b, duration: duration * mff }
                     }
                     k => k,
                 },
@@ -245,8 +287,24 @@ pub fn schedule(args: &mut Args) -> Result<()> {
 pub fn distribute(args: &mut Args) -> Result<()> {
     use crate::dist::{self, MappingStrategy};
     use crate::model::Platform;
+    use crate::net::{replay_link_faults, NetRecovery, NetSimConfig};
+    use crate::sim::Policy;
 
-    let (name, tree) = load_tree(args)?;
+    let net_spec = args.get("net").map(str::to_string);
+    if net_spec.is_none() {
+        for dep in ["link-faults", "timeout-factor", "recovery"] {
+            if args.get(dep).is_some() {
+                bail!("--{dep} needs --net LAT:BW");
+            }
+        }
+    }
+    let (name, tree, net_weights) = if net_spec.is_some() {
+        let (name, tree, w, wsrc) = load_tree_mem(args)?;
+        (name, tree, Some((w, wsrc)))
+    } else {
+        let (name, tree) = load_tree(args)?;
+        (name, tree, None)
+    };
     let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
     let lambda = args.get_f64_positive("lambda", 1.1)?;
     let strategy = MappingStrategy::parse(args.get("mapping").unwrap_or("pm"))?;
@@ -327,6 +385,90 @@ pub fn distribute(args: &mut Args) -> Result<()> {
         ]);
     }
     print!("{}", per_node.render());
+
+    if let Some(spec) = net_spec {
+        // network-aware pipeline (DESIGN.md §15): price every cross
+        // edge with the link model, let the candidate sweep see it,
+        // and optionally stress the winner with link faults
+        let (weights, wsrc) = net_weights.expect("loaded with memory weights under --net");
+        let net = parse_net_spec(&spec, platform.num_nodes())?;
+        let cfg = NetSimConfig {
+            timeout_factor: args.get_f64_positive("timeout-factor", 4.0)?,
+            recovery: match args.get("recovery").unwrap_or("best") {
+                "best" => NetRecovery::Best,
+                "wait" => NetRecovery::WaitOnly,
+                other => bail!("--recovery {other:?}: want best|wait"),
+            },
+            ..NetSimConfig::default()
+        };
+        let nd = dist::distribute_networked(&tree, &platform, alpha, lambda, &weights, &net, &cfg)?;
+        println!(
+            "\nnetworked DES [--net {spec}] ({wsrc} contribution blocks): chose {}{}, \
+             makespan {:.6e}",
+            nd.chose,
+            if nd.fell_back { " (fell back to one node)" } else { "" },
+            nd.sim.makespan,
+        );
+        println!(
+            "  gain vs comm-blind pm {:+.2}%, vs single node {:+.2}%; {} cross edges, \
+             {:.3e} words moved, transfer stall {:.3e}, compute stall {:.3e}",
+            nd.gain_comm_aware_vs_blind_pct(),
+            100.0 * (nd.single_node_makespan - nd.sim.makespan) / nd.single_node_makespan,
+            nd.sim.cross_edges,
+            nd.sim.bytes_moved,
+            nd.sim.transfer_stall,
+            nd.sim.cross_stall,
+        );
+        if let Some(fspec) = args.get("link-faults").map(str::to_string) {
+            let template = parse_fault_spec(&fspec)?;
+            let trace = materialize_faults(&template, nd.sim.makespan);
+            let run = |rec: NetRecovery| {
+                let cfg = NetSimConfig { recovery: rec, ..cfg };
+                replay_link_faults(
+                    &tree,
+                    alpha,
+                    &platform,
+                    &nd.mapping.node_of,
+                    Policy::Pm,
+                    &weights,
+                    &net,
+                    &cfg,
+                    &trace,
+                )
+            };
+            let best = run(NetRecovery::Best)?;
+            let wait = run(NetRecovery::WaitOnly)?;
+            println!(
+                "link faults [{fspec}] ({} events; times and durations are fractions of \
+                 the fault-free networked makespan {:.4e}):",
+                trace.events.len(),
+                best.fault_free_makespan,
+            );
+            let mut lt = Table::new(&[
+                "recovery",
+                "makespan",
+                "overhead",
+                "retransmits",
+                "remaps",
+                "words moved",
+            ]);
+            for (rn, rec, r) in [
+                ("best", NetRecovery::Best, &best),
+                ("wait", NetRecovery::WaitOnly, &wait),
+            ] {
+                let marker = if rec == cfg.recovery { "*" } else { "" };
+                lt.row(&[
+                    format!("{rn}{marker}"),
+                    format!("{:.6e}", r.sim.makespan),
+                    format!("{:+.2}%", 100.0 * r.overhead() / r.fault_free_makespan),
+                    format!("{}", r.sim.retransmits),
+                    format!("{}", r.sim.remaps),
+                    format!("{:.3e}", r.sim.bytes_moved),
+                ]);
+            }
+            print!("{}", lt.render());
+        }
+    }
     Ok(())
 }
 
@@ -1041,6 +1183,68 @@ mod tests {
         }
         for bad in ["crash:1", "crash:x@0.5", "melt:1@0.5", "crash:1@-0.1", ""] {
             assert!(parse_fault_spec(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_fault_spec_reads_link_events_and_scales_their_durations() {
+        use crate::model::FaultKind;
+        let t = parse_fault_spec("linkslow:0:1:0.25:0.3@0.2, linkdown:1:0:0.2@0.5").unwrap();
+        assert_eq!(
+            t[0],
+            (0.2, FaultKind::LinkDegrade { a: 0, b: 1, factor: 0.25, duration: 0.3 })
+        );
+        assert_eq!(t[1], (0.5, FaultKind::LinkDown { a: 1, b: 0, duration: 0.2 }));
+        let trace = materialize_faults(&t, 10.0);
+        match trace.events[0].kind {
+            FaultKind::LinkDegrade { duration, .. } => assert_eq!(duration, 3.0),
+            ref k => panic!("expected linkslow, got {k:?}"),
+        }
+        match trace.events[1].kind {
+            FaultKind::LinkDown { duration, .. } => assert_eq!(duration, 2.0),
+            ref k => panic!("expected linkdown, got {k:?}"),
+        }
+        for bad in [
+            "linkslow:0:1:0.5@0.2", // missing duration
+            "linkdown:0@0.5",
+            "linkslow:0:x:0.5:1@0.2",
+            "linkdown:0:1:0.2",
+        ] {
+            assert!(parse_fault_spec(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn distribute_networked_command_runs_and_replays_link_faults() {
+        let mut a = args(
+            "--grid2d 8 --nodes 2 -p 4 --net 0.05:2 \
+             --link-faults linkslow:0:1:0.25:0.3@0.2,linkdown:0:1:0.2@0.5 \
+             --timeout-factor 2 --recovery best",
+        );
+        distribute(&mut a).unwrap();
+        // free-net spelling works too, and the tree path still loads
+        let mut b = args("--grid2d 8 --nodes 2 -p 4 --net 0:inf");
+        distribute(&mut b).unwrap();
+    }
+
+    #[test]
+    fn distribute_rejects_bad_network_flags() {
+        for bad in [
+            "--grid2d 8 --nodes 2 --net 5",
+            "--grid2d 8 --nodes 2 --net a:b",
+            "--grid2d 8 --nodes 2 --net 1:0",
+            "--grid2d 8 --nodes 2 --net 1:-3",
+            "--grid2d 8 --nodes 2 --net inf:2",
+            "--grid2d 8 --nodes 2 --link-faults linkdown:0:1:0.2@0.5",
+            "--grid2d 8 --nodes 2 --timeout-factor 2",
+            "--grid2d 8 --nodes 2 --recovery wait",
+            "--grid2d 8 --nodes 2 --net 0.1:2 --recovery sometimes",
+            "--grid2d 8 --nodes 2 --net 0.1:2 --timeout-factor 0",
+            "--grid2d 8 --nodes 2 --net 0.1:2 --link-faults crash:1@0.5",
+            "--grid2d 8 --nodes 2 --net 0.1:2 --link-faults linkdown:0:5:0.2@0.5",
+        ] {
+            let mut a = args(bad);
+            assert!(distribute(&mut a).is_err(), "accepted {bad:?}");
         }
     }
 

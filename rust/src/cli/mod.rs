@@ -9,6 +9,9 @@
 //! malltree distribute --grid2d 32 --nodes 4 -p 8
 //!                    [--speeds 8,4,4] [--lambda 1.1]
 //!                    [--mapping pm|prop|cp]              N-node mapping + cross-node DES
+//!                    [--net LAT:BW]                      priced links + comm-avoiding candidate
+//!                    [--link-faults linkslow:A:B:X:D@F,..]
+//!                    [--timeout-factor T] [--recovery best|wait]
 //! malltree factorize --grid2d 24 [--workers 4] [--malleable]
 //!                    [--mem-cap WORDS]
 //!                    [--fault-plan task:ID:F|every:K:F]
@@ -88,6 +91,10 @@ fn usage() -> String {
      \x20 --backend blocked|naive|pjrt (--pjrt is an alias),\n\
      \x20 distribute: --nodes N -p CORES | --speeds P0,P1,.. (heterogeneous),\n\
      \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp,\n\
+     \x20 --net LAT:BW (price cross-node transfers; BW may be inf),\n\
+     \x20 --link-faults linkslow:A:B:X:D@F|linkdown:A:B:D@F (F,D fractions of\n\
+     \x20   the fault-free networked makespan), --timeout-factor T,\n\
+     \x20 --recovery best|wait (re-map blocked subtrees vs ride faults out),\n\
      \x20 memory: --order liu|default, --cap WORDS | --cap-ratio R, --pareto [N],\n\
      \x20 serve: --arrivals poisson:RATE|bursty:RATE:B|heavy:RATE:S|trace:FILE,\n\
      \x20   --jobs N --tenants K --policy fair|makespan --admit QUEUE\n\

@@ -275,6 +275,10 @@ fn greedy_lpt(weights: &[f64], platform: &Platform) -> Vec<usize> {
 ///
 /// Returns `(component_root, node)` pairs; the caller re-assigns every
 /// needed task in each component's needed-descent to the chosen node.
+///
+/// Errors when no alive node with positive capacity exists (there is
+/// nowhere to put the lost work) — a typed failure the replay surfaces
+/// instead of a panic.
 pub fn remap_lost(
     tree: &TaskTree,
     needed: &[bool],
@@ -283,7 +287,7 @@ pub fn remap_lost(
     alive: &[bool],
     cores: &[f64],
     node_load: &[f64],
-) -> Vec<(u32, usize)> {
+) -> Result<Vec<(u32, usize)>> {
     let inv = 1.0 / alpha;
     let n = tree.len();
     // component roots and their power-weights (needed-only descent)
@@ -333,11 +337,96 @@ pub fn remap_lost(
                 best = k;
             }
         }
-        debug_assert!(best != usize::MAX, "remap_lost needs a surviving node");
+        if best == usize::MAX {
+            bail!("remap_lost: no surviving node with positive capacity");
+        }
         load[best] += w;
         out[i] = (roots[i], best);
     }
-    out
+    Ok(out)
+}
+
+/// Communication-avoiding refinement of the Pm mapping (DESIGN.md
+/// §15): start from [`map_tree`]'s power-LPT partition and greedily
+/// pull branches back onto the chain node whenever the network price
+/// of their cross edge exceeds the compute price of co-locating them.
+///
+/// A branch parked on node `k ≠ chain_node` ships its root's
+/// contribution block over the `k → chain_node` link once, costing
+/// `lat + cb/bw` seconds of pure waiting. Moving the branch instead
+/// raises the chain node's PM finish time by the marginal
+/// `((load + w)^α − load^α) / p^α` with `w = Leq(branch)^{1/α}` (the
+/// same power space the LPT balanced). Branches are visited in
+/// descending transfer-cost order, and each move updates the load, so
+/// the refinement is a standard greedy edge-cut descent. On a
+/// [`NetModel::free`] network no edge has a price and the Pm mapping
+/// comes back unchanged.
+///
+/// This is a *candidate*, not a decision: `distribute --net` replays
+/// it (and the comm-blind Pm mapping, and single-node) through the
+/// priced DES and keeps the best, so network awareness can refine the
+/// mapping but never worsen the selected schedule.
+pub fn comm_avoiding(
+    tree: &TaskTree,
+    platform: &Platform,
+    alpha: f64,
+    weights: &crate::mem::MemWeights,
+    net: &crate::net::NetModel,
+    lambda: f64,
+) -> TreeMapping {
+    let mut m = map_tree(tree, platform, alpha, MappingStrategy::Pm, lambda);
+    if m.branch_roots.is_empty() || net.is_free() {
+        return m;
+    }
+    let inv = 1.0 / alpha;
+    let leq = pseudo_equiv_lens(tree, alpha);
+    let cn = m.chain_node;
+    let p_cn = platform.node_cores(cn).powf(alpha);
+    // power-load per node from the LPT partition
+    let mut load = vec![0f64; platform.num_nodes()];
+    let w_of: Vec<f64> = m
+        .branch_roots
+        .iter()
+        .map(|&c| leq[c as usize].powf(inv))
+        .collect();
+    for (bi, &c) in m.branch_roots.iter().enumerate() {
+        load[m.node_of[c as usize]] += w_of[bi];
+    }
+    // costliest cross edges first (a branch's price depends only on
+    // its own placement, so the upfront prices stay valid as other
+    // branches move)
+    let price: Vec<f64> = m
+        .branch_roots
+        .iter()
+        .map(|&c| {
+            let k = m.node_of[c as usize];
+            if k == cn {
+                return 0.0;
+            }
+            let bw = net.bw(k, cn);
+            net.lat(k, cn) + if bw.is_infinite() { 0.0 } else { weights.cb[c as usize] / bw }
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..m.branch_roots.len()).collect();
+    order.sort_by(|&i, &j| price[j].total_cmp(&price[i]));
+    for bi in order {
+        let c = m.branch_roots[bi];
+        let k = m.node_of[c as usize];
+        if k == cn {
+            continue;
+        }
+        let transfer = price[bi];
+        let w = w_of[bi];
+        let marginal = ((load[cn] + w).powf(alpha) - load[cn].powf(alpha)) / p_cn;
+        if transfer > marginal {
+            for t in tree.subtree_tasks(c) {
+                m.node_of[t as usize] = cn;
+            }
+            load[cn] += w;
+            load[k] -= w;
+        }
+    }
+    m
 }
 
 #[cfg(test)]
@@ -550,15 +639,47 @@ mod tests {
         let cores = vec![4.0, 4.0, 4.0];
         let alpha = 1.0;
         // node 0 carries heavy residual load, node 1 is idle
-        let assign = remap_lost(&t, &needed, &remaining, alpha, &alive, &cores, &[20.0, 0.0]);
+        let assign =
+            remap_lost(&t, &needed, &remaining, alpha, &alive, &cores, &[20.0, 0.0]).unwrap();
         assert_eq!(assign.len(), 2, "two lost components");
         for &(root, k) in &assign {
             assert!(root == 2 || root == 3);
             assert_eq!(k, 1, "lost work must land on the idle survivor");
         }
         // balanced residuals → components split across survivors
-        let assign = remap_lost(&t, &needed, &remaining, alpha, &alive, &cores, &[0.0, 0.0]);
+        let assign =
+            remap_lost(&t, &needed, &remaining, alpha, &alive, &cores, &[0.0, 0.0]).unwrap();
         assert_ne!(assign[0].1, assign[1].1, "equal survivors each take one component");
+    }
+
+    #[test]
+    fn remap_lost_with_no_survivors_errors_instead_of_panicking() {
+        // regression: every node dead (or capacity-less) must surface a
+        // typed error, not a debug-assert panic / garbage assignment
+        let t = star(&[4.0, 8.0]);
+        let needed = vec![false, true, true];
+        let remaining = vec![1.0, 4.0, 8.0];
+        let dead = remap_lost(
+            &t,
+            &needed,
+            &remaining,
+            0.8,
+            &[false, false],
+            &[4.0, 4.0],
+            &[0.0, 0.0],
+        );
+        assert!(dead.is_err());
+        // alive but with zero cores is just as unusable
+        let zero = remap_lost(
+            &t,
+            &needed,
+            &remaining,
+            0.8,
+            &[true, true],
+            &[0.0, 0.0],
+            &[0.0, 0.0],
+        );
+        assert!(zero.is_err());
     }
 
     #[test]
@@ -576,7 +697,8 @@ mod tests {
             &[true, false],
             &[4.0, 4.0],
             &[0.0, 0.0],
-        );
+        )
+        .unwrap();
         assert_eq!(assign, vec![(1, 0)]);
     }
 
@@ -593,5 +715,38 @@ mod tests {
             let m = map_tree(&t, &plat, 0.9, s, 1.1);
             assert_eq!(m.node_of.len(), t.len());
         }
+    }
+
+    #[test]
+    fn comm_avoiding_is_pm_on_a_free_network() {
+        let t = star(&[8.0, 6.0, 4.0, 2.0]);
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let w = crate::mem::MemWeights::from_task_lens(&t);
+        let net = crate::net::NetModel::free(2);
+        let pm = map_tree(&t, &plat, 0.9, MappingStrategy::Pm, 1.1);
+        let ca = comm_avoiding(&t, &plat, 0.9, &w, &net, 1.1);
+        assert_eq!(ca.node_of, pm.node_of);
+        assert_eq!(ca.strategy, MappingStrategy::Pm);
+    }
+
+    #[test]
+    fn comm_avoiding_pulls_branches_home_when_links_are_expensive() {
+        // a brutally slow network: any cross edge costs far more than
+        // co-locating the whole forest on the chain node
+        let t = star(&[8.0, 6.0, 4.0, 2.0]);
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let w = crate::mem::MemWeights::uniform(t.len(), 200.0, 100.0);
+        let net = crate::net::NetModel::uniform(2, 50.0, 0.01);
+        let ca = comm_avoiding(&t, &plat, 0.9, &w, &net, 1.1);
+        assert!(
+            ca.node_of.iter().all(|&k| k == ca.chain_node),
+            "expensive links should collapse the mapping onto the chain node: {:?}",
+            ca.node_of
+        );
+        // ...while a fast network keeps the LPT spread across nodes
+        let fast = crate::net::NetModel::uniform(2, 1e-6, 1e9);
+        let cf = comm_avoiding(&t, &plat, 0.9, &w, &fast, 1.1);
+        let pm = map_tree(&t, &plat, 0.9, MappingStrategy::Pm, 1.1);
+        assert_eq!(cf.node_of, pm.node_of);
     }
 }

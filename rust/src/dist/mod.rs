@@ -26,6 +26,13 @@
 //! single-node fallback comparison (for the `Pm` strategy the returned
 //! makespan never exceeds the best single node's, Algorithm 11 style).
 //!
+//! [`distribute_networked`] is the network-aware variant (DESIGN.md
+//! §15): the same candidate sweep plus the [`comm_avoiding`] edge-cut
+//! refinement, all replayed through the *priced* network DES
+//! ([`crate::net::simulate_networked`]) so the selection sees latency,
+//! bandwidth and link sharing — the result never loses to the
+//! comm-blind Pm mapping or to the best single node under that DES.
+//!
 //! Throughout, a set `S` of independent tasks on one node of `p` cores
 //! completes no earlier than `PL(S)/p^α` where `PL(S) = (Σ_{i∈S}
 //! L_i^{1/α})^α` is the parallel equivalent length (Definition 1), and
@@ -39,12 +46,17 @@ pub mod subset;
 
 pub use het::{het_schedule, independent_optimal, HetSchedule};
 pub use homog::{homog_approx, HomogSchedule};
-pub use mapping::{map_tree, pseudo_equiv_lens, remap_lost, root_chain, MappingStrategy, TreeMapping};
+pub use mapping::{
+    comm_avoiding, map_tree, pseudo_equiv_lens, remap_lost, root_chain, MappingStrategy,
+    TreeMapping,
+};
 pub use subset::{partition_reduction, subset_sum_exact, subset_sum_fptas};
 
 use anyhow::Result;
 
+use crate::mem::MemWeights;
 use crate::model::{Platform, SpGraph, TaskTree};
+use crate::net::{simulate_networked_with_workspace, NetDesResult, NetModel, NetSimConfig};
 use crate::sched::pm::PmSchedule;
 use crate::sched::{Profile, Schedule, SchedWorkspace};
 use crate::sim::des::{simulate_distributed_with_workspace, DistDesResult, Policy};
@@ -205,6 +217,135 @@ pub fn distribute(
     })
 }
 
+/// A network-aware distributed schedule: the winning mapping and its
+/// priced-DES replay, plus the reference makespans the selection was
+/// measured against.
+#[derive(Debug, Clone)]
+pub struct NetDistSchedule {
+    /// The platform the schedule was built for.
+    pub platform: Platform,
+    /// The winning task → node assignment.
+    pub mapping: TreeMapping,
+    /// The priced network replay of the winning mapping
+    /// (`bytes_moved`, `transfer_stall`, retransmit/remap counters).
+    pub sim: NetDesResult,
+    /// Networked makespan of the network-*blind* Pm mapping — the
+    /// incumbent every candidate had to beat, so `sim.makespan` never
+    /// exceeds it.
+    pub comm_blind_makespan: f64,
+    /// Networked makespan of the whole tree on the fastest node (zero
+    /// transfers); `sim.makespan` never exceeds this either.
+    pub single_node_makespan: f64,
+    /// Which candidate won: `pm | comm-avoiding | prop | cp |
+    /// single-node`.
+    pub chose: &'static str,
+    /// True when the single-node candidate won.
+    pub fell_back: bool,
+    /// Pooled compute lower bound `L_G / (Σ_k cores_k)^α` (transfers
+    /// only add to it).
+    pub lower_bound: f64,
+}
+
+impl NetDistSchedule {
+    /// Relative gain (%) of the selected schedule over the
+    /// network-blind Pm mapping under the same priced DES (≥ 0 by
+    /// construction).
+    pub fn gain_comm_aware_vs_blind_pct(&self) -> f64 {
+        100.0 * (self.comm_blind_makespan - self.sim.makespan) / self.comm_blind_makespan
+    }
+}
+
+/// Network-aware `distribute` (DESIGN.md §15): candidate mappings —
+/// the network-blind Pm power-LPT, its [`comm_avoiding`] refinement,
+/// the `Proportional` / `CriticalPath` baselines, and the single-node
+/// fallback — are each replayed through the *priced* network DES
+/// ([`crate::net::simulate_networked`]), and the best one is kept
+/// (strict `<`, so attribution stays with the earlier candidate on
+/// ties). Selection by replay makes two bounds structural: the result
+/// never loses to the comm-blind mapping, and never loses to the best
+/// single node.
+pub fn distribute_networked(
+    tree: &TaskTree,
+    platform: &Platform,
+    alpha: f64,
+    lambda: f64,
+    weights: &MemWeights,
+    net: &NetModel,
+    cfg: &NetSimConfig,
+) -> Result<NetDistSchedule> {
+    platform.validate()?;
+    let mut ws = SchedWorkspace::new();
+    let total_len = ws.solve_forest(tree, &[tree.root], alpha).total_len;
+    let lower_bound = platform.pooled_lower_bound(total_len, alpha);
+
+    let blind = map_tree(tree, platform, alpha, MappingStrategy::Pm, lambda);
+    let mut sim = simulate_networked_with_workspace(
+        tree, alpha, platform, &blind.node_of, Policy::Pm, weights, net, cfg, &mut ws,
+    )?;
+    let comm_blind_makespan = sim.makespan;
+    let mut mapping = blind;
+    let mut chose = "pm";
+
+    let ca = comm_avoiding(tree, platform, alpha, weights, net, lambda);
+    if ca.node_of != mapping.node_of {
+        let s = simulate_networked_with_workspace(
+            tree, alpha, platform, &ca.node_of, Policy::Pm, weights, net, cfg, &mut ws,
+        )?;
+        if s.makespan < sim.makespan {
+            mapping = ca;
+            sim = s;
+            chose = "comm-avoiding";
+        }
+    }
+
+    for (name, cand) in [
+        ("prop", MappingStrategy::Proportional),
+        ("cp", MappingStrategy::CriticalPath),
+    ] {
+        let m = map_tree(tree, platform, alpha, cand, lambda);
+        if m.node_of == mapping.node_of {
+            continue;
+        }
+        let s = simulate_networked_with_workspace(
+            tree, alpha, platform, &m.node_of, Policy::Pm, weights, net, cfg, &mut ws,
+        )?;
+        if s.makespan < sim.makespan {
+            mapping = m;
+            sim = s;
+            chose = name;
+        }
+    }
+
+    let single = TreeMapping::single_node(tree, platform.fastest_node(), MappingStrategy::Pm);
+    let mut fell_back = false;
+    let single_node_makespan = if single.node_of == mapping.node_of {
+        sim.makespan
+    } else {
+        let s = simulate_networked_with_workspace(
+            tree, alpha, platform, &single.node_of, Policy::Pm, weights, net, cfg, &mut ws,
+        )?;
+        let ms = s.makespan;
+        if ms < sim.makespan {
+            mapping = single;
+            sim = s;
+            chose = "single-node";
+            fell_back = true;
+        }
+        ms
+    };
+
+    Ok(NetDistSchedule {
+        platform: platform.clone(),
+        mapping,
+        sim,
+        comm_blind_makespan,
+        single_node_makespan,
+        chose,
+        fell_back,
+        lower_bound,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +463,90 @@ mod tests {
         let expect = tree.total_work() / 8f64.powf(0.9);
         assert!(approx_eq(d.makespan, expect, 1e-9));
         assert_eq!(d.sim.cross_edges, 0);
+    }
+
+    #[test]
+    fn networked_distribute_bounds_hold_on_random_trees() {
+        // selection by priced replay makes these structural: never
+        // worse than the comm-blind Pm mapping, never worse than the
+        // best single node, never below the pooled compute bound
+        let mut rng = Rng::new(61);
+        let cfg = NetSimConfig::default();
+        for (i, class) in [TreeClass::Uniform, TreeClass::Deep, TreeClass::Binary]
+            .iter()
+            .enumerate()
+        {
+            let tree = random_tree(*class, 250 + 80 * i, &mut rng);
+            let weights = MemWeights::from_task_lens(&tree);
+            for nodes in [2usize, 4] {
+                let plat = Platform::Homogeneous { nodes, p: 8.0 };
+                for (lat, bw) in [(0.0, f64::INFINITY), (0.05, 2.0), (5.0, 0.05)] {
+                    let net = NetModel::uniform(nodes, lat, bw);
+                    let d = distribute_networked(&tree, &plat, 0.9, 1.1, &weights, &net, &cfg)
+                        .unwrap();
+                    assert!(
+                        d.sim.makespan <= d.comm_blind_makespan * (1.0 + 1e-9),
+                        "{class:?} N={nodes} lat={lat}: {} lost to comm-blind {}",
+                        d.sim.makespan,
+                        d.comm_blind_makespan
+                    );
+                    assert!(
+                        d.sim.makespan <= d.single_node_makespan * (1.0 + 1e-9),
+                        "{class:?} N={nodes} lat={lat}: {} lost to single node {}",
+                        d.sim.makespan,
+                        d.single_node_makespan
+                    );
+                    assert!(d.sim.makespan >= d.lower_bound * (1.0 - 1e-9));
+                    assert!(d.gain_comm_aware_vs_blind_pct() >= -1e-9);
+                    assert_eq!(d.fell_back, d.chose == "single-node");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn networked_distribute_on_a_free_net_keeps_the_blind_mapping_cost() {
+        // with free links comm_avoiding returns the Pm mapping
+        // unchanged and no transfer is priced, so the winner costs
+        // exactly what the comm-blind replay (= plain distributed DES)
+        // reports
+        let mut rng = Rng::new(67);
+        let tree = random_tree(TreeClass::Uniform, 400, &mut rng);
+        let weights = MemWeights::from_task_lens(&tree);
+        let plat = Platform::Homogeneous { nodes: 3, p: 8.0 };
+        let net = NetModel::free(3);
+        let d = distribute_networked(&tree, &plat, 0.9, 1.1, &weights, &net, &NetSimConfig::default())
+            .unwrap();
+        assert!(d.sim.makespan <= d.comm_blind_makespan);
+        assert_eq!(d.sim.bytes_moved, 0.0);
+        assert_eq!(d.sim.retransmits, 0);
+        assert_eq!(d.sim.remaps, 0);
+        // the comm-blind reference is exactly the free-net delegation
+        // of the Pm mapping, i.e. the network-blind distributed DES
+        let m = map_tree(&tree, &plat, 0.9, MappingStrategy::Pm, 1.1);
+        let mut ws = SchedWorkspace::new();
+        let plain =
+            simulate_distributed_with_workspace(&tree, 0.9, &plat, &m.node_of, Policy::Pm, &mut ws);
+        assert_eq!(d.comm_blind_makespan.to_bits(), plain.makespan.to_bits());
+    }
+
+    #[test]
+    fn brutal_network_forces_the_single_node_fallback() {
+        // latency and bandwidth so bad that any cross edge dwarfs the
+        // compute: the whole tree must land on one node, makespan equal
+        // to the single-node candidate, and zero words on the wire
+        let mut rng = Rng::new(71);
+        let tree = random_tree(TreeClass::Uniform, 200, &mut rng);
+        let weights = MemWeights::from_task_lens(&tree);
+        let plat = Platform::Homogeneous { nodes: 4, p: 8.0 };
+        let net = NetModel::uniform(4, 1e9, 1e-9);
+        let d = distribute_networked(&tree, &plat, 0.9, 1.1, &weights, &net, &NetSimConfig::default())
+            .unwrap();
+        assert!(d.mapping.node_of.iter().all(|&k| k == d.mapping.node_of[0]));
+        assert_eq!(d.sim.cross_edges, 0);
+        assert_eq!(d.sim.bytes_moved, 0.0);
+        assert!(approx_eq(d.sim.makespan, d.single_node_makespan, 1e-12));
+        assert!(d.gain_comm_aware_vs_blind_pct() > 0.0, "blind mapping pays the wire");
     }
 
     #[test]

@@ -32,6 +32,10 @@
 //! * [`mem`] — memory-aware scheduling: per-task memory weights, Liu's
 //!   optimal sequential traversal, and memory-bounded malleable
 //!   schedules (the makespan / peak-memory Pareto front);
+//! * [`net`] — the priced network model: per-link latency/bandwidth
+//!   with fair sharing, contribution-block transfer volumes, link-fault
+//!   injection with timeout/retransmit, and communication-avoiding
+//!   degradation of the distributed mapping;
 //! * [`online`] — the online multi-tenant scheduling service: stochastic
 //!   job-arrival streams, admission control from the pooled `L_G/p^α`
 //!   bound, deadline timeouts, and reject/defer/degrade backpressure
@@ -53,6 +57,7 @@ pub mod frontal;
 pub mod mem;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod online;
 pub mod runtime;
 pub mod sched;

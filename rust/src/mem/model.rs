@@ -57,6 +57,26 @@ impl MemWeights {
         MemWeights { front: vec![front; n], cb: vec![cb; n] }
     }
 
+    /// Dense-front surrogate from task lengths alone: a front doing
+    /// `len` flops factors an `m × m` dense block with `len ≈ m³`, so
+    /// its contribution block holds `cb = len^{2/3}` words and the
+    /// front twice that (same scaling as
+    /// [`crate::workload::generator::synthetic_mem_weights`], minus
+    /// the calibration noise). The root contributes nothing upward.
+    /// Used to price cross-node transfers when a tree carries no
+    /// measured weights.
+    pub fn from_task_lens(tree: &TaskTree) -> MemWeights {
+        let n = tree.len();
+        let mut front = Vec::with_capacity(n);
+        let mut cb = Vec::with_capacity(n);
+        for (i, node) in tree.nodes.iter().enumerate() {
+            let c = if i as u32 == tree.root { 0.0 } else { node.len.powf(2.0 / 3.0) };
+            cb.push(c);
+            front.push(2.0 * node.len.powf(2.0 / 3.0));
+        }
+        MemWeights { front, cb }
+    }
+
     /// Number of tasks covered.
     pub fn len(&self) -> usize {
         self.front.len()
@@ -127,6 +147,18 @@ mod tests {
         w.front[1] = f64::NAN;
         assert!(w.validate(&t).is_err());
         MemWeights::uniform(2, 4.0, 1.0).validate(&t).unwrap();
+    }
+
+    #[test]
+    fn task_len_surrogate_validates_and_scales() {
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 8.0, 27.0]).unwrap();
+        let w = MemWeights::from_task_lens(&t);
+        w.validate(&t).unwrap();
+        assert_eq!(w.cb[t.root as usize], 0.0);
+        // len = 8 → cb = 8^{2/3} = 4, front = 8; len = 27 → cb = 9
+        assert!((w.cb[1] - 4.0).abs() < 1e-12);
+        assert!((w.cb[2] - 9.0).abs() < 1e-9);
+        assert!((w.front[1] - 8.0).abs() < 1e-12);
     }
 
     #[test]

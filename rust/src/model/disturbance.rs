@@ -12,7 +12,14 @@
 //! * [`FaultKind::Leave`] / [`FaultKind::Join`] — elastic capacity:
 //!   cores leave or join a node mid-run;
 //! * [`FaultKind::Slowdown`] — a transient multiplicative speed drop
-//!   (e.g. co-tenancy interference) that clears after `duration`.
+//!   (e.g. co-tenancy interference) that clears after `duration`;
+//! * [`FaultKind::LinkDegrade`] / [`FaultKind::LinkDown`] — the
+//!   *network* misbehaves: the link between two nodes runs at
+//!   `factor ×` its nominal bandwidth (or is severed outright) for
+//!   `duration` seconds. Compute replay ([`crate::sim::faults`])
+//!   ignores them — its network is free by assumption — while the
+//!   priced network replay ([`crate::net`]) times out and retransmits
+//!   the affected transfers.
 //!
 //! Traces are deterministic values — generated seeded by
 //! [`crate::workload::generator::random_fault_trace`], serialized in
@@ -33,17 +40,31 @@ pub enum FaultKind {
     /// `node` runs at `factor ×` its nominal speed for `duration`
     /// seconds (factor < 1 is a slowdown; > 1 a transient boost).
     Slowdown { node: usize, factor: f64, duration: f64 },
+    /// The link between nodes `a` and `b` (both directions) runs at
+    /// `factor ×` its nominal bandwidth for `duration` seconds.
+    LinkDegrade { a: usize, b: usize, factor: f64, duration: f64 },
+    /// The link between nodes `a` and `b` is severed (zero bandwidth)
+    /// for `duration` seconds, then restored — bounded, so a
+    /// wait-it-out baseline always stays finite.
+    LinkDown { a: usize, b: usize, duration: f64 },
 }
 
 impl FaultKind {
-    /// The node this event targets.
+    /// The node this event targets (the first endpoint for link
+    /// events).
     pub fn node(&self) -> usize {
         match *self {
             FaultKind::Crash { node }
             | FaultKind::Leave { node, .. }
             | FaultKind::Join { node, .. }
             | FaultKind::Slowdown { node, .. } => node,
+            FaultKind::LinkDegrade { a, .. } | FaultKind::LinkDown { a, .. } => a,
         }
+    }
+
+    /// True for events against a link rather than a node.
+    pub fn is_link(&self) -> bool {
+        matches!(self, FaultKind::LinkDegrade { .. } | FaultKind::LinkDown { .. })
     }
 
     /// Short name used by the trace v3 format and CLI tables.
@@ -53,6 +74,8 @@ impl FaultKind {
             FaultKind::Leave { .. } => "leave",
             FaultKind::Join { .. } => "join",
             FaultKind::Slowdown { .. } => "slow",
+            FaultKind::LinkDegrade { .. } => "linkslow",
+            FaultKind::LinkDown { .. } => "linkdown",
         }
     }
 }
@@ -100,6 +123,18 @@ impl FaultTrace {
             .count()
     }
 
+    /// Number of link events ([`FaultKind::is_link`]).
+    pub fn link_events(&self) -> usize {
+        self.events.iter().filter(|e| e.kind.is_link()).count()
+    }
+
+    /// The sub-trace of link events only (times preserved).
+    pub fn link_only(&self) -> FaultTrace {
+        FaultTrace {
+            events: self.events.iter().copied().filter(|e| e.kind.is_link()).collect(),
+        }
+    }
+
     /// Check the trace against a platform of `n_nodes` nodes: finite
     /// non-negative times, in-range node indices, positive magnitudes,
     /// and at least one node left uncrashed.
@@ -126,6 +161,31 @@ impl FaultTrace {
                     }
                     if !(duration > 0.0) || !duration.is_finite() {
                         bail!("event {i}: slowdown duration must be positive, got {duration}");
+                    }
+                }
+                FaultKind::LinkDegrade { a, b, factor, duration } => {
+                    if b >= n_nodes {
+                        bail!("event {i}: node {b} out of range (platform has {n_nodes})");
+                    }
+                    if a == b {
+                        bail!("event {i}: link endpoints must differ, got {a}-{b}");
+                    }
+                    if !(factor > 0.0) || !factor.is_finite() {
+                        bail!("event {i}: link factor must be positive, got {factor}");
+                    }
+                    if !(duration > 0.0) || !duration.is_finite() {
+                        bail!("event {i}: link duration must be positive, got {duration}");
+                    }
+                }
+                FaultKind::LinkDown { a, b, duration } => {
+                    if b >= n_nodes {
+                        bail!("event {i}: node {b} out of range (platform has {n_nodes})");
+                    }
+                    if a == b {
+                        bail!("event {i}: link endpoints must differ, got {a}-{b}");
+                    }
+                    if !(duration > 0.0) || !duration.is_finite() {
+                        bail!("event {i}: link duration must be positive, got {duration}");
                     }
                 }
             }
@@ -167,6 +227,40 @@ mod tests {
             assert!(FaultTrace::new(vec![e]).validate(n).is_err(), "{e:?}");
         }
         assert!(FaultTrace::empty().validate(n).is_ok());
+    }
+
+    #[test]
+    fn validate_checks_link_events() {
+        let good = FaultTrace::new(vec![
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDegrade { a: 0, b: 1, factor: 0.25, duration: 2.0 } },
+            FaultEvent { time: 2.0, kind: FaultKind::LinkDown { a: 1, b: 0, duration: 1.0 } },
+        ]);
+        assert!(good.validate(2).is_ok());
+        assert_eq!(good.link_events(), 2);
+        assert_eq!(good.link_only().len(), 2);
+        assert!(good.events[0].kind.is_link());
+        assert_eq!(good.events[0].kind.name(), "linkslow");
+        assert_eq!(good.events[1].kind.name(), "linkdown");
+        let bad = [
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDegrade { a: 0, b: 2, factor: 0.5, duration: 1.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDegrade { a: 2, b: 0, factor: 0.5, duration: 1.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDegrade { a: 0, b: 0, factor: 0.5, duration: 1.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDegrade { a: 0, b: 1, factor: 0.0, duration: 1.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDegrade { a: 0, b: 1, factor: 0.5, duration: 0.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDown { a: 0, b: 0, duration: 1.0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::LinkDown { a: 0, b: 1, duration: f64::INFINITY } },
+        ];
+        for e in bad {
+            assert!(FaultTrace::new(vec![e]).validate(2).is_err(), "{e:?}");
+        }
+        // a crash-everything trace is still rejected with link noise
+        let t = FaultTrace::new(vec![
+            FaultEvent { time: 1.0, kind: FaultKind::Crash { node: 0 } },
+            FaultEvent { time: 1.5, kind: FaultKind::LinkDown { a: 0, b: 1, duration: 1.0 } },
+            FaultEvent { time: 2.0, kind: FaultKind::Crash { node: 1 } },
+        ]);
+        assert!(t.validate(2).is_err());
+        assert_eq!(t.link_only().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,32 @@
+//! Network-aware distributed scheduling (DESIGN.md §15).
+//!
+//! The distributed layer ([`crate::dist`]) maps subtrees to nodes and
+//! replays them through a cross-node DES whose network is free. This
+//! module prices that network and makes the schedule survive its
+//! faults:
+//!
+//! * [`model`] — [`NetModel`]: per-node-pair latency and bandwidth,
+//!   with fair sharing among concurrent transfers on a link;
+//! * [`sim`] — [`simulate_networked`]: the priced DES, where every
+//!   cross-node tree edge ships the child's contribution block
+//!   ([`crate::mem::MemWeights::cb`] words); and
+//!   [`replay_link_faults`]: the same engine under
+//!   [`crate::model::FaultKind::LinkDegrade`] /
+//!   [`crate::model::FaultKind::LinkDown`] windows, with transfer
+//!   timeouts, [`crate::util::retry::LinearBackoff`] retransmits, and
+//!   a recovery decision ([`NetRecovery`]) that re-maps the blocked
+//!   subtree when that beats waiting the fault out — never worse than
+//!   waiting by construction.
+//!
+//! The communication-avoiding mapping candidate and the
+//! network-priced `distribute` pipeline live in [`crate::dist`]
+//! (`dist` depends on `net`, not the other way around).
+
+pub mod model;
+pub mod sim;
+
+pub use model::NetModel;
+pub use sim::{
+    replay_link_faults, simulate_networked, simulate_networked_with_workspace, NetDesResult,
+    NetRecovery, NetReplay, NetSimConfig,
+};

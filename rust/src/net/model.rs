@@ -1,0 +1,120 @@
+//! Link model for a distributed platform (DESIGN.md §15).
+//!
+//! [`NetModel`] prices the link between every ordered node pair with a
+//! latency (seconds per message) and a bandwidth (words per second).
+//! A transfer of `w` words from `a` to `b` costs `lat(a,b) + w/rate`,
+//! where the rate is the link bandwidth divided fairly among the
+//! transfers concurrently in their word phase on that directed link
+//! ([`crate::net::sim`]). The model is symmetric only if constructed
+//! so — [`NetModel::uniform`] is; hand-built matrices need not be.
+
+use anyhow::{ensure, Result};
+
+/// Per-node-pair latency and bandwidth (row-major `n × n`; the
+/// diagonal is ignored — intra-node edges never transfer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetModel {
+    pub n_nodes: usize,
+    /// `latency[a * n_nodes + b]`: seconds before the first word of an
+    /// `a → b` transfer moves.
+    pub latency: Vec<f64>,
+    /// `bandwidth[a * n_nodes + b]`: words per second on the `a → b`
+    /// link (`f64::INFINITY` models a free link).
+    pub bandwidth: Vec<f64>,
+}
+
+impl NetModel {
+    /// Uniform symmetric network: every inter-node link has latency
+    /// `lat` and bandwidth `bw`.
+    pub fn uniform(n_nodes: usize, lat: f64, bw: f64) -> NetModel {
+        NetModel {
+            n_nodes,
+            latency: vec![lat; n_nodes * n_nodes],
+            bandwidth: vec![bw; n_nodes * n_nodes],
+        }
+    }
+
+    /// The free network: zero latency, infinite bandwidth. Replaying
+    /// it reproduces the network-blind distributed DES bit for bit
+    /// (the engine delegates outright).
+    pub fn free(n_nodes: usize) -> NetModel {
+        NetModel::uniform(n_nodes, 0.0, f64::INFINITY)
+    }
+
+    /// Latency of the `a → b` link.
+    pub fn lat(&self, a: usize, b: usize) -> f64 {
+        self.latency[a * self.n_nodes + b]
+    }
+
+    /// Bandwidth of the `a → b` link.
+    pub fn bw(&self, a: usize, b: usize) -> f64 {
+        self.bandwidth[a * self.n_nodes + b]
+    }
+
+    /// True when every link is free (zero latency, infinite
+    /// bandwidth): transfers cost nothing and the priced engine
+    /// degenerates to the network-blind one.
+    pub fn is_free(&self) -> bool {
+        self.latency.iter().all(|&l| l == 0.0)
+            && self.bandwidth.iter().all(|&b| b == f64::INFINITY)
+    }
+
+    /// Check shape and ranges: latencies finite and ≥ 0, bandwidths
+    /// > 0 (infinite allowed — a free link).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_nodes;
+        ensure!(n > 0, "network needs at least one node");
+        ensure!(
+            self.latency.len() == n * n && self.bandwidth.len() == n * n,
+            "link matrices must be {n}x{n} (got {} latencies, {} bandwidths)",
+            self.latency.len(),
+            self.bandwidth.len()
+        );
+        for (i, &l) in self.latency.iter().enumerate() {
+            ensure!(l.is_finite() && l >= 0.0, "latency[{i}] = {l} (finite, >= 0 required)");
+        }
+        for (i, &b) in self.bandwidth.iter().enumerate() {
+            ensure!(b > 0.0 && !b.is_nan(), "bandwidth[{i}] = {b} (> 0 required)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_and_free_validate() {
+        let m = NetModel::uniform(3, 0.5, 10.0);
+        m.validate().unwrap();
+        assert_eq!(m.lat(0, 2), 0.5);
+        assert_eq!(m.bw(2, 1), 10.0);
+        assert!(!m.is_free());
+        let f = NetModel::free(2);
+        f.validate().unwrap();
+        assert!(f.is_free());
+        // zero latency alone is not free
+        assert!(!NetModel::uniform(2, 0.0, 8.0).is_free());
+    }
+
+    #[test]
+    fn validate_rejects_bad_links() {
+        let mut m = NetModel::uniform(2, 0.1, 4.0);
+        m.latency[1] = -0.5;
+        assert!(m.validate().is_err());
+        let mut m = NetModel::uniform(2, 0.1, 4.0);
+        m.latency[2] = f64::INFINITY;
+        assert!(m.validate().is_err());
+        let mut m = NetModel::uniform(2, 0.1, 4.0);
+        m.bandwidth[3] = 0.0;
+        assert!(m.validate().is_err());
+        let mut m = NetModel::uniform(2, 0.1, 4.0);
+        m.bandwidth[0] = f64::NAN;
+        assert!(m.validate().is_err());
+        let mut m = NetModel::uniform(2, 0.1, 4.0);
+        m.latency.pop();
+        assert!(m.validate().is_err());
+        assert!(NetModel::uniform(0, 0.0, 1.0).validate().is_err());
+    }
+}

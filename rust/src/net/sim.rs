@@ -1,0 +1,1316 @@
+//! Network-priced distributed DES with link faults (DESIGN.md §15).
+//!
+//! [`simulate_networked`] extends the cross-node replay of
+//! [`crate::sim::des::simulate_distributed`] with a priced network:
+//! every cross-node tree edge ships the child's contribution block
+//! (`weights.cb[child]` words, [`crate::mem::MemWeights`]) over the
+//! [`NetModel`] link between the owning nodes. A transfer starts the
+//! instant the child completes, pays the link latency, then streams its
+//! words at the link bandwidth divided fairly among the transfers
+//! concurrently in their word phase on that directed link. The parent
+//! becomes ready only once every child has *delivered* — completed
+//! locally, or arrived over the wire.
+//!
+//! [`replay_link_faults`] drives the same engine through the link
+//! events of a [`FaultTrace`] ([`FaultKind::LinkDegrade`] /
+//! [`FaultKind::LinkDown`]): windows during which a link runs at
+//! `factor ×` its nominal bandwidth (zero for a severed link).
+//! Robustness is protocol, not magic:
+//!
+//! * every transfer is armed with a deadline of `timeout_factor ×` its
+//!   nominal fault-free duration; a transfer that misses it aborts and
+//!   retries after a [`LinearBackoff`] pause (a retransmit resends the
+//!   *whole* block — partial words are wasted bytes);
+//! * when the retry budget runs dry the run makes one global recovery
+//!   decision: [`NetRecovery::WaitOnly`] disarms the timeouts and rides
+//!   the degraded link out; [`NetRecovery::Best`] additionally tries
+//!   re-mapping the blocked subtree onto the receiving node (redoing
+//!   its compute, but crossing the dead link never again) and keeps
+//!   whichever candidate finishes first. Because the wait candidate
+//!   *is* the `WaitOnly` continuation, `Best` never loses to
+//!   waiting-it-out — by construction, not by tuning.
+//!
+//! Two delegation guarantees pin the engine to its ancestors: on a
+//! [`NetModel::free`] network [`simulate_networked`] returns the
+//! network-blind distributed DES bit for bit, and
+//! [`replay_link_faults`] on an empty trace returns
+//! [`simulate_networked`] verbatim. The priced event loop itself
+//! reproduces the free-network completions bitwise too (tested with a
+//! far-future fault forcing the real engine).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::mem::MemWeights;
+use crate::model::{FaultKind, FaultTrace, Platform, TaskTree};
+use crate::net::NetModel;
+use crate::sched::SchedWorkspace;
+use crate::sim::des::{simulate_distributed_with_workspace, speedup, Policy};
+use crate::sim::event::EventHeap;
+use crate::util::retry::LinearBackoff;
+
+/// What to do when a transfer exhausts its retry budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetRecovery {
+    /// Evaluate both candidates — ride the degraded link out vs re-map
+    /// the blocked subtree to the receiving node — and keep the better
+    /// (ties prefer the re-map). Never worse than [`Self::WaitOnly`].
+    Best,
+    /// Disarm the timeouts and wait for the link to recover (the
+    /// baseline `Best` is measured against).
+    WaitOnly,
+}
+
+/// Transfer-robustness knobs of the networked DES.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetSimConfig {
+    /// A transfer times out after `timeout_factor ×` its nominal
+    /// fault-free duration (`lat + words/bw`); `f64::INFINITY` never
+    /// times out.
+    pub timeout_factor: f64,
+    /// Pause schedule between retransmit attempts (`max_retries` is
+    /// the retry budget before the recovery decision fires).
+    pub backoff: LinearBackoff,
+    /// Recovery policy once the budget is exhausted.
+    pub recovery: NetRecovery,
+}
+
+impl Default for NetSimConfig {
+    fn default() -> Self {
+        NetSimConfig {
+            timeout_factor: 4.0,
+            backoff: LinearBackoff::new(0.0, 2),
+            recovery: NetRecovery::Best,
+        }
+    }
+}
+
+/// Result of a networked distributed simulation.
+#[derive(Debug, Clone)]
+pub struct NetDesResult {
+    /// Global makespan (last completion over all nodes).
+    pub makespan: f64,
+    /// Completion time per task (re-run tasks report the final one).
+    pub completion: Vec<f64>,
+    /// Task completions processed (> n when a re-map re-ran tasks).
+    pub events: usize,
+    /// Completion time of the last task on each node.
+    pub node_finish: Vec<f64>,
+    /// Tree edges cut by the *original* mapping.
+    pub cross_edges: usize,
+    /// Waiting attributable to remote **compute**: per parent,
+    /// `max(0, latest child completion − latest local-child
+    /// completion)`, summed (the network-blind engine's stall).
+    pub cross_stall: f64,
+    /// Waiting attributable to the **network** on top of that: per
+    /// parent, `max(0, latest child delivery − latest child
+    /// completion)`, summed. Zero on a free network.
+    pub transfer_stall: f64,
+    /// Total words put on the wire, including the partial words of
+    /// timed-out or canceled attempts (waste).
+    pub bytes_moved: f64,
+    /// Transfer attempts beyond each transfer's first.
+    pub retransmits: usize,
+    /// Subtree re-mappings performed by the recovery path.
+    pub remaps: usize,
+}
+
+/// Result of a link-fault replay: the disturbed run plus its
+/// fault-free reference.
+#[derive(Debug, Clone)]
+pub struct NetReplay {
+    /// The run under the link-fault trace.
+    pub sim: NetDesResult,
+    /// Makespan of the same configuration with no link faults.
+    pub fault_free_makespan: f64,
+    /// Link events in the trace.
+    pub link_events: usize,
+}
+
+impl NetReplay {
+    /// Absolute makespan overhead of the faults (seconds).
+    pub fn overhead(&self) -> f64 {
+        self.sim.makespan - self.fault_free_makespan
+    }
+}
+
+/// A bandwidth-factor breakpoint on link `a — b` (applied to both
+/// directions; overlapping windows resolve last-writer-wins).
+#[derive(Debug, Clone, Copy)]
+struct Bp {
+    time: f64,
+    a: usize,
+    b: usize,
+    factor: f64,
+}
+
+/// Transfer phases: latency, then words, with waiting periods between
+/// retransmit attempts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Paying the link latency until `phase_at`.
+    Latency,
+    /// Streaming words at the fair-shared link rate.
+    Words,
+    /// Backing off until `phase_at`, then restarting from scratch.
+    Waiting,
+}
+
+/// One in-flight (or finished) cross-node contribution-block transfer.
+#[derive(Debug, Clone, Copy)]
+struct Transfer {
+    child: u32,
+    parent: u32,
+    from: usize,
+    to: usize,
+    words: f64,
+    remaining: f64,
+    phase: Phase,
+    /// Latency: when the latency phase ends. Waiting: when to resume.
+    phase_at: f64,
+    deadline: f64,
+    attempt: usize,
+    /// Delivered — or canceled by a re-map.
+    done: bool,
+}
+
+/// Static inputs of one engine run.
+struct Ctx<'a> {
+    tree: &'a TaskTree,
+    alpha: f64,
+    policy: Policy,
+    cores: Vec<f64>,
+    cb: &'a [f64],
+    net: &'a NetModel,
+    cfg: &'a NetSimConfig,
+    /// Link-fault breakpoints, time-sorted.
+    bps: Vec<Bp>,
+}
+
+/// Full mutable engine state — cloneable so the recovery decision can
+/// run both candidate futures to completion and adopt the winner.
+#[derive(Clone)]
+struct NetState {
+    node_of: Vec<usize>,
+    share: Vec<f64>,
+    remaining: Vec<f64>,
+    completed: Vec<bool>,
+    completion: Vec<f64>,
+    /// Children not yet *delivered* to this parent.
+    unfinished: Vec<usize>,
+    /// Latest child delivery (completion if local, arrival if cross).
+    ready_all: Vec<f64>,
+    /// Latest child completion on any node.
+    ready_comp: Vec<f64>,
+    /// Latest same-node child completion.
+    ready_local: Vec<f64>,
+    /// Delivery time per task (NaN until delivered to its parent).
+    arrived: Vec<f64>,
+    run_since: Vec<f64>,
+    in_heap: Vec<bool>,
+    heap: EventHeap<u32>,
+    transfers: Vec<Transfer>,
+    /// Current bandwidth factor per directed link (1.0 nominal).
+    degrade: Vec<f64>,
+    bp_idx: usize,
+    /// Set by recovery: no deadline is ever armed again, so the
+    /// recovery decision fires at most once per run.
+    disarmed: bool,
+    t_now: f64,
+    events: usize,
+    bytes_moved: f64,
+    transfer_stall: f64,
+    cross_stall: f64,
+    retransmits: usize,
+    remaps: usize,
+    node_finish: Vec<f64>,
+}
+
+fn dur_of(share: f64, remaining: f64, alpha: f64) -> f64 {
+    if remaining <= 0.0 {
+        0.0
+    } else {
+        remaining / speedup(share, alpha)
+    }
+}
+
+/// Deadline for a transfer attempt starting at `now`: `timeout_factor
+/// ×` the nominal (undegraded, unshared) duration. Free links have
+/// zero nominal cost and are never armed, nor is anything after the
+/// recovery decision disarmed the run.
+fn arm_deadline(ctx: &Ctx, disarmed: bool, from: usize, to: usize, words: f64, now: f64) -> f64 {
+    if disarmed || !ctx.cfg.timeout_factor.is_finite() {
+        return f64::INFINITY;
+    }
+    let nominal = ctx.net.lat(from, to) + words / ctx.net.bw(from, to);
+    if nominal <= 0.0 {
+        f64::INFINITY
+    } else {
+        now + ctx.cfg.timeout_factor * nominal
+    }
+}
+
+/// Per-node static shares over the remaining (incomplete) forest —
+/// the exact float path of the network-blind distributed engine
+/// ([`simulate_distributed_with_workspace`]), which is also how
+/// [`crate::sim::faults`] re-solves after a disturbance.
+fn solve_shares_net(ctx: &Ctx, st: &mut NetState, ws: &mut SchedWorkspace, tree2: &mut TaskTree) {
+    let n = tree2.len();
+    for v in 0..n {
+        tree2.nodes[v].len = st.remaining[v];
+    }
+    for s in st.share.iter_mut() {
+        *s = 0.0;
+    }
+    let mut member = vec![false; n];
+    for (k, &p_k) in ctx.cores.iter().enumerate() {
+        for (t, m) in member.iter_mut().enumerate() {
+            *m = !st.completed[t] && st.node_of[t] == k;
+        }
+        match ctx.policy {
+            Policy::Pm => {
+                if let Some(r) = ws.induced_task_ratios(tree2, &member, ctx.alpha, n) {
+                    for t in 0..n {
+                        if member[t] {
+                            st.share[t] = r[t] * p_k;
+                        }
+                    }
+                }
+            }
+            Policy::Proportional => {
+                if let Some(g) = crate::model::SpGraph::from_induced(tree2, &member) {
+                    let shares = crate::sched::proportional::proportional_shares(&g, p_k);
+                    for &v in g.topo() {
+                        if let crate::model::SpNode::Leaf { task: Some(t), .. } = g.nodes[v as usize]
+                        {
+                            // ratio first, share second — the exact float
+                            // path of the distributed engine
+                            let ratio = shares[v as usize] / p_k;
+                            st.share[t as usize] = ratio * p_k;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// A parent's last child just delivered: account the stalls and start
+/// it at its delivery-ready time.
+fn parent_ready(ctx: &Ctx, st: &mut NetState, pi: usize) {
+    st.transfer_stall += (st.ready_all[pi] - st.ready_comp[pi]).max(0.0);
+    st.cross_stall += (st.ready_comp[pi] - st.ready_local[pi]).max(0.0);
+    st.run_since[pi] = st.ready_all[pi];
+    let d = dur_of(st.share[pi], st.remaining[pi], ctx.alpha);
+    st.heap.push(st.ready_all[pi] + d, pi as u32);
+    st.in_heap[pi] = true;
+}
+
+/// Start shipping `child`'s contribution block to its parent's node.
+fn start_transfer(ctx: &Ctx, st: &mut NetState, child: u32, parent: u32) {
+    let from = st.node_of[child as usize];
+    let to = st.node_of[parent as usize];
+    let words = ctx.cb[child as usize];
+    let t = st.t_now;
+    let deadline = arm_deadline(ctx, st.disarmed, from, to, words, t);
+    st.transfers.push(Transfer {
+        child,
+        parent,
+        from,
+        to,
+        words,
+        remaining: words,
+        phase: Phase::Latency,
+        phase_at: t + ctx.net.lat(from, to),
+        deadline,
+        attempt: 0,
+        done: false,
+    });
+}
+
+/// Transfer `ti` arrived: deliver the child to its parent.
+fn deliver(ctx: &Ctx, st: &mut NetState, ti: usize) {
+    let tr = st.transfers[ti];
+    st.transfers[ti].done = true;
+    st.bytes_moved += tr.words;
+    let (ci, pi) = (tr.child as usize, tr.parent as usize);
+    st.arrived[ci] = st.t_now;
+    st.ready_all[pi] = st.ready_all[pi].max(st.t_now);
+    st.unfinished[pi] -= 1;
+    if st.unfinished[pi] == 0 {
+        parent_ready(ctx, st, pi);
+    }
+}
+
+/// Task `vi` completed at `t`: record it and either deliver locally or
+/// put its contribution block on the wire.
+fn on_complete(ctx: &Ctx, st: &mut NetState, vi: usize, t: f64) {
+    st.events += 1;
+    st.completed[vi] = true;
+    st.completion[vi] = t;
+    st.remaining[vi] = 0.0;
+    let k = st.node_of[vi];
+    st.node_finish[k] = st.node_finish[k].max(t);
+    if let Some(p) = ctx.tree.nodes[vi].parent {
+        let pi = p as usize;
+        st.ready_comp[pi] = st.ready_comp[pi].max(t);
+        if st.node_of[pi] == k {
+            st.ready_local[pi] = st.ready_local[pi].max(t);
+            st.arrived[vi] = t;
+            st.ready_all[pi] = st.ready_all[pi].max(t);
+            st.unfinished[pi] -= 1;
+            if st.unfinished[pi] == 0 {
+                parent_ready(ctx, st, pi);
+            }
+        } else {
+            start_transfer(ctx, st, vi as u32, p);
+        }
+    }
+}
+
+/// Wait-it-out recovery: disarm every deadline and restart the
+/// exhausted transfers. Deliberately touches nothing else — the
+/// continuation is exactly what [`NetRecovery::WaitOnly`] would have
+/// done, which is what makes `Best ≤ WaitOnly` exact.
+fn prep_wait(ctx: &Ctx, st: &mut NetState, exhausted: &[usize]) {
+    st.disarmed = true;
+    let t_now = st.t_now;
+    for tr in st.transfers.iter_mut() {
+        tr.deadline = f64::INFINITY;
+    }
+    for &i in exhausted {
+        let tr = &mut st.transfers[i];
+        tr.phase = Phase::Latency;
+        tr.phase_at = t_now + ctx.net.lat(tr.from, tr.to);
+        tr.remaining = tr.words;
+    }
+    st.retransmits += exhausted.len();
+}
+
+/// Re-map recovery: move the subtree blocked behind the first
+/// exhausted transfer onto the *receiving* node (its compute is redone
+/// there, but the dead link is never crossed again), re-solve the
+/// static shares over the remaining forest, and rebuild the event
+/// structures from the delivery state.
+fn prep_remap(ctx: &Ctx, st: &mut NetState, exhausted: &[usize], ws: &mut SchedWorkspace) {
+    let n = ctx.tree.len();
+    let t_now = st.t_now;
+    st.disarmed = true;
+    st.remaps += 1;
+    // Charge partial progress to every running task: shares are about
+    // to be re-solved, so the heap's completion times go stale.
+    for v in 0..n {
+        if st.in_heap[v] {
+            let done = (t_now - st.run_since[v]).max(0.0) * speedup(st.share[v], ctx.alpha);
+            st.remaining[v] = (st.remaining[v] - done).max(0.0);
+            st.in_heap[v] = false;
+        }
+    }
+    st.heap.clear();
+    // The blocked subtree restarts from scratch on the receiver.
+    let blocked = st.transfers[exhausted[0]];
+    let dest = blocked.to;
+    let sub = ctx.tree.subtree_tasks(blocked.child);
+    let mut in_sub = vec![false; n];
+    for &u in &sub {
+        in_sub[u as usize] = true;
+    }
+    for &u in &sub {
+        let ui = u as usize;
+        st.node_of[ui] = dest;
+        st.remaining[ui] = ctx.tree.nodes[ui].len;
+        st.completed[ui] = false;
+        st.completion[ui] = 0.0;
+        st.arrived[ui] = f64::NAN;
+    }
+    // Cancel the transfers out of the re-run subtree (the blocked one
+    // included — the subtree is closed under descendants, so only the
+    // blocked edge leaves it). In-flight words are waste.
+    let mut waste = 0.0;
+    for tr in st.transfers.iter_mut() {
+        if !tr.done && in_sub[tr.child as usize] {
+            if tr.phase == Phase::Words {
+                waste += tr.words - tr.remaining;
+            }
+            tr.done = true;
+        }
+    }
+    st.bytes_moved += waste;
+    // Other exhausted transfers (a multi-link failure) restart with
+    // the timeouts disarmed.
+    let mut restarted = 0usize;
+    for &i in exhausted {
+        let tr = &mut st.transfers[i];
+        if tr.done {
+            continue;
+        }
+        tr.phase = Phase::Latency;
+        tr.phase_at = t_now + ctx.net.lat(tr.from, tr.to);
+        tr.remaining = tr.words;
+        restarted += 1;
+    }
+    st.retransmits += restarted;
+    for tr in st.transfers.iter_mut() {
+        tr.deadline = f64::INFINITY;
+    }
+    // Rebuild the dependency counters and ready times from the
+    // delivery state (`arrived`), not from scratch: deliveries outside
+    // the subtree stay delivered, and no stall is re-counted.
+    for v in 0..n {
+        st.unfinished[v] = 0;
+        st.ready_all[v] = 0.0;
+        st.ready_comp[v] = 0.0;
+        st.ready_local[v] = 0.0;
+    }
+    for v in 0..n {
+        if let Some(p) = ctx.tree.nodes[v].parent {
+            let pi = p as usize;
+            if st.arrived[v].is_nan() {
+                st.unfinished[pi] += 1;
+            } else {
+                st.ready_all[pi] = st.ready_all[pi].max(st.arrived[v]);
+            }
+            if st.completed[v] {
+                st.ready_comp[pi] = st.ready_comp[pi].max(st.completion[v]);
+                if st.node_of[v] == st.node_of[pi] {
+                    st.ready_local[pi] = st.ready_local[pi].max(st.completion[v]);
+                }
+            }
+        }
+    }
+    let mut tree2 = ctx.tree.clone();
+    solve_shares_net(ctx, st, ws, &mut tree2);
+    for v in 0..n as u32 {
+        let vi = v as usize;
+        if !st.completed[vi] && st.unfinished[vi] == 0 {
+            st.run_since[vi] = t_now.max(st.ready_all[vi]);
+            let d = dur_of(st.share[vi], st.remaining[vi], ctx.alpha);
+            st.heap.push(st.run_since[vi] + d, v);
+            st.in_heap[vi] = true;
+        }
+    }
+}
+
+/// The priced event loop: advance to the next event (compute
+/// completion, latency end, word-phase finish, backoff resume, fault
+/// breakpoint, or deadline), charge the interval to the in-flight word
+/// phases, and process everything due. Equal-time order — latency
+/// ends, arrivals, compute completions (inclusive, cascading),
+/// resumes, breakpoints, timeouts — means a transfer finishing exactly
+/// at its deadline succeeds and completions precede same-time faults
+/// (the [`crate::sim::faults`] convention).
+fn drive(ctx: &Ctx, st: &mut NetState, ws: &mut SchedWorkspace) -> Result<()> {
+    let nn = ctx.net.n_nodes;
+    let mut count = vec![0usize; nn * nn];
+    loop {
+        if st.completed.iter().all(|&c| c) {
+            return Ok(());
+        }
+        // Fair sharing: transfers concurrently in their word phase on
+        // a directed link split its (possibly degraded) bandwidth.
+        for c in count.iter_mut() {
+            *c = 0;
+        }
+        for tr in &st.transfers {
+            if !tr.done && tr.phase == Phase::Words && tr.remaining > 0.0 {
+                count[tr.from * nn + tr.to] += 1;
+            }
+        }
+        let mut t_next = f64::INFINITY;
+        if let Some(t) = st.heap.peek_time() {
+            t_next = t_next.min(t);
+        }
+        if st.bp_idx < ctx.bps.len() {
+            t_next = t_next.min(ctx.bps[st.bp_idx].time);
+        }
+        let mut rate = vec![0f64; st.transfers.len()];
+        let mut finish = vec![f64::INFINITY; st.transfers.len()];
+        for (i, tr) in st.transfers.iter().enumerate() {
+            if tr.done {
+                continue;
+            }
+            match tr.phase {
+                Phase::Latency | Phase::Waiting => t_next = t_next.min(tr.phase_at),
+                Phase::Words => {
+                    let f = st.degrade[tr.from * nn + tr.to];
+                    // explicit zero: factor 0 × infinite bandwidth
+                    // must sever the link, not produce NaN
+                    let eff = if f == 0.0 { 0.0 } else { f * ctx.net.bw(tr.from, tr.to) };
+                    let r = if eff == 0.0 { 0.0 } else { eff / count[tr.from * nn + tr.to] as f64 };
+                    rate[i] = r;
+                    if tr.remaining <= 0.0 || r.is_infinite() {
+                        finish[i] = st.t_now;
+                    } else if r > 0.0 {
+                        finish[i] = st.t_now + tr.remaining / r;
+                    }
+                    t_next = t_next.min(finish[i]);
+                }
+            }
+            if tr.deadline.is_finite() {
+                t_next = t_next.min(tr.deadline);
+            }
+        }
+        ensure!(
+            t_next.is_finite(),
+            "networked DES stuck at t={} with incomplete tasks (no future event)",
+            st.t_now
+        );
+        let t_next = t_next.max(st.t_now);
+        let dt = t_next - st.t_now;
+        for (i, tr) in st.transfers.iter_mut().enumerate() {
+            if tr.done || tr.phase != Phase::Words {
+                continue;
+            }
+            // guard both zero-rate (0 × ∞ interval) and infinite-rate
+            // (∞ × 0 interval) NaN products
+            if dt > 0.0 && rate[i].is_finite() && rate[i] > 0.0 {
+                tr.remaining = (tr.remaining - dt * rate[i]).max(0.0);
+            }
+            if finish[i] <= t_next {
+                // the transfer that *defined* t_next lands exactly,
+                // float residue notwithstanding
+                tr.remaining = 0.0;
+            }
+        }
+        st.t_now = t_next;
+        // (1) latency phases ending
+        for tr in st.transfers.iter_mut() {
+            if !tr.done && tr.phase == Phase::Latency && tr.phase_at <= st.t_now {
+                tr.phase = Phase::Words;
+            }
+        }
+        // (2) arrivals
+        for i in 0..st.transfers.len() {
+            let tr = st.transfers[i];
+            if !tr.done && tr.phase == Phase::Words && tr.remaining <= 0.0 {
+                deliver(ctx, st, i);
+            }
+        }
+        // (3) compute completions (inclusive: zero-duration parents
+        // pushed during the drain cascade within the same instant)
+        while let Some(t) = st.heap.peek_time() {
+            if t > st.t_now {
+                break;
+            }
+            let (t, v) = st.heap.pop().unwrap();
+            let vi = v as usize;
+            if st.completed[vi] || !st.in_heap[vi] {
+                continue;
+            }
+            st.in_heap[vi] = false;
+            on_complete(ctx, st, vi, t);
+        }
+        // (4) backoff pauses ending: the retry restarts from scratch
+        let disarmed = st.disarmed;
+        let t_now = st.t_now;
+        for tr in st.transfers.iter_mut() {
+            if !tr.done && tr.phase == Phase::Waiting && tr.phase_at <= t_now {
+                tr.phase = Phase::Latency;
+                tr.phase_at = t_now + ctx.net.lat(tr.from, tr.to);
+                tr.remaining = tr.words;
+                tr.deadline = arm_deadline(ctx, disarmed, tr.from, tr.to, tr.words, t_now);
+            }
+        }
+        // (5) link-fault breakpoints (both directions)
+        while st.bp_idx < ctx.bps.len() && ctx.bps[st.bp_idx].time <= st.t_now {
+            let bp = ctx.bps[st.bp_idx];
+            st.degrade[bp.a * nn + bp.b] = bp.factor;
+            st.degrade[bp.b * nn + bp.a] = bp.factor;
+            st.bp_idx += 1;
+        }
+        // (6) timeouts — after (2), so a transfer landing exactly at
+        // its deadline succeeds
+        let mut exhausted: Vec<usize> = Vec::new();
+        for i in 0..st.transfers.len() {
+            let tr = st.transfers[i];
+            if tr.done || tr.phase == Phase::Waiting || tr.deadline > st.t_now {
+                continue;
+            }
+            st.bytes_moved += tr.words - tr.remaining; // wasted words
+            let tr = &mut st.transfers[i];
+            tr.attempt += 1;
+            tr.remaining = tr.words;
+            tr.deadline = f64::INFINITY;
+            match ctx.cfg.backoff.delay(tr.attempt) {
+                Some(d) => {
+                    tr.phase = Phase::Waiting;
+                    tr.phase_at = st.t_now + d;
+                    st.retransmits += 1;
+                }
+                None => exhausted.push(i),
+            }
+        }
+        if !exhausted.is_empty() {
+            match ctx.cfg.recovery {
+                NetRecovery::WaitOnly => prep_wait(ctx, st, &exhausted),
+                NetRecovery::Best => {
+                    // One global decision, both futures run to the
+                    // end: the wait candidate IS the WaitOnly
+                    // continuation, so Best ≤ WaitOnly exactly. Both
+                    // candidates disarm, so recursion depth is ≤ 2.
+                    let mut w = st.clone();
+                    prep_wait(ctx, &mut w, &exhausted);
+                    drive(ctx, &mut w, ws)?;
+                    let mut r = st.clone();
+                    prep_remap(ctx, &mut r, &exhausted, ws);
+                    drive(ctx, &mut r, ws)?;
+                    let mw = w.completion.iter().fold(0.0f64, |a, &b| a.max(b));
+                    let mr = r.completion.iter().fold(0.0f64, |a, &b| a.max(b));
+                    *st = if mr <= mw { r } else { w };
+                }
+            }
+        }
+    }
+}
+
+fn validate_inputs(
+    tree: &TaskTree,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    weights: &MemWeights,
+    net: &NetModel,
+    cfg: &NetSimConfig,
+) -> Result<()> {
+    net.validate()?;
+    ensure!(
+        net.n_nodes == platform.num_nodes(),
+        "network covers {} nodes, platform has {}",
+        net.n_nodes,
+        platform.num_nodes()
+    );
+    weights.validate(tree)?;
+    ensure!(node_of.len() == tree.len(), "node_of must cover every task");
+    for &k in node_of {
+        ensure!(k < net.n_nodes, "task mapped to node {k}, platform has {}", net.n_nodes);
+    }
+    if !matches!(policy, Policy::Pm | Policy::Proportional) {
+        bail!("networked DES replays static-share policies (Pm, Proportional), got {policy:?}");
+    }
+    ensure!(
+        cfg.timeout_factor > 0.0,
+        "timeout factor must be positive, got {}",
+        cfg.timeout_factor
+    );
+    Ok(())
+}
+
+fn count_cross_edges(tree: &TaskTree, node_of: &[usize]) -> usize {
+    tree.nodes
+        .iter()
+        .enumerate()
+        .filter(|(t, node)| {
+            node.parent
+                .is_some_and(|p| node_of[*t] != node_of[p as usize])
+        })
+        .count()
+}
+
+fn run_engine(ctx: &Ctx, node_of: &[usize], ws: &mut SchedWorkspace) -> Result<NetDesResult> {
+    let n = ctx.tree.len();
+    let nn = ctx.net.n_nodes;
+    let mut st = NetState {
+        node_of: node_of.to_vec(),
+        share: vec![0.0; n],
+        remaining: ctx.tree.nodes.iter().map(|t| t.len).collect(),
+        completed: vec![false; n],
+        completion: vec![0.0; n],
+        unfinished: ctx.tree.nodes.iter().map(|t| t.children.len()).collect(),
+        ready_all: vec![0.0; n],
+        ready_comp: vec![0.0; n],
+        ready_local: vec![0.0; n],
+        arrived: vec![f64::NAN; n],
+        run_since: vec![0.0; n],
+        in_heap: vec![false; n],
+        heap: EventHeap::with_capacity(n),
+        transfers: Vec::new(),
+        degrade: vec![1.0; nn * nn],
+        bp_idx: 0,
+        disarmed: false,
+        t_now: 0.0,
+        events: 0,
+        bytes_moved: 0.0,
+        transfer_stall: 0.0,
+        cross_stall: 0.0,
+        retransmits: 0,
+        remaps: 0,
+        node_finish: vec![0.0; nn],
+    };
+    let mut tree2 = ctx.tree.clone();
+    solve_shares_net(ctx, &mut st, ws, &mut tree2);
+    for v in 0..n as u32 {
+        let vi = v as usize;
+        if st.unfinished[vi] == 0 {
+            let d = dur_of(st.share[vi], st.remaining[vi], ctx.alpha);
+            st.heap.push(st.run_since[vi] + d, v);
+            st.in_heap[vi] = true;
+        }
+    }
+    drive(ctx, &mut st, ws)?;
+    let makespan = st.completion.iter().fold(0.0f64, |a, &b| a.max(b));
+    Ok(NetDesResult {
+        makespan,
+        completion: st.completion,
+        events: st.events,
+        node_finish: st.node_finish,
+        cross_edges: count_cross_edges(ctx.tree, node_of),
+        cross_stall: st.cross_stall,
+        transfer_stall: st.transfer_stall,
+        bytes_moved: st.bytes_moved,
+        retransmits: st.retransmits,
+        remaps: st.remaps,
+    })
+}
+
+/// Delegate to the network-blind distributed DES (free network): same
+/// result bit for bit, with the transfer volume priced after the fact.
+fn delegate_free(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    weights: &MemWeights,
+    ws: &mut SchedWorkspace,
+) -> NetDesResult {
+    let d = simulate_distributed_with_workspace(tree, alpha, platform, node_of, policy, ws);
+    let mut bytes = 0.0;
+    for (t, node) in tree.nodes.iter().enumerate() {
+        if let Some(p) = node.parent {
+            if node_of[t] != node_of[p as usize] {
+                bytes += weights.cb[t];
+            }
+        }
+    }
+    NetDesResult {
+        makespan: d.makespan,
+        completion: d.completion,
+        events: d.events,
+        node_finish: d.node_finish,
+        cross_edges: d.cross_edges,
+        cross_stall: d.cross_stall,
+        transfer_stall: 0.0,
+        bytes_moved: bytes,
+        retransmits: 0,
+        remaps: 0,
+    }
+}
+
+/// Replay a distributed mapping through the priced network: cross-node
+/// edges ship `weights.cb[child]` words over `net` with latency, fair
+/// bandwidth sharing, and the timeout/retransmit protocol of `cfg`.
+///
+/// On a [`NetModel::free`] network this returns
+/// [`crate::sim::des::simulate_distributed`] bit for bit (it
+/// delegates). Errors on malformed inputs or a non-static-share
+/// policy.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_networked(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    weights: &MemWeights,
+    net: &NetModel,
+    cfg: &NetSimConfig,
+) -> Result<NetDesResult> {
+    let mut ws = SchedWorkspace::new();
+    simulate_networked_with_workspace(tree, alpha, platform, node_of, policy, weights, net, cfg, &mut ws)
+}
+
+/// [`simulate_networked`] with a caller-owned workspace (the
+/// `distribute --net` candidate sweep reuses solver buffers).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_networked_with_workspace(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    weights: &MemWeights,
+    net: &NetModel,
+    cfg: &NetSimConfig,
+    ws: &mut SchedWorkspace,
+) -> Result<NetDesResult> {
+    validate_inputs(tree, platform, node_of, policy, weights, net, cfg)?;
+    if net.is_free() {
+        return Ok(delegate_free(tree, alpha, platform, node_of, policy, weights, ws));
+    }
+    let ctx = Ctx {
+        tree,
+        alpha,
+        policy,
+        cores: (0..platform.num_nodes()).map(|k| platform.node_cores(k)).collect(),
+        cb: &weights.cb,
+        net,
+        cfg,
+        bps: Vec::new(),
+    };
+    run_engine(&ctx, node_of, ws)
+}
+
+/// Drive [`simulate_networked`] through the link events of `trace`
+/// ([`FaultKind::LinkDegrade`] severs partially, [`FaultKind::LinkDown`]
+/// fully, both for a bounded window, both directions). Also runs the
+/// fault-free reference for the overhead report.
+///
+/// An empty trace returns the fault-free run verbatim. Errors if the
+/// trace carries any non-link event (replay those with
+/// [`crate::sim::faults::replay_faults_distributed`]).
+#[allow(clippy::too_many_arguments)]
+pub fn replay_link_faults(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    weights: &MemWeights,
+    net: &NetModel,
+    cfg: &NetSimConfig,
+    trace: &FaultTrace,
+) -> Result<NetReplay> {
+    for (i, e) in trace.events.iter().enumerate() {
+        ensure!(
+            e.kind.is_link(),
+            "event {i} ({}) is not a link fault; replay node disturbances with sim::faults",
+            e.kind.name()
+        );
+    }
+    trace.validate(platform.num_nodes())?;
+    let mut ws = SchedWorkspace::new();
+    let fault_free =
+        simulate_networked_with_workspace(tree, alpha, platform, node_of, policy, weights, net, cfg, &mut ws)?;
+    if trace.is_empty() {
+        let fault_free_makespan = fault_free.makespan;
+        return Ok(NetReplay { sim: fault_free, fault_free_makespan, link_events: 0 });
+    }
+    // A non-empty trace always runs the priced engine, free network or
+    // not — a severed free link is not free.
+    let mut bps = Vec::with_capacity(trace.len() * 2);
+    for e in &trace.events {
+        match e.kind {
+            FaultKind::LinkDegrade { a, b, factor, duration } => {
+                bps.push(Bp { time: e.time, a, b, factor });
+                bps.push(Bp { time: e.time + duration, a, b, factor: 1.0 });
+            }
+            FaultKind::LinkDown { a, b, duration } => {
+                bps.push(Bp { time: e.time, a, b, factor: 0.0 });
+                bps.push(Bp { time: e.time + duration, a, b, factor: 1.0 });
+            }
+            _ => unreachable!("non-link events rejected above"),
+        }
+    }
+    bps.sort_by(|x, y| x.time.total_cmp(&y.time));
+    let ctx = Ctx {
+        tree,
+        alpha,
+        policy,
+        cores: (0..platform.num_nodes()).map(|k| platform.node_cores(k)).collect(),
+        cb: &weights.cb,
+        net,
+        cfg,
+        bps,
+    };
+    let sim = run_engine(&ctx, node_of, &mut ws)?;
+    Ok(NetReplay {
+        sim,
+        fault_free_makespan: fault_free.makespan,
+        link_events: trace.link_events(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::FaultEvent;
+    use crate::sim::des::simulate_distributed;
+    use crate::util::approx_eq;
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+    use crate::workload::generator::random_link_fault_trace;
+
+    fn star() -> TaskTree {
+        TaskTree::from_parents(&[0, 0, 0], &[2.0, 8.0, 8.0]).unwrap()
+    }
+
+    fn bits(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn free_network_matches_distributed_bitwise_randomized() {
+        check(
+            Config { cases: 30, seed: 0x9E7 },
+            "free-network DES == network-blind DES",
+            |rng: &mut Rng| {
+                let n = rng.range(2, 40);
+                let parents: Vec<usize> =
+                    (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+                let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 100.0)).collect();
+                let alpha = rng.range_f64(0.5, 1.0);
+                let nodes = rng.range(2, 5);
+                let node_of: Vec<usize> = (0..n).map(|_| rng.below(nodes)).collect();
+                (TaskTree::from_parents(&parents, &lens).unwrap(), alpha, nodes, node_of)
+            },
+            |(tree, alpha, nodes, node_of)| {
+                let plat = Platform::Homogeneous { nodes: *nodes, p: 4.0 };
+                let net = NetModel::free(*nodes);
+                let w = MemWeights::from_task_lens(tree);
+                for pol in [Policy::Pm, Policy::Proportional] {
+                    let d = simulate_distributed(tree, *alpha, &plat, node_of, pol);
+                    let nr = simulate_networked(
+                        tree, *alpha, &plat, node_of, pol, &w, &net, &NetSimConfig::default(),
+                    )
+                    .map_err(|e| e.to_string())?;
+                    if nr.makespan.to_bits() != d.makespan.to_bits()
+                        || bits(&nr.completion) != bits(&d.completion)
+                        || nr.events != d.events
+                        || nr.cross_edges != d.cross_edges
+                        || nr.cross_stall.to_bits() != d.cross_stall.to_bits()
+                    {
+                        return Err(format!("{pol:?}: free-net mismatch vs distributed"));
+                    }
+                    let want_bytes: f64 = tree
+                        .nodes
+                        .iter()
+                        .enumerate()
+                        .filter(|(t, nd)| {
+                            nd.parent.is_some_and(|p| node_of[*t] != node_of[p as usize])
+                        })
+                        .map(|(t, _)| w.cb[t])
+                        .sum();
+                    if nr.bytes_moved.to_bits() != want_bytes.to_bits()
+                        || nr.transfer_stall != 0.0
+                        || nr.retransmits != 0
+                        || nr.remaps != 0
+                    {
+                        return Err(format!("{pol:?}: free-net metrics not clean"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_trace_replay_matches_plain_networked_bitwise() {
+        let t = star();
+        let (a, p) = (0.5, 4.0);
+        let plat = Platform::Homogeneous { nodes: 2, p };
+        let node_of = vec![0usize, 0, 1];
+        let w = MemWeights::uniform(3, 8.0, 4.0);
+        let net = NetModel::uniform(2, 0.5, 1.0);
+        let cfg = NetSimConfig::default();
+        let plain = simulate_networked(&t, a, &plat, &node_of, Policy::Pm, &w, &net, &cfg).unwrap();
+        let rep = replay_link_faults(
+            &t, a, &plat, &node_of, Policy::Pm, &w, &net, &cfg, &FaultTrace::empty(),
+        )
+        .unwrap();
+        assert_eq!(rep.sim.makespan.to_bits(), plain.makespan.to_bits());
+        assert_eq!(bits(&rep.sim.completion), bits(&plain.completion));
+        assert_eq!(rep.sim.transfer_stall.to_bits(), plain.transfer_stall.to_bits());
+        assert_eq!(rep.sim.bytes_moved.to_bits(), plain.bytes_moved.to_bits());
+        assert_eq!(rep.sim.events, plain.events);
+        assert_eq!(rep.link_events, 0);
+        assert_eq!(rep.overhead(), 0.0);
+    }
+
+    #[test]
+    fn far_future_fault_forces_real_engine_and_matches_fault_free() {
+        // a fault far beyond the makespan exercises the priced event
+        // loop (non-empty trace) but cannot change the outcome — this
+        // is the deep engine-vs-delegation equivalence check on a free
+        // network, and engine-vs-engine on a priced one
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 1e300,
+            kind: FaultKind::LinkDown { a: 0, b: 1, duration: 1.0 },
+        }]);
+        let cfg = NetSimConfig::default();
+        check(
+            Config { cases: 25, seed: 0xFA4 },
+            "far-future link fault is a no-op",
+            |rng: &mut Rng| {
+                let n = rng.range(2, 30);
+                let parents: Vec<usize> =
+                    (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+                let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 50.0)).collect();
+                let alpha = rng.range_f64(0.5, 1.0);
+                let node_of: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+                let free = rng.below(2) == 0;
+                (TaskTree::from_parents(&parents, &lens).unwrap(), alpha, node_of, free)
+            },
+            |(tree, alpha, node_of, free)| {
+                let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+                let net = if *free {
+                    NetModel::free(2)
+                } else {
+                    NetModel::uniform(2, 0.25, 2.0)
+                };
+                let w = MemWeights::from_task_lens(tree);
+                let ff = replay_link_faults(
+                    tree, *alpha, &plat, node_of, Policy::Pm, &w, &net, &cfg,
+                    &FaultTrace::empty(),
+                )
+                .map_err(|e| e.to_string())?;
+                let far = replay_link_faults(
+                    tree, *alpha, &plat, node_of, Policy::Pm, &w, &net, &cfg, &trace,
+                )
+                .map_err(|e| e.to_string())?;
+                if bits(&far.sim.completion) != bits(&ff.sim.completion)
+                    || far.sim.makespan.to_bits() != ff.sim.makespan.to_bits()
+                    || far.sim.events != ff.sim.events
+                {
+                    return Err(format!(
+                        "free={free}: far-future fault changed the run ({} vs {})",
+                        far.sim.makespan, ff.sim.makespan
+                    ));
+                }
+                // sums may associate differently between the engine and
+                // the delegated path; values must still agree tightly
+                let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0);
+                if !close(far.sim.bytes_moved, ff.sim.bytes_moved)
+                    || !close(far.sim.transfer_stall, ff.sim.transfer_stall)
+                    || !close(far.sim.cross_stall, ff.sim.cross_stall)
+                    || far.sim.retransmits != 0
+                    || far.sim.remaps != 0
+                {
+                    return Err("far-future fault perturbed the metrics".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn priced_star_matches_closed_form() {
+        // node 0: root(2) + leaf(8) chain, node 1: leaf(8); α = 0.5,
+        // p = 4 → leaves complete at t = 4; the remote block (4 words,
+        // lat 0.5, bw 1) arrives 4 + 0.5 + 4 = 8.5; root runs 1s
+        let t = star();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0usize, 0, 1];
+        let w = MemWeights::uniform(3, 8.0, 4.0);
+        let net = NetModel::uniform(2, 0.5, 1.0);
+        let r = simulate_networked(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &NetSimConfig::default(),
+        )
+        .unwrap();
+        assert!(approx_eq(r.completion[1], 4.0, 1e-9));
+        assert!(approx_eq(r.completion[2], 4.0, 1e-9));
+        assert!(approx_eq(r.makespan, 9.5, 1e-9), "makespan {}", r.makespan);
+        assert!(approx_eq(r.transfer_stall, 4.5, 1e-9), "stall {}", r.transfer_stall);
+        assert_eq!(r.cross_stall, 0.0);
+        assert!(approx_eq(r.bytes_moved, 4.0, 1e-12));
+        assert_eq!(r.cross_edges, 1);
+        assert_eq!((r.retransmits, r.remaps), (0, 0));
+        assert!(approx_eq(r.node_finish[0], 9.5, 1e-9));
+        assert!(approx_eq(r.node_finish[1], 4.0, 1e-9));
+    }
+
+    #[test]
+    fn concurrent_transfers_share_the_link_fairly() {
+        // both leaves live on node 1 and finish together at 8/√2; their
+        // two 4-word blocks split the unit link: rate ½ each, 8s on the
+        // wire; root then runs 1s on node 0
+        let t = star();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0usize, 1, 1];
+        let w = MemWeights::uniform(3, 8.0, 4.0);
+        let net = NetModel::uniform(2, 0.0, 1.0);
+        let r = simulate_networked(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &NetSimConfig::default(),
+        )
+        .unwrap();
+        let leaves = 8.0 / 2f64.sqrt();
+        assert!(approx_eq(r.completion[1], leaves, 1e-9));
+        assert!(approx_eq(r.completion[2], leaves, 1e-9));
+        assert!(approx_eq(r.makespan, leaves + 8.0 + 1.0, 1e-9), "makespan {}", r.makespan);
+        assert!(approx_eq(r.bytes_moved, 8.0, 1e-12));
+        assert!(approx_eq(r.transfer_stall, 8.0, 1e-9));
+        assert!(approx_eq(r.cross_stall, leaves, 1e-9));
+        assert_eq!(r.cross_edges, 2);
+    }
+
+    /// Fixture for the timeout walk-through: a degraded link (¼ speed
+    /// for 30s from t = 0.5), tight deadline (1 × nominal = 4.5s), one
+    /// retry of 1s. The transfer times out at 8.5 and again at 14,
+    /// exhausting the budget.
+    fn degraded_fixture() -> (TaskTree, Platform, Vec<usize>, MemWeights, NetModel, FaultTrace) {
+        let t = star();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0usize, 0, 1];
+        let w = MemWeights::uniform(3, 8.0, 4.0);
+        let net = NetModel::uniform(2, 0.5, 1.0);
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 0.5,
+            kind: FaultKind::LinkDegrade { a: 0, b: 1, factor: 0.25, duration: 30.0 },
+        }]);
+        (t, plat, node_of, w, net, trace)
+    }
+
+    #[test]
+    fn timeout_retransmit_and_recovery_walk_through() {
+        let (t, plat, node_of, w, net, trace) = degraded_fixture();
+        let wait_cfg = NetSimConfig {
+            timeout_factor: 1.0,
+            backoff: LinearBackoff::new(1.0, 1),
+            recovery: NetRecovery::WaitOnly,
+        };
+        // WaitOnly: after exhaustion at t = 14 the restarted attempt
+        // streams at rate ¼ from 14.5 and lands exactly as the window
+        // closes at 30.5; root finishes at 31.5
+        let wr = replay_link_faults(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &wait_cfg, &trace,
+        )
+        .unwrap();
+        assert!(approx_eq(wr.sim.makespan, 31.5, 1e-9), "wait makespan {}", wr.sim.makespan);
+        assert_eq!(wr.sim.remaps, 0);
+        assert_eq!(wr.sim.retransmits, 2); // the paced retry + the disarmed restart
+        assert!(approx_eq(wr.fault_free_makespan, 9.5, 1e-9));
+        assert!(wr.overhead() > 0.0);
+        // Best: re-mapping the blocked leaf onto node 0 re-runs its 8
+        // units as a chain (share 4, 4s) from t = 14 → root at 19
+        let best_cfg = NetSimConfig { recovery: NetRecovery::Best, ..wait_cfg };
+        let br = replay_link_faults(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &best_cfg, &trace,
+        )
+        .unwrap();
+        assert!(approx_eq(br.sim.makespan, 19.0, 1e-9), "best makespan {}", br.sim.makespan);
+        assert_eq!(br.sim.remaps, 1);
+        assert!(br.sim.retransmits >= 1);
+        assert!(br.sim.makespan <= wr.sim.makespan);
+        // wasted attempts moved 1 word each before timing out
+        assert!(br.sim.bytes_moved >= 2.0 - 1e-12);
+    }
+
+    #[test]
+    fn best_recovery_never_loses_to_waiting_randomized() {
+        check(
+            Config { cases: 20, seed: 0xBE57 },
+            "Best recovery <= WaitOnly under link faults",
+            |rng: &mut Rng| {
+                let n = rng.range(3, 25);
+                let parents: Vec<usize> =
+                    (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+                let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 50.0)).collect();
+                let alpha = rng.range_f64(0.5, 1.0);
+                let nodes = rng.range(2, 4);
+                let node_of: Vec<usize> = (0..n).map(|_| rng.below(nodes)).collect();
+                let faults = random_link_fault_trace(nodes, 20.0, rng.range(1, 4), rng);
+                (TaskTree::from_parents(&parents, &lens).unwrap(), alpha, nodes, node_of, faults)
+            },
+            |(tree, alpha, nodes, node_of, faults)| {
+                let plat = Platform::Homogeneous { nodes: *nodes, p: 4.0 };
+                let net = NetModel::uniform(*nodes, 0.1, 0.5);
+                let w = MemWeights::from_task_lens(tree);
+                let tight = LinearBackoff::new(0.5, 1);
+                let wait = replay_link_faults(
+                    tree, *alpha, &plat, node_of, Policy::Pm, &w, &net,
+                    &NetSimConfig {
+                        timeout_factor: 1.5,
+                        backoff: tight,
+                        recovery: NetRecovery::WaitOnly,
+                    },
+                    faults,
+                )
+                .map_err(|e| e.to_string())?;
+                let best = replay_link_faults(
+                    tree, *alpha, &plat, node_of, Policy::Pm, &w, &net,
+                    &NetSimConfig {
+                        timeout_factor: 1.5,
+                        backoff: tight,
+                        recovery: NetRecovery::Best,
+                    },
+                    faults,
+                )
+                .map_err(|e| e.to_string())?;
+                if best.sim.makespan > wait.sim.makespan * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "Best {} beat by WaitOnly {}",
+                        best.sim.makespan, wait.sim.makespan
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn severed_link_rides_out_on_a_free_network() {
+        // LinkDown on a free network is the 0 × ∞ NaN trap: the link
+        // must be severed (not free) for the window, then recover
+        let t = star();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0usize, 0, 1];
+        let w = MemWeights::uniform(3, 8.0, 4.0);
+        let net = NetModel::free(2);
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 1.0,
+            kind: FaultKind::LinkDown { a: 0, b: 1, duration: 10.0 },
+        }]);
+        // free links are never armed (nominal cost 0), so the engine
+        // waits the window out regardless of the recovery policy
+        let r = replay_link_faults(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &net,
+            &NetSimConfig::default(), &trace,
+        )
+        .unwrap();
+        // leaves at t = 4; the block is stuck until the link returns at
+        // t = 11, then arrives instantly; root finishes at 12
+        assert!(approx_eq(r.sim.makespan, 12.0, 1e-9), "makespan {}", r.sim.makespan);
+        assert_eq!(r.sim.retransmits, 0);
+        assert_eq!(r.sim.remaps, 0);
+        assert!(approx_eq(r.sim.transfer_stall, 7.0, 1e-9));
+        assert!(approx_eq(r.fault_free_makespan, 5.0, 1e-9));
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let t = star();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0usize, 0, 1];
+        let w = MemWeights::uniform(3, 8.0, 4.0);
+        let net = NetModel::uniform(2, 0.5, 1.0);
+        let cfg = NetSimConfig::default();
+        // network/platform node-count mismatch
+        assert!(simulate_networked(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &NetModel::uniform(3, 0.5, 1.0), &cfg
+        )
+        .is_err());
+        // out-of-range mapping
+        assert!(
+            simulate_networked(&t, 0.5, &plat, &[0, 0, 2], Policy::Pm, &w, &net, &cfg).is_err()
+        );
+        // non-static-share policy
+        assert!(simulate_networked(&t, 0.5, &plat, &node_of, Policy::Divisible, &w, &net, &cfg)
+            .is_err());
+        // weights not covering the tree
+        assert!(simulate_networked(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &MemWeights::uniform(2, 8.0, 4.0), &net, &cfg
+        )
+        .is_err());
+        // bad timeout factor
+        assert!(simulate_networked(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &net,
+            &NetSimConfig { timeout_factor: 0.0, ..cfg }
+        )
+        .is_err());
+        // non-link disturbances belong to sim::faults
+        let crash = FaultTrace::new(vec![FaultEvent {
+            time: 1.0,
+            kind: FaultKind::Crash { node: 1 },
+        }]);
+        assert!(replay_link_faults(
+            &t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &cfg, &crash
+        )
+        .is_err());
+        // link event against a node the platform does not have
+        let oob = FaultTrace::new(vec![FaultEvent {
+            time: 1.0,
+            kind: FaultKind::LinkDown { a: 0, b: 2, duration: 1.0 },
+        }]);
+        assert!(replay_link_faults(&t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &cfg, &oob)
+            .is_err());
+    }
+}

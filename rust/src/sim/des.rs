@@ -110,32 +110,17 @@ pub fn simulate_with_workspace(
     }
 }
 
-/// Min-heap entry ordered by an f64 key.
-#[derive(PartialEq)]
-struct Ev(f64, u32);
-impl Eq for Ev {}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // reversed: BinaryHeap is a max-heap
-        other.0.partial_cmp(&self.0).unwrap()
-    }
-}
-
 /// Static-share policies: every task runs at a fixed speedup from the
-/// moment it becomes ready; completions pop from a time-keyed heap.
+/// moment it becomes ready; completions pop from a time-keyed heap
+/// (the shared [`super::event::EventHeap`]).
 fn simulate_static(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> DesResult {
-    use std::collections::BinaryHeap;
+    use super::event::EventHeap;
     let n = tree.len();
     let ratio = static_ratios(tree, alpha, p, policy);
     let mut unfinished: Vec<usize> = tree.nodes.iter().map(|t| t.children.len()).collect();
     let mut completion = vec![0f64; n];
     let mut start_max = vec![0f64; n]; // latest child completion per node
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(n);
+    let mut heap: EventHeap<u32> = EventHeap::with_capacity(n);
     let dur = |v: u32| -> f64 {
         let len = tree.nodes[v as usize].len;
         if len <= 0.0 {
@@ -146,12 +131,12 @@ fn simulate_static(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> DesRe
     };
     for v in 0..n as u32 {
         if unfinished[v as usize] == 0 {
-            heap.push(Ev(dur(v), v));
+            heap.push(dur(v), v);
         }
     }
     let mut events = 0usize;
     let mut makespan = 0.0f64;
-    while let Some(Ev(t, v)) = heap.pop() {
+    while let Some((t, v)) = heap.pop() {
         events += 1;
         completion[v as usize] = t;
         makespan = makespan.max(t);
@@ -160,7 +145,7 @@ fn simulate_static(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> DesRe
             unfinished[pi] -= 1;
             start_max[pi] = start_max[pi].max(t);
             if unfinished[pi] == 0 {
-                heap.push(Ev(start_max[pi] + dur(parent), parent));
+                heap.push(start_max[pi] + dur(parent), parent);
             }
         }
     }
@@ -171,13 +156,13 @@ fn simulate_static(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> DesRe
 /// (used by the integer-share ablation: PM ratios rounded to whole
 /// cores). The caller is responsible for feasibility.
 pub fn simulate_with_ratios(tree: &TaskTree, alpha: f64, p: f64, ratios: &[f64]) -> DesResult {
-    use std::collections::BinaryHeap;
+    use super::event::EventHeap;
     let n = tree.len();
     assert_eq!(ratios.len(), n);
     let mut unfinished: Vec<usize> = tree.nodes.iter().map(|t| t.children.len()).collect();
     let mut completion = vec![0f64; n];
     let mut start_max = vec![0f64; n];
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(n);
+    let mut heap: EventHeap<u32> = EventHeap::with_capacity(n);
     let dur = |v: u32| -> f64 {
         let len = tree.nodes[v as usize].len;
         if len <= 0.0 {
@@ -188,12 +173,12 @@ pub fn simulate_with_ratios(tree: &TaskTree, alpha: f64, p: f64, ratios: &[f64])
     };
     for v in 0..n as u32 {
         if unfinished[v as usize] == 0 {
-            heap.push(Ev(dur(v), v));
+            heap.push(dur(v), v);
         }
     }
     let mut events = 0usize;
     let mut makespan = 0.0f64;
-    while let Some(Ev(t, v)) = heap.pop() {
+    while let Some((t, v)) = heap.pop() {
         events += 1;
         completion[v as usize] = t;
         makespan = makespan.max(t);
@@ -202,7 +187,7 @@ pub fn simulate_with_ratios(tree: &TaskTree, alpha: f64, p: f64, ratios: &[f64])
             unfinished[pi] -= 1;
             start_max[pi] = start_max[pi].max(t);
             if unfinished[pi] == 0 {
-                heap.push(Ev(start_max[pi] + dur(parent), parent));
+                heap.push(start_max[pi] + dur(parent), parent);
             }
         }
     }
@@ -270,7 +255,7 @@ pub fn simulate_distributed_with_workspace(
     policy: Policy,
     ws: &mut crate::sched::SchedWorkspace,
 ) -> DistDesResult {
-    use std::collections::BinaryHeap;
+    use super::event::EventHeap;
     let n = tree.len();
     assert_eq!(node_of.len(), n, "node_of must cover every task");
     let n_nodes = platform.num_nodes();
@@ -343,16 +328,16 @@ pub fn simulate_distributed_with_workspace(
             len / speedup(share[v as usize], alpha)
         }
     };
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(n);
+    let mut heap: EventHeap<u32> = EventHeap::with_capacity(n);
     for v in 0..n as u32 {
         if unfinished[v as usize] == 0 {
-            heap.push(Ev(dur(v), v));
+            heap.push(dur(v), v);
         }
     }
     let mut events = 0usize;
     let mut makespan = 0.0f64;
     let mut cross_stall = 0.0f64;
-    while let Some(Ev(t, v)) = heap.pop() {
+    while let Some((t, v)) = heap.pop() {
         events += 1;
         let vi = v as usize;
         completion[vi] = t;
@@ -367,7 +352,7 @@ pub fn simulate_distributed_with_workspace(
             }
             if unfinished[pi] == 0 {
                 cross_stall += (ready_all[pi] - ready_local[pi]).max(0.0);
-                heap.push(Ev(ready_all[pi] + dur(parent), parent));
+                heap.push(ready_all[pi] + dur(parent), parent);
             }
         }
     }
@@ -420,24 +405,24 @@ fn simulate_divisible(tree: &TaskTree, alpha: f64, p: f64) -> DesResult {
 /// tasks always progress in lockstep, so completion order equals
 /// threshold order in accumulated-speed space.
 fn simulate_equal_split(tree: &TaskTree, alpha: f64, p: f64) -> DesResult {
-    use std::collections::BinaryHeap;
+    use super::event::EventHeap;
     let n = tree.len();
     let mut unfinished: Vec<usize> = tree.nodes.iter().map(|t| t.children.len()).collect();
     let mut completion = vec![0f64; n];
     let mut start_max = vec![0f64; n]; // latest child completion per node
     // heap keyed by absolute threshold S_done(start) + len
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::with_capacity(n);
+    let mut heap: EventHeap<u32> = EventHeap::with_capacity(n);
     let mut s_done = 0.0f64; // accumulated per-task progress
     let mut t = 0.0f64;
     let mut active = 0usize;
     for v in 0..n as u32 {
         if unfinished[v as usize] == 0 {
-            heap.push(Ev(tree.nodes[v as usize].len, v));
+            heap.push(tree.nodes[v as usize].len, v);
             active += 1;
         }
     }
     let mut events = 0usize;
-    while let Some(Ev(threshold, v)) = heap.pop() {
+    while let Some((threshold, v)) = heap.pop() {
         events += 1;
         // advance wall clock to this completion: remaining per-task
         // progress needed...
@@ -454,7 +439,7 @@ fn simulate_equal_split(tree: &TaskTree, alpha: f64, p: f64) -> DesResult {
             unfinished[pi] -= 1;
             start_max[pi] = start_max[pi].max(t);
             if unfinished[pi] == 0 {
-                heap.push(Ev(s_done + tree.nodes[pi].len, parent));
+                heap.push(s_done + tree.nodes[pi].len, parent);
                 active += 1;
             }
         }

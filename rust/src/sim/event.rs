@@ -1,0 +1,160 @@
+//! Shared timestamped event heap for the simulators.
+//!
+//! Every DES engine in this crate ([`super::des`], [`super::faults`],
+//! [`super::online`], [`crate::net`]) needs the same structure: a
+//! min-heap of `(f64 time, payload)` entries popped earliest-first.
+//! Before this module each engine carried its own private newtype with
+//! a hand-reversed `Ord`; [`EventHeap`] is the one implementation they
+//! all share (the first concrete step of the ROADMAP's
+//! single-event-core refactor).
+//!
+//! Ordering: earliest `time` first via [`f64::total_cmp`] (no NaN
+//! panics), ties broken by insertion sequence (FIFO). The engines
+//! never push NaN times and their results are tie-order independent
+//! (same-time completions only feed sums and maxes), so the FIFO
+//! tie-break preserves the bitwise guarantees pinned by the engine
+//! tests while making pop order fully deterministic by construction.
+
+use std::collections::BinaryHeap;
+
+/// One scheduled event: a time key plus a caller payload.
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    id: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq && self.time.total_cmp(&other.time).is_eq()
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first,
+        // FIFO among equal times
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A deterministic min-heap of timestamped events.
+#[derive(Debug, Clone, Default)]
+pub struct EventHeap<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T: Copy> EventHeap<T> {
+    pub fn new() -> EventHeap<T> {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn with_capacity(n: usize) -> EventHeap<T> {
+        EventHeap { heap: BinaryHeap::with_capacity(n), seq: 0 }
+    }
+
+    /// Schedule `id` at `time`.
+    pub fn push(&mut self, time: f64, id: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, id });
+    }
+
+    /// Remove and return the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time, e.id))
+    }
+
+    /// The earliest event without removing it.
+    pub fn peek(&self) -> Option<(f64, T)> {
+        self.heap.peek().map(|e| (e.time, e.id))
+    }
+
+    /// Time of the earliest event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Drop all pending events (the sequence counter keeps running, so
+    /// FIFO ties stay globally consistent across rebuilds).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(3.0, 30u32);
+        h.push(1.0, 10);
+        h.push(2.0, 20);
+        assert_eq!(h.peek_time(), Some(1.0));
+        assert_eq!(h.pop(), Some((1.0, 10)));
+        assert_eq!(h.pop(), Some((2.0, 20)));
+        assert_eq!(h.pop(), Some((3.0, 30)));
+        assert_eq!(h.pop(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        let mut h = EventHeap::new();
+        for id in 0..5u32 {
+            h.push(7.5, id);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| h.pop().map(|(_, id)| id)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn handles_infinities_and_negative_zero() {
+        let mut h = EventHeap::new();
+        h.push(f64::INFINITY, 1u32);
+        h.push(-0.0, 2);
+        h.push(0.0, 3);
+        // total_cmp: -0.0 sorts before +0.0
+        assert_eq!(h.pop(), Some((-0.0, 2)));
+        assert_eq!(h.pop(), Some((0.0, 3)));
+        assert_eq!(h.pop(), Some((f64::INFINITY, 1)));
+    }
+
+    #[test]
+    fn clone_preserves_contents_and_ties() {
+        let mut h = EventHeap::new();
+        h.push(1.0, 1u32);
+        h.push(1.0, 2);
+        let mut c = h.clone();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.pop(), Some((1.0, 1)));
+        assert_eq!(c.pop(), Some((1.0, 2)));
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn clear_empties_the_heap() {
+        let mut h = EventHeap::with_capacity(4);
+        h.push(1.0, 0u32);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.peek_time(), None);
+    }
+}

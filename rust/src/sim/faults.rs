@@ -33,8 +33,6 @@
 //! re-mapped recovery is never worse than restart by construction
 //! (the PR 4 candidate-selection pattern).
 
-use std::collections::BinaryHeap;
-
 use anyhow::{bail, Result};
 
 use crate::dist::mapping::{map_tree, remap_lost, MappingStrategy};
@@ -42,6 +40,7 @@ use crate::model::{FaultKind, FaultTrace, Platform, TaskTree};
 use crate::sched::SchedWorkspace;
 
 use super::des::{simulate_distributed_with_workspace, speedup, Policy};
+use super::event::EventHeap;
 
 /// How a crash is recovered.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,24 +99,6 @@ pub fn replay_faults(
     let platform = Platform::Shared { p };
     let node_of = vec![0usize; tree.len()];
     replay_faults_distributed(tree, alpha, &platform, &node_of, policy, trace, RecoveryPolicy::Best)
-}
-
-/// Min-heap entry ordered by an f64 key (the fault engine's copy of
-/// the DES event — same ordering so the fault-free path is
-/// bit-identical).
-#[derive(PartialEq)]
-struct FEv(f64, u32);
-impl Eq for FEv {}
-impl PartialOrd for FEv {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for FEv {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // reversed: BinaryHeap is a max-heap
-        other.0.partial_cmp(&self.0).unwrap()
-    }
 }
 
 /// Mutable replay state — cloneable so recovery candidates can be
@@ -236,18 +217,18 @@ fn run_segment(
             len / speedup(share[v as usize], alpha)
         }
     };
-    let mut heap: BinaryHeap<FEv> = BinaryHeap::with_capacity(n);
+    let mut heap: EventHeap<u32> = EventHeap::with_capacity(n);
     let mut run_since = vec![t_start; n];
     let mut in_heap = vec![false; n];
     for v in 0..n as u32 {
         let vi = v as usize;
         if !st.completed[vi] && st.unfinished[vi] == 0 {
-            heap.push(FEv(t_start + dur(v), v));
+            heap.push(t_start + dur(v), v);
             in_heap[vi] = true;
             st.started[vi] = true;
         }
     }
-    while let Some(&FEv(t, v)) = heap.peek() {
+    while let Some((t, v)) = heap.peek() {
         if let Some(u) = until {
             if t > u {
                 break;
@@ -268,7 +249,7 @@ fn run_segment(
                 st.started[pi] = true;
                 run_since[pi] = st.ready_all[pi];
                 in_heap[pi] = true;
-                heap.push(FEv(st.ready_all[pi] + dur(parent), parent));
+                heap.push(st.ready_all[pi] + dur(parent), parent);
             }
         }
     }
@@ -383,7 +364,7 @@ fn apply_crash(
             node_load[st.node_of[v]] += st.remaining[v].max(0.0).powf(inv);
         }
     }
-    let comps = remap_lost(tree, &needed, &st.remaining, alpha, &st.alive, &st.cores, &node_load);
+    let comps = remap_lost(tree, &needed, &st.remaining, alpha, &st.alive, &st.cores, &node_load)?;
     let mut remapped = st.clone();
     for &(root, k) in &comps {
         let mut stack = vec![root];
@@ -499,6 +480,11 @@ pub fn replay_faults_distributed(
                     counted: false,
                 });
             }
+            // link faults disturb the network, not the compute nodes;
+            // this replay prices every transfer at zero, so they are
+            // no-ops here (the priced engine in `crate::net` replays
+            // them) — skipping keeps compute-only traces bit-identical
+            FaultKind::LinkDegrade { .. } | FaultKind::LinkDown { .. } => {}
         }
     }
     timed.sort_by(|a, b| a.time.total_cmp(&b.time));
@@ -882,6 +868,32 @@ mod tests {
             kind: FaultKind::Leave { node: 0, cores: 8.0 },
         }]);
         assert!(replay_faults(&t, 0.9, 4.0, Policy::Pm, &trace).is_err());
+    }
+
+    #[test]
+    fn crashing_every_node_mid_run_is_a_typed_error() {
+        // validation rejects all-crash traces up front, but zero-core
+        // leaves can still strand a crash with no usable survivor; the
+        // engine-level guard must error, never panic (satellite to the
+        // remap_lost hardening)
+        let t = TaskTree::from_parents(&[0, 0, 0], &[1.0, 8.0, 8.0]).unwrap();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0, 0, 1];
+        let trace = FaultTrace::new(vec![
+            FaultEvent { time: 0.5, kind: FaultKind::Crash { node: 0 } },
+            FaultEvent { time: 1.0, kind: FaultKind::Crash { node: 1 } },
+        ]);
+        assert!(trace.validate(2).is_err(), "validation catches the full crash");
+        let err = replay_faults_distributed(
+            &t,
+            0.9,
+            &plat,
+            &node_of,
+            Policy::Pm,
+            &trace,
+            RecoveryPolicy::Best,
+        );
+        assert!(err.is_err(), "engine must reject the trace, not panic");
     }
 
     #[test]

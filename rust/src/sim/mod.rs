@@ -26,8 +26,13 @@
 //! ([`online`], DESIGN.md §14) that drives the multi-tenant
 //! [`crate::online::OnlineService`] over a job-arrival stream and
 //! reports throughput, sojourn quantiles and SLO attainment.
+//!
+//! All of these engines share the timestamped [`event::EventHeap`]
+//! (f64 time under `total_cmp`, FIFO on ties), as does the priced
+//! network replay in [`crate::net`].
 
 pub mod des;
+pub mod event;
 pub mod faults;
 pub mod kerneldag;
 pub mod memreplay;

@@ -11,35 +11,12 @@
 //! the headline guarantee (admitted p99 sojourn stays bounded at 2×
 //! capacity while a no-admission baseline diverges).
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::stats::{mean, quantile};
 use crate::online::{Admission, JobSpec, OnlineService, Outcome, ServiceConfig};
 
-/// A pending deferred-retry event (min-heap by time, then id).
-#[derive(Debug, PartialEq)]
-struct Retry {
-    at: f64,
-    id: usize,
-}
-
-impl Eq for Retry {}
-
-impl Ord for Retry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first
-        other.at.total_cmp(&self.at).then_with(|| other.id.cmp(&self.id))
-    }
-}
-
-impl PartialOrd for Retry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
+use super::event::EventHeap;
 
 /// Aggregate report of one online run.
 #[derive(Debug, Clone)]
@@ -94,7 +71,9 @@ pub fn simulate_online(jobs: &[JobSpec], cfg: ServiceConfig) -> Result<OnlineRep
         }
     }
     let mut svc = OnlineService::new(cfg)?;
-    let mut retries: BinaryHeap<Retry> = BinaryHeap::new();
+    // deferred re-admissions, keyed by retry time (FIFO among ties —
+    // jobs are pushed in submission order, so ties resolve by id)
+    let mut retries: EventHeap<usize> = EventHeap::new();
     let mut finish = vec![f64::NAN; jobs.len()];
     let mut t = 0.0f64;
     let mut next_job = 0usize;
@@ -107,7 +86,7 @@ pub fn simulate_online(jobs: &[JobSpec], cfg: ServiceConfig) -> Result<OnlineRep
     loop {
         let t_arrival =
             if next_job < jobs.len() { jobs[next_job].arrival } else { f64::INFINITY };
-        let t_retry = retries.peek().map_or(f64::INFINITY, |r| r.at);
+        let t_retry = retries.peek_time().unwrap_or(f64::INFINITY);
         let t_deadline = svc.next_deadline();
         let t_complete = svc.next_completion().map_or(f64::INFINITY, |(dt, _)| t + dt);
         let t_next = t_arrival.min(t_retry).min(t_deadline).min(t_complete);
@@ -144,16 +123,16 @@ pub fn simulate_online(jobs: &[JobSpec], cfg: ServiceConfig) -> Result<OnlineRep
             match svc.submit(t, job) {
                 Admission::Admitted => changed = true,
                 Admission::Shed => finish[job.id] = t,
-                Admission::Deferred { until } => retries.push(Retry { at: until, id: job.id }),
+                Admission::Deferred { until } => retries.push(until, job.id),
             }
         }
         // deferred retries due
-        while retries.peek().is_some_and(|r| r.at <= t) {
-            let r = retries.pop().unwrap();
-            match svc.readmit(t, r.id) {
+        while retries.peek_time().is_some_and(|at| at <= t) {
+            let (_, id) = retries.pop().unwrap();
+            match svc.readmit(t, id) {
                 Admission::Admitted => changed = true,
-                Admission::Shed => finish[r.id] = t,
-                Admission::Deferred { until } => retries.push(Retry { at: until, id: r.id }),
+                Admission::Shed => finish[id] = t,
+                Admission::Deferred { until } => retries.push(until, id),
             }
         }
         if changed {

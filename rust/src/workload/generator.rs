@@ -188,6 +188,36 @@ pub fn random_fault_trace(
     crate::model::FaultTrace::new(out)
 }
 
+/// Seedable random *link*-disturbance trace over `n_nodes ≥ 2`
+/// platform nodes (DESIGN.md §15): `events` events uniform in
+/// `(0, horizon)`, mixing bandwidth degradations and bounded link
+/// severances over random node pairs. Kept separate from
+/// [`random_fault_trace`] so the compute-fault streams (and the
+/// benches seeded on them) are unchanged by the network layer.
+pub fn random_link_fault_trace(
+    n_nodes: usize,
+    horizon: f64,
+    events: usize,
+    rng: &mut Rng,
+) -> crate::model::FaultTrace {
+    use crate::model::{FaultEvent, FaultKind};
+    assert!(n_nodes >= 2, "link faults need at least two nodes, got {n_nodes}");
+    let mut out = Vec::with_capacity(events);
+    for _ in 0..events {
+        let time = rng.range_f64(0.0, horizon).max(horizon * 1e-6);
+        let a = rng.below(n_nodes);
+        let b = (a + 1 + rng.below(n_nodes - 1)) % n_nodes;
+        let duration = rng.range_f64(0.05, 0.3) * horizon;
+        let kind = if rng.bool(0.5) {
+            FaultKind::LinkDegrade { a, b, factor: rng.range_f64(0.05, 0.5), duration }
+        } else {
+            FaultKind::LinkDown { a, b, duration }
+        };
+        out.push(FaultEvent { time, kind });
+    }
+    crate::model::FaultTrace::new(out)
+}
+
 /// Stochastic job-arrival processes for the online service
 /// (DESIGN.md §14). Every draw comes from the caller's [`Rng`] alone,
 /// so arrival streams are reproducible artifacts; all three processes
@@ -355,6 +385,22 @@ mod tests {
         }
         let mut rng = Rng::new(0xFB);
         assert!(random_fault_trace(1, 50.0, 40, &mut rng).crashes() == 0);
+    }
+
+    #[test]
+    fn random_link_fault_traces_are_valid_and_deterministic() {
+        for n_nodes in [2usize, 3, 5] {
+            let mut rng = Rng::new(0xFC);
+            let t = random_link_fault_trace(n_nodes, 100.0, 10, &mut rng);
+            t.validate(n_nodes).unwrap();
+            assert_eq!(t.len(), 10);
+            assert_eq!(t.link_events(), 10, "every event targets a link");
+            for w in t.events.windows(2) {
+                assert!(w[0].time <= w[1].time, "trace must be time-sorted");
+            }
+            let mut rng2 = Rng::new(0xFC);
+            assert_eq!(t, random_link_fault_trace(n_nodes, 100.0, 10, &mut rng2));
+        }
     }
 
     #[test]

@@ -28,8 +28,8 @@ pub mod generator;
 pub mod trace;
 
 pub use generator::{
-    arrival_times, dataset, random_fault_trace, synthetic_mem_weights, ArrivalProcess,
-    DatasetSpec, TreeClass,
+    arrival_times, dataset, random_fault_trace, random_link_fault_trace, synthetic_mem_weights,
+    ArrivalProcess, DatasetSpec, TreeClass,
 };
 pub use trace::{
     read_jobs, read_tree, read_tree_faults, read_tree_mem, write_jobs, write_tree,

@@ -137,6 +137,12 @@ pub fn write_tree_faults(
             FaultKind::Slowdown { node, factor, duration } => {
                 writeln!(w, "{:e} slow {node} {factor:e} {duration:e}", e.time)?
             }
+            FaultKind::LinkDegrade { a, b, factor, duration } => {
+                writeln!(w, "{:e} linkslow {a} {b} {factor:e} {duration:e}", e.time)?
+            }
+            FaultKind::LinkDown { a, b, duration } => {
+                writeln!(w, "{:e} linkdown {a} {b} {duration:e}", e.time)?
+            }
         }
     }
     Ok(())
@@ -300,6 +306,14 @@ pub fn parse_tree_full<R: BufRead>(
                         .parse::<f64>()
                         .with_context(|| format!("bad {what}, disturbance {i}"))
                 };
+                // link events reuse the `node` column as endpoint `a`;
+                // the peer endpoint is the first argument
+                let iarg = |j: usize, what: &str| -> Result<usize> {
+                    args.get(j)
+                        .with_context(|| format!("disturbance {i}: missing {what}"))?
+                        .parse::<usize>()
+                        .with_context(|| format!("bad {what}, disturbance {i}"))
+                };
                 let (kind, used) = match *kind {
                     "crash" => (FaultKind::Crash { node }, 0),
                     "leave" => (FaultKind::Leave { node, cores: farg(0, "cores")? }, 1),
@@ -308,6 +322,23 @@ pub fn parse_tree_full<R: BufRead>(
                         FaultKind::Slowdown {
                             node,
                             factor: farg(0, "factor")?,
+                            duration: farg(1, "duration")?,
+                        },
+                        2,
+                    ),
+                    "linkslow" => (
+                        FaultKind::LinkDegrade {
+                            a: node,
+                            b: iarg(0, "peer")?,
+                            factor: farg(1, "factor")?,
+                            duration: farg(2, "duration")?,
+                        },
+                        3,
+                    ),
+                    "linkdown" => (
+                        FaultKind::LinkDown {
+                            a: node,
+                            b: iarg(0, "peer")?,
                             duration: farg(1, "duration")?,
                         },
                         2,
@@ -566,6 +597,11 @@ mod tests {
                 time: 3.5,
                 kind: FaultKind::Slowdown { node: 2, factor: 0.5, duration: 0.75 },
             },
+            FaultEvent {
+                time: 4.25,
+                kind: FaultKind::LinkDegrade { a: 0, b: 1, factor: 0.25, duration: 1.5 },
+            },
+            FaultEvent { time: 5.5, kind: FaultKind::LinkDown { a: 1, b: 0, duration: 0.5 } },
         ]);
         let p = tmp("v3_plain.tree");
         write_tree_faults(&t, None, &trace, &p).unwrap();
@@ -597,6 +633,11 @@ mod tests {
             "1\n0 1.0\n1\n5e-1 crash 0 7\n",        // trailing columns
             "1\n0 1.0\n1\n5e-1 crash 0\nextra\n",   // data after the events
             "1\n0 1.0\n1\n5e-1 crash zero\n",       // bad node
+            "1\n0 1.0\n1\n5e-1 linkslow 0 1 5e-1\n", // missing link duration
+            "1\n0 1.0\n1\n5e-1 linkslow 0 one 5e-1 1e0\n", // non-integer peer
+            "1\n0 1.0\n1\n5e-1 linkslow 0 1.5 5e-1 1e0\n", // float peer
+            "1\n0 1.0\n1\n5e-1 linkdown 0 1\n",     // missing duration
+            "1\n0 1.0\n1\n5e-1 linkdown 0 1 1e0 7\n", // trailing columns
         ] {
             assert!(parse_tree_full(Cursor::new(bad)).is_err(), "{bad:?}");
         }
@@ -736,7 +777,9 @@ mod tests {
             |rng: &mut Rng| {
                 let t = random_tree(TreeClass::Uniform, rng.range(1, 30), rng);
                 let w = synthetic_mem_weights(&t, rng);
-                let faults = crate::workload::generator::random_fault_trace(2, 10.0, 3, rng);
+                let mut ev = crate::workload::generator::random_fault_trace(2, 10.0, 3, rng).events;
+                ev.extend(crate::workload::generator::random_link_fault_trace(2, 10.0, 2, rng).events);
+                let faults = FaultTrace::new(ev);
                 let tag = rng.next_u64();
                 let paths = [
                     tmp(&format!("fuzz_v1_{tag}.tree")),
