@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== numeric execution ==");
     // Reference: parallel pure-Rust work crew.
     let (fact_rust, report_rust) =
-        execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers)?;
+        execute_parallel(&at, &ap, &pm.schedule, &RustBackend::default(), workers)?;
     println!("rust  | {}", report_rust.render());
     let r_rust = multifrontal::residual(&at, &ap, &fact_rust);
     println!("rust  | residual = {r_rust:.3e}");

@@ -10,18 +10,29 @@
 //! per-width team occupancy), the numeric-pipeline counterpart of
 //! `BENCH_sched.json`.
 //!
+//! The E21 section (EXPERIMENTS.md §Kernels) additionally runs the
+//! `.mtx` corpus in `examples/matrices/` — scalar vs dispatched-SIMD
+//! kernel throughput at one worker plus the malleable 8-worker speedup,
+//! residual-gated in epsilon mode — and a block-size × amalgamation
+//! sweep on the 3D problem; JSON gains `corpus_<stem>` rows,
+//! `block_sweep`, and `kernel_isa`. On SIMD hardware the widest-front
+//! corpus cell hard-asserts `mflops_simd >= mflops_scalar`.
+//!
 //! Flags: `--malleable` (default on) / `--no-malleable` toggle the E15
 //! section; `MALLTREE_BENCH_GRID` scales the 2D sweep,
-//! `MALLTREE_BENCH_GRID3D` the malleable comparison.
+//! `MALLTREE_BENCH_GRID3D` the malleable comparison and block sweep.
 
 mod bench_util;
 
 use bench_util::{bench_output_path, env_usize, has_flag, header, timed};
 use malltree::exec::{execute_malleable, execute_parallel, execute_serial, ExecReport};
-use malltree::frontal::{multifrontal, Factorization, NaiveBackend, PjrtBackend, RustBackend};
+use malltree::frontal::{
+    dense, multifrontal, Factorization, FrontConfig, NaiveBackend, PjrtBackend, RustBackend,
+    SimdMode,
+};
 use malltree::metrics::Table;
 use malltree::sched::{PmSchedule, Profile, Schedule};
-use malltree::sparse::{gen, order, symbolic, AssemblyTree, CscMatrix};
+use malltree::sparse::{gen, mm, order, symbolic, AssemblyTree, CscMatrix};
 
 struct Row {
     key: String,
@@ -92,7 +103,7 @@ fn malleable_section(
     );
 
     // serial blocked reference: both executors must be bit-identical
-    let (reference, _) = execute_serial(at, ap, schedule, &RustBackend).unwrap();
+    let (reference, _) = execute_serial(at, ap, schedule, &RustBackend::default()).unwrap();
 
     let mut table = Table::new(&[
         "executor", "workers", "wall (s)", "Mflop/s", "efficiency", "avg team", "max team",
@@ -104,9 +115,9 @@ fn malleable_section(
         for malleable in [false, true] {
             let ((fact, report), _) = timed(|| {
                 if malleable {
-                    execute_malleable(at, ap, schedule, &RustBackend, workers).unwrap()
+                    execute_malleable(at, ap, schedule, &RustBackend::default(), workers).unwrap()
                 } else {
-                    execute_parallel(at, ap, schedule, &RustBackend, workers).unwrap()
+                    execute_parallel(at, ap, schedule, &RustBackend::default(), workers).unwrap()
                 }
             });
             let label = if malleable { "malleable" } else { "task-parallel" };
@@ -161,6 +172,168 @@ fn malleable_section(
     speedup
 }
 
+/// E21 corpus rows: each `.mtx` under `examples/matrices/` through the
+/// full pipeline (parse → RCM → analyze → PM schedule) with the scalar
+/// blocked backend and the dispatched-SIMD one, best-of-3 timing.
+/// Residuals are gated normwise (epsilon mode — SIMD reassociates the
+/// inner loops, so bit-identity to the scalar path is not claimed).
+fn corpus_section(json: &mut Vec<String>) {
+    let scalar =
+        RustBackend::with_config(FrontConfig { block: dense::BLOCK, simd: SimdMode::Off })
+            .expect("scalar config");
+    let simd = RustBackend::with_config(FrontConfig { block: dense::BLOCK, simd: SimdMode::Auto })
+        .expect("auto config");
+    println!("dispatched isa: {}", simd.isa().name());
+    json.push(format!("  \"kernel_isa\": \"{}\"", simd.isa().tag()));
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/matrices");
+    let mut paths: Vec<std::path::PathBuf> = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "mtx"))
+            .collect(),
+        Err(e) => {
+            println!("(corpus skipped: cannot read {}: {e})", dir.display());
+            return;
+        }
+    };
+    paths.sort();
+
+    let mut table = Table::new(&[
+        "matrix", "n", "widest", "Mflop/s scalar", "Mflop/s simd", "simd x", "malleable 8w x",
+        "residual",
+    ]);
+    // (widest front, scalar Mflop/s, simd Mflop/s, stem) of the
+    // widest-front cell — the hard-assert target
+    let mut widest_cell: Option<(usize, f64, f64, String)> = None;
+    for path in &paths {
+        let stem = path.file_stem().unwrap().to_string_lossy().to_string();
+        let a = mm::read_matrix_market(path).expect("corpus file parses");
+        let perm = order::reverse_cuthill_mckee(&a);
+        let at = symbolic::analyze(&a, &perm, 4).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        let pm = PmSchedule::for_tree(&at.tree, 0.9, &Profile::constant(8.0));
+        let widest =
+            at.symbolic.supernodes.iter().map(|s| s.front_order()).max().unwrap();
+        let flops = at.tree.total_work();
+
+        let run = |backend: &RustBackend, workers: usize, malleable: bool| -> (f64, f64) {
+            let mut best = f64::INFINITY;
+            let mut resid = 0.0;
+            for _ in 0..3 {
+                let (fact, report) = if malleable {
+                    execute_malleable(&at, &ap, &pm.schedule, backend, workers).unwrap()
+                } else {
+                    execute_parallel(&at, &ap, &pm.schedule, backend, workers).unwrap()
+                };
+                best = best.min(report.wall_seconds.max(1e-12));
+                resid = multifrontal::residual(&at, &ap, &fact);
+            }
+            (flops / best / 1e6, resid)
+        };
+        let (mf_scalar, r_scalar) = run(&scalar, 1, false);
+        let (mf_simd, r_simd) = run(&simd, 1, false);
+        let (mf_ml, r_ml) = run(&simd, 8, true);
+        for (r, what) in [(r_scalar, "scalar"), (r_simd, "simd"), (r_ml, "malleable")] {
+            assert!(r < 1e-8, "{stem} {what}: residual {r:.3e} over epsilon gate");
+        }
+        let simd_x = mf_simd / mf_scalar.max(1e-12);
+        let ml_x = mf_ml / mf_simd.max(1e-12);
+        table.row(&[
+            stem.clone(),
+            format!("{}", a.n),
+            format!("{widest}"),
+            format!("{mf_scalar:.1}"),
+            format!("{mf_simd:.1}"),
+            format!("{simd_x:.2}"),
+            format!("{ml_x:.2}"),
+            format!("{r_simd:.1e}"),
+        ]);
+        json.push(format!(
+            "  \"corpus_{stem}\": {{\"n\": {}, \"widest_front\": {widest}, \
+             \"mflops_scalar\": {mf_scalar:.2}, \"mflops_simd\": {mf_simd:.2}, \
+             \"simd_speedup\": {simd_x:.4}, \"malleable_speedup_8w\": {ml_x:.4}, \
+             \"residual\": {r_simd:.3e}}}",
+            a.n
+        ));
+        let wider = match &widest_cell {
+            Some(c) => widest > c.0,
+            None => true,
+        };
+        if wider {
+            widest_cell = Some((widest, mf_scalar, mf_simd, stem));
+        }
+    }
+    print!("{}", table.render());
+
+    if let Some((widest, mf_scalar, mf_simd, stem)) = widest_cell {
+        if simd.isa().is_simd() {
+            // the tentpole's hard gate: on SIMD hardware the dispatched
+            // microkernels must beat the scalar blocked path where the
+            // fronts are widest
+            assert!(
+                mf_simd >= mf_scalar,
+                "simd kernels slower than scalar on {stem} (widest front {widest}): \
+                 {mf_simd:.1} < {mf_scalar:.1} Mflop/s"
+            );
+            println!("simd >= scalar on widest-front cell {stem}: ok");
+        } else {
+            println!("(simd-vs-scalar assert skipped: dispatched isa is scalar)");
+        }
+    }
+}
+
+/// E21 block-size × amalgamation sweep on the 3D problem: single-worker
+/// throughput per `(block, amalg)` cell under the dispatched ISA.
+fn block_sweep_section(k3: usize, json: &mut Vec<String>) {
+    println!();
+    header("e2e_factorize sweep", "block size x amalgamation on grid3d");
+    let a = gen::grid_laplacian_3d(k3);
+    let perm = order::nested_dissection_3d(k3);
+    let mut table = Table::new(&["block", "amalg", "wall (s)", "Mflop/s"]);
+    let mut cells: Vec<String> = Vec::new();
+    let mut best: Option<(f64, usize, usize)> = None;
+    for amalg in [4usize, 16] {
+        let at = symbolic::analyze(&a, &perm, amalg).unwrap();
+        let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+        let pm = PmSchedule::for_tree(&at.tree, 0.9, &Profile::constant(8.0));
+        let flops = at.tree.total_work();
+        for block in [32usize, 64, 128] {
+            let backend = RustBackend::with_config(FrontConfig { block, simd: SimdMode::Auto })
+                .expect("sweep config");
+            let mut wall = f64::INFINITY;
+            for _ in 0..2 {
+                let (_, report) =
+                    execute_parallel(&at, &ap, &pm.schedule, &backend, 1).unwrap();
+                wall = wall.min(report.wall_seconds.max(1e-12));
+            }
+            let mflops = flops / wall / 1e6;
+            table.row(&[
+                format!("{block}"),
+                format!("{amalg}"),
+                format!("{wall:.3}"),
+                format!("{mflops:.1}"),
+            ]);
+            cells.push(format!("\"b{block}_a{amalg}\": {mflops:.2}"));
+            let better = match best {
+                Some((m, _, _)) => mflops > m,
+                None => true,
+            };
+            if better {
+                best = Some((mflops, block, amalg));
+            }
+        }
+    }
+    print!("{}", table.render());
+    let (bm, bb, ba) = best.expect("sweep ran at least one cell");
+    println!("best cell: block {bb}, amalg {ba} ({bm:.1} Mflop/s)");
+    json.push(format!(
+        "  \"block_sweep\": {{{}, \"best_block\": {bb}, \"best_amalg\": {ba}, \
+         \"best_mflops\": {bm:.2}}}",
+        cells.join(", ")
+    ));
+}
+
 fn main() {
     header("e2e_factorize", "grid Laplacian multifrontal factorization");
     let k = env_usize("GRID", 40);
@@ -190,7 +363,7 @@ fn main() {
     let mut base_wall = None;
     for workers in [1usize, 2, 4, 8] {
         let ((fact, report), _) =
-            timed(|| execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers).unwrap());
+            timed(|| execute_parallel(&at, &ap, &pm.schedule, &RustBackend::default(), workers).unwrap());
         let r = multifrontal::residual(&at, &ap, &fact);
         assert!(r < 1e-10, "workers={workers}: residual {r}");
         let base = *base_wall.get_or_insert(report.wall_seconds);
@@ -291,6 +464,12 @@ fn main() {
     } else {
         println!("(malleable comparison skipped: --no-malleable)");
     }
+
+    // E21: SIMD kernel corpus + block-size sweep (EXPERIMENTS.md §Kernels)
+    println!();
+    header("e2e_factorize corpus", "SIMD microkernels on the .mtx corpus");
+    corpus_section(&mut extra_json);
+    block_sweep_section(k3, &mut extra_json);
 
     // Machine-readable perf trajectory (BENCH_e2e.json at repo root).
     let mut json = String::from("{\n");

@@ -164,7 +164,7 @@ fn main() {
     let pm = PmSchedule::for_tree(&at.tree, 0.9, &Profile::constant(8.0));
     let workers = 4;
     let (clean, clean_secs) = timed(|| {
-        execute_malleable(&at, &ap, &pm.schedule, &RustBackend, workers).expect("clean run")
+        execute_malleable(&at, &ap, &pm.schedule, &RustBackend::default(), workers).expect("clean run")
     });
     let mut plan = FaultPlan::new();
     plan.backoff_ms = 0;
@@ -172,7 +172,7 @@ fn main() {
     plan.parse_elastic("-2@4,+2@16").expect("elastic spec");
     let expected_retries: usize = plan.injected_failures(at.tree.len()).iter().sum();
     let (healed, healed_secs) = timed(|| {
-        execute_malleable_faulty(&at, &ap, &pm.schedule, &RustBackend, workers, &plan)
+        execute_malleable_faulty(&at, &ap, &pm.schedule, &RustBackend::default(), workers, &plan)
             .expect("self-healing run")
     });
     let (fact, report) = healed;

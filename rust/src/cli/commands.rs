@@ -35,12 +35,13 @@ fn load_problem(args: &Args) -> Result<(String, CscMatrix, Vec<usize>)> {
             order::nested_dissection_3d(k),
         ));
     }
-    if let Some(path) = args.get("mtx") {
+    // --matrix is an alias for --mtx (the corpus bench and docs use it)
+    if let Some(path) = args.get("mtx").or_else(|| args.get("matrix")) {
         let a = crate::sparse::mm::read_matrix_market(std::path::Path::new(path))?;
         let perm = order::reverse_cuthill_mckee(&a);
         return Ok((path.to_string(), a, perm));
     }
-    bail!("select a problem: --grid2d K | --grid3d K | --mtx FILE");
+    bail!("select a problem: --grid2d K | --grid3d K | --mtx FILE (--matrix works too)");
 }
 
 fn load_tree(args: &Args) -> Result<(String, TaskTree)> {
@@ -784,7 +785,7 @@ pub fn factorize(args: &mut Args) -> Result<()> {
         execute_malleable, execute_malleable_capped, execute_malleable_faulty, execute_parallel,
         execute_serial, FaultPlan,
     };
-    use crate::frontal::{multifrontal, NaiveBackend, PjrtBackend, RustBackend};
+    use crate::frontal::{multifrontal, FrontConfig, NaiveBackend, PjrtBackend, RustBackend, SimdMode};
 
     let (name, a, perm) = load_problem(args)?;
     let amalg = args.get_usize("amalgamate", 4)?;
@@ -821,6 +822,11 @@ pub fn factorize(args: &mut Args) -> Result<()> {
         .get("backend")
         .unwrap_or(if args.has_flag("pjrt") { "pjrt" } else { "blocked" })
         .to_string();
+    // --block N / --simd auto|off|force: kernel tile geometry and ISA
+    // policy for the blocked backend, validated once at construction
+    let block = args.get_usize("block", crate::frontal::dense::BLOCK)?;
+    let simd = SimdMode::parse(args.get("simd").unwrap_or("auto")).context("--simd")?;
+    let rust_backend = RustBackend::with_config(FrontConfig { block, simd })?;
     let at: AssemblyTree = symbolic::analyze(&a, &perm, amalg)?;
     let ap = a.permute_sym(&at.symbolic.perm)?;
     let pm = PmSchedule::for_tree(&at.tree, alpha, &Profile::constant(p));
@@ -867,19 +873,27 @@ pub fn factorize(args: &mut Args) -> Result<()> {
         "naive" => execute_parallel(&at, &ap, &pm.schedule, &NaiveBackend, workers)?,
         "blocked" | "rust" if fault_plan.is_some() => {
             let plan = fault_plan.as_ref().expect("guarded by is_some");
-            execute_malleable_faulty(&at, &ap, &pm.schedule, &RustBackend, workers, plan)?
+            execute_malleable_faulty(&at, &ap, &pm.schedule, &rust_backend, workers, plan)?
         }
         "blocked" | "rust" if malleable && mem_cap > 0 => {
-            execute_malleable_capped(&at, &ap, &pm.schedule, &RustBackend, workers, mem_cap)?
+            execute_malleable_capped(&at, &ap, &pm.schedule, &rust_backend, workers, mem_cap)?
         }
         "blocked" | "rust" if malleable => {
-            execute_malleable(&at, &ap, &pm.schedule, &RustBackend, workers)?
+            execute_malleable(&at, &ap, &pm.schedule, &rust_backend, workers)?
         }
         "blocked" | "rust" => {
-            execute_parallel(&at, &ap, &pm.schedule, &RustBackend, workers)?
+            execute_parallel(&at, &ap, &pm.schedule, &rust_backend, workers)?
         }
         other => bail!("unknown --backend {other} (blocked|naive|pjrt)"),
     };
+    if matches!(backend_name.as_str(), "blocked" | "rust") {
+        println!(
+            "kernels: block {}, simd {} → dispatched isa {}",
+            rust_backend.cfg().block,
+            simd.name(),
+            rust_backend.isa().name()
+        );
+    }
     println!("{}", report.render());
     if report.malleable {
         for row in report.occupancy() {
@@ -1159,6 +1173,28 @@ mod tests {
     fn factorize_rejects_mem_cap_without_malleable() {
         let mut a = args("--grid2d 6 --mem-cap 1000");
         assert!(factorize(&mut a).is_err());
+    }
+
+    #[test]
+    fn factorize_rejects_bad_kernel_flags() {
+        for bad in [
+            "--grid2d 6 --block 0",
+            "--grid2d 6 --block 4",
+            "--grid2d 6 --block 2048",
+            "--grid2d 6 --block banana",
+            "--grid2d 6 --simd banana",
+        ] {
+            let mut a = args(bad);
+            assert!(factorize(&mut a).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn factorize_runs_with_explicit_kernel_config() {
+        // simd off keeps this deterministic on any host; block 32 is a
+        // non-default tile edge so the cfg actually flows through
+        let mut a = args("--grid2d 8 --block 32 --simd off --workers 2 --malleable");
+        factorize(&mut a).unwrap();
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //!                    [--link-faults linkslow:A:B:X:D@F,..]
 //!                    [--timeout-factor T] [--recovery best|wait]
 //! malltree factorize --grid2d 24 [--workers 4] [--malleable]
+//!                    [--matrix FILE.mtx]                 (alias of --mtx)
+//!                    [--block N] [--simd auto|off|force] kernel tile size + ISA dispatch
 //!                    [--mem-cap WORDS]
 //!                    [--fault-plan task:ID:F|every:K:F]
 //!                    [--elastic ±N@C,...] [--retries N]  self-healing malleable crew
@@ -89,6 +91,9 @@ fn usage() -> String {
      \x20   (F,D are fractions of the fault-free makespan) --nodes N\n\
      \x20   --node-cores P --fault-trees K (replay vs remap/restart baselines),\n\
      \x20 --backend blocked|naive|pjrt (--pjrt is an alias),\n\
+     \x20 factorize: --matrix FILE.mtx (alias of --mtx), --block N (tile edge,\n\
+     \x20   8..=1024), --simd auto|off|force (SIMD microkernel dispatch; the\n\
+     \x20   run prints the ISA actually dispatched),\n\
      \x20 distribute: --nodes N -p CORES | --speeds P0,P1,.. (heterogeneous),\n\
      \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp,\n\
      \x20 --net LAT:BW (price cross-node transfers; BW may be inf),\n\

@@ -608,13 +608,22 @@ fn run_crew<B: FrontBackend + Sync>(
                         } else {
                             // team path: outputs ride in the job so
                             // helpers can reach them through the tile
-                            // cursor
+                            // cursor; tile geometry and SIMD dispatch
+                            // follow the backend's resolved KernelCfg
+                            // so serial == team holds per configuration
+                            let kcfg = backend.kernel_cfg();
                             let panel_buf = vec![0f64; nf * width];
                             let schur_buf =
                                 if m > 0 { arena.alloc_block(m * m) } else { Vec::new() };
-                            let job =
-                                Arc::new(FrontTeamJob::new(nf, width, panel_buf, schur_buf));
-                            let cap = FrontTeamJob::max_useful_team(nf, width);
+                            let job = Arc::new(FrontTeamJob::with_cfg(
+                                kcfg,
+                                nf,
+                                width,
+                                panel_buf,
+                                schur_buf,
+                                arena.take_scratch(),
+                            ));
+                            let cap = FrontTeamJob::max_useful_team_cfg(kcfg.block, nf, width);
                             let seats = team.min(cap).saturating_sub(1);
                             if seats > 0 && team_backend {
                                 let mut st = lock_clean(queue);
@@ -633,6 +642,7 @@ fn run_crew<B: FrontBackend + Sync>(
                             // returned (leader guard), so the buffers are
                             // exclusively ours again
                             let (panel, schur) = job.take_outputs();
+                            arena.put_scratch(job.take_pack());
                             members = 1 + job.joined();
                             if outcome.is_ok() {
                                 // publish before the counter decrement
@@ -866,8 +876,8 @@ mod tests {
     #[test]
     fn serial_matches_reference_factorization() {
         let (at, ap, schedule) = setup(8);
-        let (f, report) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
-        let reference = factorize(&at, &ap, &RustBackend).unwrap();
+        let (f, report) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
+        let reference = factorize(&at, &ap, &RustBackend::default()).unwrap();
         for (a, b) in f.panels.iter().zip(&reference.panels) {
             assert_eq!(a, b);
         }
@@ -882,7 +892,7 @@ mod tests {
         let (at, ap, schedule) = setup(10);
         for workers in [1, 2, 4] {
             let (f, report) =
-                execute_parallel(&at, &ap, &schedule, &RustBackend, workers).unwrap();
+                execute_parallel(&at, &ap, &schedule, &RustBackend::default(), workers).unwrap();
             let r = residual(&at, &ap, &f);
             assert!(r < 1e-12, "workers={workers}: residual {r}");
             assert_eq!(report.workers, workers);
@@ -896,8 +906,8 @@ mod tests {
         // its subtree (children are extend-added in child-list order on
         // both paths), so panels must agree regardless of interleaving
         let (at, ap, schedule) = setup(8);
-        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
-        let (fp, _) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
+        let (fp, _) = execute_parallel(&at, &ap, &schedule, &RustBackend::default(), 4).unwrap();
         for (a, b) in fs.panels.iter().zip(&fp.panels) {
             assert_eq!(a.len(), b.len());
             for (x, y) in a.iter().zip(b) {
@@ -925,9 +935,9 @@ mod tests {
                     DEFAULT_ALPHA,
                     &Profile::constant(workers as f64),
                 );
-                let (fs, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend).unwrap();
+                let (fs, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend::default()).unwrap();
                 let (fm, report) =
-                    execute_malleable(&at, &ap, &pm.schedule, &RustBackend, workers).unwrap();
+                    execute_malleable(&at, &ap, &pm.schedule, &RustBackend::default(), workers).unwrap();
                 for (s, (pa, pb)) in fs.panels.iter().zip(&fm.panels).enumerate() {
                     if pa.len() != pb.len() {
                         return Err(format!("snode {s}: panel length mismatch"));
@@ -967,8 +977,8 @@ mod tests {
             .unwrap();
         assert!(widest > crate::frontal::dense::BLOCK, "widest front {widest} fits one tile");
         let pm = PmSchedule::for_tree(&at.tree, DEFAULT_ALPHA, &Profile::constant(8.0));
-        let (fs, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend).unwrap();
-        let (fm, report) = execute_malleable(&at, &ap, &pm.schedule, &RustBackend, 8).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend::default()).unwrap();
+        let (fm, report) = execute_malleable(&at, &ap, &pm.schedule, &RustBackend::default(), 8).unwrap();
         assert_bitwise(&fs, &fm, "grid3d_10");
         assert!(report.malleable);
         assert_eq!(report.team_log.len(), at.tree.len());
@@ -978,8 +988,8 @@ mod tests {
     #[test]
     fn malleable_single_worker_degenerates_to_serial() {
         let (at, ap, schedule) = setup(9);
-        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
-        let (fm, report) = execute_malleable(&at, &ap, &schedule, &RustBackend, 1).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
+        let (fm, report) = execute_malleable(&at, &ap, &schedule, &RustBackend::default(), 1).unwrap();
         assert_bitwise(&fs, &fm, "1 worker");
         assert!(report.team_log.iter().all(|&(_, t)| t == 1));
     }
@@ -987,9 +997,9 @@ mod tests {
     #[test]
     fn capped_generous_matches_serial_with_no_gate_activity() {
         let (at, ap, schedule) = setup(10);
-        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
         let (fm, report) =
-            execute_malleable_capped(&at, &ap, &schedule, &RustBackend, 4, usize::MAX / 2)
+            execute_malleable_capped(&at, &ap, &schedule, &RustBackend::default(), 4, usize::MAX / 2)
                 .unwrap();
         assert_bitwise(&fs, &fm, "generous cap");
         assert_eq!(report.mem_stalls, 0);
@@ -1003,11 +1013,11 @@ mod tests {
         // absurd: factors stay bit-identical; whenever no admission was
         // forced, the gauge-measured peak respects the cap
         let (at, ap, schedule) = setup(12);
-        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
         let serial_peak = symbolic_peak_f64s(&at);
         for cap in [4 * serial_peak, serial_peak + serial_peak / 4, 1usize] {
             let (fm, report) =
-                execute_malleable_capped(&at, &ap, &schedule, &RustBackend, 4, cap).unwrap();
+                execute_malleable_capped(&at, &ap, &schedule, &RustBackend::default(), 4, cap).unwrap();
             assert_bitwise(&fs, &fm, "capped");
             if report.mem_forced == 0 {
                 assert!(
@@ -1022,9 +1032,9 @@ mod tests {
     #[test]
     fn absurd_cap_degrades_to_serial_not_deadlock() {
         let (at, ap, schedule) = setup(8);
-        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
         let (fm, report) =
-            execute_malleable_capped(&at, &ap, &schedule, &RustBackend, 4, 1).unwrap();
+            execute_malleable_capped(&at, &ap, &schedule, &RustBackend::default(), 4, 1).unwrap();
         assert_bitwise(&fs, &fm, "absurd cap");
         // essentially every front is over the 1-word cap: the gate
         // forces them through one at a time instead of deadlocking
@@ -1034,7 +1044,7 @@ mod tests {
     #[test]
     fn parallel_report_tracks_memory_and_assembly() {
         let (at, ap, schedule) = setup(10);
-        let (_, report) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        let (_, report) = execute_parallel(&at, &ap, &schedule, &RustBackend::default(), 4).unwrap();
         let widest = at
             .symbolic
             .supernodes
@@ -1138,7 +1148,7 @@ mod tests {
             assert!(!std::mem::replace(&mut seen[v as usize], true));
         }
         assert!(seen.iter().all(|&s| s), "order is not a permutation");
-        let (f, _) = execute_parallel(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        let (f, _) = execute_parallel(&at, &ap, &schedule, &RustBackend::default(), 4).unwrap();
         assert!(residual(&at, &ap, &f) < 1e-12);
     }
 
@@ -1150,9 +1160,9 @@ mod tests {
         let (at, ap, schedule) = setup(9);
         let plan = FaultPlan::new();
         assert!(plan.is_noop());
-        let (fm, rm) = execute_malleable(&at, &ap, &schedule, &RustBackend, 4).unwrap();
+        let (fm, rm) = execute_malleable(&at, &ap, &schedule, &RustBackend::default(), 4).unwrap();
         let (ff, rf) =
-            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan).unwrap();
+            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend::default(), 4, &plan).unwrap();
         assert_bitwise(&fm, &ff, "noop fault plan");
         assert_eq!(rf.retries, 0);
         assert_eq!(rf.lost_flops, 0.0);
@@ -1169,9 +1179,9 @@ mod tests {
         let plan = plan.inject_task(n - 1, 2);
         let injected: usize = plan.injected_failures(n).iter().sum();
         assert!(injected > 2, "fixture too small to exercise retries");
-        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
         let (ff, report) =
-            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan).unwrap();
+            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend::default(), 4, &plan).unwrap();
         assert_bitwise(&fs, &ff, "injected faults");
         // every injected failure burns one retry (counts stay under the
         // per-task budget), the redone flops are accounted, and every
@@ -1189,7 +1199,7 @@ mod tests {
         let mut plan = FaultPlan::new().inject_task(0, 10);
         plan.max_retries = 2;
         plan.backoff_ms = 0;
-        let err = execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan)
+        let err = execute_malleable_faulty(&at, &ap, &schedule, &RustBackend::default(), 4, &plan)
             .expect_err("a fault deeper than the retry budget must fail the run");
         let msg = format!("{err:#}");
         assert!(msg.contains("retries exhausted"), "unexpected error: {msg}");
@@ -1202,9 +1212,9 @@ mod tests {
         let mut plan = FaultPlan::new();
         // shrink the 4-crew to 1 almost immediately, regrow to 3 later
         plan.parse_elastic("-3@2,+2@12").unwrap();
-        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend).unwrap();
+        let (fs, _) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
         let (fm, report) =
-            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend, 4, &plan).unwrap();
+            execute_malleable_faulty(&at, &ap, &schedule, &RustBackend::default(), 4, &plan).unwrap();
         assert_bitwise(&fs, &fm, "elastic crew");
         assert_eq!(report.retries, 0);
         assert_eq!(report.team_log.len(), at.tree.len());

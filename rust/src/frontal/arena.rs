@@ -69,6 +69,13 @@ pub struct FrontArena {
     front_len: usize,
     glmap: Vec<u32>,
     free: Vec<Vec<f64>>,
+    /// Recycled kernel packing scratch (`dense::pack_len` words per
+    /// team job). Deliberately **not** live/peak-accounted: the
+    /// pebble-game peak model (and `symbolic_peak_f64s`, which the
+    /// measured peak must match exactly) covers fronts and contribution
+    /// blocks; this transient is bounded by one O(block·k) panel and
+    /// documented as overhead, not schedulable memory.
+    scratch: Option<Vec<f64>>,
     live: usize,
     peak: usize,
     shared: Option<Arc<MemGauge>>,
@@ -82,6 +89,7 @@ impl FrontArena {
             front_len: 0,
             glmap: vec![u32::MAX; n],
             free: Vec::new(),
+            scratch: None,
             live: 0,
             peak: 0,
             shared: None,
@@ -180,6 +188,18 @@ impl FrontArena {
         self.free.push(b);
     }
 
+    /// Take the recycled kernel packing scratch (any capacity — the
+    /// team job resizes it to its `dense::pack_len`). Unaccounted; see
+    /// the field doc for why it sits outside the pebble game.
+    pub fn take_scratch(&mut self) -> Vec<f64> {
+        self.scratch.take().unwrap_or_default()
+    }
+
+    /// Return the packing scratch for reuse by the next front.
+    pub fn put_scratch(&mut self, b: Vec<f64>) {
+        self.scratch = Some(b);
+    }
+
     /// Words currently live through this arena.
     pub fn live_f64s(&self) -> usize {
         self.live
@@ -261,6 +281,20 @@ mod tests {
         a.release_block(blk);
         assert_eq!(a.live_f64s(), 0);
         assert_eq!(a.peak_f64s(), 13);
+    }
+
+    #[test]
+    fn scratch_recycles_without_accounting() {
+        let mut a = FrontArena::new(8);
+        let mut s = a.take_scratch();
+        assert!(s.is_empty());
+        s.resize(128, 0.0);
+        a.put_scratch(s);
+        // packing scratch never moves the pebble-game accounting
+        assert_eq!(a.live_f64s(), 0);
+        assert_eq!(a.peak_f64s(), 0);
+        // capacity is retained across the cycle
+        assert!(a.take_scratch().capacity() >= 128);
     }
 
     #[test]

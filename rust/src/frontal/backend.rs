@@ -7,12 +7,14 @@
 //! fronts.
 
 use std::sync::Arc;
+use std::sync::OnceLock;
 
 use anyhow::Result;
 
 use crate::runtime::{FrontKernels, Runtime};
 
 use super::dense;
+use super::simd::{FrontConfig, Isa, KernelCfg};
 
 /// Output of a partial front factorization in f64 row-major buffers.
 #[derive(Debug, Clone)]
@@ -92,28 +94,73 @@ pub trait FrontBackend {
         })
     }
 
+    /// Tile geometry + SIMD dispatch this backend's kernels run under.
+    /// The executor plans every [`dense::FrontTeamJob`] with this value
+    /// (tile-cursor geometry follows the configured block), so the team
+    /// path and the backend's serial path share one configuration —
+    /// serial == team bit-identity is per configuration. Backends
+    /// without tunable kernels report the scalar default.
+    fn kernel_cfg(&self) -> KernelCfg {
+        KernelCfg::default()
+    }
+
     /// Human-readable name for logs and reports.
     fn name(&self) -> &'static str;
 }
 
 /// Pure-Rust production backend: cache-blocked tiled kernels
-/// (`dense::potrf_blocked` and friends), allocation-free through
-/// [`FrontBackend::partial_into`].
-#[derive(Debug, Default, Clone, Copy)]
-pub struct RustBackend;
+/// (`dense::potrf_blocked_cfg` and friends) under a [`KernelCfg`]
+/// resolved **once** at construction (tile edge + runtime-dispatched
+/// SIMD ISA — DESIGN.md §16), allocation-free through
+/// [`FrontBackend::partial_into`] up to the O(block·k) packing scratch.
+#[derive(Debug, Clone, Copy)]
+pub struct RustBackend {
+    cfg: KernelCfg,
+}
+
+impl Default for RustBackend {
+    /// Tile edge [`dense::BLOCK`] under the `MALLTREE_SIMD` env policy
+    /// (scalar when unset or unparsable — the historical default, so
+    /// plain `cargo test` keeps its bit-identity semantics; the CI
+    /// test matrix sets `MALLTREE_SIMD=force` to run the whole suite
+    /// under the SIMD gate). Resolved once per process.
+    fn default() -> RustBackend {
+        static CFG: OnceLock<KernelCfg> = OnceLock::new();
+        RustBackend { cfg: *CFG.get_or_init(KernelCfg::from_env) }
+    }
+}
+
+impl RustBackend {
+    /// Backend under an explicit, validated configuration — the CLI's
+    /// `--block`/`--simd` path. Fails on an out-of-range block or on
+    /// `simd=force` without SIMD hardware.
+    pub fn with_config(cfg: FrontConfig) -> Result<RustBackend> {
+        Ok(RustBackend { cfg: cfg.resolve()? })
+    }
+
+    /// The resolved kernel configuration.
+    pub fn cfg(&self) -> KernelCfg {
+        self.cfg
+    }
+
+    /// The dispatched instruction set (occupancy printouts, bench rows).
+    pub fn isa(&self) -> Isa {
+        self.cfg.isa
+    }
+}
 
 impl FrontBackend for RustBackend {
     fn partial(&self, front: &[f64], n: usize, k: usize) -> Result<FrontFactor> {
         let m = n - k;
         let mut panel = vec![0f64; n * k];
         let mut schur = vec![0f64; m * m];
-        dense::partial_factor_into(front, n, k, &mut panel, &mut schur)?;
+        dense::partial_factor_into_cfg(front, n, k, &mut panel, &mut schur, self.cfg)?;
         let l21 = panel.split_off(k * k);
         Ok(FrontFactor { l11: panel, l21, schur, n, k })
     }
 
     fn full(&self, front: &[f64], n: usize) -> Result<Vec<f64>> {
-        dense::full_factor_blocked(front, n)
+        dense::full_factor_blocked_cfg(front, n, self.cfg)
     }
 
     fn partial_into(
@@ -124,7 +171,7 @@ impl FrontBackend for RustBackend {
         panel: &mut [f64],
         schur: &mut [f64],
     ) -> Result<()> {
-        dense::partial_factor_into(front, n, k, panel, schur)
+        dense::partial_factor_into_cfg(front, n, k, panel, schur, self.cfg)
     }
 
     fn team_capable(&self) -> bool {
@@ -137,8 +184,16 @@ impl FrontBackend for RustBackend {
         job.run_leader(front)
     }
 
+    fn kernel_cfg(&self) -> KernelCfg {
+        self.cfg
+    }
+
     fn name(&self) -> &'static str {
-        "rust-f64"
+        match self.cfg.isa {
+            Isa::Scalar => "rust-f64",
+            Isa::Avx2 => "rust-f64-avx2",
+            Isa::Avx512 => "rust-f64-avx512",
+        }
     }
 }
 
@@ -227,13 +282,27 @@ mod tests {
         let n = 12;
         let k = 5;
         let a = diag_dominant(n);
-        let b = RustBackend;
+        let b = RustBackend::default();
         let f = b.partial(&a, n, k).unwrap();
         let (l11, l21, schur) = dense::partial_factor(&a, n, k).unwrap();
         assert!(close(&f.l11, &l11, 1e-12));
         assert!(close(&f.l21, &l21, 1e-12));
         assert!(close(&f.schur, &schur, 1e-12));
-        assert_eq!(b.name(), "rust-f64");
+        // the name carries the dispatched ISA tag (scalar by default,
+        // avx2/avx512 under the MALLTREE_SIMD CI legs)
+        assert!(b.name().starts_with("rust-f64"), "{}", b.name());
+    }
+
+    #[test]
+    fn rust_backend_config_is_validated_once_at_construction() {
+        use crate::frontal::simd::SimdMode;
+        let b = RustBackend::with_config(FrontConfig { block: 32, simd: SimdMode::Off }).unwrap();
+        assert_eq!(b.cfg(), KernelCfg { block: 32, isa: Isa::Scalar });
+        assert_eq!(b.kernel_cfg(), b.cfg());
+        assert!(!b.isa().is_simd());
+        assert!(RustBackend::with_config(FrontConfig { block: 0, simd: SimdMode::Off }).is_err());
+        // non-tunable backends report the scalar default geometry
+        assert_eq!(NaiveBackend.kernel_cfg(), KernelCfg::default());
     }
 
     #[test]
@@ -255,7 +324,7 @@ mod tests {
     fn rust_backend_full_matches_naive_oracle() {
         let n = 9;
         let a = diag_dominant(n);
-        let blocked = RustBackend.full(&a, n).unwrap();
+        let blocked = RustBackend::default().full(&a, n).unwrap();
         let naive = dense::full_factor(&a, n).unwrap();
         assert!(close(&blocked, &naive, 1e-12));
     }

@@ -110,27 +110,67 @@ pub fn full_factor(front: &[f64], n: usize) -> Result<Vec<f64>> {
 }
 
 // ---------------------------------------------------------------------
-// Cache-blocked kernels (DESIGN.md §9). Right-looking tiled variants of
-// the reference kernels above: the unblocked versions stay as the
-// property-test oracle; these are the production path (`RustBackend`).
-// Micro-kernel inner loops run over contiguous `t` ranges of both
-// operands so the compiler can autovectorize the dot products.
+// Cache-blocked kernels (DESIGN.md §9, §16). Right-looking tiled
+// variants of the reference kernels above: the unblocked versions stay
+// as the property-test oracle; these are the production path
+// (`RustBackend`). Tile geometry and inner-loop dispatch come from a
+// `KernelCfg` (tunable tile edge + runtime-resolved SIMD ISA): every
+// hot inner loop is `Isa::dot` or `Isa::fold_sub`, whose scalar
+// branches are the exact historical sequential loops — so
+// `KernelCfg::default()` (BLOCK tiles, scalar) reproduces the PR 2/3
+// kernels bit for bit, and all bit-identity guarantees are stated per
+// configuration.
 // ---------------------------------------------------------------------
 
-/// Tile edge for the blocked kernels (~64² f64 = 32 KiB per tile pair,
-/// sized for L1/L2 residency).
+use super::simd::{Isa, KernelCfg};
+
+/// Default tile edge for the blocked kernels (~64² f64 = 32 KiB per
+/// tile pair, sized for L1/L2 residency). Tunable per backend via
+/// `FrontConfig { block, .. }`.
 pub const BLOCK: usize = 64;
+
+/// Packing scratch (f64 words) the blocked Cholesky of a `k x k` block
+/// needs under tile edge `block`: one panel-major copy of the current
+/// diagonal block or trailing panel (the two reuse the same buffer —
+/// they are never live together). Zero when the block fits one tile.
+pub fn pack_len(block: usize, k: usize) -> usize {
+    if k > block {
+        block * k
+    } else {
+        0
+    }
+}
+
+/// Pack the factored `jb x jb` diagonal block at `(j0, j0)` (row stride
+/// `lda`) into a contiguous `jb`-stride buffer so the trailing tile
+/// solves stream it instead of striding `lda`. Pure data movement —
+/// values (and therefore every downstream bit pattern) are unchanged.
+fn pack_diag(a: &[f64], lda: usize, j0: usize, jb: usize, pack: &mut [f64]) {
+    for j in 0..jb {
+        let src = (j0 + j) * lda + j0;
+        pack[j * jb..(j + 1) * jb].copy_from_slice(&a[src..src + jb]);
+    }
+}
+
+/// Pack the solved `m x jb` panel rows `i0..i0+m` of column block `j0`
+/// into a contiguous panel-major buffer (row `i0 + r` at `pack[r*jb]`).
+fn pack_panel(a: &[f64], lda: usize, j0: usize, jb: usize, i0: usize, m: usize, pack: &mut [f64]) {
+    for r in 0..m {
+        let src = (i0 + r) * lda + j0;
+        pack[r * jb..(r + 1) * jb].copy_from_slice(&a[src..src + jb]);
+    }
+}
 
 /// In-place factorization of the `nb x nb` diagonal block at `(j0, j0)`
 /// of a matrix with row stride `lda` (inner-product Cholesky; the block
 /// is small enough that blocking buys nothing here).
-fn factor_diag(a: &mut [f64], lda: usize, j0: usize, nb: usize) -> Result<()> {
+fn factor_diag(a: &mut [f64], lda: usize, j0: usize, nb: usize, isa: Isa) -> Result<()> {
     for j in 0..nb {
         let rj = (j0 + j) * lda + j0;
-        let mut d = a[rj + j];
-        for k in 0..j {
-            d -= a[rj + k] * a[rj + k];
-        }
+        let d = {
+            let row = &a[rj..rj + j];
+            isa.fold_sub(a[rj + j], row, row)
+        };
         if d <= 0.0 || !d.is_finite() {
             bail!("potrf: matrix not positive definite at pivot {} (d={d})", j0 + j);
         }
@@ -138,88 +178,126 @@ fn factor_diag(a: &mut [f64], lda: usize, j0: usize, nb: usize) -> Result<()> {
         a[rj + j] = d;
         for i in j + 1..nb {
             let ri = (j0 + i) * lda + j0;
-            let mut s = a[ri + j];
-            for k in 0..j {
-                s -= a[ri + k] * a[rj + k];
-            }
+            let s = isa.fold_sub(a[ri + j], &a[ri..ri + j], &a[rj..rj + j]);
             a[ri + j] = s / d;
         }
     }
     Ok(())
 }
 
-/// Solve the panel rows `i0..i0+m` against the factored diagonal block
-/// at `(j0, j0)` (width `nb`), in place, row stride `lda`.
-fn trsm_tile(a: &mut [f64], lda: usize, j0: usize, nb: usize, i0: usize, m: usize) {
+/// Solve the panel rows `i0..i0+m` against the *packed* factored
+/// diagonal block `diag` (`nb x nb`, contiguous stride `nb`), in
+/// place, row stride `lda`. `diag` holds exactly the values of the
+/// factored block at `(j0, j0)`, so the result matches the historical
+/// strided read bit for bit.
+fn trsm_tile(
+    a: &mut [f64],
+    lda: usize,
+    j0: usize,
+    nb: usize,
+    i0: usize,
+    m: usize,
+    diag: &[f64],
+    isa: Isa,
+) {
     for i in 0..m {
         let ri = (i0 + i) * lda + j0;
         for j in 0..nb {
-            let rj = (j0 + j) * lda + j0;
-            let mut s = a[ri + j];
-            for t in 0..j {
-                s -= a[ri + t] * a[rj + t];
-            }
-            a[ri + j] = s / a[rj + j];
+            let dj = j * nb;
+            let s = isa.fold_sub(a[ri + j], &a[ri..ri + j], &diag[dj..dj + j]);
+            a[ri + j] = s / diag[dj + j];
         }
     }
 }
 
-/// One `(bi, bj)` tile of the trailing update `A22 -= L21 L21ᵀ` for the
-/// panel of width `kb` at column `j0` (`bi`/`bj` are element offsets
-/// into the `m x m` trailing block at `(i0, i0)`, `bj <= bi`, lower
-/// block-triangle only). Shared by the serial sweep [`syrk_tile`] and
-/// the team dispatch ([`FrontTeamJob`]) so both produce bit-identical
-/// entries.
-fn syrk_block(a: &mut [f64], lda: usize, j0: usize, kb: usize, i0: usize, m: usize, bi: usize, bj: usize) {
-    let ib = BLOCK.min(m - bi);
-    let jb = BLOCK.min(m - bj);
+/// One `(bi, bj)` tile of the trailing update `A22 -= L21 L21ᵀ` for a
+/// panel of width `kb` (`bi`/`bj` are element offsets into the `m x m`
+/// trailing block at `(i0, i0)`, `bj <= bi`, lower block-triangle
+/// only). The panel operand arrives packed (`pack[r*kb]` holds trailing
+/// row `i0 + r` of the solved panel) so both lanes of the dot stream
+/// contiguously instead of striding `lda`. Shared by the serial sweep
+/// [`syrk_tile`] and the team dispatch ([`FrontTeamJob`]) so both
+/// produce bit-identical entries for a fixed `KernelCfg`.
+fn syrk_block(
+    a: &mut [f64],
+    lda: usize,
+    i0: usize,
+    m: usize,
+    bi: usize,
+    bj: usize,
+    kb: usize,
+    pack: &[f64],
+    block: usize,
+    isa: Isa,
+) {
+    let ib = block.min(m - bi);
+    let jb = block.min(m - bj);
     for i in 0..ib {
-        let ri = (i0 + bi + i) * lda;
-        let li = ri + j0;
-        let ci = ri + i0 + bj;
+        let px = (bi + i) * kb;
+        let ci = (i0 + bi + i) * lda + i0 + bj;
         let jmax = if bj == bi { i + 1 } else { jb };
         for j in 0..jmax {
-            let lj = (i0 + bj + j) * lda + j0;
-            let mut s = 0.0;
-            for t in 0..kb {
-                s += a[li + t] * a[lj + t];
-            }
+            let py = (bj + j) * kb;
+            let s = isa.dot(&pack[px..px + kb], &pack[py..py + kb]);
             a[ci + j] -= s;
         }
     }
 }
 
-/// Trailing update `A22 -= L21 L21ᵀ` for the panel of width `kb` at
-/// column `j0`: tiled over the `m x m` trailing block starting at
-/// `(i0, i0)`, lower block-triangle only (the upper triangle is never
-/// read and is zeroed at the end of the factorization).
-fn syrk_tile(a: &mut [f64], lda: usize, j0: usize, kb: usize, i0: usize, m: usize) {
+/// Trailing update `A22 -= L21 L21ᵀ` for a packed panel of width `kb`:
+/// tiled over the `m x m` trailing block starting at `(i0, i0)`, lower
+/// block-triangle only (the upper triangle is never read and is zeroed
+/// at the end of the factorization).
+fn syrk_tile(
+    a: &mut [f64],
+    lda: usize,
+    kb: usize,
+    i0: usize,
+    m: usize,
+    pack: &[f64],
+    block: usize,
+    isa: Isa,
+) {
     let mut bi = 0;
     while bi < m {
         let mut bj = 0;
         while bj <= bi {
-            syrk_block(a, lda, j0, kb, i0, m, bi, bj);
-            bj += BLOCK;
+            syrk_block(a, lda, i0, m, bi, bj, kb, pack, block, isa);
+            bj += block;
         }
-        bi += BLOCK;
+        bi += block;
     }
 }
 
-/// Cache-blocked in-place lower Cholesky (right-looking, tile edge
-/// [`BLOCK`]); the strict upper triangle is zeroed. Agrees with
-/// [`potrf`] up to floating-point reassociation.
-pub fn potrf_blocked(a: &mut [f64], n: usize) -> Result<()> {
+/// [`potrf_blocked`] under an explicit kernel configuration.
+pub fn potrf_blocked_cfg(a: &mut [f64], n: usize, cfg: KernelCfg) -> Result<()> {
     if a.len() != n * n {
         bail!("potrf_blocked: buffer mismatch");
     }
+    let mut pack = vec![0f64; pack_len(cfg.block, n)];
+    potrf_blocked_scratch(a, n, cfg, &mut pack)
+}
+
+/// Blocked Cholesky body over caller-owned packing scratch (at least
+/// [`pack_len`] words). The serial entry point above allocates a
+/// transient buffer (O(block·n) words, deliberately *not*
+/// arena-accounted: the pebble-game peak model covers fronts and
+/// contribution blocks, and this scratch is bounded by one panel); the
+/// team path recycles its [`FrontTeamJob`] pack buffer through the same
+/// staging.
+fn potrf_blocked_scratch(a: &mut [f64], n: usize, cfg: KernelCfg, pack: &mut [f64]) -> Result<()> {
+    let (b, isa) = (cfg.block, cfg.isa);
     let mut j0 = 0;
     while j0 < n {
-        let jb = BLOCK.min(n - j0);
-        factor_diag(a, n, j0, jb)?;
+        let jb = b.min(n - j0);
+        factor_diag(a, n, j0, jb, isa)?;
         let i0 = j0 + jb;
         if i0 < n {
-            trsm_tile(a, n, j0, jb, i0, n - i0);
-            syrk_tile(a, n, j0, jb, i0, n - i0);
+            let m = n - i0;
+            pack_diag(a, n, j0, jb, &mut pack[..jb * jb]);
+            trsm_tile(a, n, j0, jb, i0, m, &pack[..jb * jb], isa);
+            pack_panel(a, n, j0, jb, i0, m, &mut pack[..m * jb]);
+            syrk_tile(a, n, jb, i0, m, &pack[..m * jb], b, isa);
         }
         j0 = i0;
     }
@@ -231,32 +309,40 @@ pub fn potrf_blocked(a: &mut [f64], n: usize) -> Result<()> {
     Ok(())
 }
 
+/// Cache-blocked in-place lower Cholesky (right-looking, tile edge
+/// [`BLOCK`], scalar loops); the strict upper triangle is zeroed.
+/// Agrees with [`potrf`] up to floating-point reassociation and is the
+/// bit-identity reference for `simd=off` gating.
+pub fn potrf_blocked(a: &mut [f64], n: usize) -> Result<()> {
+    potrf_blocked_cfg(a, n, KernelCfg::default())
+}
+
 /// Rows `r0..r0+rows` of the blocked `X Lᵀ = B` panel solve. Rows are
 /// mutually independent (each row solves against `l` alone), so any
 /// row partition — the serial full-range call in [`trsm_rt_blocked`] or
-/// one row tile of a team dispatch — produces bit-identical entries:
-/// the per-row operation sequence (column panels in ascending order) is
-/// fixed here.
-fn trsm_rt_rows(l: &[f64], k: usize, b: &mut [f64], r0: usize, rows: usize) {
+/// one row tile of a team dispatch — produces bit-identical entries for
+/// a fixed `KernelCfg`: the per-row operation sequence (column panels
+/// in ascending order) is fixed here. Both operands already stream
+/// contiguously (`l` and `b` have row stride `k`), so no packing is
+/// needed.
+fn trsm_rt_rows(l: &[f64], k: usize, b: &mut [f64], r0: usize, rows: usize, block: usize, isa: Isa) {
     let mut j0 = 0;
     while j0 < k {
-        let jb = BLOCK.min(k - j0);
+        let jb = block.min(k - j0);
         for i in r0..r0 + rows {
             let bi = i * k;
             for j in 0..jb {
                 let lj = (j0 + j) * k;
-                let mut s = 0.0;
-                for t in 0..j0 {
-                    s += b[bi + t] * l[lj + t];
-                }
+                let s = isa.dot(&b[bi..bi + j0], &l[lj..lj + j0]);
                 b[bi + j0 + j] -= s;
             }
             for j in 0..jb {
                 let lj = (j0 + j) * k;
-                let mut s = b[bi + j0 + j];
-                for t in 0..j {
-                    s -= b[bi + j0 + t] * l[lj + j0 + t];
-                }
+                let s = isa.fold_sub(
+                    b[bi + j0 + j],
+                    &b[bi + j0..bi + j0 + j],
+                    &l[lj + j0..lj + j0 + j],
+                );
                 b[bi + j0 + j] = s / l[lj + j0 + j];
             }
         }
@@ -264,36 +350,56 @@ fn trsm_rt_rows(l: &[f64], k: usize, b: &mut [f64], r0: usize, rows: usize) {
     }
 }
 
+/// [`trsm_rt_blocked`] under an explicit kernel configuration.
+pub fn trsm_rt_blocked_cfg(
+    l: &[f64],
+    k: usize,
+    b: &mut [f64],
+    m: usize,
+    cfg: KernelCfg,
+) -> Result<()> {
+    if l.len() != k * k || b.len() != m * k {
+        bail!("trsm_rt_blocked: buffer mismatch");
+    }
+    trsm_rt_rows(l, k, b, 0, m, cfg.block, cfg.isa);
+    Ok(())
+}
+
 /// Cache-blocked `X Lᵀ = B` panel solve (same contract as [`trsm_rt`]):
 /// each column panel folds in the already-solved columns with a dense
 /// dot (the GEMM part), then solves against its diagonal block.
 pub fn trsm_rt_blocked(l: &[f64], k: usize, b: &mut [f64], m: usize) -> Result<()> {
-    if l.len() != k * k || b.len() != m * k {
-        bail!("trsm_rt_blocked: buffer mismatch");
-    }
-    trsm_rt_rows(l, k, b, 0, m);
-    Ok(())
+    trsm_rt_blocked_cfg(l, k, b, m, KernelCfg::default())
 }
 
 /// One `(i0, j0)` output tile of the Schur update `C -= A Aᵀ`: rows
 /// `i0..i0+ib`, columns `j0..j0+jb`, folding the whole inner dimension
-/// in ascending `BLOCK` panels. Every entry's accumulation sequence is
+/// in ascending `block` panels. Every entry's accumulation sequence is
 /// fixed here (inner panels in ascending `t0` order), so any tiling of
 /// the output — the serial column sweep in [`syrk_sub_blocked`] or a
-/// team's 2-D tile grid — produces bit-identical results.
-fn syrk_sub_block(c: &mut [f64], a: &[f64], m: usize, k: usize, i0: usize, ib: usize, j0: usize, jb: usize) {
+/// team's 2-D tile grid — produces bit-identical results for a fixed
+/// `KernelCfg`. `A` rows already stream contiguously (stride `k`).
+fn syrk_sub_block(
+    c: &mut [f64],
+    a: &[f64],
+    m: usize,
+    k: usize,
+    i0: usize,
+    ib: usize,
+    j0: usize,
+    jb: usize,
+    block: usize,
+    isa: Isa,
+) {
     let mut t0 = 0;
     while t0 < k {
-        let tb = BLOCK.min(k - t0);
+        let tb = block.min(k - t0);
         for i in i0..i0 + ib {
             let ai = i * k + t0;
             let ci = i * m + j0;
             for j in 0..jb {
                 let aj = (j0 + j) * k + t0;
-                let mut s = 0.0;
-                for t in 0..tb {
-                    s += a[ai + t] * a[aj + t];
-                }
+                let s = isa.dot(&a[ai..ai + tb], &a[aj..aj + tb]);
                 c[ci + j] -= s;
             }
         }
@@ -301,33 +407,41 @@ fn syrk_sub_block(c: &mut [f64], a: &[f64], m: usize, k: usize, i0: usize, ib: u
     }
 }
 
-/// Cache-blocked Schur update `C -= A Aᵀ` (same contract as
-/// [`syrk_sub`]): tiled over the inner dimension and the columns of C
-/// so each `A` panel stays cache-resident across a column tile.
-pub fn syrk_sub_blocked(c: &mut [f64], a: &[f64], m: usize, k: usize) -> Result<()> {
+/// [`syrk_sub_blocked`] under an explicit kernel configuration.
+pub fn syrk_sub_blocked_cfg(
+    c: &mut [f64],
+    a: &[f64],
+    m: usize,
+    k: usize,
+    cfg: KernelCfg,
+) -> Result<()> {
     if c.len() != m * m || a.len() != m * k {
         bail!("syrk_sub_blocked: buffer mismatch");
     }
     let mut j0 = 0;
     while j0 < m {
-        let jb = BLOCK.min(m - j0);
-        syrk_sub_block(c, a, m, k, 0, m, j0, jb);
+        let jb = cfg.block.min(m - j0);
+        syrk_sub_block(c, a, m, k, 0, m, j0, jb, cfg.block, cfg.isa);
         j0 += jb;
     }
     Ok(())
 }
 
-/// Blocked partial factorization writing straight into caller buffers:
-/// `panel` receives `[L11; L21]` row-major (`n x k`), `schur` the
-/// `(n-k) x (n-k)` Schur complement. Zero heap allocation — the hot
-/// path of the multifrontal drivers (the arena owns `schur`, the
-/// factorization output owns `panel`).
-pub fn partial_factor_into(
+/// Cache-blocked Schur update `C -= A Aᵀ` (same contract as
+/// [`syrk_sub`]): tiled over the inner dimension and the columns of C
+/// so each `A` panel stays cache-resident across a column tile.
+pub fn syrk_sub_blocked(c: &mut [f64], a: &[f64], m: usize, k: usize) -> Result<()> {
+    syrk_sub_blocked_cfg(c, a, m, k, KernelCfg::default())
+}
+
+/// [`partial_factor_into`] under an explicit kernel configuration.
+pub fn partial_factor_into_cfg(
     front: &[f64],
     n: usize,
     k: usize,
     panel: &mut [f64],
     schur: &mut [f64],
+    cfg: KernelCfg,
 ) -> Result<()> {
     if front.len() != n * n || k == 0 || k > n {
         bail!("partial_factor_into: bad arguments n={n} k={k}");
@@ -341,22 +455,43 @@ pub fn partial_factor_into(
     }
     {
         let (l11, l21) = panel.split_at_mut(k * k);
-        potrf_blocked(l11, k)?;
-        trsm_rt_blocked(l11, k, l21, m)?;
+        potrf_blocked_cfg(l11, k, cfg)?;
+        trsm_rt_blocked_cfg(l11, k, l21, m, cfg)?;
     }
     for i in 0..m {
         let src = (k + i) * n + k;
         schur[i * m..(i + 1) * m].copy_from_slice(&front[src..src + m]);
     }
-    syrk_sub_blocked(schur, &panel[k * k..], m, k)?;
+    syrk_sub_blocked_cfg(schur, &panel[k * k..], m, k, cfg)?;
     Ok(())
+}
+
+/// Blocked partial factorization writing straight into caller buffers:
+/// `panel` receives `[L11; L21]` row-major (`n x k`), `schur` the
+/// `(n-k) x (n-k)` Schur complement. The hot path of the multifrontal
+/// drivers (the arena owns `schur`, the factorization output owns
+/// `panel`); the only transient allocation is the O(block·k) packing
+/// scratch inside the leading Cholesky.
+pub fn partial_factor_into(
+    front: &[f64],
+    n: usize,
+    k: usize,
+    panel: &mut [f64],
+    schur: &mut [f64],
+) -> Result<()> {
+    partial_factor_into_cfg(front, n, k, panel, schur, KernelCfg::default())
+}
+
+/// [`full_factor_blocked`] under an explicit kernel configuration.
+pub fn full_factor_blocked_cfg(front: &[f64], n: usize, cfg: KernelCfg) -> Result<Vec<f64>> {
+    let mut l = front.to_vec();
+    potrf_blocked_cfg(&mut l, n, cfg)?;
+    Ok(l)
 }
 
 /// Blocked full Cholesky of a front (returns lower factor).
 pub fn full_factor_blocked(front: &[f64], n: usize) -> Result<Vec<f64>> {
-    let mut l = front.to_vec();
-    potrf_blocked(&mut l, n)?;
-    Ok(l)
+    full_factor_blocked_cfg(front, n, KernelCfg::default())
 }
 
 // ---------------------------------------------------------------------
@@ -469,6 +604,15 @@ pub struct FrontTeamJob {
     panel: BufCell,
     /// `(n-k)²` Schur complement output (empty when `k == n`).
     schur: BufCell,
+    /// Panel-major packing scratch for the leading Cholesky's trailing
+    /// solves/updates ([`pack_len`] words; empty when the leading block
+    /// is a single tile). Leader-written between steps — the
+    /// Release/Acquire pair on `gate` publishes it — and read-only
+    /// inside tiles.
+    pack: BufCell,
+    /// Tile geometry + SIMD dispatch; shared verbatim with the serial
+    /// path it must be bit-identical to.
+    cfg: KernelCfg,
     steps: Vec<Step>,
     /// Highest tile id currently claimable (end of the open step).
     gate: AtomicUsize,
@@ -490,26 +634,47 @@ pub struct FrontTeamJob {
 
 impl FrontTeamJob {
     /// Plan the team factorization of an `n x n` front eliminating `k`
-    /// columns (`k == n` plans a full Cholesky). `panel` must hold
-    /// `n*k` f64s and `schur` `(n-k)²` (both typically recycled
-    /// buffers; contents are overwritten).
+    /// columns (`k == n` plans a full Cholesky) under the default
+    /// kernel configuration. `panel` must hold `n*k` f64s and `schur`
+    /// `(n-k)²` (both typically recycled buffers; contents are
+    /// overwritten).
     pub fn new(n: usize, k: usize, panel: Vec<f64>, schur: Vec<f64>) -> FrontTeamJob {
+        FrontTeamJob::with_cfg(KernelCfg::default(), n, k, panel, schur, Vec::new())
+    }
+
+    /// [`FrontTeamJob::new`] under an explicit kernel configuration:
+    /// the step table's tile geometry follows `cfg.block` and every
+    /// tile dispatches through `cfg.isa`. `pack` is recycled packing
+    /// scratch of any length (it is resized to [`pack_len`] words; the
+    /// executor routes arena scratch here and reclaims it with
+    /// [`FrontTeamJob::take_pack`]).
+    pub fn with_cfg(
+        cfg: KernelCfg,
+        n: usize,
+        k: usize,
+        panel: Vec<f64>,
+        schur: Vec<f64>,
+        mut pack: Vec<f64>,
+    ) -> FrontTeamJob {
         assert!(k > 0 && k <= n, "FrontTeamJob: bad arguments n={n} k={k}");
         assert_eq!(panel.len(), n * k, "FrontTeamJob: panel buffer mismatch");
         assert_eq!(schur.len(), (n - k) * (n - k), "FrontTeamJob: schur buffer mismatch");
+        let block = cfg.block;
+        pack.clear();
+        pack.resize(pack_len(block, k), 0.0);
         let mut steps = Vec::new();
         let mut base = 0usize;
         // in-place Cholesky of the leading k x k block (row stride k)
         let mut j0 = 0;
         while j0 < k {
-            let jb = BLOCK.min(k - j0);
+            let jb = block.min(k - j0);
             let i0 = j0 + jb;
             if i0 < k {
                 let m = k - i0;
-                let t = m.div_ceil(BLOCK);
+                let t = m.div_ceil(block);
                 steps.push(Step { kind: StepKind::CholTrsm { j0, jb }, base, tiles: t });
                 base += t;
-                let nb = m.div_ceil(BLOCK);
+                let nb = m.div_ceil(block);
                 let t = nb * (nb + 1) / 2;
                 steps.push(Step { kind: StepKind::CholSyrk { j0, jb }, base, tiles: t });
                 base += t;
@@ -518,10 +683,10 @@ impl FrontTeamJob {
         }
         if k < n {
             let m = n - k;
-            let t = m.div_ceil(BLOCK);
+            let t = m.div_ceil(block);
             steps.push(Step { kind: StepKind::PanelTrsm, base, tiles: t });
             base += t;
-            let nb = m.div_ceil(BLOCK);
+            let nb = m.div_ceil(block);
             let t = nb * nb;
             steps.push(Step { kind: StepKind::SchurSyrk, base, tiles: t });
         }
@@ -530,6 +695,8 @@ impl FrontTeamJob {
             k,
             panel: BufCell::new(panel),
             schur: BufCell::new(schur),
+            pack: BufCell::new(pack),
+            cfg,
             steps,
             gate: AtomicUsize::new(0),
             cursor: AtomicUsize::new(0),
@@ -557,17 +724,24 @@ impl FrontTeamJob {
         self.joined.load(Ordering::Relaxed)
     }
 
-    /// Largest team size this front's tile grid can keep busy: the
-    /// widest single step. Teams beyond this would only spin.
+    /// Largest team size this front's tile grid can keep busy under
+    /// the default tile edge [`BLOCK`].
     pub fn max_useful_team(n: usize, k: usize) -> usize {
+        FrontTeamJob::max_useful_team_cfg(BLOCK, n, k)
+    }
+
+    /// Largest team size this front's tile grid can keep busy under
+    /// tile edge `block`: the widest single step. Teams beyond this
+    /// would only spin.
+    pub fn max_useful_team_cfg(block: usize, n: usize, k: usize) -> usize {
         let mut widest = 1usize;
-        let trail = k.saturating_sub(BLOCK);
+        let trail = k.saturating_sub(block);
         if trail > 0 {
-            let nb = trail.div_ceil(BLOCK);
+            let nb = trail.div_ceil(block);
             widest = widest.max(nb).max(nb * (nb + 1) / 2);
         }
         if k < n {
-            let nb = (n - k).div_ceil(BLOCK);
+            let nb = (n - k).div_ceil(block);
             widest = widest.max(nb).max(nb * nb);
         }
         widest
@@ -606,19 +780,28 @@ impl FrontTeamJob {
             panel[i * k..(i + 1) * k].copy_from_slice(&front[i * n..i * n + k]);
         }
         // blocked Cholesky of the leading k x k block: the diagonal
-        // factor is serial (leader), trailing trsm/syrk tiles are team
-        // steps
+        // factor and the pack staging are serial (leader, between steps
+        // — the gate is saturated so no helper is inside a tile, and
+        // the Release store opening the next step publishes the pack);
+        // trailing trsm/syrk tiles are team steps
+        let (b, isa) = (self.cfg.block, self.cfg.isa);
         let mut next_step = 0usize;
         let mut j0 = 0;
         while j0 < k {
-            let jb = BLOCK.min(k - j0);
-            factor_diag(panel, k, j0, jb)?;
-            if j0 + jb < k {
+            let jb = b.min(k - j0);
+            factor_diag(panel, k, j0, jb, isa)?;
+            let i0 = j0 + jb;
+            if i0 < k {
+                let m = k - i0;
+                // SAFETY: leader-exclusive between steps (see above).
+                let pack = unsafe { self.pack.slice() };
+                pack_diag(panel, k, j0, jb, &mut pack[..jb * jb]);
                 self.run_step(next_step)?;
+                pack_panel(panel, k, j0, jb, i0, m, &mut pack[..m * jb]);
                 self.run_step(next_step + 1)?;
                 next_step += 2;
             }
-            j0 += jb;
+            j0 = i0;
         }
         // potrf contract: zero the strict upper triangle of L11
         for i in 0..k {
@@ -711,39 +894,46 @@ impl FrontTeamJob {
         let step = self.steps[ix];
         let local = t - step.base;
         let k = self.k;
+        let (b, isa) = (self.cfg.block, self.cfg.isa);
         // SAFETY: exclusive tile ownership via the claimed cursor slot;
         // reads are confined to regions finalized by earlier steps.
         let panel = unsafe { self.panel.slice() };
         match step.kind {
             StepKind::CholTrsm { j0, jb } => {
                 let i0 = j0 + jb;
-                let r0 = i0 + local * BLOCK;
-                let rows = BLOCK.min(k - r0);
-                trsm_tile(panel, k, j0, jb, r0, rows);
+                let r0 = i0 + local * b;
+                let rows = b.min(k - r0);
+                // SAFETY: the leader packed the diagonal block before
+                // opening this step; tiles only read it.
+                let pack = unsafe { self.pack.slice() };
+                trsm_tile(panel, k, j0, jb, r0, rows, &pack[..jb * jb], isa);
             }
             StepKind::CholSyrk { j0, jb } => {
                 let i0 = j0 + jb;
                 let m = k - i0;
                 let (ti, tj) = tri_index(local);
-                syrk_block(panel, k, j0, jb, i0, m, ti * BLOCK, tj * BLOCK);
+                // SAFETY: the leader packed the solved panel before
+                // opening this step; tiles only read it.
+                let pack = unsafe { self.pack.slice() };
+                syrk_block(panel, k, i0, m, ti * b, tj * b, jb, &pack[..m * jb], b, isa);
             }
             StepKind::PanelTrsm => {
                 let m = self.n - k;
-                let r0 = local * BLOCK;
-                let rows = BLOCK.min(m - r0);
+                let r0 = local * b;
+                let rows = b.min(m - r0);
                 let (l11, l21) = panel.split_at_mut(k * k);
-                trsm_rt_rows(l11, k, l21, r0, rows);
+                trsm_rt_rows(l11, k, l21, r0, rows, b, isa);
             }
             StepKind::SchurSyrk => {
                 let m = self.n - k;
-                let nb = m.div_ceil(BLOCK);
+                let nb = m.div_ceil(b);
                 let (ti, tj) = (local / nb, local % nb);
-                let (i0, j0) = (ti * BLOCK, tj * BLOCK);
-                let (ib, jb) = (BLOCK.min(m - i0), BLOCK.min(m - j0));
+                let (i0, j0) = (ti * b, tj * b);
+                let (ib, jb) = (b.min(m - i0), b.min(m - j0));
                 // SAFETY: same contract as `panel`.
                 let schur = unsafe { self.schur.slice() };
                 let l21 = &panel[k * k..];
-                syrk_sub_block(schur, l21, m, k, i0, ib, j0, jb);
+                syrk_sub_block(schur, l21, m, k, i0, ib, j0, jb, b, isa);
             }
         }
     }
@@ -837,6 +1027,18 @@ impl FrontTeamJob {
                 std::mem::take(&mut *self.schur.0.get()),
             )
         }
+    }
+
+    /// Reclaim the packing scratch for reuse (same contract as
+    /// [`FrontTeamJob::take_outputs`]: only after the job closed and
+    /// the last helper left).
+    pub fn take_pack(&self) -> Vec<f64> {
+        assert!(
+            self.closed.load(Ordering::Acquire) && self.helpers.load(Ordering::Acquire) == 0,
+            "take_pack before the job closed"
+        );
+        // SAFETY: closed + drained — no other thread touches the cell.
+        unsafe { std::mem::take(&mut *self.pack.0.get()) }
     }
 
     #[cfg(test)]
@@ -1141,8 +1343,20 @@ mod tests {
         helpers: usize,
         poison: Option<usize>,
     ) -> (Result<()>, Vec<f64>, Vec<f64>, usize) {
+        run_team_cfg(front, n, k, helpers, poison, KernelCfg::default())
+    }
+
+    /// [`run_team`] under an explicit kernel configuration.
+    fn run_team_cfg(
+        front: &[f64],
+        n: usize,
+        k: usize,
+        helpers: usize,
+        poison: Option<usize>,
+        cfg: KernelCfg,
+    ) -> (Result<()>, Vec<f64>, Vec<f64>, usize) {
         let m = n - k;
-        let job = FrontTeamJob::new(n, k, vec![0f64; n * k], vec![0f64; m * m]);
+        let job = FrontTeamJob::with_cfg(cfg, n, k, vec![0f64; n * k], vec![0f64; m * m], Vec::new());
         if let Some(t) = poison {
             job.poison_tile(t);
         }
@@ -1266,5 +1480,167 @@ mod tests {
         let (outcome, _, _, _) = run_team(&a, n, 65, 2, None);
         let msg = format!("{:#}", outcome.expect_err("indefinite must fail"));
         assert!(msg.contains("positive definite"), "{msg}");
+    }
+
+    // --- dual correctness gating (DESIGN.md §16) -----------------------
+    // simd=off: bit-identity against the serial/team oracle path, for
+    // any tile edge. simd=on: normwise epsilon against the naive
+    // oracle, plus serial==team bit-identity *within* the configuration.
+
+    use crate::frontal::simd::{FrontConfig, SimdMode};
+
+    fn partial_cfg(a: &[f64], n: usize, k: usize, cfg: KernelCfg) -> (Vec<f64>, Vec<f64>) {
+        let m = n - k;
+        let mut panel = vec![0f64; n * k];
+        let mut schur = vec![0f64; m * m];
+        partial_factor_into_cfg(a, n, k, &mut panel, &mut schur, cfg).unwrap();
+        (panel, schur)
+    }
+
+    #[test]
+    fn simd_off_nonstandard_block_stays_bitwise_serial_team() {
+        // the bit-identity regression gate: with simd off, the team
+        // path must stay bit-identical to the serial blocked path for
+        // every tile edge (remainder tiles included), and the default
+        // cfg must factor exactly like the legacy wrappers
+        for &(n, k, block) in &[(130usize, 64usize, 24usize), (97, 50, 32), (80, 80, 24)] {
+            let cfg = KernelCfg { block, isa: Isa::Scalar };
+            let a = random_spd(n, 900 + n as u64);
+            let (want_panel, want_schur) = if k == n {
+                (full_factor_blocked_cfg(&a, n, cfg).unwrap(), Vec::new())
+            } else {
+                partial_cfg(&a, n, k, cfg)
+            };
+            let (outcome, panel, schur, _) = run_team_cfg(&a, n, k, 3, None, cfg);
+            outcome.unwrap();
+            for (i, (x, y)) in want_panel.iter().zip(&panel).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "block={block} n={n} k={k} panel[{i}]");
+            }
+            for (i, (x, y)) in want_schur.iter().zip(&schur).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "block={block} n={n} k={k} schur[{i}]");
+            }
+        }
+        // legacy wrapper == default cfg, bitwise
+        let (n, k) = (130, 64);
+        let a = random_spd(n, 77);
+        let (p1, s1) = partial_cfg(&a, n, k, KernelCfg::default());
+        let mut p2 = vec![0f64; n * k];
+        let mut s2 = vec![0f64; (n - k) * (n - k)];
+        partial_factor_into(&a, n, k, &mut p2, &mut s2).unwrap();
+        assert!(p1.iter().zip(&p2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(s1.iter().zip(&s2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn simd_matches_scalar_normwise_epsilon_randomized() {
+        // on scalar-only hardware the detected ISA degenerates to
+        // Scalar and this check becomes the bitwise case — the CI
+        // runners provide the SIMD leg
+        let isa = Isa::detect(SimdMode::Auto);
+        crate::util::prop::check(
+            crate::util::prop::Config { cases: 12, seed: 0x51AD },
+            "simd-partial-matches-scalar",
+            |r| {
+                let n = r.range(1, 150);
+                let k = r.range(1, n);
+                let block = [8usize, 24, 64][r.below(3)];
+                (n, k, block, r.next_u64())
+            },
+            |&(n, k, block, seed)| {
+                let a = random_spd(n, seed);
+                let (ps, ss) = partial_cfg(&a, n, k, KernelCfg { block, isa: Isa::Scalar });
+                let (pv, sv) = partial_cfg(&a, n, k, KernelCfg { block, isa });
+                let dp = max_rel_diff(&ps, &pv);
+                let ds = max_rel_diff(&ss, &sv);
+                if dp < 1e-11 && ds < 1e-11 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n} k={k} block={block}: panel {dp} schur {ds}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn simd_one_wide_panels_and_remainder_tiles_match_oracle() {
+        let isa = Isa::detect(SimdMode::Auto);
+        // 1-wide panels (k=1) and n % block != 0 remainder tiles, vs
+        // the *naive* oracle (normwise epsilon — the simd=on gate)
+        for &(n, k, block) in &[(65usize, 1usize, 8usize), (70, 1, 64), (65, 33, 8), (130, 64, 24)]
+        {
+            let a = random_spd(n, 300 + n as u64);
+            let (l11, l21, schur) = partial_factor(&a, n, k).unwrap();
+            let (panel, schur_v) = partial_cfg(&a, n, k, KernelCfg { block, isa });
+            let d11 = max_rel_diff(&l11, &panel[..k * k]);
+            let d21 = max_rel_diff(&l21, &panel[k * k..]);
+            let ds = max_rel_diff(&schur, &schur_v);
+            assert!(
+                d11 < 1e-11 && d21 < 1e-11 && ds < 1e-11,
+                "n={n} k={k} block={block}: {d11} {d21} {ds}"
+            );
+        }
+        // full factorization with remainder tiles
+        let n = 90;
+        let a = random_spd(n, 4242);
+        let mut naive = a.clone();
+        potrf(&mut naive, n).unwrap();
+        let l = full_factor_blocked_cfg(&a, n, KernelCfg { block: 24, isa }).unwrap();
+        let d = max_rel_diff(&naive, &l);
+        assert!(d < 1e-11, "rel diff {d}");
+    }
+
+    #[test]
+    fn team_is_bitwise_serial_within_a_simd_config() {
+        // serial == team bit-identity is per configuration: tile
+        // ownership, not reduction order, is what the team partitions,
+        // so it survives SIMD dispatch too
+        let cfg = KernelCfg { block: BLOCK, isa: Isa::detect(SimdMode::Auto) };
+        for &(n, k, helpers) in &[(130usize, 64usize, 3usize), (200, 200, 4)] {
+            let a = random_spd(n, 600 + n as u64);
+            let (want_panel, want_schur) = if k == n {
+                (full_factor_blocked_cfg(&a, n, cfg).unwrap(), Vec::new())
+            } else {
+                partial_cfg(&a, n, k, cfg)
+            };
+            let (outcome, panel, schur, _) = run_team_cfg(&a, n, k, helpers, None, cfg);
+            outcome.unwrap();
+            for (i, (x, y)) in want_panel.iter().zip(&panel).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n} k={k} panel[{i}]");
+            }
+            for (i, (x, y)) in want_schur.iter().zip(&schur).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n} k={k} schur[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn max_useful_team_cfg_follows_block() {
+        // block 32 on a 256 full front: 224 trailing rows = 7 row
+        // tiles, 28 triangle tiles
+        assert_eq!(FrontTeamJob::max_useful_team_cfg(32, 256, 256), 28);
+        // partial 256/64 at block 32: Schur grid is 6x6
+        assert_eq!(FrontTeamJob::max_useful_team_cfg(32, 256, 64), 36);
+        // the default-block wrapper is unchanged
+        assert_eq!(FrontTeamJob::max_useful_team(256, 256), 6);
+    }
+
+    #[test]
+    fn pack_len_covers_staged_panels() {
+        assert_eq!(pack_len(64, 64), 0, "single-tile blocks need no packing");
+        assert_eq!(pack_len(64, 63), 0);
+        assert_eq!(pack_len(64, 65), 64 * 65);
+        // widest staged slice is max(jb*jb, m*jb) <= block*k
+        assert!(pack_len(24, 100) >= 24 * 24);
+        assert!(pack_len(24, 100) >= 76 * 24);
+    }
+
+    #[test]
+    fn front_config_resolves_against_this_cpu() {
+        // auto must resolve on any host; force is strict
+        let auto = FrontConfig { block: 64, simd: SimdMode::Auto }.resolve().unwrap();
+        match (FrontConfig { block: 64, simd: SimdMode::Force }).resolve() {
+            Ok(cfg) => assert!(cfg.isa.is_simd()),
+            Err(_) => assert_eq!(auto.isa, Isa::Scalar),
+        }
     }
 }

@@ -9,10 +9,15 @@
 //! * [`arena`] — the front arena: reused front buffer, recycled
 //!   contribution-block slabs, global-row scatter map, and live/peak
 //!   memory accounting (DESIGN.md §9);
+//! * [`simd`] — the SIMD microkernel layer (DESIGN.md §16): runtime
+//!   ISA dispatch (`Isa`: scalar / AVX2 f64x4 / AVX-512 f64x8), the
+//!   `dot`/`fold_sub` primitives every blocked inner loop routes
+//!   through, and the `FrontConfig { block, simd }` → `KernelCfg`
+//!   resolution backends perform once at construction;
 //! * [`backend`] — the `FrontBackend` abstraction: `RustBackend`
-//!   (blocked in-process f64), `NaiveBackend` (unblocked oracle) and
-//!   `PjrtBackend` (AOT HLO artifacts via [`crate::runtime`], the
-//!   TPU-shaped path);
+//!   (blocked in-process f64 under a resolved `KernelCfg`),
+//!   `NaiveBackend` (unblocked oracle) and `PjrtBackend` (AOT HLO
+//!   artifacts via [`crate::runtime`], the TPU-shaped path);
 //! * [`multifrontal`] — the numeric factorization: assemble fronts in
 //!   assembly-tree postorder, extend-add children contributions via
 //!   precomputed relative indices, partial-factor each front, and emit
@@ -22,10 +27,12 @@ pub mod arena;
 pub mod backend;
 pub mod dense;
 pub mod multifrontal;
+pub mod simd;
 pub mod solve;
 
 pub use arena::{FrontArena, MemGauge};
 pub use backend::{FrontBackend, NaiveBackend, PjrtBackend, RustBackend};
 pub use dense::FrontTeamJob;
+pub use simd::{FrontConfig, Isa, KernelCfg, SimdMode};
 pub use multifrontal::{factorize, factorize_with_arena, Factorization};
 pub use solve::{backward_solve_sn, forward_solve_sn, solve_sn};

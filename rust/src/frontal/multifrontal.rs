@@ -310,7 +310,7 @@ mod tests {
     #[test]
     fn grid_residual_is_tiny() {
         let (at, ap) = setup(8, 0);
-        let f = factorize(&at, &ap, &RustBackend).unwrap();
+        let f = factorize(&at, &ap, &RustBackend::default()).unwrap();
         let r = residual(&at, &ap, &f);
         assert!(r < 1e-12, "residual {r}");
     }
@@ -318,7 +318,7 @@ mod tests {
     #[test]
     fn amalgamated_residual_is_tiny() {
         let (at, ap) = setup(10, 4);
-        let f = factorize(&at, &ap, &RustBackend).unwrap();
+        let f = factorize(&at, &ap, &RustBackend::default()).unwrap();
         let r = residual(&at, &ap, &f);
         assert!(r < 1e-12, "residual {r}");
     }
@@ -327,7 +327,7 @@ mod tests {
     fn solve_recovers_solution() {
         let (at, ap) = setup(6, 0);
         let n = ap.n;
-        let f = factorize(&at, &ap, &RustBackend).unwrap();
+        let f = factorize(&at, &ap, &RustBackend::default()).unwrap();
         let x_true: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.37).cos()).collect();
         let b = ap.matvec(&x_true);
         let x = f.solve_dense(&at, &b);
@@ -346,7 +346,7 @@ mod tests {
         let perm = order::reverse_cuthill_mckee(&a);
         let at = symbolic::analyze(&a, &perm, 2).unwrap();
         let ap = a.permute_sym(&at.symbolic.perm).unwrap();
-        let f = factorize(&at, &ap, &RustBackend).unwrap();
+        let f = factorize(&at, &ap, &RustBackend::default()).unwrap();
         let r = residual(&at, &ap, &f);
         assert!(r < 1e-12, "residual {r}");
     }
@@ -357,7 +357,7 @@ mod tests {
         let perm = order::nested_dissection_3d(4);
         let at = symbolic::analyze(&a, &perm, 0).unwrap();
         let ap = a.permute_sym(&at.symbolic.perm).unwrap();
-        let f = factorize(&at, &ap, &RustBackend).unwrap();
+        let f = factorize(&at, &ap, &RustBackend::default()).unwrap();
         let r = residual(&at, &ap, &f);
         assert!(r < 1e-12, "residual {r}");
     }
@@ -412,7 +412,7 @@ mod tests {
         use crate::frontal::arena::symbolic_peak_f64s;
         for (at, ap) in [setup(8, 0), setup(10, 4)] {
             let mut arena = FrontArena::for_tree(&at);
-            let f = factorize_with_arena(&at, &ap, &RustBackend, &mut arena).unwrap();
+            let f = factorize_with_arena(&at, &ap, &RustBackend::default(), &mut arena).unwrap();
             assert!(residual(&at, &ap, &f) < 1e-12);
             assert_eq!(arena.peak_f64s(), symbolic_peak_f64s(&at));
             assert_eq!(arena.live_f64s(), 0, "arena leaked live words");
@@ -449,7 +449,7 @@ mod tests {
         assert!(format!("{err:#}").contains("injected mid-traversal failure"));
         assert_eq!(arena.live_f64s(), 0, "failed run left live words in the arena");
         // the same arena stays usable for a subsequent successful run
-        let f = factorize_with_arena(&at, &ap, &RustBackend, &mut arena).unwrap();
+        let f = factorize_with_arena(&at, &ap, &RustBackend::default(), &mut arena).unwrap();
         assert!(residual(&at, &ap, &f) < 1e-12);
         assert_eq!(arena.live_f64s(), 0);
     }
@@ -464,7 +464,7 @@ mod tests {
             let front = assemble_front(&at, &ap, s, &mut contrib);
             let nf = sn.front_order();
             if sn.width < nf {
-                let f = RustBackend.partial(&front, nf, sn.width).unwrap();
+                let f = RustBackend::default().partial(&front, nf, sn.width).unwrap();
                 contrib.insert(s, f.schur);
             }
         }

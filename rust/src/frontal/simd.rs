@@ -1,0 +1,395 @@
+//! SIMD microkernels for the blocked front kernels (DESIGN.md §16).
+//!
+//! Every hot inner loop of the tile primitives in `frontal::dense` is
+//! one of two shapes: a **pure dot** (`s = Σ x[t]·y[t]`, subtracted
+//! from the output once) or a **fold-sub** (`s -= x[t]·y[t]` folded
+//! into a live accumulator). Both are exposed here on [`Isa`], which is
+//! resolved **once** at backend construction (runtime feature
+//! detection, never per-tile):
+//!
+//! * `Isa::Scalar` keeps the exact sequential loops the kernels have
+//!   always run — bit-for-bit, so every bit-identity guarantee
+//!   (serial == team, oracle comparisons) is preserved when SIMD is
+//!   off.
+//! * `Isa::Avx2` runs f64x4 lanes (`_mm256_fmadd_pd`, two independent
+//!   accumulators to cover the FMA latency chain).
+//! * `Isa::Avx512` runs f64x8 lanes (`_mm512_fmadd_pd`).
+//!
+//! SIMD reassociates the reduction (lane-parallel partial sums), so
+//! with `simd != off` correctness gating switches from bit-identity to
+//! a normwise epsilon against the naive oracle — see the dual-gating
+//! tests in `frontal::dense`. Serial-vs-team bit-identity still holds
+//! *within* a fixed [`KernelCfg`], because tile ownership (not
+//! reduction order) is what the team partitions.
+
+use anyhow::{bail, Result};
+
+use super::dense::BLOCK;
+
+/// SIMD dispatch policy, set per backend (CLI: `--simd auto|off|force`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Scalar loops only: all bit-identity guarantees hold.
+    Off,
+    /// Use the best ISA the CPU reports; fall back to scalar.
+    #[default]
+    Auto,
+    /// Require a SIMD ISA; resolving fails on plain-scalar hardware.
+    Force,
+}
+
+impl SimdMode {
+    /// Parse a CLI/env spelling (`auto`, `off`, `force`).
+    pub fn parse(s: &str) -> Result<SimdMode> {
+        match s {
+            "off" => Ok(SimdMode::Off),
+            "auto" => Ok(SimdMode::Auto),
+            "force" => Ok(SimdMode::Force),
+            other => bail!("bad simd mode {other:?} (want auto|off|force)"),
+        }
+    }
+
+    /// Canonical spelling (inverse of [`SimdMode::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Off => "off",
+            SimdMode::Auto => "auto",
+            SimdMode::Force => "force",
+        }
+    }
+}
+
+/// Instruction set the microkernels dispatch to. Resolved once (at
+/// backend construction) and threaded through the tile primitives —
+/// the per-tile code never re-detects features.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Isa {
+    /// Portable sequential loops (the PR 2/3 kernels, bit-for-bit).
+    #[default]
+    Scalar,
+    /// AVX2 + FMA, f64x4.
+    Avx2,
+    /// AVX-512F, f64x8.
+    Avx512,
+}
+
+impl Isa {
+    /// Resolve a policy against the running CPU.
+    pub fn detect(mode: SimdMode) -> Isa {
+        match mode {
+            SimdMode::Off => Isa::Scalar,
+            SimdMode::Auto | SimdMode::Force => best_available(),
+        }
+    }
+
+    /// Human-readable name for occupancy printouts and bench rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2+fma f64x4",
+            Isa::Avx512 => "avx512f f64x8",
+        }
+    }
+
+    /// Short machine-readable tag (bench JSON, backend names).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    /// True for any non-scalar dispatch.
+    pub fn is_simd(self) -> bool {
+        !matches!(self, Isa::Scalar)
+    }
+
+    /// `Σ x[t]·y[t]` over `min(x.len(), y.len())` terms.
+    ///
+    /// The scalar branch is the exact sequential `+=` loop of the
+    /// original kernels (ascending `t`, one accumulator), so pure-dot
+    /// call sites are bitwise unchanged under `Isa::Scalar`.
+    #[inline]
+    pub fn dot(self, x: &[f64], y: &[f64]) -> f64 {
+        match self {
+            Isa::Scalar => {
+                let mut s = 0.0;
+                for (&a, &b) in x.iter().zip(y.iter()) {
+                    s += a * b;
+                }
+                s
+            }
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the variant is only constructed after the
+            // matching runtime feature check in `best_available`.
+            Isa::Avx2 => unsafe { x86::dot_avx2(x, y) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: as above.
+            Isa::Avx512 => unsafe { x86::dot_avx512(x, y) },
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => unreachable!("non-scalar Isa on a non-x86_64 build"),
+        }
+    }
+
+    /// `init - Σ x[t]·y[t]`.
+    ///
+    /// The scalar branch keeps the original *sequential subtract*
+    /// (`s -= x[t]·y[t]` per term) — which is **not** the same bit
+    /// pattern as `init - dot(x, y)` — so fold-sub call sites
+    /// (`factor_diag`, the trsm solves) are also bitwise unchanged
+    /// under `Isa::Scalar`.
+    #[inline]
+    pub fn fold_sub(self, init: f64, x: &[f64], y: &[f64]) -> f64 {
+        match self {
+            Isa::Scalar => {
+                let mut s = init;
+                for (&a, &b) in x.iter().zip(y.iter()) {
+                    s -= a * b;
+                }
+                s
+            }
+            _ => init - self.dot(x, y),
+        }
+    }
+}
+
+/// Best ISA the running CPU supports (x86_64 only; everything else is
+/// scalar). Called once per backend construction, not per tile.
+#[cfg(target_arch = "x86_64")]
+fn best_available() -> Isa {
+    if is_x86_feature_detected!("avx512f") {
+        Isa::Avx512
+    } else if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn best_available() -> Isa {
+    Isa::Scalar
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// f64x4 dot product: two independent FMA accumulators (the FMA
+    /// latency chain is ~4 cycles, throughput 2/cycle — one chain
+    /// would leave half the units idle), scalar tail.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` + `fma` at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len().min(y.len());
+        let px = x.as_ptr();
+        let py = y.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(py.add(i)), acc0);
+            acc1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(px.add(i + 4)),
+                _mm256_loadu_pd(py.add(i + 4)),
+                acc1,
+            );
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(px.add(i)), _mm256_loadu_pd(py.add(i)), acc0);
+            i += 4;
+        }
+        let acc = _mm256_add_pd(acc0, acc1);
+        let lo = _mm256_castpd256_pd128(acc);
+        let hi = _mm256_extractf128_pd::<1>(acc);
+        let pair = _mm_add_pd(lo, hi);
+        let one = _mm_add_sd(pair, _mm_unpackhi_pd(pair, pair));
+        let mut s = _mm_cvtsd_f64(one);
+        while i < n {
+            s += *px.add(i) * *py.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// f64x8 dot product, same accumulator scheme as [`dot_avx2`].
+    ///
+    /// # Safety
+    /// Caller must have verified `avx512f` at runtime.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot_avx512(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len().min(y.len());
+        let px = x.as_ptr();
+        let py = y.as_ptr();
+        let mut acc0 = _mm512_setzero_pd();
+        let mut acc1 = _mm512_setzero_pd();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm512_fmadd_pd(_mm512_loadu_pd(px.add(i)), _mm512_loadu_pd(py.add(i)), acc0);
+            acc1 = _mm512_fmadd_pd(
+                _mm512_loadu_pd(px.add(i + 8)),
+                _mm512_loadu_pd(py.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm512_fmadd_pd(_mm512_loadu_pd(px.add(i)), _mm512_loadu_pd(py.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = _mm512_reduce_add_pd(_mm512_add_pd(acc0, acc1));
+        while i < n {
+            s += *px.add(i) * *py.add(i);
+            i += 1;
+        }
+        s
+    }
+}
+
+/// Kernel configuration as the user states it (CLI `--block`/`--simd`);
+/// [`FrontConfig::resolve`] turns it into a dispatched [`KernelCfg`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrontConfig {
+    /// Tile edge for the blocked kernels.
+    pub block: usize,
+    /// SIMD policy.
+    pub simd: SimdMode,
+}
+
+impl Default for FrontConfig {
+    fn default() -> FrontConfig {
+        FrontConfig { block: BLOCK, simd: SimdMode::Auto }
+    }
+}
+
+impl FrontConfig {
+    /// The historical configuration: `BLOCK`-edge tiles, scalar loops.
+    pub fn scalar() -> FrontConfig {
+        FrontConfig { block: BLOCK, simd: SimdMode::Off }
+    }
+
+    /// Resolve the policy against the running CPU. Fails on an
+    /// out-of-range block or on `force` without SIMD hardware.
+    pub fn resolve(self) -> Result<KernelCfg> {
+        if !(8..=1024).contains(&self.block) {
+            bail!("front block size {} out of range (want 8..=1024)", self.block);
+        }
+        let isa = Isa::detect(self.simd);
+        if self.simd == SimdMode::Force && !isa.is_simd() {
+            bail!("simd=force but no SIMD ISA is available on this CPU");
+        }
+        Ok(KernelCfg { block: self.block, isa })
+    }
+}
+
+/// Resolved kernel configuration: what the tile primitives actually
+/// run. One value per backend, shared verbatim between the serial path
+/// and every [`super::FrontTeamJob`] it plans — serial == team
+/// bit-identity is *per configuration*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCfg {
+    /// Tile edge.
+    pub block: usize,
+    /// Dispatched instruction set.
+    pub isa: Isa,
+}
+
+impl Default for KernelCfg {
+    fn default() -> KernelCfg {
+        KernelCfg { block: BLOCK, isa: Isa::Scalar }
+    }
+}
+
+impl KernelCfg {
+    /// Resolve the `MALLTREE_SIMD` env override (used by the CI test
+    /// matrix to run the whole suite under both gates). Unset or
+    /// unparsable values mean scalar — the historical default — so
+    /// plain `cargo test` keeps its bit-identity semantics.
+    pub fn from_env() -> KernelCfg {
+        let mode = std::env::var("MALLTREE_SIMD")
+            .ok()
+            .and_then(|v| SimdMode::parse(&v).ok())
+            .unwrap_or(SimdMode::Off);
+        // env force is best-effort (CI images vary); the CLI's `--simd
+        // force` goes through FrontConfig::resolve and stays strict
+        KernelCfg { block: BLOCK, isa: Isa::detect(mode) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize, phase: f64) -> Vec<f64> {
+        (0..n).map(|i| ((i as f64) * 0.37 + phase).sin()).collect()
+    }
+
+    #[test]
+    fn scalar_dot_matches_sequential_loop_bitwise() {
+        let x = ramp(131, 0.1);
+        let y = ramp(131, 2.3);
+        let mut want = 0.0;
+        for t in 0..x.len() {
+            want += x[t] * y[t];
+        }
+        assert_eq!(Isa::Scalar.dot(&x, &y).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn scalar_fold_sub_matches_sequential_loop_bitwise() {
+        let x = ramp(77, 0.4);
+        let y = ramp(77, 1.9);
+        let mut want = 42.5;
+        for t in 0..x.len() {
+            want -= x[t] * y[t];
+        }
+        assert_eq!(Isa::Scalar.fold_sub(42.5, &x, &y).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn detected_isa_dot_matches_scalar_normwise() {
+        let isa = Isa::detect(SimdMode::Auto);
+        // covers every tail length around the 4/8/16 lane boundaries
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 64, 100, 257] {
+            let x = ramp(n, 0.2);
+            let y = ramp(n, 4.1);
+            let simd = isa.dot(&x, &y);
+            let scalar = Isa::Scalar.dot(&x, &y);
+            let scale = scalar.abs().max(1.0);
+            assert!(
+                (simd - scalar).abs() / scale < 1e-13 * (n.max(1) as f64),
+                "isa={isa:?} n={n}: {simd} vs {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_mode_parse_round_trips_and_rejects() {
+        for m in [SimdMode::Off, SimdMode::Auto, SimdMode::Force] {
+            assert_eq!(SimdMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SimdMode::parse("fast").is_err());
+        assert!(SimdMode::parse("").is_err());
+    }
+
+    #[test]
+    fn front_config_resolves_and_validates() {
+        assert_eq!(
+            FrontConfig::scalar().resolve().unwrap(),
+            KernelCfg { block: BLOCK, isa: Isa::Scalar }
+        );
+        assert!(FrontConfig { block: 4, simd: SimdMode::Off }.resolve().is_err());
+        assert!(FrontConfig { block: 2048, simd: SimdMode::Off }.resolve().is_err());
+        // auto never fails, whatever the hardware
+        FrontConfig { block: 32, simd: SimdMode::Auto }.resolve().unwrap();
+    }
+
+    #[test]
+    fn off_mode_always_resolves_scalar() {
+        assert_eq!(Isa::detect(SimdMode::Off), Isa::Scalar);
+    }
+}

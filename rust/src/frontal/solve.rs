@@ -83,7 +83,7 @@ mod tests {
         let perm = order::nested_dissection_2d(k);
         let at = symbolic::analyze(&a, &perm, amalg).unwrap();
         let ap = a.permute_sym(&at.symbolic.perm).unwrap();
-        let f = factorize(&at, &ap, &RustBackend).unwrap();
+        let f = factorize(&at, &ap, &RustBackend::default()).unwrap();
         (at, ap, f)
     }
 
@@ -133,7 +133,7 @@ mod tests {
         let perm = order::nested_dissection_3d(4);
         let at = symbolic::analyze(&a, &perm, 2).unwrap();
         let ap = a.permute_sym(&at.symbolic.perm).unwrap();
-        let f = factorize(&at, &ap, &RustBackend).unwrap();
+        let f = factorize(&at, &ap, &RustBackend::default()).unwrap();
         let x_true: Vec<f64> = (0..ap.n).map(|i| 1.0 + i as f64 * 0.01).collect();
         let b = ap.matvec(&x_true);
         let x = solve_sn(&at, &f, &b);

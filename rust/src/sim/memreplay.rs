@@ -274,7 +274,7 @@ mod tests {
             let at = symbolic::analyze(&a, &perm, amalg).unwrap();
             let ap = a.permute_sym(&at.symbolic.perm).unwrap();
             let mut arena = FrontArena::for_tree(&at);
-            let f = factorize_with_arena(&at, &ap, &RustBackend, &mut arena).unwrap();
+            let f = factorize_with_arena(&at, &ap, &RustBackend::default(), &mut arena).unwrap();
             assert!(residual(&at, &ap, &f) < 1e-12);
 
             let w = crate::mem::MemWeights::from_symbolic(&at);

@@ -17,64 +17,101 @@ pub fn read_matrix_market(path: &Path) -> Result<CscMatrix> {
     parse_matrix_market(std::io::BufReader::new(f))
 }
 
+/// Preallocation ceiling for the triplet buffer: a hostile size line
+/// claiming `usize::MAX` nonzeros must not commit gigabytes before the
+/// per-entry checks run. Real entries grow the vec past this honestly.
+const PREALLOC_CAP: usize = 1 << 20;
+
 /// Parse Matrix Market content from any reader.
+///
+/// Every error carries the 1-based line number it was detected on.
+/// Duplicate `(i, j)` entries are accepted and **summed** — the
+/// [`CscMatrix::from_triplets`] policy, matching the usual convention
+/// for assembled FEM output. Symmetric files must store the lower
+/// triangle only (the MM spec's storage rule); the strict upper
+/// triangle is rejected, and the mirror is expanded on read.
 pub fn parse_matrix_market<R: BufRead>(reader: R) -> Result<CscMatrix> {
-    let mut lines = reader.lines();
-    let header = lines
-        .next()
-        .context("empty file")??
-        .to_lowercase();
+    let mut lines = reader.lines().enumerate().map(|(k, l)| (k + 1, l));
+    let (_, header) = lines.next().context("empty file")?;
+    let header = header.context("line 1: unreadable (not UTF-8?)")?.to_lowercase();
     let fields: Vec<&str> = header.split_whitespace().collect();
     if fields.len() < 5 || fields[0] != "%%matrixmarket" || fields[1] != "matrix" {
-        bail!("not a MatrixMarket matrix header: {header}");
+        bail!("line 1: not a MatrixMarket matrix header: {header}");
     }
     if fields[2] != "coordinate" || fields[3] != "real" && fields[3] != "integer" {
-        bail!("only coordinate real/integer supported, got {header}");
+        bail!("line 1: only coordinate real/integer supported, got {header}");
     }
     let symmetric = match fields[4] {
         "general" => false,
         "symmetric" => true,
-        other => bail!("unsupported symmetry {other}"),
+        other => bail!("line 1: unsupported symmetry {other}"),
     };
 
-    let mut size_line = None;
-    for line in lines.by_ref() {
-        let line = line?;
+    let mut size = None;
+    for (ln, line) in lines.by_ref() {
+        let line = line.with_context(|| format!("line {ln}: unreadable"))?;
         let trimmed = line.trim();
         if trimmed.is_empty() || trimmed.starts_with('%') {
             continue;
         }
-        size_line = Some(trimmed.to_string());
+        size = Some((ln, trimmed.to_string()));
         break;
     }
-    let size_line = size_line.context("missing size line")?;
+    let (size_ln, size_line) = size.context("missing size line")?;
     let dims: Vec<usize> = size_line
         .split_whitespace()
         .map(|t| t.parse::<usize>())
         .collect::<Result<_, _>>()
-        .with_context(|| format!("bad size line: {size_line}"))?;
+        .with_context(|| format!("line {size_ln}: bad size line: {size_line}"))?;
     if dims.len() != 3 {
-        bail!("size line needs 3 fields: {size_line}");
+        bail!("line {size_ln}: size line needs 3 fields: {size_line}");
     }
     let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
     if rows != cols {
-        bail!("only square matrices supported ({rows}x{cols})");
+        bail!("line {size_ln}: only square matrices supported ({rows}x{cols})");
+    }
+    if rows.checked_mul(cols).is_none() {
+        bail!("line {size_ln}: dimensions {rows}x{cols} overflow");
     }
 
-    let mut triplets = Vec::with_capacity(if symmetric { 2 * nnz } else { nnz });
+    let want = if symmetric { nnz.saturating_mul(2) } else { nnz };
+    let mut triplets = Vec::with_capacity(want.min(PREALLOC_CAP));
     let mut seen = 0usize;
-    for line in lines {
-        let line = line?;
+    for (ln, line) in lines {
+        let line = line.with_context(|| format!("line {ln}: unreadable"))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
-        let mut it = t.split_whitespace();
-        let i: usize = it.next().context("bad entry line")?.parse()?;
-        let j: usize = it.next().context("bad entry line")?.parse()?;
-        let v: f64 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+        if seen == nnz {
+            bail!("line {ln}: more than the declared {nnz} entries");
+        }
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        if toks.len() != 2 && toks.len() != 3 {
+            bail!("line {ln}: entry needs `i j [value]`, got {} fields", toks.len());
+        }
+        let i: usize = toks[0]
+            .parse()
+            .with_context(|| format!("line {ln}: bad row index {:?}", toks[0]))?;
+        let j: usize = toks[1]
+            .parse()
+            .with_context(|| format!("line {ln}: bad column index {:?}", toks[1]))?;
+        // two-token entries are pattern-style: value defaults to 1
+        let v: f64 = match toks.get(2) {
+            Some(s) => s.parse().with_context(|| format!("line {ln}: bad value {s:?}"))?,
+            None => 1.0,
+        };
+        if !v.is_finite() {
+            bail!("line {ln}: non-finite value {v}");
+        }
         if i < 1 || j < 1 || i > rows || j > cols {
-            bail!("entry ({i},{j}) out of bounds");
+            bail!("line {ln}: entry ({i},{j}) out of bounds for {rows}x{cols}");
+        }
+        if symmetric && i < j {
+            bail!(
+                "line {ln}: symmetric file stores upper-triangle entry ({i},{j}); \
+                 the spec requires lower-triangle storage"
+            );
         }
         let (i, j) = (i - 1, j - 1);
         triplets.push((i, j, v));
@@ -169,5 +206,107 @@ mod tests {
         assert!(parse_matrix_market(Cursor::new(bad)).is_err());
         let bad2 = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
         assert!(parse_matrix_market(Cursor::new(bad2)).is_err());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let bad = "%%MatrixMarket matrix coordinate real general\n% c\n2 2 2\n1 1 1.0\n9 1 1.0\n";
+        let err = parse_matrix_market(Cursor::new(bad)).unwrap_err();
+        assert!(format!("{err:#}").contains("line 5"), "got: {err:#}");
+        let bad_idx = "%%MatrixMarket matrix coordinate real general\n2 2 1\nx 1 1.0\n";
+        let err = parse_matrix_market(Cursor::new(bad_idx)).unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "got: {err:#}");
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        // four tokens on an entry line
+        let four = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0 7\n";
+        assert!(parse_matrix_market(Cursor::new(four)).is_err());
+        // non-finite value
+        let nan = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nan\n";
+        assert!(parse_matrix_market(Cursor::new(nan)).is_err());
+        let inf = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 inf\n";
+        assert!(parse_matrix_market(Cursor::new(inf)).is_err());
+        // more entries than declared
+        let extra = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n2 2 1.0\n";
+        let err = parse_matrix_market(Cursor::new(extra)).unwrap_err();
+        assert!(format!("{err:#}").contains("more than"), "got: {err:#}");
+        // index too large for usize
+        let huge = "%%MatrixMarket matrix coordinate real general\n2 2 1\n99999999999999999999999 1 1.0\n";
+        assert!(parse_matrix_market(Cursor::new(huge)).is_err());
+    }
+
+    #[test]
+    fn symmetric_rejects_upper_triangle_storage() {
+        let bad = "%%MatrixMarket matrix coordinate real symmetric\n2 2 1\n1 2 1.0\n";
+        let err = parse_matrix_market(Cursor::new(bad)).unwrap_err();
+        assert!(format!("{err:#}").contains("lower-triangle"), "got: {err:#}");
+    }
+
+    #[test]
+    fn duplicate_entries_are_summed() {
+        let dup = "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 2.0\n1 1 3.0\n2 2 1.0\n";
+        let a = parse_matrix_market(Cursor::new(dup)).unwrap();
+        assert_eq!(a.get(0, 0), 5.0);
+        assert_eq!(a.get(1, 1), 1.0);
+    }
+
+    #[test]
+    fn pattern_style_entries_default_to_one() {
+        let pat = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1\n2 2\n";
+        let a = parse_matrix_market(Cursor::new(pat)).unwrap();
+        assert_eq!(a.get(0, 0), 1.0);
+        assert_eq!(a.get(1, 1), 1.0);
+    }
+
+    #[test]
+    fn huge_declared_nnz_does_not_preallocate() {
+        // a lying size line: the parse must fail on the count check,
+        // not OOM on Vec::with_capacity
+        let lie = format!(
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 {}\n1 1 1.0\n",
+            usize::MAX
+        );
+        assert!(parse_matrix_market(Cursor::new(lie)).is_err());
+    }
+
+    #[test]
+    fn fuzz_mutated_bytes_never_panic() {
+        use crate::util::prop;
+        // Seed corpus: a valid symmetric file. Mutations overwrite,
+        // insert (including bytes >= 0x80 → invalid UTF-8, which
+        // BufRead::lines surfaces as an io::Error), and truncate; the
+        // property is that parsing always returns Ok/Err — no panic,
+        // no abort from oversized preallocation.
+        let base = SYM.as_bytes();
+        prop::check(
+            prop::Config { cases: 300, seed: 0x4D4D_2026 },
+            "mm_parse_total_on_mutated_bytes",
+            |r| {
+                let mut buf = base.to_vec();
+                for _ in 0..=r.below(4) {
+                    match r.below(3) {
+                        0 => {
+                            let p = r.below(buf.len());
+                            buf[p] = (r.next_u64() & 0xFF) as u8;
+                        }
+                        1 => {
+                            let p = r.below(buf.len() + 1);
+                            buf.insert(p, (r.next_u64() & 0xFF) as u8);
+                        }
+                        _ => {
+                            buf.truncate(r.below(buf.len()));
+                            buf.push(b'\n');
+                        }
+                    }
+                }
+                buf
+            },
+            |buf| {
+                let _ = parse_matrix_market(Cursor::new(buf));
+                Ok(())
+            },
+        );
     }
 }

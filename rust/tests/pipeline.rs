@@ -92,12 +92,12 @@ fn pm_dominates_baselines_on_real_trees() {
 fn executors_match_reference_on_every_problem() {
     for (name, at, ap) in problems() {
         let pm = PmSchedule::for_tree(&at.tree, 0.9, &Profile::constant(8.0));
-        let reference = factorize(&at, &ap, &RustBackend).unwrap();
-        let (serial, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend).unwrap();
+        let reference = factorize(&at, &ap, &RustBackend::default()).unwrap();
+        let (serial, _) = execute_serial(&at, &ap, &pm.schedule, &RustBackend::default()).unwrap();
         let (parallel, _) =
-            execute_parallel(&at, &ap, &pm.schedule, &RustBackend, 4).unwrap();
+            execute_parallel(&at, &ap, &pm.schedule, &RustBackend::default(), 4).unwrap();
         let (malleable, report) =
-            execute_malleable(&at, &ap, &pm.schedule, &RustBackend, 4).unwrap();
+            execute_malleable(&at, &ap, &pm.schedule, &RustBackend::default(), 4).unwrap();
         let r_ref = residual(&at, &ap, &reference);
         let r_ser = residual(&at, &ap, &serial);
         let r_par = residual(&at, &ap, &parallel);

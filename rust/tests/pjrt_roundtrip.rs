@@ -55,7 +55,7 @@ fn partial_factor_matches_rust_backend_exact_sizes() {
     for (n, k) in [(32usize, 16usize), (64, 32), (128, 64)] {
         let a = random_spd(n, (n + k) as u64);
         let got = backend.partial(&a, n, k).expect("pjrt partial");
-        let want = RustBackend.partial(&a, n, k).unwrap();
+        let want = RustBackend::default().partial(&a, n, k).unwrap();
         let max_dev = |x: &[f64], y: &[f64]| {
             x.iter()
                 .zip(y)
@@ -76,7 +76,7 @@ fn padded_sizes_are_exact() {
     for (n, k) in [(20usize, 7usize), (48, 16), (100, 40), (33, 17)] {
         let a = random_spd(n, (3 * n + k) as u64);
         let got = backend.partial(&a, n, k).expect("pjrt partial padded");
-        let want = RustBackend.partial(&a, n, k).unwrap();
+        let want = RustBackend::default().partial(&a, n, k).unwrap();
         let max_dev = got
             .schur
             .iter()
