@@ -113,8 +113,8 @@ fn main() {
     for (name, dag) in &dags {
         let on = MachineModel::default();
         let off = MachineModel { core_rate: 1.0, bandwidth: f64::INFINITY };
-        let (a_on, _) = fit_alpha(&timing_curve(dag, 20, &on), 10.0);
-        let (a_off, _) = fit_alpha(&timing_curve(dag, 20, &off), 10.0);
+        let (a_on, _) = fit_alpha(&timing_curve(dag, 20, &on), 10.0).expect("alpha fit");
+        let (a_off, _) = fit_alpha(&timing_curve(dag, 20, &off), 10.0).expect("alpha fit");
         table.row(&[
             name.to_string(),
             format!("{a_on:.3}"),

@@ -26,7 +26,7 @@ fn main() {
             .map(|&n| {
                 let dag = KernelDag::qr(m_rows.div_ceil(b), n.div_ceil(b), b);
                 let curve = timing_curve(&dag, p_max, &machine);
-                let (alpha, fit) = fit_alpha(&curve, 10.0);
+                let (alpha, fit) = fit_alpha(&curve, 10.0).expect("alpha fit");
                 (n, curve, alpha, fit.r2)
             })
             .collect::<Vec<_>>()

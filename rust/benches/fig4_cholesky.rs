@@ -24,7 +24,7 @@ fn main() {
         for &n in &sizes {
             let dag = KernelDag::cholesky(n.div_ceil(b), b);
             let curve = timing_curve(&dag, p_max, &machine);
-            let (alpha, fit) = fit_alpha(&curve, 10.0);
+            let (alpha, fit) = fit_alpha(&curve, 10.0).expect("alpha fit");
             let t1 = curve[0].1;
             let tmax = curve.last().unwrap().1;
             let pick = |p: usize| -> String {

@@ -20,8 +20,8 @@ fn main() {
         for &(m, n) in &sizes {
             let dag = KernelDag::frontal(m, n, 32, true);
             let curve = timing_curve(&dag, p_max, &machine);
-            let (alpha, _) = fit_alpha(&curve, 10.0);
-            let (alpha4, _) = fit_alpha(&curve, 4.0);
+            let (alpha, _) = fit_alpha(&curve, 10.0).expect("alpha fit");
+            let (alpha4, _) = fit_alpha(&curve, 4.0).expect("alpha fit");
             let pick = |p: usize| -> String {
                 curve
                     .iter()

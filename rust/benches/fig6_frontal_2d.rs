@@ -19,7 +19,7 @@ fn main() {
         for &(m, n) in &sizes {
             let dag = KernelDag::frontal(m, n, 256, false);
             let curve = timing_curve(&dag, p_max, &machine);
-            let (alpha, _) = fit_alpha(&curve, 20.0);
+            let (alpha, _) = fit_alpha(&curve, 20.0).expect("alpha fit");
             let pick = |p: usize| -> String {
                 curve
                     .iter()

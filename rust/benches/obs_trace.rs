@@ -1,0 +1,261 @@
+//! §Obs harness (EXPERIMENTS.md E22): the observability layer pays its
+//! way. Four sections, all hard-asserted, land in **`BENCH_obs.json`**:
+//!
+//! * **overhead** — the same malleable factorization with the Null
+//!   sink vs the Buffer sink; recording the full span timeline must
+//!   cost < 3% wall time (with a 10 ms additive allowance so sub-50ms
+//!   CI runs don't flake on scheduler jitter).
+//! * **α recovery, model spans** — the shared DES traced at several
+//!   processor counts under a known α; the spans are noiseless, so
+//!   [`malltree::obs::calibrate`] must recover α to 1e-3 (and a
+//!   fortiori the ±0.05 acceptance band).
+//! * **α recovery, noisy wall spans** — a synthetic wall-clock trace
+//!   with 5% lognormal duration noise; the fit must land within ±0.05
+//!   of the planted exponent and recover the planted unit cost.
+//! * **drift** — a real traced execution calibrated against itself:
+//!   per-width drift rows under the assumed vs the fitted α, plus a
+//!   Chrome-JSON round-trip of the executor log.
+//!
+//! `MALLTREE_BENCH_GRID` scales the overhead problem,
+//! `MALLTREE_BENCH_REPS` the median-of-k timing.
+
+mod bench_util;
+
+use bench_util::{bench_output_path, env_usize, header};
+use malltree::exec::execute_malleable_traced;
+use malltree::frontal::RustBackend;
+use malltree::metrics::Table;
+use malltree::model::TaskTree;
+use malltree::obs::{
+    self, chrome_trace, parse_chrome_trace, Span, SpanKind, TimeUnit, TraceLog, TraceSink,
+};
+use malltree::sched::{PmSchedule, Profile};
+use malltree::sim::{simulate_traced, Policy};
+use malltree::sparse::{gen, order, symbolic, AssemblyTree, CscMatrix};
+use malltree::util::rng::Rng;
+
+const ASSUMED_ALPHA: f64 = 0.9;
+const OVERHEAD_LIMIT_PCT: f64 = 3.0;
+/// Additive jitter allowance for the overhead assert (seconds).
+const OVERHEAD_SLACK_S: f64 = 0.010;
+
+fn analyze_2d(k: usize) -> (AssemblyTree, CscMatrix) {
+    let a = gen::grid_laplacian_2d(k);
+    let perm = order::nested_dissection_2d(k);
+    let at = symbolic::analyze(&a, &perm, 4).unwrap();
+    let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+    (at, ap)
+}
+
+/// Median-of-k wall time of one traced factorization with `sink`.
+fn run_median(
+    k: usize,
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &malltree::sched::Schedule,
+    backend: &RustBackend,
+    workers: usize,
+    sink: TraceSink,
+) -> f64 {
+    let mut times: Vec<f64> = (0..k.max(1) + 1)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            let (_, r) = execute_malleable_traced(at, ap, schedule, backend, workers, sink)
+                .expect("factorization");
+            assert_eq!(r.trace.is_some(), sink.enabled(), "sink controls trace presence");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.remove(0); // warmup
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn random_tree(rng: &mut Rng, n: usize) -> TaskTree {
+    let parents: Vec<usize> = (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+    let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 100.0)).collect();
+    TaskTree::from_parents(&parents, &lens).unwrap()
+}
+
+fn main() {
+    header("obs_trace", "span tracing: overhead, alpha recovery, model drift (§Obs)");
+    let grid = env_usize("GRID", 40);
+    let reps = env_usize("REPS", 7);
+    let workers = 4usize;
+    let mut json: Vec<String> = Vec::new();
+
+    // -- overhead: Null sink vs Buffer sink on the same problem ------
+    let (at, ap) = analyze_2d(grid);
+    let backend = RustBackend::default();
+    let pm = PmSchedule::for_tree(&at.tree, ASSUMED_ALPHA, &Profile::constant(workers as f64));
+    let t_plain = run_median(reps, &at, &ap, &pm.schedule, &backend, workers, TraceSink::Null);
+    let t_traced = run_median(reps, &at, &ap, &pm.schedule, &backend, workers, TraceSink::Buffer);
+    let overhead_pct = (t_traced / t_plain - 1.0) * 100.0;
+    println!(
+        "overhead: grid2d {grid}, {} fronts, {workers} workers: \
+         null {t_plain:.4}s, buffer {t_traced:.4}s ({overhead_pct:+.2}%)",
+        at.tree.len()
+    );
+    assert!(
+        overhead_pct < OVERHEAD_LIMIT_PCT || t_traced - t_plain < OVERHEAD_SLACK_S,
+        "span recording costs {overhead_pct:.2}% (> {OVERHEAD_LIMIT_PCT}%) \
+         and {:.4}s (> {OVERHEAD_SLACK_S}s jitter allowance)",
+        t_traced - t_plain
+    );
+    json.push(format!("  \"grid\": {grid}, \"reps\": {reps}, \"workers\": {workers}"));
+    json.push(format!(
+        "  \"t_plain_s\": {t_plain:.6e}, \"t_traced_s\": {t_traced:.6e}, \
+         \"overhead_pct\": {overhead_pct:.4}"
+    ));
+
+    // -- alpha recovery from noiseless model spans -------------------
+    let alpha_true = 0.85;
+    let mut rng = Rng::new(0x0B5E);
+    let trees: Vec<TaskTree> = (0..4).map(|_| random_tree(&mut rng, 400)).collect();
+    let mut model_logs: Vec<TraceLog> = Vec::new();
+    for tree in &trees {
+        for p in [4.0, 8.0, 16.0, 32.0] {
+            for pol in [Policy::Pm, Policy::Proportional] {
+                let (_, log) = simulate_traced(tree, alpha_true, p, pol);
+                log.validate().expect("DES trace invariants");
+                model_logs.push(log);
+            }
+        }
+    }
+    let refs: Vec<&TraceLog> = model_logs.iter().collect();
+    let cal_model = obs::calibrate(&refs, None).expect("model-span calibration");
+    println!(
+        "alpha from DES spans: fitted {:.5} vs planted {alpha_true} \
+         (r² {:.6}, {} samples)",
+        cal_model.alpha, cal_model.fit.r2, cal_model.samples
+    );
+    assert!(
+        (cal_model.alpha - alpha_true).abs() < 1e-3,
+        "noiseless model spans must recover alpha near-exactly, got {}",
+        cal_model.alpha
+    );
+    assert!((cal_model.alpha - alpha_true).abs() < 0.05, "acceptance band");
+    json.push(format!(
+        "  \"alpha_true_model\": {alpha_true}, \"alpha_fit_model\": {:.6}, \
+         \"model_r2\": {:.6}, \"model_samples\": {}",
+        cal_model.alpha, cal_model.fit.r2, cal_model.samples
+    ));
+
+    // -- alpha recovery from noisy wall spans ------------------------
+    let unit_cost_ns = 2.5; // planted ns per flop at one processor
+    let mut log = TraceLog::new("synthetic", TimeUnit::WallNs, 8);
+    let mut cursor = 0.0f64;
+    for team in [1.0f64, 2.0, 4.0, 8.0] {
+        for i in 0..300u32 {
+            let flops = rng.log_uniform(1e6, 1e9);
+            let noise = (0.05 * rng.normal()).exp();
+            let dur = unit_cost_ns * flops / team.powf(alpha_true) * noise;
+            log.push(Span {
+                kind: SpanKind::Factor,
+                task: i,
+                worker: rng.below(8) as u32,
+                team,
+                flops,
+                start: cursor,
+                end: cursor + dur,
+            });
+            cursor += dur;
+        }
+    }
+    log.validate().expect("synthetic trace invariants");
+    let cal_noisy = obs::calibrate(&[&log], None).expect("noisy calibration");
+    println!(
+        "alpha from noisy wall spans: fitted {:.4} vs planted {alpha_true}, \
+         unit cost {:.3} ns/flop vs planted {unit_cost_ns}",
+        cal_noisy.alpha, cal_noisy.unit_cost
+    );
+    assert!(
+        (cal_noisy.alpha - alpha_true).abs() < 0.05,
+        "5% lognormal noise must not push the fit out of the ±0.05 band, got {}",
+        cal_noisy.alpha
+    );
+    assert!(
+        (cal_noisy.unit_cost - unit_cost_ns).abs() / unit_cost_ns < 0.10,
+        "unit cost off by >10%: {}",
+        cal_noisy.unit_cost
+    );
+    json.push(format!(
+        "  \"alpha_true_noisy\": {alpha_true}, \"alpha_fit_noisy\": {:.6}, \
+         \"unit_cost_planted\": {unit_cost_ns}, \"unit_cost_fitted\": {:.6}",
+        cal_noisy.alpha, cal_noisy.unit_cost
+    ));
+
+    // -- drift: the executor calibrated against its own telemetry ----
+    let widths: Vec<usize> =
+        at.symbolic.supernodes.iter().map(|s| s.front_order()).collect();
+    let mut exec_logs: Vec<TraceLog> = Vec::new();
+    for w in [2usize, workers] {
+        let pmw = PmSchedule::for_tree(&at.tree, ASSUMED_ALPHA, &Profile::constant(w as f64));
+        let (_, rep) =
+            execute_malleable_traced(&at, &ap, &pmw.schedule, &backend, w, TraceSink::Buffer)
+                .expect("traced run");
+        exec_logs.push(rep.trace.expect("buffer sink records"));
+    }
+    // Chrome-JSON round-trip is bit-exact on the real executor log
+    let back = parse_chrome_trace(&chrome_trace(&exec_logs[1]).unwrap()).unwrap();
+    assert_eq!(back, exec_logs[1], "chrome export must round-trip");
+    let exec_refs: Vec<&TraceLog> = exec_logs.iter().collect();
+    let cal_exec = obs::calibrate(&exec_refs, Some(&widths)).expect("exec calibration");
+    let m_assumed = PmSchedule::for_tree(&at.tree, ASSUMED_ALPHA, &Profile::constant(workers as f64))
+        .schedule
+        .makespan;
+    // a noisy host can fit an exponent outside the model's (0, 1]
+    // domain; the schedule re-solve needs a legal α
+    let fitted_for_solve = cal_exec.alpha.clamp(0.05, 1.0);
+    let m_fitted = PmSchedule::for_tree(&at.tree, fitted_for_solve, &Profile::constant(workers as f64))
+        .schedule
+        .makespan;
+    let drift = obs::drift_report(
+        &exec_logs[1],
+        &widths,
+        &cal_exec,
+        ASSUMED_ALPHA,
+        m_assumed,
+        m_fitted,
+    );
+    assert!(!drift.rows.is_empty(), "drift report must bucket at least one front");
+    let mut table = Table::new(&["front width", "fronts", "err% (assumed)", "err% (fitted)"]);
+    for r in &drift.rows {
+        let hi = if r.hi == usize::MAX { "inf".to_string() } else { r.hi.to_string() };
+        table.row(&[
+            format!("({}, {hi}]", r.lo),
+            format!("{}", r.fronts),
+            format!("{:.1}", r.err_assumed_pct),
+            format!("{:.1}", r.err_fitted_pct),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "exec fit: alpha {:.3} (r² {:.4}, {} samples); makespan err \
+         {:.1}% assumed / {:.1}% fitted",
+        cal_exec.alpha,
+        cal_exec.fit.r2,
+        cal_exec.samples,
+        drift.makespan_err_assumed_pct,
+        drift.makespan_err_fitted_pct
+    );
+    json.push(format!(
+        "  \"alpha_fit_exec\": {:.6}, \"exec_r2\": {:.6}, \"exec_samples\": {}, \
+         \"drift_assumed_pct\": {:.4}, \"drift_fitted_pct\": {:.4}, \
+         \"makespan_err_assumed_pct\": {:.4}, \"makespan_err_fitted_pct\": {:.4}",
+        cal_exec.alpha,
+        cal_exec.fit.r2,
+        cal_exec.samples,
+        drift.overall_assumed_pct,
+        drift.overall_fitted_pct,
+        drift.makespan_err_assumed_pct,
+        drift.makespan_err_fitted_pct
+    ));
+
+    let out = bench_output_path("BENCH_obs.json");
+    let body = format!("{{\n{}\n}}\n", json.join(",\n"));
+    match std::fs::write(&out, &body) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

@@ -24,7 +24,7 @@ fn main() {
 
     let alpha_of = |dag: &KernelDag| -> f64 {
         let curve = timing_curve(dag, p_max, &machine);
-        fit_alpha(&curve, 10.0).0
+        fit_alpha(&curve, 10.0).expect("alpha fit").0
     };
 
     let mut table = Table::new(&["N", "QR M=1024", "QR M=4096", "Cholesky"]);

@@ -22,8 +22,8 @@ fn main() {
         for &(m, n) in &sizes {
             let c1 = timing_curve(&KernelDag::frontal(m, n, 32, true), p_max, &machine);
             let c2 = timing_curve(&KernelDag::frontal(m, n, 256, false), p_max, &machine);
-            let (a1, _) = fit_alpha(&c1, 10.0);
-            let (a2, _) = fit_alpha(&c2, 20.0);
+            let (a1, _) = fit_alpha(&c1, 10.0).expect("alpha fit");
+            let (a2, _) = fit_alpha(&c2, 20.0).expect("alpha fit");
             ok &= a2 > a1;
             table.row(&[format!("{m}x{n}"), format!("{a1:.3}"), format!("{a2:.3}")]);
         }

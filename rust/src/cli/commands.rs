@@ -513,6 +513,23 @@ pub fn simulate(args: &mut Args) -> Result<()> {
         }
     }
     print!("{}", table.render());
+    if let Some(path) = args.get("trace-out").map(std::path::PathBuf::from) {
+        // trace one representative corpus tree through the shared DES
+        // (PM policy) and export its model-time span timeline
+        use crate::sim::{simulate_traced, Policy};
+        let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+        let Some((tname, tree)) = corpus.first() else {
+            bail!("--trace-out needs a non-empty corpus (--trees >= 1)");
+        };
+        let (res, log) = simulate_traced(tree, alpha, p, Policy::Pm);
+        crate::obs::write_chrome_trace(&log, &path)?;
+        print!("{}", crate::obs::timeline_summary(&log));
+        println!(
+            "traced {tname} (alpha={alpha}, model makespan {:.4e}) to {}",
+            res.makespan,
+            path.display()
+        );
+    }
     if let Some(spec) = args.get("profile") {
         // step processor profile: per α, the corpus-mean PM makespan
         // under the profile (Theorem 6 θ-inversion) next to the
@@ -782,12 +799,17 @@ pub fn batch(args: &mut Args) -> Result<()> {
 
 pub fn factorize(args: &mut Args) -> Result<()> {
     use crate::exec::{
-        execute_malleable, execute_malleable_capped, execute_malleable_faulty, execute_parallel,
-        execute_serial, FaultPlan,
+        execute_malleable_capped_traced, execute_malleable_faulty_traced, execute_malleable_traced,
+        execute_parallel_traced, execute_serial_traced, FaultPlan,
     };
     use crate::frontal::{multifrontal, FrontConfig, NaiveBackend, PjrtBackend, RustBackend, SimdMode};
+    use crate::obs::TraceSink;
 
     let (name, a, perm) = load_problem(args)?;
+    // --trace-out FILE.json: record a wall-clock span timeline and
+    // export it as a Chrome trace (MALLTREE_TRACE=on|off overrides)
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let sink = TraceSink::from_env(trace_out.is_some());
     let amalg = args.get_usize("amalgamate", 4)?;
     let alpha = args.get_alpha("alpha", DEFAULT_ALPHA)?;
     let p = args.get_f64_positive("p", 8.0)?;
@@ -858,31 +880,31 @@ pub fn factorize(args: &mut Args) -> Result<()> {
             let rt = std::sync::Arc::new(crate::runtime::Runtime::cpu(&dir)?);
             println!("pjrt platform: {}", rt.platform());
             let backend = PjrtBackend::new(rt);
-            execute_serial(&at, &ap, &pm.schedule, &backend)?
+            execute_serial_traced(&at, &ap, &pm.schedule, &backend, sink)?
         }
         "naive" if fault_plan.is_some() => {
             let plan = fault_plan.as_ref().expect("guarded by is_some");
-            execute_malleable_faulty(&at, &ap, &pm.schedule, &NaiveBackend, workers, plan)?
+            execute_malleable_faulty_traced(&at, &ap, &pm.schedule, &NaiveBackend, workers, plan, sink)?
         }
         "naive" if malleable && mem_cap > 0 => {
-            execute_malleable_capped(&at, &ap, &pm.schedule, &NaiveBackend, workers, mem_cap)?
+            execute_malleable_capped_traced(&at, &ap, &pm.schedule, &NaiveBackend, workers, mem_cap, sink)?
         }
         "naive" if malleable => {
-            execute_malleable(&at, &ap, &pm.schedule, &NaiveBackend, workers)?
+            execute_malleable_traced(&at, &ap, &pm.schedule, &NaiveBackend, workers, sink)?
         }
-        "naive" => execute_parallel(&at, &ap, &pm.schedule, &NaiveBackend, workers)?,
+        "naive" => execute_parallel_traced(&at, &ap, &pm.schedule, &NaiveBackend, workers, sink)?,
         "blocked" | "rust" if fault_plan.is_some() => {
             let plan = fault_plan.as_ref().expect("guarded by is_some");
-            execute_malleable_faulty(&at, &ap, &pm.schedule, &rust_backend, workers, plan)?
+            execute_malleable_faulty_traced(&at, &ap, &pm.schedule, &rust_backend, workers, plan, sink)?
         }
         "blocked" | "rust" if malleable && mem_cap > 0 => {
-            execute_malleable_capped(&at, &ap, &pm.schedule, &rust_backend, workers, mem_cap)?
+            execute_malleable_capped_traced(&at, &ap, &pm.schedule, &rust_backend, workers, mem_cap, sink)?
         }
         "blocked" | "rust" if malleable => {
-            execute_malleable(&at, &ap, &pm.schedule, &rust_backend, workers)?
+            execute_malleable_traced(&at, &ap, &pm.schedule, &rust_backend, workers, sink)?
         }
         "blocked" | "rust" => {
-            execute_parallel(&at, &ap, &pm.schedule, &rust_backend, workers)?
+            execute_parallel_traced(&at, &ap, &pm.schedule, &rust_backend, workers, sink)?
         }
         other => bail!("unknown --backend {other} (blocked|naive|pjrt)"),
     };
@@ -908,10 +930,133 @@ pub fn factorize(args: &mut Args) -> Result<()> {
             );
         }
     }
+    if let Some(path) = &trace_out {
+        match &report.trace {
+            Some(log) => {
+                crate::obs::write_chrome_trace(log, path)?;
+                print!("{}", crate::obs::timeline_summary(log));
+                println!("trace written to {}", path.display());
+            }
+            None => println!("--trace-out ignored: tracing disabled via MALLTREE_TRACE"),
+        }
+    }
     let r = multifrontal::residual(&at, &ap, &fact);
     println!("relative residual |PAP' - LL'|_F / |A|_F = {r:.3e}");
     if r > 1e-3 {
         bail!("residual too large");
+    }
+    Ok(())
+}
+
+/// Close the α loop from the system's own telemetry (DESIGN.md §17):
+/// factorize the problem with worker teams of several sizes, fit the
+/// malleability exponent from the recorded Factor spans, and report
+/// the drift between the `L/p^α` model and the executed timeline
+/// under the assumed vs the fitted α — plus a step `--profile` spec
+/// distilled from the trace's occupancy curve.
+pub fn calibrate(args: &mut Args) -> Result<()> {
+    use crate::exec::execute_malleable_traced;
+    use crate::frontal::{FrontConfig, RustBackend, SimdMode};
+    use crate::obs::{self, TraceSink};
+
+    let (name, a, perm) = load_problem(args)?;
+    let amalg = args.get_usize("amalgamate", 4)?;
+    let assumed = args.get_alpha("alpha", DEFAULT_ALPHA)?;
+    let sweep_spec = args.get("workers-sweep").unwrap_or("2,4,8").to_string();
+    let mut sweep = Vec::new();
+    for tok in sweep_spec.split(',') {
+        let w: usize =
+            tok.trim().parse().with_context(|| format!("--workers-sweep {sweep_spec:?}"))?;
+        if w == 0 {
+            bail!("--workers-sweep entries must be >= 1");
+        }
+        sweep.push(w);
+    }
+    sweep.sort_unstable();
+    sweep.dedup();
+    if sweep.len() < 2 {
+        bail!("--workers-sweep needs >= 2 distinct team sizes (one size cannot identify alpha)");
+    }
+    let block = args.get_usize("block", crate::frontal::dense::BLOCK)?;
+    let simd = SimdMode::parse(args.get("simd").unwrap_or("auto")).context("--simd")?;
+    let backend = RustBackend::with_config(FrontConfig { block, simd })?;
+    let at: AssemblyTree = symbolic::analyze(&a, &perm, amalg)?;
+    let ap = a.permute_sym(&at.symbolic.perm)?;
+    let widths: Vec<usize> = at.symbolic.supernodes.iter().map(|s| s.front_order()).collect();
+    println!(
+        "calibrate {name}: {} supernodes, assumed alpha {assumed}, worker sweep {sweep:?}",
+        at.tree.len()
+    );
+    let mut logs = Vec::new();
+    for &w in &sweep {
+        let pm = PmSchedule::for_tree(&at.tree, assumed, &Profile::constant(w as f64));
+        // tracing is the whole point of this command, so the sink is
+        // unconditional (MALLTREE_TRACE only gates opportunistic runs)
+        let (_, report) =
+            execute_malleable_traced(&at, &ap, &pm.schedule, &backend, w, TraceSink::Buffer)?;
+        let log = report.trace.context("traced run returned no trace")?;
+        println!("  workers {w}: wall {:.3}s, {} spans", report.wall_seconds, log.spans.len());
+        logs.push((w, log));
+    }
+    let refs: Vec<&obs::TraceLog> = logs.iter().map(|(_, l)| l).collect();
+    let cal = obs::calibrate(&refs, Some(&widths))?;
+    println!(
+        "fitted alpha = {:.3} (r² = {:.4}, {} samples, unit cost {:.3e} ns/flop) vs assumed {assumed}",
+        cal.alpha, cal.fit.r2, cal.samples, cal.unit_cost
+    );
+    if !cal.per_width.is_empty() {
+        let mut t = Table::new(&["front width", "samples", "alpha", "r2"]);
+        for wf in &cal.per_width {
+            let hi = if wf.hi == usize::MAX { "∞".to_string() } else { wf.hi.to_string() };
+            t.row(&[
+                format!("({}, {hi}]", wf.lo),
+                format!("{}", wf.samples),
+                format!("{:.3}", wf.alpha),
+                format!("{:.4}", wf.r2),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    // drift on the widest-team run: predicted vs executed durations
+    // and the §7 mis-specification cost, measured instead of simulated
+    let (w_last, log_last) = logs.last().expect("sweep has >= 2 entries");
+    let m_assumed =
+        PmSchedule::for_tree(&at.tree, assumed, &Profile::constant(*w_last as f64)).schedule.makespan;
+    // a noisy host can fit an exponent outside the model's (0, 1]
+    // domain; the schedule re-solve needs a legal α
+    let fitted_for_solve = cal.alpha.clamp(0.05, 1.0);
+    let m_fitted = PmSchedule::for_tree(&at.tree, fitted_for_solve, &Profile::constant(*w_last as f64))
+        .schedule
+        .makespan;
+    let drift = obs::drift_report(log_last, &widths, &cal, assumed, m_assumed, m_fitted);
+    let mut t = Table::new(&["front width", "fronts", "err% (assumed)", "err% (fitted)"]);
+    for r in &drift.rows {
+        let hi = if r.hi == usize::MAX { "∞".to_string() } else { r.hi.to_string() };
+        t.row(&[
+            format!("({}, {hi}]", r.lo),
+            format!("{}", r.fronts),
+            format!("{:.1}", r.err_assumed_pct),
+            format!("{:.1}", r.err_fitted_pct),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "per-front drift: {:.1}% under assumed alpha, {:.1}% under fitted; makespan \
+         ({w_last} workers): measured {:.3e} ns, predicted {:.3e} (assumed, {:.1}% off) \
+         / {:.3e} (fitted, {:.1}% off)",
+        drift.overall_assumed_pct,
+        drift.overall_fitted_pct,
+        drift.measured_makespan,
+        drift.predicted_assumed,
+        drift.makespan_err_assumed_pct,
+        drift.predicted_fitted,
+        drift.makespan_err_fitted_pct,
+    );
+    let (_, spec) = obs::profile_from_trace(log_last, 8, cal.unit_cost)?;
+    println!("occupancy profile (feed back via --profile): {spec}");
+    if let Some(path) = args.get("trace-out").map(std::path::PathBuf::from) {
+        obs::write_chrome_trace(log_last, &path)?;
+        println!("trace ({w_last} workers) written to {}", path.display());
     }
     Ok(())
 }
@@ -948,7 +1093,7 @@ pub fn kernelsim(args: &mut Args) -> Result<()> {
     }
     print!("{}", table.render());
     let pcap = args.get_f64_positive("pcap", 10.0)?;
-    let (alpha, fit) = fit_alpha(&curve, pcap);
+    let (alpha, fit) = fit_alpha(&curve, pcap)?;
     println!("alpha = {alpha:.3} (r² = {:.4}, p <= {pcap})", fit.r2);
     Ok(())
 }
@@ -1071,7 +1216,7 @@ pub fn figures(args: &mut Args) -> Result<()> {
     ];
     for (name, dag) in cases {
         let curve = timing_curve(&dag, 20, &machine);
-        let (alpha, fit) = fit_alpha(&curve, 10.0);
+        let (alpha, fit) = fit_alpha(&curve, 10.0)?;
         table.row(&[
             name.to_string(),
             format!("{}", dag.len()),
@@ -1195,6 +1340,84 @@ mod tests {
         // non-default tile edge so the cfg actually flows through
         let mut a = args("--grid2d 8 --block 32 --simd off --workers 2 --malleable");
         factorize(&mut a).unwrap();
+    }
+
+    #[test]
+    fn calibrate_rejects_degenerate_sweeps() {
+        for bad in [
+            "--grid2d 6 --workers-sweep 4",
+            "--grid2d 6 --workers-sweep 2,2",
+            "--grid2d 6 --workers-sweep 0,2",
+            "--grid2d 6 --workers-sweep banana",
+            "--workers-sweep 1,2", // no problem selected
+        ] {
+            let mut a = args(bad);
+            assert!(calibrate(&mut a).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn calibrate_fits_alpha_from_its_own_traced_runs() {
+        let dir = std::env::temp_dir().join("malltree_cli_calibrate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("calibrate_trace.json");
+        let _ = std::fs::remove_file(&path);
+        // the calibrate sink is unconditional, so this holds even under
+        // the CI MALLTREE_TRACE=off test leg
+        let mut a = args(&format!(
+            "--grid2d 8 --workers-sweep 1,2 --simd off --trace-out {}",
+            path.display()
+        ));
+        calibrate(&mut a).unwrap();
+        let json = std::fs::read_to_string(&path).unwrap();
+        let log = crate::obs::parse_chrome_trace(&json).unwrap();
+        log.validate().unwrap();
+        assert_eq!(log.source, "exec");
+        assert!(log.spans_of(crate::obs::SpanKind::Factor).count() > 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn factorize_and_simulate_export_chrome_traces() {
+        let dir = std::env::temp_dir().join("malltree_cli_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let fpath = dir.join("factorize_trace.json");
+        let _ = std::fs::remove_file(&fpath);
+        let mut a = args(&format!(
+            "--grid2d 8 --simd off --workers 2 --malleable --trace-out {}",
+            fpath.display()
+        ));
+        factorize(&mut a).unwrap();
+        // the factorize sink honors MALLTREE_TRACE, so the CI trace-off
+        // leg legitimately writes nothing
+        let forced_off = matches!(
+            std::env::var("MALLTREE_TRACE").ok().as_deref(),
+            Some("off") | Some("0") | Some("false")
+        );
+        if forced_off {
+            assert!(!fpath.exists(), "null sink must not write a trace");
+        } else {
+            let log =
+                crate::obs::parse_chrome_trace(&std::fs::read_to_string(&fpath).unwrap()).unwrap();
+            log.validate().unwrap();
+            assert_eq!(log.source, "exec");
+            assert_eq!(log.workers, 2);
+            let _ = std::fs::remove_file(&fpath);
+        }
+
+        let spath = dir.join("simulate_trace.json");
+        let _ = std::fs::remove_file(&spath);
+        let mut b = args(&format!(
+            "--trees 2 --max-nodes 3000 --trace-out {}",
+            spath.display()
+        ));
+        simulate(&mut b).unwrap();
+        let log =
+            crate::obs::parse_chrome_trace(&std::fs::read_to_string(&spath).unwrap()).unwrap();
+        log.validate().unwrap();
+        assert_eq!(log.source, "sim-des");
+        let _ = std::fs::remove_file(&spath);
     }
 
     #[test]

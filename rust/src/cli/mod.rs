@@ -26,6 +26,8 @@
 //!                    [--policy fair|makespan] [--admit Q]
 //!                    [--deadline-ratio R]
 //!                    [--overload reject|defer|degrade]   online multi-tenant service replay
+//! malltree calibrate --grid2d 24 [--workers-sweep 2,4,8]
+//!                    [--trace-out FILE.json]             fit alpha from the system's own spans
 //! malltree kernelsim --kind cholesky --n 20000 --b 256   Figure 2-6-style T(p) curve
 //! malltree dataset   --out DIR --trees 600               write the workload corpus
 //! malltree figures                                       regenerate every paper table/figure
@@ -52,6 +54,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "factorize" => commands::factorize(&mut args),
         "memory" => commands::memory(&mut args),
         "serve" => commands::serve(&mut args),
+        "calibrate" => commands::calibrate(&mut args),
         "kernelsim" => commands::kernelsim(&mut args),
         "dataset" => commands::dataset(&mut args),
         "figures" => commands::figures(&mut args),
@@ -75,6 +78,7 @@ fn usage() -> String {
      \x20 factorize  end-to-end numeric multifrontal factorization\n\
      \x20 memory     memory-aware planning: Liu traversal, caps, Pareto front\n\
      \x20 serve      online multi-tenant service: arrivals, admission, deadlines\n\
+     \x20 calibrate  fit alpha + a drift report from traced factorizations\n\
      \x20 kernelsim  Figure 2-6 kernel timing curves + alpha fit\n\
      \x20 dataset    write the workload corpus to disk\n\
      \x20 figures    regenerate every paper table/figure (see benches for timing)\n\
@@ -94,6 +98,9 @@ fn usage() -> String {
      \x20 factorize: --matrix FILE.mtx (alias of --mtx), --block N (tile edge,\n\
      \x20   8..=1024), --simd auto|off|force (SIMD microkernel dispatch; the\n\
      \x20   run prints the ISA actually dispatched),\n\
+     \x20 --trace-out FILE.json (factorize/simulate/calibrate: export the span\n\
+     \x20   timeline as a Chrome trace; MALLTREE_TRACE=on|off overrides),\n\
+     \x20 calibrate: --workers-sweep W0,W1,.. (traced team sizes to fit from),\n\
      \x20 distribute: --nodes N -p CORES | --speeds P0,P1,.. (heterogeneous),\n\
      \x20 --lambda L (Alg 12 approximation parameter), --mapping pm|prop|cp,\n\
      \x20 --net LAT:BW (price cross-node transfers; BW may be inf),\n\

@@ -42,6 +42,7 @@ pub use report::ExecReport;
 pub use shares::integer_shares;
 pub use team::{occupancy_by_width, OccupancyRow, TeamPlan};
 pub use worker::{
-    execute_malleable, execute_malleable_capped, execute_malleable_faulty, execute_parallel,
-    execute_serial,
+    execute_malleable, execute_malleable_capped, execute_malleable_capped_traced,
+    execute_malleable_faulty, execute_malleable_faulty_traced, execute_malleable_traced,
+    execute_parallel, execute_parallel_traced, execute_serial, execute_serial_traced,
 };

@@ -47,6 +47,12 @@ pub struct ExecReport {
     /// Wall seconds the crew spent in retry backoff, summed over
     /// workers.
     pub recovery_seconds: f64,
+    /// Wall-clock span trace of the run (`None` unless a buffering
+    /// [`crate::obs::TraceSink`] was passed to a `*_traced` entry
+    /// point). Sorted; one Assemble + one Factor span per executed
+    /// front, Retry per failed attempt, Stall per memory-gate wait and
+    /// backoff sleep.
+    pub trace: Option<crate::obs::TraceLog>,
 }
 
 impl ExecReport {
@@ -151,6 +157,7 @@ mod tests {
             retries: 0,
             lost_flops: 0.0,
             recovery_seconds: 0.0,
+            trace: None,
         }
     }
 
@@ -201,6 +208,51 @@ mod tests {
         assert!(s.contains("retries=3"), "{s}");
         assert!(s.contains("lost_flops=1.000e7"), "{s}");
         assert!(s.contains("recovery=0.250s"), "{s}");
+    }
+
+    #[test]
+    fn timed_trace_subsumes_legacy_team_log() {
+        use crate::obs::{Span, SpanKind, TimeUnit, TraceLog};
+        // three fronts straddling two occupancy buckets
+        let widths = [32usize, 300, 32];
+        let teams = [1usize, 6, 2];
+        let team_log: Vec<(usize, usize)> =
+            widths.iter().copied().zip(teams.iter().copied()).collect();
+        let mut trace = TraceLog::new("exec", TimeUnit::WallNs, 8);
+        for (i, &t) in teams.iter().enumerate() {
+            // Assemble spans are noise the rebuilt view must ignore
+            trace.push(Span {
+                kind: SpanKind::Assemble,
+                task: i as u32,
+                worker: i as u32,
+                team: 1.0,
+                flops: 0.0,
+                start: 2.0 * i as f64,
+                end: 2.0 * i as f64 + 0.5,
+            });
+            trace.push(Span {
+                kind: SpanKind::Factor,
+                task: i as u32,
+                worker: i as u32,
+                team: t as f64,
+                flops: 1e6,
+                start: 2.0 * i as f64 + 0.5,
+                end: 2.0 * i as f64 + 1.5,
+            });
+        }
+        let rebuilt = trace.team_log(&widths);
+        assert_eq!(rebuilt, team_log, "Factor spans must rebuild the legacy log");
+        let r = ExecReport {
+            malleable: true,
+            team_log: team_log.clone(),
+            trace: Some(trace),
+            ..base()
+        };
+        // both views agree bucket-for-bucket and in the mean
+        assert_eq!(occupancy_by_width(&rebuilt), r.occupancy());
+        let avg_from_spans =
+            rebuilt.iter().map(|&(_, t)| t).sum::<usize>() as f64 / rebuilt.len() as f64;
+        assert!((avg_from_spans - r.avg_team()).abs() < 1e-12);
     }
 
     #[test]

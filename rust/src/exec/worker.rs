@@ -29,6 +29,7 @@ use crate::frontal::arena::{FrontArena, MemGauge};
 use crate::frontal::backend::FrontBackend;
 use crate::frontal::dense::FrontTeamJob;
 use crate::frontal::multifrontal::{assemble_front_arena, factor_front_arena, Factorization};
+use crate::obs::trace::{Span, SpanKind, TimeUnit, TraceLog, TraceSink};
 use crate::sched::Schedule;
 use crate::sparse::{AssemblyTree, CscMatrix};
 
@@ -81,6 +82,21 @@ pub fn execute_serial(
     schedule: &Schedule,
     backend: &dyn FrontBackend,
 ) -> Result<(Factorization, super::ExecReport)> {
+    execute_serial_traced(at, ap, schedule, backend, TraceSink::Null)
+}
+
+/// [`execute_serial`] with span tracing: one Assemble + one Factor
+/// span per front on the single worker track (`factor_front_arena`
+/// reports its assembly seconds, which split the front's wall window).
+/// The sink is taken verbatim — the env kill-switch is CLI-level
+/// ([`TraceSink::from_env`]).
+pub fn execute_serial_traced(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &dyn FrontBackend,
+    sink: TraceSink,
+) -> Result<(Factorization, super::ExecReport)> {
     let n = at.tree.len();
     let order = dispatch_order(at, schedule);
     let mut arena = FrontArena::for_tree(at);
@@ -88,13 +104,45 @@ pub fn execute_serial(
     let mut panels: Vec<Vec<f64>> = vec![Vec::new(); n];
     let mut flops = 0.0;
     let mut assembly = 0.0;
+    let tracing = sink.enabled();
+    let mut spans: Vec<Span> = Vec::new();
     let t0 = Instant::now();
     for &v in &order {
         let s = v as usize;
-        assembly += factor_front_arena(at, ap, s, backend, &mut arena, &mut contrib, &mut panels)?;
+        let f0 = if tracing { t0.elapsed().as_nanos() as f64 } else { 0.0 };
+        let asm = factor_front_arena(at, ap, s, backend, &mut arena, &mut contrib, &mut panels)?;
+        assembly += asm;
         flops += at.symbolic.supernodes[s].flops();
+        if tracing {
+            let end = t0.elapsed().as_nanos() as f64;
+            let split = (f0 + asm * 1e9).min(end);
+            spans.push(Span {
+                kind: SpanKind::Assemble,
+                task: v,
+                worker: 0,
+                team: 1.0,
+                flops: 0.0,
+                start: f0,
+                end: split,
+            });
+            spans.push(Span {
+                kind: SpanKind::Factor,
+                task: v,
+                worker: 0,
+                team: 1.0,
+                flops: at.symbolic.supernodes[s].flops(),
+                start: split,
+                end,
+            });
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
+    let trace = tracing.then(|| {
+        let mut log = TraceLog::new("exec", TimeUnit::WallNs, 1);
+        log.spans = spans;
+        log.sort();
+        log
+    });
     Ok((
         Factorization { panels, n: ap.n },
         super::ExecReport {
@@ -113,6 +161,7 @@ pub fn execute_serial(
             retries: 0,
             lost_flops: 0.0,
             recovery_seconds: 0.0,
+            trace,
         },
     ))
 }
@@ -244,6 +293,9 @@ struct ReadyQueue {
     lost_flops: f64,
     /// wall seconds the crew spent in retry backoff
     recovery_seconds: f64,
+    /// merged per-worker span buffers (tracing runs only; workers
+    /// append their local vectors here once, at exit)
+    spans: Vec<Span>,
 }
 
 /// Re-round the schedule shares of the active fronts into team sizes
@@ -284,7 +336,19 @@ pub fn execute_parallel<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, false, None, None)
+    run_crew(at, ap, schedule, backend, workers, false, None, None, TraceSink::Null)
+}
+
+/// [`execute_parallel`] with span tracing (see [`execute_malleable_traced`]).
+pub fn execute_parallel_traced<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+    sink: TraceSink,
+) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, false, None, None, sink)
 }
 
 /// Malleable thread-crew execution: like [`execute_parallel`], but the
@@ -300,7 +364,26 @@ pub fn execute_malleable<B: FrontBackend + Sync>(
     backend: &B,
     workers: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, true, None, None)
+    run_crew(at, ap, schedule, backend, workers, true, None, None, TraceSink::Null)
+}
+
+/// [`execute_malleable`] with span tracing: with a buffering sink the
+/// crew records wall-clock Assemble / Factor / Retry / Stall spans into
+/// per-worker local buffers (merged once at worker exit — no shared
+/// state on the hot path) and the report carries the sorted
+/// [`TraceLog`]. With [`TraceSink::Null`] the per-front cost is one
+/// untaken branch; the factors are bit-identical either way. The sink
+/// is taken verbatim — `MALLTREE_TRACE` is consulted only by the CLI
+/// via [`TraceSink::from_env`].
+pub fn execute_malleable_traced<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+    sink: TraceSink,
+) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, true, None, None, sink)
 }
 
 /// [`execute_malleable`] with a **memory-cap admission gate**
@@ -322,7 +405,21 @@ pub fn execute_malleable_capped<B: FrontBackend + Sync>(
     workers: usize,
     cap_f64s: usize,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, true, Some(cap_f64s), None)
+    run_crew(at, ap, schedule, backend, workers, true, Some(cap_f64s), None, TraceSink::Null)
+}
+
+/// [`execute_malleable_capped`] with span tracing: memory-gate waits
+/// additionally surface as Stall spans (see [`execute_malleable_traced`]).
+pub fn execute_malleable_capped_traced<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+    cap_f64s: usize,
+    sink: TraceSink,
+) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, true, Some(cap_f64s), None, sink)
 }
 
 /// [`execute_malleable`] under a [`FaultPlan`] — the self-healing mode
@@ -349,7 +446,22 @@ pub fn execute_malleable_faulty<B: FrontBackend + Sync>(
     workers: usize,
     plan: &FaultPlan,
 ) -> Result<(Factorization, super::ExecReport)> {
-    run_crew(at, ap, schedule, backend, workers, true, None, Some(plan))
+    run_crew(at, ap, schedule, backend, workers, true, None, Some(plan), TraceSink::Null)
+}
+
+/// [`execute_malleable_faulty`] with span tracing: failed attempts
+/// surface as Retry spans and backoff sleeps as Stall spans (see
+/// [`execute_malleable_traced`]).
+pub fn execute_malleable_faulty_traced<B: FrontBackend + Sync>(
+    at: &AssemblyTree,
+    ap: &CscMatrix,
+    schedule: &Schedule,
+    backend: &B,
+    workers: usize,
+    plan: &FaultPlan,
+    sink: TraceSink,
+) -> Result<(Factorization, super::ExecReport)> {
+    run_crew(at, ap, schedule, backend, workers, true, None, Some(plan), sink)
 }
 
 /// Lock discipline (both modes): a worker holds the queue mutex only
@@ -370,8 +482,10 @@ fn run_crew<B: FrontBackend + Sync>(
     malleable: bool,
     mem_cap: Option<usize>,
     fault: Option<&FaultPlan>,
+    sink: TraceSink,
 ) -> Result<(Factorization, super::ExecReport)> {
     let n = at.tree.len();
+    let tracing = sink.enabled();
     let workers = workers.max(1);
     // fault plans ride the team path only: retries need the pre-cloned
     // assembly + requeue protocol implemented there
@@ -451,6 +565,7 @@ fn run_crew<B: FrontBackend + Sync>(
         retries: 0,
         lost_flops: 0.0,
         recovery_seconds: 0.0,
+        spans: Vec::new(),
     });
     let cv = Condvar::new();
     let contrib: Vec<OnceSlot> = (0..n).map(|_| OnceSlot::new()).collect();
@@ -475,7 +590,12 @@ fn run_crew<B: FrontBackend + Sync>(
                 let mut local_flops = 0.0f64;
                 let mut local_assembly = 0.0f64;
                 let mut local_recovery = 0.0f64;
+                let mut local_spans: Vec<Span> = Vec::new();
                 loop {
+                    // set while this worker sits memory-blocked on the
+                    // condvar (tracing runs only); closed into a Stall
+                    // span once a duty is found
+                    let mut stall_from: Option<f64> = None;
                     let duty = {
                         let mut st = lock_clean(queue);
                         // one stall episode per continuous memory-blocked
@@ -486,6 +606,7 @@ fn run_crew<B: FrontBackend + Sync>(
                                 st.flops += local_flops;
                                 st.assembly_seconds += local_assembly;
                                 st.recovery_seconds += local_recovery;
+                                st.spans.append(&mut local_spans);
                                 guard.armed = false;
                                 cv.notify_all();
                                 return;
@@ -551,10 +672,31 @@ fn run_crew<B: FrontBackend + Sync>(
                             if !admissible && !st.ready.is_empty() && !stall_counted {
                                 st.mem_stalls += 1;
                                 stall_counted = true;
+                                if tracing {
+                                    stall_from = Some(t0.elapsed().as_nanos() as f64);
+                                }
                             }
                             st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
                         }
                     };
+                    if let Some(from) = stall_from {
+                        // the memory-blocked wait ended: whatever duty
+                        // broke it bounds the Stall window (u32::MAX
+                        // task = the wait ended in a Help seat)
+                        let end = t0.elapsed().as_nanos() as f64;
+                        local_spans.push(Span {
+                            kind: SpanKind::Stall,
+                            task: match &duty {
+                                Duty::Run(v, ..) => *v,
+                                Duty::Help(_) => u32::MAX,
+                            },
+                            worker: w as u32,
+                            team: 0.0,
+                            flops: 0.0,
+                            start: from.min(end),
+                            end,
+                        });
+                    }
                     let (task, team, injected) = match duty {
                         Duty::Help(job) => {
                             // cooperate on the live front until it
@@ -596,7 +738,26 @@ fn run_crew<B: FrontBackend + Sync>(
                     } else {
                         assemble_front_arena(at, ap, s, &mut arena, |c| contrib[c].take());
                     }
-                    local_assembly += ta.elapsed().as_secs_f64();
+                    let asm = ta.elapsed();
+                    local_assembly += asm.as_secs_f64();
+                    // factor-phase start in the t0 frame: assembly end
+                    // (duration_since is pure arithmetic, no syscall)
+                    let f_start = if tracing {
+                        let a0 = ta.duration_since(t0).as_nanos() as f64;
+                        let a1 = a0 + asm.as_nanos() as f64;
+                        local_spans.push(Span {
+                            kind: SpanKind::Assemble,
+                            task,
+                            worker: w as u32,
+                            team: 1.0,
+                            flops: 0.0,
+                            start: a0,
+                            end: a1,
+                        });
+                        a1
+                    } else {
+                        0.0
+                    };
                     if malleable {
                         let mut members = 1usize;
                         let outcome: Result<()> = if injected {
@@ -664,6 +825,24 @@ fn run_crew<B: FrontBackend + Sync>(
                                     arena.release_block(b);
                                 }
                             }
+                        }
+                        if tracing {
+                            // one span per execution attempt: Factor on
+                            // success, Retry on failure (injected or real)
+                            let end = t0.elapsed().as_nanos() as f64;
+                            local_spans.push(Span {
+                                kind: if outcome.is_ok() {
+                                    SpanKind::Factor
+                                } else {
+                                    SpanKind::Retry
+                                },
+                                task,
+                                worker: w as u32,
+                                team: members as f64,
+                                flops: sn.flops(),
+                                start: f_start.min(end),
+                                end,
+                            });
                         }
                         let mut backoff: Option<u64> = None;
                         let mut st = lock_clean(queue);
@@ -734,7 +913,20 @@ fn run_crew<B: FrontBackend + Sync>(
                             if ms > 0 {
                                 std::thread::sleep(Duration::from_millis(ms));
                             }
-                            local_recovery += tr.elapsed().as_secs_f64();
+                            let slept = tr.elapsed();
+                            local_recovery += slept.as_secs_f64();
+                            if tracing {
+                                let s0 = tr.duration_since(t0).as_nanos() as f64;
+                                local_spans.push(Span {
+                                    kind: SpanKind::Stall,
+                                    task,
+                                    worker: w as u32,
+                                    team: 0.0,
+                                    flops: 0.0,
+                                    start: s0,
+                                    end: s0 + slept.as_nanos() as f64,
+                                });
+                            }
                         }
                     } else {
                         // task-parallel path: one worker per front
@@ -757,6 +949,22 @@ fn run_crew<B: FrontBackend + Sync>(
                             Ok(())
                         })();
                         arena.end_front(nf);
+                        if tracing {
+                            let end = t0.elapsed().as_nanos() as f64;
+                            local_spans.push(Span {
+                                kind: if outcome.is_ok() {
+                                    SpanKind::Factor
+                                } else {
+                                    SpanKind::Retry
+                                },
+                                task,
+                                worker: w as u32,
+                                team: 1.0,
+                                flops: sn.flops(),
+                                start: f_start.min(end),
+                                end,
+                            });
+                        }
                         let mut st = lock_clean(queue);
                         st.running.retain(|&r| r != task);
                         match outcome {
@@ -782,11 +990,17 @@ fn run_crew<B: FrontBackend + Sync>(
         }
     });
 
-    let st = queue.into_inner().unwrap_or_else(|p| p.into_inner());
-    if let Some(e) = st.error {
+    let mut st = queue.into_inner().unwrap_or_else(|p| p.into_inner());
+    if let Some(e) = st.error.take() {
         anyhow::bail!("executor failed: {e}");
     }
     let wall = t0.elapsed().as_secs_f64();
+    let trace = tracing.then(|| {
+        let mut log = TraceLog::new("exec", TimeUnit::WallNs, workers);
+        log.spans = std::mem::take(&mut st.spans);
+        log.sort();
+        log
+    });
     Ok((
         Factorization {
             panels: panels.into_iter().map(OnceSlot::into_value).collect(),
@@ -808,6 +1022,7 @@ fn run_crew<B: FrontBackend + Sync>(
             retries: st.retries,
             lost_flops: st.lost_flops,
             recovery_seconds: st.recovery_seconds,
+            trace,
         },
     ))
 }
@@ -1266,6 +1481,140 @@ mod tests {
         fn name(&self) -> &'static str {
             "panicking"
         }
+    }
+
+    #[test]
+    fn null_sink_reports_no_trace_buffer_records_one() {
+        let (at, ap, schedule) = setup(8);
+        let (_, r0) = execute_serial(&at, &ap, &schedule, &RustBackend::default()).unwrap();
+        assert!(r0.trace.is_none(), "untraced entry point grew a trace");
+        let (_, rn) = execute_malleable_traced(
+            &at,
+            &ap,
+            &schedule,
+            &RustBackend::default(),
+            4,
+            TraceSink::Null,
+        )
+        .unwrap();
+        assert!(rn.trace.is_none(), "Null sink recorded spans");
+        let (_, rb) =
+            execute_serial_traced(&at, &ap, &schedule, &RustBackend::default(), TraceSink::Buffer)
+                .unwrap();
+        let log = rb.trace.expect("Buffer sink dropped the trace");
+        log.validate().unwrap();
+        assert_eq!(log.unit, TimeUnit::WallNs);
+        assert_eq!(log.workers, 1);
+        // serial path: one Assemble + one Factor per front, nothing else
+        assert_eq!(log.spans_of(SpanKind::Factor).count(), at.tree.len());
+        assert_eq!(log.spans_of(SpanKind::Assemble).count(), at.tree.len());
+        assert_eq!(log.spans.len(), 2 * at.tree.len());
+    }
+
+    #[test]
+    fn traced_crew_covers_every_front_exactly_once() {
+        // the span-schema property: across randomized problems and crew
+        // sizes, every executed front appears exactly once as a Factor
+        // span with end >= start, and tracing never perturbs the factors
+        check(
+            Config { cases: 4, seed: 0x0B5 },
+            "traced crew emits one Factor span per front",
+            |rng| (rng.range(6, 11), rng.range(2, 6)),
+            |&(k, workers)| {
+                let a = gen::grid_laplacian_2d(k);
+                let perm = order::nested_dissection_2d(k);
+                let at = symbolic::analyze(&a, &perm, 2).unwrap();
+                let ap = a.permute_sym(&at.symbolic.perm).unwrap();
+                let pm = PmSchedule::for_tree(
+                    &at.tree,
+                    DEFAULT_ALPHA,
+                    &Profile::constant(workers as f64),
+                );
+                let (fs, _) =
+                    execute_serial(&at, &ap, &pm.schedule, &RustBackend::default()).unwrap();
+                let (fm, report) = execute_malleable_traced(
+                    &at,
+                    &ap,
+                    &pm.schedule,
+                    &RustBackend::default(),
+                    workers,
+                    TraceSink::Buffer,
+                )
+                .unwrap();
+                for (s, (pa, pb)) in fs.panels.iter().zip(&fm.panels).enumerate() {
+                    for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("snode {s} entry {i}: tracing changed the math"));
+                        }
+                    }
+                }
+                let log = report.trace.as_ref().ok_or("no trace")?;
+                log.validate().map_err(|e| e.to_string())?;
+                let n = at.tree.len();
+                let mut seen = vec![0usize; n];
+                for sp in log.spans_of(SpanKind::Factor) {
+                    if sp.end < sp.start {
+                        return Err(format!("task {}: end {} < start {}", sp.task, sp.end, sp.start));
+                    }
+                    if sp.team < 1.0 {
+                        return Err(format!("task {}: Factor span with team {}", sp.task, sp.team));
+                    }
+                    seen[sp.task as usize] += 1;
+                }
+                if let Some(s) = seen.iter().position(|&c| c != 1) {
+                    return Err(format!("front {s} has {} Factor spans, want 1", seen[s]));
+                }
+                if log.spans_of(SpanKind::Assemble).count() != n {
+                    return Err("Assemble spans do not cover every front".into());
+                }
+                let traced_flops: f64 =
+                    log.spans_of(SpanKind::Factor).map(|s| s.flops).sum();
+                if (traced_flops - report.flops).abs() > 1e-6 * report.flops.max(1.0) {
+                    return Err(format!(
+                        "span flops {traced_flops} disagree with report {}",
+                        report.flops
+                    ));
+                }
+                // the timed log rebuilds the legacy team_log measurement
+                let widths: Vec<usize> =
+                    at.symbolic.supernodes.iter().map(|s| s.front_order()).collect();
+                let mut rebuilt = log.team_log(&widths);
+                let mut legacy = report.team_log.clone();
+                rebuilt.sort_unstable();
+                legacy.sort_unstable();
+                if rebuilt != legacy {
+                    return Err("trace team_log view disagrees with legacy log".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn traced_faulty_run_records_retries_and_backoff_stalls() {
+        let (at, ap, schedule) = setup(8);
+        let n = at.tree.len();
+        let mut plan = FaultPlan::new();
+        plan.parse_inject("every:4:1", n).unwrap();
+        plan.backoff_ms = 0;
+        let (_, report) = execute_malleable_faulty_traced(
+            &at,
+            &ap,
+            &schedule,
+            &RustBackend::default(),
+            4,
+            &plan,
+            TraceSink::Buffer,
+        )
+        .unwrap();
+        assert!(report.retries > 0, "fixture injected nothing");
+        let log = report.trace.expect("no trace from faulty run");
+        log.validate().unwrap();
+        // one Retry span per failed attempt, one backoff Stall each,
+        // and still exactly one Factor span per front
+        assert_eq!(log.spans_of(SpanKind::Retry).count(), report.retries);
+        assert_eq!(log.spans_of(SpanKind::Stall).count(), report.retries);
+        assert_eq!(log.spans_of(SpanKind::Factor).count(), n);
     }
 
     #[test]

@@ -43,6 +43,11 @@
 //! * [`sim`] — simulators: a discrete-event engine for malleable
 //!   schedules (plus a memory-replay mode), and the tiled kernel-DAG
 //!   simulator used to reproduce the paper's §3 speedup measurements;
+//! * [`obs`] — observability: one span schema across the real executor
+//!   (wall clock) and every simulator (model time), Chrome-trace /
+//!   Perfetto export, and α calibrated back from the system's own
+//!   Factor spans (global + per front width, with a model-drift
+//!   report);
 //! * [`workload`] — the assembly-tree dataset surrogate for the
 //!   University of Florida collection used in §7;
 //! * [`metrics`] — statistics, regression (α fitting) and table/boxplot
@@ -58,6 +63,7 @@ pub mod mem;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod online;
 pub mod runtime;
 pub mod sched;

@@ -3,6 +3,8 @@
 //! p_cap` ("We have performed a linear regression on the portion where
 //! p ≤ 10").
 
+use anyhow::{bail, Result};
+
 /// Result of a simple linear regression `y = a + b x`.
 #[derive(Debug, Clone, Copy)]
 pub struct LinearFit {
@@ -13,9 +15,18 @@ pub struct LinearFit {
 }
 
 /// Ordinary least squares on `(x, y)` pairs.
-pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
-    assert_eq!(xs.len(), ys.len());
-    assert!(xs.len() >= 2, "need at least two points");
+///
+/// Degenerate inputs are errors, not NaN: fewer than two points, a
+/// length mismatch, or all-equal `xs` (`sxx == 0` — the slope would be
+/// a silent `NaN`/`inf` division; calibration hits this whenever every
+/// traced front ran at the same team size).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Result<LinearFit> {
+    if xs.len() != ys.len() {
+        bail!("{}:{}: x/y length mismatch ({} vs {})", file!(), line!(), xs.len(), ys.len());
+    }
+    if xs.len() < 2 {
+        bail!("{}:{}: linear fit needs at least two points, got {}", file!(), line!(), xs.len());
+    }
     let n = xs.len() as f64;
     let mx = xs.iter().sum::<f64>() / n;
     let my = ys.iter().sum::<f64>() / n;
@@ -27,24 +38,45 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
         sxy += (x - mx) * (y - my);
         syy += (y - my) * (y - my);
     }
+    if !(sxx > 0.0) {
+        bail!(
+            "{}:{}: degenerate fit — all {} x-values equal {mx} (or non-finite), slope undefined",
+            file!(),
+            line!(),
+            xs.len()
+        );
+    }
     let slope = sxy / sxx;
     let intercept = my - slope * mx;
     let r2 = if syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
-    LinearFit { intercept, slope, r2 }
+    Ok(LinearFit { intercept, slope, r2 })
 }
 
 /// Fit α from `(p, T(p))` samples with `p <= p_cap`
 /// (log–log regression; returns `(alpha, fit)`).
-pub fn fit_alpha(samples: &[(f64, f64)], p_cap: f64) -> (f64, LinearFit) {
+///
+/// Errors when fewer than two samples survive the `p_cap` filter (the
+/// old code panicked on an internal assert) or when every surviving
+/// sample has the same `p` (α unidentifiable).
+pub fn fit_alpha(samples: &[(f64, f64)], p_cap: f64) -> Result<(f64, LinearFit)> {
     let pts: Vec<(f64, f64)> = samples
         .iter()
         .filter(|&&(p, t)| p <= p_cap && p > 0.0 && t > 0.0)
         .map(|&(p, t)| (p.ln(), t.ln()))
         .collect();
+    if pts.len() < 2 {
+        bail!(
+            "{}:{}: alpha fit needs >= 2 samples with 0 < p <= {p_cap} and t > 0, got {} (of {} raw)",
+            file!(),
+            line!(),
+            pts.len(),
+            samples.len()
+        );
+    }
     let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
     let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
-    let fit = linear_fit(&xs, &ys);
-    (-fit.slope, fit)
+    let fit = linear_fit(&xs, &ys)?;
+    Ok((-fit.slope, fit))
 }
 
 #[cfg(test)]
@@ -55,10 +87,38 @@ mod tests {
     fn exact_line_recovered() {
         let xs = [1.0, 2.0, 3.0, 4.0];
         let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
-        let f = linear_fit(&xs, &ys);
+        let f = linear_fit(&xs, &ys).unwrap();
         assert!((f.slope - 3.0).abs() < 1e-12);
         assert!((f.intercept - 2.0).abs() < 1e-12);
         assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_errors_not_nan() {
+        // all-equal xs: sxx == 0 used to yield slope = NaN silently
+        let err = linear_fit(&[2.0, 2.0, 2.0], &[1.0, 5.0, 9.0]).unwrap_err();
+        assert!(err.to_string().contains("degenerate"), "{err}");
+        // too few points (the old code asserted)
+        assert!(linear_fit(&[1.0], &[1.0]).is_err());
+        assert!(linear_fit(&[], &[]).is_err());
+        // length mismatch
+        assert!(linear_fit(&[1.0, 2.0], &[1.0]).is_err());
+        // non-finite xs make sxx NaN — also caught
+        assert!(linear_fit(&[f64::NAN, 1.0], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn fit_alpha_under_filtering_is_an_error_not_a_panic() {
+        // a tight p_cap can leave < 2 samples — must report, not panic
+        let samples = [(1.0, 10.0), (8.0, 2.0), (16.0, 1.2)];
+        let err = fit_alpha(&samples, 0.5).unwrap_err();
+        assert!(err.to_string().contains("alpha fit"), "{err}");
+        // single surviving sample
+        assert!(fit_alpha(&samples, 1.0).is_err());
+        // all samples at one p: unidentifiable
+        assert!(fit_alpha(&[(4.0, 3.0), (4.0, 3.1), (4.0, 2.9)], 10.0).is_err());
+        // empty input
+        assert!(fit_alpha(&[], 10.0).is_err());
     }
 
     #[test]
@@ -67,7 +127,7 @@ mod tests {
         let l = 42.0;
         let samples: Vec<(f64, f64)> =
             (1..=40).map(|p| (p as f64, l / (p as f64).powf(alpha))).collect();
-        let (a, fit) = fit_alpha(&samples, 10.0);
+        let (a, fit) = fit_alpha(&samples, 10.0).unwrap();
         assert!((a - alpha).abs() < 1e-9, "fitted {a}");
         assert!(fit.r2 > 0.999999);
     }
@@ -81,8 +141,8 @@ mod tests {
             .collect();
         let t10 = 100.0 / 10f64.powf(alpha);
         samples.extend((11..=40).map(|p| (p as f64, t10)));
-        let (a_capped, _) = fit_alpha(&samples, 10.0);
-        let (a_all, _) = fit_alpha(&samples, 40.0);
+        let (a_capped, _) = fit_alpha(&samples, 10.0).unwrap();
+        let (a_all, _) = fit_alpha(&samples, 40.0).unwrap();
         assert!((a_capped - alpha).abs() < 1e-9);
         assert!(a_all < alpha - 0.1, "saturation should drag α down: {a_all}");
     }
@@ -96,7 +156,7 @@ mod tests {
                 (p as f64, 50.0 / (p as f64).powf(0.8) * noise)
             })
             .collect();
-        let (a, fit) = fit_alpha(&samples, 10.0);
+        let (a, fit) = fit_alpha(&samples, 10.0).unwrap();
         assert!((a - 0.8).abs() < 0.05, "fitted {a}");
         assert!(fit.r2 > 0.98);
     }

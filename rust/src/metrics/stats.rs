@@ -2,10 +2,13 @@
 //! decile, quartiles and the median of relative distances).
 
 /// Linear-interpolation quantile (`q` in [0, 1]) of unsorted data.
+/// NaN-safe: `total_cmp` orders NaN after every finite value instead
+/// of panicking mid-sort (the PR 3/4 hardening pattern), so a NaN in
+/// the data perturbs only the top quantiles.
 pub fn quantile(data: &[f64], q: f64) -> f64 {
     assert!(!data.is_empty(), "quantile of empty data");
     let mut v = data.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     quantile_sorted(&v, q)
 }
 
@@ -42,7 +45,7 @@ pub struct BoxplotRow {
 impl BoxplotRow {
     pub fn from_data(data: &[f64]) -> BoxplotRow {
         let mut v = data.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         BoxplotRow {
             d10: quantile_sorted(&v, 0.10),
             q25: quantile_sorted(&v, 0.25),
@@ -93,6 +96,17 @@ mod tests {
         assert!((r.median - 50.0).abs() < 1e-12);
         assert!((r.d10 - 10.0).abs() < 1e-12);
         assert!((r.mean - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_survives_nan() {
+        // regression: the partial_cmp().unwrap() sort panicked here.
+        // total_cmp orders NaN last, so lower quantiles stay correct.
+        let data = [2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(quantile(&data, 0.0), 1.0);
+        assert_eq!(quantile(&data, 1.0 / 3.0), 2.0);
+        let r = BoxplotRow::from_data(&data); // must not panic
+        assert_eq!(r.d10, 1.0 + 0.3);
     }
 
     #[test]

@@ -27,6 +27,6 @@ pub mod sim;
 
 pub use model::NetModel;
 pub use sim::{
-    replay_link_faults, simulate_networked, simulate_networked_with_workspace, NetDesResult,
-    NetRecovery, NetReplay, NetSimConfig,
+    replay_link_faults, simulate_networked, simulate_networked_traced,
+    simulate_networked_with_workspace, NetDesResult, NetRecovery, NetReplay, NetSimConfig,
 };

@@ -707,6 +707,16 @@ fn count_cross_edges(tree: &TaskTree, node_of: &[usize]) -> usize {
 }
 
 fn run_engine(ctx: &Ctx, node_of: &[usize], ws: &mut SchedWorkspace) -> Result<NetDesResult> {
+    run_engine_state(ctx, node_of, ws).map(|(r, _)| r)
+}
+
+/// [`run_engine`] keeping the final [`NetState`] — the span derivation
+/// reads per-task delivery/arrival times the public result drops.
+fn run_engine_state(
+    ctx: &Ctx,
+    node_of: &[usize],
+    ws: &mut SchedWorkspace,
+) -> Result<(NetDesResult, NetState)> {
     let n = ctx.tree.len();
     let nn = ctx.net.n_nodes;
     let mut st = NetState {
@@ -748,18 +758,117 @@ fn run_engine(ctx: &Ctx, node_of: &[usize], ws: &mut SchedWorkspace) -> Result<N
     }
     drive(ctx, &mut st, ws)?;
     let makespan = st.completion.iter().fold(0.0f64, |a, &b| a.max(b));
-    Ok(NetDesResult {
+    let res = NetDesResult {
         makespan,
-        completion: st.completion,
+        completion: st.completion.clone(),
         events: st.events,
-        node_finish: st.node_finish,
+        node_finish: st.node_finish.clone(),
         cross_edges: count_cross_edges(ctx.tree, node_of),
         cross_stall: st.cross_stall,
         transfer_stall: st.transfer_stall,
         bytes_moved: st.bytes_moved,
         retransmits: st.retransmits,
         remaps: st.remaps,
-    })
+    };
+    Ok((res, st))
+}
+
+/// Build the model-time span log from a finished engine state: a
+/// Factor span `[delivery-ready, completion]` per task on its *final*
+/// node (post-remap), a Transfer span per delivered cross edge
+/// `[child completion, arrival at the parent's node]` carrying the
+/// shipped words in `flops`, and a Stall span per parent that waited
+/// on the wire (`[last child computed, last child delivered]`). Shares
+/// vary across re-solve segments, so spans carry `team = 0`.
+fn trace_from_state(ctx: &Ctx, st: &NetState) -> crate::obs::TraceLog {
+    use crate::obs::{Span, SpanKind, TimeUnit, TraceLog};
+    let mut log = TraceLog::new("sim-net", TimeUnit::Model, ctx.net.n_nodes);
+    for (v, node) in ctx.tree.nodes.iter().enumerate() {
+        let worker = st.node_of[v] as u32;
+        let end = st.completion[v];
+        log.push(Span {
+            kind: SpanKind::Factor,
+            task: v as u32,
+            worker,
+            team: 0.0,
+            flops: node.len,
+            start: st.ready_all[v].min(end),
+            end,
+        });
+        if st.ready_all[v] > st.ready_comp[v] {
+            log.push(Span {
+                kind: SpanKind::Stall,
+                task: v as u32,
+                worker,
+                team: 0.0,
+                flops: 0.0,
+                start: st.ready_comp[v],
+                end: st.ready_all[v],
+            });
+        }
+        if let Some(p) = node.parent {
+            if st.node_of[v] != st.node_of[p as usize] && st.arrived[v].is_finite() {
+                log.push(Span {
+                    kind: SpanKind::Transfer,
+                    task: v as u32,
+                    worker: st.node_of[p as usize] as u32,
+                    team: 0.0,
+                    flops: ctx.cb[v],
+                    start: st.completion[v].min(st.arrived[v]),
+                    end: st.arrived[v],
+                });
+            }
+        }
+    }
+    log.sort();
+    log
+}
+
+/// [`simulate_networked`] with span emission: the same run plus a
+/// model-time [`crate::obs::TraceLog`] with one track per network
+/// node, Transfer spans for every delivered cross edge, and Stall
+/// spans where the wire gated a parent. On a free network this
+/// delegates to the network-blind engine (bit-identical result) and
+/// derives spans from its completions — transfers are instantaneous
+/// there, so none are emitted.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_networked_traced(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    weights: &MemWeights,
+    net: &NetModel,
+    cfg: &NetSimConfig,
+) -> Result<(NetDesResult, crate::obs::TraceLog)> {
+    let mut ws = SchedWorkspace::new();
+    validate_inputs(tree, platform, node_of, policy, weights, net, cfg)?;
+    if net.is_free() {
+        let res = delegate_free(tree, alpha, platform, node_of, policy, weights, &mut ws);
+        let log = crate::obs::from_completions(
+            "sim-net",
+            tree,
+            &res.completion,
+            None,
+            None,
+            Some(node_of),
+        );
+        return Ok((res, log));
+    }
+    let ctx = Ctx {
+        tree,
+        alpha,
+        policy,
+        cores: (0..platform.num_nodes()).map(|k| platform.node_cores(k)).collect(),
+        cb: &weights.cb,
+        net,
+        cfg,
+        bps: Vec::new(),
+    };
+    let (res, st) = run_engine_state(&ctx, node_of, &mut ws)?;
+    let log = trace_from_state(&ctx, &st);
+    Ok((res, log))
 }
 
 /// Delegate to the network-blind distributed DES (free network): same
@@ -1014,6 +1123,64 @@ mod tests {
         assert_eq!(rep.sim.events, plain.events);
         assert_eq!(rep.link_events, 0);
         assert_eq!(rep.overhead(), 0.0);
+    }
+
+    #[test]
+    fn traced_networked_run_emits_transfers_and_round_trips() {
+        use crate::obs::{chrome_trace, parse_chrome_trace, SpanKind};
+        let t = star();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0usize, 0, 1];
+        let w = MemWeights::uniform(3, 8.0, 4.0);
+        let net = NetModel::uniform(2, 0.5, 1.0);
+        let cfg = NetSimConfig::default();
+        let (res, log) =
+            simulate_networked_traced(&t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &cfg)
+                .unwrap();
+        let plain =
+            simulate_networked(&t, 0.5, &plat, &node_of, Policy::Pm, &w, &net, &cfg).unwrap();
+        assert_eq!(res.makespan.to_bits(), plain.makespan.to_bits());
+        log.validate().unwrap();
+        assert_eq!(log.workers, 2);
+        let factors: Vec<_> = log.spans_of(SpanKind::Factor).collect();
+        assert_eq!(factors.len(), t.len());
+        for s in &factors {
+            assert_eq!(s.worker as usize, node_of[s.task as usize]);
+            assert_eq!(s.end.to_bits(), res.completion[s.task as usize].to_bits());
+        }
+        // one cross edge: task 2 on node 1 feeds the root on node 0
+        let transfers: Vec<_> = log.spans_of(SpanKind::Transfer).collect();
+        assert_eq!(transfers.len(), res.cross_edges);
+        for s in &transfers {
+            assert_eq!(s.task, 2);
+            assert_eq!(s.worker, 0, "transfer span lands on the parent's node");
+            assert!(s.end - s.start >= 0.5, "shipment takes at least the link latency");
+            assert_eq!(s.flops.to_bits(), w.cb[2].to_bits());
+        }
+        assert_eq!(log.makespan().to_bits(), res.makespan.to_bits());
+        assert_eq!(parse_chrome_trace(&chrome_trace(&log)).unwrap(), log);
+    }
+
+    #[test]
+    fn traced_free_network_stalls_match_cross_stall() {
+        use crate::obs::SpanKind;
+        let t = TaskTree::from_parents(&[0, 0, 0], &[2.0, 1.0, 16.0]).unwrap();
+        let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
+        let node_of = vec![0usize, 0, 1];
+        let w = MemWeights::from_task_lens(&t);
+        let net = NetModel::free(2);
+        let cfg = NetSimConfig::default();
+        let (res, log) =
+            simulate_networked_traced(&t, 0.9, &plat, &node_of, Policy::Pm, &w, &net, &cfg)
+                .unwrap();
+        log.validate().unwrap();
+        assert!(res.cross_stall > 0.0, "fixture should make the root wait on node 1");
+        assert_eq!(log.spans_of(SpanKind::Transfer).count(), 0);
+        assert_eq!(log.spans_of(SpanKind::Factor).count(), t.len());
+        assert!(approx_eq(log.total(SpanKind::Stall), res.cross_stall, 1e-12));
+        for s in log.spans_of(SpanKind::Factor) {
+            assert_eq!(s.end.to_bits(), res.completion[s.task as usize].to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Close the α loop: fit the malleability exponent from the system's
+//! own Factor spans (DESIGN.md §17).
+//!
+//! The paper's §3 measures `T(p) = L/p^α` on real kernels and fits α
+//! in log–log space; the whole scheduling stack then *consumes* α as
+//! an input. This module supplies the measurement side from traced
+//! executions: every Factor span carries `(team, duration, flops)`,
+//! so `duration/flops` against `team` is exactly the paper's timing
+//! curve with the front length normalized out — one
+//! [`crate::metrics::regression::fit_alpha`] away from α, globally
+//! and per front-width bucket.
+//!
+//! On top: a *model-drift report* (per-front predicted vs executed
+//! duration, and the PM makespan error under the assumed vs the
+//! fitted α — the §7 mis-specification cost, measured instead of
+//! simulated) and a step [`Profile`] distilled from the trace's
+//! worker-occupancy curve, consumable by the existing `--profile`
+//! flag — telemetry feeding straight back into the scheduler.
+
+use anyhow::{bail, Result};
+
+use super::trace::{SpanKind, TraceLog};
+use crate::metrics::regression::{fit_alpha, LinearFit};
+use crate::metrics::Table;
+use crate::sched::Profile;
+
+/// Front-width bucket edges — mirrors `exec::team::occupancy_by_width`
+/// so calibration tables line up with the occupancy report.
+pub const WIDTH_EDGES: [usize; 5] = [64, 128, 256, 512, usize::MAX];
+
+/// Per-front-width-bucket α fit.
+#[derive(Debug, Clone, Copy)]
+pub struct WidthFit {
+    /// Bucket `[lo, hi)` over front width.
+    pub lo: usize,
+    pub hi: usize,
+    pub samples: usize,
+    pub alpha: f64,
+    pub r2: f64,
+}
+
+/// A fitted malleability model.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Global fitted exponent (`T(p) ∝ p^{-α}`).
+    pub alpha: f64,
+    /// The underlying log–log fit (`r2` is its quality).
+    pub fit: LinearFit,
+    /// Factor samples that survived filtering.
+    pub samples: usize,
+    /// Time per flop at one processor (`e^intercept`, in the trace's
+    /// time unit) — converts model makespans into predicted times.
+    pub unit_cost: f64,
+    /// Per-width-bucket fits (buckets without enough spread are
+    /// omitted rather than reported as garbage).
+    pub per_width: Vec<WidthFit>,
+}
+
+/// Extract `(team, time_per_flop)` calibration samples from Factor
+/// spans. Spans with unknown team, `team < 1` (the sub-processor kink
+/// makes them follow a different law), zero flops, or zero duration
+/// are filtered out.
+pub fn samples_from(logs: &[&TraceLog]) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    for log in logs {
+        for s in log.spans_of(SpanKind::Factor) {
+            let d = s.duration();
+            if s.team >= 1.0 && s.flops > 0.0 && d > 0.0 {
+                out.push((s.team, d / s.flops));
+            }
+        }
+    }
+    out
+}
+
+/// Fit α — global and per front-width — from the Factor spans of one
+/// or more trace logs (typically a `--workers-sweep`: the same fronts
+/// executed by teams of different sizes). `widths` maps task id →
+/// front width for the bucketed fits; pass `None` to skip them.
+pub fn calibrate(logs: &[&TraceLog], widths: Option<&[usize]>) -> Result<Calibration> {
+    let samples = samples_from(logs);
+    if samples.len() < 2 {
+        bail!(
+            "{}:{}: calibration needs >= 2 usable Factor spans, got {} — trace a run first",
+            file!(),
+            line!(),
+            samples.len()
+        );
+    }
+    let (alpha, fit) = fit_alpha(&samples, f64::INFINITY)?;
+    let mut per_width = Vec::new();
+    if let Some(widths) = widths {
+        let mut lo = 0usize;
+        for &hi in &WIDTH_EDGES {
+            let bucket: Vec<(f64, f64)> = logs
+                .iter()
+                .flat_map(|log| log.spans_of(SpanKind::Factor))
+                .filter(|s| {
+                    let w = widths.get(s.task as usize).copied().unwrap_or(0);
+                    w >= lo && w < hi
+                })
+                .filter(|s| s.team >= 1.0 && s.flops > 0.0 && s.duration() > 0.0)
+                .map(|s| (s.team, s.duration() / s.flops))
+                .collect();
+            // buckets with no team-size spread cannot identify α —
+            // fit_alpha reports the degeneracy and the bucket is omitted
+            if let Ok((a, f)) = fit_alpha(&bucket, f64::INFINITY) {
+                per_width.push(WidthFit { lo, hi, samples: bucket.len(), alpha: a, r2: f.r2 });
+            }
+            lo = hi;
+        }
+    }
+    Ok(Calibration { alpha, fit, samples: samples.len(), unit_cost: fit.intercept.exp(), per_width })
+}
+
+/// Predicted duration of a front under a calibrated unit cost and an
+/// exponent `alpha` (trace time units).
+pub fn predicted_duration(cal: &Calibration, flops: f64, team: f64, alpha: f64) -> f64 {
+    cal.unit_cost * flops / team.max(1.0).powf(alpha)
+}
+
+/// Per-width drift between predicted and executed front durations.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftRow {
+    pub lo: usize,
+    pub hi: usize,
+    pub fronts: usize,
+    /// Mean |predicted − executed|/executed, %, under the assumed α.
+    pub err_assumed_pct: f64,
+    /// Same under the fitted α.
+    pub err_fitted_pct: f64,
+}
+
+/// Model-drift report: how far the `L/p^α` model is from the executed
+/// timeline, under the α the schedule assumed vs the α the telemetry
+/// fits — the measured cost of a mis-specified α.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    pub assumed_alpha: f64,
+    pub fitted_alpha: f64,
+    pub rows: Vec<DriftRow>,
+    pub overall_assumed_pct: f64,
+    pub overall_fitted_pct: f64,
+    /// Measured trace makespan (trace time units).
+    pub measured_makespan: f64,
+    /// PM-schedule makespan under the assumed α, converted to trace
+    /// time units via the calibrated unit cost.
+    pub predicted_assumed: f64,
+    /// Same under the fitted α.
+    pub predicted_fitted: f64,
+    pub makespan_err_assumed_pct: f64,
+    pub makespan_err_fitted_pct: f64,
+}
+
+/// Build the drift report for one traced run. `model_makespan_*` are
+/// the PM schedule's closed-form makespans (model units, i.e. flops)
+/// solved under the assumed and the fitted α — the caller solves them
+/// because only it holds the tree.
+pub fn drift_report(
+    log: &TraceLog,
+    widths: &[usize],
+    cal: &Calibration,
+    assumed_alpha: f64,
+    model_makespan_assumed: f64,
+    model_makespan_fitted: f64,
+) -> DriftReport {
+    let pct = |pred: f64, exec: f64| -> f64 { (pred - exec).abs() / exec * 100.0 };
+    let mut rows = Vec::new();
+    let (mut sum_a, mut sum_f, mut count) = (0.0f64, 0.0f64, 0usize);
+    let mut lo = 0usize;
+    for &hi in &WIDTH_EDGES {
+        let (mut ba, mut bf, mut n) = (0.0f64, 0.0f64, 0usize);
+        for s in log.spans_of(SpanKind::Factor) {
+            let w = widths.get(s.task as usize).copied().unwrap_or(0);
+            if w < lo || w >= hi || s.duration() <= 0.0 || s.flops <= 0.0 || s.team < 1.0 {
+                continue;
+            }
+            ba += pct(predicted_duration(cal, s.flops, s.team, assumed_alpha), s.duration());
+            bf += pct(predicted_duration(cal, s.flops, s.team, cal.alpha), s.duration());
+            n += 1;
+        }
+        if n > 0 {
+            rows.push(DriftRow {
+                lo,
+                hi,
+                fronts: n,
+                err_assumed_pct: ba / n as f64,
+                err_fitted_pct: bf / n as f64,
+            });
+            sum_a += ba;
+            sum_f += bf;
+            count += n;
+        }
+        lo = hi;
+    }
+    let measured = log.makespan();
+    let predicted_assumed = model_makespan_assumed * cal.unit_cost;
+    let predicted_fitted = model_makespan_fitted * cal.unit_cost;
+    DriftReport {
+        assumed_alpha,
+        fitted_alpha: cal.alpha,
+        rows,
+        overall_assumed_pct: if count > 0 { sum_a / count as f64 } else { 0.0 },
+        overall_fitted_pct: if count > 0 { sum_f / count as f64 } else { 0.0 },
+        measured_makespan: measured,
+        predicted_assumed,
+        predicted_fitted,
+        makespan_err_assumed_pct: if measured > 0.0 { pct(predicted_assumed, measured) } else { 0.0 },
+        makespan_err_fitted_pct: if measured > 0.0 { pct(predicted_fitted, measured) } else { 0.0 },
+    }
+}
+
+/// Distill the trace's worker-occupancy curve into a step [`Profile`]
+/// consumable by the CLI `--profile` flag: the summed team size of
+/// concurrently running Factor spans, coarsened to at most `max_steps`
+/// steps. `time_per_flop > 0` rescales wall durations into model
+/// units (pass the calibrated [`Calibration::unit_cost`]); pass `1.0`
+/// for model-time logs. Also returns the `d:p[,...]` spec string.
+pub fn profile_from_trace(
+    log: &TraceLog,
+    max_steps: usize,
+    time_per_flop: f64,
+) -> Result<(Profile, String)> {
+    assert!(max_steps >= 1);
+    // occupancy deltas at span boundaries
+    let mut deltas: Vec<(f64, f64)> = Vec::new();
+    for s in log.spans_of(SpanKind::Factor) {
+        let team = if s.team >= 1.0 { s.team } else { 1.0 };
+        if s.duration() > 0.0 {
+            deltas.push((s.start, team));
+            deltas.push((s.end, -team));
+        }
+    }
+    if deltas.is_empty() {
+        bail!("{}:{}: no Factor spans to build a profile from", file!(), line!());
+    }
+    deltas.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let scale = if time_per_flop > 0.0 { 1.0 / time_per_flop } else { 1.0 };
+    // sweep into (duration, level) segments; idle gaps keep capacity 1
+    // (the profile models available processors, never zero)
+    let mut segs: Vec<(f64, f64)> = Vec::new();
+    let mut level = 0.0f64;
+    let mut t_prev = deltas[0].0;
+    for (t, d) in deltas {
+        if t > t_prev {
+            segs.push(((t - t_prev) * scale, level.max(1.0)));
+        }
+        level += d;
+        t_prev = t;
+    }
+    if segs.is_empty() {
+        bail!("{}:{}: trace has no positive-duration occupancy segment", file!(), line!());
+    }
+    // merge equal-level neighbours, then coarsen to max_steps by
+    // repeatedly folding the shortest segment into a neighbour
+    // (duration-weighted level)
+    let mut merged: Vec<(f64, f64)> = Vec::new();
+    for (d, p) in segs {
+        match merged.last_mut() {
+            Some(last) if last.1 == p => last.0 += d,
+            _ => merged.push((d, p)),
+        }
+    }
+    while merged.len() > max_steps {
+        let i = (0..merged.len())
+            .min_by(|&a, &b| merged[a].0.total_cmp(&merged[b].0))
+            .unwrap();
+        let j = if i == 0 {
+            1
+        } else if i == merged.len() - 1 {
+            i - 1
+        } else if merged[i - 1].0 <= merged[i + 1].0 {
+            i - 1
+        } else {
+            i + 1
+        };
+        let (lo, hi) = (i.min(j), i.max(j));
+        let d = merged[lo].0 + merged[hi].0;
+        let p = (merged[lo].0 * merged[lo].1 + merged[hi].0 * merged[hi].1) / d;
+        merged[lo] = (d, p);
+        merged.remove(hi);
+    }
+    let spec = merged
+        .iter()
+        .map(|(d, p)| format!("{d:.6e}:{p:.3}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    let profile = Profile::steps(&merged)?;
+    Ok((profile, spec))
+}
+
+/// Render the per-width fit table.
+pub fn width_table(cal: &Calibration) -> String {
+    let mut t = Table::new(&["width", "samples", "alpha", "r2"]);
+    t.row(&[
+        "all".to_string(),
+        format!("{}", cal.samples),
+        format!("{:.3}", cal.alpha),
+        format!("{:.4}", cal.fit.r2),
+    ]);
+    for w in &cal.per_width {
+        let hi = if w.hi == usize::MAX { "inf".to_string() } else { format!("{}", w.hi) };
+        t.row(&[
+            format!("[{}, {})", w.lo, hi),
+            format!("{}", w.samples),
+            format!("{:.3}", w.alpha),
+            format!("{:.4}", w.r2),
+        ]);
+    }
+    t.render()
+}
+
+/// Render the drift report tables.
+pub fn drift_table(rep: &DriftReport) -> String {
+    let mut out = format!(
+        "model drift (assumed alpha = {:.3}, fitted alpha = {:.3}):\n",
+        rep.assumed_alpha, rep.fitted_alpha
+    );
+    let mut t = Table::new(&["width", "fronts", "err% assumed", "err% fitted"]);
+    for r in &rep.rows {
+        let hi = if r.hi == usize::MAX { "inf".to_string() } else { format!("{}", r.hi) };
+        t.row(&[
+            format!("[{}, {})", r.lo, hi),
+            format!("{}", r.fronts),
+            format!("{:.1}", r.err_assumed_pct),
+            format!("{:.1}", r.err_fitted_pct),
+        ]);
+    }
+    t.row(&[
+        "overall".to_string(),
+        format!("{}", rep.rows.iter().map(|r| r.fronts).sum::<usize>()),
+        format!("{:.1}", rep.overall_assumed_pct),
+        format!("{:.1}", rep.overall_fitted_pct),
+    ]);
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "makespan: measured {:.3e}, PM(assumed) {:.3e} (err {:.1}%), PM(fitted) {:.3e} (err {:.1}%)\n",
+        rep.measured_makespan,
+        rep.predicted_assumed,
+        rep.makespan_err_assumed_pct,
+        rep.predicted_fitted,
+        rep.makespan_err_fitted_pct,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Span, TimeUnit};
+
+    /// Synthetic `p^α` backend in span form: fronts of varied flops
+    /// executed by teams 1..=8, durations exactly `c·L/p^α`.
+    fn synthetic_log(alpha: f64, c: f64) -> (TraceLog, Vec<usize>) {
+        let mut log = TraceLog::new("synth", TimeUnit::WallNs, 8);
+        let widths = vec![16usize, 90, 200, 300, 700];
+        let flops = [1.0e6, 5.0e6, 2.0e7, 8.0e7, 3.0e8];
+        let mut t = 0.0f64;
+        for (i, &l) in flops.iter().enumerate() {
+            for team in 1..=8u32 {
+                let d = c * l / (team as f64).powf(alpha);
+                log.push(Span {
+                    kind: SpanKind::Factor,
+                    task: i as u32,
+                    worker: team % 8,
+                    team: team as f64,
+                    flops: l,
+                    start: t,
+                    end: t + d,
+                });
+                t += d;
+            }
+        }
+        (log, widths)
+    }
+
+    #[test]
+    fn recovers_synthetic_alpha_exactly() {
+        let (log, widths) = synthetic_log(0.85, 120.0);
+        let cal = calibrate(&[&log], Some(&widths)).unwrap();
+        assert!((cal.alpha - 0.85).abs() < 1e-9, "alpha = {}", cal.alpha);
+        assert!(cal.fit.r2 > 0.999999);
+        assert!((cal.unit_cost - 120.0).abs() / 120.0 < 1e-9);
+        // every populated width bucket recovers the same exponent
+        assert!(!cal.per_width.is_empty());
+        for w in &cal.per_width {
+            assert!((w.alpha - 0.85).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn filters_sub_processor_and_degenerate_spans() {
+        let (mut log, _) = synthetic_log(0.9, 1.0);
+        let n = samples_from(&[&log]).len();
+        // sub-processor shares and zero-flop spans are not samples
+        log.push(Span {
+            kind: SpanKind::Factor,
+            task: 0,
+            worker: 0,
+            team: 0.5,
+            flops: 1e6,
+            start: 0.0,
+            end: 1.0,
+        });
+        log.push(Span {
+            kind: SpanKind::Factor,
+            task: 0,
+            worker: 0,
+            team: 2.0,
+            flops: 0.0,
+            start: 0.0,
+            end: 1.0,
+        });
+        assert_eq!(samples_from(&[&log]).len(), n);
+    }
+
+    #[test]
+    fn degenerate_team_spread_is_an_error_not_nan() {
+        // all Factor spans at the same team size: α is unidentifiable,
+        // and the hardened linear_fit reports it instead of NaN
+        let mut log = TraceLog::new("synth", TimeUnit::WallNs, 1);
+        for i in 0..6u32 {
+            log.push(Span {
+                kind: SpanKind::Factor,
+                task: i,
+                worker: 0,
+                team: 4.0,
+                flops: 1e6 * (i + 1) as f64,
+                start: 0.0,
+                end: 1000.0,
+            });
+        }
+        assert!(calibrate(&[&log], None).is_err());
+    }
+
+    #[test]
+    fn drift_prefers_fitted_alpha() {
+        let (log, widths) = synthetic_log(0.8, 50.0);
+        let cal = calibrate(&[&log], Some(&widths)).unwrap();
+        let rep = drift_report(&log, &widths, &cal, 1.0, 1.0, 1.0);
+        // the data is exactly p^0.8: fitted error ~0, assumed α=1.0 off
+        assert!(rep.overall_fitted_pct < 1e-6, "fitted err {}", rep.overall_fitted_pct);
+        assert!(rep.overall_assumed_pct > 1.0, "assumed err {}", rep.overall_assumed_pct);
+        assert!(!rep.rows.is_empty());
+    }
+
+    #[test]
+    fn profile_distills_occupancy() {
+        // two overlapping 2-team fronts then one solo front:
+        // levels 2, 4, 2, 1
+        let mut log = TraceLog::new("exec", TimeUnit::Model, 4);
+        let mk = |task: u32, team: f64, start: f64, end: f64| Span {
+            kind: SpanKind::Factor,
+            task,
+            worker: task,
+            team,
+            flops: 1.0,
+            start,
+            end,
+        };
+        log.push(mk(0, 2.0, 0.0, 2.0));
+        log.push(mk(1, 2.0, 1.0, 3.0));
+        log.push(mk(2, 1.0, 3.0, 5.0));
+        let (profile, spec) = profile_from_trace(&log, 8, 1.0).unwrap();
+        assert_eq!(profile.at(0.5), 2.0);
+        assert_eq!(profile.at(1.5), 4.0);
+        assert_eq!(profile.at(2.5), 2.0);
+        assert_eq!(profile.at(4.0), 1.0);
+        assert_eq!(spec.matches(':').count(), 4);
+        // coarsening to 2 steps still yields a valid profile
+        let (p2, spec2) = profile_from_trace(&log, 2, 1.0).unwrap();
+        assert!(p2.min_p() >= 1.0);
+        assert_eq!(spec2.matches(':').count(), 2);
+    }
+
+    #[test]
+    fn tables_render() {
+        let (log, widths) = synthetic_log(0.9, 10.0);
+        let cal = calibrate(&[&log], Some(&widths)).unwrap();
+        let wt = width_table(&cal);
+        assert!(wt.contains("all"));
+        let rep = drift_report(&log, &widths, &cal, 0.9, 2.0, 2.0);
+        let dt = drift_table(&rep);
+        assert!(dt.contains("overall"));
+        assert!(dt.contains("makespan"));
+    }
+}

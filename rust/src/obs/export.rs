@@ -1,0 +1,288 @@
+//! Trace export: Chrome trace-event JSON and a text timeline summary.
+//!
+//! [`chrome_trace`] renders a [`TraceLog`] as the Chrome trace-event
+//! format (an object with a `traceEvents` array of `"ph":"X"` complete
+//! events), loadable in Perfetto / `chrome://tracing`, one track
+//! (`tid`) per worker or node. Timestamps are microseconds as the
+//! format requires; the span's exact original times ride along in
+//! `args.t0`/`args.t1` so [`parse_chrome_trace`] round-trips the log
+//! **bit-for-bit** (µs conversion alone would lose low bits — the
+//! round-trip property is tested per engine in `benches/obs_trace.rs`
+//! and the unit tests below).
+//!
+//! No serde: the writer is string assembly over validated spans, the
+//! reader a small field scanner for exactly this writer's output.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::trace::{Span, SpanKind, TimeUnit, TraceLog};
+use crate::metrics::Table;
+
+/// Microseconds-per-unit factor for the Chrome `ts`/`dur` fields.
+fn us_per_unit(unit: TimeUnit) -> f64 {
+    match unit {
+        TimeUnit::WallNs => 1e-3,
+        // model time unit ≡ 1 second for display purposes
+        TimeUnit::Model => 1e6,
+    }
+}
+
+/// Render `log` as Chrome trace-event JSON. Fails on logs that do not
+/// [`TraceLog::validate`] (NaN times would corrupt the JSON silently).
+pub fn chrome_trace(log: &TraceLog) -> Result<String> {
+    log.validate()?;
+    let scale = us_per_unit(log.unit);
+    // header fields first: the reader scans them from the prefix
+    let mut out = String::with_capacity(128 + 160 * log.spans.len());
+    out.push_str(&format!(
+        "{{\"source\":\"{}\",\"unit\":\"{}\",\"workers\":{},\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n",
+        log.source,
+        log.unit.name(),
+        log.workers
+    ));
+    let mut first = true;
+    for w in 0..log.workers {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{w},\"args\":{{\"name\":\"worker {w}\"}}}}"
+        ));
+    }
+    for s in &log.spans {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{} t{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"task\":{},\"team\":{},\"flops\":{},\"t0\":{},\"t1\":{}}}}}",
+            s.kind.name(),
+            s.task,
+            s.kind.name(),
+            s.start * scale,
+            s.duration() * scale,
+            s.worker,
+            s.task,
+            s.team,
+            s.flops,
+            s.start,
+            s.end,
+        ));
+    }
+    out.push_str("\n]}\n");
+    Ok(out)
+}
+
+/// Write the Chrome trace to `path`.
+pub fn write_chrome_trace(log: &TraceLog, path: &Path) -> Result<()> {
+    let json = chrome_trace(log)?;
+    std::fs::write(path, json)
+        .with_context(|| format!("{}:{}: writing trace to {}", file!(), line!(), path.display()))
+}
+
+/// Scan `"key":"value"` out of a JSON fragment (writer's format only).
+fn str_field<'a>(s: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let at = s.find(&pat)? + pat.len();
+    let rest = &s[at..];
+    Some(&rest[..rest.find('"')?])
+}
+
+/// Scan `"key":<number>` out of a JSON fragment.
+fn num_field(s: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = s.find(&pat)? + pat.len();
+    let rest = &s[at..];
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c == ']')
+        .unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// Parse a trace produced by [`chrome_trace`] back into a [`TraceLog`].
+///
+/// Not a general JSON parser — it reads exactly the fields this
+/// module's writer emits (`t0`/`t1` carry the authoritative times).
+pub fn parse_chrome_trace(json: &str) -> Result<TraceLog> {
+    let head_end = json
+        .find("\"traceEvents\"")
+        .ok_or_else(|| anyhow::anyhow!("{}:{}: no traceEvents array", file!(), line!()))?;
+    let head = &json[..head_end];
+    let source = str_field(head, "source")
+        .ok_or_else(|| anyhow::anyhow!("{}:{}: missing source", file!(), line!()))?;
+    let unit = str_field(head, "unit")
+        .and_then(TimeUnit::from_name)
+        .ok_or_else(|| anyhow::anyhow!("{}:{}: missing/unknown unit", file!(), line!()))?;
+    let workers = num_field(head, "workers")
+        .ok_or_else(|| anyhow::anyhow!("{}:{}: missing workers", file!(), line!()))?
+        as usize;
+    let mut log = TraceLog::new(source, unit, workers);
+    for frag in json[head_end..].split("{\"name\"").skip(1) {
+        if !frag.contains("\"ph\":\"X\"") {
+            continue; // metadata event
+        }
+        let kind = str_field(frag, "cat")
+            .and_then(SpanKind::from_name)
+            .ok_or_else(|| anyhow::anyhow!("{}:{}: event without known cat", file!(), line!()))?;
+        let get = |key: &str| -> Result<f64> {
+            num_field(frag, key)
+                .ok_or_else(|| anyhow::anyhow!("{}:{}: event missing field {key}", file!(), line!()))
+        };
+        log.push(Span {
+            kind,
+            task: get("task")? as u32,
+            worker: get("tid")? as u32,
+            team: get("team")?,
+            flops: get("flops")?,
+            start: get("t0")?,
+            end: get("t1")?,
+        });
+    }
+    log.validate()?;
+    Ok(log)
+}
+
+/// Render a text Gantt/timeline summary: one row per worker track with
+/// per-kind busy time and utilization, in display units (ms for wall
+/// traces, model units otherwise).
+pub fn timeline_summary(log: &TraceLog) -> String {
+    let (scale, unit_name) = match log.unit {
+        TimeUnit::WallNs => (1e-6, "ms"),
+        TimeUnit::Model => (1.0, "model"),
+    };
+    let makespan = log.makespan();
+    let mut out = format!(
+        "trace {}: {} spans, {} tracks, makespan {:.3} {}\n",
+        log.source,
+        log.spans.len(),
+        log.workers,
+        makespan * scale,
+        unit_name
+    );
+    let mut t = Table::new(&["worker", "spans", "factor", "assemble", "stall", "retry", "transfer", "busy%"]);
+    for w in 0..log.workers {
+        let of = |kind: SpanKind| -> f64 {
+            log.spans_of(kind)
+                .filter(|s| s.worker as usize == w)
+                .map(|s| s.duration())
+                .sum()
+        };
+        let (fac, asm, stall, retry, xfer) = (
+            of(SpanKind::Factor),
+            of(SpanKind::Assemble),
+            of(SpanKind::Stall),
+            of(SpanKind::Retry),
+            of(SpanKind::Transfer),
+        );
+        let busy = if makespan > 0.0 { (fac + asm) / makespan * 100.0 } else { 0.0 };
+        let n = log.spans.iter().filter(|s| s.worker as usize == w).count();
+        t.row(&[
+            format!("{w}"),
+            format!("{n}"),
+            format!("{:.3}", fac * scale),
+            format!("{:.3}", asm * scale),
+            format!("{:.3}", stall * scale),
+            format!("{:.3}", retry * scale),
+            format!("{:.3}", xfer * scale),
+            format!("{busy:.1}"),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> TraceLog {
+        let mut log = TraceLog::new("test", TimeUnit::WallNs, 2);
+        log.push(Span {
+            kind: SpanKind::Assemble,
+            task: 0,
+            worker: 0,
+            team: 1.0,
+            flops: 0.0,
+            start: 10.0,
+            end: 25.5,
+        });
+        log.push(Span {
+            kind: SpanKind::Factor,
+            task: 0,
+            worker: 0,
+            team: 3.0,
+            flops: 1.25e6,
+            start: 25.5,
+            end: 1250.0,
+        });
+        log.push(Span {
+            kind: SpanKind::Stall,
+            task: 1,
+            worker: 1,
+            team: 0.0,
+            flops: 0.0,
+            start: 0.0,
+            end: 700.0,
+        });
+        log.sort();
+        log
+    }
+
+    #[test]
+    fn chrome_round_trip_is_bitwise() {
+        let log = sample_log();
+        let json = chrome_trace(&log).unwrap();
+        let back = parse_chrome_trace(&json).unwrap();
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn chrome_trace_has_one_track_per_worker() {
+        let json = chrome_trace(&sample_log()).unwrap();
+        assert!(json.contains("\"name\":\"worker 0\""));
+        assert!(json.contains("\"name\":\"worker 1\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"cat\":\"factor\""));
+    }
+
+    #[test]
+    fn chrome_trace_rejects_invalid_log() {
+        let mut log = sample_log();
+        log.spans[0].start = f64::NAN;
+        assert!(chrome_trace(&log).is_err());
+    }
+
+    #[test]
+    fn model_unit_round_trips_too() {
+        let mut log = TraceLog::new("sim-des", TimeUnit::Model, 1);
+        log.push(Span {
+            kind: SpanKind::Factor,
+            task: 7,
+            worker: 0,
+            team: 2.375,
+            flops: 64.0,
+            start: 0.1,
+            end: 0.30000000000000004, // a value µs conversion would mangle
+        });
+        let back = parse_chrome_trace(&chrome_trace(&log).unwrap()).unwrap();
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn summary_renders_all_tracks() {
+        let text = timeline_summary(&sample_log());
+        assert!(text.contains("2 tracks"));
+        assert!(text.contains("busy%"));
+        // two worker rows
+        assert!(text.lines().count() >= 4);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_chrome_trace("not json at all").is_err());
+        assert!(parse_chrome_trace("{\"traceEvents\":[]}").is_err()); // no header
+    }
+}

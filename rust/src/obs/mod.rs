@@ -1,0 +1,27 @@
+//! Observability: unified span tracing and telemetry-driven α
+//! calibration (DESIGN.md §17).
+//!
+//! One span schema across the whole system: the real executor records
+//! [`trace::Span`]s in wall clock around every front, and the
+//! simulation engines ([`crate::sim::des`], [`crate::sim::faults`],
+//! [`crate::net::sim`], [`crate::sim::online`]) emit the same type in
+//! model time — measured and predicted timelines become directly
+//! comparable artifacts.
+//!
+//! * [`trace`] — spans, per-worker lock-free buffers, [`TraceLog`],
+//!   the zero-cost [`TraceSink::Null`] disabled path;
+//! * [`export`] — Chrome trace-event JSON (Perfetto-loadable, one
+//!   track per worker/node, bit-exact round-trip) and a text timeline
+//!   summary;
+//! * [`calibrate`] — fit α (global + per front width) from Factor
+//!   spans via the paper's §3 log–log regression, emit a step
+//!   `Profile` from the occupancy curve, and report model drift
+//!   (predicted vs executed, assumed vs fitted α).
+
+pub mod calibrate;
+pub mod export;
+pub mod trace;
+
+pub use calibrate::{calibrate, drift_report, profile_from_trace, Calibration, DriftReport};
+pub use export::{chrome_trace, parse_chrome_trace, timeline_summary, write_chrome_trace};
+pub use trace::{from_completions, Span, SpanKind, TimeUnit, TraceLog, TraceSink};

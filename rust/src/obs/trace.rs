@@ -1,0 +1,402 @@
+//! Span records and trace logs (DESIGN.md §17).
+//!
+//! A [`Span`] is one timed activity of one worker (or node): assembling
+//! a front, factoring it with a team, stalling on a dependency or a
+//! memory gate, retrying after a fault, or moving bytes across the
+//! network. The real executor records spans in **wall clock**
+//! (nanoseconds since the run started); the simulation engines emit the
+//! *same type* in **model time**, so measured and predicted timelines
+//! are directly comparable — that is the whole point of the module
+//! (the paper's §3 fits α from exactly such timings).
+//!
+//! Recording is allocation-light by construction: each worker appends
+//! to its own `Vec<Span>` (no shared state, no locks) and the buffers
+//! are merged into one [`TraceLog`] when the report is built. The
+//! disabled path ([`TraceSink::Null`]) takes zero extra clock reads and
+//! zero allocations — the hot executor is unchanged when tracing is
+//! off (overhead asserted < 3 % even when it is *on*, `benches/obs_trace.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::model::TaskTree;
+
+/// What a span was doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Extend-add of children contribution blocks into a front.
+    Assemble,
+    /// Partial factorization of a front (the `T(p) = L/p^α` unit —
+    /// Factor spans are what [`crate::obs::calibrate`] fits α from).
+    Factor,
+    /// Waiting: memory-gate admission, a remote child, a backoff sleep.
+    Stall,
+    /// A failed factorization attempt that will be re-queued.
+    Retry,
+    /// A cross-node contribution-block transfer.
+    Transfer,
+}
+
+impl SpanKind {
+    /// Stable lowercase name (used as the Chrome trace `cat`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Assemble => "assemble",
+            SpanKind::Factor => "factor",
+            SpanKind::Stall => "stall",
+            SpanKind::Retry => "retry",
+            SpanKind::Transfer => "transfer",
+        }
+    }
+
+    /// Inverse of [`SpanKind::name`].
+    pub fn from_name(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "assemble" => SpanKind::Assemble,
+            "factor" => SpanKind::Factor,
+            "stall" => SpanKind::Stall,
+            "retry" => SpanKind::Retry,
+            "transfer" => SpanKind::Transfer,
+            _ => return None,
+        })
+    }
+}
+
+/// One timed activity. Times are `f64` in the owning log's
+/// [`TimeUnit`]: wall-clock nanoseconds since run start, or model time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Task (front / tree node / job) id.
+    pub task: u32,
+    /// Worker (executor) or node (simulators) that owned the span.
+    pub worker: u32,
+    /// Processors working the span: an integer team size in wall
+    /// traces, a possibly fractional share in model traces, `0.0` when
+    /// unknown (e.g. EqualSplit's time-varying share).
+    pub team: f64,
+    /// Work attributed to the span (flops for Factor/Retry, words for
+    /// Transfer, `0.0` otherwise).
+    pub flops: f64,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Time base of a [`TraceLog`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeUnit {
+    /// Wall-clock nanoseconds since the run began (real executor).
+    WallNs,
+    /// Simulated model time (same unit as `TaskTree` lengths, i.e.
+    /// flops at one-processor speed).
+    Model,
+}
+
+impl TimeUnit {
+    pub fn name(self) -> &'static str {
+        match self {
+            TimeUnit::WallNs => "wall_ns",
+            TimeUnit::Model => "model",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TimeUnit> {
+        Some(match s {
+            "wall_ns" => TimeUnit::WallNs,
+            "model" => TimeUnit::Model,
+            _ => return None,
+        })
+    }
+}
+
+/// Where span records go while a run is live.
+///
+/// `Null` is the zero-cost disabled path: recording sites guard every
+/// extra clock read and push behind `sink.enabled()`, so the hot
+/// executor performs no tracing work at all. `Buffer` collects spans
+/// in per-worker local vectors merged at report time.
+///
+/// The explicit `*_traced` entry points take the sink verbatim — they
+/// do **not** consult the environment, so tests exercise the span
+/// content deterministically under any `MALLTREE_TRACE` setting. Only
+/// the CLI resolves the env kill-switch, via [`TraceSink::from_env`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceSink {
+    Null,
+    Buffer,
+}
+
+impl TraceSink {
+    pub fn enabled(self) -> bool {
+        matches!(self, TraceSink::Buffer)
+    }
+
+    /// Resolve the CLI sink: `MALLTREE_TRACE=off|0|false` forces
+    /// `Null` (the CI null-sink leg), `on|1|force` forces `Buffer`,
+    /// anything else (including unset) follows `requested`.
+    pub fn from_env(requested: bool) -> TraceSink {
+        match std::env::var("MALLTREE_TRACE").ok().as_deref() {
+            Some("off") | Some("0") | Some("false") => TraceSink::Null,
+            Some("on") | Some("1") | Some("force") => TraceSink::Buffer,
+            _ => {
+                if requested {
+                    TraceSink::Buffer
+                } else {
+                    TraceSink::Null
+                }
+            }
+        }
+    }
+}
+
+/// A merged, per-run collection of spans — the common output of the
+/// real executor and every simulation engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceLog {
+    /// Time base of every span in the log.
+    pub unit: TimeUnit,
+    /// Engine that produced the log (`"exec"`, `"sim-des"`, …).
+    pub source: String,
+    /// Worker (or node) count — Chrome export emits one track each.
+    pub workers: usize,
+    pub spans: Vec<Span>,
+}
+
+impl TraceLog {
+    pub fn new(source: &str, unit: TimeUnit, workers: usize) -> Self {
+        TraceLog { unit, source: source.to_string(), workers, spans: Vec::new() }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+
+    /// Sort spans by start time (ties by task id) — NaN-safe.
+    pub fn sort(&mut self) {
+        self.spans
+            .sort_by(|a, b| a.start.total_cmp(&b.start).then(a.task.cmp(&b.task)));
+    }
+
+    /// Latest span end (0 for an empty log).
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().fold(0.0f64, |m, s| m.max(s.end))
+    }
+
+    /// Spans of one kind.
+    pub fn spans_of(&self, kind: SpanKind) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.kind == kind)
+    }
+
+    /// Summed duration of one kind.
+    pub fn total(&self, kind: SpanKind) -> f64 {
+        self.spans_of(kind).map(|s| s.duration()).sum()
+    }
+
+    /// Rebuild the legacy `ExecReport::team_log` view — `(front_width,
+    /// team_size)` per Factor span, `widths` indexed by task id — so
+    /// the timed log provably subsumes the untimed one
+    /// (`occupancy()`/`avg_team()` equivalence is tested in
+    /// `exec::report`).
+    pub fn team_log(&self, widths: &[usize]) -> Vec<(usize, usize)> {
+        self.spans_of(SpanKind::Factor)
+            .map(|s| (widths.get(s.task as usize).copied().unwrap_or(0), s.team.round() as usize))
+            .collect()
+    }
+
+    /// Structural invariants every engine must uphold: finite times,
+    /// `end >= start`, workers within the declared track count,
+    /// non-negative team/flops. Export refuses invalid logs (NaN would
+    /// silently corrupt the JSON).
+    pub fn validate(&self) -> Result<()> {
+        for (i, s) in self.spans.iter().enumerate() {
+            if !s.start.is_finite() || !s.end.is_finite() {
+                bail!("{}:{}: span {i} has non-finite time [{}, {}]", file!(), line!(), s.start, s.end);
+            }
+            if s.end < s.start {
+                bail!("{}:{}: span {i} ends before it starts ({} < {})", file!(), line!(), s.end, s.start);
+            }
+            if (s.worker as usize) >= self.workers.max(1) {
+                bail!(
+                    "{}:{}: span {i} on worker {} but log declares {} tracks",
+                    file!(),
+                    line!(),
+                    s.worker,
+                    self.workers
+                );
+            }
+            if !(s.team >= 0.0) || !(s.flops >= 0.0) {
+                bail!("{}:{}: span {i} has negative team/flops", file!(), line!(), s.team);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Derive a model-time [`TraceLog`] from per-task completion times —
+/// the shared post-hoc path for the DES engines, whose static-share
+/// semantics make the start time recoverable: a task starts when its
+/// last child completes (time 0 for leaves).
+///
+/// * `teams` — per-task processor share (`team` field); `None` → 0.0
+///   (unknown, e.g. EqualSplit).
+/// * `durations` — per-task busy time; when given, `start = end − dur`
+///   instead of the ready time (the Divisible engine runs tasks
+///   sequentially, so ready time ≠ start time there).
+/// * `node_of` — per-task owning node; populates `worker` and emits a
+///   Stall span on every parent whose remote children finish after its
+///   local ones (`[ready_local, ready_all]` — summed durations equal
+///   the distributed engine's `cross_stall` by construction, which the
+///   round-trip tests pin).
+pub fn from_completions(
+    source: &str,
+    tree: &TaskTree,
+    completion: &[f64],
+    teams: Option<&[f64]>,
+    durations: Option<&[f64]>,
+    node_of: Option<&[usize]>,
+) -> TraceLog {
+    let n = tree.len();
+    assert_eq!(completion.len(), n, "completion must cover every task");
+    let workers = node_of.map_or(1, |m| m.iter().copied().max().map_or(1, |w| w + 1));
+    let mut log = TraceLog::new(source, TimeUnit::Model, workers);
+    for v in 0..n {
+        let mut ready_all = 0.0f64;
+        let mut ready_local = 0.0f64;
+        for &c in &tree.nodes[v].children {
+            let ci = c as usize;
+            ready_all = ready_all.max(completion[ci]);
+            let local = node_of.map_or(true, |m| m[ci] == m[v]);
+            if local {
+                ready_local = ready_local.max(completion[ci]);
+            }
+        }
+        let worker = node_of.map_or(0, |m| m[v]) as u32;
+        let start = match durations {
+            Some(d) => (completion[v] - d[v]).max(0.0),
+            None => ready_all.min(completion[v]),
+        };
+        if node_of.is_some() && ready_all > ready_local && durations.is_none() {
+            log.push(Span {
+                kind: SpanKind::Stall,
+                task: v as u32,
+                worker,
+                team: 0.0,
+                flops: 0.0,
+                start: ready_local,
+                end: ready_all,
+            });
+        }
+        log.push(Span {
+            kind: SpanKind::Factor,
+            task: v as u32,
+            worker,
+            team: teams.map_or(0.0, |t| t[v]),
+            flops: tree.nodes[v].len,
+            start,
+            end: completion[v],
+        });
+    }
+    log.sort();
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, task: u32, start: f64, end: f64) -> Span {
+        Span { kind, task, worker: 0, team: 1.0, flops: 1.0, start, end }
+    }
+
+    #[test]
+    fn sink_env_resolution() {
+        // explicit sinks never consult the env — only from_env does,
+        // and the test env may carry MALLTREE_TRACE (the CI off leg),
+        // so only the forced branches are assertable here
+        assert!(TraceSink::Buffer.enabled());
+        assert!(!TraceSink::Null.enabled());
+    }
+
+    #[test]
+    fn totals_and_makespan() {
+        let mut log = TraceLog::new("test", TimeUnit::Model, 1);
+        log.push(span(SpanKind::Factor, 0, 0.0, 2.0));
+        log.push(span(SpanKind::Factor, 1, 2.0, 5.0));
+        log.push(span(SpanKind::Stall, 1, 1.0, 2.0));
+        assert_eq!(log.makespan(), 5.0);
+        assert_eq!(log.total(SpanKind::Factor), 5.0);
+        assert_eq!(log.total(SpanKind::Stall), 1.0);
+        assert_eq!(log.spans_of(SpanKind::Factor).count(), 2);
+        log.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        let mut log = TraceLog::new("test", TimeUnit::Model, 1);
+        log.push(span(SpanKind::Factor, 0, 3.0, 1.0));
+        assert!(log.validate().is_err());
+        log.spans.clear();
+        log.push(span(SpanKind::Factor, 0, f64::NAN, 1.0));
+        assert!(log.validate().is_err());
+        log.spans.clear();
+        let mut s = span(SpanKind::Factor, 0, 0.0, 1.0);
+        s.worker = 7; // only 1 track declared
+        log.push(s);
+        assert!(log.validate().is_err());
+    }
+
+    #[test]
+    fn sort_is_nan_safe() {
+        let mut log = TraceLog::new("test", TimeUnit::Model, 1);
+        log.push(span(SpanKind::Factor, 0, f64::NAN, 1.0));
+        log.push(span(SpanKind::Factor, 1, 0.0, 1.0));
+        log.sort(); // must not panic; NaN orders after finite values
+        assert_eq!(log.spans[0].task, 1);
+    }
+
+    #[test]
+    fn from_completions_matches_tree_structure() {
+        // chain 0 -> 1 -> 2 with unit work each, completions 1,2,3
+        let tree = TaskTree::from_parents(&[2, 2, 2], &[1.0, 1.0, 1.0]).unwrap();
+        let completion = [1.0, 2.0, 3.0];
+        let log = from_completions("t", &tree, &completion, None, None, None);
+        let factors: Vec<&Span> = log.spans_of(SpanKind::Factor).collect();
+        assert_eq!(factors.len(), 3);
+        // root (task 2) starts at its latest child completion
+        let root = factors.iter().find(|s| s.task == 2).unwrap();
+        assert_eq!(root.start, 2.0);
+        assert_eq!(root.end, 3.0);
+        log.validate().unwrap();
+    }
+
+    #[test]
+    fn from_completions_emits_cross_node_stalls() {
+        // two leaves on different nodes than the root: the root stalls
+        // from its local-ready time to its remote-ready time
+        let tree = TaskTree::from_parents(&[2, 2, 2], &[1.0, 1.0, 1.0]).unwrap();
+        let completion = [1.0, 4.0, 6.0];
+        let node_of = [0usize, 1, 0];
+        let log = from_completions("t", &tree, &completion, None, None, Some(&node_of));
+        assert_eq!(log.workers, 2);
+        let stalls: Vec<&Span> = log.spans_of(SpanKind::Stall).collect();
+        assert_eq!(stalls.len(), 1);
+        assert_eq!(stalls[0].task, 2);
+        assert_eq!(stalls[0].start, 1.0); // local child done
+        assert_eq!(stalls[0].end, 4.0); // remote child done
+    }
+
+    #[test]
+    fn team_log_view_uses_widths() {
+        let mut log = TraceLog::new("test", TimeUnit::WallNs, 2);
+        let mut s = span(SpanKind::Factor, 0, 0.0, 1.0);
+        s.team = 3.0;
+        log.push(s);
+        let widths = [17usize];
+        assert_eq!(log.team_log(&widths), vec![(17, 3)]);
+    }
+}

@@ -267,43 +267,7 @@ pub fn simulate_distributed_with_workspace(
         "distributed DES replays static-share policies (Pm, Proportional), got {policy:?}"
     );
 
-    // Per-task absolute share (processors on the owning node).
-    let mut share = vec![0f64; n];
-    let mut member = vec![false; n];
-    for k in 0..n_nodes {
-        for (t, m) in member.iter_mut().enumerate() {
-            *m = node_of[t] == k;
-        }
-        let p_k = platform.node_cores(k);
-        match policy {
-            Policy::Pm => {
-                if let Some(r) = ws.induced_task_ratios(tree, &member, alpha, n) {
-                    for t in 0..n {
-                        if member[t] {
-                            share[t] = r[t] * p_k;
-                        }
-                    }
-                }
-            }
-            Policy::Proportional => {
-                if let Some(g) = crate::model::SpGraph::from_induced(tree, &member) {
-                    let shares = crate::sched::proportional::proportional_shares(&g, p_k);
-                    for &v in g.topo() {
-                        if let crate::model::SpNode::Leaf { task: Some(t), .. } =
-                            g.nodes[v as usize]
-                        {
-                            // ratio first, share second — the exact float
-                            // path of the shared engine, so the 1-node
-                            // case stays bit-identical to `simulate`
-                            let ratio = shares[v as usize] / p_k;
-                            share[t as usize] = ratio * p_k;
-                        }
-                    }
-                }
-            }
-            _ => unreachable!(),
-        }
-    }
+    let share = distributed_shares(tree, alpha, platform, node_of, policy, ws);
 
     // Event loop: identical structure to the shared static engine, but
     // with per-task shares and per-parent local/remote wait tracking.
@@ -364,6 +328,131 @@ pub fn simulate_distributed_with_workspace(
         cross_edges,
         cross_stall,
     }
+}
+
+/// Per-task absolute share (processors on the owning node) of the
+/// distributed replay — each node's allocation computed over its
+/// induced sub-forest. Shared between the engine and the span
+/// derivation so traced teams are the exact simulated shares.
+fn distributed_shares(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+    ws: &mut crate::sched::SchedWorkspace,
+) -> Vec<f64> {
+    let n = tree.len();
+    let n_nodes = platform.num_nodes();
+    let mut share = vec![0f64; n];
+    let mut member = vec![false; n];
+    for k in 0..n_nodes {
+        for (t, m) in member.iter_mut().enumerate() {
+            *m = node_of[t] == k;
+        }
+        let p_k = platform.node_cores(k);
+        match policy {
+            Policy::Pm => {
+                if let Some(r) = ws.induced_task_ratios(tree, &member, alpha, n) {
+                    for t in 0..n {
+                        if member[t] {
+                            share[t] = r[t] * p_k;
+                        }
+                    }
+                }
+            }
+            Policy::Proportional => {
+                if let Some(g) = crate::model::SpGraph::from_induced(tree, &member) {
+                    let shares = crate::sched::proportional::proportional_shares(&g, p_k);
+                    for &v in g.topo() {
+                        if let crate::model::SpNode::Leaf { task: Some(t), .. } =
+                            g.nodes[v as usize]
+                        {
+                            // ratio first, share second — the exact float
+                            // path of the shared engine, so the 1-node
+                            // case stays bit-identical to `simulate`
+                            let ratio = shares[v as usize] / p_k;
+                            share[t as usize] = ratio * p_k;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    share
+}
+
+/// [`simulate`] with span emission: the same run plus a model-time
+/// [`crate::obs::TraceLog`] derived *exactly* from the completion
+/// times ([`crate::obs::from_completions`] — static-share engines push
+/// `completion = ready + duration`, so no event-loop instrumentation
+/// is needed). Static policies carry their share as the span team;
+/// Divisible runs sequentially on the full platform (explicit
+/// durations, since ready time ≠ start time there); EqualSplit's
+/// varying share is recorded as team 0 (unknown) with work-conserving
+/// `[ready, completion]` windows.
+pub fn simulate_traced(
+    tree: &TaskTree,
+    alpha: f64,
+    p: f64,
+    policy: Policy,
+) -> (DesResult, crate::obs::TraceLog) {
+    let res = simulate(tree, alpha, p, policy);
+    let log = match policy {
+        Policy::Pm | Policy::Proportional => {
+            let teams: Vec<f64> =
+                static_ratios(tree, alpha, p, policy).iter().map(|r| r * p).collect();
+            crate::obs::from_completions("sim-des", tree, &res.completion, Some(&teams), None, None)
+        }
+        Policy::Divisible => {
+            let rate = speedup(p, alpha);
+            let durations: Vec<f64> = tree
+                .nodes
+                .iter()
+                .map(|t| if t.len <= 0.0 { 0.0 } else { t.len / rate })
+                .collect();
+            let teams = vec![p; tree.len()];
+            crate::obs::from_completions(
+                "sim-des",
+                tree,
+                &res.completion,
+                Some(&teams),
+                Some(&durations),
+                None,
+            )
+        }
+        Policy::EqualSplit => {
+            crate::obs::from_completions("sim-des", tree, &res.completion, None, None, None)
+        }
+    };
+    (res, log)
+}
+
+/// [`simulate_distributed`] with span emission: one Factor span per
+/// task on its owning node's track (team = the exact simulated share),
+/// plus a Stall span per parent whose remote children finish after its
+/// local ones — the Stall durations sum to the engine's `cross_stall`
+/// (tested).
+pub fn simulate_distributed_traced(
+    tree: &TaskTree,
+    alpha: f64,
+    platform: &Platform,
+    node_of: &[usize],
+    policy: Policy,
+) -> (DistDesResult, crate::obs::TraceLog) {
+    let mut ws = crate::sched::SchedWorkspace::new();
+    let res = simulate_distributed_with_workspace(tree, alpha, platform, node_of, policy, &mut ws);
+    let teams = distributed_shares(tree, alpha, platform, node_of, policy, &mut ws);
+    let log = crate::obs::from_completions(
+        "sim-dist",
+        tree,
+        &res.completion,
+        Some(&teams),
+        None,
+        Some(node_of),
+    );
+    (res, log)
 }
 
 fn static_ratios(tree: &TaskTree, alpha: f64, p: f64, policy: Policy) -> Vec<f64> {
@@ -796,6 +885,98 @@ mod tests {
         // root waits for the remote child: stall = 8 - 0.5
         assert!(approx_eq(r.cross_stall, 7.5, 1e-9));
         assert!(approx_eq(r.makespan, 8.0 + 2.0 / 2.0, 1e-9));
+    }
+
+    #[test]
+    fn traced_engine_derives_exact_spans_and_round_trips() {
+        use crate::obs::{chrome_trace, parse_chrome_trace, SpanKind};
+        let t = tree5();
+        let (a, p) = (0.9, 10.0);
+        for pol in [Policy::Pm, Policy::Proportional, Policy::Divisible, Policy::EqualSplit] {
+            let base = simulate(&t, a, p, pol);
+            let (res, log) = simulate_traced(&t, a, p, pol);
+            assert_eq!(res.makespan.to_bits(), base.makespan.to_bits(), "{pol:?}");
+            log.validate().unwrap();
+            // one Factor span per task, ending exactly at its completion
+            let factors: Vec<_> = log.spans_of(SpanKind::Factor).collect();
+            assert_eq!(factors.len(), t.len(), "{pol:?}");
+            for s in &factors {
+                assert_eq!(
+                    s.end.to_bits(),
+                    res.completion[s.task as usize].to_bits(),
+                    "{pol:?}: task {} span end drifted",
+                    s.task
+                );
+                assert!(s.start <= s.end, "{pol:?}");
+                assert_eq!(s.flops, t.nodes[s.task as usize].len, "{pol:?}");
+            }
+            assert!((log.makespan() - res.makespan).abs() < 1e-12, "{pol:?}");
+            // the same export path the executor uses round-trips the
+            // model-time log bit-exactly
+            let back = parse_chrome_trace(&chrome_trace(&log).unwrap()).unwrap();
+            assert_eq!(back, log, "{pol:?}");
+        }
+    }
+
+    #[test]
+    fn traced_distributed_stalls_sum_to_cross_stall() {
+        use crate::obs::{chrome_trace, parse_chrome_trace, SpanKind};
+        // the unbalanced fixture of distributed_stall_accounts_remote_wait
+        let t = TaskTree::from_parents(&[0, 0, 0], &[2.0, 1.0, 16.0]).unwrap();
+        let (a, p) = (1.0, 2.0);
+        let plat = crate::model::Platform::Homogeneous { nodes: 2, p };
+        let node_of = vec![0usize, 0, 1];
+        let (r, log) = simulate_distributed_traced(&t, a, &plat, &node_of, Policy::Pm);
+        log.validate().unwrap();
+        assert_eq!(log.workers, 2, "one track per node");
+        assert!(approx_eq(log.total(SpanKind::Stall), r.cross_stall, 1e-12));
+        for s in log.spans_of(SpanKind::Factor) {
+            assert_eq!(s.worker as usize, node_of[s.task as usize], "track != mapping");
+        }
+        let back = parse_chrome_trace(&chrome_trace(&log).unwrap()).unwrap();
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn traced_distributed_matches_engine_randomized() {
+        use crate::obs::SpanKind;
+        check(
+            Config { cases: 15, seed: 77 },
+            "distributed trace: Stall durations sum to cross_stall",
+            |rng: &mut Rng| {
+                let n = rng.range(3, 40);
+                let parents: Vec<usize> =
+                    (0..n).map(|i| if i == 0 { 0 } else { rng.below(i) }).collect();
+                let lens: Vec<f64> = (0..n).map(|_| rng.log_uniform(1.0, 100.0)).collect();
+                let alpha = rng.range_f64(0.5, 1.0);
+                let nodes = rng.range(2, 5);
+                let node_of: Vec<usize> = (0..n).map(|_| rng.below(nodes)).collect();
+                (TaskTree::from_parents(&parents, &lens).unwrap(), alpha, nodes, node_of)
+            },
+            |(tree, alpha, nodes, node_of)| {
+                let p = 4.0;
+                let plat = crate::model::Platform::Homogeneous { nodes: *nodes, p };
+                for pol in [Policy::Pm, Policy::Proportional] {
+                    let r = simulate_distributed(tree, *alpha, &plat, node_of, pol);
+                    let (rt, log) = simulate_distributed_traced(tree, *alpha, &plat, node_of, pol);
+                    if rt.makespan.to_bits() != r.makespan.to_bits() {
+                        return Err(format!("{pol:?}: tracing changed the simulation"));
+                    }
+                    log.validate().map_err(|e| e.to_string())?;
+                    let stall: f64 = log.total(SpanKind::Stall);
+                    if (stall - r.cross_stall).abs() > 1e-9 * r.cross_stall.max(1.0) {
+                        return Err(format!(
+                            "{pol:?}: Stall sum {stall} vs cross_stall {}",
+                            r.cross_stall
+                        ));
+                    }
+                    if log.spans_of(SpanKind::Factor).count() != tree.len() {
+                        return Err(format!("{pol:?}: Factor spans do not cover the tree"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

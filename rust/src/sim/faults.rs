@@ -565,6 +565,24 @@ pub fn replay_faults_distributed(
     })
 }
 
+/// Derive a model-time [`crate::obs::TraceLog`] from a fault replay:
+/// one Factor span per task on its *final* owning node's track
+/// ([`FaultReplay::node_of`], after any crash re-mapping), plus a
+/// Stall span wherever remote children gate a parent. Shares vary
+/// across disturbance segments, so spans carry `team = 0` (unknown);
+/// each window is the task's last (post-recovery) execution, ending at
+/// its final completion.
+pub fn trace_replay(tree: &TaskTree, replay: &FaultReplay) -> crate::obs::TraceLog {
+    crate::obs::from_completions(
+        "sim-faults",
+        tree,
+        &replay.completion,
+        None,
+        None,
+        Some(&replay.node_of),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -713,6 +731,57 @@ mod tests {
         let plat = Platform::Homogeneous { nodes: 2, p: 4.0 };
         let node_of = vec![0, 1, 1, 0];
         (t, plat, node_of)
+    }
+
+    #[test]
+    fn trace_replay_exports_final_completions_even_after_a_crash() {
+        use crate::obs::{chrome_trace, parse_chrome_trace, SpanKind};
+        let (t, plat, node_of) = boundary_fixture();
+        // fault-free: every span ends at its engine completion time
+        let clean = replay_faults_distributed(
+            &t,
+            1.0,
+            &plat,
+            &node_of,
+            Policy::Pm,
+            &FaultTrace::empty(),
+            RecoveryPolicy::Best,
+        )
+        .unwrap();
+        let log = trace_replay(&t, &clean);
+        log.validate().unwrap();
+        assert_eq!(log.spans_of(SpanKind::Factor).count(), t.len());
+        for s in log.spans_of(SpanKind::Factor) {
+            assert_eq!(s.end.to_bits(), clean.completion[s.task as usize].to_bits());
+        }
+        assert!((log.makespan() - clean.makespan).abs() < 1e-12);
+        // mid-run crash: the re-mapped run still yields a valid,
+        // complete log whose tracks follow the *final* assignment
+        let trace = FaultTrace::new(vec![FaultEvent {
+            time: 1.0,
+            kind: FaultKind::Crash { node: 1 },
+        }]);
+        let f = replay_faults_distributed(
+            &t,
+            1.0,
+            &plat,
+            &node_of,
+            Policy::Pm,
+            &trace,
+            RecoveryPolicy::Best,
+        )
+        .unwrap();
+        assert!(f.remapped_subtrees > 0 || f.restarted, "fixture crash was a no-op");
+        let flog = trace_replay(&t, &f);
+        flog.validate().unwrap();
+        assert_eq!(flog.spans_of(SpanKind::Factor).count(), t.len());
+        for s in flog.spans_of(SpanKind::Factor) {
+            assert_eq!(s.worker as usize, f.node_of[s.task as usize]);
+        }
+        assert!((flog.makespan() - f.makespan).abs() < 1e-12);
+        // and the shared export path round-trips it bit-exactly
+        let back = parse_chrome_trace(&chrome_trace(&flog).unwrap()).unwrap();
+        assert_eq!(back, flog);
     }
 
     #[test]

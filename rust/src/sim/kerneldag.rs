@@ -412,7 +412,7 @@ mod tests {
         // production configuration of the benches)
         let dag = KernelDag::cholesky(24, 256);
         let curve = timing_curve(&dag, 16, &MachineModel::default());
-        let (alpha, fit) = fit_alpha(&curve, 10.0);
+        let (alpha, fit) = fit_alpha(&curve, 10.0).unwrap();
         assert!(alpha > 0.8 && alpha <= 1.01, "alpha={alpha}");
         assert!(fit.r2 > 0.98, "r2={}", fit.r2);
         // monotone non-increasing timings
@@ -450,8 +450,8 @@ mod tests {
         let m0 = MachineModel::default();
         let c1 = timing_curve(&d1, 16, &m0);
         let c2 = timing_curve(&d2, 16, &m0);
-        let (a1, _) = fit_alpha(&c1, 10.0);
-        let (a2, _) = fit_alpha(&c2, 10.0);
+        let (a1, _) = fit_alpha(&c1, 10.0).unwrap();
+        let (a2, _) = fit_alpha(&c2, 10.0).unwrap();
         assert!(a1 < a2, "1D α {a1} should be below 2D α {a2}");
     }
 }

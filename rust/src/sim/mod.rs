@@ -38,8 +38,11 @@ pub mod kerneldag;
 pub mod memreplay;
 pub mod online;
 
-pub use des::{simulate, simulate_distributed, DesResult, DistDesResult, Policy};
-pub use faults::{replay_faults, replay_faults_distributed, FaultReplay, RecoveryPolicy};
+pub use des::{
+    simulate, simulate_distributed, simulate_distributed_traced, simulate_traced, DesResult,
+    DistDesResult, Policy,
+};
+pub use faults::{replay_faults, replay_faults_distributed, trace_replay, FaultReplay, RecoveryPolicy};
 pub use kerneldag::{simulate_dag, timing_curve, KernelDag, MachineModel};
 pub use memreplay::{replay_memory, replay_memory_spans, spans_from_completions, MemReplay};
-pub use online::{simulate_online, OnlineReport};
+pub use online::{simulate_online, trace_online, OnlineReport};

@@ -174,6 +174,67 @@ pub fn simulate_online(jobs: &[JobSpec], cfg: ServiceConfig) -> Result<OnlineRep
     })
 }
 
+/// Derive a model-time job timeline from an online run: one track per
+/// tenant. A Completed job is a Factor span `[arrival, arrival +
+/// sojourn]` (flops = the job tree's total work), a TimedOut job a
+/// Stall span from arrival to its explicit deadline (clamped to the
+/// horizon; the horizon itself when the deadline was implied), and a
+/// Shed job a zero-length Retry marker at its arrival. `jobs` must be
+/// the stream the report came from — [`OnlineReport::outcomes`] and
+/// [`OnlineReport::sojourns`] are consumed by job id.
+pub fn trace_online(jobs: &[JobSpec], report: &OnlineReport) -> crate::obs::TraceLog {
+    use crate::obs::{Span, SpanKind, TimeUnit, TraceLog};
+    assert_eq!(jobs.len(), report.outcomes.len(), "report does not match the job stream");
+    let tenants = jobs.iter().map(|j| j.tenant).max().map_or(1, |t| t + 1);
+    let mut log = TraceLog::new("sim-online", TimeUnit::Model, tenants);
+    let mut sojourn = report.sojourns.iter();
+    for job in jobs {
+        let work: f64 = job.tree.nodes.iter().map(|t| t.len).sum();
+        let span = match report.outcomes[job.id] {
+            Outcome::Completed => {
+                let s = *sojourn.next().expect("fewer sojourns than completed jobs");
+                Span {
+                    kind: SpanKind::Factor,
+                    task: job.id as u32,
+                    worker: job.tenant as u32,
+                    team: 0.0,
+                    flops: work,
+                    start: job.arrival,
+                    end: job.arrival + s.max(0.0),
+                }
+            }
+            Outcome::TimedOut => {
+                let end = if job.deadline.is_finite() {
+                    job.deadline.min(report.horizon)
+                } else {
+                    report.horizon
+                };
+                Span {
+                    kind: SpanKind::Stall,
+                    task: job.id as u32,
+                    worker: job.tenant as u32,
+                    team: 0.0,
+                    flops: work,
+                    start: job.arrival,
+                    end: end.max(job.arrival),
+                }
+            }
+            Outcome::Shed => Span {
+                kind: SpanKind::Retry,
+                task: job.id as u32,
+                worker: job.tenant as u32,
+                team: 0.0,
+                flops: work,
+                start: job.arrival,
+                end: job.arrival,
+            },
+        };
+        log.push(span);
+    }
+    log.sort();
+    log
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +311,48 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn online_trace_covers_every_job_exactly_once() {
+        use crate::obs::{chrome_trace, parse_chrome_trace, SpanKind};
+        let mut rng = Rng::new(0x0B51);
+        // tight capacity + deadlines so all three outcomes can occur
+        let jobs = stream(&mut rng, 60, 3, 14);
+        let cfg = ServiceConfig {
+            p: 2,
+            queue_cap: 2,
+            deadline_ratio: 1.5,
+            ..ServiceConfig::default()
+        };
+        let rep = simulate_online(&jobs, cfg).unwrap();
+        assert!(rep.conserved());
+        let log = trace_online(&jobs, &rep);
+        log.validate().unwrap();
+        // one span per job, kind matching its terminal outcome
+        assert_eq!(log.spans.len(), jobs.len());
+        assert_eq!(log.spans_of(SpanKind::Factor).count(), rep.completed);
+        assert_eq!(log.spans_of(SpanKind::Stall).count(), rep.timed_out);
+        assert_eq!(log.spans_of(SpanKind::Retry).count(), rep.shed);
+        assert!(rep.completed > 0, "fixture completed nothing");
+        // completed spans replay the recorded sojourns exactly
+        let mut sojourns: Vec<f64> = log
+            .spans_of(SpanKind::Factor)
+            .map(|s| s.end - s.start)
+            .collect();
+        sojourns.sort_by(f64::total_cmp);
+        let mut want = rep.sojourns.clone();
+        want.sort_by(f64::total_cmp);
+        for (a, b) in sojourns.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12, "sojourn {a} vs {b}");
+        }
+        assert!(log.makespan() <= rep.horizon + 1e-9);
+        // tenant tracks + bit-exact export round-trip
+        for s in &log.spans {
+            assert_eq!(s.worker as usize, jobs[s.task as usize].tenant);
+        }
+        let back = parse_chrome_trace(&chrome_trace(&log).unwrap()).unwrap();
+        assert_eq!(back, log);
     }
 
     #[test]
